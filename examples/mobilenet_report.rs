@@ -1,0 +1,41 @@
+//! Reproduce the model-scale evaluation: Table VIII (fully parallel vs
+//! continuous flow for MobileNetV1 x4 alphas + ResNet18) and Table IX
+//! (MobileNetV1 synthesis comparison via the estimator).
+//!
+//! ```bash
+//! cargo run --release --offline --example mobilenet_report
+//! ```
+
+use cnn_flow::flow::{analyze, plan_all};
+use cnn_flow::fpga::{estimate_model, timing::timing_analytic, EstimatorOpts, XCVU37P};
+use cnn_flow::model::zoo;
+use cnn_flow::report::synthesis;
+use cnn_flow::report::tables;
+
+fn main() {
+    println!("{}", tables::table8());
+    println!("{}", synthesis::table9());
+
+    // Per-alpha deployment check: does each MobileNet variant fit the
+    // paper's part, and at what projected FPS?
+    println!("== MobileNetV1 deployment sweep (estimator) ==");
+    for alpha in [25, 50, 75, 100] {
+        let model = zoo::mobilenet_v1(alpha);
+        let analysis = analyze(&model, None).unwrap();
+        let plans = plan_all(&analysis);
+        let est = estimate_model(&plans, EstimatorOpts::default(), None);
+        let t = timing_analytic(&analysis, 1);
+        let fps = est.fmax_mhz * 1e6 / t.cycles_per_frame;
+        println!(
+            "alpha={:<4} {:>8} LUT ({:>4.1}%), {:>5} DSP, {:>6.1} BRAM36, {:>4.0} MHz, {:>7.0} FPS, fits={}",
+            alpha as f64 / 100.0,
+            est.lut,
+            XCVU37P.lut_util(est.lut) * 100.0,
+            est.dsp,
+            est.bram36,
+            est.fmax_mhz,
+            fps,
+            XCVU37P.fits(est.lut, est.ff, est.dsp, est.bram36),
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Reproduce Table X and Fig. 13: the JSC 16-16-5 MLP swept across input
+//! data rates r0 = 16 .. 1/16, DSP and no-DSP variants, with the Pareto
+//! frontier against the published LUT-based implementations.
+//!
+//! Uses the trained JSC artifact when present (measured trivial-weight
+//! DSP analysis + simulated cycles); otherwise falls back to the analytic
+//! models.
+//!
+//! ```bash
+//! cargo run --release --offline --example pareto_sweep
+//! ```
+
+use cnn_flow::report::synthesis::{fig13, load_jsc_artifact, table10};
+
+fn main() {
+    let qm = load_jsc_artifact();
+    match &qm {
+        Some(q) => println!(
+            "using trained JSC artifact (QAT accuracy {:.2}%)\n",
+            q.qat_accuracy * 100.0
+        ),
+        None => println!("artifacts not built; using analytic models\n"),
+    }
+    println!("{}", table10(qm.as_ref()));
+    let fig = fig13(qm.as_ref());
+    println!("{fig}");
+    println!("CSV (for plotting):\n{}", fig.to_csv());
+}

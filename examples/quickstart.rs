@@ -1,0 +1,79 @@
+//! Quickstart: define a CNN, run the data-rate analysis, and get the
+//! continuous-flow unit plan plus resource/FPGA estimates.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use cnn_flow::complexity::{model_cost, parallel::fully_parallel_cost, CostOpts};
+use cnn_flow::flow::{analyze, plan_all};
+use cnn_flow::fpga::{estimate_model, EstimatorOpts};
+use cnn_flow::model::{Layer, Model};
+use cnn_flow::util::paper_count;
+
+fn main() {
+    // 1. Describe a network (or load one from JSON / take one from the zoo).
+    let mut model = Model::new("my_tiny_cnn", 28, 1);
+    model.push(Layer::conv("C1", 3, 1, 1, 8));
+    model.push(Layer::maxpool("P1", 2, 2));
+    model.push(Layer::conv("C2", 3, 1, 1, 16));
+    model.push(Layer::maxpool("P2", 2, 2));
+    model.push(Layer::dense("F1", 10));
+
+    // 2. Propagate data rates (Eq. 8) at the full input rate r0 = d0.
+    let analysis = analyze(&model, None).expect("shapes check out");
+    println!("data rates through {}:", model.name);
+    for l in &analysis.layers {
+        println!(
+            "  {:<4} r_in={:<5} r_out={:<5} ({}x{}x{} -> {}x{}x{})",
+            l.shaped.layer.name,
+            l.r_in.paper(),
+            l.r_out.paper(),
+            l.shaped.input.f,
+            l.shaped.input.f,
+            l.shaped.input.d,
+            l.shaped.output.f,
+            l.shaped.output.f,
+            l.shaped.output.d,
+        );
+    }
+
+    // 3. Plan interleaving + units (Eqs. 12-22) and cost them (Eqs. 23-37).
+    let plans = plan_all(&analysis);
+    println!("\nunit plan:");
+    for p in &plans {
+        println!(
+            "  {:<4} {:>3} units, C={:<3} {}",
+            p.rated.shaped.layer.name,
+            p.plan.unit_count(),
+            p.plan.configs(),
+            if p.plan.stalled() { "(stalled)" } else { "" },
+        );
+    }
+
+    let ours = model_cost(&plans, CostOpts::FULL).total;
+    let reference = fully_parallel_cost(&analysis, CostOpts::FULL).total;
+    println!(
+        "\ncontinuous flow: {} adders, {} multipliers, {} registers",
+        paper_count(ours.adders),
+        paper_count(ours.multipliers),
+        paper_count(ours.registers)
+    );
+    println!(
+        "fully parallel : {} adders, {} multipliers, {} registers",
+        paper_count(reference.adders),
+        paper_count(reference.multipliers),
+        paper_count(reference.registers)
+    );
+    println!(
+        "arithmetic saved: {:.1}x",
+        reference.multipliers as f64 / ours.multipliers as f64
+    );
+
+    // 4. FPGA estimate (the paper's Vivado substitute).
+    let est = estimate_model(&plans, EstimatorOpts::default(), None);
+    println!(
+        "\nFPGA estimate: {} LUT, {} FF, {} DSP, {:.1} BRAM36 @ {:.0} MHz, {:.1} W",
+        est.lut, est.ff, est.dsp, est.bram36, est.fmax_mhz, est.power_w
+    );
+}

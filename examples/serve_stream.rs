@@ -1,0 +1,182 @@
+//! E12 — the end-to-end driver (DESIGN.md §5): load the QAT-trained digits
+//! CNN artifact, serve a stream of batched inference requests through the
+//! continuous-flow coordinator, cross-check sampled answers against the
+//! AOT-compiled JAX int8 golden model via PJRT, and report accuracy,
+//! latency and throughput (wall-clock and projected hardware).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example serve_stream
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::quant::{quantize, QModel};
+use cnn_flow::runtime::artifacts_dir;
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::Rng;
+
+/// Regenerate the synthetic digit glyphs (the same procedural dataset as
+/// `python/compile/data.py`) so the serving demo classifies real held-out
+/// samples, not just the exporter's vectors.
+fn make_digit(rng: &mut Rng, label: usize) -> Vec<f32> {
+    const GLYPHS: [[&str; 5]; 10] = [
+        ["1111", "1001", "1001", "1001", "1111"],
+        ["0010", "0110", "0010", "0010", "0111"],
+        ["1111", "0001", "1111", "1000", "1111"],
+        ["1111", "0001", "0111", "0001", "1111"],
+        ["1001", "1001", "1111", "0001", "0001"],
+        ["1111", "1000", "1111", "0001", "1111"],
+        ["1111", "1000", "1111", "1001", "1111"],
+        ["1111", "0001", "0010", "0100", "0100"],
+        ["1111", "1001", "1111", "1001", "1111"],
+        ["1111", "1001", "1111", "0001", "1111"],
+    ];
+    // 5x4 glyph -> 10x8 upscale -> centred on 12x12, jitter + noise.
+    let mut canvas = vec![0f32; 144];
+    let (dr, dc) = (
+        rng.range(0, 2) as isize - 1,
+        rng.range(0, 2) as isize - 1,
+    );
+    let bright = 0.7 + 0.3 * rng.f64() as f32;
+    for gr in 0..5 {
+        for gc in 0..4 {
+            if GLYPHS[label][gr].as_bytes()[gc] == b'1' {
+                for ur in 0..2 {
+                    for uc in 0..2 {
+                        let r = 1 + gr * 2 + ur;
+                        let c = 2 + gc * 2 + uc;
+                        let rr = r as isize + dr;
+                        let cc = c as isize + dc;
+                        if (0..12).contains(&rr) && (0..12).contains(&cc) {
+                            canvas[(rr * 12 + cc) as usize] = bright;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for v in &mut canvas {
+        *v = (*v + 0.1 * rng.normal() as f32).clamp(0.0, 1.0);
+    }
+    canvas
+}
+
+fn main() {
+    // --- load the trained artifact -------------------------------------
+    let path = artifacts_dir().join("weights/digits.json");
+    let qm = match QModel::load(&path) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "loaded digits CNN: {} layers, QAT accuracy {:.2}%, input scale {}",
+        qm.layers.len(),
+        qm.qat_accuracy * 100.0,
+        qm.input_scale
+    );
+
+    // --- hardware projection from the cycle-accurate pipeline ----------
+    let sim = PipelineSim::new(qm.clone(), None).unwrap();
+    let warm: Vec<Vec<i64>> = qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect();
+    let proj = sim.run(&warm).unwrap();
+    println!("\nper-layer utilisation (continuous flow, back-to-back frames):");
+    for s in &proj.stats {
+        println!(
+            "  {:<4} {:>3} {}s  utilization {:>5.1}%",
+            s.name,
+            s.units,
+            s.unit_kind,
+            s.utilization * 100.0
+        );
+    }
+    println!(
+        "frame latency {} cycles; steady-state {:.1} cycles/frame",
+        proj.first_frame_latency, proj.cycles_per_frame
+    );
+
+    // --- serve a stream -------------------------------------------------
+    let config = ServerConfig {
+        batch: 16,
+        verify_every: 4,
+        ..Default::default()
+    };
+    let clock_hz = config.clock_hz;
+    let server = Arc::new(
+        Server::start(qm.clone(), config, Some("digits".to_string())).unwrap(),
+    );
+    let n_requests = 512usize;
+    let n_clients = 4usize;
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..n_clients {
+        let s = Arc::clone(&server);
+        let scale = qm.input_scale;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xE12 + client as u64);
+            let mut correct = 0usize;
+            let mut served = 0usize;
+            for _ in 0..n_requests / n_clients {
+                let label = rng.range(0, 9);
+                let img = make_digit(&mut rng, label);
+                let x_q: Vec<i64> = img.iter().map(|&v| quantize(v, scale)).collect();
+                match s.infer(x_q) {
+                    Ok(resp) => {
+                        served += 1;
+                        if resp.argmax == label {
+                            correct += 1;
+                        }
+                    }
+                    Err(_) => {} // backpressure
+                }
+            }
+            (served, correct)
+        }));
+    }
+    let (mut served, mut correct) = (0usize, 0usize);
+    for h in handles {
+        let (s, c) = h.join().unwrap();
+        served += s;
+        correct += c;
+    }
+    let wall = started.elapsed();
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let m = Arc::try_unwrap(server)
+        .map(|s| s.shutdown())
+        .unwrap_or_else(|s| s.metrics());
+
+    // --- report ----------------------------------------------------------
+    println!("\n== E12 end-to-end results ==");
+    println!(
+        "served {served}/{n_requests} requests in {wall:?} ({:.0} req/s wall)",
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "held-out accuracy: {:.1}% ({correct}/{served})",
+        correct as f64 / served as f64 * 100.0
+    );
+    println!(
+        "coordinator: mean batch {:.1}, mean service {:?}",
+        m.mean_batch, m.mean_service
+    );
+    println!(
+        "projected hardware: {:.2} MInf/s at {:.0} MHz ({:.1} us/frame latency)",
+        m.projected_fps / 1e6,
+        clock_hz / 1e6,
+        proj.first_frame_latency as f64 / clock_hz * 1e6,
+    );
+    println!(
+        "golden cross-check (PJRT): {} verified, {} mismatches",
+        m.verified, m.mismatches
+    );
+    assert_eq!(m.mismatches, 0, "cycle sim diverged from the golden model");
+    assert!(
+        correct as f64 / served as f64 > 0.9,
+        "accuracy regression on held-out digits"
+    );
+    println!("OK");
+}

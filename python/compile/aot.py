@@ -1,0 +1,166 @@
+"""AOT compile path (run once by `make artifacts`; never on the request path).
+
+Trains the end-to-end models (QAT int8), then exports:
+
+* `artifacts/digits_int8.hlo.txt`  — bit-exact int8 golden pipeline of the
+  digits CNN (the graph the rust coordinator serves and checks the cycle
+  simulator against);
+* `artifacts/digits_float.hlo.txt` — float forward built from the L1
+  *Pallas* kernels (interpret mode), proving the pallas -> HLO -> PJRT
+  path end to end;
+* `artifacts/jsc_int8.hlo.txt`     — int8 golden for the JSC MLP;
+* `artifacts/weights/{digits,jsc}.json` — quantized layers (int8 weights,
+  int32 bias, f32 requant multipliers) + held-out test vectors for the
+  rust integration tests;
+* `artifacts/meta.json`            — index + accuracies.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datasets
+from .model import forward_float, forward_int8
+from .train import train_digits, train_jsc
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides big literals as '{...}', which
+    # the text parser on the rust side would silently zero-fill — the
+    # weights must be printed in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates jax's extended source
+    # metadata attributes (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def lower_int8(qlayers, in_shape):
+    fn = functools.partial(forward_int8, qlayers)
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return jax.jit(lambda x: (fn(x),)).lower(spec)
+
+
+def lower_float_pallas(spec_model, params, in_shape):
+    fn = lambda x: (forward_float(spec_model, params, x, use_pallas=True),)
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def export_model(name, spec, params, scales, acc, xs_test, out_dir):
+    """Quantize, lower, dump weights + test vectors. Returns meta entry."""
+    from .model import export_qlayers, layer_shapes
+
+    qlayers = export_qlayers(spec, params, scales)
+    in_shape = layer_shapes(spec)[0][0]
+    if spec.layers[0].kind == "dense":
+        in_shape = (1, 1, in_shape[2])
+
+    # Int8 golden HLO.
+    hlo_int8 = to_hlo_text(lower_int8(qlayers, in_shape))
+    int8_path = os.path.join(out_dir, f"{name}_int8.hlo.txt")
+    with open(int8_path, "w") as f:
+        f.write(hlo_int8)
+
+    # Test vectors: quantized inputs -> int8-pipeline outputs.
+    s_in = scales["input"]
+    vectors = []
+    for x in xs_test:
+        x_q = np.clip(np.round(np.asarray(x) / s_in), -127, 127).astype(np.float32)
+        y = np.asarray(forward_int8(qlayers, jnp.asarray(x_q.reshape(in_shape))))
+        vectors.append(
+            {
+                "x_q": [int(v) for v in x_q.reshape(-1)],
+                "y": [float(v) for v in y.reshape(-1)],
+            }
+        )
+
+    weights = {
+        "name": name,
+        "input_shape": list(in_shape),
+        "input_scale": float(np.float32(s_in)),
+        "layers": [ql.to_json_dict() for ql in qlayers],
+        "test_vectors": vectors,
+        "qat_accuracy": acc,
+    }
+    wpath = os.path.join(out_dir, "weights", f"{name}.json")
+    with open(wpath, "w") as f:
+        json.dump(weights, f)
+    return {
+        "int8_hlo": os.path.basename(int8_path),
+        "weights": f"weights/{name}.json",
+        "qat_accuracy": acc,
+        "input_shape": list(in_shape),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--digits-train", type=int, default=1500)
+    ap.add_argument("--jsc-train", type=int, default=4000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    meta = {"models": {}}
+
+    # --- digits CNN (E12 end-to-end model) -------------------------------
+    print("training digits_cnn (QAT int8)...")
+    spec, params, scales, acc = train_digits(args.digits_train, seed=args.seed)
+    print(f"  digits QAT accuracy: {acc:.4f}")
+    xs_test, _ = datasets.digits(16, seed=args.seed + 999)
+    meta["models"]["digits"] = export_model(
+        "digits", spec, params, scales, acc, xs_test, out_dir
+    )
+
+    # Float-pallas HLO for the digits model (L1 kernels in the graph).
+    hlo = to_hlo_text(lower_float_pallas(spec, params, (12, 12, 1)))
+    with open(os.path.join(out_dir, "digits_float.hlo.txt"), "w") as f:
+        f.write(hlo)
+    meta["models"]["digits"]["float_hlo"] = "digits_float.hlo.txt"
+
+    # --- JSC MLP (Table X model) -----------------------------------------
+    print("training jsc_mlp (QAT int8)...")
+    jspec, jparams, jscales, jacc = train_jsc(args.jsc_train, seed=args.seed)
+    print(f"  jsc QAT accuracy: {jacc:.4f}")
+    xs_test, _ = datasets.jsc(16, seed=args.seed + 999)
+    meta["models"]["jsc"] = export_model(
+        "jsc", jspec, jparams, jscales, jacc, xs_test.reshape(-1, 1, 1, 16), out_dir
+    )
+
+    # Back-compat main artifact name used by the Makefile dependency.
+    import shutil
+
+    shutil.copyfile(
+        os.path.join(out_dir, "digits_int8.hlo.txt"),
+        os.path.join(out_dir, "model.hlo.txt"),
+    )
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"artifacts written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

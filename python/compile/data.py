@@ -1,0 +1,71 @@
+"""Synthetic datasets (build-time substitutes, DESIGN.md §2).
+
+* `digits` — procedural 12x12 digit glyphs with jitter + noise, standing in
+  for MNIST-class data for the end-to-end experiment (E12).
+* `jsc` — a jet-substructure-like 16-feature 5-class task replacing the
+  (unavailable) JSC dataset of [48]: per-class Gaussian clusters with
+  correlated features, the same topology/scale the paper's 16-16-5 MLP was
+  evaluated on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 5x4 coarse glyphs for digits 0-9 (1 = ink). Upscaled to 12x12.
+_GLYPHS = {
+    0: ["1111", "1001", "1001", "1001", "1111"],
+    1: ["0010", "0110", "0010", "0010", "0111"],
+    2: ["1111", "0001", "1111", "1000", "1111"],
+    3: ["1111", "0001", "0111", "0001", "1111"],
+    4: ["1001", "1001", "1111", "0001", "0001"],
+    5: ["1111", "1000", "1111", "0001", "1111"],
+    6: ["1111", "1000", "1111", "1001", "1111"],
+    7: ["1111", "0001", "0010", "0100", "0100"],
+    8: ["1111", "1001", "1111", "1001", "1111"],
+    9: ["1111", "1001", "1111", "0001", "1111"],
+}
+
+
+def _glyph_map(d: int) -> np.ndarray:
+    g = np.array([[int(c) for c in row] for row in _GLYPHS[d]], np.float32)
+    # Upscale 5x4 -> 10x8 and centre on a 12x12 canvas.
+    up = np.kron(g, np.ones((2, 2), np.float32))
+    canvas = np.zeros((12, 12), np.float32)
+    canvas[1:11, 2:10] = up
+    return canvas
+
+
+def digits(n: int, seed: int = 0):
+    """n samples of (12, 12, 1) float images in [0, 1) and labels 0-9."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 12, 12, 1), np.float32)
+    ys = rng.integers(0, 10, n)
+    for i, y in enumerate(ys):
+        img = _glyph_map(int(y))
+        # Jitter by up to 1 pixel in each direction.
+        dr, dc = rng.integers(-1, 2, 2)
+        img = np.roll(np.roll(img, dr, axis=0), dc, axis=1)
+        img = img * rng.uniform(0.7, 1.0) + rng.normal(0, 0.1, img.shape)
+        xs[i, :, :, 0] = np.clip(img, 0.0, 1.0)
+    return xs, ys.astype(np.int32)
+
+
+def jsc(n: int, seed: int = 0):
+    """n samples of 16 jet-substructure-like features and labels 0-4.
+
+    Class means are fixed (derived from a seeded generator) and features
+    get a shared random correlation structure, so the task is linearly
+    non-trivial but solvable by the 16-16-5 MLP to high accuracy.
+    """
+    struct = np.random.default_rng(1234)  # fixed structure, independent of `seed`
+    means = struct.normal(0, 1.6, (5, 16)).astype(np.float32)
+    mix = struct.normal(0, 0.4, (16, 16)).astype(np.float32)
+    mix += np.eye(16, dtype=np.float32)
+    rng = np.random.default_rng(seed)
+    ys = rng.integers(0, 5, n)
+    noise = rng.normal(0, 1.0, (n, 16)).astype(np.float32)
+    xs = means[ys] + noise @ mix
+    # Normalise to a bounded range (hardware-friendly activations).
+    xs = np.tanh(xs / 3.0) * 3.0
+    return xs.astype(np.float32), ys.astype(np.int32)

@@ -1,0 +1,49 @@
+"""L1 Pallas dense / pointwise kernel.
+
+The grid mirrors the paper's FCU decomposition (Section III-E): each grid
+step computes one block of `h` neurons over all input features — one
+"physical FCU" worth of work — so the HBM->VMEM weight traffic follows the
+same weight-ROM-per-unit layout the hardware uses. The per-block
+contraction is a (h, features) x (features,) matvec, which on a real TPU
+batches onto the MXU; interpret=True is required for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_block_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One block of neurons: w_ref (h, F), x_ref (F,), o_ref (h,)."""
+    o_ref[:] = (
+        jnp.dot(w_ref[:, :], x_ref[:], preferred_element_type=jnp.float32)
+        + b_ref[:]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dense_pallas(x, w, b, block: int = 0):
+    """Pallas dense layer: x (F,), w (U, F), b (U,) -> (U,).
+
+    `block` is the neuron-block size h; 0 picks the whole layer (one FCU).
+    Must divide U.
+    """
+    units, feats = w.shape
+    h = block if block else units
+    assert units % h == 0, "block must divide the unit count"
+    return pl.pallas_call(
+        _dense_block_kernel,
+        grid=(units // h,),
+        in_specs=[
+            pl.BlockSpec((feats,), lambda i: (0,)),
+            pl.BlockSpec((h, feats), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((h,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((units,), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,45 @@
+"""L1 Pallas max-pooling kernel (the PPU of Fig. 5, Eq. 6).
+
+Same row-grid schedule as the conv kernel: the paper's PPU line buffer
+(each input row read once, reused by the k vertical window positions)
+becomes the BlockSpec row walk; the horizontal window max is a strided
+gather + elementwise max, fully vectorised over the output row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_row_kernel(x_ref, o_ref, *, k, stride, out_w):
+    r = pl.program_id(0)
+    _, w_in, c = x_ref.shape
+    acc = jnp.full((out_w, c), -jnp.inf, jnp.float32)
+    base = jnp.arange(out_w) * stride
+    for u in range(k):
+        row = x_ref[r * stride + u, :, :]
+        for v in range(k):
+            taps = jnp.take(row, base + v, axis=0)
+            acc = jnp.maximum(acc, taps)
+    o_ref[0, :, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool2d_pallas(x, k: int, stride: int):
+    """Pallas max pool: x (H,W,C) -> (H',W',C)."""
+    h, w_in, c = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (w_in - k) // stride + 1
+    kernel = functools.partial(_maxpool_row_kernel, k=k, stride=stride, out_w=out_w)
+    return pl.pallas_call(
+        kernel,
+        grid=(out_h,),
+        in_specs=[pl.BlockSpec(x.shape, lambda r: (0, 0, 0))],
+        out_specs=pl.BlockSpec((1, out_w, c), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness base).
+
+Everything here is written with the most obvious jnp formulation possible —
+no tiling, no pallas — so that `pytest python/tests/` can assert the Pallas
+kernels (and, transitively, the AOT-compiled HLO the rust runtime executes)
+against an independently simple implementation.
+
+Layouts follow the rust simulator: feature maps are (H, W, C) row-major,
+dense inputs are flat (features,), weights are:
+
+* conv:      (k, k, C_in, C_out)
+* depthwise: (k, k, C)
+* dense:     (units, features)   [neuron-major, matching rust `fcu_rom`]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d(x, w, b=None, stride: int = 1, padding: int = 0):
+    """Valid convolution with explicit zero padding.
+
+    x: (H, W, C_in); w: (k, k, C_in, C_out); returns (H', W', C_out) with
+    H' = (H + 2p - k)//s + 1. Matches Eq. 2 plus Section III-B padding.
+    """
+    k = w.shape[0]
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    h, wdt, _ = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (wdt - k) // stride + 1
+    rows = []
+    for r in range(out_h):
+        cols = []
+        for c in range(out_w):
+            window = x[r * stride : r * stride + k, c * stride : c * stride + k, :]
+            # (k,k,Cin) x (k,k,Cin,Cout) -> (Cout,)
+            cols.append(jnp.tensordot(window, w, axes=([0, 1, 2], [0, 1, 2])))
+        rows.append(jnp.stack(cols))
+    y = jnp.stack(rows)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def depthwise_conv2d(x, w, b=None, stride: int = 1, padding: int = 0):
+    """Depthwise convolution: x (H,W,C), w (k,k,C) -> (H',W',C)."""
+    k = w.shape[0]
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    h, wdt, _ = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (wdt - k) // stride + 1
+    rows = []
+    for r in range(out_h):
+        cols = []
+        for c in range(out_w):
+            window = x[r * stride : r * stride + k, c * stride : c * stride + k, :]
+            cols.append(jnp.sum(window * w, axis=(0, 1)))
+        rows.append(jnp.stack(cols))
+    y = jnp.stack(rows)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def maxpool2d(x, k: int, stride: int):
+    """Max pooling, x (H,W,C) -> (H',W',C) (Eq. 6)."""
+    h, w, _ = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (w - k) // stride + 1
+    rows = []
+    for r in range(out_h):
+        cols = []
+        for c in range(out_w):
+            window = x[r * stride : r * stride + k, c * stride : c * stride + k, :]
+            cols.append(jnp.max(window, axis=(0, 1)))
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)
+
+
+def avgpool2d(x, k: int, stride: int):
+    """Average pooling (Section VI: a depthwise conv with weights 1/k^2)."""
+    h, w, _ = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (w - k) // stride + 1
+    rows = []
+    for r in range(out_h):
+        cols = []
+        for c in range(out_w):
+            window = x[r * stride : r * stride + k, c * stride : c * stride + k, :]
+            cols.append(jnp.mean(window, axis=(0, 1)))
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)
+
+
+def dense(x, w, b=None):
+    """Fully connected layer (Eq. 7): x (features,), w (units, features)."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return y
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric int8 fixed-point quantization — shared semantics with
+# rust/src/quant (scale = amax / 127, zero point 0, round-half-away).
+# ---------------------------------------------------------------------------
+
+QMAX = 127.0
+
+
+def quant_scale(amax):
+    """Scale for symmetric int8: amax -> scale with q = round(x / scale)."""
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-8) / QMAX
+
+
+def quantize(x, scale):
+    """Float -> int8 grid (returned as float int values for jax grads)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -QMAX, QMAX)
+
+
+def dequantize(q, scale):
+    return q * scale
+
+
+def fake_quant(x, scale):
+    """Quantize-dequantize with a straight-through estimator gradient."""
+    import jax
+
+    q = dequantize(quantize(x, scale), scale)
+    # STE: forward q, backward identity.
+    return x + jax.lax.stop_gradient(q - x)

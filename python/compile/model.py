@@ -1,0 +1,345 @@
+"""L2: JAX forward passes for the zoo models, float and int8-quantized.
+
+Architectures mirror `rust/src/model/zoo.rs` exactly (same names, shapes,
+strides, paddings) — the rust analysis, the pipeline simulator, and these
+JAX graphs must agree layer for layer.
+
+Two forward families:
+
+* `forward_float(spec, params, x, use_pallas)` — training/accuracy graph.
+  With `use_pallas=True` the convolution/pool/dense hot spots run through
+  the L1 Pallas kernels (interpret mode), which is the graph that
+  `aot.py` lowers for the rust runtime.
+* `forward_int8(qlayers, x_q)` — bit-exact emulation of the quantized
+  hardware pipeline (int accumulators + f32 requant), the golden model the
+  rust cycle simulator is checked against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.conv import conv2d_pallas, depthwise_conv2d_pallas
+from .kernels.matmul import dense_pallas
+from .kernels.pool import maxpool2d_pallas
+from .quantize import QMAX, QLayer, requant
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    name: str
+    kind: str  # conv | dwconv | maxpool | avgpool | dense
+    k: int = 0
+    s: int = 1
+    p: int = 0
+    filters: int = 0  # conv/dense output channels
+    relu: bool = True
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    input_hw: int
+    input_ch: int
+    layers: List[LayerSpec]
+
+
+def digits_cnn() -> ModelSpec:
+    """Mirror of zoo::digits_cnn (E12 end-to-end model)."""
+    return ModelSpec(
+        "digits_cnn",
+        12,
+        1,
+        [
+            LayerSpec("C1", "conv", k=3, s=1, p=1, filters=4),
+            LayerSpec("P1", "maxpool", k=2, s=2, relu=False),
+            LayerSpec("C2", "conv", k=3, s=1, p=1, filters=8),
+            LayerSpec("P2", "maxpool", k=2, s=2, relu=False),
+            LayerSpec("F1", "dense", filters=10, relu=False),
+        ],
+    )
+
+
+def running_example() -> ModelSpec:
+    """Mirror of zoo::running_example (Table V)."""
+    return ModelSpec(
+        "running_example",
+        24,
+        1,
+        [
+            LayerSpec("C1", "conv", k=5, s=1, p=2, filters=8),
+            LayerSpec("P1", "maxpool", k=2, s=2, relu=False),
+            LayerSpec("C2", "conv", k=5, s=1, p=2, filters=16),
+            LayerSpec("P2", "maxpool", k=3, s=3, relu=False),
+            LayerSpec("F1", "dense", filters=10, relu=False),
+        ],
+    )
+
+
+def jsc_mlp() -> ModelSpec:
+    """Mirror of zoo::jsc_mlp (Table X)."""
+    return ModelSpec(
+        "jsc_mlp",
+        1,
+        16,
+        [
+            LayerSpec("fc1", "dense", filters=16, relu=True),
+            LayerSpec("fc2", "dense", filters=16, relu=True),
+            LayerSpec("fc3", "dense", filters=5, relu=False),
+        ],
+    )
+
+
+def layer_shapes(spec: ModelSpec) -> List[Tuple[Tuple[int, int, int], Tuple[int, int, int]]]:
+    """(input, output) shapes (h, w, c) per layer; dense flattens."""
+    shapes = []
+    h, c = spec.input_hw, spec.input_ch
+    for l in spec.layers:
+        in_shape = (h, h, c)
+        if l.kind == "dense":
+            in_shape = (1, 1, h * h * c)
+            h, c = 1, l.filters
+        elif l.kind == "conv":
+            h = (h + 2 * l.p - l.k) // l.s + 1
+            c = l.filters
+        else:  # dwconv / pools keep channels
+            h = (h + 2 * l.p - l.k) // l.s + 1
+        shapes.append((in_shape, (h, h, c)))
+    return shapes
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict:
+    """He-initialised float parameters keyed by layer name."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    shapes = layer_shapes(spec)
+    for l, (ins, _) in zip(spec.layers, shapes):
+        cin = ins[2]
+        if l.kind == "conv":
+            fan_in = l.k * l.k * cin
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), (l.k, l.k, cin, l.filters))
+            params[l.name] = {
+                "w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((l.filters,), jnp.float32),
+            }
+        elif l.kind == "dwconv":
+            fan_in = l.k * l.k
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), (l.k, l.k, cin))
+            params[l.name] = {
+                "w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((cin,), jnp.float32),
+            }
+        elif l.kind == "dense":
+            feats = ins[0] * ins[1] * ins[2]
+            w = rng.normal(0, np.sqrt(2.0 / feats), (l.filters, feats))
+            params[l.name] = {
+                "w": jnp.asarray(w, jnp.float32),
+                "b": jnp.zeros((l.filters,), jnp.float32),
+            }
+    return params
+
+
+def forward_float(spec: ModelSpec, params: dict, x, use_pallas: bool = False,
+                  fake_quant_scales: Optional[dict] = None):
+    """Float forward pass for one (H, W, C) input.
+
+    `fake_quant_scales` (from calibration) turns this into the QAT graph:
+    activations and weights are passed through the STE fake-quant of
+    ref.fake_quant at the given scales.
+    """
+    fq = fake_quant_scales
+
+    def maybe_fq(t, key):
+        if fq is None or key not in fq:
+            return t
+        return ref.fake_quant(t, fq[key])
+
+    x = maybe_fq(x, "input")
+    for l in spec.layers:
+        if l.kind in ("conv", "dwconv", "dense"):
+            w = maybe_fq(params[l.name]["w"], f"{l.name}/w")
+            b = params[l.name]["b"]
+        if l.kind == "conv":
+            x = (conv2d_pallas if use_pallas else ref.conv2d)(
+                x, w, b, stride=l.s, padding=l.p
+            )
+        elif l.kind == "dwconv":
+            x = (depthwise_conv2d_pallas if use_pallas else ref.depthwise_conv2d)(
+                x, w, b, stride=l.s, padding=l.p
+            )
+        elif l.kind == "maxpool":
+            x = (maxpool2d_pallas if use_pallas else ref.maxpool2d)(x, l.k, l.s)
+        elif l.kind == "avgpool":
+            x = ref.avgpool2d(x, l.k, l.s)
+        elif l.kind == "dense":
+            x = jnp.reshape(x, (-1,))
+            x = (dense_pallas if use_pallas else ref.dense)(x, w, b)
+        else:
+            raise ValueError(l.kind)
+        if l.relu:
+            x = ref.relu(x)
+        x = maybe_fq(x, f"{l.name}/act")
+    return x
+
+
+def _conv_lax(x, w, b, stride, padding):
+    """Fused convolution via lax.conv (L2 perf: one HLO convolution op
+    instead of H*W per-window dots — see EXPERIMENTS.md §Perf). Exact on
+    int8-valued f32 inputs (|acc| < 2^24)."""
+    import jax
+
+    y = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return y + b
+
+
+def _dwconv_lax(x, w, b, stride, padding):
+    import jax
+
+    c = x.shape[-1]
+    # (k,k,C) -> grouped conv with feature_group_count = C, HWIO (k,k,1,C).
+    wg = w[:, :, None, :] * jnp.ones((1, 1, 1, 1), jnp.float32)
+    wg = jnp.transpose(w[:, :, :, None], (0, 1, 3, 2))  # (k,k,1,C)
+    y = jax.lax.conv_general_dilated(
+        x[None],
+        wg,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    return y + b
+
+
+def _maxpool_lax(x, k, s):
+    import jax
+
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (k, k, 1), (s, s, 1), "VALID"
+    )
+
+
+def forward_int8(qlayers: List[QLayer], x_q):
+    """Bit-exact int8 pipeline: x_q int8-valued f32 (H, W, C) or (F,).
+
+    All intermediate activations are int8-valued; accumulators are exact in
+    f32 as long as |acc| < 2^24 (asserted by the exporter). Returns the
+    final layer's *accumulator-scale* int values (no requant on the last
+    layer, matching the paper's 12-bit final output note).
+
+    Uses fused lax convolution/pooling ops (identical integer arithmetic to
+    ref.py, verified by tests) so the AOT-lowered HLO stays compact.
+    """
+    x = x_q
+    for i, ql in enumerate(qlayers):
+        last = i + 1 == len(qlayers)
+        if ql.kind == "conv":
+            acc = _conv_lax(
+                x,
+                jnp.asarray(ql.w_q, jnp.float32),
+                jnp.asarray(ql.b_q, jnp.float32),
+                ql.s,
+                ql.p,
+            )
+        elif ql.kind == "dwconv":
+            acc = _dwconv_lax(
+                x,
+                jnp.asarray(ql.w_q, jnp.float32),
+                jnp.asarray(ql.b_q, jnp.float32),
+                ql.s,
+                ql.p,
+            )
+        elif ql.kind == "maxpool":
+            x = _maxpool_lax(x, ql.k, ql.s)
+            continue
+        elif ql.kind == "dense":
+            acc = ref.dense(
+                jnp.reshape(x, (-1,)),
+                jnp.asarray(ql.w_q, jnp.float32),
+                jnp.asarray(ql.b_q, jnp.float32),
+            )
+        else:
+            raise ValueError(ql.kind)
+        if ql.relu:
+            acc = jnp.maximum(acc, 0.0)
+        if last:
+            return acc
+        x = requant(acc, ql.m)
+    return x
+
+
+def calibrate_scales(spec: ModelSpec, params: dict, xs) -> dict:
+    """Per-tensor amax calibration over a batch of inputs `xs` (N,H,W,C).
+
+    Returns {key: scale} for input, each weight, and each activation,
+    using the float forward pass.
+    """
+    from .quantize import amax_scale
+
+    amax = {"input": float(np.abs(np.asarray(xs)).max())}
+    for l in spec.layers:
+        if l.kind in ("conv", "dwconv", "dense"):
+            amax[f"{l.name}/w"] = float(np.abs(np.asarray(params[l.name]["w"])).max())
+
+    def record(name, t):
+        key = f"{name}/act"
+        amax[key] = max(amax.get(key, 0.0), float(np.abs(np.asarray(t)).max()))
+
+    for x in xs:
+        t = jnp.asarray(x, jnp.float32)
+        for l in spec.layers:
+            if l.kind == "conv":
+                t = ref.conv2d(t, params[l.name]["w"], params[l.name]["b"], stride=l.s, padding=l.p)
+            elif l.kind == "dwconv":
+                t = ref.depthwise_conv2d(t, params[l.name]["w"], params[l.name]["b"], stride=l.s, padding=l.p)
+            elif l.kind == "maxpool":
+                t = ref.maxpool2d(t, l.k, l.s)
+            elif l.kind == "avgpool":
+                t = ref.avgpool2d(t, l.k, l.s)
+            elif l.kind == "dense":
+                t = ref.dense(jnp.reshape(t, (-1,)), params[l.name]["w"], params[l.name]["b"])
+            if l.relu:
+                t = ref.relu(t)
+            record(l.name, t)
+    return {k: amax_scale(v) for k, v in amax.items()}
+
+
+def export_qlayers(spec: ModelSpec, params: dict, scales: dict) -> List[QLayer]:
+    """Freeze float params + calibration scales into the QLayer pipeline."""
+    from .quantize import quantize_conv, quantize_dense
+
+    qlayers = []
+    shapes = layer_shapes(spec)
+    s_act = scales["input"]
+    for l, (ins, outs) in zip(spec.layers, shapes):
+        s_out = scales.get(f"{l.name}/act", s_act)
+        if l.kind in ("maxpool", "avgpool"):
+            # Pooling is scale-preserving (max of int8 is int8).
+            qlayers.append(
+                QLayer(l.name, l.kind, l.k, l.s, l.p, l.relu, None, None, None, ins, outs)
+            )
+            continue
+        w = np.asarray(params[l.name]["w"])
+        b = np.asarray(params[l.name]["b"])
+        if l.kind == "dense":
+            ql = quantize_dense(l.name, w, b, s_act, s_out, l.relu, ins, outs)
+        else:
+            ql = quantize_conv(
+                l.name, l.kind, w, b, s_act, s_out, l.s, l.p, l.relu, ins, outs
+            )
+        # Accumulator headroom: f32-exact integers need |acc| < 2^24.
+        fan_in = (l.k * l.k * ins[2]) if l.kind != "dense" else ins[0] * ins[1] * ins[2]
+        assert QMAX * QMAX * fan_in < 2**24, f"{l.name}: accumulator overflow risk"
+        qlayers.append(ql)
+        s_act = s_out
+    return qlayers

@@ -1,0 +1,110 @@
+"""Symmetric int8 quantization substrate (L2), shared bit-for-bit with the
+rust pipeline simulator (`rust/src/quant`).
+
+Scheme (matching the paper's 8-bit fixed-point MQUAT setup):
+
+* per-tensor symmetric int8: q = clamp(round(x / s), -127, 127), zero point 0;
+* accumulators are int32 (int64 in the rust sim — the models here never
+  exceed int32);
+* bias is quantized at the accumulator scale: b_q = round(b / (s_x * s_w));
+* requantization to the next layer's activation scale uses a single f32
+  multiplier M = s_x * s_w / s_y applied as
+  `y_q = clamp(half_away_round(acc * M), -127, 127)`.
+
+`half_away_round` (round half away from zero) is chosen because both
+`jnp`-side emulation and the rust side can implement it identically —
+`jnp.round` alone would give half-even. The rust sim replays exactly this
+f32 arithmetic, so integration tests can require equality, not closeness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = 127
+
+
+def amax_scale(amax: float) -> float:
+    """Activation/weight scale from a calibrated absolute maximum."""
+    return max(float(amax), 1e-8) / QMAX
+
+
+def quantize_np(x: np.ndarray, scale: float) -> np.ndarray:
+    q = np.round(np.asarray(x, np.float64) / scale)
+    return np.clip(q, -QMAX, QMAX).astype(np.int32)
+
+
+def half_away_round(x):
+    """Round half away from zero, jnp version (f32 semantics)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + jnp.float32(0.5))
+
+
+def half_away_round_np(x):
+    return np.sign(x) * np.floor(np.abs(x) + np.float32(0.5))
+
+
+@dataclasses.dataclass
+class QLayer:
+    """One quantized layer as exported to the rust runtime/simulator."""
+
+    name: str
+    kind: str  # conv | dwconv | maxpool | avgpool | dense
+    k: int
+    s: int
+    p: int
+    relu: bool
+    w_q: Optional[np.ndarray]  # int32-valued; layout per kind (see ref.py)
+    b_q: Optional[np.ndarray]  # int32 accumulator-scale bias
+    m: Optional[float]  # requant multiplier (f32)
+    in_shape: tuple
+    out_shape: tuple
+
+    def to_json_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "kind": self.kind,
+            "k": self.k,
+            "s": self.s,
+            "p": self.p,
+            "relu": self.relu,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+        }
+        if self.w_q is not None:
+            d["w_shape"] = list(self.w_q.shape)
+            d["w_q"] = [int(v) for v in self.w_q.reshape(-1)]
+            d["b_q"] = [int(v) for v in self.b_q.reshape(-1)]
+            # Store M as f32 bits so rust reads the identical value.
+            d["m"] = float(np.float32(self.m))
+        return d
+
+
+def quantize_dense(name, w, b, s_in, s_out, relu, in_shape, out_shape) -> QLayer:
+    """Quantize a dense layer; w (units, feats), b (units,)."""
+    w = np.asarray(w, np.float64)
+    s_w = amax_scale(np.abs(w).max())
+    w_q = quantize_np(w, s_w)
+    b_q = np.round(np.asarray(b, np.float64) / (s_in * s_w)).astype(np.int64)
+    m = np.float32(s_in * s_w / s_out)
+    return QLayer(name, "dense", 0, 1, 0, relu, w_q, b_q, float(m), in_shape, out_shape)
+
+
+def quantize_conv(name, kind, w, b, s_in, s_out, stride, padding, relu, in_shape, out_shape) -> QLayer:
+    """Quantize a conv/dwconv layer; w per ref.py layout."""
+    w = np.asarray(w, np.float64)
+    s_w = amax_scale(np.abs(w).max())
+    w_q = quantize_np(w, s_w)
+    b_q = np.round(np.asarray(b, np.float64) / (s_in * s_w)).astype(np.int64)
+    m = np.float32(s_in * s_w / s_out)
+    k = w.shape[0]
+    return QLayer(name, kind, k, stride, padding, relu, w_q, b_q, float(m), in_shape, out_shape)
+
+
+def requant(acc, m):
+    """Int accumulator -> int8 activation (jnp, f32 arithmetic)."""
+    y = half_away_round(acc.astype(jnp.float32) * jnp.float32(m))
+    return jnp.clip(y, -QMAX, QMAX)

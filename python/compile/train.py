@@ -1,0 +1,130 @@
+"""Quantization-aware training (build-time substitute for MQUAT).
+
+Two-phase schedule per model:
+
+1. float pre-training with hand-rolled Adam on the ref-kernel graph;
+2. QAT fine-tuning: activations/weights pass through straight-through
+   fake-quant at scales calibrated after phase 1 — the same 8-bit
+   symmetric fixed-point format the hardware uses.
+
+Training runs in seconds (the models are deliberately small, DESIGN.md §2)
+and is invoked once by `make artifacts` via aot.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as datasets
+from .model import ModelSpec, calibrate_scales, forward_float, init_params
+
+
+def _loss_fn(spec: ModelSpec, params, xb, yb, scales=None):
+    logits = jax.vmap(
+        lambda x: forward_float(spec, params, x, use_pallas=False, fake_quant_scales=scales)
+    )(xb)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+    return nll
+
+
+def _adam_update(params, grads, mstate, vstate, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    for name, layer in params.items():
+        new_p[name], new_m[name], new_v[name] = {}, {}, {}
+        for key, value in layer.items():
+            g = grads[name][key]
+            m = b1 * mstate[name][key] + (1 - b1) * g
+            v = b2 * vstate[name][key] + (1 - b2) * g * g
+            mhat = m / (1 - b1**step)
+            vhat = v / (1 - b2**step)
+            new_p[name][key] = value - lr * mhat / (jnp.sqrt(vhat) + eps)
+            new_m[name][key] = m
+            new_v[name][key] = v
+    return new_p, new_m, new_v
+
+
+def _zeros_like_params(params):
+    return {n: {k: jnp.zeros_like(v) for k, v in l.items()} for n, l in params.items()}
+
+
+def train_model(
+    spec: ModelSpec,
+    xs: np.ndarray,
+    ys: np.ndarray,
+    float_steps: int = 300,
+    qat_steps: int = 150,
+    batch: int = 64,
+    lr: float = 3e-3,
+    seed: int = 0,
+) -> Tuple[dict, dict, float]:
+    """Train `spec` on (xs, ys); returns (params, scales, qat_accuracy)."""
+    rng = np.random.default_rng(seed)
+    params = init_params(spec, seed=seed)
+    xs_j = jnp.asarray(xs, jnp.float32)
+    ys_j = jnp.asarray(ys, jnp.int32)
+    n = len(xs)
+
+    loss_float = jax.jit(functools.partial(_loss_fn, spec))
+    grad_float = jax.jit(jax.grad(functools.partial(_loss_fn, spec)))
+
+    def run_phase(params, steps, scales, lr):
+        m, v = _zeros_like_params(params), _zeros_like_params(params)
+        if scales is None:
+            gradf = grad_float
+        else:
+            gradf = jax.jit(
+                lambda p, xb, yb: jax.grad(functools.partial(_loss_fn, spec))(
+                    p, xb, yb, scales
+                )
+            )
+        for step in range(1, steps + 1):
+            idx = rng.integers(0, n, batch)
+            g = gradf(params, xs_j[idx], ys_j[idx])
+            params, m, v = _adam_update(params, g, m, v, step, lr)
+        return params
+
+    params = run_phase(params, float_steps, None, lr)
+    # Calibrate on a sample, then QAT fine-tune at lower LR.
+    calib_idx = rng.integers(0, n, min(64, n))
+    scales = calibrate_scales(spec, params, xs[calib_idx])
+    params = run_phase(params, qat_steps, scales, lr * 0.3)
+    # Recalibrate activations after QAT (weights moved).
+    scales = calibrate_scales(spec, params, xs[calib_idx])
+
+    acc = accuracy(spec, params, xs, ys, scales)
+    _ = loss_float  # (kept for interactive debugging)
+    return params, scales, acc
+
+
+def accuracy(spec: ModelSpec, params, xs, ys, scales=None) -> float:
+    logits = jax.vmap(
+        lambda x: forward_float(spec, params, x, use_pallas=False, fake_quant_scales=scales)
+    )(jnp.asarray(xs, jnp.float32))
+    pred = np.asarray(jnp.argmax(logits, axis=1))
+    return float((pred == ys).mean())
+
+
+def train_digits(n_train: int = 2000, seed: int = 0):
+    from .model import digits_cnn
+
+    xs, ys = datasets.digits(n_train, seed=seed)
+    spec = digits_cnn()
+    params, scales, acc = train_model(spec, xs, ys, seed=seed)
+    return spec, params, scales, acc
+
+
+def train_jsc(n_train: int = 4000, seed: int = 0):
+    from .model import jsc_mlp
+
+    xs, ys = datasets.jsc(n_train, seed=seed)
+    spec = jsc_mlp()
+    # Dense inputs: reshape to (1,1,16) "pixel" consumed by forward_float.
+    xs_img = xs.reshape(-1, 1, 1, 16)
+    params, scales, acc = train_model(spec, xs_img, ys, seed=seed)
+    return spec, params, scales, acc

@@ -1,0 +1,160 @@
+"""AOT path tests: HLO text generation, quantization export semantics,
+and (when artifacts exist) manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as datasets
+from compile.aot import lower_int8, to_hlo_text
+from compile.model import (
+    calibrate_scales,
+    digits_cnn,
+    export_qlayers,
+    forward_int8,
+    init_params,
+    jsc_mlp,
+)
+from compile.quantize import QMAX, amax_scale, half_away_round_np, quantize_np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _qlayers(spec, seed=0):
+    params = init_params(spec, seed=seed)
+    if spec.name == "jsc_mlp":
+        xs, _ = datasets.jsc(8, seed=seed)
+        xs = xs.reshape(-1, 1, 1, 16)
+    else:
+        xs, _ = datasets.digits(8, seed=seed)
+    scales = calibrate_scales(spec, params, xs)
+    return export_qlayers(spec, params, scales), scales
+
+
+def test_hlo_text_contains_full_constants():
+    qlayers, _ = _qlayers(jsc_mlp())
+    text = to_hlo_text(lower_int8(qlayers, (1, 1, 16)))
+    assert "{...}" not in text
+    assert "ENTRY" in text
+    # Weight matrices must appear as f32 constants of the right shape.
+    assert "f32[16,16]" in text
+    # No jax metadata attributes the old parser would reject.
+    assert "source_end_line" not in text
+
+
+def test_hlo_text_roundtrips_through_parser():
+    from jax._src.lib import xla_client as xc
+
+    qlayers, _ = _qlayers(jsc_mlp())
+    text = to_hlo_text(lower_int8(qlayers, (1, 1, 16)))
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+def test_lowered_int8_executes_like_eager():
+    qlayers, scales = _qlayers(jsc_mlp())
+    xs, _ = datasets.jsc(4, seed=77)
+    for x in xs:
+        x_q = np.clip(np.round(x / scales["input"]), -QMAX, QMAX).astype(np.float32)
+        eager = np.asarray(forward_int8(qlayers, jnp.asarray(x_q.reshape(1, 1, 16))))
+        lowered = lower_int8(qlayers, (1, 1, 16))
+        compiled = jax.jit(lambda v: forward_int8(qlayers, v))
+        got = np.asarray(compiled(jnp.asarray(x_q.reshape(1, 1, 16))))
+        np.testing.assert_array_equal(got, eager)
+        del lowered
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    amax=st.floats(1e-3, 1e3, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_np_bounds_and_grid(amax, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, amax, 64)
+    s = amax_scale(np.abs(x).max())
+    q = quantize_np(x, s)
+    assert q.max() <= QMAX and q.min() >= -QMAX
+    # Dequantized error bounded by half a step.
+    err = np.abs(q * s - np.clip(x, -QMAX * s, QMAX * s))
+    assert err.max() <= s / 2 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=32))
+def test_half_away_round_matches_definition(xs):
+    xs = np.asarray(xs, np.float32)
+    got = half_away_round_np(xs)
+    want = np.sign(xs) * np.floor(np.abs(xs) + np.float32(0.5))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_digits_export_accumulator_headroom():
+    qlayers, _ = _qlayers(digits_cnn())
+    for ql in qlayers:
+        if ql.w_q is None:
+            continue
+        if ql.kind == "dense":
+            fan_in = np.prod(ql.in_shape)
+        else:
+            fan_in = ql.k * ql.k * ql.in_shape[2]
+        assert QMAX * QMAX * fan_in < 2**24
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "meta.json")),
+    reason="artifacts not built",
+)
+def test_artifact_manifest_consistent():
+    with open(os.path.join(ARTIFACTS, "meta.json")) as f:
+        meta = json.load(f)
+    for name, entry in meta["models"].items():
+        assert entry["qat_accuracy"] > 0.9, name
+        wpath = os.path.join(ARTIFACTS, entry["weights"])
+        with open(wpath) as f:
+            w = json.load(f)
+        assert w["name"] == name
+        assert len(w["test_vectors"]) >= 8
+        # Weights within int8.
+        for layer in w["layers"]:
+            if "w_q" in layer:
+                assert max(abs(v) for v in layer["w_q"]) <= QMAX
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "meta.json")),
+    reason="artifacts not built",
+)
+def test_artifact_vectors_replay_in_python():
+    """The exported test vectors must replay through forward_int8 when the
+    quantized layers are reloaded from JSON (guards exporter drift)."""
+    from compile.quantize import QLayer
+
+    with open(os.path.join(ARTIFACTS, "weights", "jsc.json")) as f:
+        w = json.load(f)
+    qlayers = []
+    for l in w["layers"]:
+        qlayers.append(
+            QLayer(
+                l["name"],
+                l["kind"],
+                l["k"],
+                l["s"],
+                l["p"],
+                l["relu"],
+                np.asarray(l["w_q"]).reshape(l["w_shape"]) if "w_q" in l else None,
+                np.asarray(l["b_q"]) if "b_q" in l else None,
+                l.get("m"),
+                tuple(l["in_shape"]),
+                tuple(l["out_shape"]),
+            )
+        )
+    for tv in w["test_vectors"][:4]:
+        x_q = np.asarray(tv["x_q"], np.float32).reshape(w["input_shape"])
+        y = np.asarray(forward_int8(qlayers, jnp.asarray(x_q))).reshape(-1)
+        np.testing.assert_array_equal(y, np.asarray(tv["y"], np.float32))

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/paddings; assert_allclose against ref.
+This is the core correctness signal for the compute the rust runtime
+eventually executes via the AOT HLO.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv import conv2d_pallas, depthwise_conv2d_pallas
+from compile.kernels.matmul import dense_pallas
+from compile.kernels.pool import maxpool2d_pallas
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    f=st.integers(4, 10),
+    k=st.integers(1, 4),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 5),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_pallas_matches_ref(f, k, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, f, f, cin)
+    w = rand(rng, k, k, cin, cout)
+    b = rand(rng, cout)
+    for padding in range(0, (k - 1) // 2 + 1):
+        if f + 2 * padding < k:
+            continue
+        got = conv2d_pallas(x, w, b, stride=stride, padding=padding)
+        want = ref.conv2d(x, w, b, stride=stride, padding=padding)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    f=st.integers(4, 10),
+    k=st.integers(1, 3),
+    c=st.integers(1, 6),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_pallas_matches_ref(f, k, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, f, f, c)
+    w = rand(rng, k, k, c)
+    b = rand(rng, c)
+    padding = (k - 1) // 2
+    got = depthwise_conv2d_pallas(x, w, b, stride=stride, padding=padding)
+    want = ref.depthwise_conv2d(x, w, b, stride=stride, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    f=st.integers(4, 12),
+    k=st.integers(2, 3),
+    c=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_pallas_matches_ref(f, k, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, f, f, c)
+    for stride in (k,):  # pooling stride = k, the paper's configuration
+        got = maxpool2d_pallas(x, k, stride)
+        want = ref.maxpool2d(x, k, stride)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    feats=st.integers(1, 64),
+    units_blocks=st.tuples(st.integers(1, 8), st.integers(1, 4)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_pallas_matches_ref(feats, units_blocks, seed):
+    h, blocks = units_blocks
+    units = h * blocks
+    rng = np.random.default_rng(seed)
+    x = rand(rng, feats)
+    w = rand(rng, units, feats)
+    b = rand(rng, units)
+    got = dense_pallas(x, w, b, block=h)
+    want = ref.dense(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv_padding_matches_running_example_geometry():
+    # C1 of the running example: 24x24x1, k=5, p=2 -> 24x24x8.
+    rng = np.random.default_rng(0)
+    x = rand(rng, 24, 24, 1)
+    w = rand(rng, 5, 5, 1, 8)
+    b = rand(rng, 8)
+    y = conv2d_pallas(x, w, b, stride=1, padding=2)
+    assert y.shape == (24, 24, 8)
+    np.testing.assert_allclose(
+        y, ref.conv2d(x, w, b, stride=1, padding=2), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_dense_block_must_divide():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        dense_pallas(rand(rng, 4), rand(rng, 10, 4), rand(rng, 10), block=3)
+
+
+def test_quant_roundtrip_int_grid():
+    # Integers on the int8 grid survive quantize/dequantize exactly.
+    s = ref.quant_scale(127.0)  # scale 1.0
+    xs = jnp.asarray([-127.0, -1.0, 0.0, 1.0, 126.0])
+    np.testing.assert_array_equal(ref.dequantize(ref.quantize(xs, s), s), xs)
+
+
+def test_fake_quant_gradient_is_straight_through():
+    import jax
+
+    s = ref.quant_scale(1.0)
+    g = jax.grad(lambda x: ref.fake_quant(x, s).sum())(jnp.asarray([0.3, -0.7]))
+    np.testing.assert_allclose(g, [1.0, 1.0])

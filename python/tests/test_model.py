@@ -1,0 +1,128 @@
+"""L2 model tests: shapes, pallas/ref agreement on full models, int8
+pipeline semantics, calibration/export invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data as datasets
+from compile.model import (
+    calibrate_scales,
+    digits_cnn,
+    export_qlayers,
+    forward_float,
+    forward_int8,
+    init_params,
+    jsc_mlp,
+    layer_shapes,
+    running_example,
+)
+from compile.quantize import QMAX, half_away_round_np
+
+
+def test_layer_shapes_match_rust_zoo():
+    # running_example: C1 24x24x8, P1 12x12x8, C2 12x12x16, P2 4x4x16, F1 10.
+    outs = [o for (_, o) in layer_shapes(running_example())]
+    assert outs == [(24, 24, 8), (12, 12, 8), (12, 12, 16), (4, 4, 16), (1, 1, 10)]
+    outs = [o for (_, o) in layer_shapes(digits_cnn())]
+    assert outs == [(12, 12, 4), (6, 6, 4), (6, 6, 8), (3, 3, 8), (1, 1, 10)]
+    outs = [o for (_, o) in layer_shapes(jsc_mlp())]
+    assert outs == [(1, 1, 16), (1, 1, 16), (1, 1, 5)]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_pallas_and_ref_forward_agree(seed):
+    spec = digits_cnn()
+    params = init_params(spec, seed=seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(12, 12, 1)), jnp.float32)
+    a = forward_float(spec, params, x, use_pallas=False)
+    b = forward_float(spec, params, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def _quantized_pipeline(spec, n_calib=8, seed=0):
+    params = init_params(spec, seed=seed)
+    if spec.name == "jsc_mlp":
+        xs, _ = datasets.jsc(n_calib, seed=seed)
+        xs = xs.reshape(-1, 1, 1, 16)
+    else:
+        xs, _ = datasets.digits(n_calib, seed=seed)
+    scales = calibrate_scales(spec, params, xs)
+    return params, scales, export_qlayers(spec, params, scales), xs
+
+
+def test_int8_pipeline_outputs_are_integers():
+    spec = digits_cnn()
+    _, scales, qlayers, xs = _quantized_pipeline(spec)
+    x_q = np.clip(np.round(xs[0] / scales["input"]), -QMAX, QMAX).astype(np.float32)
+    y = np.asarray(forward_int8(qlayers, jnp.asarray(x_q)))
+    np.testing.assert_array_equal(y, np.round(y))
+
+
+def test_int8_pipeline_tracks_float_forward():
+    # Dequantized int8 logits must rank classes like the float model on
+    # most inputs (quantization fidelity, not exactness).
+    spec = digits_cnn()
+    params, scales, qlayers, _ = _quantized_pipeline(spec)
+    xs, _ = datasets.digits(32, seed=7)
+    agree = 0
+    for x in xs:
+        x = jnp.asarray(x, jnp.float32)
+        x_q = jnp.clip(jnp.round(x / scales["input"]), -QMAX, QMAX)
+        y_q = forward_int8(qlayers, x_q)
+        y_f = forward_float(spec, params, x)
+        agree += int(jnp.argmax(y_q) == jnp.argmax(y_f))
+    assert agree >= 28, f"only {agree}/32 argmax agreement"
+
+
+def test_activations_stay_in_int8_range():
+    spec = jsc_mlp()
+    _, scales, qlayers, xs = _quantized_pipeline(spec)
+    x_q = np.clip(np.round(xs[0] / scales["input"]), -QMAX, QMAX).astype(np.float32)
+    # Run layer by layer, checking requantized activations.
+    from compile.quantize import requant
+    from compile.kernels import ref
+
+    x = jnp.asarray(x_q.reshape(-1))
+    for ql in qlayers[:-1]:
+        acc = ref.dense(x, jnp.asarray(ql.w_q, jnp.float32), jnp.asarray(ql.b_q, jnp.float32))
+        if ql.relu:
+            acc = jnp.maximum(acc, 0.0)
+        x = requant(acc, ql.m)
+        assert float(jnp.max(jnp.abs(x))) <= QMAX
+
+
+def test_half_away_round_semantics():
+    xs = np.asarray([-2.5, -1.5, -0.5, 0.5, 1.5, 2.5], np.float32)
+    np.testing.assert_array_equal(
+        half_away_round_np(xs), [-3.0, -2.0, -1.0, 1.0, 2.0, 3.0]
+    )
+
+
+def test_export_qlayers_structure():
+    spec = digits_cnn()
+    _, _, qlayers, _ = _quantized_pipeline(spec)
+    kinds = [q.kind for q in qlayers]
+    assert kinds == ["conv", "maxpool", "conv", "maxpool", "dense"]
+    for q in qlayers:
+        if q.w_q is not None:
+            assert np.abs(q.w_q).max() <= QMAX
+            d = q.to_json_dict()
+            assert "m" in d and "w_q" in d and "b_q" in d
+
+
+def test_jsc_dataset_is_learnably_separable():
+    # Nearest-class-mean on the synthetic JSC features must beat chance by
+    # a wide margin (sanity of the dataset substitution).
+    xs, ys = datasets.jsc(2000, seed=1)
+    means = np.stack([xs[ys == c].mean(axis=0) for c in range(5)])
+    pred = np.argmin(((xs[:, None, :] - means[None]) ** 2).sum(-1), axis=1)
+    assert (pred == ys).mean() > 0.8
+
+
+def test_digits_dataset_labels_balanced():
+    _, ys = datasets.digits(1000, seed=0)
+    counts = np.bincount(ys, minlength=10)
+    assert counts.min() > 50

@@ -1,0 +1,53 @@
+"""Training-loop smoke tests (short budgets so pytest stays fast)."""
+
+import numpy as np
+
+from compile import data as datasets
+from compile.model import digits_cnn, jsc_mlp
+from compile.train import accuracy, train_model
+
+
+def test_jsc_short_training_beats_chance_by_far():
+    xs, ys = datasets.jsc(800, seed=3)
+    spec = jsc_mlp()
+    params, scales, acc = train_model(
+        spec, xs.reshape(-1, 1, 1, 16), ys, float_steps=120, qat_steps=40, seed=3
+    )
+    assert acc > 0.85, f"QAT accuracy {acc}"
+    # Float accuracy (no fake quant) should be at least as good - small tol.
+    facc = accuracy(spec, params, xs.reshape(-1, 1, 1, 16), ys, scales=None)
+    assert facc > 0.85
+    assert "input" in scales and "fc1/w" in scales
+
+
+def test_digits_short_training_learns_glyphs():
+    xs, ys = datasets.digits(300, seed=5)
+    spec = digits_cnn()
+    _, _, acc = train_model(spec, xs, ys, float_steps=80, qat_steps=30, batch=32, seed=5)
+    # Ten glyph classes with jitter/noise: well above the 10% chance level
+    # even with a tiny budget.
+    assert acc > 0.5, f"QAT accuracy {acc}"
+
+
+def test_qat_preserves_calibration_keys():
+    xs, ys = datasets.jsc(400, seed=9)
+    spec = jsc_mlp()
+    _, scales, _ = train_model(
+        spec, xs.reshape(-1, 1, 1, 16), ys, float_steps=50, qat_steps=20, seed=9
+    )
+    for l in spec.layers:
+        assert f"{l.name}/w" in scales
+        assert f"{l.name}/act" in scales
+        assert scales[f"{l.name}/w"] > 0
+
+
+def test_datasets_deterministic_by_seed():
+    a1, y1 = datasets.jsc(64, seed=42)
+    a2, y2 = datasets.jsc(64, seed=42)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(y1, y2)
+    b1, _ = datasets.digits(16, seed=7)
+    b2, _ = datasets.digits(16, seed=7)
+    np.testing.assert_array_equal(b1, b2)
+    b3, _ = datasets.digits(16, seed=8)
+    assert not np.array_equal(b1, b3)

@@ -1,0 +1,39 @@
+//! Benchmarks for the analysis stack: rate propagation, interleave
+//! planning, and the complexity model over every zoo model — the code
+//! paths behind Tables V-VIII. Regenerating Table VIII end to end is also
+//! timed, since the paper's code generator runs this per design iteration.
+
+use cnn_flow::complexity::{model_cost, parallel::fully_parallel_cost, CostOpts};
+use cnn_flow::flow::{analyze, plan_all};
+use cnn_flow::model::zoo;
+use cnn_flow::report::tables;
+use cnn_flow::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::new("analysis");
+
+    for model in [zoo::running_example(), zoo::mobilenet_v1(100), zoo::resnet18()] {
+        let name = model.name.clone();
+        b.bench(&format!("rate_analysis/{name}"), || {
+            black_box(analyze(&model, None).unwrap());
+        });
+        let analysis = analyze(&model, None).unwrap();
+        b.bench(&format!("plan/{name}"), || {
+            black_box(plan_all(&analysis));
+        });
+        let plans = plan_all(&analysis);
+        b.bench(&format!("complexity/{name}"), || {
+            black_box(model_cost(&plans, CostOpts::FULL));
+        });
+        b.bench(&format!("fully_parallel_ref/{name}"), || {
+            black_box(fully_parallel_cost(&analysis, CostOpts::FULL));
+        });
+    }
+
+    b.bench("table5_full", || {
+        black_box(tables::table5());
+    });
+    b.bench("table8_full", || {
+        black_box(tables::table8());
+    });
+}

@@ -1,0 +1,31 @@
+//! Benchmarks for the FPGA estimator sweeps behind Tables IX/X and
+//! Fig. 13 (the design-space-exploration hot path a user iterates on).
+
+use cnn_flow::flow::{analyze, plan_all};
+use cnn_flow::fpga::{estimate_model, EstimatorOpts};
+use cnn_flow::model::zoo;
+use cnn_flow::report::synthesis::{fig13, jsc_sweep, load_jsc_artifact, table9};
+use cnn_flow::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::new("estimator");
+
+    let analysis = analyze(&zoo::mobilenet_v1(100), None).unwrap();
+    let plans = plan_all(&analysis);
+    b.bench("estimate_mobilenet", || {
+        black_box(estimate_model(&plans, EstimatorOpts::default(), None));
+    });
+
+    b.bench("table9", || {
+        black_box(table9());
+    });
+
+    let qm = load_jsc_artifact();
+    b.bench("jsc_sweep_18_points", || {
+        black_box(jsc_sweep(qm.as_ref()));
+    });
+
+    b.bench("fig13_pareto", || {
+        black_box(fig13(qm.as_ref()));
+    });
+}

@@ -1,0 +1,58 @@
+//! Benchmarks for the whole-CNN pipeline simulator (the E12 hot path):
+//! continuous-flow vs fully-parallel plans on the trained digits CNN, and
+//! the JSC MLP across data rates (Table X timing source).
+
+use cnn_flow::flow::Ratio;
+use cnn_flow::quant::QModel;
+use cnn_flow::runtime::artifacts_dir;
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::new("pipeline");
+    let digits = QModel::load(&artifacts_dir().join("weights/digits.json"));
+    let jsc = QModel::load(&artifacts_dir().join("weights/jsc.json"));
+    let (digits, jsc) = match (digits, jsc) {
+        (Ok(d), Ok(j)) => (d, j),
+        _ => {
+            println!("artifacts not built; skipping pipeline benches");
+            return;
+        }
+    };
+
+    let frames: Vec<Vec<i64>> = digits
+        .test_vectors
+        .iter()
+        .cycle()
+        .take(16)
+        .map(|tv| tv.x_q.clone())
+        .collect();
+
+    let sim = PipelineSim::new(digits.clone(), None).unwrap();
+    b.bench_throughput("digits_continuous_flow/16_frames", 16, || {
+        black_box(sim.run(&frames).unwrap());
+    });
+
+    let reference = PipelineSim::new_reference(digits.clone()).unwrap();
+    b.bench_throughput("digits_fully_parallel_ref/16_frames", 16, || {
+        black_box(reference.run(&frames).unwrap());
+    });
+
+    let jsc_frames: Vec<Vec<i64>> = jsc
+        .test_vectors
+        .iter()
+        .cycle()
+        .take(64)
+        .map(|tv| tv.x_q.clone())
+        .collect();
+    for r0 in [Ratio::int(16), Ratio::int(1), Ratio::new(1, 16)] {
+        let sim = PipelineSim::new(jsc.clone(), Some(r0)).unwrap();
+        b.bench_throughput(
+            &format!("jsc_r0_{}/64_frames", r0.paper().replace('/', "_")),
+            64,
+            || {
+                black_box(sim.run(&jsc_frames).unwrap());
+            },
+        );
+    }
+}

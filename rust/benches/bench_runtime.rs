@@ -1,0 +1,75 @@
+//! Benchmarks for the serving path: PJRT golden-model execution latency
+//! and coordinator round-trip latency/throughput (batched vs unbatched).
+
+use std::sync::Arc;
+
+use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::quant::QModel;
+use cnn_flow::runtime::{artifacts_dir, ModelBundle, Runtime};
+use cnn_flow::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::new("runtime");
+    if !artifacts_dir().join("meta.json").exists() {
+        println!("artifacts not built; skipping runtime benches");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+
+    for name in ["digits", "jsc"] {
+        let bundle = ModelBundle::load(&rt, name).unwrap();
+        let tv = &bundle.qmodel.test_vectors[0];
+        let x: Vec<f32> = tv.x_q.iter().map(|&v| v as f32).collect();
+        b.bench(&format!("pjrt_execute/{name}"), || {
+            black_box(bundle.golden.run_f32(&x).unwrap());
+        });
+    }
+
+    // Coordinator round trip (single client, batch of 1).
+    let qm = QModel::load(&artifacts_dir().join("weights/digits.json")).unwrap();
+    let x = qm.test_vectors[0].x_q.clone();
+    let server = Server::start(
+        qm.clone(),
+        ServerConfig {
+            batch: 1,
+            verify_every: 0,
+            batch_window: std::time::Duration::from_micros(0),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    b.bench("coordinator_roundtrip/batch1", || {
+        black_box(server.infer(x.clone()).unwrap());
+    });
+    drop(server);
+
+    // Batched throughput: 8 concurrent clients, batch up to 16.
+    let server = Arc::new(
+        Server::start(
+            qm.clone(),
+            ServerConfig {
+                batch: 16,
+                verify_every: 0,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    b.bench_throughput("coordinator_8_clients/64_reqs", 64, || {
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = Arc::clone(&server);
+            let xi = x.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    let _ = s.infer(xi.clone());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}

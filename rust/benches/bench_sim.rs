@@ -1,0 +1,66 @@
+//! Benchmarks for the structural unit simulators (Tables I-IV machinery):
+//! KPU / PPU / FCU ticks, single- and multi-configuration, plus full
+//! trace generation + oracle verification.
+
+use cnn_flow::sim::fcu::{fcu_rom, Fcu};
+use cnn_flow::sim::trace::{trace_kpu, verify_kpu_trace, KpuTraceCfg};
+use cnn_flow::sim::{Kpu, Ppu};
+use cnn_flow::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::new("sim_units");
+
+    // KPU tick throughput: one frame of a 28x28 map through a 3x3 kernel.
+    for configs in [1usize, 4, 16] {
+        let weights: Vec<Vec<i64>> = (0..configs)
+            .map(|c| (0..9).map(|i| (c * 9 + i) as i64 % 7 - 3).collect())
+            .collect();
+        let mut kpu = Kpu::new(3, 28, 1, weights);
+        let frame: Vec<i64> = (0..28 * 28).map(|i| (i % 255) as i64 - 127).collect();
+        b.bench_throughput(
+            &format!("kpu_tick/k3_f28_C{configs}"),
+            frame.len() as u64,
+            || {
+                for (i, &x) in frame.iter().enumerate() {
+                    black_box(kpu.tick(x, Some(i % 28)));
+                }
+            },
+        );
+    }
+
+    // PPU tick throughput.
+    let mut ppu = Ppu::new(2, 28, 4);
+    let frame: Vec<i64> = (0..28 * 28).map(|i| (i * 31 % 255) as i64 - 127).collect();
+    b.bench_throughput("ppu_tick/k2_f28_C4", frame.len() as u64, || {
+        for &x in &frame {
+            black_box(ppu.tick(x));
+        }
+    });
+
+    // FCU: the running example's F1 (j=4, h=5, 256 inputs, C=320).
+    let w: Vec<Vec<i64>> = (0..10)
+        .map(|n| (0..256).map(|m| ((n * 256 + m) % 13) as i64 - 6).collect())
+        .collect();
+    let rom = fcu_rom(&w, 0, 4, 5, 256);
+    let mut fcu = Fcu::new(4, 5, 256, rom, vec![0; 5]);
+    let lanes: Vec<[i64; 4]> = (0..64).map(|i| [i, i + 1, i + 2, i + 3]).collect();
+    b.bench_throughput("fcu_tick/f1_j4_h5", 320, || {
+        for lane in &lanes {
+            for _ in 0..5 {
+                black_box(fcu.tick(lane));
+            }
+        }
+    });
+
+    // Full trace generation + verification (Table II).
+    b.bench("trace_table2_verified", || {
+        let t = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 1,
+            s: 1,
+            cycles: 37,
+        });
+        black_box(verify_kpu_trace(&t).unwrap());
+    });
+}

@@ -1,0 +1,419 @@
+//! Closed-form complexity/resource model (system S4) — Section V.
+//!
+//! Costs every planned layer in the paper's abstract resource units:
+//! adders, multipliers, registers, 2:1 multiplexers, MAX units, and the
+//! unit counts (KPU/PPU/FCU). Implements Eqs. 23-37 with the special
+//! cases the paper's tables imply:
+//!
+//! * channel accumulation is skipped when `d_{l-1} = 1` (Table V, C1);
+//! * depthwise convolutions keep the `d_l` accumulation output registers
+//!   but need no accumulation adders (Table VII row analysis);
+//! * Tables VI/VII exclude bias and input-interleaving costs ("costs for
+//!   FIFOs and data interleaving are left out because they depend on the
+//!   previous layer"), so both are controlled by [`CostOpts`].
+//!
+//! The fully-parallel reference of Table VIII ("Ref.") lives in
+//! [`parallel`]: it is this same model evaluated at the full data rate
+//! `r_{l-1} = d_{l-1}` for every layer.
+
+pub mod parallel;
+
+use crate::flow::{PlannedLayer, UnitPlan};
+use crate::model::LayerKind;
+use crate::util::ceil_div;
+
+/// Abstract resource counts, in the units of the paper's tables.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub adders: u64,
+    pub multipliers: u64,
+    pub registers: u64,
+    /// 2:1 multiplexer equivalents (an N:1 mux counts as N-1).
+    pub mux2: u64,
+    pub max_units: u64,
+    pub kpus: u64,
+    pub fcus: u64,
+    pub ppus: u64,
+    /// Weight-ROM words (weights held across configurations); used by the
+    /// FPGA estimator to place weight storage into BRAM/LUTRAM.
+    pub rom_words: u64,
+}
+
+impl Resources {
+    pub fn add(&mut self, other: &Resources) {
+        self.adders += other.adders;
+        self.multipliers += other.multipliers;
+        self.registers += other.registers;
+        self.mux2 += other.mux2;
+        self.max_units += other.max_units;
+        self.kpus += other.kpus;
+        self.fcus += other.fcus;
+        self.ppus += other.ppus;
+        self.rom_words += other.rom_words;
+    }
+
+    pub fn sum<'a>(items: impl IntoIterator<Item = &'a Resources>) -> Resources {
+        let mut total = Resources::default();
+        for r in items {
+            total.add(r);
+        }
+        total
+    }
+}
+
+/// What to include in the per-layer cost (the paper's tables differ).
+#[derive(Debug, Clone, Copy)]
+pub struct CostOpts {
+    /// Per-output-channel bias adders + their config muxes (Section V-D).
+    pub include_bias: bool,
+    /// Input data interleaving FIFO registers + muxes (Section V-A).
+    pub include_interleaving: bool,
+}
+
+impl CostOpts {
+    /// Full-model accounting (Tables V and VIII).
+    pub const FULL: CostOpts = CostOpts {
+        include_bias: true,
+        include_interleaving: true,
+    };
+    /// Layer-in-isolation accounting (Tables VI and VII).
+    pub const LAYER_ONLY: CostOpts = CostOpts {
+        include_bias: false,
+        include_interleaving: false,
+    };
+}
+
+/// Cost of one KPU (Section V-B). `k` kernel size, `f` feature-map width,
+/// `c` configurations.
+pub fn kpu_cost(k: usize, f: usize, c: usize) -> Resources {
+    let k = k as u64;
+    let f = f as u64;
+    let c = c as u64;
+    Resources {
+        adders: k * k - 1,                                  // Eq. 25
+        multipliers: k * k,                                 // Eq. 26
+        registers: (k * (k - 1) + (k - 1) * (f - k + 1)) * c, // Eq. 27
+        mux2: k * k * (c - 1),                              // Eq. 28
+        kpus: 1,
+        rom_words: k * k * c,
+        ..Default::default()
+    }
+}
+
+/// Cost of one PPU (Section V-E): same register structure as a KPU, MAX
+/// units instead of arithmetic, and the same per-configuration input
+/// multiplexing (Table V, P2: 9*(C-1) per PPU).
+pub fn ppu_cost(k: usize, f: usize, c: usize) -> Resources {
+    let k = k as u64;
+    let f = f as u64;
+    let c = c as u64;
+    Resources {
+        max_units: k * k - 1, // Eq. 33
+        registers: (k * (k - 1) + (k - 1) * (f - k + 1)) * c,
+        mux2: k * k * (c - 1),
+        ppus: 1,
+        ..Default::default()
+    }
+}
+
+/// Cost of one FCU (Section V-F) with `j` inputs, `h` neurons and `c`
+/// weight configurations.
+pub fn fcu_cost(j: usize, h: usize, c: usize) -> Resources {
+    let j = j as u64;
+    let h = h as u64;
+    let c = c as u64;
+    Resources {
+        multipliers: j,        // Eq. 34
+        adders: j,             // Eq. 36 (j-1 tree + 1 accumulator)
+        registers: h,          // Eq. 37 (accumulator FIFO depth h)
+        mux2: j * (c - 1),     // Eq. 35
+        fcus: 1,
+        rom_words: j * c,
+        ..Default::default()
+    }
+}
+
+/// Aggregation circuit upstream of an FCU (Fig. 7): widens `j_in` lanes to
+/// `a * j_in` by holding `a` consecutive input groups in registers.
+pub fn aggregator_cost(j_in: usize, a: usize) -> Resources {
+    if a <= 1 {
+        return Resources::default();
+    }
+    Resources {
+        registers: (j_in * a) as u64,
+        ..Default::default()
+    }
+}
+
+/// Cost of a whole planned layer.
+pub fn layer_cost(pl: &PlannedLayer, opts: CostOpts) -> Resources {
+    let layer = &pl.rated.shaped.layer;
+    let f_in = pl.rated.shaped.input.f;
+    let d_in = pl.rated.d_in();
+    let d_out = pl.rated.d_out();
+    let mut total = Resources::default();
+
+    match &pl.plan {
+        UnitPlan::Kpu {
+            kpus,
+            configs,
+            interleave,
+            accumulators,
+            accum_inputs,
+            ..
+        } => {
+            // Implicit zero padding (Section III-B) keeps the stream at f
+            // columns — the line-buffer length is f - k + 1 regardless of p.
+            let unit = kpu_cost(layer.k, f_in, *configs);
+            for _ in 0..*kpus {
+                total.add(&unit);
+            }
+            // Channel accumulation (Section V-C): Eq. 29 registers,
+            // Eq. 30 adders. Depthwise keeps only the output registers.
+            let depthwise = matches!(
+                layer.kind,
+                LayerKind::DepthwiseConv | LayerKind::AvgPool
+            );
+            if *accumulators > 0 {
+                total.adders += (*accumulators as u64) * (*accum_inputs as u64); // Eq. 30
+                total.registers += d_out as u64; // Eq. 29
+            } else if depthwise && d_in > 1 {
+                total.registers += d_out as u64; // dw output registers only
+            }
+            // Bias (Section V-D): Eq. 31 adders, Eq. 32 muxes.
+            if opts.include_bias && layer.bias {
+                let per_signal = ceil_div(d_out, *interleave) as u64;
+                total.adders += per_signal;
+                total.mux2 += d_out as u64 - per_signal;
+            }
+            // Input interleaving (Section V-A): Eq. 23 muxes, Eq. 24 regs.
+            if opts.include_interleaving && *configs > 1 {
+                let r_ceil = pl.rated.r_in.ceil();
+                let signals = ceil_div(d_in, *interleave) as u64;
+                total.mux2 += signals.saturating_sub(r_ceil); // Eq. 23
+                total.registers += d_in as u64; // Eq. 24 (FIFO depth)
+            }
+        }
+        UnitPlan::Ppu { ppus, configs, .. } => {
+            let unit = ppu_cost(layer.k, f_in, *configs);
+            for _ in 0..*ppus {
+                total.add(&unit);
+            }
+            if opts.include_interleaving && *configs > 1 {
+                let r_ceil = pl.rated.r_in.ceil();
+                total.mux2 += (d_in as u64).saturating_sub(r_ceil);
+                total.registers += d_in as u64;
+            }
+        }
+        UnitPlan::Fcu {
+            fcus,
+            j,
+            h,
+            configs,
+            aggregation,
+        } => {
+            let unit = fcu_cost(*j, *h, *configs);
+            for _ in 0..*fcus {
+                total.add(&unit);
+            }
+            total.add(&aggregator_cost(
+                ceil_div(*j, *aggregation),
+                *aggregation,
+            ));
+            if opts.include_bias && layer.bias {
+                // The FCU accumulator adds the bias as the initial partial
+                // sum from the weight ROM — no extra adders, only the ROM
+                // words (one bias word per neuron).
+                total.rom_words += d_out as u64;
+            }
+        }
+    }
+
+    // Residual merge (Section VI): one adder per physical output signal.
+    if pl.rated.shaped.merges {
+        let i = match &pl.plan {
+            UnitPlan::Kpu { interleave, .. } => *interleave,
+            _ => 1,
+        };
+        total.adders += ceil_div(d_out, i) as u64;
+    }
+
+    total
+}
+
+/// Per-layer cost rows plus the model total.
+#[derive(Debug, Clone)]
+pub struct ModelCost {
+    pub layers: Vec<(PlannedLayer, Resources)>,
+    pub total: Resources,
+}
+
+/// Cost a full model plan.
+pub fn model_cost(plans: &[PlannedLayer], opts: CostOpts) -> ModelCost {
+    let layers: Vec<(PlannedLayer, Resources)> = plans
+        .iter()
+        .map(|p| (p.clone(), layer_cost(p, opts)))
+        .collect();
+    let total = Resources::sum(layers.iter().map(|(_, r)| r));
+    ModelCost { layers, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{analyze, plan_all, Ratio};
+    use crate::model::zoo;
+
+    fn planned(model: &crate::model::Model) -> Vec<PlannedLayer> {
+        plan_all(&analyze(model, None).unwrap())
+    }
+
+    #[test]
+    fn kpu_cost_fig2() {
+        // Fig. 2: 3x3 KPU on f=5: 9 mult, 8 add, 6 regs + 2 line buffers
+        // of length 3 -> 6 + 6 = 12 registers total, no muxes.
+        let r = kpu_cost(3, 5, 1);
+        assert_eq!(r.multipliers, 9);
+        assert_eq!(r.adders, 8);
+        assert_eq!(r.registers, 3 * 2 + 2 * 3);
+        assert_eq!(r.mux2, 0);
+    }
+
+    #[test]
+    fn table_v_per_layer_rows() {
+        let plans = planned(&zoo::running_example());
+        let opts = CostOpts::FULL;
+        let rows: Vec<Resources> = plans.iter().map(|p| layer_cost(p, opts)).collect();
+
+        // C1: 200 add, 200 mul, 800 reg, 0 mux
+        assert_eq!(rows[0].adders, 200);
+        assert_eq!(rows[0].multipliers, 200);
+        assert_eq!(rows[0].registers, 800);
+        assert_eq!(rows[0].mux2, 0);
+        assert_eq!(rows[0].kpus, 8);
+
+        // P1: 200 reg, 24 MAX, 8 PPUs
+        assert_eq!(rows[1].registers, 200);
+        assert_eq!(rows[1].max_units, 24);
+        assert_eq!(rows[1].ppus, 8);
+
+        // C2: 816 add, 800 mul, ~6.7k reg, ~2.4k mux, 32 KPUs
+        assert_eq!(rows[2].adders, 816);
+        assert_eq!(rows[2].multipliers, 800);
+        assert_eq!(crate::util::paper_count(rows[2].registers), "6.7k");
+        assert_eq!(crate::util::paper_count(rows[2].mux2), "2.4k");
+        assert_eq!(rows[2].kpus, 32);
+
+        // P2: 416 reg, 108 mux, 32 MAX, 4 PPUs
+        assert_eq!(rows[3].registers, 416 + 16); // +16 = interleave FIFO (Eq. 24)
+        assert_eq!(rows[3].mux2, 108 + 12); // +12 = interleave mux (Eq. 23)
+        assert_eq!(rows[3].max_units, 32);
+        assert_eq!(rows[3].ppus, 4);
+
+        // F1: 8 add, 8 mul, 10 reg, ~2.6k mux, 2 FCUs
+        assert_eq!(rows[4].adders, 8);
+        assert_eq!(rows[4].multipliers, 8);
+        assert_eq!(rows[4].registers, 10);
+        assert_eq!(crate::util::paper_count(rows[4].mux2), "2.6k");
+        assert_eq!(rows[4].fcus, 2);
+    }
+
+    #[test]
+    fn table_v_layer_only_matches_paper_exactly() {
+        // With interleaving costs excluded (as Table V's P2/C2 cells do),
+        // the exact paper numbers come out.
+        let plans = planned(&zoo::running_example());
+        let rows: Vec<Resources> = plans
+            .iter()
+            .map(|p| layer_cost(p, CostOpts { include_bias: true, include_interleaving: false }))
+            .collect();
+        assert_eq!(rows[2].registers, 6672);
+        assert_eq!(rows[2].mux2, 2400);
+        assert_eq!(rows[3].registers, 416);
+        assert_eq!(rows[3].mux2, 108);
+        assert_eq!(rows[4].mux2, 2552);
+        let total = Resources::sum(rows.iter());
+        assert_eq!(total.adders, 1024);
+        assert_eq!(total.multipliers, 1008);
+        assert_eq!(total.registers, 800 + 200 + 6672 + 416 + 10); // 8098
+        assert_eq!(crate::util::paper_count(total.registers), "8.1k");
+        assert_eq!(total.mux2, 2400 + 108 + 2552); // 5060
+        assert_eq!(crate::util::paper_count(total.mux2), "5.1k");
+        assert_eq!(total.max_units, 56);
+        assert_eq!(total.kpus, 40);
+        assert_eq!(total.fcus, 2);
+        assert_eq!(total.ppus, 12);
+    }
+
+    #[test]
+    fn table_vi_conv_sweep() {
+        // f=28, k=7, p=3, d_in=8, d_out=16; Table VI rows.
+        let expect: [(u64, u64, u64, u64, u64, u64); 9] = [
+            // r_num, r_den, add, mul, reg, mux
+            (8, 1, 6272, 6272, 22288, 0),
+            (4, 1, 3136, 3136, 22288, 3136),
+            (2, 1, 1568, 1568, 22288, 4704),
+            (1, 1, 784, 784, 22288, 5488),
+            (1, 2, 392, 392, 22288, 5880),
+            (1, 4, 196, 196, 22288, 6076),
+            (1, 8, 98, 98, 22288, 6174),
+            (1, 16, 49, 49, 22288, 6223),
+            (1, 32, 49, 49, 22288, 6223), // stall row
+        ];
+        for (num, den, add, mul, reg, mux) in expect {
+            let pl = crate::report::synthetic_conv_layer(28, 7, 3, 8, 16, Ratio::new(num, den));
+            let r = layer_cost(&pl, CostOpts::LAYER_ONLY);
+            assert_eq!(
+                (r.adders, r.multipliers, r.registers, r.mux2),
+                (add, mul, reg, mux),
+                "r = {num}/{den}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_vii_depthwise_separable_sweep() {
+        let expect: [(u64, u64, u64, u64, u64, u64, u64, u64); 6] = [
+            // r_num, r_den, add, mul, reg, mux, kpus, fcus
+            (8, 1, 512, 520, 1416, 0, 8, 16),
+            (4, 1, 256, 260, 1416, 260, 4, 16),
+            (2, 1, 128, 130, 1416, 390, 2, 16),
+            (1, 1, 64, 65, 1416, 455, 1, 16),
+            (1, 2, 56, 57, 1416, 463, 1, 8),
+            (1, 4, 52, 53, 1416, 467, 1, 4),
+        ];
+        for (num, den, add, mul, reg, mux, kpus, fcus) in expect {
+            let r = crate::report::dw_separable_cost(28, 7, 3, 8, 16, Ratio::new(num, den));
+            assert_eq!(
+                (
+                    r.adders,
+                    r.multipliers,
+                    r.registers,
+                    r.mux2,
+                    r.kpus,
+                    r.fcus
+                ),
+                (add, mul, reg, mux, kpus, fcus),
+                "r = {num}/{den}"
+            );
+        }
+    }
+
+    #[test]
+    fn resources_sum() {
+        let a = Resources {
+            adders: 1,
+            multipliers: 2,
+            ..Default::default()
+        };
+        let b = Resources {
+            adders: 10,
+            registers: 5,
+            ..Default::default()
+        };
+        let s = Resources::sum([&a, &b]);
+        assert_eq!(s.adders, 11);
+        assert_eq!(s.multipliers, 2);
+        assert_eq!(s.registers, 5);
+    }
+}

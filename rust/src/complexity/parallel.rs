@@ -1,0 +1,134 @@
+//! Fully-parallel reference implementation cost (system S13) — the "Ref."
+//! rows of Table VIII.
+//!
+//! The reference is the classic unrolled mapping: one hardware unit per
+//! neuron/kernel, no interleaving, no reconfiguration. It is exactly this
+//! crate's cost model evaluated at the *full* data rate
+//! `r_{l-1} = d_{l-1}` for every layer independently — at full rate the
+//! planner chooses C = 1, I = 1, `#KPUs = d_{l-1} * d_l`, one FCU per
+//! neuron — so no separate formulas are needed and the two columns of
+//! Table VIII are guaranteed to be comparable.
+
+use super::{model_cost, CostOpts, ModelCost};
+use crate::flow::{plan_layer, PlannedLayer, RateAnalysis, Ratio};
+
+/// Re-plan a rate analysis with every layer forced to full input rate.
+pub fn fully_parallel_plan(analysis: &RateAnalysis) -> Vec<PlannedLayer> {
+    analysis
+        .layers
+        .iter()
+        .map(|rl| {
+            let mut forced = rl.clone();
+            forced.r_in = Ratio::int(rl.d_in() as u64);
+            forced.r_out = crate::flow::layer_rate(
+                rl.d_in(),
+                rl.d_out(),
+                rl.shaped.layer.s,
+                forced.r_in,
+            );
+            plan_layer(&forced)
+        })
+        .collect()
+}
+
+/// Cost of the fully-parallel reference for a model.
+pub fn fully_parallel_cost(analysis: &RateAnalysis, opts: CostOpts) -> ModelCost {
+    model_cost(&fully_parallel_plan(analysis), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complexity::CostOpts;
+    use crate::flow::{analyze, UnitPlan};
+    use crate::model::zoo;
+    use crate::util::paper_count;
+
+    #[test]
+    fn reference_uses_no_reconfiguration() {
+        let a = analyze(&zoo::running_example(), None).unwrap();
+        for pl in fully_parallel_plan(&a) {
+            assert_eq!(pl.plan.configs(), 1, "{}", pl.rated.shaped.layer.name);
+            assert!(!pl.plan.stalled());
+        }
+    }
+
+    #[test]
+    fn running_example_ref_matches_table_viii() {
+        // Table VIII "Running example / Ref.": Add 6.0k, Mul 6.0k,
+        // Reg 8.1k, MUX 0, 136 KPUs, 10 FCUs.
+        let a = analyze(&zoo::running_example(), None).unwrap();
+        let cost = fully_parallel_cost(&a, CostOpts::FULL);
+        assert_eq!(paper_count(cost.total.adders), "6.0k");
+        assert_eq!(paper_count(cost.total.multipliers), "6.0k");
+        assert_eq!(paper_count(cost.total.registers), "8.1k");
+        assert_eq!(cost.total.mux2, 0);
+        assert_eq!(cost.total.kpus, 136);
+        assert_eq!(cost.total.fcus, 10);
+    }
+
+    #[test]
+    fn conv_reference_is_one_kpu_per_kernel() {
+        let a = analyze(&zoo::running_example(), None).unwrap();
+        let plans = fully_parallel_plan(&a);
+        // C2: d_in=8, d_out=16 -> 128 KPUs.
+        match &plans[2].plan {
+            UnitPlan::Kpu { kpus, configs, .. } => {
+                assert_eq!(*kpus, 128);
+                assert_eq!(*configs, 1);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_reference_is_one_fcu_per_neuron() {
+        let a = analyze(&zoo::jsc_mlp(), None).unwrap();
+        let plans = fully_parallel_plan(&a);
+        match &plans[0].plan {
+            UnitPlan::Fcu { fcus, j, h, .. } => {
+                assert_eq!(*fcus, 16);
+                assert_eq!(*j, 16);
+                assert_eq!(*h, 1);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn mobilenet_ref_unit_counts_match_table_viii() {
+        // Table VIII MobileNet a=0.25 Ref.: 1.5k KPUs, 2.5k FCUs,
+        // 476k multipliers, 475k adders.
+        let a = analyze(&zoo::mobilenet_v1(25), None).unwrap();
+        let cost = fully_parallel_cost(&a, CostOpts::FULL);
+        assert_eq!(paper_count(cost.total.kpus), "1.5k");
+        assert_eq!(paper_count(cost.total.fcus), "2.5k");
+        assert_eq!(paper_count(cost.total.multipliers), "476k");
+        // Adders land within a percent of the paper's 475k (rounding of
+        // bias/accumulation conventions).
+        let add = cost.total.adders as f64;
+        assert!((add - 475_000.0).abs() / 475_000.0 < 0.02, "adders {add}");
+    }
+
+    #[test]
+    fn ours_never_exceeds_reference() {
+        // The continuous-flow plan must use <= arithmetic of the reference
+        // for every zoo model at full input rate.
+        for m in zoo::all_models() {
+            let a = analyze(&m, None).unwrap();
+            let ours = crate::complexity::model_cost(
+                &crate::flow::plan_all(&a),
+                CostOpts::FULL,
+            );
+            let r = fully_parallel_cost(&a, CostOpts::FULL);
+            assert!(
+                ours.total.multipliers <= r.total.multipliers,
+                "{}: ours {} > ref {}",
+                m.name,
+                ours.total.multipliers,
+                r.total.multipliers
+            );
+            assert!(ours.total.adders <= r.total.adders, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! Streaming inference coordinator (system S10) — the L3 serving layer.
+//!
+//! The paper's architecture is a continuous-flow pipeline: throughput is
+//! maximised when frames stream back-to-back so no unit ever starves.
+//! The coordinator therefore implements *data-rate-aware batching*: it
+//! drains the request queue into contiguous frame groups and feeds each
+//! group through the cycle-accurate pipeline as one uninterrupted stream,
+//! which is exactly the condition under which the hardware would hit its
+//! ~100% utilisation.
+//!
+//! Threads (std::thread — tokio is not vendored in this offline image):
+//!
+//! * callers block on [`Server::infer`] (bounded queue = backpressure);
+//! * a batcher/worker thread drains the queue, runs the pipeline
+//!   simulator, and answers;
+//! * an optional verifier thread owns the PJRT runtime and cross-checks a
+//!   sample of responses against the AOT-compiled JAX int8 golden model
+//!   (never on the request path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::quant::QModel;
+use crate::sim::pipeline::PipelineSim;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max frames per continuous-flow group.
+    pub batch: usize,
+    /// Bounded request queue depth (backpressure threshold).
+    pub queue_depth: usize,
+    /// Cross-check every n-th request against the PJRT golden model
+    /// (0 = never).
+    pub verify_every: usize,
+    /// Modelled hardware clock, used to convert simulated cycles into
+    /// projected hardware latency/throughput figures.
+    pub clock_hz: f64,
+    /// How long the batcher waits to fill a group before flushing.
+    pub batch_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            batch: 16,
+            queue_depth: 256,
+            verify_every: 8,
+            clock_hz: 600.0e6, // the paper's JSC designs close ~600 MHz
+            batch_window: Duration::from_millis(1),
+        }
+    }
+}
+
+/// One inference answer.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Final-layer accumulator-scale outputs.
+    pub logits: Vec<i64>,
+    pub argmax: usize,
+    /// Simulated hardware cycles from frame entry to last output.
+    pub sim_latency_cycles: u64,
+    /// Wall-clock service time in the coordinator.
+    pub service_time: Duration,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub verified: AtomicU64,
+    pub mismatches: AtomicU64,
+    pub sim_cycles_total: AtomicU64,
+    pub service_ns_total: AtomicU64,
+}
+
+/// A point-in-time view of the metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub verified: u64,
+    pub mismatches: u64,
+    pub mean_batch: f64,
+    pub mean_service: Duration,
+    /// Projected hardware throughput (frames/s at the configured clock).
+    pub projected_fps: f64,
+}
+
+struct Request {
+    x_q: Vec<i64>,
+    enqueued: Instant,
+    reply: SyncSender<Result<InferResponse, String>>,
+}
+
+enum Job {
+    Infer(Request),
+    Shutdown,
+}
+
+/// The running server.
+pub struct Server {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    verifier: Option<std::thread::JoinHandle<()>>,
+    config: ServerConfig,
+}
+
+impl Server {
+    /// Start a server over a quantized model. `verify_model` names an
+    /// artifact bundle to load in the verifier thread (None = no
+    /// verification, e.g. when artifacts are absent).
+    pub fn start(
+        qmodel: QModel,
+        config: ServerConfig,
+        verify_model: Option<String>,
+    ) -> Result<Server, String> {
+        let sim = PipelineSim::new(qmodel.clone(), None)?;
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Job>(config.queue_depth);
+
+        // Verifier thread (owns the PJRT runtime end-to-end).
+        let (vtx, vrx) = sync_channel::<(Vec<i64>, Vec<i64>)>(64);
+        let verifier = verify_model.map(|name| {
+            let vmetrics = Arc::clone(&metrics);
+            std::thread::spawn(move || verifier_loop(&name, vrx, &vmetrics))
+        });
+
+        let wmetrics = Arc::clone(&metrics);
+        let wconfig = config.clone();
+        let worker = std::thread::spawn(move || {
+            worker_loop(sim, wconfig, rx, vtx, &wmetrics);
+        });
+        Ok(Server {
+            tx,
+            metrics,
+            worker: Some(worker),
+            verifier,
+            config,
+        })
+    }
+
+    /// Blocking inference. Returns Err when the queue is saturated
+    /// (backpressure) or the server is shutting down.
+    pub fn infer(&self, x_q: Vec<i64>) -> Result<InferResponse, String> {
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request {
+            x_q,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        match self.tx.try_send(Job::Infer(req)) {
+            Ok(()) => {
+                self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err("backpressure: request queue full".into());
+            }
+            Err(TrySendError::Disconnected(_)) => return Err("server stopped".into()),
+        }
+        rrx.recv().map_err(|_| "server dropped request".to_string())?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let m = &self.metrics;
+        let completed = m.completed.load(Ordering::Relaxed);
+        let batches = m.batches.load(Ordering::Relaxed).max(1);
+        let service_ns = m.service_ns_total.load(Ordering::Relaxed);
+        let cycles = m.sim_cycles_total.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            accepted: m.accepted.load(Ordering::Relaxed),
+            rejected: m.rejected.load(Ordering::Relaxed),
+            completed,
+            batches,
+            verified: m.verified.load(Ordering::Relaxed),
+            mismatches: m.mismatches.load(Ordering::Relaxed),
+            mean_batch: completed as f64 / batches as f64,
+            mean_service: Duration::from_nanos(if completed == 0 {
+                0
+            } else {
+                service_ns / completed
+            }),
+            projected_fps: if cycles == 0 {
+                0.0
+            } else {
+                completed as f64 / (cycles as f64 / self.config.clock_hz)
+            },
+        }
+    }
+
+    /// Graceful shutdown: drain, stop threads.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        if let Some(v) = self.verifier.take() {
+            let _ = v.join();
+        }
+        self.metrics()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        // Verifier exits when its channel disconnects (worker dropped vtx).
+        if let Some(v) = self.verifier.take() {
+            let _ = v.join();
+        }
+    }
+}
+
+fn worker_loop(
+    sim: PipelineSim,
+    config: ServerConfig,
+    rx: Receiver<Job>,
+    vtx: SyncSender<(Vec<i64>, Vec<i64>)>,
+    metrics: &Metrics,
+) {
+    let mut serial: u64 = 0;
+    loop {
+        // Block for the first request, then drain up to `batch` within the
+        // batching window — contiguous frames = continuous flow.
+        let first = match rx.recv() {
+            Ok(Job::Infer(r)) => r,
+            Ok(Job::Shutdown) | Err(_) => return,
+        };
+        let mut group = vec![first];
+        let deadline = Instant::now() + config.batch_window;
+        while group.len() < config.batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(Job::Infer(r)) => group.push(r),
+                Ok(Job::Shutdown) => break,
+                Err(_) => break,
+            }
+        }
+        let frames: Vec<Vec<i64>> = group.iter().map(|r| r.x_q.clone()).collect();
+        let started = Instant::now();
+        match sim.run(&frames) {
+            Ok(result) => {
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                let per_frame_cycles = result.cycles_per_frame.max(1.0) as u64;
+                for (req, logits) in group.into_iter().zip(result.outputs.into_iter()) {
+                    serial += 1;
+                    let argmax = logits
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, v)| **v)
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let resp = InferResponse {
+                        logits: logits.clone(),
+                        argmax,
+                        sim_latency_cycles: result.first_frame_latency,
+                        service_time: req.enqueued.elapsed(),
+                    };
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .sim_cycles_total
+                        .fetch_add(per_frame_cycles, Ordering::Relaxed);
+                    metrics.service_ns_total.fetch_add(
+                        started.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    if config.verify_every > 0 && serial % config.verify_every as u64 == 0 {
+                        // Sampled golden check; drop silently if the
+                        // verifier is busy (never blocks serving).
+                        let _ = vtx.try_send((req.x_q.clone(), logits.clone()));
+                    }
+                    let _ = req.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                for req in group {
+                    let _ = req.reply.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn verifier_loop(
+    model_name: &str,
+    vrx: Receiver<(Vec<i64>, Vec<i64>)>,
+    metrics: &Metrics,
+) {
+    let rt = match crate::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("verifier disabled: {e}");
+            return;
+        }
+    };
+    let bundle = match crate::runtime::ModelBundle::load(&rt, model_name) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("verifier disabled: {e}");
+            return;
+        }
+    };
+    while let Ok((x_q, logits)) = vrx.recv() {
+        let xf: Vec<f32> = x_q.iter().map(|&v| v as f32).collect();
+        match bundle.golden.run_f32(&xf) {
+            Ok(y) => {
+                let y_i: Vec<i64> = y.iter().map(|&v| v as i64).collect();
+                metrics.verified.fetch_add(1, Ordering::Relaxed);
+                if y_i != logits {
+                    metrics.mismatches.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("GOLDEN MISMATCH: sim {logits:?} != pjrt {y_i:?}");
+                }
+            }
+            Err(e) => eprintln!("verifier execute error: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QKind, QLayer};
+    use crate::util::Rng;
+
+    fn tiny_qmodel() -> QModel {
+        // Single dense layer 4 -> 3, accumulator out.
+        QModel {
+            name: "t".into(),
+            input_shape: [1, 1, 4],
+            input_scale: 1.0,
+            layers: vec![QLayer {
+                name: "d".into(),
+                kind: QKind::Dense,
+                k: 0,
+                s: 1,
+                p: 0,
+                relu: false,
+                w_q: vec![1, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1, 1],
+                w_shape: vec![3, 4],
+                b_q: vec![0, 0, 0],
+                m: 0.0,
+                in_shape: [1, 1, 4],
+                out_shape: [1, 1, 3],
+            }],
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        }
+    }
+
+    #[test]
+    fn serve_and_answer() {
+        let server = Server::start(tiny_qmodel(), ServerConfig::default(), None).unwrap();
+        let resp = server.infer(vec![5, -3, 7, 2]).unwrap();
+        assert_eq!(resp.logits, vec![5, -3, 9]);
+        assert_eq!(resp.argmax, 2);
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.mismatches, 0);
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let server = Arc::new(
+            Server::start(tiny_qmodel(), ServerConfig::default(), None).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..20 {
+                    let x: Vec<i64> = (0..4).map(|_| rng.int8() as i64).collect();
+                    let expect = vec![x[0], x[1], x[2] + x[3]];
+                    match s.infer(x) {
+                        Ok(r) => assert_eq!(r.logits, expect),
+                        Err(e) => assert!(e.contains("backpressure"), "{e}"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics();
+        assert!(m.completed + m.rejected >= 160);
+        assert_eq!(m.completed, m.accepted);
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        let config = ServerConfig {
+            batch: 8,
+            batch_window: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let server = Arc::new(Server::start(tiny_qmodel(), config, None).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || s.infer(vec![1, 2, 3, 4]).unwrap()));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, 16);
+        assert!(
+            m.mean_batch > 1.0,
+            "expected batching, mean batch {}",
+            m.mean_batch
+        );
+    }
+
+    #[test]
+    fn backpressure_rejects_when_saturated() {
+        // Queue depth 1 and a slow drain: the burst must see rejections
+        // rather than unbounded queueing.
+        let config = ServerConfig {
+            batch: 1,
+            queue_depth: 1,
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let server = Arc::new(Server::start(tiny_qmodel(), config, None).unwrap());
+        let mut rejected = 0;
+        let mut handles = Vec::new();
+        for _ in 0..32 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || s.infer(vec![0, 0, 0, 0]).is_err()));
+        }
+        for h in handles {
+            if h.join().unwrap() {
+                rejected += 1;
+            }
+        }
+        let m = server.metrics();
+        assert_eq!(m.rejected as usize, rejected);
+        assert_eq!(m.accepted + m.rejected, 32);
+    }
+
+    #[test]
+    fn projected_fps_positive() {
+        let server = Server::start(tiny_qmodel(), ServerConfig::default(), None).unwrap();
+        for _ in 0..4 {
+            server.infer(vec![1, 1, 1, 1]).unwrap();
+        }
+        let m = server.shutdown();
+        assert!(m.projected_fps > 0.0);
+    }
+}

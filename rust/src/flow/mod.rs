@@ -1,0 +1,10 @@
+//! Continuous-flow analysis (systems S2 + S3): exact rational data rates,
+//! Eq.-8 propagation, and the interleaving planner of Section IV.
+
+pub mod plan;
+pub mod rate;
+pub mod ratio;
+
+pub use plan::{plan_all, plan_layer, PlannedLayer, UnitPlan};
+pub use rate::{analyze, layer_rate, RateAnalysis, RatedLayer};
+pub use ratio::Ratio;

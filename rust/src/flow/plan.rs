@@ -1,0 +1,444 @@
+//! Interleaving planner (system S3) — Sections IV-C/D/E of the paper.
+//!
+//! Given a layer's input data rate, the planner decides how many physical
+//! processing units to instantiate and how many configurations each cycles
+//! through:
+//!
+//! * convolutional layers: Eqs. 16-19 (KPUs, configurations C, interleave
+//!   factor I),
+//! * depthwise convolutions: Eqs. 20-21,
+//! * pooling: Eq. 22,
+//! * fully connected / pointwise: Eqs. 12-15 (FCU j inputs, h neurons,
+//!   aggregation factor a).
+//!
+//! A plan where the data rate is too low for interleaving to restore
+//! continuous flow is marked [`UnitPlan::stalled`] (the `*` rows of
+//! Tables VI/VII).
+
+use super::{RatedLayer, Ratio};
+use crate::model::LayerKind;
+use crate::util::{ceil_div, greatest_divisor_leq};
+
+/// How a layer is physically realised.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UnitPlan {
+    /// Standard or depthwise convolution mapped onto KPUs.
+    Kpu {
+        /// Number of physical KPUs (Eqs. 16/19/20).
+        kpus: usize,
+        /// Configurations per KPU (Eqs. 17/21).
+        configs: usize,
+        /// Interleave factor I = ⌈C / d_{l-1}⌉ (Eq. 18); number of output
+        /// channels interleaved onto one physical output signal.
+        interleave: usize,
+        /// Accumulator units for cross-channel summation (one per
+        /// physical output signal: d_l / I). Zero for the special cases
+        /// (d_{l-1} = 1, depthwise) where no accumulation is needed.
+        accumulators: usize,
+        /// Inputs accumulated per accumulator per cycle, j = ⌈#KPUs/d_l⌉.
+        accum_inputs: usize,
+        /// True if continuous flow cannot be restored (KPUs stall).
+        stalled: bool,
+    },
+    /// Pooling layers mapped onto PPUs.
+    Ppu {
+        ppus: usize,
+        configs: usize,
+        stalled: bool,
+    },
+    /// Fully connected / pointwise layers mapped onto FCUs.
+    Fcu {
+        fcus: usize,
+        /// Parallel inputs per FCU (j).
+        j: usize,
+        /// Neurons per FCU (h).
+        h: usize,
+        /// Weight configurations C = h * d_{l-1} / j (Eq. 12).
+        configs: usize,
+        /// Aggregation factor a (Eq. 15); 1 = no aggregation circuit.
+        aggregation: usize,
+    },
+}
+
+impl UnitPlan {
+    pub fn stalled(&self) -> bool {
+        match self {
+            UnitPlan::Kpu { stalled, .. } | UnitPlan::Ppu { stalled, .. } => *stalled,
+            UnitPlan::Fcu { .. } => false,
+        }
+    }
+
+    pub fn unit_count(&self) -> usize {
+        match self {
+            UnitPlan::Kpu { kpus, .. } => *kpus,
+            UnitPlan::Ppu { ppus, .. } => *ppus,
+            UnitPlan::Fcu { fcus, .. } => *fcus,
+        }
+    }
+
+    pub fn configs(&self) -> usize {
+        match self {
+            UnitPlan::Kpu { configs, .. }
+            | UnitPlan::Ppu { configs, .. }
+            | UnitPlan::Fcu { configs, .. } => *configs,
+        }
+    }
+}
+
+/// A planned layer: the rated layer plus its unit mapping.
+#[derive(Debug, Clone)]
+pub struct PlannedLayer {
+    pub rated: RatedLayer,
+    pub plan: UnitPlan,
+}
+
+/// Minimum number of accumulator pipeline stages an FCU tolerates; when
+/// h would fall below this, inputs are aggregated (Section III-E, Eq. 15).
+/// The paper's example aggregates to a*j = 4; we keep the same default.
+pub const FCU_MIN_DEPTH: usize = 1;
+
+/// Plan a single rated layer.
+pub fn plan_layer(rated: &RatedLayer) -> PlannedLayer {
+    let d_in = rated.d_in();
+    let d_out = rated.d_out();
+    let r_in = rated.r_in;
+    let layer = &rated.shaped.layer;
+    let plan = match layer.kind {
+        LayerKind::Conv => plan_conv(d_in, d_out, r_in),
+        LayerKind::DepthwiseConv | LayerKind::AvgPool => plan_depthwise(d_in, r_in),
+        LayerKind::MaxPool => plan_pool(d_in, r_in),
+        LayerKind::Pointwise | LayerKind::Dense => plan_fcu(d_in, d_out, r_in),
+    };
+    PlannedLayer {
+        rated: rated.clone(),
+        plan,
+    }
+}
+
+/// Standard convolution (Eqs. 16-19).
+fn plan_conv(d_in: usize, d_out: usize, r_in: Ratio) -> UnitPlan {
+    assert!(!r_in.is_zero(), "zero input rate");
+    // Eq. 17: C = min(⌈d_{l-1} / r⌉, d_{l-1} * d_l)
+    let c_uncapped = r_in.ceil_div_into(d_in as u64) as usize;
+    let cap = d_in * d_out;
+    let configs = c_uncapped.min(cap);
+    let stalled = c_uncapped > cap;
+    // Eq. 18: I = ⌈C / d_{l-1}⌉
+    let interleave = ceil_div(configs, d_in);
+    // Eq. 19: #KPUs = ⌈r⌉ * d_l / I   (Eq. 16 when I = 1)
+    let kpus = (r_in.ceil() as usize) * ceil_div(d_out, interleave);
+    // Channel accumulation (Section V-C): skipped when each output channel
+    // sums a single kernel (d_in == 1).
+    let (accumulators, accum_inputs) = if d_in == 1 {
+        (0, 0)
+    } else {
+        (ceil_div(d_out, interleave), ceil_div(kpus, d_out).max(1))
+    };
+    UnitPlan::Kpu {
+        kpus,
+        configs,
+        interleave,
+        accumulators,
+        accum_inputs,
+        stalled,
+    }
+}
+
+/// Depthwise convolution (Eqs. 20-21); also used for average pooling,
+/// which Section VI implements as a depthwise conv with constant weights.
+fn plan_depthwise(d_in: usize, r_in: Ratio) -> UnitPlan {
+    assert!(!r_in.is_zero(), "zero input rate");
+    let c_uncapped = r_in.ceil_div_into(d_in as u64) as usize;
+    let configs = c_uncapped.min(d_in);
+    let stalled = c_uncapped > d_in;
+    UnitPlan::Kpu {
+        kpus: r_in.ceil() as usize,
+        configs,
+        interleave: 1,
+        // Depthwise outputs are single-kernel sums: no accumulation adders,
+        // but the d_l output registers remain (see Table VII analysis).
+        accumulators: 0,
+        accum_inputs: 0,
+        stalled,
+    }
+}
+
+/// Pooling (Eq. 22). Configuration count mirrors the depthwise case: each
+/// PPU serves ⌈d/r⌉ interleaved channels (capped at d).
+fn plan_pool(d_in: usize, r_in: Ratio) -> UnitPlan {
+    assert!(!r_in.is_zero(), "zero input rate");
+    let c_uncapped = r_in.ceil_div_into(d_in as u64) as usize;
+    let configs = c_uncapped.min(d_in);
+    let stalled = c_uncapped > d_in;
+    UnitPlan::Ppu {
+        ppus: r_in.ceil() as usize,
+        configs,
+        stalled,
+    }
+}
+
+/// Fully connected / pointwise layers (Eqs. 12-15).
+///
+/// The input rate is interpreted as r = j_max / h_max (Eq. 13) in lowest
+/// terms; each FCU takes j = j_max inputs and computes
+/// h = max{divisor of d_l <= h_max} neurons (Eq. 14). If h_max comes out
+/// below `FCU_MIN_DEPTH`, inputs are aggregated by a (Eq. 15).
+fn plan_fcu(d_in: usize, d_out: usize, r_in: Ratio) -> UnitPlan {
+    assert!(!r_in.is_zero(), "zero input rate");
+    let mut j_max = r_in.num().max(1) as usize;
+    let mut h_max = r_in.den() as usize;
+    // j can never exceed the number of distinct input features.
+    if j_max > d_in {
+        // More input lanes than features: clamp (still one pixel/cycle).
+        h_max = (h_max * d_in).div_ceil(j_max).max(1);
+        j_max = d_in;
+    }
+    // Aggregation (Eq. 15): scale j and h together until the accumulator
+    // depth h_max supports the pipeline.
+    let mut aggregation = 1;
+    while h_max * aggregation < FCU_MIN_DEPTH && j_max * aggregation < d_in {
+        aggregation *= 2;
+    }
+    let j = (j_max * aggregation).min(d_in);
+    let h_cap = h_max * aggregation;
+    let h = greatest_divisor_leq(d_out, h_cap);
+    let fcus = ceil_div(d_out, h);
+    // Eq. 12: C = h * d_{l-1} / j
+    let configs = ceil_div(h * d_in, j);
+    UnitPlan::Fcu {
+        fcus,
+        j,
+        h,
+        configs,
+        aggregation,
+    }
+}
+
+/// Plan every layer of a rate analysis.
+pub fn plan_all(analysis: &super::RateAnalysis) -> Vec<PlannedLayer> {
+    analysis.layers.iter().map(plan_layer).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{analyze, rate::RateAnalysis};
+    use crate::model::zoo;
+
+    fn plan_of(model: &crate::model::Model) -> Vec<PlannedLayer> {
+        let a: RateAnalysis = analyze(model, None).unwrap();
+        plan_all(&a)
+    }
+
+    #[test]
+    fn running_example_units_match_table_v() {
+        let plans = plan_of(&zoo::running_example());
+        // C1: 8 KPUs, C=1
+        match &plans[0].plan {
+            UnitPlan::Kpu {
+                kpus,
+                configs,
+                accumulators,
+                ..
+            } => {
+                assert_eq!(*kpus, 8);
+                assert_eq!(*configs, 1);
+                assert_eq!(*accumulators, 0); // d_in = 1 special case
+            }
+            p => panic!("C1: {p:?}"),
+        }
+        // P1: 8 PPUs, C=1
+        match &plans[1].plan {
+            UnitPlan::Ppu { ppus, configs, .. } => {
+                assert_eq!((*ppus, *configs), (8, 1));
+            }
+            p => panic!("P1: {p:?}"),
+        }
+        // C2: 32 KPUs, C=4, I=1, 16 accumulators with j=2
+        match &plans[2].plan {
+            UnitPlan::Kpu {
+                kpus,
+                configs,
+                interleave,
+                accumulators,
+                accum_inputs,
+                ..
+            } => {
+                assert_eq!(*kpus, 32);
+                assert_eq!(*configs, 4);
+                assert_eq!(*interleave, 1);
+                assert_eq!(*accumulators, 16);
+                assert_eq!(*accum_inputs, 2);
+            }
+            p => panic!("C2: {p:?}"),
+        }
+        // P2: 4 PPUs, C=4
+        match &plans[3].plan {
+            UnitPlan::Ppu { ppus, configs, .. } => {
+                assert_eq!((*ppus, *configs), (4, 4));
+            }
+            p => panic!("P2: {p:?}"),
+        }
+        // F1: 2 FCUs, j=4, h=5, C=320
+        match &plans[4].plan {
+            UnitPlan::Fcu {
+                fcus, j, h, configs, ..
+            } => {
+                assert_eq!((*fcus, *j, *h, *configs), (2, 4, 5, 320));
+            }
+            p => panic!("F1: {p:?}"),
+        }
+    }
+
+    #[test]
+    fn table_vi_kpu_counts() {
+        // Conv f=28,k=7,p=3,d_in=8,d_out=16 at sweeping rates.
+        // Expected KPUs: 128,64,32,16,8,4,2,1,1(stall)
+        let expect: [(u64, u64, usize, usize, bool); 9] = [
+            (8, 1, 128, 1, false),
+            (4, 1, 64, 2, false),
+            (2, 1, 32, 4, false),
+            (1, 1, 16, 8, false),
+            (1, 2, 8, 16, false),
+            (1, 4, 4, 32, false),
+            (1, 8, 2, 64, false),
+            (1, 16, 1, 128, false),
+            (1, 32, 1, 128, true),
+        ];
+        for (num, den, kpus, configs, stalled) in expect {
+            let plan = plan_conv(8, 16, Ratio::new(num, den));
+            match plan {
+                UnitPlan::Kpu {
+                    kpus: k,
+                    configs: c,
+                    stalled: st,
+                    ..
+                } => {
+                    assert_eq!((k, c, st), (kpus, configs, stalled), "r={num}/{den}");
+                }
+                p => panic!("{p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn table_vii_depthwise_counts() {
+        // dw conv d=8: KPUs 8,4,2,1,1*,1* and C capped at d_in=8.
+        let expect: [(u64, u64, usize, usize, bool); 6] = [
+            (8, 1, 8, 1, false),
+            (4, 1, 4, 2, false),
+            (2, 1, 2, 4, false),
+            (1, 1, 1, 8, false),
+            (1, 2, 1, 8, true),
+            (1, 4, 1, 8, true),
+        ];
+        for (num, den, kpus, configs, stalled) in expect {
+            match plan_depthwise(8, Ratio::new(num, den)) {
+                UnitPlan::Kpu {
+                    kpus: k,
+                    configs: c,
+                    stalled: st,
+                    ..
+                } => assert_eq!((k, c, st), (kpus, configs, stalled), "r={num}/{den}"),
+                p => panic!("{p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn table_vii_fcu_counts() {
+        // Pointwise d_in=8 -> d_out=16 at rates 8,4,2,1,1/2,1/4:
+        // FCUs = 16,16,16,16,8,4 (Table VII last column).
+        let expect: [(u64, u64, usize, usize); 6] = [
+            (8, 1, 16, 8),
+            (4, 1, 16, 4),
+            (2, 1, 16, 2),
+            (1, 1, 16, 1),
+            (1, 2, 8, 1),
+            (1, 4, 4, 1),
+        ];
+        for (num, den, fcus, j) in expect {
+            match plan_fcu(8, 16, Ratio::new(num, den)) {
+                UnitPlan::Fcu {
+                    fcus: f, j: jj, h, ..
+                } => {
+                    assert_eq!((f, jj), (fcus, j), "r={num}/{den}");
+                    // h grows as rate falls: r=1/2 -> h=2, r=1/4 -> h=4
+                    assert_eq!(h, (den as usize).min(16));
+                }
+                p => panic!("{p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn low_rate_kpu_shares_filters() {
+        // Fig. 10: r=0.5, d_in=8, d_out=16 -> 8 KPUs, 16 configs, I=2.
+        match plan_conv(8, 16, Ratio::new(1, 2)) {
+            UnitPlan::Kpu {
+                kpus,
+                configs,
+                interleave,
+                ..
+            } => {
+                assert_eq!(kpus, 8);
+                assert_eq!(configs, 16);
+                assert_eq!(interleave, 2);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn jsc_r0_16_is_fully_parallel() {
+        let plans = plan_of(&zoo::jsc_mlp());
+        match &plans[0].plan {
+            UnitPlan::Fcu {
+                fcus, j, h, configs, ..
+            } => assert_eq!((*fcus, *j, *h, *configs), (16, 16, 1, 1)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn fcu_j_clamped_to_inputs() {
+        // Rate 32 into a 16-feature dense layer: j caps at 16.
+        match plan_fcu(16, 8, Ratio::int(32)) {
+            UnitPlan::Fcu { j, .. } => assert_eq!(j, 16),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn mobilenet_stalls_only_in_the_low_rate_regime() {
+        // Deep MobileNet depthwise layers reach r < 1 where interleaving
+        // cannot restore continuous flow (Table VII's `*` rows); stalls
+        // must occur there and only there.
+        for alpha in [25, 50, 75, 100] {
+            let plans = plan_of(&zoo::mobilenet_v1(alpha));
+            for p in &plans {
+                if p.plan.stalled() {
+                    assert!(
+                        p.rated.r_in < Ratio::ONE,
+                        "alpha={alpha} layer {} stalled at r_in={}",
+                        p.rated.shaped.layer.name,
+                        p.rated.r_in
+                    );
+                }
+            }
+            // At least one deep dw layer stalls for this input size
+            // (the a=0.25 model reaches r=1/2 at dw7).
+            if alpha == 25 {
+                assert!(plans.iter().any(|p| p.plan.stalled()));
+            }
+        }
+    }
+
+    #[test]
+    fn unit_plan_accessors() {
+        let p = plan_conv(8, 16, Ratio::int(2));
+        assert_eq!(p.unit_count(), 32);
+        assert_eq!(p.configs(), 4);
+        assert!(!p.stalled());
+    }
+}

@@ -1,0 +1,254 @@
+//! Data-rate propagation (system S2) — Section III/IV-B of the paper.
+//!
+//! The output data rate of a layer is (Eq. 8):
+//!
+//! ```text
+//! r_l = d_l * r_{l-1} / (d_{l-1} * s^2)
+//! ```
+//!
+//! with `r_0 = d_0` for a fully-utilised input (one pixel of `d_0`
+//! features per clock cycle); Table X additionally sweeps scaled-down
+//! input rates, so `r_0` is a parameter here.
+//!
+//! Residual merges take the minimum of the merging branch rates
+//! (Section VI: "the layer after the merged activations has an input data
+//! rate equal to the lowest data rate of the two merged layers").
+
+use super::Ratio;
+use crate::model::{LayerKind, Model, ShapeError, ShapedLayer};
+
+/// A layer annotated with its resolved shapes and input/output data rates.
+#[derive(Debug, Clone)]
+pub struct RatedLayer {
+    pub shaped: ShapedLayer,
+    /// Input data rate r_{l-1} in features (valid values) per clock cycle.
+    pub r_in: Ratio,
+    /// Output data rate r_l per Eq. 8, after any residual-merge clamping.
+    pub r_out: Ratio,
+}
+
+impl RatedLayer {
+    /// d_{l-1}: input channel count — for Dense layers the *flattened*
+    /// feature count, per Section II-D (k = f reformulation).
+    pub fn d_in(&self) -> usize {
+        match self.shaped.layer.kind {
+            LayerKind::Dense => self.shaped.input.features(),
+            _ => self.shaped.input.d,
+        }
+    }
+
+    /// d_l: output channel count.
+    pub fn d_out(&self) -> usize {
+        self.shaped.output.d
+    }
+}
+
+/// Rates for every layer of a model.
+#[derive(Debug, Clone)]
+pub struct RateAnalysis {
+    pub model_name: String,
+    /// Input rate r_0 used for the analysis.
+    pub r0: Ratio,
+    pub layers: Vec<RatedLayer>,
+}
+
+/// Apply Eq. 8 to a single layer.
+pub fn layer_rate(d_in: usize, d_out: usize, s: usize, r_in: Ratio) -> Ratio {
+    r_in.mul(Ratio::new(d_out as u64, (d_in * s * s) as u64))
+}
+
+/// Propagate data rates through the model starting from `r0`.
+///
+/// `r0 = None` means the full input rate `d_0` (one input pixel per cycle).
+///
+/// The walk recurses over the block structure so residual groups see the
+/// rate at their entry for the shortcut branch; `Model::shapes` is used in
+/// lockstep (it flattens in the identical order) to attach shapes.
+pub fn analyze(model: &Model, r0: Option<Ratio>) -> Result<RateAnalysis, ShapeError> {
+    let shapes = model.shapes()?;
+    let r0 = r0.unwrap_or_else(|| Ratio::int(model.input.d as u64));
+    let mut layers: Vec<RatedLayer> = Vec::with_capacity(shapes.len());
+    let mut iter = shapes.into_iter();
+    let mut cur = r0;
+    for block in &model.blocks {
+        cur = rate_block(block, cur, &mut iter, &mut layers);
+    }
+    debug_assert!(iter.next().is_none(), "shape/block walk out of sync");
+    Ok(RateAnalysis {
+        model_name: model.name.clone(),
+        r0,
+        layers,
+    })
+}
+
+fn rate_one(
+    sl: ShapedLayer,
+    r_in: Ratio,
+    out: &mut Vec<RatedLayer>,
+) -> Ratio {
+    let d_in = match sl.layer.kind {
+        LayerKind::Dense => sl.input.features(),
+        _ => sl.input.d,
+    };
+    let r_out = layer_rate(d_in, sl.output.d, sl.layer.s, r_in);
+    out.push(RatedLayer {
+        shaped: sl,
+        r_in,
+        r_out,
+    });
+    r_out
+}
+
+fn rate_block(
+    block: &crate::model::Block,
+    entry: Ratio,
+    iter: &mut std::vec::IntoIter<ShapedLayer>,
+    out: &mut Vec<RatedLayer>,
+) -> Ratio {
+    use crate::model::Block;
+    match block {
+        Block::Layer(_) => {
+            let sl = iter.next().expect("shape walk underflow");
+            rate_one(sl, entry, out)
+        }
+        Block::Residual {
+            body, projection, ..
+        } => {
+            let mut cur = entry;
+            for b in body {
+                cur = rate_block(b, cur, iter, out);
+            }
+            let shortcut = match projection {
+                Some(_) => {
+                    let sl = iter.next().expect("projection shape underflow");
+                    rate_one(sl, entry, out)
+                }
+                None => entry,
+            };
+            // Section VI: downstream rate = min of the merged branch rates.
+            cur.min(shortcut)
+        }
+    }
+}
+
+impl RateAnalysis {
+    /// Effective input rate for the layer *after* a given index, taking
+    /// residual merges into account: this is simply the stored r_in of the
+    /// next layer, exposed for reporting.
+    pub fn final_rate(&self) -> Ratio {
+        self.layers.last().map(|l| l.r_out).unwrap_or(self.r0)
+    }
+
+    /// Throughput in inferences (input frames) per cycle: the input frame
+    /// has f^2 pixels of d features arriving at r0 features/cycle.
+    pub fn frames_per_cycle(&self, input_pixels: usize, d0: usize) -> Ratio {
+        self.r0
+            .div_int((input_pixels * d0) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn rates_of(model: &Model) -> Vec<Ratio> {
+        analyze(model, None).unwrap().layers.iter().map(|l| l.r_out).collect()
+    }
+
+    #[test]
+    fn running_example_rates_match_table_v() {
+        // Table V r_l column: C1=8, P1=2, C2=4, P2=4/9, F1=10*(4/9)/256
+        let m = zoo::running_example();
+        let r = rates_of(&m);
+        assert_eq!(
+            r,
+            vec![
+                Ratio::int(8),
+                Ratio::int(2),
+                Ratio::int(4),
+                Ratio::new(4, 9),
+                Ratio::new(4 * 10, 9 * 256), // = 5/288 ≈ 0.017, paper rounds to 0.02
+            ]
+        );
+        assert!((r[4].to_f64() - 0.02).abs() < 0.005);
+    }
+
+    #[test]
+    fn eq8_single_layer() {
+        // 2x2 maxpool: rate drops to 1/4 per channel.
+        assert_eq!(
+            layer_rate(8, 8, 2, Ratio::int(8)),
+            Ratio::int(2)
+        );
+        // conv stride 1 with channel expansion 1->8 at r=1: r_out = 8.
+        assert_eq!(layer_rate(1, 8, 1, Ratio::ONE), Ratio::int(8));
+    }
+
+    #[test]
+    fn r0_scaling_is_linear() {
+        let m = zoo::running_example();
+        let full = analyze(&m, None).unwrap();
+        let half = analyze(&m, Some(Ratio::new(1, 2))).unwrap();
+        for (f, h) in full.layers.iter().zip(half.layers.iter()) {
+            // full r0 = 1 (d0=1), so half-rate analysis scales all rates by 1/2
+            assert_eq!(f.r_out.mul(Ratio::new(1, 2)), h.r_out);
+        }
+    }
+
+    #[test]
+    fn jsc_rates_at_r0_16() {
+        let m = zoo::jsc_mlp();
+        let a = analyze(&m, None).unwrap();
+        assert_eq!(a.r0, Ratio::int(16));
+        // dense 16->16 at r=16: r_out = 16*16/16 = 16; fc3: 5*16/16 = 5
+        assert_eq!(
+            a.layers.iter().map(|l| l.r_out).collect::<Vec<_>>(),
+            vec![Ratio::int(16), Ratio::int(16), Ratio::int(5)]
+        );
+    }
+
+    #[test]
+    fn mobilenet_rates_monotone_and_positive() {
+        let m = zoo::mobilenet_v1(25);
+        let a = analyze(&m, None).unwrap();
+        for l in &a.layers {
+            assert!(!l.r_out.is_zero(), "{} rate collapsed", l.shaped.layer.name);
+        }
+        // conv1 (3->8, s=2): r = 8*3/(3*4) = 2
+        assert_eq!(a.layers[0].r_out, Ratio::int(2));
+    }
+
+    #[test]
+    fn resnet_merge_takes_min_rate() {
+        let m = zoo::resnet18();
+        let a = analyze(&m, None).unwrap();
+        // Find the first projection layer (name res3_1p): its r_in must be
+        // the rate entering the residual group, not the body output rate.
+        let i = a
+            .layers
+            .iter()
+            .position(|l| l.shaped.layer.name == "res3_1p")
+            .unwrap();
+        let proj = &a.layers[i];
+        let body_first = a
+            .layers
+            .iter()
+            .find(|l| l.shaped.layer.name == "res3_1a")
+            .unwrap();
+        assert_eq!(proj.r_in, body_first.r_in);
+        // The next layer's input rate equals min(body r_out, proj r_out).
+        let next = &a.layers[i + 1];
+        let body_last = &a.layers[i - 1];
+        assert_eq!(next.r_in, body_last.r_out.min(proj.r_out));
+    }
+
+    #[test]
+    fn dense_uses_flattened_inputs() {
+        let m = zoo::running_example();
+        let a = analyze(&m, None).unwrap();
+        let f1 = a.layers.last().unwrap();
+        assert_eq!(f1.d_in(), 256);
+        assert_eq!(f1.d_out(), 10);
+    }
+}

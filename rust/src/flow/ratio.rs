@@ -1,0 +1,200 @@
+//! Exact rational arithmetic for data rates.
+//!
+//! Data rates in the paper are ratios of channel counts and squared
+//! strides (Eq. 8) — e.g. the running example's P2 output rate is 4/9.
+//! Floating point would mis-round quantities like C = h * d/j = 320 that
+//! must come out exactly, so rates are kept as reduced u64 fractions.
+
+/// A non-negative rational number `num/den`, always stored reduced with
+/// `den > 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Ratio {
+    num: u64,
+    den: u64,
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a.max(1)
+}
+
+impl Ratio {
+    pub const ZERO: Ratio = Ratio { num: 0, den: 1 };
+    pub const ONE: Ratio = Ratio { num: 1, den: 1 };
+
+    pub fn new(num: u64, den: u64) -> Self {
+        assert!(den != 0, "zero denominator");
+        let g = gcd(num, den);
+        Self {
+            num: num / g,
+            den: den / g,
+        }
+    }
+
+    pub fn int(n: u64) -> Self {
+        Self { num: n, den: 1 }
+    }
+
+    pub fn num(&self) -> u64 {
+        self.num
+    }
+
+    pub fn den(&self) -> u64 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// ⌈r⌉ as used by Eqs. 16, 19, 20, 22.
+    pub fn ceil(&self) -> u64 {
+        self.num.div_ceil(self.den)
+    }
+
+    pub fn floor(&self) -> u64 {
+        self.num / self.den
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn recip(&self) -> Ratio {
+        assert!(self.num != 0, "reciprocal of zero rate");
+        Ratio {
+            num: self.den,
+            den: self.num,
+        }
+    }
+
+    pub fn mul(&self, other: Ratio) -> Ratio {
+        // Cross-reduce first so u64 never overflows for realistic models.
+        let g1 = gcd(self.num, other.den);
+        let g2 = gcd(other.num, self.den);
+        Ratio::new(
+            (self.num / g1) * (other.num / g2),
+            (self.den / g2) * (other.den / g1),
+        )
+    }
+
+    pub fn div(&self, other: Ratio) -> Ratio {
+        self.mul(other.recip())
+    }
+
+    pub fn mul_int(&self, n: u64) -> Ratio {
+        self.mul(Ratio::int(n))
+    }
+
+    pub fn div_int(&self, n: u64) -> Ratio {
+        assert!(n != 0);
+        self.mul(Ratio::new(1, n))
+    }
+
+    /// ⌈a / r⌉ for integer a — e.g. Eq. 17's ⌈d_{l-1} / r_{l-1}⌉.
+    pub fn ceil_div_into(&self, a: u64) -> u64 {
+        assert!(self.num != 0, "division by zero rate");
+        // a / (num/den) = a*den/num
+        (a as u128 * self.den as u128).div_ceil(self.num as u128) as u64
+    }
+
+    /// Render like the paper's tables: integers plain, else "n/d".
+    pub fn paper(&self) -> String {
+        if self.den == 1 {
+            format!("{}", self.num)
+        } else {
+            format!("{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl PartialOrd for Ratio {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ratio {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let lhs = self.num as u128 * other.den as u128;
+        let rhs = other.num as u128 * self.den as u128;
+        lhs.cmp(&rhs)
+    }
+}
+
+impl std::fmt::Display for Ratio {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.paper())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction() {
+        let r = Ratio::new(4, 8);
+        assert_eq!((r.num(), r.den()), (1, 2));
+        assert_eq!(Ratio::new(0, 5), Ratio::ZERO);
+    }
+
+    #[test]
+    fn running_example_p2_rate() {
+        // P2: r = d_l * r_in / (d_in * s^2) = 16*4/(16*9) = 4/9
+        let r = Ratio::int(4).mul(Ratio::new(16, 16 * 9));
+        assert_eq!(r, Ratio::new(4, 9));
+        assert_eq!(r.paper(), "4/9");
+    }
+
+    #[test]
+    fn ceil_floor() {
+        assert_eq!(Ratio::new(4, 9).ceil(), 1);
+        assert_eq!(Ratio::new(4, 9).floor(), 0);
+        assert_eq!(Ratio::new(9, 4).ceil(), 3);
+        assert_eq!(Ratio::int(2).ceil(), 2);
+    }
+
+    #[test]
+    fn ceil_div_into_matches_eq17() {
+        // ⌈d/r⌉ with d=8, r=0.5 -> 16
+        assert_eq!(Ratio::new(1, 2).ceil_div_into(8), 16);
+        // d=8, r=3 -> ⌈8/3⌉ = 3
+        assert_eq!(Ratio::int(3).ceil_div_into(8), 3);
+        // F1: C = h*d/j: via rate 4/9 ⌈256/(4/9)⌉ = 576
+        assert_eq!(Ratio::new(4, 9).ceil_div_into(256), 576);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Ratio::new(1, 3) < Ratio::new(1, 2));
+        assert!(Ratio::int(2) > Ratio::new(9, 5));
+        assert_eq!(Ratio::new(2, 4), Ratio::new(1, 2));
+    }
+
+    #[test]
+    fn mul_div_roundtrip() {
+        let a = Ratio::new(7, 9);
+        let b = Ratio::new(3, 14);
+        assert_eq!(a.mul(b).div(b), a);
+    }
+
+    #[test]
+    fn cross_reduction_avoids_overflow() {
+        let big = Ratio::new(u64::MAX / 2, 3);
+        let r = big.mul(Ratio::new(3, u64::MAX / 2));
+        assert_eq!(r, Ratio::ONE);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_denominator_panics() {
+        let _ = Ratio::new(1, 0);
+    }
+}

@@ -1,0 +1,78 @@
+//! FPGA device database: the parts used in the paper's evaluation.
+
+/// Capacity of one FPGA part.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub bram36: u64,
+    /// Practical clock-tree ceiling (the paper caps analysis at 800 MHz).
+    pub fmax_cap_mhz: f64,
+}
+
+/// Xilinx Virtex UltraScale+ XCVU37P (the paper's MobileNet target and
+/// the [18] comparison part).
+pub const XCVU37P: Device = Device {
+    name: "XCVU37P",
+    luts: 1_303_680,
+    ffs: 2_607_360,
+    dsps: 9_024,
+    bram36: 2_016,
+    fmax_cap_mhz: 800.0,
+};
+
+/// Xilinx Virtex UltraScale+ XCVU9P (the JSC / Table X part).
+pub const XCVU9P: Device = Device {
+    name: "xcvu9p-flgb2104-2-i",
+    luts: 1_182_240,
+    ffs: 2_364_480,
+    dsps: 6_840,
+    bram36: 2_160,
+    fmax_cap_mhz: 800.0,
+};
+
+/// AMD Alveo U280 (the FINN comparison row of Table IX).
+pub const ALVEO_U280: Device = Device {
+    name: "Alveo U280",
+    luts: 1_304_000,
+    ffs: 2_607_000,
+    dsps: 9_024,
+    bram36: 2_016,
+    fmax_cap_mhz: 800.0,
+};
+
+impl Device {
+    /// Does an estimate fit on this part?
+    pub fn fits(&self, lut: u64, ff: u64, dsp: u64, bram36: f64) -> bool {
+        lut <= self.luts && ff <= self.ffs && dsp <= self.dsps && bram36 <= self.bram36 as f64
+    }
+
+    /// LUT utilisation fraction.
+    pub fn lut_util(&self, lut: u64) -> f64 {
+        lut as f64 / self.luts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn devices_have_positive_capacity() {
+        for d in [XCVU37P, XCVU9P, ALVEO_U280] {
+            assert!(d.luts > 1_000_000);
+            assert!(d.dsps > 1_000);
+            assert!(d.fmax_cap_mhz > 0.0);
+        }
+    }
+
+    #[test]
+    fn fits_checks_all_dimensions() {
+        let d = XCVU9P;
+        assert!(d.fits(1000, 1000, 10, 1.5));
+        assert!(!d.fits(d.luts + 1, 0, 0, 0.0));
+        assert!(!d.fits(0, 0, d.dsps + 1, 0.0));
+    }
+}

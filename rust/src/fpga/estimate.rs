@@ -1,0 +1,360 @@
+//! Resource -> LUT/FF/DSP/BRAM/Fmax/power mapping.
+//!
+//! Per-primitive costs (8-bit datapath on UltraScale+), calibrated once
+//! against the paper's published JSC and MobileNet rows and then held
+//! fixed — see EXPERIMENTS.md §Calibration for the comparison:
+//!
+//! * adder (8b + carry headroom): 8 LUTs;
+//! * interleave/data mux: folded into unit control (weight muxes are ROM);
+//! * per-unit control (counters, pad selects): 15 LUTs;
+//! * DSP48E2: two 8x8 multiplications per DSP;
+//! * no-DSP multiplier (FloPoCo-style constant/KCM mult): 16 LUTs;
+//! * FF: 9 per architectural register + mult pipeline (32/DSP-mult,
+//!   40/LUT-mult);
+//! * weight ROMs: 8 bits/word into BRAM18 pools per layer once C > 1.
+
+use crate::complexity::{layer_cost, CostOpts, Resources};
+use crate::flow::{PlannedLayer, UnitPlan};
+use crate::quant::QModel;
+
+/// Estimator options.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimatorOpts {
+    /// Map multiplications onto DSP blocks (false = LUT multipliers).
+    pub use_dsp: bool,
+    /// Fraction of multiplier lanes that are multiplierless ({0, ±2^n}
+    /// weights). `None` = measure from a QModel, or use the QAT-typical
+    /// default 0.30 when no weights are available.
+    pub trivial_frac: Option<f64>,
+}
+
+impl Default for EstimatorOpts {
+    fn default() -> Self {
+        Self {
+            use_dsp: true,
+            trivial_frac: None,
+        }
+    }
+}
+
+/// The estimate for one design point.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaEstimate {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    /// BRAM36 equivalents (halves = BRAM18), like the paper's tables.
+    pub bram36: f64,
+    pub fmax_mhz: f64,
+    /// Dynamic + static power at fmax, watts.
+    pub power_w: f64,
+}
+
+const LUT_PER_ADDER: u64 = 8;
+const LUT_PER_UNIT_CTRL: u64 = 15;
+const LUT_PER_LUTMULT: u64 = 16;
+const FF_PER_REG: u64 = 9;
+const FF_PER_DSPMULT: u64 = 32;
+const FF_PER_LUTMULT: u64 = 40;
+const MULTS_PER_DSP: u64 = 2;
+const BRAM18_BITS: u64 = 18 * 1024;
+
+/// Is an int8 weight trivially implementable (0 or ±2^n)?
+pub fn weight_is_trivial(w: i64) -> bool {
+    let a = w.unsigned_abs();
+    a == 0 || a.is_power_of_two()
+}
+
+/// Measured fraction of *lanes* that are multiplierless, given the real
+/// quantized weights: a lane cycling through C configurations is trivial
+/// only if all its C weights are trivial.
+pub fn measured_trivial_frac(qm: &QModel, plans: &[PlannedLayer]) -> f64 {
+    let mut lanes = 0f64;
+    let mut trivial = 0f64;
+    for (ql, pl) in qm.layers.iter().zip(plans.iter()) {
+        if ql.w_q.is_empty() {
+            continue;
+        }
+        let c = pl.plan.configs().max(1);
+        // Partition the weight list into lanes of C consecutive configs.
+        // (The exact ROM order doesn't change the count materially; what
+        // matters is the all-C-trivial requirement.)
+        for chunk in ql.w_q.chunks(c) {
+            lanes += 1.0;
+            if chunk.iter().all(|&w| weight_is_trivial(w)) {
+                trivial += 1.0;
+            }
+        }
+    }
+    if lanes == 0.0 {
+        0.0
+    } else {
+        trivial / lanes
+    }
+}
+
+/// Estimate one design from its total abstract resources.
+///
+/// `max_configs` is the largest per-unit configuration count in the design
+/// (drives the ROM->BRAM decision); `layers_with_rom` pools ROM bits.
+pub fn estimate_resources(
+    total: &Resources,
+    per_layer: &[(Resources, usize)], // (cost, configs) per layer
+    opts: EstimatorOpts,
+) -> FpgaEstimate {
+    let trivial = opts.trivial_frac.unwrap_or(0.30).clamp(0.0, 1.0);
+    let mults_effective =
+        ((total.multipliers as f64) * (1.0 - trivial)).ceil() as u64;
+
+    let units = total.kpus + total.fcus + total.ppus;
+    let mut lut = total.adders * LUT_PER_ADDER
+        + units * LUT_PER_UNIT_CTRL
+        + total.max_units * LUT_PER_ADDER; // a MAX unit ~ an 8b comparator
+    let dsp;
+    let ff_mult;
+    if opts.use_dsp {
+        dsp = mults_effective.div_ceil(MULTS_PER_DSP);
+        ff_mult = total.multipliers * FF_PER_DSPMULT;
+    } else {
+        dsp = 0;
+        lut += mults_effective * LUT_PER_LUTMULT;
+        ff_mult = total.multipliers * FF_PER_LUTMULT;
+    }
+    // Registers: single-config chains are plain FFs; the depth-C FIFOs of
+    // interleaved units map onto SRL shift registers (1 LUT per 32 bits
+    // of depth, 8-bit words -> words/4 LUTs).
+    let mut ff_regs = 0u64;
+    for (cost, configs) in per_layer {
+        if *configs > 1 {
+            lut += cost.registers.div_ceil(4);
+            // One output FF per SRL chain word-slice (pipelining).
+            ff_regs += (cost.registers / (*configs as u64)).max(1) * FF_PER_REG;
+        } else {
+            ff_regs += cost.registers * FF_PER_REG;
+        }
+    }
+    let ff = ff_regs + ff_mult + units * 8;
+
+    // Weight ROMs: per layer, pooled into BRAM18s when the layer
+    // reconfigures (C > 1); single-config weights are constants in logic.
+    let mut bram18 = 0u64;
+    for (cost, configs) in per_layer {
+        if *configs > 1 && cost.rom_words > 0 {
+            bram18 += (cost.rom_words * 8).div_ceil(BRAM18_BITS).max(1);
+        }
+    }
+    let bram36 = bram18 as f64 / 2.0;
+
+    // Fmax model (calibrated, documented in EXPERIMENTS.md): fully
+    // combinational single-config designs close near 690 MHz; BRAM-backed
+    // reconfigurable designs near 600 MHz; very large designs derate with
+    // size (routing pressure).
+    let base = if bram18 == 0 { 690.0 } else { 600.0 };
+    let size_derate =
+        1.0 / (1.0 + lut as f64 / 500_000.0 + dsp as f64 / 20_000.0 + ff as f64 / 2_000_000.0);
+    let fmax_mhz = base * size_derate;
+
+    // Power model: static + activity-weighted dynamic at fmax.
+    let dyn_w = fmax_mhz
+        * (lut as f64 * 0.08 + ff as f64 * 0.02 + dsp as f64 * 4.0 + bram36 * 3.0)
+        / 1.0e6;
+    let power_w = 2.5 + dyn_w;
+
+    FpgaEstimate {
+        lut,
+        ff,
+        dsp,
+        bram36,
+        fmax_mhz,
+        power_w,
+    }
+}
+
+/// Estimate a whole planned model. When `qmodel` is given, the trivial
+/// multiplier fraction is measured from the real quantized weights.
+pub fn estimate_model(
+    plans: &[PlannedLayer],
+    opts: EstimatorOpts,
+    qmodel: Option<&QModel>,
+) -> FpgaEstimate {
+    let per_layer: Vec<(Resources, usize)> = plans
+        .iter()
+        .map(|p| (layer_cost(p, CostOpts::FULL), p.plan.configs()))
+        .collect();
+    let total = Resources::sum(per_layer.iter().map(|(r, _)| r));
+    let mut opts = opts;
+    if opts.trivial_frac.is_none() {
+        if let Some(qm) = qmodel {
+            opts.trivial_frac = Some(measured_trivial_frac(qm, plans));
+        }
+    }
+    estimate_resources(&total, &per_layer, opts)
+}
+
+/// Sum of FCU/KPU/PPU counts (for reports).
+pub fn unit_count(plans: &[PlannedLayer]) -> u64 {
+    plans.iter().map(|p| p.plan.unit_count() as u64).sum()
+}
+
+/// Largest configuration count in the plan.
+pub fn max_configs(plans: &[PlannedLayer]) -> usize {
+    plans.iter().map(|p| p.plan.configs()).max().unwrap_or(1)
+}
+
+/// Helper for reports: is any layer stalled?
+pub fn any_stalled(plans: &[PlannedLayer]) -> bool {
+    plans.iter().any(|p| p.plan.stalled())
+}
+
+/// Reconstruct a rough unit plan summary string ("37 FCUs, C<=16").
+pub fn plan_summary(plans: &[PlannedLayer]) -> String {
+    let mut kpus = 0usize;
+    let mut fcus = 0usize;
+    let mut ppus = 0usize;
+    for p in plans {
+        match p.plan {
+            UnitPlan::Kpu { kpus: k, .. } => kpus += k,
+            UnitPlan::Fcu { fcus: f, .. } => fcus += f,
+            UnitPlan::Ppu { ppus: p2, .. } => ppus += p2,
+        }
+    }
+    format!(
+        "{kpus} KPUs, {fcus} FCUs, {ppus} PPUs, C_max={}",
+        max_configs(plans)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{analyze, plan_all, Ratio};
+    use crate::model::zoo;
+
+    fn jsc_plans(r0: Ratio) -> Vec<PlannedLayer> {
+        plan_all(&analyze(&zoo::jsc_mlp(), Some(r0)).unwrap())
+    }
+
+    #[test]
+    fn trivial_weights() {
+        for w in [0i64, 1, -1, 2, -4, 64, -128] {
+            assert!(weight_is_trivial(w), "{w}");
+        }
+        for w in [3i64, -5, 7, 100, -127] {
+            assert!(!weight_is_trivial(w), "{w}");
+        }
+    }
+
+    #[test]
+    fn jsc_full_rate_lut_in_paper_band() {
+        // Paper Table X, Proposed (DSP) r0=16: 5,308 LUT, 184 DSP.
+        let plans = jsc_plans(Ratio::int(16));
+        let est = estimate_model(
+            &plans,
+            EstimatorOpts {
+                use_dsp: true,
+                trivial_frac: Some(0.30),
+            },
+            None,
+        );
+        assert!(
+            (4_000..8_000).contains(&est.lut),
+            "LUT {} outside paper band",
+            est.lut
+        );
+        assert!(
+            (150..320).contains(&est.dsp),
+            "DSP {} outside paper band",
+            est.dsp
+        );
+        assert!(est.bram36 == 0.0, "full rate uses no BRAM");
+        assert!(est.fmax_mhz > 600.0);
+    }
+
+    #[test]
+    fn jsc_resources_shrink_with_rate() {
+        let mut prev_lut = u64::MAX;
+        let mut prev_dsp = u64::MAX;
+        for r0 in [
+            Ratio::int(16),
+            Ratio::int(8),
+            Ratio::int(4),
+            Ratio::int(2),
+            Ratio::int(1),
+            Ratio::new(1, 2),
+            Ratio::new(1, 4),
+        ] {
+            let est = estimate_model(
+                &jsc_plans(r0),
+                EstimatorOpts {
+                    use_dsp: true,
+                    trivial_frac: Some(0.30),
+                },
+                None,
+            );
+            assert!(est.lut <= prev_lut, "LUT not shrinking at r0={r0}");
+            assert!(est.dsp <= prev_dsp, "DSP not shrinking at r0={r0}");
+            prev_lut = est.lut;
+            prev_dsp = est.dsp;
+        }
+    }
+
+    #[test]
+    fn no_dsp_variant_trades_dsp_for_lut() {
+        let plans = jsc_plans(Ratio::int(16));
+        let dsp = estimate_model(
+            &plans,
+            EstimatorOpts {
+                use_dsp: true,
+                trivial_frac: Some(0.3),
+            },
+            None,
+        );
+        let nodsp = estimate_model(
+            &plans,
+            EstimatorOpts {
+                use_dsp: false,
+                trivial_frac: Some(0.3),
+            },
+            None,
+        );
+        assert_eq!(nodsp.dsp, 0);
+        assert!(nodsp.lut > dsp.lut);
+    }
+
+    #[test]
+    fn mobilenet_fits_on_xcvu37p() {
+        // Paper: MobileNetV1 (ours) fits a single XCVU37P at ~205k LUT,
+        // ~5.7k DSP, ~350 MHz.
+        let plans = plan_all(&analyze(&zoo::mobilenet_v1(100), None).unwrap());
+        let est = estimate_model(&plans, EstimatorOpts::default(), None);
+        let d = crate::fpga::XCVU37P;
+        assert!(
+            d.fits(est.lut, est.ff, est.dsp, est.bram36),
+            "doesn't fit: {est:?}"
+        );
+        assert!(
+            (200.0..500.0).contains(&est.fmax_mhz),
+            "fmax {}",
+            est.fmax_mhz
+        );
+        assert!(est.power_w < 45.0, "power {}", est.power_w);
+    }
+
+    #[test]
+    fn measured_trivial_frac_from_artifact() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights/jsc.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let qm = QModel::load(&path).unwrap();
+        let model = crate::sim::pipeline::qmodel_to_model(&qm);
+        let plans = plan_all(&analyze(&model, None).unwrap());
+        let frac = measured_trivial_frac(&qm, &plans);
+        assert!((0.0..=1.0).contains(&frac));
+        // Fully-parallel lanes (C=1) over int8 QAT weights: a nonzero but
+        // minority fraction is trivial.
+        assert!(frac > 0.01 && frac < 0.9, "frac {frac}");
+    }
+}

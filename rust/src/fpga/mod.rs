@@ -1,0 +1,28 @@
+//! FPGA synthesis estimator (system S8) — the documented substitution for
+//! the paper's Vivado flow (DESIGN.md §2).
+//!
+//! Maps the abstract resource counts of [`crate::complexity`] to
+//! LUT / FF / DSP / BRAM on Xilinx UltraScale+ parts, and models Fmax,
+//! latency, throughput, power and energy so Tables IX/X and Fig. 13 can be
+//! regenerated. Absolute numbers are estimates; the *shape* (scaling with
+//! the data rate r0, DSP vs no-DSP trade-off, Pareto frontier position) is
+//! the reproduction target — see EXPERIMENTS.md for calibration notes and
+//! measured-vs-paper deltas.
+//!
+//! Key mapping decisions (each mirrors a statement in the paper):
+//!
+//! * weight multiplexers are ROMs: "almost all multiplexers can be
+//!   implemented using BRAM" — so Eq.-28/35 muxes cost BRAM bits, not LUTs;
+//! * one DSP48E2 implements two 8-bit multiplications (the [18] trick);
+//! * multiplier lanes whose weight set is entirely {0, ±2^n} are
+//!   multiplierless (shift/wire) — with real artifact weights the trivial
+//!   fraction is measured, otherwise a QAT-typical default is used;
+//! * registers/adders are 8-bit datapath with wider accumulators.
+
+pub mod device;
+pub mod estimate;
+pub mod timing;
+
+pub use device::{Device, ALVEO_U280, XCVU37P, XCVU9P};
+pub use estimate::{estimate_model, EstimatorOpts, FpgaEstimate};
+pub use timing::{timing_analytic, TimingEstimate};

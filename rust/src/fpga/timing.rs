@@ -1,0 +1,126 @@
+//! Analytic latency/throughput model for designs we cannot run through
+//! the value-level pipeline simulator (no trained weights, e.g. MobileNet
+//! in Table IX). For models with artifacts, prefer
+//! [`crate::sim::pipeline::PipelineSim`]'s measured cycles.
+
+use crate::flow::RateAnalysis;
+use crate::model::LayerKind;
+
+/// Cycle-level timing of a continuous-flow design.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingEstimate {
+    /// Steady-state cycles per input frame (the input stream length plus
+    /// the padding zero-feed of the first layer).
+    pub cycles_per_frame: f64,
+    /// Input-to-last-output latency of one frame in cycles.
+    pub latency_cycles: f64,
+}
+
+/// Analytic timing from the rate analysis alone.
+///
+/// * throughput: the input is the bottleneck of a continuous-flow design —
+///   one frame takes `f0^2 * d0 / r0` cycles (+ the Section III-B
+///   inter-frame zero rows when the first layer pads);
+/// * latency: each sliding-window layer must fill `k` input rows before
+///   its first output, each dense layer must absorb all inputs plus its
+///   weight cycle; fills are expressed at each layer's own input rate.
+pub fn timing_analytic(analysis: &RateAnalysis, first_layer_pad: usize) -> TimingEstimate {
+    let first = match analysis.layers.first() {
+        Some(f) => f,
+        None => {
+            return TimingEstimate {
+                cycles_per_frame: 0.0,
+                latency_cycles: 0.0,
+            }
+        }
+    };
+    let f0 = first.shaped.input.f as f64;
+    let d0 = first.shaped.input.d as f64;
+    let r0 = analysis.r0.to_f64();
+    let gap = if first_layer_pad > 0 {
+        (first_layer_pad as f64) * (f0 + 1.0)
+    } else {
+        0.0
+    };
+    let cycles_per_frame = (f0 * f0 + gap) * d0 / r0;
+
+    let mut latency = 0.0;
+    for l in &analysis.layers {
+        let r_in = l.r_in.to_f64();
+        let d_in = l.d_in() as f64;
+        let fill = match l.shaped.layer.kind {
+            LayerKind::Dense => {
+                // All inputs + one weight-cycle tail (h) + pipeline regs.
+                d_in / r_in + 4.0
+            }
+            _ => {
+                let f_in = l.shaped.input.f as f64;
+                let k = l.shaped.layer.k as f64;
+                // k input rows must arrive before the first output row.
+                k * f_in * (l.shaped.input.d as f64) / r_in + 4.0
+            }
+        };
+        latency += fill;
+    }
+    TimingEstimate {
+        cycles_per_frame,
+        latency_cycles: latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{analyze, Ratio};
+    use crate::model::zoo;
+
+    #[test]
+    fn mobilenet_throughput_matches_paper_fps() {
+        // Paper Table IX: ours reaches 6,944 FPS at 350 MHz on 224x224x3
+        // at full input rate -> cycles/frame = 350e6 / 6944 ~= 50,400.
+        let a = analyze(&zoo::mobilenet_v1(100), None).unwrap();
+        let t = timing_analytic(&a, 1);
+        let fps_at_350 = 350.0e6 / t.cycles_per_frame;
+        assert!(
+            (6_500.0..7_100.0).contains(&fps_at_350),
+            "fps {fps_at_350} (cycles/frame {})",
+            t.cycles_per_frame
+        );
+    }
+
+    #[test]
+    fn jsc_throughput_scales_with_rate() {
+        // JSC MLP: 16 features at r0 -> 16/r0 cycles per inference.
+        for (r0, expect) in [
+            (Ratio::int(16), 1.0),
+            (Ratio::int(1), 16.0),
+            (Ratio::new(1, 16), 256.0),
+        ] {
+            let a = analyze(&zoo::jsc_mlp(), Some(r0)).unwrap();
+            let t = timing_analytic(&a, 0);
+            assert!(
+                (t.cycles_per_frame - expect).abs() < 1e-9,
+                "r0={r0}: {} != {expect}",
+                t.cycles_per_frame
+            );
+        }
+    }
+
+    #[test]
+    fn latency_grows_as_rate_falls() {
+        let mut prev = 0.0;
+        for r0 in [Ratio::int(16), Ratio::int(4), Ratio::int(1), Ratio::new(1, 4)] {
+            let a = analyze(&zoo::jsc_mlp(), Some(r0)).unwrap();
+            let t = timing_analytic(&a, 0);
+            assert!(t.latency_cycles > prev, "r0={r0}");
+            prev = t.latency_cycles;
+        }
+    }
+
+    #[test]
+    fn latency_exceeds_single_frame_time_for_deep_models() {
+        let a = analyze(&zoo::mobilenet_v1(100), None).unwrap();
+        let t = timing_analytic(&a, 1);
+        assert!(t.latency_cycles > t.cycles_per_frame);
+    }
+}

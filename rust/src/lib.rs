@@ -1,0 +1,31 @@
+//! # cnn-flow
+//!
+//! Reproduction of *Continuous-Flow Data-Rate-Aware CNN Inference on FPGA*
+//! (Habermann, Mecik, Wang, Vera, Kumm, Garrido — TCAS-AI 2026).
+//!
+//! The crate provides, as a library plus a CLI (`cnn-flow`):
+//!
+//! * [`model`] — a layer-graph IR and the paper's model zoo,
+//! * [`flow`] — exact data-rate propagation (Eq. 8) and the interleaving
+//!   planner (Eqs. 12-22),
+//! * [`complexity`] — the closed-form resource model (Eqs. 23-37) with the
+//!   fully-parallel reference, regenerating Tables V-VIII,
+//! * [`sim`] — cycle-accurate, bit-accurate simulators for the KPU / PPU /
+//!   FCU units (Tables I-IV) and whole-network pipelines,
+//! * [`quant`] — the 8-bit fixed-point substrate shared with the JAX side,
+//! * [`fpga`] — the synthesis estimator standing in for Vivado
+//!   (Tables IX/X, Fig. 13),
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX model,
+//! * [`coordinator`] — the streaming inference server,
+//! * [`report`] — generators that print every paper table and figure.
+
+pub mod complexity;
+pub mod coordinator;
+pub mod flow;
+pub mod fpga;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,396 @@
+//! `cnn-flow` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! cnn-flow table <1..10>          reproduce a paper table
+//! cnn-flow fig 13                 reproduce the Fig. 13 Pareto data
+//! cnn-flow all-tables             every table + figure (EXPERIMENTS.md input)
+//! cnn-flow analyze --model M      rates, unit plan, resources per layer
+//! cnn-flow simulate --model M     cycle-accurate pipeline run + utilisation
+//! cnn-flow serve --model M        streaming coordinator demo (E12)
+//! cnn-flow list                   zoo models
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is not vendored offline).
+
+use std::collections::HashMap;
+
+use cnn_flow::complexity::{layer_cost, model_cost, CostOpts};
+use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::flow::{analyze, plan_all, Ratio};
+use cnn_flow::model::{config::model_from_json, zoo, Model};
+use cnn_flow::quant::QModel;
+use cnn_flow::report;
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::{paper_count, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> i32 {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            usage();
+            return 2;
+        }
+    };
+    let opts = parse_flags(rest);
+    match cmd {
+        "table" => cmd_table(rest.first().map(String::as_str)),
+        "fig" => cmd_fig(rest.first().map(String::as_str)),
+        "all-tables" => {
+            for n in 1..=10 {
+                if cmd_table(Some(&n.to_string())) != 0 {
+                    return 1;
+                }
+                println!();
+            }
+            cmd_fig(Some("13"))
+        }
+        "ablation" => {
+            for t in cnn_flow::report::ablation::all_ablations() {
+                println!("{t}");
+            }
+            0
+        }
+        "analyze" => cmd_analyze(&opts),
+        "simulate" => cmd_simulate(&opts),
+        "serve" => cmd_serve(&opts),
+        "list" => {
+            for m in zoo::all_models() {
+                let shape = m.output_shape().unwrap();
+                println!(
+                    "{:<18} input {}x{}x{} -> {} classes, {} params",
+                    m.name,
+                    m.input.f,
+                    m.input.f,
+                    m.input.d,
+                    shape.d,
+                    paper_count(m.param_count().unwrap())
+                );
+            }
+            0
+        }
+        "help" | "--help" | "-h" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            2
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "cnn-flow — continuous-flow data-rate-aware CNN inference\n\
+         usage:\n  cnn-flow table <1..10>\n  cnn-flow fig 13\n  cnn-flow all-tables\n  \
+         cnn-flow ablation\n  cnn-flow analyze  --model <zoo-name|model.json> [--r0 n[/d]]\n  \
+         cnn-flow simulate --model <digits|jsc> [--frames N] [--r0 n[/d]] [--reference]\n  \
+         cnn-flow serve    --model <digits|jsc> [--requests N] [--batch N]\n  \
+         cnn-flow list"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            map.insert(key.to_string(), val);
+        }
+    }
+    map
+}
+
+fn parse_ratio(s: &str) -> Option<Ratio> {
+    if let Some((n, d)) = s.split_once('/') {
+        Some(Ratio::new(n.parse().ok()?, d.parse().ok()?))
+    } else {
+        Some(Ratio::int(s.parse().ok()?))
+    }
+}
+
+fn load_model(spec: &str) -> Result<Model, String> {
+    if let Some(m) = zoo::by_name(spec) {
+        return Ok(m);
+    }
+    if spec.ends_with(".json") {
+        let text = std::fs::read_to_string(spec).map_err(|e| e.to_string())?;
+        return model_from_json(&text).map_err(|e| e.to_string());
+    }
+    Err(format!("unknown model '{spec}' (see `cnn-flow list`)"))
+}
+
+fn load_qmodel(name: &str) -> Result<QModel, String> {
+    let path = cnn_flow::runtime::artifacts_dir()
+        .join("weights")
+        .join(format!("{name}.json"));
+    QModel::load(&path).map_err(|e| format!("{e}\n(hint: run `make artifacts` first)"))
+}
+
+fn cmd_table(n: Option<&str>) -> i32 {
+    let jsc = report::synthesis::load_jsc_artifact();
+    let t: Table = match n {
+        Some("1") => report::timing::table1(),
+        Some("2") => report::timing::table2(),
+        Some("3") => report::timing::table3(),
+        Some("4") => report::timing::table4(),
+        Some("5") => report::tables::table5(),
+        Some("6") => report::tables::table6(),
+        Some("7") => report::tables::table7(),
+        Some("8") => report::tables::table8(),
+        Some("9") => report::synthesis::table9(),
+        Some("10") => report::synthesis::table10(jsc.as_ref()),
+        other => {
+            eprintln!("usage: cnn-flow table <1..10> (got {other:?})");
+            return 2;
+        }
+    };
+    println!("{t}");
+    0
+}
+
+fn cmd_fig(n: Option<&str>) -> i32 {
+    match n {
+        Some("13") => {
+            let jsc = report::synthesis::load_jsc_artifact();
+            println!("{}", report::synthesis::fig13(jsc.as_ref()));
+            0
+        }
+        other => {
+            eprintln!("usage: cnn-flow fig 13 (got {other:?})");
+            2
+        }
+    }
+}
+
+fn cmd_analyze(opts: &HashMap<String, String>) -> i32 {
+    let spec = match opts.get("model") {
+        Some(s) => s,
+        None => {
+            eprintln!("analyze requires --model");
+            return 2;
+        }
+    };
+    let model = match load_model(spec) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let r0 = opts.get("r0").and_then(|s| parse_ratio(s));
+    let analysis = match analyze(&model, r0) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("shape error: {e}");
+            return 1;
+        }
+    };
+    let plans = plan_all(&analysis);
+    let mut t = Table::new(
+        format!("{} @ r0={}", model.name, analysis.r0),
+        &[
+            "Layer", "kind", "f", "d_in", "d_out", "r_in", "r_out", "units", "C", "stall",
+            "Add.", "Mul.", "Reg.", "MUX",
+        ],
+    );
+    for pl in &plans {
+        let cost = layer_cost(pl, CostOpts::FULL);
+        let l = &pl.rated.shaped.layer;
+        t.row(&[
+            l.name.clone(),
+            l.kind.short().to_string(),
+            pl.rated.shaped.input.f.to_string(),
+            pl.rated.d_in().to_string(),
+            pl.rated.d_out().to_string(),
+            pl.rated.r_in.paper(),
+            pl.rated.r_out.paper(),
+            pl.plan.unit_count().to_string(),
+            pl.plan.configs().to_string(),
+            if pl.plan.stalled() { "*".into() } else { String::new() },
+            paper_count(cost.adders),
+            paper_count(cost.multipliers),
+            paper_count(cost.registers),
+            paper_count(cost.mux2),
+        ]);
+    }
+    let total = model_cost(&plans, CostOpts::FULL).total;
+    t.row(&[
+        "TOTAL".to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{}", total.kpus + total.fcus + total.ppus),
+        String::new(),
+        String::new(),
+        paper_count(total.adders),
+        paper_count(total.multipliers),
+        paper_count(total.registers),
+        paper_count(total.mux2),
+    ]);
+    println!("{t}");
+    let est = cnn_flow::fpga::estimate_model(&plans, Default::default(), None);
+    println!(
+        "FPGA estimate: {} LUT, {} FF, {} DSP, {:.1} BRAM36, Fmax {:.0} MHz, {:.1} W",
+        est.lut, est.ff, est.dsp, est.bram36, est.fmax_mhz, est.power_w
+    );
+    0
+}
+
+fn cmd_simulate(opts: &HashMap<String, String>) -> i32 {
+    let name = opts.get("model").map(String::as_str).unwrap_or("digits");
+    let frames: usize = opts
+        .get("frames")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let qm = match load_qmodel(name) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let r0 = opts.get("r0").and_then(|s| parse_ratio(s));
+    let sim = if opts.contains_key("reference") {
+        PipelineSim::new_reference(qm.clone())
+    } else {
+        PipelineSim::new(qm.clone(), r0)
+    };
+    let sim = match sim {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let inputs: Vec<Vec<i64>> = qm
+        .test_vectors
+        .iter()
+        .cycle()
+        .take(frames.max(1))
+        .map(|tv| tv.x_q.clone())
+        .collect();
+    if inputs.is_empty() {
+        eprintln!("model has no test vectors");
+        return 1;
+    }
+    let res = match sim.run(&inputs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(
+        format!(
+            "{} pipeline, {} frames ({})",
+            qm.name,
+            inputs.len(),
+            if sim.fully_parallel {
+                "fully-parallel reference"
+            } else {
+                "continuous flow"
+            }
+        ),
+        &["Layer", "unit", "count", "useful ops", "utilization"],
+    );
+    for s in &res.stats {
+        t.row(&[
+            s.name.clone(),
+            s.unit_kind.to_string(),
+            s.units.to_string(),
+            s.useful_ops.to_string(),
+            format!("{:.1}%", s.utilization * 100.0),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "latency (frame 0): {} cycles; steady state: {:.1} cycles/frame; total {} cycles",
+        res.first_frame_latency, res.cycles_per_frame, res.total_cycles
+    );
+    0
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
+    let name = opts.get("model").map(String::as_str).unwrap_or("digits");
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let batch: usize = opts.get("batch").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let qm = match load_qmodel(name) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let config = ServerConfig {
+        batch,
+        ..Default::default()
+    };
+    let server = match Server::start(qm.clone(), config, Some(name.to_string())) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let started = std::time::Instant::now();
+    let server = std::sync::Arc::new(server);
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let s = std::sync::Arc::clone(&server);
+        let vectors: Vec<Vec<i64>> = qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for i in 0..requests / 4 {
+                let x = vectors[(c + i) % vectors.len()].clone();
+                if s.infer(x).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = started.elapsed();
+    // Give the sampled verifier a moment to drain, then report.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let m = std::sync::Arc::try_unwrap(server)
+        .map(|s| s.shutdown())
+        .unwrap_or_else(|s| s.metrics());
+    println!(
+        "served {served}/{requests} requests in {elapsed:?} ({:.0} req/s wall)",
+        served as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "coordinator: mean batch {:.1}, mean service {:?}, projected hw throughput {:.2} MInf/s",
+        m.mean_batch,
+        m.mean_service,
+        m.projected_fps / 1e6
+    );
+    println!(
+        "golden cross-check: {} verified, {} mismatches",
+        m.verified, m.mismatches
+    );
+    if m.mismatches > 0 {
+        eprintln!("GOLDEN MISMATCHES DETECTED");
+        return 1;
+    }
+    0
+}

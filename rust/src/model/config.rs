@@ -1,0 +1,255 @@
+//! JSON (de)serialisation of models, so users can analyse their own
+//! networks: `cnn-flow analyze --model my_net.json`.
+//!
+//! Schema (see `examples/` and README):
+//! ```json
+//! {
+//!   "name": "my_net",
+//!   "input": {"f": 24, "d": 1},
+//!   "layers": [
+//!     {"type": "conv", "name": "C1", "k": 5, "s": 1, "p": 2, "filters": 8},
+//!     {"type": "maxpool", "name": "P1", "k": 2, "s": 2},
+//!     {"type": "residual", "name": "r1",
+//!      "body": [ ... ], "projection": { ... } },
+//!     {"type": "dense", "name": "F1", "units": 10}
+//!   ]
+//! }
+//! ```
+
+use super::{Block, Layer, LayerKind, Model, Shape};
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError(msg.into()))
+}
+
+fn usize_field(j: &Json, key: &str, default: Option<usize>) -> Result<usize, ConfigError> {
+    match (j.get(key), default) {
+        (Json::Null, Some(d)) => Ok(d),
+        (Json::Null, None) => err(format!("missing field '{key}'")),
+        (v, _) => v
+            .as_usize()
+            .ok_or_else(|| ConfigError(format!("field '{key}' must be a non-negative integer"))),
+    }
+}
+
+fn parse_layer(j: &Json) -> Result<Layer, ConfigError> {
+    let ty = j
+        .get("type")
+        .as_str()
+        .ok_or_else(|| ConfigError("layer missing 'type'".into()))?;
+    let name = j.get("name").as_str().unwrap_or(ty).to_string();
+    let mut layer = match ty {
+        "conv" => Layer::conv(
+            &name,
+            usize_field(j, "k", None)?,
+            usize_field(j, "s", Some(1))?,
+            usize_field(j, "p", Some(0))?,
+            usize_field(j, "filters", None)?,
+        ),
+        "dwconv" | "depthwise" => Layer::dwconv(
+            &name,
+            usize_field(j, "k", None)?,
+            usize_field(j, "s", Some(1))?,
+            usize_field(j, "p", Some(0))?,
+        ),
+        "pwconv" | "pointwise" => Layer::pwconv(&name, usize_field(j, "filters", None)?),
+        "maxpool" => Layer::maxpool_padded(
+            &name,
+            usize_field(j, "k", None)?,
+            usize_field(j, "s", Some(1))?,
+            usize_field(j, "p", Some(0))?,
+        ),
+        "avgpool" => Layer::avgpool(
+            &name,
+            usize_field(j, "k", None)?,
+            usize_field(j, "s", Some(1))?,
+        ),
+        "dense" => Layer::dense(&name, usize_field(j, "units", None)?),
+        other => return err(format!("unknown layer type '{other}'")),
+    };
+    if let Some(b) = j.get("bias").as_bool() {
+        layer.bias = b;
+    }
+    if let Some(r) = j.get("relu").as_bool() {
+        layer.relu = r;
+    }
+    Ok(layer)
+}
+
+fn parse_block(j: &Json) -> Result<Block, ConfigError> {
+    if j.get("type").as_str() == Some("residual") {
+        let name = j.get("name").as_str().unwrap_or("residual").to_string();
+        let body = j
+            .get("body")
+            .as_arr()
+            .ok_or_else(|| ConfigError("residual missing 'body' array".into()))?
+            .iter()
+            .map(parse_block)
+            .collect::<Result<Vec<_>, _>>()?;
+        let projection = match j.get("projection") {
+            Json::Null => None,
+            p => Some(parse_layer(p)?),
+        };
+        Ok(Block::Residual {
+            name,
+            body,
+            projection,
+        })
+    } else {
+        Ok(Block::Layer(parse_layer(j)?))
+    }
+}
+
+/// Parse a model from JSON text.
+pub fn model_from_json(text: &str) -> Result<Model, ConfigError> {
+    let j = Json::parse(text).map_err(|e| ConfigError(e.to_string()))?;
+    let name = j.get("name").as_str().unwrap_or("model").to_string();
+    let input = j.get("input");
+    let f = usize_field(input, "f", None)?;
+    let d = usize_field(input, "d", Some(1))?;
+    let layers = j
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| ConfigError("missing 'layers' array".into()))?;
+    let mut m = Model::new(&name, f, d);
+    for lj in layers {
+        m.blocks.push(parse_block(lj)?);
+    }
+    // Validate shapes eagerly so errors point at the config, not later use.
+    m.shapes().map_err(|e| ConfigError(e.to_string()))?;
+    Ok(m)
+}
+
+fn layer_to_json(l: &Layer) -> Json {
+    let ty = match l.kind {
+        LayerKind::Conv => "conv",
+        LayerKind::DepthwiseConv => "dwconv",
+        LayerKind::Pointwise => "pwconv",
+        LayerKind::MaxPool => "maxpool",
+        LayerKind::AvgPool => "avgpool",
+        LayerKind::Dense => "dense",
+    };
+    let mut pairs: Vec<(&str, Json)> = vec![("type", ty.into()), ("name", l.name.as_str().into())];
+    match l.kind {
+        LayerKind::Dense => pairs.push(("units", l.filters.into())),
+        LayerKind::Pointwise => pairs.push(("filters", l.filters.into())),
+        _ => {
+            pairs.push(("k", l.k.into()));
+            pairs.push(("s", l.s.into()));
+            pairs.push(("p", l.p.into()));
+            if l.kind == LayerKind::Conv {
+                pairs.push(("filters", l.filters.into()));
+            }
+        }
+    }
+    pairs.push(("bias", Json::Bool(l.bias)));
+    pairs.push(("relu", Json::Bool(l.relu)));
+    Json::obj(pairs)
+}
+
+fn block_to_json(b: &Block) -> Json {
+    match b {
+        Block::Layer(l) => layer_to_json(l),
+        Block::Residual {
+            name,
+            body,
+            projection,
+        } => {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("type", "residual".into()),
+                ("name", name.as_str().into()),
+                ("body", Json::Arr(body.iter().map(block_to_json).collect())),
+            ];
+            if let Some(p) = projection {
+                pairs.push(("projection", layer_to_json(p)));
+            }
+            Json::obj(pairs)
+        }
+    }
+}
+
+/// Serialise a model to pretty JSON.
+pub fn model_to_json(m: &Model) -> String {
+    let Shape { f, d } = m.input;
+    Json::obj(vec![
+        ("name", m.name.as_str().into()),
+        ("input", Json::obj(vec![("f", f.into()), ("d", d.into())])),
+        (
+            "layers",
+            Json::Arr(m.blocks.iter().map(block_to_json).collect()),
+        ),
+    ])
+    .render_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for m in zoo::all_models() {
+            let text = model_to_json(&m);
+            let back = model_from_json(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{text}", m.name));
+            // Shapes and params must survive the roundtrip (layer filter
+            // defaults may be filled in, so compare semantics not structs).
+            assert_eq!(
+                m.shapes().unwrap().len(),
+                back.shapes().unwrap().len(),
+                "{}",
+                m.name
+            );
+            assert_eq!(
+                m.param_count().unwrap(),
+                back.param_count().unwrap(),
+                "{}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(model_from_json(r#"{"input":{"f":8},"layers":[{"type":"conv"}]}"#).is_err());
+        assert!(model_from_json(r#"{"layers":[]}"#).is_err());
+        assert!(model_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_shapes() {
+        // 5x5 pool on an 3x3 input must fail at load time.
+        let bad = r#"{"name":"x","input":{"f":3,"d":1},
+            "layers":[{"type":"maxpool","k":5,"s":5}]}"#;
+        assert!(model_from_json(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_layer_type_rejected() {
+        let bad = r#"{"input":{"f":8,"d":1},"layers":[{"type":"transformer"}]}"#;
+        assert!(model_from_json(bad).is_err());
+    }
+
+    #[test]
+    fn bias_relu_flags_roundtrip() {
+        let src = r#"{"input":{"f":8,"d":1},"layers":[
+            {"type":"conv","k":3,"s":1,"p":1,"filters":4,"bias":false,"relu":false}]}"#;
+        let m = model_from_json(src).unwrap();
+        let l = &m.shapes().unwrap()[0].layer;
+        assert!(!l.bias);
+        assert!(!l.relu);
+    }
+}

@@ -1,0 +1,559 @@
+//! Layer-graph IR for continuous-flow CNNs (system S1).
+//!
+//! The paper analyses CNNs as a sequence of layers, each characterised by
+//! the feature-map size `f`, kernel size `k`, stride `s`, padding `p`, and
+//! channel counts `d_{l-1}` / `d_l` (Table V). Residual topologies
+//! (ResNet) are expressed with [`Block::Residual`]; everything else is a
+//! plain chain. Shapes are propagated by [`Model::shapes`], which is the
+//! single source of truth the flow analysis, complexity model, simulator,
+//! and code paths in `python/compile/model.py` all agree on.
+
+pub mod config;
+pub mod zoo;
+
+/// The kind of a layer. `Pointwise` is a 1x1 convolution, kept distinct
+/// because the paper implements it with FCUs instead of KPUs (Section IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard convolution: every filter reads every input channel.
+    Conv,
+    /// Depthwise convolution (g = d_{l-1} groups, one kernel per channel).
+    DepthwiseConv,
+    /// Pointwise (1x1) convolution, implemented as FCUs.
+    Pointwise,
+    /// Max pooling.
+    MaxPool,
+    /// Average pooling (implemented as a depthwise conv with constant
+    /// weights 1/k^2, per Section VI).
+    AvgPool,
+    /// Fully connected layer over the flattened input tensor.
+    Dense,
+}
+
+impl LayerKind {
+    pub fn is_pool(self) -> bool {
+        matches!(self, LayerKind::MaxPool | LayerKind::AvgPool)
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::DepthwiseConv => "dwconv",
+            LayerKind::Pointwise => "pwconv",
+            LayerKind::MaxPool => "maxpool",
+            LayerKind::AvgPool => "avgpool",
+            LayerKind::Dense => "dense",
+        }
+    }
+}
+
+/// One layer of the network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    /// Display name ("C1", "P2", "dw3", ...).
+    pub name: String,
+    pub kind: LayerKind,
+    /// Kernel size k (k x k window). 0 for Dense (derived as k = f).
+    pub k: usize,
+    /// Stride s.
+    pub s: usize,
+    /// Zero padding p on each side. The paper's continuous-flow condition
+    /// for s = 1 is p = (k-1)/2 (Section III-B).
+    pub p: usize,
+    /// Number of output channels d_l. For pooling and depthwise layers
+    /// this must equal the input channel count and may be set to 0 to mean
+    /// "same as input".
+    pub filters: usize,
+    /// Whether the layer has a per-output-channel bias.
+    pub bias: bool,
+    /// Whether a ReLU follows (cost-free in the paper's model; recorded
+    /// for the simulator and the JAX model).
+    pub relu: bool,
+}
+
+impl Layer {
+    pub fn conv(name: &str, k: usize, s: usize, p: usize, filters: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            k,
+            s,
+            p,
+            filters,
+            bias: true,
+            relu: true,
+        }
+    }
+
+    pub fn dwconv(name: &str, k: usize, s: usize, p: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::DepthwiseConv,
+            k,
+            s,
+            p,
+            filters: 0,
+            bias: true,
+            relu: true,
+        }
+    }
+
+    pub fn pwconv(name: &str, filters: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Pointwise,
+            k: 1,
+            s: 1,
+            p: 0,
+            filters,
+            bias: true,
+            relu: true,
+        }
+    }
+
+    pub fn maxpool(name: &str, k: usize, s: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::MaxPool,
+            k,
+            s,
+            p: 0,
+            filters: 0,
+            bias: false,
+            relu: false,
+        }
+    }
+
+    pub fn maxpool_padded(name: &str, k: usize, s: usize, p: usize) -> Self {
+        Self {
+            p,
+            ..Self::maxpool(name, k, s)
+        }
+    }
+
+    pub fn avgpool(name: &str, k: usize, s: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::AvgPool,
+            k,
+            s,
+            p: 0,
+            filters: 0,
+            bias: false,
+            relu: false,
+        }
+    }
+
+    pub fn dense(name: &str, units: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Dense,
+            k: 0,
+            s: 1,
+            p: 0,
+            filters: units,
+            bias: true,
+            relu: false,
+        }
+    }
+
+    pub fn no_relu(mut self) -> Self {
+        self.relu = false;
+        self
+    }
+
+    pub fn no_bias(mut self) -> Self {
+        self.bias = false;
+        self
+    }
+}
+
+/// A block: a single layer or a residual group (body + optional
+/// projection shortcut) merged by elementwise addition, as in ResNet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Block {
+    Layer(Layer),
+    Residual {
+        name: String,
+        body: Vec<Block>,
+        /// `None` = identity shortcut; `Some(conv1x1)` = projection.
+        projection: Option<Layer>,
+    },
+}
+
+impl Block {
+    /// Iterate over contained layers depth-first (body before projection).
+    pub fn layers(&self) -> Vec<&Layer> {
+        match self {
+            Block::Layer(l) => vec![l],
+            Block::Residual {
+                body, projection, ..
+            } => {
+                let mut v: Vec<&Layer> = body.iter().flat_map(|b| b.layers()).collect();
+                if let Some(p) = projection {
+                    v.push(p);
+                }
+                v
+            }
+        }
+    }
+}
+
+/// The spatial/channel shape of a tensor flowing between layers:
+/// an `f x f` feature map with `d` channels. Dense layers flatten to
+/// `f = 1`, `d = f^2 * d` of their input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub f: usize,
+    pub d: usize,
+}
+
+impl Shape {
+    pub fn features(&self) -> usize {
+        self.f * self.f * self.d
+    }
+}
+
+/// A whole model: named input shape plus a chain of blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub name: String,
+    pub input: Shape,
+    pub blocks: Vec<Block>,
+}
+
+/// Shape-propagation error.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ShapeError {
+    /// Window larger than (padded) feature map.
+    WindowTooLarge { layer: String, f: usize, k: usize },
+    /// Residual branches produced different shapes.
+    ResidualMismatch {
+        block: String,
+        body: Shape,
+        shortcut: Shape,
+    },
+    /// Stride or kernel of zero, etc.
+    BadParam { layer: String, what: String },
+}
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShapeError::WindowTooLarge { layer, f: fm, k } => {
+                write!(f, "layer {layer}: kernel {k} larger than feature map {fm}")
+            }
+            ShapeError::ResidualMismatch {
+                block,
+                body,
+                shortcut,
+            } => write!(
+                f,
+                "residual {block}: body {body:?} != shortcut {shortcut:?}"
+            ),
+            ShapeError::BadParam { layer, what } => write!(f, "layer {layer}: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Output shape of a single layer given its input shape.
+pub fn layer_output_shape(layer: &Layer, input: Shape) -> Result<Shape, ShapeError> {
+    if layer.s == 0 {
+        return Err(ShapeError::BadParam {
+            layer: layer.name.clone(),
+            what: "stride 0".into(),
+        });
+    }
+    match layer.kind {
+        LayerKind::Dense => Ok(Shape {
+            f: 1,
+            d: layer.filters,
+        }),
+        LayerKind::Pointwise => Ok(Shape {
+            f: input.f,
+            d: layer.filters,
+        }),
+        _ => {
+            if layer.k == 0 {
+                return Err(ShapeError::BadParam {
+                    layer: layer.name.clone(),
+                    what: "kernel 0".into(),
+                });
+            }
+            let padded = input.f + 2 * layer.p;
+            if layer.k > padded {
+                return Err(ShapeError::WindowTooLarge {
+                    layer: layer.name.clone(),
+                    f: input.f,
+                    k: layer.k,
+                });
+            }
+            let f_out = (padded - layer.k) / layer.s + 1;
+            let d = match layer.kind {
+                LayerKind::Conv => layer.filters,
+                // depthwise/pool keep the channel count
+                _ => input.d,
+            };
+            Ok(Shape { f: f_out, d })
+        }
+    }
+}
+
+/// A layer together with its resolved input/output shapes, produced by
+/// [`Model::shapes`]. `merge_of` marks the *last* layer of a residual body
+/// whose output is merged with the shortcut.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapedLayer {
+    pub layer: Layer,
+    pub input: Shape,
+    pub output: Shape,
+    /// True if this layer's output feeds a residual merge (addition).
+    pub merges: bool,
+}
+
+impl Model {
+    pub fn new(name: &str, f: usize, d: usize) -> Self {
+        Self {
+            name: name.into(),
+            input: Shape { f, d },
+            blocks: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> &mut Self {
+        self.blocks.push(Block::Layer(layer));
+        self
+    }
+
+    /// All layers in analysis order (residual bodies inline, projection
+    /// after the body), with shapes resolved. Channel counts of
+    /// pool/depthwise layers are filled in from the input.
+    pub fn shapes(&self) -> Result<Vec<ShapedLayer>, ShapeError> {
+        let mut out = Vec::new();
+        let mut cur = self.input;
+        for b in &self.blocks {
+            cur = shape_block(b, cur, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Output shape of the whole model.
+    pub fn output_shape(&self) -> Result<Shape, ShapeError> {
+        Ok(self
+            .shapes()?
+            .last()
+            .map(|l| l.output)
+            .unwrap_or(self.input))
+    }
+
+    /// Total number of trainable parameters (weights + biases), used for
+    /// the "Param." column of Table VIII.
+    pub fn param_count(&self) -> Result<u64, ShapeError> {
+        let mut total = 0u64;
+        for sl in self.shapes()? {
+            let l = &sl.layer;
+            let weights = match l.kind {
+                LayerKind::Conv => (l.k * l.k * sl.input.d * sl.output.d) as u64,
+                LayerKind::DepthwiseConv => (l.k * l.k * sl.input.d) as u64,
+                LayerKind::Pointwise => (sl.input.d * sl.output.d) as u64,
+                LayerKind::Dense => (sl.input.features() * sl.output.d) as u64,
+                LayerKind::MaxPool | LayerKind::AvgPool => 0,
+            };
+            let biases = if l.bias && weights > 0 {
+                sl.output.d as u64
+            } else {
+                0
+            };
+            total += weights + biases;
+        }
+        Ok(total)
+    }
+
+    /// Convenience: flat layer list without shapes.
+    pub fn layers(&self) -> Vec<&Layer> {
+        self.blocks.iter().flat_map(|b| b.layers()).collect()
+    }
+}
+
+fn shape_block(
+    block: &Block,
+    input: Shape,
+    out: &mut Vec<ShapedLayer>,
+) -> Result<Shape, ShapeError> {
+    match block {
+        Block::Layer(l) => {
+            let mut l = l.clone();
+            // Fill in "same as input" channel counts.
+            if l.filters == 0 {
+                l.filters = input.d;
+            }
+            let output = layer_output_shape(&l, input)?;
+            out.push(ShapedLayer {
+                layer: l,
+                input,
+                output,
+                merges: false,
+            });
+            Ok(output)
+        }
+        Block::Residual {
+            name,
+            body,
+            projection,
+        } => {
+            let mut cur = input;
+            let body_start = out.len();
+            for b in body {
+                cur = shape_block(b, cur, out)?;
+            }
+            let shortcut_shape = match projection {
+                Some(proj) => {
+                    let mut proj = proj.clone();
+                    if proj.filters == 0 {
+                        proj.filters = cur.d;
+                    }
+                    let s = layer_output_shape(&proj, input)?;
+                    out.push(ShapedLayer {
+                        layer: proj,
+                        input,
+                        output: s,
+                        merges: true,
+                    });
+                    s
+                }
+                None => input,
+            };
+            if shortcut_shape != cur {
+                return Err(ShapeError::ResidualMismatch {
+                    block: name.clone(),
+                    body: cur,
+                    shortcut: shortcut_shape,
+                });
+            }
+            // Mark the last body layer as merging.
+            if let Some(last_body) = out[body_start..]
+                .iter_mut()
+                .filter(|l| !l.merges)
+                .next_back()
+            {
+                last_body.merges = true;
+            }
+            Ok(cur)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn running() -> Model {
+        zoo::running_example()
+    }
+
+    #[test]
+    fn running_example_shapes_match_table_v() {
+        let shapes = running().shapes().unwrap();
+        let fs: Vec<(usize, usize)> = shapes.iter().map(|s| (s.output.f, s.output.d)).collect();
+        // C1 24x24x8, P1 12x12x8, C2 12x12x16, P2 4x4x16, F1 1x1x10
+        assert_eq!(fs, vec![(24, 8), (12, 8), (12, 16), (4, 16), (1, 10)]);
+    }
+
+    #[test]
+    fn running_example_params_match_table_viii() {
+        // Table VIII: "Running example" Param. = 6.0k
+        let p = running().param_count().unwrap();
+        // 5*5*1*8 + 8 + 5*5*8*16 + 16 + 256*10 + 10 = 5994
+        assert_eq!(p, 5994);
+        assert_eq!(crate::util::paper_count(p), "6.0k");
+    }
+
+    #[test]
+    fn conv_shape_arithmetic() {
+        let l = Layer::conv("c", 3, 2, 1, 32);
+        let s = layer_output_shape(&l, Shape { f: 224, d: 3 }).unwrap();
+        assert_eq!(s, Shape { f: 112, d: 32 });
+    }
+
+    #[test]
+    fn dense_flattens() {
+        let l = Layer::dense("fc", 10);
+        let s = layer_output_shape(&l, Shape { f: 4, d: 16 }).unwrap();
+        assert_eq!(s, Shape { f: 1, d: 10 });
+    }
+
+    #[test]
+    fn window_too_large_rejected() {
+        let l = Layer::maxpool("p", 5, 5);
+        assert!(matches!(
+            layer_output_shape(&l, Shape { f: 3, d: 1 }),
+            Err(ShapeError::WindowTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn pool_keeps_channels() {
+        let l = Layer::maxpool("p", 2, 2);
+        let s = layer_output_shape(&l, Shape { f: 24, d: 8 }).unwrap();
+        assert_eq!(s, Shape { f: 12, d: 8 });
+    }
+
+    #[test]
+    fn residual_identity_shapes() {
+        let mut m = Model::new("res", 8, 4);
+        m.blocks.push(Block::Residual {
+            name: "r1".into(),
+            body: vec![
+                Block::Layer(Layer::conv("a", 3, 1, 1, 4)),
+                Block::Layer(Layer::conv("b", 3, 1, 1, 4).no_relu()),
+            ],
+            projection: None,
+        });
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes.len(), 2);
+        assert!(shapes[1].merges);
+        assert!(!shapes[0].merges);
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 8, d: 4 });
+    }
+
+    #[test]
+    fn residual_mismatch_rejected() {
+        let mut m = Model::new("res", 8, 4);
+        m.blocks.push(Block::Residual {
+            name: "r1".into(),
+            body: vec![Block::Layer(Layer::conv("a", 3, 2, 1, 8))],
+            projection: None, // identity shortcut has wrong shape
+        });
+        assert!(matches!(
+            m.shapes(),
+            Err(ShapeError::ResidualMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn residual_projection_marks_merge() {
+        let mut m = Model::new("res", 8, 4);
+        m.blocks.push(Block::Residual {
+            name: "r1".into(),
+            body: vec![
+                Block::Layer(Layer::conv("a", 3, 2, 1, 8)),
+                Block::Layer(Layer::conv("b", 3, 1, 1, 8).no_relu()),
+            ],
+            projection: Some(Layer::conv("proj", 1, 2, 0, 8).no_relu()),
+        });
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes.len(), 3);
+        assert!(shapes[1].merges); // last body layer
+        assert!(shapes[2].merges); // projection
+    }
+
+    #[test]
+    fn zero_filters_means_same_as_input() {
+        let mut m = Model::new("m", 24, 8);
+        m.push(Layer::maxpool("p", 2, 2));
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes[0].layer.filters, 8);
+    }
+}

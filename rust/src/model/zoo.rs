@@ -1,0 +1,320 @@
+//! Model zoo: every network the paper analyses or synthesises.
+//!
+//! - [`running_example`] — the 5-layer CNN of Table V.
+//! - [`mobilenet_v1`] — MobileNetV1 with width multiplier alpha (Table VIII/IX).
+//! - [`resnet18`] — ResNet18 (Table VIII).
+//! - [`jsc_mlp`] — the 16-16-5 jet-substructure-classification MLP (Table X).
+//! - [`digits_cnn`] — the small trainable CNN used by the end-to-end
+//!   serving experiment (E12); same topology class as the running example
+//!   but sized so QAT on synthetic digits converges in seconds.
+
+use super::{Block, Layer, Model};
+
+/// The running example of Section IV-A / Table V:
+/// C1 conv 5x5 p2 (1->8), P1 maxpool 2x2 s2, C2 conv 5x5 p2 (8->16),
+/// P2 maxpool 3x3 s3, F1 dense 10. Input 24x24x1.
+pub fn running_example() -> Model {
+    let mut m = Model::new("running_example", 24, 1);
+    m.push(Layer::conv("C1", 5, 1, 2, 8));
+    m.push(Layer::maxpool("P1", 2, 2));
+    m.push(Layer::conv("C2", 5, 1, 2, 16));
+    m.push(Layer::maxpool("P2", 3, 3));
+    m.push(Layer::dense("F1", 10));
+    m
+}
+
+/// Apply the MobileNet width multiplier. The original paper rounds to
+/// multiples of 8 but all four published alphas produce exact multiples
+/// anyway (e.g. 64 * 0.25 = 16), so plain rounding is equivalent here.
+fn scale(c: usize, alpha_pct: usize) -> usize {
+    ((c * alpha_pct + 50) / 100).max(1)
+}
+
+/// MobileNetV1 at width multiplier `alpha_pct` (percent: 25, 50, 75, 100).
+///
+/// conv 3x3 s2 -> 13 depthwise-separable blocks -> global avgpool -> FC 1000.
+/// The global average pool is expressed as a depthwise conv with constant
+/// weights (Section VI), which [`crate::complexity`] costs as an
+/// [`super::LayerKind::AvgPool`].
+pub fn mobilenet_v1(alpha_pct: usize) -> Model {
+    assert!(alpha_pct > 0);
+    let a = |c| scale(c, alpha_pct);
+    let mut m = Model::new(&format!("mobilenet_v1_a{alpha_pct}"), 224, 3);
+    m.push(Layer::conv("conv1", 3, 2, 1, a(32)));
+    // (pointwise filters, dw stride) for the 13 separable blocks.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (filters, stride)) in blocks.iter().enumerate() {
+        m.push(Layer::dwconv(&format!("dw{}", i + 1), 3, *stride, 1));
+        m.push(Layer::pwconv(&format!("pw{}", i + 1), a(*filters)));
+    }
+    m.push(Layer::avgpool("avgpool", 7, 7));
+    m.push(Layer::dense("fc", 1000));
+    m
+}
+
+/// ResNet18: conv7x7 s2, maxpool3x3 s2, four stages of two basic blocks
+/// (64, 128, 256, 512 channels; stride-2 projection block at the start of
+/// stages 2-4), global avgpool, FC 1000.
+pub fn resnet18() -> Model {
+    let mut m = Model::new("resnet18", 224, 3);
+    m.push(Layer::conv("conv1", 7, 2, 3, 64));
+    m.push(Layer::maxpool_padded("maxpool", 3, 2, 1));
+    let stages: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+    for (si, (ch, first_stride)) in stages.iter().enumerate() {
+        for bi in 0..2 {
+            let stride = if bi == 0 { *first_stride } else { 1 };
+            let name = format!("res{}_{}", si + 2, bi + 1);
+            let body = vec![
+                Block::Layer(Layer::conv(&format!("{name}a"), 3, stride, 1, *ch)),
+                Block::Layer(Layer::conv(&format!("{name}b"), 3, 1, 1, *ch).no_relu()),
+            ];
+            let projection = if stride != 1 || (si > 0 && bi == 0) {
+                Some(Layer::conv(&format!("{name}p"), 1, stride, 0, *ch).no_relu())
+            } else {
+                None
+            };
+            m.blocks.push(Block::Residual {
+                name,
+                body,
+                projection,
+            });
+        }
+    }
+    m.push(Layer::avgpool("avgpool", 7, 7));
+    m.push(Layer::dense("fc", 1000));
+    m
+}
+
+/// The jet-substructure-classification MLP of Section VII, experiment 2:
+/// 16 input features -> dense 16 -> dense 16 -> dense 5. Input is modelled
+/// as a 1x1 "pixel" with 16 channels so that the full input data rate is
+/// r0 = d0 = 16, matching Table X's r0 = 16 fully-parallel row.
+pub fn jsc_mlp() -> Model {
+    let mut m = Model::new("jsc_mlp", 1, 16);
+    m.push(Layer::dense("fc1", 16));
+    m.blocks.last_mut().map(|b| {
+        if let Block::Layer(l) = b {
+            l.relu = true;
+        }
+    });
+    m.push(Layer::dense("fc2", 16));
+    m.blocks.last_mut().map(|b| {
+        if let Block::Layer(l) = b {
+            l.relu = true;
+        }
+    });
+    m.push(Layer::dense("fc3", 5));
+    m
+}
+
+/// Small trainable CNN for the end-to-end experiment (E12): 12x12x1
+/// synthetic digit images, conv 3x3 p1 (1->4), maxpool 2x2, conv 3x3 p1
+/// (4->8), maxpool 2x2, dense 10. ~1.1k parameters — trains to >95% on the
+/// synthetic digits in a few hundred QAT steps while still exercising
+/// every continuous-flow mechanism (stride-induced rate drops x2,
+/// interleaving, FCU weight cycling).
+pub fn digits_cnn() -> Model {
+    let mut m = Model::new("digits_cnn", 12, 1);
+    m.push(Layer::conv("C1", 3, 1, 1, 4));
+    m.push(Layer::maxpool("P1", 2, 2));
+    m.push(Layer::conv("C2", 3, 1, 1, 8));
+    m.push(Layer::maxpool("P2", 2, 2));
+    m.push(Layer::dense("F1", 10));
+    m
+}
+
+/// LeNet-5-style CNN (32x32x1): the classic small CNN, included to widen
+/// the analysis sweeps beyond the paper's own models.
+pub fn lenet5() -> Model {
+    let mut m = Model::new("lenet5", 32, 1);
+    m.push(Layer::conv("C1", 5, 1, 0, 6));
+    m.push(Layer::maxpool("S2", 2, 2));
+    m.push(Layer::conv("C3", 5, 1, 0, 16));
+    m.push(Layer::maxpool("S4", 2, 2));
+    m.push(Layer::conv("C5", 5, 1, 0, 120));
+    m.push(Layer::dense("F6", 84));
+    m.push(Layer::dense("OUT", 10));
+    m
+}
+
+/// A VGG-style all-3x3 CNN scaled to 64x64 input — stresses the analysis
+/// with deep same-padding stacks and repeated rate halvings.
+pub fn vgg_tiny() -> Model {
+    let mut m = Model::new("vgg_tiny", 64, 3);
+    let mut block = |m: &mut Model, idx: usize, ch: usize, convs: usize| {
+        for c in 0..convs {
+            m.push(Layer::conv(&format!("conv{idx}_{c}"), 3, 1, 1, ch));
+        }
+        m.push(Layer::maxpool(&format!("pool{idx}"), 2, 2));
+    };
+    block(&mut m, 1, 16, 2);
+    block(&mut m, 2, 32, 2);
+    block(&mut m, 3, 64, 3);
+    block(&mut m, 4, 128, 3);
+    m.push(Layer::dense("fc1", 128));
+    m.push(Layer::dense("fc2", 10));
+    m
+}
+
+/// Every model in the zoo, for CLI listing and sweep harnesses.
+pub fn all_models() -> Vec<Model> {
+    vec![
+        running_example(),
+        mobilenet_v1(25),
+        mobilenet_v1(50),
+        mobilenet_v1(75),
+        mobilenet_v1(100),
+        resnet18(),
+        jsc_mlp(),
+        digits_cnn(),
+        lenet5(),
+        vgg_tiny(),
+    ]
+}
+
+/// Look a zoo model up by name (used by the CLI).
+pub fn by_name(name: &str) -> Option<Model> {
+    match name {
+        "running_example" | "running" => Some(running_example()),
+        "mobilenet_v1_a25" | "mobilenet0.25" => Some(mobilenet_v1(25)),
+        "mobilenet_v1_a50" | "mobilenet0.5" => Some(mobilenet_v1(50)),
+        "mobilenet_v1_a75" | "mobilenet0.75" => Some(mobilenet_v1(75)),
+        "mobilenet_v1_a100" | "mobilenet1.0" | "mobilenet" => Some(mobilenet_v1(100)),
+        "resnet18" => Some(resnet18()),
+        "jsc_mlp" | "jsc" => Some(jsc_mlp()),
+        "digits_cnn" | "digits" => Some(digits_cnn()),
+        "lenet5" | "lenet" => Some(lenet5()),
+        "vgg_tiny" | "vgg" => Some(vgg_tiny()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Shape;
+
+    #[test]
+    fn mobilenet_output_shapes() {
+        for alpha in [25, 50, 75, 100] {
+            let m = mobilenet_v1(alpha);
+            let out = m.output_shape().unwrap();
+            assert_eq!(out, Shape { f: 1, d: 1000 }, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn mobilenet_spatial_progression() {
+        let m = mobilenet_v1(100);
+        let shapes = m.shapes().unwrap();
+        // conv1: 224 -> 112; final dw block output must be 7x7 before pool.
+        assert_eq!(shapes[0].output.f, 112);
+        let before_pool = shapes[shapes.len() - 3].output;
+        assert_eq!(before_pool.f, 7);
+        assert_eq!(before_pool.d, 1024);
+    }
+
+    #[test]
+    fn mobilenet_param_counts_match_table_viii() {
+        // Table VIII Param. column: 470k / 1.3M / 2.6M / 4.2M.
+        let p25 = mobilenet_v1(25).param_count().unwrap();
+        let p50 = mobilenet_v1(50).param_count().unwrap();
+        let p75 = mobilenet_v1(75).param_count().unwrap();
+        let p100 = mobilenet_v1(100).param_count().unwrap();
+        assert!((460_000..=480_000).contains(&p25), "a=0.25: {p25}");
+        assert!((1_250_000..=1_400_000).contains(&p50), "a=0.5: {p50}");
+        assert!((2_500_000..=2_700_000).contains(&p75), "a=0.75: {p75}");
+        assert!((4_100_000..=4_300_000).contains(&p100), "a=1.0: {p100}");
+    }
+
+    #[test]
+    fn resnet18_shapes_and_params() {
+        let m = resnet18();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 1000 });
+        // Table VIII: 11.7M parameters.
+        let p = m.param_count().unwrap();
+        assert!((11_100_000..=12_000_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn resnet18_has_8_residual_blocks() {
+        let m = resnet18();
+        let res = m
+            .blocks
+            .iter()
+            .filter(|b| matches!(b, Block::Residual { .. }))
+            .count();
+        assert_eq!(res, 8);
+    }
+
+    #[test]
+    fn jsc_mlp_structure() {
+        let m = jsc_mlp();
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!(shapes[0].input.features(), 16);
+        assert_eq!(m.output_shape().unwrap().d, 5);
+        // 16*16+16 + 16*16+16 + 16*5+5 = 629 params
+        assert_eq!(m.param_count().unwrap(), 629);
+    }
+
+    #[test]
+    fn alpha_scaling() {
+        assert_eq!(scale(64, 25), 16);
+        assert_eq!(scale(1024, 75), 768);
+        assert_eq!(scale(32, 50), 16);
+        assert_eq!(scale(1, 25), 1); // floor at 1
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in all_models() {
+            assert!(by_name(&m.name).is_some(), "{} not resolvable", m.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn lenet5_shapes() {
+        let m = lenet5();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+        // Classic LeNet-5 parameter count ~61.7k (with conv C5 as conv).
+        let p = m.param_count().unwrap();
+        assert!((55_000..70_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn vgg_tiny_rate_progression() {
+        use crate::flow::analyze;
+        let m = vgg_tiny();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+        // Every pooling stage divides the rate by 4; convs multiply by the
+        // channel expansion. No layer should stall at full input rate.
+        let a = analyze(&m, None).unwrap();
+        for l in &a.layers {
+            assert!(!l.r_out.is_zero());
+        }
+    }
+
+    #[test]
+    fn digits_cnn_small() {
+        let m = digits_cnn();
+        let p = m.param_count().unwrap();
+        assert!(p < 2000, "digits cnn should stay tiny, got {p}");
+        assert_eq!(m.output_shape().unwrap().d, 10);
+    }
+}

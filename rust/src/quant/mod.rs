@@ -1,0 +1,294 @@
+//! 8-bit fixed-point quantization substrate (system S7), bit-for-bit
+//! compatible with `python/compile/quantize.py`.
+//!
+//! Scheme: symmetric per-tensor int8 (zero point 0, clamp ±127), integer
+//! accumulators, bias at accumulator scale, and requantization through a
+//! single f32 multiplier with round-half-away-from-zero:
+//!
+//! ```text
+//! y_q = clamp( half_away_round( (acc as f32) * m ), -127, 127 )
+//! ```
+//!
+//! Both sides use identical f32 operations (|acc| < 2^24 is asserted at
+//! export), so the rust pipeline simulator and the JAX int8 golden model
+//! must agree *exactly* — integration tests require equality.
+
+use crate::util::json::Json;
+
+pub const QMAX: i64 = 127;
+
+/// Round half away from zero in f32, matching
+/// `python/compile/quantize.half_away_round`.
+#[inline]
+pub fn half_away_round(x: f32) -> f32 {
+    (x.abs() + 0.5).floor().copysign(x)
+}
+
+/// Requantize an integer accumulator to the int8 activation grid.
+#[inline]
+pub fn requant(acc: i64, m: f32) -> i64 {
+    let y = half_away_round(acc as f32 * m) as i64;
+    y.clamp(-QMAX, QMAX)
+}
+
+/// Quantize a float to the int8 grid with a given scale.
+pub fn quantize(x: f32, scale: f32) -> i64 {
+    (half_away_round(x / scale) as i64).clamp(-QMAX, QMAX)
+}
+
+/// One quantized layer loaded from `artifacts/weights/<model>.json`.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    pub name: String,
+    pub kind: QKind,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    pub relu: bool,
+    /// Quantized weights, flattened in the python export layout:
+    /// conv (k,k,Cin,Cout), dwconv (k,k,C), dense (units, feats).
+    pub w_q: Vec<i64>,
+    pub w_shape: Vec<usize>,
+    /// Accumulator-scale bias, one per output channel.
+    pub b_q: Vec<i64>,
+    /// Requant multiplier (exact f32 from the exporter).
+    pub m: f32,
+    pub in_shape: [usize; 3],
+    pub out_shape: [usize; 3],
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QKind {
+    Conv,
+    DwConv,
+    MaxPool,
+    AvgPool,
+    Dense,
+}
+
+impl QKind {
+    fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "conv" => QKind::Conv,
+            "dwconv" => QKind::DwConv,
+            "maxpool" => QKind::MaxPool,
+            "avgpool" => QKind::AvgPool,
+            "dense" => QKind::Dense,
+            other => return Err(format!("unknown layer kind '{other}'")),
+        })
+    }
+}
+
+/// A quantized model plus its exporter-provided test vectors.
+#[derive(Debug, Clone)]
+pub struct QModel {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub input_scale: f32,
+    pub layers: Vec<QLayer>,
+    pub test_vectors: Vec<TestVector>,
+    pub qat_accuracy: f64,
+}
+
+/// One exporter test vector: quantized input and expected final-layer
+/// accumulator-scale outputs.
+#[derive(Debug, Clone)]
+pub struct TestVector {
+    pub x_q: Vec<i64>,
+    pub y: Vec<i64>,
+}
+
+fn shape3(j: &Json, key: &str) -> Result<[usize; 3], String> {
+    let arr = j
+        .get(key)
+        .as_arr()
+        .ok_or_else(|| format!("missing {key}"))?;
+    if arr.len() != 3 {
+        return Err(format!("{key} must have 3 dims"));
+    }
+    let mut out = [0usize; 3];
+    for (i, v) in arr.iter().enumerate() {
+        out[i] = v.as_usize().ok_or_else(|| format!("bad {key}[{i}]"))?;
+    }
+    Ok(out)
+}
+
+fn int_vec(j: &Json, key: &str) -> Vec<i64> {
+    j.get(key)
+        .as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as i64).collect())
+        .unwrap_or_default()
+}
+
+impl QModel {
+    /// Parse the exporter's JSON manifest.
+    pub fn from_json(text: &str) -> Result<QModel, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let name = j.get("name").as_str().unwrap_or("model").to_string();
+        let input_shape = shape3(&j, "input_shape")?;
+        let input_scale = j
+            .get("input_scale")
+            .as_f64()
+            .ok_or("missing input_scale")? as f32;
+        let mut layers = Vec::new();
+        for lj in j.get("layers").as_arr().ok_or("missing layers")? {
+            let kind = QKind::parse(lj.get("kind").as_str().ok_or("layer missing kind")?)?;
+            let w_shape: Vec<usize> = lj
+                .get("w_shape")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default();
+            layers.push(QLayer {
+                name: lj.get("name").as_str().unwrap_or("?").to_string(),
+                kind,
+                k: lj.get("k").as_usize().unwrap_or(0),
+                s: lj.get("s").as_usize().unwrap_or(1),
+                p: lj.get("p").as_usize().unwrap_or(0),
+                relu: lj.get("relu").as_bool().unwrap_or(false),
+                w_q: int_vec(lj, "w_q"),
+                w_shape,
+                b_q: int_vec(lj, "b_q"),
+                m: lj.get("m").as_f64().unwrap_or(0.0) as f32,
+                in_shape: shape3(lj, "in_shape")?,
+                out_shape: shape3(lj, "out_shape")?,
+            });
+        }
+        let mut test_vectors = Vec::new();
+        if let Some(vs) = j.get("test_vectors").as_arr() {
+            for v in vs {
+                test_vectors.push(TestVector {
+                    x_q: int_vec(v, "x_q"),
+                    y: int_vec(v, "y"),
+                });
+            }
+        }
+        Ok(QModel {
+            name,
+            input_shape,
+            input_scale,
+            layers,
+            test_vectors,
+            qat_accuracy: j.get("qat_accuracy").as_f64().unwrap_or(f64::NAN),
+        })
+    }
+
+    /// Load from `artifacts/weights/<name>.json`.
+    pub fn load(path: &std::path::Path) -> Result<QModel, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Conv weight accessor: w[(u, v, cin, cout)].
+    pub fn conv_w(l: &QLayer, u: usize, v: usize, cin: usize, cout: usize) -> i64 {
+        let (k, ci, co) = (l.w_shape[0], l.w_shape[2], l.w_shape[3]);
+        debug_assert_eq!(l.w_shape[0], l.w_shape[1]);
+        l.w_q[((u * k + v) * ci + cin) * co + cout]
+    }
+
+    /// Depthwise weight accessor: w[(u, v, c)].
+    pub fn dw_w(l: &QLayer, u: usize, v: usize, c: usize) -> i64 {
+        let (k, ch) = (l.w_shape[0], l.w_shape[2]);
+        l.w_q[(u * k + v) * ch + c]
+    }
+
+    /// Dense weight accessor: w[(unit, feat)].
+    pub fn dense_w(l: &QLayer, unit: usize, feat: usize) -> i64 {
+        l.w_q[unit * l.w_shape[1] + feat]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_away_matches_python_semantics() {
+        for (x, want) in [
+            (-2.5f32, -3.0f32),
+            (-1.5, -2.0),
+            (-0.5, -1.0),
+            (0.5, 1.0),
+            (1.5, 2.0),
+            (2.5, 3.0),
+            (0.49, 0.0),
+        ] {
+            assert_eq!(half_away_round(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn requant_clamps() {
+        assert_eq!(requant(1_000_000, 1.0), 127);
+        assert_eq!(requant(-1_000_000, 1.0), -127);
+        assert_eq!(requant(100, 0.5), 50);
+        assert_eq!(requant(101, 0.5), 51); // 50.5 rounds away
+        assert_eq!(requant(-101, 0.5), -51);
+    }
+
+    #[test]
+    fn parse_minimal_model() {
+        let text = r#"{
+            "name": "t", "input_shape": [2,2,1], "input_scale": 0.5,
+            "qat_accuracy": 0.9,
+            "layers": [{
+                "name": "d", "kind": "dense", "k": 0, "s": 1, "p": 0,
+                "relu": false, "w_shape": [2, 4],
+                "w_q": [1,2,3,4,5,6,7,8], "b_q": [0, 1], "m": 0.01,
+                "in_shape": [1,1,4], "out_shape": [1,1,2]
+            }],
+            "test_vectors": [{"x_q": [1,2,3,4], "y": [30, 71]}]
+        }"#;
+        let m = QModel::from_json(text).unwrap();
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.layers[0].kind, QKind::Dense);
+        assert_eq!(QModel::dense_w(&m.layers[0], 1, 2), 7);
+        assert_eq!(m.test_vectors[0].y, vec![30, 71]);
+    }
+
+    #[test]
+    fn conv_weight_indexing() {
+        // w (k,k,cin,cout) = (2,2,1,2), flat row-major.
+        let l = QLayer {
+            name: "c".into(),
+            kind: QKind::Conv,
+            k: 2,
+            s: 1,
+            p: 0,
+            relu: false,
+            w_q: (0..8).collect(),
+            w_shape: vec![2, 2, 1, 2],
+            b_q: vec![0, 0],
+            m: 1.0,
+            in_shape: [3, 3, 1],
+            out_shape: [2, 2, 2],
+        };
+        assert_eq!(QModel::conv_w(&l, 0, 0, 0, 0), 0);
+        assert_eq!(QModel::conv_w(&l, 0, 0, 0, 1), 1);
+        assert_eq!(QModel::conv_w(&l, 0, 1, 0, 0), 2);
+        assert_eq!(QModel::conv_w(&l, 1, 1, 0, 1), 7);
+    }
+
+    #[test]
+    fn quantize_roundtrip_grid() {
+        for q in [-127i64, -3, 0, 5, 127] {
+            assert_eq!(quantize(q as f32 * 0.25, 0.25), q);
+        }
+    }
+
+    #[test]
+    fn load_exported_digits_model_if_present() {
+        // Integration: parse the real artifact when `make artifacts` ran.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights/digits.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = QModel::load(&path).unwrap();
+        assert_eq!(m.input_shape, [12, 12, 1]);
+        assert_eq!(m.layers.len(), 5);
+        assert!(!m.test_vectors.is_empty());
+        assert!(m.qat_accuracy > 0.9);
+    }
+}

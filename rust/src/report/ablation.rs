@@ -1,0 +1,193 @@
+//! Ablation studies for the design choices DESIGN.md calls out — each
+//! isolates one mechanism of the paper and quantifies what it buys.
+//!
+//! 1. [`interleaving_ablation`] — reconfigurable shared units (Section
+//!    IV-C) vs. naive replication at the same input rate: the
+//!    arithmetic-for-multiplexers trade at every data rate.
+//! 2. [`padding_ablation`] — implicit zero padding (Fig. 4) vs. the
+//!    conventional explicit zero feed: cycles per frame and the
+//!    throughput the masking trick recovers (Section III-B).
+//! 3. [`aggregation_ablation`] — the FCU input aggregation factor a
+//!    (Eq. 15): how widening the batch trades FCU count against buffer
+//!    registers and fill latency.
+
+use crate::complexity::{layer_cost, CostOpts};
+use crate::flow::{plan_layer, PlannedLayer, Ratio, UnitPlan};
+use crate::util::Table;
+
+/// Ablation 1: interleaving on/off for a conv layer across data rates.
+///
+/// "Off" keeps one kernel per KPU (the unrolled mapping) while the input
+/// rate drops — units idle 1 - r/d of the time. "On" is the paper's plan.
+pub fn interleaving_ablation(f: usize, k: usize, d_in: usize, d_out: usize) -> Table {
+    let mut t = Table::new(
+        format!("Ablation: interleaving vs replication (conv f={f},k={k},{d_in}->{d_out})"),
+        &[
+            "r_in", "KPUs off", "KPUs on", "Mul off", "Mul on", "MUX on", "util off",
+            "util on",
+        ],
+    );
+    let mut r = Ratio::int(d_in as u64);
+    for _ in 0..6 {
+        let on = crate::report::synthetic_conv_layer(f, k, (k - 1) / 2, d_in, d_out, r);
+        let cost_on = layer_cost(&on, CostOpts::LAYER_ONLY);
+        // Replication baseline: force the full-rate plan (C = 1) but feed
+        // it at rate r -> utilisation r / d_in.
+        let mut forced = on.rated.clone();
+        forced.r_in = Ratio::int(d_in as u64);
+        let off = plan_layer(&forced);
+        let cost_off = layer_cost(&off, CostOpts::LAYER_ONLY);
+        let util_off = r.to_f64() / d_in as f64;
+        let util_on = if on.plan.stalled() {
+            (d_in * d_out) as f64 / (on.plan.unit_count() * r.ceil_div_into(d_in as u64) as usize) as f64
+        } else {
+            1.0
+        };
+        t.row(&[
+            r.paper(),
+            cost_off.kpus.to_string(),
+            cost_on.kpus.to_string(),
+            cost_off.multipliers.to_string(),
+            cost_on.multipliers.to_string(),
+            cost_on.mux2.to_string(),
+            format!("{:.0}%", util_off * 100.0),
+            format!("{:.0}%", util_on.min(1.0) * 100.0),
+        ]);
+        r = r.div_int(2);
+    }
+    t.footnote("off = one kernel per unit at full parallelism (idle when r < d);");
+    t.footnote("on  = the paper's interleaved plan (busy every cycle).");
+    t
+}
+
+/// Ablation 2: implicit vs explicit zero padding, per Section III-B.
+///
+/// Explicit padding widens the input stream to (f+2p)^2 cycles per frame
+/// and breaks input continuity; implicit padding keeps f^2 data cycles
+/// plus the shared p*f+p inter-frame zero rows.
+pub fn padding_ablation() -> Table {
+    let mut t = Table::new(
+        "Ablation: implicit vs explicit zero padding (cycles per frame, s=1)",
+        &[
+            "f", "k", "p", "explicit", "implicit", "speedup", "extra MUX2/KPU",
+        ],
+    );
+    for (f, k) in [(5usize, 3usize), (12, 3), (24, 5), (28, 7), (112, 3)] {
+        let p = (k - 1) / 2;
+        let explicit = (f + 2 * p) * (f + 2 * p);
+        let implicit = f * f + p * f + p;
+        // The masking hardware: one AND-mask (~1 LUT-mux eq.) per
+        // multiplier column select line, k selects per KPU.
+        t.row(&[
+            f.to_string(),
+            k.to_string(),
+            p.to_string(),
+            explicit.to_string(),
+            implicit.to_string(),
+            format!("{:.3}x", explicit as f64 / implicit as f64),
+            k.to_string(),
+        ]);
+    }
+    t.footnote("explicit = conventional zero-fed stream (f+2p)^2;");
+    t.footnote("implicit = Fig. 4 masking: f^2 + p*f + p shared inter-frame rows.");
+    t
+}
+
+/// Ablation 3: FCU aggregation factor a (Eq. 15) on a low-rate dense
+/// layer (r = 1): each doubling of a halves the FCU count while growing
+/// the aggregation buffer and the fill latency.
+pub fn aggregation_ablation(d_in: usize, d_out: usize) -> Table {
+    let mut t = Table::new(
+        format!("Ablation: FCU aggregation a (dense {d_in}->{d_out}, r=1)"),
+        &["a", "j", "h", "FCUs", "Mul", "Reg (FCU+agg)", "fill latency (cycles)"],
+    );
+    for a in [1usize, 2, 4, 8] {
+        if a > d_in {
+            break;
+        }
+        // Aggregated rate: a inputs over a cycles (Eq. 15).
+        let j = a;
+        let h_cap = a;
+        let h = crate::util::greatest_divisor_leq(d_out, h_cap);
+        let fcus = d_out.div_ceil(h);
+        let configs = (h * d_in).div_ceil(j);
+        let unit = crate::complexity::fcu_cost(j, h, configs);
+        let agg = crate::complexity::aggregator_cost(1, a);
+        let mul = unit.multipliers * fcus as u64;
+        let reg = unit.registers * fcus as u64 + agg.registers;
+        // Fill: all inputs arrive over d_in cycles; aggregation adds a-1
+        // cycles before the first wide batch, as in Table IV.
+        let latency = d_in + (a - 1) + h;
+        t.row(&[
+            a.to_string(),
+            j.to_string(),
+            h.to_string(),
+            fcus.to_string(),
+            mul.to_string(),
+            reg.to_string(),
+            latency.to_string(),
+        ]);
+    }
+    t.footnote("Paper Section III-E: aggregation keeps h above the adder pipeline");
+    t.footnote("depth at a small latency cost (Table IV: +1 cycle for a=4).");
+    t
+}
+
+/// Render all three studies (CLI `cnn-flow ablation`).
+pub fn all_ablations() -> Vec<Table> {
+    vec![
+        interleaving_ablation(28, 7, 8, 16),
+        padding_ablation(),
+        aggregation_ablation(256, 10),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleaving_keeps_mults_proportional_to_rate() {
+        let t = interleaving_ablation(28, 7, 8, 16);
+        assert_eq!(t.rows.len(), 6);
+        // Off column constant (replication); On column halves per row.
+        let off: Vec<u64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(off.windows(2).all(|w| w[0] == w[1]));
+        let on: Vec<u64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+        for pair in on.windows(2) {
+            assert!(pair[1] <= pair[0]);
+        }
+        // At the lowest rate the saving is >= 16x.
+        assert!(off[5] / on[5].max(1) >= 16);
+    }
+
+    #[test]
+    fn implicit_padding_always_faster() {
+        let t = padding_ablation();
+        for row in &t.rows {
+            let explicit: f64 = row[3].parse().unwrap();
+            let implicit: f64 = row[4].parse().unwrap();
+            assert!(explicit > implicit, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn aggregation_halves_fcus() {
+        let t = aggregation_ablation(256, 10);
+        let fcus: Vec<u64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(fcus.windows(2).all(|w| w[1] <= w[0]));
+        // a=1 -> one neuron per FCU -> 10 FCUs; a=2 -> h=2 -> 5 FCUs.
+        assert_eq!(fcus[0], 10);
+        assert_eq!(fcus[1], 5);
+        // Latency grows only by a-1 + (h-1) cycles.
+        let lat: Vec<u64> = t.rows.iter().map(|r| r[6].parse().unwrap()).collect();
+        assert!(lat[3] - lat[0] <= 16);
+    }
+
+    #[test]
+    fn all_ablations_render() {
+        for t in all_ablations() {
+            assert!(!t.render().is_empty());
+        }
+    }
+}

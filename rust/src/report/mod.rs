@@ -1,0 +1,93 @@
+//! Paper-table and figure generators (system S11).
+//!
+//! Every table and figure of the paper's evaluation has a generator here
+//! that prints the same rows the paper reports, from this crate's own
+//! models — see DESIGN.md §5 for the experiment index. The CLI exposes
+//! them as `cnn-flow table <n>` / `cnn-flow fig 13`.
+
+pub mod ablation;
+pub mod synthesis;
+pub mod tables;
+pub mod timing;
+
+use crate::complexity::{layer_cost, CostOpts, Resources};
+use crate::flow::{plan_layer, PlannedLayer, RatedLayer, Ratio};
+use crate::model::{Layer, LayerKind, Shape, ShapedLayer};
+
+/// Build a standalone rated+planned convolutional layer, for the layer-in-
+/// isolation sweeps of Tables VI and VII.
+pub fn synthetic_conv_layer(
+    f: usize,
+    k: usize,
+    p: usize,
+    d_in: usize,
+    d_out: usize,
+    r_in: Ratio,
+) -> PlannedLayer {
+    synthetic_layer(Layer::conv("conv", k, 1, p, d_out), f, d_in, r_in)
+}
+
+/// Build a standalone rated+planned layer of any kind.
+pub fn synthetic_layer(layer: Layer, f: usize, d_in: usize, r_in: Ratio) -> PlannedLayer {
+    let mut layer = layer;
+    if layer.filters == 0 {
+        layer.filters = d_in;
+    }
+    let input = Shape { f, d: d_in };
+    let output = crate::model::layer_output_shape(&layer, input).expect("valid synthetic layer");
+    let d_in_eff = match layer.kind {
+        LayerKind::Dense => input.features(),
+        _ => input.d,
+    };
+    let r_out = crate::flow::layer_rate(d_in_eff, output.d, layer.s, r_in);
+    plan_layer(&RatedLayer {
+        shaped: ShapedLayer {
+            layer,
+            input,
+            output,
+            merges: false,
+        },
+        r_in,
+        r_out,
+    })
+}
+
+/// Cost of a depthwise-separable convolution (depthwise conv + pointwise
+/// conv) in isolation, as swept by Table VII. Bias and interleaving are
+/// excluded, matching the table's accounting.
+pub fn dw_separable_cost(
+    f: usize,
+    k: usize,
+    p: usize,
+    d_in: usize,
+    d_out: usize,
+    r_in: Ratio,
+) -> Resources {
+    let dw = synthetic_layer(Layer::dwconv("dw", k, 1, p), f, d_in, r_in);
+    let dw_cost = layer_cost(&dw, CostOpts::LAYER_ONLY);
+    let pw = synthetic_layer(Layer::pwconv("pw", d_out), f, d_in, dw.rated.r_out);
+    let pw_cost = layer_cost(&pw, CostOpts::LAYER_ONLY);
+    let mut total = dw_cost;
+    total.add(&pw_cost);
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_conv_shapes() {
+        let pl = synthetic_conv_layer(28, 7, 3, 8, 16, Ratio::int(8));
+        assert_eq!(pl.rated.shaped.output.f, 28);
+        assert_eq!(pl.rated.d_out(), 16);
+        assert_eq!(pl.plan.unit_count(), 128);
+    }
+
+    #[test]
+    fn synthetic_dense_layer() {
+        let pl = synthetic_layer(Layer::dense("d", 5), 1, 16, Ratio::int(16));
+        assert_eq!(pl.rated.d_in(), 16);
+        assert_eq!(pl.rated.d_out(), 5);
+    }
+}

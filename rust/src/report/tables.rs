@@ -1,0 +1,270 @@
+//! Generators for the complexity tables: Table V (running example),
+//! Table VI (conv-layer rate sweep), Table VII (depthwise-separable rate
+//! sweep) and Table VIII (model comparison vs fully parallel).
+
+use super::{dw_separable_cost, synthetic_conv_layer};
+use crate::complexity::{
+    layer_cost, model_cost, parallel::fully_parallel_cost, CostOpts, Resources,
+};
+use crate::flow::{analyze, plan_all, Ratio};
+use crate::model::{zoo, Model};
+use crate::util::{paper_count, Table};
+
+/// Table V: structure and per-layer analysis of the running example.
+pub fn table5() -> Table {
+    let model = zoo::running_example();
+    let analysis = analyze(&model, None).unwrap();
+    let plans = plan_all(&analysis);
+    // Table V excludes interleaving FIFO costs from the per-layer cells.
+    let opts = CostOpts {
+        include_bias: true,
+        include_interleaving: false,
+    };
+    let mut t = Table::new(
+        "Table V: structure and analysis of the running example",
+        &[
+            "Layer", "Input", "f", "k", "s", "p", "d_l", "C", "r_l", "Add.", "Mul.", "Reg.",
+            "2:1 MUX", "MAX", "KPU", "FCU", "PPU",
+        ],
+    );
+    let mut total = Resources::default();
+    for pl in &plans {
+        let r = layer_cost(pl, opts);
+        total.add(&r);
+        let l = &pl.rated.shaped.layer;
+        let input = pl.rated.shaped.input;
+        t.row(&[
+            l.name.clone(),
+            format!("({},{},{})", input.f, input.f, input.d),
+            format!("{}", if l.kind == crate::model::LayerKind::Dense { 4 } else { input.f }),
+            format!("{}", if l.k == 0 { 4 } else { l.k }),
+            format!("{}", l.s),
+            format!("{}", l.p),
+            format!("{}", pl.rated.d_out()),
+            format!("{}", pl.plan.configs()),
+            pl.rated.r_out.paper(),
+            paper_count(r.adders),
+            paper_count(r.multipliers),
+            paper_count(r.registers),
+            paper_count(r.mux2),
+            paper_count(r.max_units),
+            paper_count(r.kpus),
+            paper_count(r.fcus),
+            paper_count(r.ppus),
+        ]);
+    }
+    t.row(&[
+        "Sum.".to_string(),
+        format!("params={}", paper_count(model.param_count().unwrap())),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        paper_count(total.adders),
+        paper_count(total.multipliers),
+        paper_count(total.registers),
+        paper_count(total.mux2),
+        paper_count(total.max_units),
+        paper_count(total.kpus),
+        paper_count(total.fcus),
+        paper_count(total.ppus),
+    ]);
+    t
+}
+
+/// The data-rate sweep used by Tables VI and VII.
+pub fn rate_sweep() -> Vec<Ratio> {
+    vec![
+        Ratio::int(8),
+        Ratio::int(4),
+        Ratio::int(2),
+        Ratio::int(1),
+        Ratio::new(1, 2),
+        Ratio::new(1, 4),
+        Ratio::new(1, 8),
+        Ratio::new(1, 16),
+        Ratio::new(1, 32),
+    ]
+}
+
+/// Table VI: convolutional layer (f=28, k=7, p=3, 8->16 channels) swept
+/// over input data rates.
+pub fn table6() -> Table {
+    let mut t = Table::new(
+        "Table VI: conv layer resources vs input data rate (f=28,k=7,p=3,8->16)",
+        &["r_{l-1}", "Add.", "Mul.", "Reg.", "2:1 MUX", "KPUs"],
+    );
+    for r in rate_sweep() {
+        let pl = synthetic_conv_layer(28, 7, 3, 8, 16, r);
+        let cost = layer_cost(&pl, CostOpts::LAYER_ONLY);
+        let stall = if pl.plan.stalled() { "*" } else { "" };
+        t.row(&[
+            format!("{}{stall}", r.paper()),
+            cost.adders.to_string(),
+            cost.multipliers.to_string(),
+            format!("{}", cost.registers),
+            cost.mux2.to_string(),
+            cost.kpus.to_string(),
+        ]);
+    }
+    t.footnote("*The input data rate leads to a stall.");
+    t
+}
+
+/// Table VII: depthwise-separable layer (same geometry) swept over rates.
+pub fn table7() -> Table {
+    let mut t = Table::new(
+        "Table VII: depthwise-separable conv resources vs input data rate",
+        &["r_{l-1}", "Add.", "Mul.", "Reg.", "2:1 MUX", "KPUs", "FCUs"],
+    );
+    for r in rate_sweep().into_iter().take(6) {
+        let cost = dw_separable_cost(28, 7, 3, 8, 16, r);
+        let pl = super::synthetic_layer(
+            crate::model::Layer::dwconv("dw", 7, 1, 3),
+            28,
+            8,
+            r,
+        );
+        let stall = if pl.plan.stalled() { "*" } else { "" };
+        t.row(&[
+            format!("{}{stall}", r.paper()),
+            cost.adders.to_string(),
+            cost.multipliers.to_string(),
+            cost.registers.to_string(),
+            cost.mux2.to_string(),
+            cost.kpus.to_string(),
+            cost.fcus.to_string(),
+        ]);
+    }
+    t.footnote("*The input data rate leads to a stall.");
+    t
+}
+
+/// One model's Ref./Ours pair for Table VIII.
+pub struct ModelComparison {
+    pub name: String,
+    pub params: u64,
+    pub reference: Resources,
+    pub ours: Resources,
+}
+
+/// Compare the continuous-flow implementation against the fully-parallel
+/// reference for one model.
+pub fn compare_model(model: &Model) -> ModelComparison {
+    let analysis = analyze(model, None).unwrap();
+    let ours = model_cost(&plan_all(&analysis), CostOpts::FULL).total;
+    let reference = fully_parallel_cost(&analysis, CostOpts::FULL).total;
+    ModelComparison {
+        name: model.name.clone(),
+        params: model.param_count().unwrap(),
+        reference,
+        ours,
+    }
+}
+
+/// Table VIII: fully-parallel vs continuous-flow for the paper's models.
+pub fn table8() -> Table {
+    let mut t = Table::new(
+        "Table VIII: fully parallel (Ref.) vs continuous flow (Ours)",
+        &[
+            "Model", "Param.", "Imp.", "Add.", "Mul.", "Reg.", "2:1 MUX", "KPUs", "FCUs",
+        ],
+    );
+    let models = vec![
+        zoo::running_example(),
+        zoo::mobilenet_v1(25),
+        zoo::mobilenet_v1(50),
+        zoo::mobilenet_v1(75),
+        zoo::mobilenet_v1(100),
+        zoo::resnet18(),
+    ];
+    for m in models {
+        let c = compare_model(&m);
+        for (imp, r) in [("Ref.", &c.reference), ("Ours", &c.ours)] {
+            t.row(&[
+                if imp == "Ref." { c.name.clone() } else { String::new() },
+                if imp == "Ref." {
+                    paper_count(c.params)
+                } else {
+                    String::new()
+                },
+                imp.to_string(),
+                paper_count(r.adders),
+                paper_count(r.multipliers),
+                paper_count(r.registers),
+                paper_count(r.mux2),
+                paper_count(r.kpus),
+                paper_count(r.fcus),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_renders_all_layers() {
+        let t = table5();
+        assert_eq!(t.rows.len(), 6); // 5 layers + sum
+        let s = t.render();
+        assert!(s.contains("C1"));
+        assert!(s.contains("4/9")); // P2 rate
+        assert!(s.contains("Sum."));
+    }
+
+    #[test]
+    fn table6_shape_matches_paper() {
+        let t = table6();
+        assert_eq!(t.rows.len(), 9);
+        // First row fully parallel: 6272 adders, 128 KPUs.
+        assert_eq!(t.rows[0][1], "6272");
+        assert_eq!(t.rows[0][5], "128");
+        // Last row stalls.
+        assert!(t.rows[8][0].ends_with('*'));
+        // Registers constant across the sweep.
+        for row in &t.rows {
+            assert_eq!(row[3], "22288");
+        }
+    }
+
+    #[test]
+    fn table7_fcus_shrink_below_rate_1() {
+        let t = table7();
+        assert_eq!(t.rows.len(), 6);
+        assert_eq!(t.rows[0][6], "16");
+        assert_eq!(t.rows[4][6], "8");
+        assert_eq!(t.rows[5][6], "4");
+    }
+
+    #[test]
+    fn table8_savings_order_of_magnitude() {
+        // MobileNet a=1.0: Ref 4.3M mults vs Ours 12.2k (paper) — ours
+        // must come out orders of magnitude below the reference.
+        let c = compare_model(&zoo::mobilenet_v1(100));
+        assert!(c.reference.multipliers > 4_000_000);
+        assert!(c.ours.multipliers < 100_000);
+        let factor = c.reference.multipliers as f64 / c.ours.multipliers as f64;
+        assert!(factor > 100.0, "saving factor {factor}");
+    }
+
+    #[test]
+    fn table8_registers_invariant() {
+        // "the number of registers does not change when our continuous-flow
+        // approach is applied" (within rounding-induced slack).
+        for m in [zoo::running_example(), zoo::mobilenet_v1(100)] {
+            let c = compare_model(&m);
+            let ratio = c.ours.registers as f64 / c.reference.registers as f64;
+            assert!(
+                (0.95..=1.15).contains(&ratio),
+                "{}: reg ratio {ratio}",
+                c.name
+            );
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Generators for the timing tables (Tables I-IV) — thin wrappers over
+//! [`crate::sim::trace`], which both emits and oracle-verifies the traces.
+
+use crate::sim::trace::{render_kpu_trace, trace_fcu, trace_kpu, verify_kpu_trace, KpuTraceCfg};
+use crate::util::Table;
+
+/// Table I: KPU timing for a 5x5 feature map with a 3x3 kernel, no padding.
+pub fn table1() -> Table {
+    let trace = trace_kpu(KpuTraceCfg {
+        f: 5,
+        k: 3,
+        p: 0,
+        s: 1,
+        cycles: 25,
+    });
+    verify_kpu_trace(&trace).expect("table I trace failed oracle check");
+    render_kpu_trace(
+        &trace,
+        "Table I: KPU timing, 5x5 feature map, 3x3 kernel (no padding)",
+    )
+}
+
+/// Table II: KPU timing with implicit zero padding p=1.
+pub fn table2() -> Table {
+    let trace = trace_kpu(KpuTraceCfg {
+        f: 5,
+        k: 3,
+        p: 1,
+        s: 1,
+        cycles: 37,
+    });
+    verify_kpu_trace(&trace).expect("table II trace failed oracle check");
+    render_kpu_trace(
+        &trace,
+        "Table II: KPU timing with implicit zero padding p=1 (5x5 map, 3x3 kernel)",
+    )
+}
+
+/// Table III: FCU timing with h=5 neurons, j=4 inputs, 8 input features.
+pub fn table3() -> Table {
+    let (t, _) = trace_fcu(8, 4, 5, "Table III: FCU timing, h=5, j=4, 8 inputs");
+    t
+}
+
+/// Table IV: FCU timing with aggregation (h=4, j=4, d_in=8).
+pub fn table4() -> Table {
+    let (t, _) = trace_fcu(
+        8,
+        4,
+        4,
+        "Table IV: FCU timing with aggregation a=4 (h=4, j=4, 8 inputs)",
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_timing_tables_render() {
+        for t in [
+            super::table1(),
+            super::table2(),
+            super::table3(),
+            super::table4(),
+        ] {
+            assert!(!t.rows.is_empty());
+        }
+    }
+}

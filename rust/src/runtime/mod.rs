@@ -1,0 +1,197 @@
+//! PJRT runtime (system S9): load the AOT-compiled HLO-text artifacts and
+//! execute them on the CPU PJRT client via the `xla` crate.
+//!
+//! This is the only place python-originated computation runs at serving
+//! time — and it runs as a *compiled XLA executable*, never as python.
+//! Interchange is HLO text (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos don't work with
+//! xla_extension 0.5.1).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::quant::QModel;
+
+/// A compiled model executable bound to a PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input element count expected by the HLO entry (flattened f32).
+    pub input_shape: Vec<usize>,
+}
+
+/// The runtime: one PJRT CPU client hosting any number of executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path, input_shape: &[usize]) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            input_shape: input_shape.to_vec(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute on one flattened f32 input; returns the flattened f32
+    /// output of the (single-element) result tuple.
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let n: usize = self.input_shape.iter().product();
+        anyhow::ensure!(
+            input.len() == n,
+            "input length {} != expected {n}",
+            input.len()
+        );
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> a 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Everything the serving stack needs for one model: the quantized weight
+/// manifest (drives the cycle-accurate simulator) plus the compiled int8
+/// golden executable (drives verification).
+pub struct ModelBundle {
+    pub qmodel: QModel,
+    pub golden: Executable,
+}
+
+/// Locate the artifacts directory: `$CNN_FLOW_ARTIFACTS` or
+/// `<manifest>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CNN_FLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+impl ModelBundle {
+    /// Load `<artifacts>/weights/<name>.json` + `<artifacts>/<name>_int8.hlo.txt`.
+    pub fn load(rt: &Runtime, name: &str) -> Result<ModelBundle> {
+        let dir = artifacts_dir();
+        let qmodel = QModel::load(&dir.join("weights").join(format!("{name}.json")))
+            .map_err(anyhow::Error::msg)?;
+        let golden = rt.load_hlo_text(
+            &dir.join(format!("{name}_int8.hlo.txt")),
+            &qmodel.input_shape.to_vec(),
+        )?;
+        Ok(ModelBundle { qmodel, golden })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        artifacts_dir().join("meta.json").exists()
+    }
+
+    #[test]
+    fn runtime_creates_cpu_client() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn golden_executable_matches_test_vectors() {
+        // PJRT-executed JAX int8 golden vs the exporter's recorded outputs.
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        for name in ["digits", "jsc"] {
+            let bundle = ModelBundle::load(&rt, name).unwrap();
+            for (i, tv) in bundle.qmodel.test_vectors.iter().enumerate() {
+                let x: Vec<f32> = tv.x_q.iter().map(|&v| v as f32).collect();
+                let y = bundle.golden.run_f32(&x).unwrap();
+                let y_i: Vec<i64> = y.iter().map(|&v| v as i64).collect();
+                assert_eq!(y_i, tv.y, "{name} vector {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_agrees_with_cycle_sim_on_random_inputs() {
+        // Three-way agreement beyond the exported vectors: PJRT golden ==
+        // rust pipeline sim on fresh random int8 inputs.
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let bundle = ModelBundle::load(&rt, "digits").unwrap();
+        let sim =
+            crate::sim::pipeline::PipelineSim::new(bundle.qmodel.clone(), None).unwrap();
+        let mut rng = crate::util::Rng::new(0xD161);
+        let n: usize = bundle.qmodel.input_shape.iter().product();
+        for case in 0..8 {
+            let x_q: Vec<i64> = (0..n).map(|_| rng.int8() as i64).collect();
+            let xf: Vec<f32> = x_q.iter().map(|&v| v as f32).collect();
+            let golden: Vec<i64> = bundle
+                .golden
+                .run_f32(&xf)
+                .unwrap()
+                .iter()
+                .map(|&v| v as i64)
+                .collect();
+            let simulated = sim.run(&[x_q]).unwrap().outputs[0].clone();
+            assert_eq!(simulated, golden, "case {case}");
+        }
+    }
+
+    #[test]
+    fn float_pallas_hlo_loads_and_runs() {
+        // The pallas-kernel float graph must also load and execute.
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(
+                &artifacts_dir().join("digits_float.hlo.txt"),
+                &[12, 12, 1],
+            )
+            .unwrap();
+        let y = exe.run_f32(&vec![0.5f32; 144]).unwrap();
+        assert_eq!(y.len(), 10);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let bundle = ModelBundle::load(&rt, "jsc").unwrap();
+        assert!(bundle.golden.run_f32(&[0.0; 3]).is_err());
+    }
+}

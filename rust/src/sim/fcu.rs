@@ -1,0 +1,289 @@
+//! Structural, cycle-accurate fully connected unit (FCU) — Fig. 6 — and
+//! the input aggregation circuit of Fig. 7.
+//!
+//! An FCU computes `h` neurons over `d_in` input features, taking `j`
+//! features per batch. A batch is held at the inputs for `h` consecutive
+//! cycles while the weight ROM steps through one configuration per cycle;
+//! the depth-`h` accumulator FIFO (`hD` in the figure) carries each
+//! neuron's partial sum between batches (Eq. 12: C = h * d_in / j
+//! configurations in total).
+
+use super::fifo::Fifo;
+
+#[derive(Debug, Clone)]
+pub struct FcuOut {
+    /// Accumulator value read this cycle (the `q` column of Table III).
+    pub q: i64,
+    /// Combinational sum written back (the `y` column: a partial `z` or,
+    /// on the final batch, the finished neuron output).
+    pub y: i64,
+    /// Which neuron this cycle's sum belongs to.
+    pub neuron: usize,
+    /// True when `y` is the finished output of `neuron`.
+    pub valid: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fcu {
+    j: usize,
+    h: usize,
+    d_in: usize,
+    /// Weight ROM: `weights[config][m]` for m in 0..j. Config order is
+    /// neuron-major within a batch: config = batch * h + neuron.
+    weights: Vec<Vec<i64>>,
+    /// Per-neuron bias, loaded as the initial partial sum of batch 0.
+    bias: Vec<i64>,
+    acc: Fifo,
+    cycle: u64,
+}
+
+impl Fcu {
+    /// `weights.len()` must equal C = h * ceil(d_in/j).
+    pub fn new(j: usize, h: usize, d_in: usize, weights: Vec<Vec<i64>>, bias: Vec<i64>) -> Self {
+        assert!(j >= 1 && h >= 1 && d_in >= j);
+        let batches = d_in.div_ceil(j);
+        assert_eq!(weights.len(), h * batches, "need C = h * d_in/j configs");
+        for w in &weights {
+            assert_eq!(w.len(), j);
+        }
+        assert_eq!(bias.len(), h);
+        Self {
+            j,
+            h,
+            d_in,
+            weights,
+            bias,
+            acc: Fifo::new(h),
+            cycle: 0,
+        }
+    }
+
+    pub fn configs(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.d_in.div_ceil(self.j)
+    }
+
+    /// One clock cycle. `x` is the current input batch (j values); the
+    /// driver must hold each batch for `h` consecutive cycles.
+    pub fn tick(&mut self, x: &[i64]) -> FcuOut {
+        assert_eq!(x.len(), self.j);
+        let c_total = self.weights.len() as u64;
+        let cfg = (self.cycle % c_total) as usize;
+        let neuron = cfg % self.h;
+        let batch = cfg / self.h;
+        // q: bias seeds the first batch; later batches read the FIFO,
+        // which holds this neuron's partial from h cycles ago.
+        let q = if batch == 0 {
+            self.bias[neuron]
+        } else {
+            self.acc.peek()
+        };
+        let dot: i64 = self.weights[cfg]
+            .iter()
+            .zip(x.iter())
+            .map(|(w, v)| w * v)
+            .sum();
+        let y = q + dot;
+        self.acc.push(y);
+        self.cycle += 1;
+        FcuOut {
+            q: if batch == 0 { 0 } else { q },
+            y,
+            neuron,
+            valid: batch + 1 == self.batches(),
+        }
+    }
+}
+
+/// The data aggregation circuit of Fig. 7: widens a stream of `j_in`-wide
+/// groups into `a * j_in`-wide groups. The output becomes valid once every
+/// `a` pushes and then *holds* (the FCU reads it for `h` cycles).
+#[derive(Debug, Clone)]
+pub struct Aggregator {
+    a: usize,
+    j_in: usize,
+    shift: Vec<i64>,
+    latched: Vec<i64>,
+    count: usize,
+    filled: bool,
+}
+
+impl Aggregator {
+    pub fn new(j_in: usize, a: usize) -> Self {
+        assert!(a >= 1 && j_in >= 1);
+        Self {
+            a,
+            j_in,
+            shift: vec![0; j_in * a],
+            latched: vec![0; j_in * a],
+            count: 0,
+            filled: false,
+        }
+    }
+
+    /// Push one `j_in`-wide input group; returns the latched wide group
+    /// and whether it was refreshed this cycle.
+    pub fn push(&mut self, group: &[i64]) -> (&[i64], bool) {
+        assert_eq!(group.len(), self.j_in);
+        // Shift left by one group, insert at the tail (matches Fig. 7's
+        // register chain ordering: oldest group occupies the low lanes).
+        self.shift.rotate_left(self.j_in);
+        let tail = self.shift.len() - self.j_in;
+        self.shift[tail..].copy_from_slice(group);
+        self.count += 1;
+        let mut refreshed = false;
+        if self.count == self.a {
+            self.latched.copy_from_slice(&self.shift);
+            self.count = 0;
+            self.filled = true;
+            refreshed = true;
+        }
+        (&self.latched, refreshed)
+    }
+
+    pub fn filled(&self) -> bool {
+        self.filled
+    }
+}
+
+/// Dense-layer oracle: y[n] = bias[n] + sum_m x[m] * w[n][m] (Eq. 7).
+pub fn dense_oracle(x: &[i64], w: &[Vec<i64>], bias: &[i64]) -> Vec<i64> {
+    w.iter()
+        .zip(bias.iter())
+        .map(|(row, b)| b + row.iter().zip(x.iter()).map(|(wv, xv)| wv * xv).sum::<i64>())
+        .collect()
+}
+
+/// Arrange a dense layer's `[neuron][feature]` weight matrix into the FCU
+/// ROM layout `[config][lane]` for an FCU with `j` inputs and `h` neurons
+/// computing neurons `base..base+h`.
+pub fn fcu_rom(w: &[Vec<i64>], base: usize, j: usize, h: usize, d_in: usize) -> Vec<Vec<i64>> {
+    let batches = d_in.div_ceil(j);
+    let mut rom = Vec::with_capacity(h * batches);
+    for batch in 0..batches {
+        for neuron in 0..h {
+            let mut cfg = Vec::with_capacity(j);
+            for lane in 0..j {
+                let feat = batch * j + lane;
+                cfg.push(if feat < d_in { w[base + neuron][feat] } else { 0 });
+            }
+            rom.push(cfg);
+        }
+    }
+    rom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Run a full dense layer through one or more FCUs and compare with
+    /// the oracle.
+    fn run_dense(d_in: usize, d_out: usize, j: usize, h: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<i64> = (0..d_in).map(|_| rng.range(0, 40) as i64 - 20).collect();
+        let w: Vec<Vec<i64>> = (0..d_out)
+            .map(|_| (0..d_in).map(|_| rng.range(0, 10) as i64 - 5).collect())
+            .collect();
+        let bias: Vec<i64> = (0..d_out).map(|_| rng.range(0, 20) as i64 - 10).collect();
+        let expect = dense_oracle(&x, &w, &bias);
+        let fcus = d_out / h;
+        let batches = d_in.div_ceil(j);
+        for u in 0..fcus {
+            let base = u * h;
+            let rom = fcu_rom(&w, base, j, h, d_in);
+            let mut fcu = Fcu::new(j, h, d_in, rom, bias[base..base + h].to_vec());
+            let mut got = vec![None; h];
+            for batch in 0..batches {
+                let mut lane = vec![0i64; j];
+                for (m, l) in lane.iter_mut().enumerate() {
+                    let feat = batch * j + m;
+                    *l = if feat < d_in { x[feat] } else { 0 };
+                }
+                for _ in 0..h {
+                    let out = fcu.tick(&lane);
+                    if out.valid {
+                        got[out.neuron] = Some(out.y);
+                    }
+                }
+            }
+            for n in 0..h {
+                assert_eq!(got[n], Some(expect[base + n]), "fcu {u} neuron {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_iii_configuration() {
+        // h=5, j=4, d_in=8 -> C=10, outputs after the 2nd batch.
+        run_dense(8, 5, 4, 5, 1);
+    }
+
+    #[test]
+    fn f1_running_example_configuration() {
+        // F1: d_in=256, j=4, h=5, 2 FCUs, C=320.
+        run_dense(256, 10, 4, 5, 2);
+    }
+
+    #[test]
+    fn fully_parallel_fcu() {
+        // j = d_in, h = 1: one neuron per FCU, single-cycle output.
+        run_dense(16, 16, 16, 1, 3);
+    }
+
+    #[test]
+    fn random_fcu_shapes() {
+        let mut rng = Rng::new(0xFC);
+        for _ in 0..20 {
+            let j = rng.range(1, 8);
+            let batches = rng.range(1, 5);
+            let d_in = j * batches;
+            let h = rng.range(1, 6);
+            let fcus = rng.range(1, 3);
+            run_dense(d_in, h * fcus, j, h, rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn ragged_last_batch_zero_padded() {
+        // d_in = 10 with j = 4: last batch has 2 real lanes.
+        run_dense(10, 4, 4, 4, 9);
+    }
+
+    #[test]
+    fn aggregator_widens_groups() {
+        let mut agg = Aggregator::new(1, 4);
+        let mut last = Vec::new();
+        for i in 0..8i64 {
+            let (out, refreshed) = agg.push(&[i]);
+            if refreshed {
+                last = out.to_vec();
+            }
+        }
+        // After 8 pushes the latched window is [4,5,6,7].
+        assert_eq!(last, vec![4, 5, 6, 7]);
+        assert!(agg.filled());
+    }
+
+    #[test]
+    fn aggregator_holds_between_refreshes() {
+        let mut agg = Aggregator::new(2, 2);
+        agg.push(&[1, 2]);
+        let (out, r) = agg.push(&[3, 4]);
+        assert!(r);
+        assert_eq!(out, &[1, 2, 3, 4]);
+        let (held, r2) = agg.push(&[5, 6]);
+        assert!(!r2);
+        assert_eq!(held, &[1, 2, 3, 4]); // still latched
+    }
+
+    #[test]
+    fn fcu_configs_match_eq12() {
+        let rom = fcu_rom(&vec![vec![0; 256]; 5], 0, 4, 5, 256);
+        assert_eq!(rom.len(), 320); // C = 5 * 256 / 4
+    }
+}

@@ -1,0 +1,90 @@
+//! Fixed-depth shift register (the `D`, `hD` and `LD` elements of the
+//! paper's figures). Pipeline interleaving (Section IV-C) replaces every
+//! register with a depth-C FIFO, so depth is a constructor parameter.
+
+/// A shift register of fixed depth holding `i64` partial sums.
+///
+/// `push` inserts at the tail and returns the value shifted out of the
+/// head — exactly one value per clock edge, like the hardware.
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    buf: Vec<i64>,
+    head: usize,
+}
+
+impl Fifo {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0, "FIFO depth must be >= 1");
+        Self {
+            buf: vec![0; depth],
+            head: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The value that will be shifted out on the next push (combinational
+    /// read of the head register's output).
+    #[inline]
+    pub fn peek(&self) -> i64 {
+        self.buf[self.head]
+    }
+
+    /// Clock edge: shift in `v`, shift out the head.
+    #[inline]
+    pub fn push(&mut self, v: i64) -> i64 {
+        let out = self.buf[self.head];
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.buf.len();
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.buf.fill(0);
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_one_is_a_register() {
+        let mut f = Fifo::new(1);
+        assert_eq!(f.push(7), 0);
+        assert_eq!(f.push(9), 7);
+        assert_eq!(f.peek(), 9);
+    }
+
+    #[test]
+    fn depth_n_delays_by_n() {
+        let mut f = Fifo::new(3);
+        for i in 1..=10 {
+            let out = f.push(i);
+            if i > 3 {
+                assert_eq!(out, i - 3);
+            } else {
+                assert_eq!(out, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut f = Fifo::new(2);
+        f.push(5);
+        f.reset();
+        assert_eq!(f.push(1), 0);
+        assert_eq!(f.push(2), 0);
+        assert_eq!(f.push(3), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_depth_rejected() {
+        let _ = Fifo::new(0);
+    }
+}

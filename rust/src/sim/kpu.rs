@@ -1,0 +1,386 @@
+//! Structural, cycle-accurate kernel processing unit (KPU).
+//!
+//! Implements the transposed-form convolution circuit of Fig. 2 (plain),
+//! Fig. 4 (implicit zero padding via per-column masking) and Fig. 9
+//! (multi-configuration pipeline interleaving): `k*k` multipliers, a chain
+//! of `k-1` registers per row, and `k-1` line buffers of `f-k+1` stages
+//! between the rows. With `C` configurations every storage element becomes
+//! a depth-C FIFO and the weight set switches every clock cycle.
+//!
+//! One `tick` is one clock edge. The returned [`KpuOut`] carries the
+//! combinational values of the observable nodes (the `a_uv` columns of
+//! Tables I/II) *before* the edge, exactly as the paper's tables list them.
+
+use super::fifo::Fifo;
+
+/// Output of one KPU clock cycle. Borrows the KPU's scratch buffers so a
+/// tick performs no heap allocation (see EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct KpuOut<'a> {
+    /// Combinational node values, flat k*k row-major: `node(u, v)` is the
+    /// adder output at row u, tap v (a_{u+1,v+1} in Tables I/II).
+    pub nodes: &'a [i64],
+    /// The convolution output (node (k-1, k-1)).
+    pub y: i64,
+    /// Padding select signals used this cycle (`true` = pass, `false` =
+    /// masked to zero), one per multiplier column — the `Pad` column of
+    /// Table II.
+    pub pad: &'a [bool],
+}
+
+impl KpuOut<'_> {
+    /// Node value at row `u`, tap `v`.
+    #[inline]
+    pub fn node(&self, u: usize, v: usize) -> i64 {
+        let k = self.pad.len();
+        self.nodes[u * k + v]
+    }
+}
+
+/// A KPU instance.
+#[derive(Debug, Clone)]
+pub struct Kpu {
+    k: usize,
+    f: usize,
+    p: usize,
+    configs: usize,
+    /// Weight sets, one per configuration, each `k*k` row-major.
+    weights: Vec<Vec<i64>>,
+    /// Register chains inside each row: `row_regs[u][v]` delays the
+    /// partial sum between tap v and tap v+1 of row u.
+    row_regs: Vec<Vec<Fifo>>,
+    /// Line buffers between row u and u+1, depth (f-k+1)*C.
+    line_bufs: Vec<Fifo>,
+    cycle: u64,
+    /// Per-tick scratch (avoids per-tick allocation on the hot path).
+    scratch_nodes: Vec<i64>,
+    scratch_pad: Vec<bool>,
+}
+
+impl Kpu {
+    /// Build a KPU. `weights.len()` defines the configuration count C;
+    /// each set must have `k*k` entries. `p` enables implicit zero padding
+    /// (Fig. 4); `p = 0` is the plain Fig. 2 circuit.
+    pub fn new(k: usize, f: usize, p: usize, weights: Vec<Vec<i64>>) -> Self {
+        assert!(k >= 1 && f >= k, "need f >= k >= 1");
+        assert!(!weights.is_empty(), "at least one weight configuration");
+        for w in &weights {
+            assert_eq!(w.len(), k * k, "weight set must be k*k");
+        }
+        let configs = weights.len();
+        let row_regs = (0..k)
+            .map(|_| (0..k.saturating_sub(1)).map(|_| Fifo::new(configs)).collect())
+            .collect();
+        let line_bufs = (0..k.saturating_sub(1))
+            .map(|_| Fifo::new((f - k + 1) * configs))
+            .collect();
+        Self {
+            k,
+            f,
+            p,
+            configs,
+            weights,
+            row_regs,
+            line_bufs,
+            cycle: 0,
+            scratch_nodes: vec![0; k * k],
+            scratch_pad: vec![true; k],
+        }
+    }
+
+    pub fn configs(&self) -> usize {
+        self.configs
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Padding select signal for multiplier column `v` when the current
+    /// input pixel is at feature-map column `c` (Eq. 10). Returns `true`
+    /// when the product passes, `false` when it is masked to zero.
+    pub fn pad_select(&self, v: usize, c: usize) -> bool {
+        let (c, v, f, p, k) = (
+            c as isize,
+            v as isize,
+            self.f as isize,
+            self.p as isize,
+            self.k as isize,
+        );
+        if c >= f - p + v {
+            return false;
+        }
+        if c < p - k + v + 1 {
+            return false;
+        }
+        true
+    }
+
+    /// One clock cycle. `x` is the input value broadcast to all
+    /// multipliers; `col` is the feature-map column of the current input
+    /// pixel (`None` during zero-feed cycles, where masking is moot).
+    ///
+    /// The active weight configuration is `cycle mod C`, matching the
+    /// interleaved channel order produced by the planner.
+    pub fn tick(&mut self, x: i64, col: Option<usize>) -> KpuOut<'_> {
+        let cfg = (self.cycle % self.configs as u64) as usize;
+        let w = &self.weights[cfg];
+        let k = self.k;
+        if self.p > 0 {
+            match col {
+                Some(c) => {
+                    for v in 0..k {
+                        // Inline Eq. 10 (avoids the method-call casts on
+                        // the hot path; see pad_select for the spec form).
+                        let ci = c as isize;
+                        let vi = v as isize;
+                        self.scratch_pad[v] = ci < self.f as isize - self.p as isize + vi
+                            && ci >= self.p as isize - self.k as isize + vi + 1;
+                    }
+                }
+                None => self.scratch_pad.fill(true),
+            }
+        }
+        // Phase 1 — combinational evaluation against the pre-edge register
+        // state. All peeks happen before any push so every storage element
+        // clocks simultaneously, like the hardware.
+        let mut y = 0i64;
+        for u in 0..k {
+            let row_in = if u == 0 {
+                0
+            } else {
+                self.line_bufs[u - 1].peek()
+            };
+            for v in 0..k {
+                let product = if self.scratch_pad[v] { w[u * k + v] * x } else { 0 };
+                let partial_in = if v == 0 {
+                    row_in
+                } else {
+                    self.row_regs[u][v - 1].peek()
+                };
+                self.scratch_nodes[u * k + v] = partial_in + product;
+            }
+            if u == k - 1 {
+                y = self.scratch_nodes[u * k + k - 1];
+            }
+        }
+        // Phase 2 — clock edge: shift every register and line buffer.
+        for u in 0..k {
+            for v in 0..k - 1 {
+                self.row_regs[u][v].push(self.scratch_nodes[u * k + v]);
+            }
+            if u < k - 1 {
+                self.line_bufs[u].push(self.scratch_nodes[u * k + k - 1]);
+            }
+        }
+        self.cycle += 1;
+        KpuOut {
+            nodes: &self.scratch_nodes,
+            y,
+            pad: &self.scratch_pad,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for row in &mut self.row_regs {
+            for r in row {
+                r.reset();
+            }
+        }
+        for lb in &mut self.line_bufs {
+            lb.reset();
+        }
+        self.cycle = 0;
+    }
+}
+
+/// Reference convolution for oracle checks: computes y_n per Eq. 2 on a
+/// flat row-major feature map, with virtual zero padding of `p` when the
+/// window leaves the map (Section III-B semantics). `n` indexes the
+/// *padded-coordinate* top-left when `p > 0` (i.e. y_n is centred like the
+/// paper's Table II), and the plain top-left when `p = 0`.
+pub fn conv_oracle(xmap: &[i64], f: usize, k: usize, p: usize, w: &[i64], n: usize) -> i64 {
+    let (r, c) = (n / f, n % f);
+    let mut acc = 0i64;
+    for u in 0..k {
+        for v in 0..k {
+            // Window element position in unpadded coordinates.
+            let rr = r as isize + u as isize - p as isize;
+            let cc = c as isize + v as isize - p as isize;
+            let x = if rr < 0 || cc < 0 || rr >= f as isize || cc >= f as isize {
+                0
+            } else {
+                xmap[rr as usize * f + cc as usize]
+            };
+            acc += w[u * k + v] * x;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ramp_map(f: usize) -> Vec<i64> {
+        (0..(f * f) as i64).collect()
+    }
+
+    /// Drive an unpadded KPU over one frame and collect y values at the
+    /// analytically-predicted cycles t = n + f*(k-1) + (k-1).
+    fn run_unpadded(f: usize, k: usize, xmap: &[i64], w: &[i64]) -> Vec<(usize, i64)> {
+        let mut kpu = Kpu::new(k, f, 0, vec![w.to_vec()]);
+        let mut got = Vec::new();
+        for (t, &x) in xmap.iter().enumerate() {
+            let out = kpu.tick(x, None);
+            let delay = f * (k - 1) + (k - 1);
+            if t >= delay {
+                got.push((t - delay, out.y));
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn unpadded_kpu_matches_oracle_on_valid_outputs() {
+        let (f, k) = (5, 3);
+        let xmap = ramp_map(f);
+        let w: Vec<i64> = (1..=9).collect();
+        for (n, y) in run_unpadded(f, k, &xmap, &w) {
+            let (r, c) = (n / f, n % f);
+            if r <= f - k && c <= f - k {
+                assert_eq!(y, conv_oracle(&xmap, f, k, 0, &w, n), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpadded_kpu_random_shapes() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..20 {
+            let k = rng.range(1, 4);
+            let f = rng.range(k, k + 5);
+            let xmap: Vec<i64> = (0..f * f).map(|_| rng.range(0, 200) as i64 - 100).collect();
+            let w: Vec<i64> = (0..k * k).map(|_| rng.range(0, 20) as i64 - 10).collect();
+            for (n, y) in run_unpadded(f, k, &xmap, &w) {
+                let (r, c) = (n / f, n % f);
+                if r + k <= f && c + k <= f {
+                    assert_eq!(y, conv_oracle(&xmap, f, k, 0, &w, n), "f={f} k={k} n={n}");
+                }
+            }
+        }
+    }
+
+    /// Drive a padded KPU: p*f+p zero cycles, the frame, then p*f+p zeros.
+    fn run_padded(f: usize, k: usize, p: usize, xmap: &[i64], w: &[i64]) -> Vec<(usize, i64)> {
+        let mut kpu = Kpu::new(k, f, p, vec![w.to_vec()]);
+        let offset = p * f + p;
+        let total = offset + f * f + offset;
+        let mut got = Vec::new();
+        for t in 0..total {
+            let (x, col) = if t >= offset && t < offset + f * f {
+                let m = t - offset;
+                (xmap[m], Some(m % f))
+            } else {
+                (0, None)
+            };
+            let out = kpu.tick(x, col);
+            // y_n appears at t = n + f*(k-1) + (k-1) (same relation as
+            // unpadded; the offset cancels — see DESIGN.md).
+            let delay = f * (k - 1) + (k - 1);
+            if t >= delay && t - delay < f * f {
+                got.push((t - delay, out.y));
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn padded_kpu_produces_all_f2_outputs() {
+        let (f, k, p) = (5, 3, 1);
+        let xmap = ramp_map(f);
+        let w: Vec<i64> = (1..=9).collect();
+        let got = run_padded(f, k, p, &xmap, &w);
+        assert_eq!(got.len(), f * f, "continuous flow at the output");
+        for (n, y) in got {
+            assert_eq!(y, conv_oracle(&xmap, f, k, p, &w, n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn padded_kpu_random() {
+        let mut rng = Rng::new(0xB0BA);
+        for _ in 0..15 {
+            let k = 2 * rng.range(0, 1) + 3; // 3 or 5 (odd for p=(k-1)/2)
+            let p = (k - 1) / 2;
+            let f = rng.range(k, k + 4);
+            let xmap: Vec<i64> = (0..f * f).map(|_| rng.range(0, 100) as i64 - 50).collect();
+            let w: Vec<i64> = (0..k * k).map(|_| rng.range(0, 10) as i64 - 5).collect();
+            for (n, y) in run_padded(f, k, p, &xmap, &w) {
+                assert_eq!(y, conv_oracle(&xmap, f, k, p, &w, n), "f={f} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_config_kpu_interleaves_channels() {
+        // C=4 channels interleaved; each channel has its own weights.
+        // The KPU must produce channel ch's convolution on the cycles
+        // congruent to ch mod 4, at C times the single-channel latency.
+        let (f, k, c) = (4, 2, 4);
+        let mut rng = Rng::new(7);
+        let maps: Vec<Vec<i64>> = (0..c)
+            .map(|_| (0..f * f).map(|_| rng.range(0, 40) as i64 - 20).collect())
+            .collect();
+        let weights: Vec<Vec<i64>> = (0..c)
+            .map(|_| (0..k * k).map(|_| rng.range(0, 10) as i64 - 5).collect())
+            .collect();
+        let mut kpu = Kpu::new(k, f, 0, weights.clone());
+        let delay = (f * (k - 1) + (k - 1)) * c;
+        let mut checked = 0;
+        for t in 0..(f * f * c) {
+            let ch = t % c;
+            let m = t / c;
+            let out = kpu.tick(maps[ch][m], None);
+            if t >= delay {
+                let nt = t - delay;
+                let (ch_o, n) = (nt % c, nt / c);
+                let (r, cc) = (n / f, n % f);
+                if r + k <= f && cc + k <= f {
+                    assert_eq!(
+                        out.y,
+                        conv_oracle(&maps[ch_o], f, k, 0, &weights[ch_o], n),
+                        "t={t} ch={ch_o} n={n}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn pad_select_matches_paper_example() {
+        // k=3, p=1, f=5: c=0 masks column 2; c=4 masks column 0.
+        let kpu = Kpu::new(3, 5, 1, vec![vec![0; 9]]);
+        assert_eq!(
+            (0..3).map(|v| kpu.pad_select(v, 0)).collect::<Vec<_>>(),
+            vec![true, true, false]
+        );
+        assert_eq!(
+            (0..3).map(|v| kpu.pad_select(v, 4)).collect::<Vec<_>>(),
+            vec![false, true, true]
+        );
+        for c in 1..=3 {
+            assert!((0..3).all(|v| kpu.pad_select(v, c)), "c={c}");
+        }
+    }
+
+    #[test]
+    fn oracle_zero_padding_edges() {
+        // 1x1 map, 3x3 kernel, p=1: only the centre tap contributes.
+        let w: Vec<i64> = (1..=9).collect();
+        assert_eq!(conv_oracle(&[7], 1, 3, 1, &w, 0), 5 * 7);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cycle-accurate, bit-accurate hardware simulators (systems S5 + S6).
+//!
+//! This is the substitution for the paper's FPGA testbed (DESIGN.md §2):
+//! every processing unit of Figs. 2/4/5/6/7/9/12 is modelled at the
+//! register level — each storage element is a [`fifo::Fifo`] clocked once
+//! per `tick` — so the schedules of Tables I-IV and the utilisation claims
+//! of Section IV are reproduced and *checked*, not asserted.
+//!
+//! * [`kpu`] — kernel processing unit (plain / implicit-padding / multi-config),
+//! * [`ppu`] — pooling processing unit,
+//! * [`fcu`] — fully connected unit + input aggregator,
+//! * [`trace`] — the Tables I-IV emitters with oracle verification,
+//! * [`pipeline`] — whole-CNN continuous-flow pipeline with int8
+//!   quantised arithmetic and per-unit utilisation counters.
+
+pub mod fcu;
+pub mod fifo;
+pub mod kpu;
+pub mod pipeline;
+pub mod ppu;
+pub mod trace;
+
+pub use fcu::{Aggregator, Fcu};
+pub use kpu::Kpu;
+pub use ppu::Ppu;

@@ -1,0 +1,659 @@
+//! Whole-CNN continuous-flow pipeline simulator (system S6).
+//!
+//! Two concerns, deliberately layered (DESIGN.md §4):
+//!
+//! * **values** — bit-exact int8 inference replaying the quantization
+//!   semantics of `python/compile/quantize.py`; integration tests require
+//!   *equality* with the JAX int8 golden model (and with the PJRT-executed
+//!   HLO artifact);
+//! * **cycles** — a schedule-exact model of the continuous-flow
+//!   architecture: every layer consumes interleaved input pixels at its
+//!   planned rate (Eq. 8), units execute one kernel-dot / window-op /
+//!   weighted-sum per cycle, and per-layer utilisation is measured, which
+//!   is how the paper's "close to 100% utilization" claim is validated
+//!   (the micro-timing of individual units is proven separately by
+//!   `sim::trace` against Tables I-IV).
+//!
+//! The same simulator runs the fully-parallel reference plan (one unit per
+//! kernel/neuron) for the utilisation comparison of Table VIII.
+
+use crate::flow::{analyze, plan_all, PlannedLayer, Ratio, UnitPlan};
+use crate::model::{Layer, Model};
+use crate::quant::{requant, QKind, QLayer, QModel};
+
+/// Per-layer schedule statistics for one simulation run.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub name: String,
+    pub units: usize,
+    pub unit_kind: &'static str,
+    /// Useful operations executed (kernel dots / window ops / MAC groups).
+    pub useful_ops: u64,
+    /// First cycle with work and last completion cycle.
+    pub first_cycle: u64,
+    pub last_cycle: u64,
+    /// useful_ops / (units * elapsed).
+    pub utilization: f64,
+}
+
+/// Result of simulating one or more frames.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    /// Final-layer outputs per frame (accumulator scale, matching
+    /// `forward_int8`).
+    pub outputs: Vec<Vec<i64>>,
+    pub stats: Vec<LayerStats>,
+    /// Cycle at which the last output of the last frame completed.
+    pub total_cycles: u64,
+    /// Latency of frame 0: input cycle 0 -> last output cycle.
+    pub first_frame_latency: u64,
+    /// Cycles per frame in steady state (throughput).
+    pub cycles_per_frame: f64,
+}
+
+/// Convert a quantized model into the analysis IR (for rate planning).
+pub fn qmodel_to_model(qm: &QModel) -> Model {
+    let mut m = Model::new(&qm.name, qm.input_shape[0].max(1), qm.input_shape[2]);
+    for l in &qm.layers {
+        let layer = match l.kind {
+            QKind::Conv => Layer::conv(&l.name, l.k, l.s, l.p, l.out_shape[2]),
+            QKind::DwConv => Layer::dwconv(&l.name, l.k, l.s, l.p),
+            QKind::MaxPool => Layer::maxpool_padded(&l.name, l.k, l.s, l.p),
+            QKind::AvgPool => Layer::avgpool(&l.name, l.k, l.s),
+            QKind::Dense => Layer::dense(&l.name, l.out_shape[2]),
+        };
+        let layer = if l.relu { layer } else { layer.no_relu() };
+        m.push(layer);
+    }
+    m
+}
+
+/// The pipeline simulator: a quantized model plus a unit plan.
+pub struct PipelineSim {
+    pub qmodel: QModel,
+    pub plans: Vec<PlannedLayer>,
+    pub fully_parallel: bool,
+}
+
+impl PipelineSim {
+    /// Plan at input rate `r0` (None = full rate d0).
+    pub fn new(qmodel: QModel, r0: Option<Ratio>) -> Result<Self, String> {
+        let model = qmodel_to_model(&qmodel);
+        let analysis = analyze(&model, r0).map_err(|e| e.to_string())?;
+        Ok(Self {
+            qmodel,
+            plans: plan_all(&analysis),
+            fully_parallel: false,
+        })
+    }
+
+    /// Fully-parallel reference plan (Table VIII "Ref.").
+    pub fn new_reference(qmodel: QModel) -> Result<Self, String> {
+        let model = qmodel_to_model(&qmodel);
+        let analysis = analyze(&model, None).map_err(|e| e.to_string())?;
+        Ok(Self {
+            qmodel,
+            plans: crate::complexity::parallel::fully_parallel_plan(&analysis),
+            fully_parallel: true,
+        })
+    }
+
+    /// Simulate `frames` (each a flat x_q of the model's input shape, HWC
+    /// row-major, int8-valued).
+    pub fn run(&self, frames: &[Vec<i64>]) -> Result<PipelineResult, String> {
+        let [h0, w0, c0] = self.qmodel.input_shape;
+        let in_len = h0.max(1) * w0.max(1) * c0;
+        for (i, f) in frames.iter().enumerate() {
+            if f.len() != in_len {
+                return Err(format!("frame {i}: len {} != {in_len}", f.len()));
+            }
+        }
+        let mut stats: Vec<LayerStats> = Vec::new();
+
+        // --- Source schedule -------------------------------------------
+        // Pixel m's last feature arrives at ceil((m+1) * d0 / r0) - 1.
+        // With a padded first conv, each frame is followed by the p*f + p
+        // zero-feed rows of Section III-B (shared top/bottom padding).
+        let r0 = self.plans[0].rated.r_in;
+        let first = &self.qmodel.layers[0];
+        let frame_pixels = h0.max(1) * w0.max(1);
+        let gap_pixels = if first.p > 0 {
+            first.p * w0.max(1) + first.p
+        } else {
+            0
+        };
+        let pixel_cycles = |i: u64| -> u64 {
+            // cycle when the i-th pixel's last feature has arrived
+            ((i + 1) * c0 as u64 * r0.den()).div_ceil(r0.num()) - 1
+        };
+        let mut in_cycles: Vec<Vec<u64>> = Vec::with_capacity(frames.len());
+        for fi in 0..frames.len() {
+            let base = (fi * (frame_pixels + gap_pixels)) as u64;
+            in_cycles.push(
+                (0..frame_pixels as u64)
+                    .map(|m| pixel_cycles(base + m))
+                    .collect(),
+            );
+        }
+
+        // --- Per-layer streaming ----------------------------------------
+        let mut maps: Vec<Vec<i64>> = frames.to_vec();
+        let mut frame_out_last: Vec<u64> = vec![0; frames.len()];
+        for (li, ql) in self.qmodel.layers.iter().enumerate() {
+            let plan = &self.plans[li];
+            let mut layer_stat = LayerStats {
+                name: ql.name.clone(),
+                units: plan.plan.unit_count(),
+                unit_kind: match plan.plan {
+                    UnitPlan::Kpu { .. } => "KPU",
+                    UnitPlan::Ppu { .. } => "PPU",
+                    UnitPlan::Fcu { .. } => "FCU",
+                },
+                useful_ops: 0,
+                first_cycle: u64::MAX,
+                last_cycle: 0,
+                utilization: 0.0,
+            };
+            let mut prev_finish: u64 = 0;
+            for (fi, map) in maps.iter_mut().enumerate() {
+                let is_last = li + 1 == self.qmodel.layers.len();
+                let (vals, outs) = step_layer(
+                    ql,
+                    plan,
+                    map,
+                    &in_cycles[fi],
+                    &mut prev_finish,
+                    &mut layer_stat,
+                    is_last,
+                )?;
+                *map = vals;
+                frame_out_last[fi] = *outs.last().unwrap_or(&frame_out_last[fi]);
+                in_cycles[fi] = outs;
+            }
+            let elapsed = layer_stat
+                .last_cycle
+                .saturating_sub(layer_stat.first_cycle)
+                .max(1);
+            layer_stat.utilization =
+                layer_stat.useful_ops as f64 / (layer_stat.units as f64 * elapsed as f64);
+            stats.push(layer_stat);
+        }
+
+        let total_cycles = *frame_out_last.last().unwrap_or(&0);
+        let first_frame_latency = frame_out_last[0];
+        let cycles_per_frame = if frames.len() > 1 {
+            (total_cycles - first_frame_latency) as f64 / (frames.len() - 1) as f64
+        } else {
+            total_cycles as f64
+        };
+        Ok(PipelineResult {
+            outputs: maps,
+            stats,
+            total_cycles,
+            first_frame_latency,
+            cycles_per_frame,
+        })
+    }
+}
+
+/// Stream one frame through one layer: returns (values, out_cycles) with
+/// one entry per output pixel (dense: one "pixel" carrying all units).
+#[allow(clippy::too_many_arguments)]
+fn step_layer(
+    ql: &QLayer,
+    plan: &PlannedLayer,
+    map: &[i64],
+    in_cycles: &[u64],
+    prev_finish: &mut u64,
+    stat: &mut LayerStats,
+    is_last: bool,
+) -> Result<(Vec<i64>, Vec<u64>), String> {
+    let [h_in, w_in, c_in] = ql.in_shape;
+    let [h_out, w_out, c_out] = ql.out_shape;
+
+    // Output emission period in cycles per output pixel: d_out / r_out.
+    let r_out = plan.rated.r_out;
+    let out_period = (c_out as u64 * r_out.den()).div_ceil(r_out.num()).max(1);
+    // Dots of work per output pixel for utilisation accounting.
+    let (ops_per_out, latency): (u64, u64) = match ql.kind {
+        QKind::Conv => ((c_in * c_out) as u64, 3),
+        QKind::DwConv | QKind::AvgPool => (c_out as u64, 3),
+        QKind::MaxPool => (c_out as u64, 2),
+        QKind::Dense => (0, 2), // accounted separately below
+    };
+
+    let mut vals = Vec::with_capacity(h_out * w_out * c_out);
+    let mut outs = Vec::with_capacity(h_out * w_out);
+    match ql.kind {
+        QKind::Dense => {
+            let feats = h_in * w_in * c_in;
+            if map.len() != feats {
+                return Err(format!("{}: input len {} != {feats}", ql.name, map.len()));
+            }
+            let dep = in_cycles.last().copied().unwrap_or(0);
+            for unit in 0..c_out {
+                let mut acc = ql.b_q[unit];
+                for (f, &x) in map.iter().enumerate() {
+                    acc += QModel::dense_w(ql, unit, f) * x;
+                }
+                if ql.relu {
+                    acc = acc.max(0);
+                }
+                // The final layer emits accumulator-scale values (the
+                // paper's wider final output; matches forward_int8).
+                vals.push(if !is_last && ql.m != 0.0 { requant(acc, ql.m) } else { acc });
+            }
+            let h = match plan.plan {
+                UnitPlan::Fcu { h, .. } => h as u64,
+                _ => 1,
+            };
+            // Latency: weight-cycle tail + pipeline regs. Occupancy: the
+            // FCU accepts a new frame every C cycles (its initiation
+            // interval), not every latency — frames overlap in the
+            // accumulator FIFO exactly as Table III shows.
+            let ii = plan.plan.configs() as u64;
+            let finish = (dep + h + latency).max(*prev_finish + ii);
+            // FCU lanes: each of the `units` FCUs executes j MACs per cycle
+            // over C cycles -> count weighted-sum cycles as useful ops.
+            let c_cfg = plan.plan.configs() as u64;
+            stat.useful_ops += c_cfg * plan.plan.unit_count() as u64;
+            stat.first_cycle = stat
+                .first_cycle
+                .min(in_cycles.first().copied().unwrap_or(dep));
+            stat.last_cycle = stat.last_cycle.max(finish);
+            *prev_finish = finish;
+            outs.push(finish);
+        }
+        QKind::MaxPool => {
+            for orow in 0..h_out {
+                for ocol in 0..w_out {
+                    // Last input pixel needed by this window.
+                    let lr = (orow * ql.s + ql.k - 1).min(h_in - 1);
+                    let lc = (ocol * ql.s + ql.k - 1).min(w_in - 1);
+                    let dep = in_cycles[lr * w_in + lc];
+                    let finish = dep.max(*prev_finish + out_period) + latency;
+                    for ch in 0..c_out {
+                        let mut m = i64::MIN;
+                        for u in 0..ql.k {
+                            for v in 0..ql.k {
+                                let (r, c) = (orow * ql.s + u, ocol * ql.s + v);
+                                if r < h_in && c < w_in {
+                                    m = m.max(map[(r * w_in + c) * c_in + ch]);
+                                }
+                            }
+                        }
+                        vals.push(m);
+                    }
+                    stat.useful_ops += ops_per_out;
+                    stat.first_cycle = stat.first_cycle.min(dep);
+                    stat.last_cycle = stat.last_cycle.max(finish);
+                    *prev_finish = finish - latency;
+                    outs.push(finish);
+                }
+            }
+        }
+        QKind::Conv | QKind::DwConv | QKind::AvgPool => {
+            let p = ql.p as isize;
+            // Hot loop (see EXPERIMENTS.md §Perf): accumulate all output
+            // channels of a pixel together so each (u, v) tap touches the
+            // weight tensor contiguously ([ci][co] layout) and the inner
+            // loop vectorises; skips multiplying zero activations (common
+            // after ReLU on int8).
+            let mut acc = vec![0i64; c_out];
+            for orow in 0..h_out {
+                for ocol in 0..w_out {
+                    let lr = ((orow * ql.s) as isize + ql.k as isize - 1 - p)
+                        .clamp(0, h_in as isize - 1) as usize;
+                    let lc = ((ocol * ql.s) as isize + ql.k as isize - 1 - p)
+                        .clamp(0, w_in as isize - 1) as usize;
+                    let dep = in_cycles[lr * w_in + lc];
+                    let finish = dep.max(*prev_finish + out_period) + latency;
+                    acc.copy_from_slice(&ql.b_q);
+                    for u in 0..ql.k {
+                        let r = (orow * ql.s) as isize + u as isize - p;
+                        if r < 0 || r >= h_in as isize {
+                            continue; // implicit zero padding (rows)
+                        }
+                        for v in 0..ql.k {
+                            let c = (ocol * ql.s) as isize + v as isize - p;
+                            if c < 0 || c >= w_in as isize {
+                                continue; // implicit zero padding (cols)
+                            }
+                            let base = (r as usize * w_in + c as usize) * c_in;
+                            match ql.kind {
+                                QKind::Conv => {
+                                    let xs = &map[base..base + c_in];
+                                    let wbase = (u * ql.k + v) * c_in * c_out;
+                                    for (ci, &xv) in xs.iter().enumerate() {
+                                        if xv == 0 {
+                                            continue;
+                                        }
+                                        let wrow =
+                                            &ql.w_q[wbase + ci * c_out..wbase + (ci + 1) * c_out];
+                                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                            *a += wv * xv;
+                                        }
+                                    }
+                                }
+                                _ => {
+                                    let wbase = (u * ql.k + v) * c_out;
+                                    let wrow = &ql.w_q[wbase..wbase + c_out];
+                                    let xs = &map[base..base + c_out];
+                                    for ((a, &wv), &xv) in
+                                        acc.iter_mut().zip(wrow).zip(xs)
+                                    {
+                                        *a += wv * xv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    for co in 0..c_out {
+                        let mut a = acc[co];
+                        if ql.relu {
+                            a = a.max(0);
+                        }
+                        vals.push(if !is_last && ql.m != 0.0 {
+                            requant(a, ql.m)
+                        } else {
+                            a
+                        });
+                    }
+                    stat.useful_ops += ops_per_out;
+                    stat.first_cycle = stat.first_cycle.min(dep);
+                    stat.last_cycle = stat.last_cycle.max(finish);
+                    *prev_finish = finish - latency;
+                    outs.push(finish);
+                }
+            }
+        }
+    }
+    Ok((vals, outs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QMAX;
+    use crate::util::Rng;
+
+    /// A hand-built tiny quantized model for tests without artifacts:
+    /// conv 3x3 p1 (1->2) + maxpool 2x2 + dense 4.
+    pub fn tiny_qmodel(seed: u64) -> QModel {
+        let mut rng = Rng::new(seed);
+        let mut wq = |n: usize| -> Vec<i64> { (0..n).map(|_| rng.int8() as i64 / 16).collect() };
+        let conv = QLayer {
+            name: "C1".into(),
+            kind: QKind::Conv,
+            k: 3,
+            s: 1,
+            p: 1,
+            relu: true,
+            w_q: wq(3 * 3 * 2),
+            w_shape: vec![3, 3, 1, 2],
+            b_q: vec![3, -2],
+            m: 0.05,
+            in_shape: [4, 4, 1],
+            out_shape: [4, 4, 2],
+        };
+        let pool = QLayer {
+            name: "P1".into(),
+            kind: QKind::MaxPool,
+            k: 2,
+            s: 2,
+            p: 0,
+            relu: false,
+            w_q: vec![],
+            w_shape: vec![],
+            b_q: vec![],
+            m: 0.0,
+            in_shape: [4, 4, 2],
+            out_shape: [2, 2, 2],
+        };
+        let dense = QLayer {
+            name: "F1".into(),
+            kind: QKind::Dense,
+            k: 0,
+            s: 1,
+            p: 0,
+            relu: false,
+            w_q: wq(4 * 8),
+            w_shape: vec![4, 8],
+            b_q: vec![1, 2, 3, 4],
+            m: 0.0, // final layer: accumulator out
+            in_shape: [1, 1, 8],
+            out_shape: [1, 1, 4],
+        };
+        QModel {
+            name: "tiny".into(),
+            input_shape: [4, 4, 1],
+            input_scale: 1.0,
+            layers: vec![conv, pool, dense],
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        }
+    }
+
+    /// Plain direct implementation of the int8 pipeline for cross-check.
+    fn oracle(qm: &QModel, x: &[i64]) -> Vec<i64> {
+        let mut map = x.to_vec();
+        for ql in &qm.layers {
+            let [h, w, cin] = ql.in_shape;
+            let [ho, wo, cout] = ql.out_shape;
+            let mut out = Vec::new();
+            match ql.kind {
+                QKind::Dense => {
+                    for u in 0..cout {
+                        let mut acc = ql.b_q[u];
+                        for (f, &v) in map.iter().enumerate() {
+                            acc += QModel::dense_w(ql, u, f) * v;
+                        }
+                        if ql.relu {
+                            acc = acc.max(0);
+                        }
+                        out.push(if ql.m != 0.0 { requant(acc, ql.m) } else { acc });
+                    }
+                }
+                QKind::MaxPool => {
+                    for orow in 0..ho {
+                        for ocol in 0..wo {
+                            for ch in 0..cout {
+                                let mut m = i64::MIN;
+                                for u in 0..ql.k {
+                                    for v in 0..ql.k {
+                                        m = m.max(
+                                            map[((orow * ql.s + u) * w + ocol * ql.s + v) * cin
+                                                + ch],
+                                        );
+                                    }
+                                }
+                                out.push(m);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    for orow in 0..ho {
+                        for ocol in 0..wo {
+                            for co in 0..cout {
+                                let mut acc = ql.b_q[co];
+                                for u in 0..ql.k {
+                                    for v in 0..ql.k {
+                                        let r = (orow * ql.s + u) as isize - ql.p as isize;
+                                        let c = (ocol * ql.s + v) as isize - ql.p as isize;
+                                        if r < 0 || c < 0 || r >= h as isize || c >= w as isize {
+                                            continue;
+                                        }
+                                        let b = (r as usize * w + c as usize) * cin;
+                                        acc += QModel::conv_w(ql, u, v, 0, co) * map[b];
+                                    }
+                                }
+                                if ql.relu {
+                                    acc = acc.max(0);
+                                }
+                                out.push(if ql.m != 0.0 { requant(acc, ql.m) } else { acc });
+                            }
+                        }
+                    }
+                }
+            }
+            map = out;
+        }
+        map
+    }
+
+    fn rand_frame(rng: &mut Rng, n: usize) -> Vec<i64> {
+        (0..n).map(|_| rng.int8() as i64).collect()
+    }
+
+    #[test]
+    fn pipeline_values_match_direct_oracle() {
+        let qm = tiny_qmodel(1);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let x = rand_frame(&mut rng, 16);
+            let res = sim.run(&[x.clone()]).unwrap();
+            assert_eq!(res.outputs[0], oracle(&qm, &x));
+        }
+    }
+
+    #[test]
+    fn activations_bounded_by_qmax() {
+        // All intermediate (requantized) values must stay in int8; the
+        // final dense layer is accumulator-scale by design.
+        let qm = tiny_qmodel(3);
+        let mut rng = Rng::new(4);
+        let x = rand_frame(&mut rng, 16);
+        let mut map = x;
+        for ql in &qm.layers[..2] {
+            let one_layer = QModel {
+                layers: vec![ql.clone()],
+                input_shape: ql.in_shape,
+                ..qm.clone()
+            };
+            map = oracle(&one_layer, &map);
+            for &v in &map {
+                assert!(v.abs() <= QMAX, "intermediate {v} exceeds int8");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_plan_same_values_more_units() {
+        let qm = tiny_qmodel(5);
+        let mut rng = Rng::new(6);
+        let frames: Vec<Vec<i64>> = (0..8).map(|_| rand_frame(&mut rng, 16)).collect();
+        let ours = PipelineSim::new(qm.clone(), None)
+            .unwrap()
+            .run(&frames)
+            .unwrap();
+        let reference = PipelineSim::new_reference(qm).unwrap().run(&frames).unwrap();
+        assert_eq!(ours.outputs, reference.outputs);
+        for (a, b) in ours.stats.iter().zip(reference.stats.iter()) {
+            assert!(b.units >= a.units, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn throughput_matches_rate_analysis() {
+        // Steady-state cycles/frame must approach the frame period
+        // (f^2 + p*f + p pixels at d0 = r0 = 1 feature/pixel/cycle).
+        let qm = tiny_qmodel(7);
+        let mut rng = Rng::new(8);
+        let frames: Vec<Vec<i64>> = (0..16).map(|_| rand_frame(&mut rng, 16)).collect();
+        let res = PipelineSim::new(qm, None).unwrap().run(&frames).unwrap();
+        let expect = 21.0; // 16 + 4 + 1
+        let got = res.cycles_per_frame;
+        assert!(
+            (got - expect).abs() / expect < 0.25,
+            "cycles/frame {got} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn latency_is_bounded() {
+        let qm = tiny_qmodel(9);
+        let mut rng = Rng::new(10);
+        let x = rand_frame(&mut rng, 16);
+        let res = PipelineSim::new(qm, None).unwrap().run(&[x]).unwrap();
+        // Single frame latency covers the input stream (16 pixels) plus a
+        // small pipeline margin.
+        assert!(res.first_frame_latency >= 15);
+        assert!(res.first_frame_latency < 64, "{}", res.first_frame_latency);
+    }
+
+    #[test]
+    fn rejects_wrong_frame_size() {
+        let qm = tiny_qmodel(11);
+        let sim = PipelineSim::new(qm, None).unwrap();
+        assert!(sim.run(&[vec![0; 7]]).is_err());
+    }
+
+    #[test]
+    fn digits_artifact_matches_exported_vectors() {
+        // THE bit-exactness integration test: the rust pipeline must
+        // reproduce the JAX int8 golden outputs exactly on the exporter's
+        // test vectors.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights/digits.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let qm = QModel::load(&path).unwrap();
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        for (i, tv) in qm.test_vectors.iter().enumerate() {
+            let res = sim.run(&[tv.x_q.clone()]).unwrap();
+            assert_eq!(res.outputs[0], tv.y, "test vector {i}");
+        }
+    }
+
+    #[test]
+    fn jsc_artifact_matches_exported_vectors() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights/jsc.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let qm = QModel::load(&path).unwrap();
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        for (i, tv) in qm.test_vectors.iter().enumerate() {
+            let res = sim.run(&[tv.x_q.clone()]).unwrap();
+            assert_eq!(res.outputs[0], tv.y, "test vector {i}");
+        }
+    }
+
+    #[test]
+    fn digits_utilization_near_full() {
+        // The continuous-flow pipeline's stride-1 conv layers must run
+        // close to full utilisation over a back-to-back frame stream.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights/digits.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let qm = QModel::load(&path).unwrap();
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let frames: Vec<Vec<i64>> = qm
+            .test_vectors
+            .iter()
+            .cycle()
+            .take(24)
+            .map(|tv| tv.x_q.clone())
+            .collect();
+        let res = sim.run(&frames).unwrap();
+        for s in &res.stats {
+            if s.name == "C1" || s.name == "C2" {
+                assert!(
+                    s.utilization > 0.80,
+                    "{} utilization {:.3}",
+                    s.name,
+                    s.utilization
+                );
+            }
+        }
+    }
+}

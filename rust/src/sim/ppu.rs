@@ -1,0 +1,214 @@
+//! Structural, cycle-accurate pooling processing unit (PPU) — Fig. 5
+//! (2x2 max pooling) generalised to `k x k` windows and `C` interleaved
+//! configurations (Fig. 12).
+//!
+//! The circuit mirrors the KPU's transposed form with MAX units in place
+//! of multiply-add: `k-1` comparison stages per row, `k-1` line buffers
+//! between rows, every storage element a depth-C FIFO under interleaving.
+
+use super::fifo::Fifo;
+
+/// Sentinel for "no value yet" in the max chain. Using i64::MIN would
+/// overflow on comparisons with offsets; the pipeline only emits valid
+/// outputs after the chain has filled, so any very negative value works.
+const NEG: i64 = i64::MIN / 2;
+
+#[derive(Debug, Clone)]
+pub struct PpuOut {
+    /// Max accumulated along each row chain (last tap of each row).
+    pub row_max: Vec<i64>,
+    /// The window maximum (last row's chain output).
+    pub y: i64,
+}
+
+/// A PPU instance. `configs` is the interleave depth C.
+#[derive(Debug, Clone)]
+pub struct Ppu {
+    k: usize,
+    row_regs: Vec<Vec<Fifo>>,
+    line_bufs: Vec<Fifo>,
+    cycle: u64,
+}
+
+impl Ppu {
+    pub fn new(k: usize, f: usize, configs: usize) -> Self {
+        assert!(k >= 1 && f >= k && configs >= 1);
+        let row_regs = (0..k)
+            .map(|_| {
+                (0..k.saturating_sub(1))
+                    .map(|_| {
+                        let mut fifo = Fifo::new(configs);
+                        // Pre-fill with the sentinel so max() ignores
+                        // unfilled positions.
+                        for _ in 0..configs {
+                            fifo.push(NEG);
+                        }
+                        fifo
+                    })
+                    .collect()
+            })
+            .collect();
+        let line_bufs = (0..k.saturating_sub(1))
+            .map(|_| {
+                let mut fifo = Fifo::new((f - k + 1) * configs);
+                for _ in 0..fifo.depth() {
+                    fifo.push(NEG);
+                }
+                fifo
+            })
+            .collect();
+        Self {
+            k,
+            row_regs,
+            line_bufs,
+            cycle: 0,
+        }
+    }
+
+    /// One clock cycle with input pixel `x`.
+    pub fn tick(&mut self, x: i64) -> PpuOut {
+        let k = self.k;
+        let mut node_vals = vec![vec![NEG; k]; k];
+        let mut row_max = Vec::with_capacity(k);
+        // Phase 1 — combinational max chains against pre-edge state.
+        for u in 0..k {
+            let row_in = if u == 0 {
+                NEG
+            } else {
+                self.line_bufs[u - 1].peek()
+            };
+            for v in 0..k {
+                let partial_in = if v == 0 {
+                    row_in
+                } else {
+                    self.row_regs[u][v - 1].peek()
+                };
+                node_vals[u][v] = partial_in.max(x);
+            }
+            row_max.push(node_vals[u][k - 1]);
+        }
+        // Phase 2 — clock edge.
+        for u in 0..k {
+            for v in 0..k - 1 {
+                self.row_regs[u][v].push(node_vals[u][v]);
+            }
+            if u < k - 1 {
+                self.line_bufs[u].push(node_vals[u][k - 1]);
+            }
+        }
+        self.cycle += 1;
+        PpuOut {
+            y: row_max[k - 1],
+            row_max,
+        }
+    }
+}
+
+/// Reference max-pool oracle (Eq. 6): window top-left at flat index n.
+pub fn maxpool_oracle(xmap: &[i64], f: usize, k: usize, n: usize) -> i64 {
+    let (r, c) = (n / f, n % f);
+    let mut m = i64::MIN;
+    for u in 0..k {
+        for v in 0..k {
+            m = m.max(xmap[(r + u) * f + (c + v)]);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ppu_2x2_stride2_matches_oracle() {
+        let f = 6;
+        let mut rng = Rng::new(3);
+        let xmap: Vec<i64> = (0..f * f).map(|_| rng.range(0, 100) as i64 - 50).collect();
+        let mut ppu = Ppu::new(2, f, 1);
+        let delay = f + 1; // f*(k-1) + (k-1)
+        for (t, &x) in xmap.iter().enumerate() {
+            let out = ppu.tick(x);
+            if t >= delay {
+                let n = t - delay;
+                let (r, c) = (n / f, n % f);
+                // Valid at stride-2 positions fully inside the map (Eq. 11).
+                if r % 2 == 0 && c % 2 == 0 && r + 2 <= f && c + 2 <= f {
+                    assert_eq!(out.y, maxpool_oracle(&xmap, f, 2, n), "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ppu_3x3_stride3() {
+        let f = 9;
+        let mut rng = Rng::new(5);
+        let xmap: Vec<i64> = (0..f * f).map(|_| rng.range(0, 1000) as i64).collect();
+        let mut ppu = Ppu::new(3, f, 1);
+        let delay = 2 * f + 2;
+        let mut count = 0;
+        for (t, &x) in xmap.iter().enumerate() {
+            let out = ppu.tick(x);
+            if t >= delay {
+                let n = t - delay;
+                let (r, c) = (n / f, n % f);
+                if r % 3 == 0 && c % 3 == 0 && r + 3 <= f && c + 3 <= f {
+                    assert_eq!(out.y, maxpool_oracle(&xmap, f, 3, n));
+                    count += 1;
+                }
+            }
+        }
+        // All 9 windows of the 3x3 output grid are produced; the last one
+        // lands exactly on the final input cycle t = f^2 - 1.
+        assert_eq!(count, 9);
+    }
+
+    #[test]
+    fn interleaved_ppu_c4() {
+        // 4 channels interleaved into one PPU (Fig. 12).
+        let (f, k, c) = (4, 2, 4);
+        let mut rng = Rng::new(11);
+        let maps: Vec<Vec<i64>> = (0..c)
+            .map(|_| (0..f * f).map(|_| rng.range(0, 60) as i64 - 30).collect())
+            .collect();
+        let mut ppu = Ppu::new(k, f, c);
+        let delay = (f * (k - 1) + (k - 1)) * c;
+        let mut checked = 0;
+        for t in 0..f * f * c {
+            let (ch, m) = (t % c, t / c);
+            let out = ppu.tick(maps[ch][m]);
+            if t >= delay {
+                let nt = t - delay;
+                let (ch_o, n) = (nt % c, nt / c);
+                let (r, cc) = (n / f, n % f);
+                if r % 2 == 0 && cc % 2 == 0 && r + k <= f && cc + k <= f {
+                    assert_eq!(out.y, maxpool_oracle(&maps[ch_o], f, k, n));
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked >= 12, "checked {checked}");
+    }
+
+    #[test]
+    fn negative_inputs_survive_sentinel() {
+        // All-negative input map: outputs must still be the window max,
+        // not the sentinel.
+        let f = 4;
+        let xmap: Vec<i64> = (0..16).map(|i| -100 - i as i64).collect();
+        let mut ppu = Ppu::new(2, f, 1);
+        let delay = f + 1;
+        for (t, &x) in xmap.iter().enumerate() {
+            let out = ppu.tick(x);
+            if t >= delay {
+                let n = t - delay;
+                let (r, c) = (n / f, n % f);
+                if r % 2 == 0 && c % 2 == 0 && r + 2 <= f && c + 2 <= f {
+                    assert_eq!(out.y, maxpool_oracle(&xmap, f, 2, n));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,465 @@
+//! Timing-trace emission for the paper's Tables I-IV.
+//!
+//! The tables show, cycle by cycle, which partial sum `z_{n,i}` each
+//! observable node of a KPU / FCU holds. The label attached to node
+//! `(u, v)` at cycle `t` follows the closed-form relation derived from the
+//! transposed structure:
+//!
+//! ```text
+//! n = t - f*u - v          (both with and without implicit padding:
+//!                           the p*f + p zero-feed offset cancels)
+//! i = u*k + v
+//! ```
+//!
+//! A label is *displayed* only when n lands inside the frame and the
+//! output y_n is valid per Eq. 5 (no padding), Eq. 9 (padding) or Eq. 11
+//! (stride). Crucially these labels are not trusted: [`verify_kpu_trace`]
+//! recomputes every labelled cell from the structural simulator's actual
+//! values against the convolution oracle, so the printed tables are
+//! machine-checked.
+
+use super::fcu::{fcu_rom, Fcu};
+use super::kpu::{conv_oracle, Kpu};
+use crate::util::Table;
+
+/// Configuration of a KPU timing trace.
+#[derive(Debug, Clone, Copy)]
+pub struct KpuTraceCfg {
+    pub f: usize,
+    pub k: usize,
+    pub p: usize,
+    pub s: usize,
+    /// Number of cycles to trace.
+    pub cycles: usize,
+}
+
+/// One traced cell: the label (if displayed) and the structural value.
+#[derive(Debug, Clone)]
+pub struct TraceCell {
+    pub label: Option<(i64, usize)>, // (n, i)
+    pub value: i64,
+}
+
+/// A full KPU trace: per cycle, the input label, pad tuple, and one cell
+/// per observable node (first/last tap of each row), plus the output.
+#[derive(Debug)]
+pub struct KpuTrace {
+    pub cfg: KpuTraceCfg,
+    /// Node captions, e.g. ["a11", "a13", "a21", "a23", "a31"].
+    pub node_names: Vec<String>,
+    /// (u, v) of each observable node, matching `node_names`.
+    pub node_pos: Vec<(usize, usize)>,
+    /// rows[t] = (input label, pad tuple, cells, y cell)
+    pub rows: Vec<(String, String, Vec<TraceCell>, TraceCell)>,
+}
+
+/// Is output y_n valid (Eqs. 5 / 9 / 11)?
+pub fn output_valid(n: i64, f: usize, k: usize, p: usize, s: usize) -> bool {
+    if n < 0 || n >= (f * f) as i64 {
+        return false;
+    }
+    let (r, c) = (n as usize / f, n as usize % f);
+    let hi = f + 2 * p - k; // r, c in {0, s, 2s, ..., f - k + 2p}
+    r <= hi && c <= hi && r % s == 0 && c % s == 0
+}
+
+/// The frame period: f*f for back-to-back unpadded frames; padded frames
+/// are separated by the shared p*f + p zero-feed rows (Section III-B).
+pub fn frame_period(f: usize, p: usize) -> usize {
+    f * f + p * f + p
+}
+
+/// Trace a single-configuration KPU over `cfg.cycles` cycles on a ramp
+/// feature map x_n = n (values chosen so every z is distinct).
+pub fn trace_kpu(cfg: KpuTraceCfg) -> KpuTrace {
+    let KpuTraceCfg { f, k, p, .. } = cfg;
+    let xmap: Vec<i64> = (0..(f * f) as i64).collect();
+    // Small distinct weights keep values readable and collisions unlikely.
+    let w: Vec<i64> = (1..=(k * k) as i64).collect();
+    let mut kpu = Kpu::new(k, f, p, vec![w.clone()]);
+    let offset = p * f + p;
+    let period = frame_period(f, p);
+
+    // Observable nodes: (u, 0) and (u, k-1) for each row, deduplicated for
+    // k = 1, dropping the final (k-1, k-1) which is the y column.
+    let mut node_pos: Vec<(usize, usize)> = Vec::new();
+    for u in 0..k {
+        node_pos.push((u, 0));
+        if k > 1 && !(u == k - 1) {
+            node_pos.push((u, k - 1));
+        }
+    }
+    let node_names: Vec<String> = node_pos
+        .iter()
+        .map(|(u, v)| format!("a{}{}", u + 1, v + 1))
+        .collect();
+
+    let mut rows = Vec::with_capacity(cfg.cycles);
+    for t in 0..cfg.cycles {
+        // Input feed: with padding, frames are separated by `offset`
+        // zero cycles; without, frames stream back to back.
+        let m = t as i64 - offset as i64;
+        let in_frame = if p == 0 {
+            true
+        } else {
+            m >= 0 && (m as usize % period) < f * f
+        };
+        let (x, col, x_label) = if p == 0 {
+            let n = t % (f * f);
+            (xmap[n], Some(n % f), format!("x{n}"))
+        } else if in_frame {
+            let n = (m as usize) % period;
+            (xmap[n], Some(n % f), format!("x{n}"))
+        } else {
+            (0, None, "0".to_string())
+        };
+        let out = kpu.tick(x, col);
+        let pad_label = if p == 0 || !in_frame {
+            "-".to_string()
+        } else {
+            format!(
+                "({})",
+                out.pad
+                    .iter()
+                    .map(|&b| if b { "1" } else { "0" })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
+        };
+        let mut cells = Vec::with_capacity(node_pos.len());
+        for (idx, &(u, v)) in node_pos.iter().enumerate() {
+            let _ = idx;
+            let n_raw = t as i64 - (f * u + v) as i64;
+            let n = if n_raw >= 0 {
+                n_raw % period as i64
+            } else {
+                -1
+            };
+            let displayed = n_raw >= 0 && (n as usize) < f * f && partial_displayed(n, f, k, p, cfg.s);
+            cells.push(TraceCell {
+                label: displayed.then_some((n, (u * k + v) as usize)),
+                value: out.node(u, v),
+            });
+        }
+        // Output column.
+        let n_y = t as i64 - (f * (k - 1) + (k - 1)) as i64;
+        let n_y_mod = if n_y >= 0 { n_y % period as i64 } else { -1 };
+        let y_displayed = n_y >= 0 && output_valid(n_y_mod, f, k, p, cfg.s);
+        rows.push((
+            x_label,
+            pad_label,
+            cells,
+            TraceCell {
+                label: y_displayed.then_some((n_y_mod, k * k - 1)),
+                value: out.y,
+            },
+        ));
+    }
+    KpuTrace {
+        cfg,
+        node_names,
+        node_pos,
+        rows,
+    }
+}
+
+/// Display rule for intermediate partials: the paper greys out partials
+/// whose terminal output is invalid (Table I's '-' cells).
+fn partial_displayed(n: i64, f: usize, k: usize, p: usize, s: usize) -> bool {
+    output_valid(n, f, k, p, s)
+}
+
+/// Render a KPU trace as a paper-style table.
+pub fn render_kpu_trace(trace: &KpuTrace, title: &str) -> Table {
+    let mut header: Vec<String> = vec!["t".into(), "x_n".into()];
+    if trace.cfg.p > 0 {
+        header.push("Pad".into());
+    }
+    header.extend(trace.node_names.iter().cloned());
+    header.push("y_n".into());
+    let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &hdr_refs);
+    for (cycle, (x, pad, cells, y)) in trace.rows.iter().enumerate() {
+        let mut row: Vec<String> = vec![cycle.to_string(), x.clone()];
+        if trace.cfg.p > 0 {
+            row.push(pad.clone());
+        }
+        for c in cells {
+            row.push(match c.label {
+                Some((n, i)) => format!("z{n},{i}"),
+                None => "-".into(),
+            });
+        }
+        row.push(match y.label {
+            Some((n, _)) => format!("y{n}"),
+            None => "-".into(),
+        });
+        t.row(&row);
+    }
+    t
+}
+
+/// Verify every displayed label in a KPU trace against the convolution
+/// oracle: the structural value at a labelled cell must equal the partial
+/// sum z_{n,i} (Eq. 3). Returns the number of checked cells.
+pub fn verify_kpu_trace(trace: &KpuTrace) -> Result<usize, String> {
+    let KpuTraceCfg { f, k, p, .. } = trace.cfg;
+    let xmap: Vec<i64> = (0..(f * f) as i64).collect();
+    let w: Vec<i64> = (1..=(k * k) as i64).collect();
+    let mut checked = 0;
+    for (cycle, (_, _, cells, y)) in trace.rows.iter().enumerate() {
+        for (cell, &(u, v)) in cells.iter().zip(trace.node_pos.iter()) {
+            if let Some((n, i)) = cell.label {
+                debug_assert_eq!(i, u * k + v);
+                let expect = partial_oracle(&xmap, f, k, p, &w, n as usize, i);
+                if cell.value != expect {
+                    return Err(format!(
+                        "cycle {cycle} node a{}{}: value {} != z_({n},{i}) = {expect}",
+                        u + 1,
+                        v + 1,
+                        cell.value
+                    ));
+                }
+                checked += 1;
+            }
+        }
+        if let Some((n, _)) = y.label {
+            let expect = conv_oracle(&xmap, f, k, p, &w, n as usize);
+            if y.value != expect {
+                return Err(format!("cycle {cycle} y: {} != y_{n} = {expect}", y.value));
+            }
+            checked += 1;
+        }
+    }
+    Ok(checked)
+}
+
+/// Partial-sum oracle (Eq. 3): products 0..=i of window n.
+pub fn partial_oracle(
+    xmap: &[i64],
+    f: usize,
+    k: usize,
+    p: usize,
+    w: &[i64],
+    n: usize,
+    i: usize,
+) -> i64 {
+    let (r, c) = (n / f, n % f);
+    let mut acc = 0i64;
+    for j in 0..=i {
+        let (u, v) = (j / k, j % k);
+        let rr = r as isize + u as isize - p as isize;
+        let cc = c as isize + v as isize - p as isize;
+        let x = if rr < 0 || cc < 0 || rr >= f as isize || cc >= f as isize {
+            0
+        } else {
+            xmap[rr as usize * f + cc as usize]
+        };
+        acc += w[j] * x;
+    }
+    acc
+}
+
+/// FCU timing trace (Tables III/IV): returns a rendered table plus the
+/// verified output count.
+pub fn trace_fcu(d_in: usize, j: usize, h: usize, title: &str) -> (Table, usize) {
+    // Ramp inputs and distinct weights, bias 0 to match the paper's table.
+    let x: Vec<i64> = (0..d_in as i64).map(|v| v + 1).collect();
+    let w: Vec<Vec<i64>> = (0..h)
+        .map(|n| (0..d_in).map(|m| (n * d_in + m + 1) as i64).collect())
+        .collect();
+    let rom = fcu_rom(&w, 0, j, h, d_in);
+    let mut fcu = Fcu::new(j, h, d_in, rom, vec![0; h]);
+    let batches = d_in.div_ceil(j);
+
+    let mut header: Vec<String> = vec!["t".into(), "n".into()];
+    for m in 0..j {
+        header.push(format!("w_i,{m}"));
+    }
+    header.push("q".into());
+    header.push("y".into());
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(title, &hdr);
+
+    let expect = super::fcu::dense_oracle(&x, &w, &vec![0; h]);
+    let mut verified = 0;
+    let mut t = 0usize;
+    for batch in 0..batches {
+        let lane: Vec<i64> = (0..j)
+            .map(|m| {
+                let feat = batch * j + m;
+                if feat < d_in {
+                    x[feat]
+                } else {
+                    0
+                }
+            })
+            .collect();
+        for _ in 0..h {
+            let out = fcu.tick(&lane);
+            let cfg = batch * h + out.neuron;
+            let mut row: Vec<String> = vec![t.to_string(), (batch * j).to_string()];
+            for m in 0..j {
+                row.push(format!("w{cfg},{m}"));
+            }
+            row.push(if batch == 0 {
+                "0".into()
+            } else {
+                format!("z{},{}", out.neuron, batch * j - 1)
+            });
+            row.push(if out.valid {
+                // Final batch: must equal the dense oracle.
+                assert_eq!(out.y, expect[out.neuron], "neuron {}", out.neuron);
+                verified += 1;
+                format!("y{}", out.neuron)
+            } else {
+                format!("z{},{}", out.neuron, (batch + 1) * j - 1)
+            });
+            table.row(&row);
+            t += 1;
+        }
+    }
+    (table, verified)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_trace_verified() {
+        // Table I: 5x5 map, 3x3 kernel, no padding, 25 cycles.
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 0,
+            s: 1,
+            cycles: 25,
+        });
+        let checked = verify_kpu_trace(&trace).unwrap();
+        assert!(checked > 30, "only {checked} labelled cells verified");
+    }
+
+    #[test]
+    fn table_i_spot_labels() {
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 0,
+            s: 1,
+            cycles: 25,
+        });
+        // Paper Table I: t=12 -> a11=z12,0 a13=z10,2 a21=z7,3 a23=z5,5
+        // a31=z2,6 y=y0.
+        let (_, _, cells, y) = &trace.rows[12];
+        let labels: Vec<Option<(i64, usize)>> = cells.iter().map(|c| c.label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                Some((12, 0)),
+                Some((10, 2)),
+                Some((7, 3)),
+                Some((5, 5)),
+                Some((2, 6)),
+            ]
+        );
+        assert_eq!(y.label, Some((0, 8)));
+        // t=15/16: invalid outputs (the windows highlighted in Fig. 3a).
+        assert_eq!(trace.rows[15].3.label, None);
+        assert_eq!(trace.rows[16].3.label, None);
+        // t=3: a11 shows '-' because y_3 is invalid.
+        assert_eq!(trace.rows[3].2[0].label, None);
+    }
+
+    #[test]
+    fn table_ii_trace_verified_and_continuous() {
+        // Table II: padding p=1, 37 cycles (one frame + lead-in/out).
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 1,
+            s: 1,
+            cycles: 37,
+        });
+        verify_kpu_trace(&trace).unwrap();
+        // Continuous flow at the output: y_0..y_24 on consecutive cycles
+        // 12..=36.
+        for (t, row) in trace.rows.iter().enumerate().take(37).skip(12) {
+            let (n, _) = row.3.label.unwrap_or((-1, 0));
+            assert_eq!(n, (t - 12) as i64, "cycle {t}");
+        }
+    }
+
+    #[test]
+    fn table_ii_pad_tuples() {
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 1,
+            s: 1,
+            cycles: 37,
+        });
+        // Paper Table II: t=6 (x0) pad=(1,1,0); t=7 (x1) pad=(1,1,1);
+        // t=10 (x4) pad=(0,1,1).
+        assert_eq!(trace.rows[6].1, "(1,1,0)");
+        assert_eq!(trace.rows[7].1, "(1,1,1)");
+        assert_eq!(trace.rows[10].1, "(0,1,1)");
+        assert_eq!(trace.rows[0].1, "-"); // zero-feed cycle
+    }
+
+    #[test]
+    fn stride_filters_outputs() {
+        // s=2: only windows at even (r, c) are valid (Eq. 11).
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 6,
+            k: 2,
+            p: 0,
+            s: 2,
+            cycles: 36,
+        });
+        verify_kpu_trace(&trace).unwrap();
+        let valid: Vec<i64> = trace
+            .rows
+            .iter()
+            .filter_map(|r| r.3.label.map(|(n, _)| n))
+            .collect();
+        for n in &valid {
+            let (r, c) = (*n as usize / 6, *n as usize % 6);
+            assert_eq!((r % 2, c % 2), (0, 0));
+        }
+        assert!(!valid.is_empty());
+    }
+
+    #[test]
+    fn fcu_trace_table_iii() {
+        // Table III: h=5, j=4, d_in=8 (two batches, outputs in batch 2).
+        let (table, verified) = trace_fcu(8, 4, 5, "Table III");
+        assert_eq!(verified, 5);
+        assert_eq!(table.rows.len(), 10);
+        // First batch rows show q=0; the second batch emits y0..y4.
+        assert_eq!(table.rows[0][6], "0");
+        assert!(table.rows[5][7].starts_with('y'));
+    }
+
+    #[test]
+    fn fcu_trace_table_iv_with_aggregation() {
+        // Table IV: aggregated FCU h=4, j=4, d_in=8.
+        let (_, verified) = trace_fcu(8, 4, 4, "Table IV");
+        assert_eq!(verified, 4);
+    }
+
+    #[test]
+    fn render_contains_paper_labels() {
+        let trace = trace_kpu(KpuTraceCfg {
+            f: 5,
+            k: 3,
+            p: 0,
+            s: 1,
+            cycles: 25,
+        });
+        let s = render_kpu_trace(&trace, "Table I").render();
+        assert!(s.contains("z0,0"));
+        assert!(s.contains("y0"));
+        assert!(s.contains("a31"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (stands in for `criterion`, not vendored here).
+//!
+//! Each `[[bench]]` target with `harness = false` builds a binary that uses
+//! this module: warm-up, fixed-duration measurement, and a summary line of
+//! median / mean / p95 per iteration plus derived throughput. Output is
+//! intentionally grep-stable: one `BENCH <name> ...` line per benchmark so
+//! `bench_output.txt` can be diffed across the perf-pass iterations.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Hard cap on measured iterations (for very slow benches).
+    pub max_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+pub struct Bencher {
+    group: String,
+    opts: BenchOpts,
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        println!("# bench group: {group}");
+        Self {
+            group: group.to_string(),
+            opts: BenchOpts::default(),
+        }
+    }
+
+    pub fn with_opts(group: &str, opts: BenchOpts) -> Self {
+        println!("# bench group: {group}");
+        Self {
+            group: group.to_string(),
+            opts,
+        }
+    }
+
+    /// Benchmark `f`, reporting per-iteration stats. Returns median ns.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> f64 {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.opts.warmup {
+            f();
+        }
+        // Measure in batches; record per-batch time to estimate spread.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut iters: u64 = 0;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.opts.measure && iters < self.opts.max_iters {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples_ns[samples_ns.len() / 2];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let p95 = samples_ns[(samples_ns.len() as f64 * 0.95) as usize % samples_ns.len()];
+        println!(
+            "BENCH {}/{name} iters={iters} median={} mean={} p95={}",
+            self.group,
+            fmt_ns(median),
+            fmt_ns(mean),
+            fmt_ns(p95),
+        );
+        median
+    }
+
+    /// Benchmark with a throughput annotation (elements per iteration).
+    pub fn bench_throughput<F: FnMut()>(&self, name: &str, elems: u64, f: F) -> f64 {
+        let median = self.bench(name, f);
+        let per_sec = elems as f64 / (median * 1e-9);
+        println!(
+            "BENCH {}/{name} throughput={:.3}M elems/s",
+            self.group,
+            per_sec / 1e6
+        );
+        median
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::with_opts(
+            "test",
+            BenchOpts {
+                warmup: Duration::from_millis(5),
+                measure: Duration::from_millis(20),
+                max_iters: 10_000,
+            },
+        );
+        let mut acc = 0u64;
+        let med = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(med >= 0.0);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,80 @@
+//! Small self-contained utilities.
+//!
+//! This build environment is fully offline with only the `xla` crate tree
+//! vendored, so the usual ecosystem crates (rand, serde_json, proptest,
+//! criterion, clap) are replaced by the minimal implementations in this
+//! module. Each sub-module documents which crate it stands in for.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::Table;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Greatest divisor of `n` that is `<= cap` (paper Eq. 14).
+///
+/// `n >= 1` is required; the result is always >= 1 because 1 divides n.
+pub fn greatest_divisor_leq(n: usize, cap: usize) -> usize {
+    assert!(n >= 1, "n must be positive");
+    let cap = cap.max(1).min(n);
+    (1..=cap).rev().find(|d| n % d == 0).unwrap_or(1)
+}
+
+/// Format a count the way the paper's tables do: exact below 1000,
+/// `x.yk` / `x.yM` above.
+pub fn paper_count(n: u64) -> String {
+    if n < 1000 {
+        format!("{n}")
+    } else if n < 1_000_000 {
+        let k = n as f64 / 1000.0;
+        if k >= 100.0 {
+            format!("{:.0}k", k)
+        } else {
+            format!("{:.1}k", k)
+        }
+    } else {
+        format!("{:.1}M", n as f64 / 1_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn greatest_divisor_examples() {
+        // Paper Eq. 14 example: d_l = 10 neurons, h_max = 9 -> h = 5.
+        assert_eq!(greatest_divisor_leq(10, 9), 5);
+        assert_eq!(greatest_divisor_leq(16, 16), 16);
+        assert_eq!(greatest_divisor_leq(16, 15), 8);
+        assert_eq!(greatest_divisor_leq(7, 3), 1);
+        assert_eq!(greatest_divisor_leq(12, 6), 6);
+    }
+
+    #[test]
+    fn paper_count_formats() {
+        assert_eq!(paper_count(999), "999");
+        assert_eq!(paper_count(1024), "1.0k");
+        assert_eq!(paper_count(6672), "6.7k");
+        assert_eq!(paper_count(5060), "5.1k");
+        assert_eq!(paper_count(11_700_000), "11.7M");
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny property-testing harness (stands in for `proptest`, which is not
+//! vendored in this offline environment).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(256, 0xBEEF, |rng| {
+//!     let k = rng.range(1, 7);
+//!     // ... build inputs from rng, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+//! On failure the harness reports the case index and the sub-seed so the
+//! exact case replays deterministically (no shrinking — cases are kept
+//! small by construction instead).
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `property`. Each case gets an independent
+/// deterministic RNG derived from `seed` and the case index.
+///
+/// Panics with a replayable diagnostic on the first failing case.
+pub fn prop_check<F>(cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let sub_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(sub_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (replay with seed {sub_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality helper with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} (left={:?}, right={:?})",
+                format!($($fmt)*), a, b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check(50, 1, |rng| {
+            n += 1;
+            let x = rng.range(0, 100);
+            prop_assert!(x <= 100, "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(50, 2, |rng| {
+            let x = rng.range(0, 10);
+            prop_assert!(x < 5, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        prop_check(10, 77, |rng| {
+            first.push(rng.range(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        prop_check(10, 77, |rng| {
+            second.push(rng.range(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

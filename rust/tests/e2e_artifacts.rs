@@ -1,0 +1,161 @@
+//! End-to-end integration over the real artifacts (E12 in test form):
+//! artifact manifest sanity, three-way value agreement (rust cycle sim ==
+//! PJRT-executed JAX golden == exporter vectors), and a full serve loop
+//! with golden verification enabled.
+//!
+//! All tests skip (with a note) when `make artifacts` hasn't run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::quant::QModel;
+use cnn_flow::runtime::{artifacts_dir, ModelBundle, Runtime};
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::json::Json;
+use cnn_flow::util::Rng;
+
+fn ready() -> bool {
+    let ok = artifacts_dir().join("meta.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn meta_manifest_lists_both_models() {
+    if !ready() {
+        return;
+    }
+    let text = std::fs::read_to_string(artifacts_dir().join("meta.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    for name in ["digits", "jsc"] {
+        let entry = j.get("models").get(name);
+        assert!(entry.get("qat_accuracy").as_f64().unwrap() > 0.9, "{name}");
+        let hlo = entry.get("int8_hlo").as_str().unwrap();
+        assert!(artifacts_dir().join(hlo).exists(), "{hlo} missing");
+    }
+}
+
+#[test]
+fn hlo_artifacts_have_full_constants() {
+    if !ready() {
+        return;
+    }
+    for name in ["digits_int8", "jsc_int8", "digits_float", "model"] {
+        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            !text.contains("{...}"),
+            "{name}: HLO printer elided constants"
+        );
+        assert!(text.contains("ENTRY"), "{name}: not an HLO module");
+    }
+}
+
+#[test]
+fn three_way_agreement_on_random_inputs() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    for name in ["digits", "jsc"] {
+        let bundle = ModelBundle::load(&rt, name).unwrap();
+        let sim = PipelineSim::new(bundle.qmodel.clone(), None).unwrap();
+        let n: usize = bundle.qmodel.input_shape.iter().product();
+        let mut rng = Rng::new(0x3A3);
+        for case in 0..6 {
+            let x_q: Vec<i64> = (0..n).map(|_| rng.int8() as i64).collect();
+            let xf: Vec<f32> = x_q.iter().map(|&v| v as f32).collect();
+            let golden: Vec<i64> = bundle
+                .golden
+                .run_f32(&xf)
+                .unwrap()
+                .iter()
+                .map(|&v| v as i64)
+                .collect();
+            let simulated = sim.run(&[x_q]).unwrap().outputs[0].clone();
+            assert_eq!(simulated, golden, "{name} case {case}");
+        }
+        // And the exporter's stored vectors agree too.
+        for (i, tv) in bundle.qmodel.test_vectors.iter().enumerate() {
+            let simulated = sim.run(&[tv.x_q.clone()]).unwrap().outputs[0].clone();
+            assert_eq!(simulated, tv.y, "{name} stored vector {i}");
+        }
+    }
+}
+
+#[test]
+fn serve_with_live_golden_verification() {
+    if !ready() {
+        return;
+    }
+    let qm = QModel::load(&artifacts_dir().join("weights/digits.json")).unwrap();
+    let server = Arc::new(
+        Server::start(
+            qm.clone(),
+            ServerConfig {
+                batch: 8,
+                verify_every: 2, // verify half of all requests
+                ..Default::default()
+            },
+            Some("digits".into()),
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        let s = Arc::clone(&server);
+        let vectors: Vec<Vec<i64>> = qm.test_vectors.iter().map(|t| t.x_q.clone()).collect();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..24 {
+                s.infer(vectors[(c + i) % vectors.len()].clone()).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Let the async verifier drain.
+    std::thread::sleep(Duration::from_millis(800));
+    let m = Arc::try_unwrap(server).ok().unwrap().shutdown();
+    assert_eq!(m.completed, 96);
+    assert!(m.verified > 0, "verifier never ran");
+    assert_eq!(m.mismatches, 0, "golden mismatches detected");
+}
+
+#[test]
+fn utilization_advantage_over_reference_on_digits() {
+    if !ready() {
+        return;
+    }
+    let qm = QModel::load(&artifacts_dir().join("weights/digits.json")).unwrap();
+    let frames: Vec<Vec<i64>> = qm
+        .test_vectors
+        .iter()
+        .cycle()
+        .take(24)
+        .map(|t| t.x_q.clone())
+        .collect();
+    let ours = PipelineSim::new(qm.clone(), None).unwrap().run(&frames).unwrap();
+    let reference = PipelineSim::new_reference(qm).unwrap().run(&frames).unwrap();
+    // Weighted mean utilisation (by unit count) must favour ours; the
+    // fully-parallel reference leaves interleavable units idle.
+    let mean = |stats: &[cnn_flow::sim::pipeline::LayerStats]| {
+        let units: f64 = stats.iter().map(|s| s.units as f64).sum();
+        stats
+            .iter()
+            .map(|s| s.utilization * s.units as f64)
+            .sum::<f64>()
+            / units
+    };
+    let u_ours = mean(&ours.stats);
+    let u_ref = mean(&reference.stats);
+    assert!(
+        u_ours > u_ref * 1.5,
+        "expected a clear utilisation win: ours {u_ours:.3} vs ref {u_ref:.3}"
+    );
+    // And the paper's headline: continuous-flow utilisation close to full.
+    assert!(u_ours > 0.7, "mean utilisation {u_ours:.3}");
+}

@@ -1,0 +1,186 @@
+//! Property-based integration tests on coordinator invariants: routing
+//! (every accepted request answered exactly once, with its own answer),
+//! batching (never exceeds the configured group size), and state/metrics
+//! consistency under concurrency and backpressure.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::quant::{QKind, QLayer, QModel};
+use cnn_flow::util::prop::prop_check;
+use cnn_flow::util::Rng;
+use cnn_flow::{prop_assert, prop_assert_eq};
+
+/// Identity-plus-bias dense model: logits = x + 7, so every response is
+/// attributable to its request (routing check).
+fn probe_model(n: usize) -> QModel {
+    let mut w_q = vec![0i64; n * n];
+    for i in 0..n {
+        w_q[i * n + i] = 1;
+    }
+    QModel {
+        name: "probe".into(),
+        input_shape: [1, 1, n],
+        input_scale: 1.0,
+        layers: vec![QLayer {
+            name: "id".into(),
+            kind: QKind::Dense,
+            k: 0,
+            s: 1,
+            p: 0,
+            relu: false,
+            w_q,
+            w_shape: vec![n, n],
+            b_q: vec![7; n],
+            m: 0.0,
+            in_shape: [1, 1, n],
+            out_shape: [1, 1, n],
+        }],
+        test_vectors: vec![],
+        qat_accuracy: 1.0,
+    }
+}
+
+#[test]
+fn routing_every_request_gets_its_own_answer() {
+    prop_check(10, 0xC0, |rng| {
+        let n = 4;
+        let batch = rng.range(1, 16);
+        let clients = rng.range(1, 6);
+        let per_client = rng.range(3, 12);
+        let server = Arc::new(
+            Server::start(
+                probe_model(n),
+                ServerConfig {
+                    batch,
+                    queue_depth: 1024,
+                    verify_every: 0,
+                    batch_window: Duration::from_millis(2),
+                    ..Default::default()
+                },
+                None,
+            )
+            .map_err(|e| e)?,
+        );
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || -> Result<(), String> {
+                let mut rng = Rng::new(c as u64 * 7919);
+                for _ in 0..per_client {
+                    let x: Vec<i64> = (0..4).map(|_| rng.int8() as i64).collect();
+                    let expect: Vec<i64> = x.iter().map(|v| v + 7).collect();
+                    let resp = s.infer(x)?;
+                    if resp.logits != expect {
+                        return Err(format!("mis-routed: {:?} != {expect:?}", resp.logits));
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        let m = server.metrics();
+        prop_assert_eq!(
+            m.completed,
+            (clients * per_client) as u64,
+            "completed count"
+        );
+        prop_assert_eq!(m.accepted, m.completed, "accepted != completed");
+        prop_assert_eq!(m.rejected, 0u64, "unexpected rejections");
+        Ok(())
+    });
+}
+
+#[test]
+fn batching_respects_group_bound() {
+    prop_check(8, 0xC1, |rng| {
+        let batch = rng.range(2, 8);
+        let server = Arc::new(
+            Server::start(
+                probe_model(4),
+                ServerConfig {
+                    batch,
+                    queue_depth: 512,
+                    verify_every: 0,
+                    batch_window: Duration::from_millis(10),
+                    ..Default::default()
+                },
+                None,
+            )
+            .map_err(|e| e)?,
+        );
+        let total = batch * 6;
+        let mut handles = Vec::new();
+        for _ in 0..total {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || s.infer(vec![1, 2, 3, 4]).is_ok()));
+        }
+        let ok = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&b| b)
+            .count();
+        let m = server.metrics();
+        prop_assert_eq!(m.completed as usize, ok, "ok count mismatch");
+        // Mean batch size can never exceed the configured bound.
+        prop_assert!(
+            m.mean_batch <= batch as f64 + 1e-9,
+            "mean batch {} > bound {batch}",
+            m.mean_batch
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_account_for_backpressure() {
+    prop_check(6, 0xC2, |rng| {
+        let server = Arc::new(
+            Server::start(
+                probe_model(4),
+                ServerConfig {
+                    batch: 1,
+                    queue_depth: 1,
+                    verify_every: 0,
+                    batch_window: Duration::from_millis(0),
+                    ..Default::default()
+                },
+                None,
+            )
+            .map_err(|e| e)?,
+        );
+        let burst = rng.range(8, 40);
+        let mut handles = Vec::new();
+        for _ in 0..burst {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || s.infer(vec![0, 0, 0, 0]).is_ok()));
+        }
+        let ok = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&b| b)
+            .count();
+        let m = server.metrics();
+        prop_assert_eq!(
+            (m.accepted + m.rejected) as usize,
+            burst,
+            "accepted + rejected != submitted"
+        );
+        prop_assert_eq!(m.completed as usize, ok, "completed != successful calls");
+        Ok(())
+    });
+}
+
+#[test]
+fn shutdown_is_clean_after_load() {
+    let server = Server::start(probe_model(4), ServerConfig::default(), None).unwrap();
+    for _ in 0..32 {
+        server.infer(vec![1, 1, 1, 1]).unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 32);
+    assert_eq!(m.mismatches, 0);
+}
