@@ -1,11 +1,26 @@
 //! E12 — the end-to-end driver (DESIGN.md §5): load the QAT-trained digits
 //! CNN artifact, serve a stream of batched inference requests through the
-//! continuous-flow coordinator, cross-check sampled answers against the
-//! AOT-compiled JAX int8 golden model via PJRT, and report accuracy,
-//! latency and throughput (wall-clock and projected hardware).
+//! sharded continuous-flow coordinator, cross-check sampled answers
+//! against the AOT-compiled JAX int8 golden model via PJRT, and report
+//! accuracy, latency and throughput (wall-clock and projected hardware).
+//!
+//! Without artifacts the example falls back to the deterministic synthetic
+//! fixture ([`QModel::synthetic`]) and verifies every response against the
+//! single-`PipelineSim` golden path instead — so it always runs.
+//!
+//! # Serve CLI flags (example and `cnn-flow serve`)
+//!
+//! | flag | default | meaning |
+//! |------|---------|---------|
+//! | `--workers N` | 2 (CLI: 1) | worker shards; each owns a pipeline replica, aggregate throughput scales with N |
+//! | `--requests N` | 512 (CLI: 256) | total requests issued by the 4 client threads |
+//! | `--batch N` | 16 | max frames per contiguous continuous-flow group |
+//! | `--queue-depth N` | 256 | bounded queue depth per shard (backpressure threshold) |
+//! | `--verify-every N` | 4 (CLI: 8) | per-shard golden-verify sampling period (0 = off; forced off on the synthetic path, which has no PJRT golden model) |
+//! | `--synthetic` | off | CLI only: serve the artifact-free synthetic fixture |
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example serve_stream
+//! make artifacts && cargo run --release --offline --example serve_stream -- --workers 4
 //! ```
 
 use std::sync::Arc;
@@ -63,14 +78,120 @@ fn make_digit(rng: &mut Rng, label: usize) -> Vec<f32> {
     canvas
 }
 
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn shard_report(server: &Server) {
+    println!("\nper-shard serving stats:");
+    for s in server.shard_metrics() {
+        println!(
+            "  shard {} completed {:>5}  batches {:>4}  busy {:>9} cycles  p50 {:?}  p99 {:?}",
+            s.shard, s.completed, s.batches, s.busy_cycles, s.p50, s.p99
+        );
+    }
+}
+
+/// Artifact-free path: serve the synthetic fixture and check every answer
+/// bit-for-bit against the single-pipeline golden sim.
+fn serve_synthetic(opts: &ServeOpts) {
+    println!("artifacts not built: serving the synthetic fixture instead");
+    let n_requests = opts.requests;
+    let qm = QModel::synthetic(12, 8, 10, 0xE12);
+    let golden = PipelineSim::new(qm.clone(), None).unwrap();
+    let config = ServerConfig {
+        workers: opts.workers,
+        batch: opts.batch,
+        queue_depth: opts.queue_depth,
+        verify_every: 0, // no PJRT golden model on the synthetic path
+        ..Default::default()
+    };
+    let clock_hz = config.clock_hz;
+    let server = Arc::new(Server::start(qm, config, None).unwrap());
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..4usize {
+        let s = Arc::clone(&server);
+        let golden = golden.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xE12 + client as u64);
+            let (mut served, mut exact) = (0usize, 0usize);
+            for _ in 0..n_requests / 4 {
+                let x: Vec<i64> = (0..144).map(|_| rng.int8() as i64).collect();
+                let expect = golden.run(&[x.clone()]).unwrap().outputs[0].clone();
+                match s.infer(x) {
+                    Ok(resp) => {
+                        served += 1;
+                        if resp.logits == expect {
+                            exact += 1;
+                        }
+                    }
+                    Err(_) => {} // backpressure
+                }
+            }
+            (served, exact)
+        }));
+    }
+    let (mut served, mut exact) = (0usize, 0usize);
+    for h in handles {
+        let (s, e) = h.join().unwrap();
+        served += s;
+        exact += e;
+    }
+    let wall = started.elapsed();
+    let mut server = Arc::try_unwrap(server).ok().expect("clients joined");
+    server.drain();
+    let m = server.metrics();
+    println!(
+        "served {served}/{n_requests} in {wall:?}; {exact}/{served} bit-identical to golden sim"
+    );
+    println!(
+        "coordinator: {} shard(s), mean batch {:.1}, p50 {:?}, p99 {:?}, aggregate {:.2} MInf/s at {:.0} MHz",
+        m.workers,
+        m.mean_batch,
+        m.p50,
+        m.p99,
+        m.aggregate_fps / 1e6,
+        clock_hz / 1e6,
+    );
+    shard_report(&server);
+    assert_eq!(exact, served, "sharded serving diverged from the golden sim");
+    println!("OK (synthetic)");
+}
+
+struct ServeOpts {
+    workers: usize,
+    requests: usize,
+    batch: usize,
+    queue_depth: usize,
+    verify_every: usize,
+}
+
 fn main() {
-    // --- load the trained artifact -------------------------------------
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ServeOpts {
+        workers: flag(&args, "--workers", 2),
+        requests: flag(&args, "--requests", 512),
+        batch: flag(&args, "--batch", 16),
+        queue_depth: flag(&args, "--queue-depth", 256),
+        verify_every: flag(&args, "--verify-every", 4),
+    };
+    let n_requests = opts.requests;
+
+    // --- load the trained artifact (or fall back to the fixture) --------
     let path = artifacts_dir().join("weights/digits.json");
     let qm = match QModel::load(&path) {
         Ok(q) => q,
         Err(e) => {
-            eprintln!("{e}\nrun `make artifacts` first");
-            std::process::exit(1);
+            // Surface the reason (a *corrupt* artifact deserves a
+            // diagnosis, not a silent fallback), then run artifact-free.
+            eprintln!("cannot serve the digits artifact: {e}");
+            serve_synthetic(&opts);
+            return;
         }
     };
     println!(
@@ -101,15 +222,16 @@ fn main() {
 
     // --- serve a stream -------------------------------------------------
     let config = ServerConfig {
-        batch: 16,
-        verify_every: 4,
+        workers: opts.workers,
+        batch: opts.batch,
+        queue_depth: opts.queue_depth,
+        verify_every: opts.verify_every,
         ..Default::default()
     };
     let clock_hz = config.clock_hz;
     let server = Arc::new(
         Server::start(qm.clone(), config, Some("digits".to_string())).unwrap(),
     );
-    let n_requests = 512usize;
     let n_clients = 4usize;
     let started = Instant::now();
     let mut handles = Vec::new();
@@ -144,10 +266,11 @@ fn main() {
         correct += c;
     }
     let wall = started.elapsed();
-    std::thread::sleep(std::time::Duration::from_millis(300));
-    let m = Arc::try_unwrap(server)
-        .map(|s| s.shutdown())
-        .unwrap_or_else(|s| s.metrics());
+    // Graceful drain (replaces the old sleep-and-hope): joins the shard
+    // workers and the verifier after its sampling queue empties.
+    let mut server = Arc::try_unwrap(server).ok().expect("clients joined");
+    server.drain();
+    let m = server.metrics();
 
     // --- report ----------------------------------------------------------
     println!("\n== E12 end-to-end results ==");
@@ -160,15 +283,17 @@ fn main() {
         correct as f64 / served as f64 * 100.0
     );
     println!(
-        "coordinator: mean batch {:.1}, mean service {:?}",
-        m.mean_batch, m.mean_service
+        "coordinator: {} shard(s), mean batch {:.1}, mean service {:?} (p50 {:?}, p95 {:?}, p99 {:?})",
+        m.workers, m.mean_batch, m.mean_service, m.p50, m.p95, m.p99
     );
     println!(
-        "projected hardware: {:.2} MInf/s at {:.0} MHz ({:.1} us/frame latency)",
+        "projected hardware: {:.2} MInf/s per pipeline, {:.2} MInf/s aggregate at {:.0} MHz ({:.1} us/frame latency)",
         m.projected_fps / 1e6,
+        m.aggregate_fps / 1e6,
         clock_hz / 1e6,
         proj.first_frame_latency as f64 / clock_hz * 1e6,
     );
+    shard_report(&server);
     println!(
         "golden cross-check (PJRT): {} verified, {} mismatches",
         m.verified, m.mismatches

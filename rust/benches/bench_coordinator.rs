@@ -1,0 +1,79 @@
+//! Throughput scaling of the sharded serving coordinator.
+//!
+//! Replays one seeded trace (synthetic fixture — no artifacts needed)
+//! against servers with 1/2/4/8 worker shards and reports both wall-clock
+//! replay time and the *simulated* aggregate throughput (completed frames
+//! over the max per-shard busy cycles at the modelled clock). Every
+//! response is checked bit-for-bit against the single-`PipelineSim`
+//! golden path, and the run asserts >= 2x aggregate throughput at
+//! 4 workers vs 1.
+//!
+//! Output is grep-stable: one `BENCH coordinator/...` line per
+//! configuration.
+
+use std::time::{Duration, Instant};
+
+use cnn_flow::coordinator::{loadgen, Server, ServerConfig};
+use cnn_flow::quant::QModel;
+use cnn_flow::sim::pipeline::PipelineSim;
+
+fn main() {
+    println!("# bench group: coordinator");
+    let qm = QModel::synthetic(12, 8, 10, 0xBE);
+    let golden = PipelineSim::new(qm.clone(), None).unwrap();
+    let trace = loadgen::Trace::seeded(0xB0, 256, 144, 0);
+    let expected = loadgen::golden_outputs(&golden, &trace);
+
+    let mut base_fps = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let mut server = Server::start(
+            qm.clone(),
+            ServerConfig {
+                workers,
+                batch: 8,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_window: Duration::from_micros(200),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let started = Instant::now();
+        let report = loadgen::replay(&server, &trace, 32, Some(&expected));
+        let wall = started.elapsed();
+        server.drain();
+        let shards = server.shard_metrics();
+        let m = server.metrics();
+        assert_eq!(report.ok, 256, "workers={workers}: not all requests served");
+        assert_eq!(
+            report.mismatched, 0,
+            "workers={workers}: responses diverged from the golden sim"
+        );
+        assert_eq!(m.completed, 256);
+        if workers == 1 {
+            base_fps = m.aggregate_fps;
+        }
+        let busy_max = shards.iter().map(|s| s.busy_cycles).max().unwrap_or(0);
+        println!(
+            "BENCH coordinator/workers={workers} wall={wall:?} \
+             aggregate={:.3}M inf/s speedup={:.2}x busy_max={busy_max} \
+             mean_batch={:.1} p50={:?} p99={:?}",
+            m.aggregate_fps / 1e6,
+            m.aggregate_fps / base_fps,
+            m.mean_batch,
+            m.p50,
+            m.p99,
+        );
+        if workers == 4 {
+            assert!(
+                m.aggregate_fps >= 2.0 * base_fps,
+                "4 workers did not reach 2x the single-shard simulated throughput \
+                 ({:.0} vs {:.0})",
+                m.aggregate_fps,
+                base_fps
+            );
+        }
+    }
+    println!("OK: simulated throughput scales with worker count");
+}

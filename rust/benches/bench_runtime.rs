@@ -14,6 +14,10 @@ fn main() {
         println!("artifacts not built; skipping runtime benches");
         return;
     }
+    if cfg!(not(feature = "pjrt")) {
+        println!("pjrt feature disabled; skipping runtime benches");
+        return;
+    }
     let rt = Runtime::cpu().expect("PJRT CPU client");
 
     for name in ["digits", "jsc"] {

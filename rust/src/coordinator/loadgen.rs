@@ -1,0 +1,190 @@
+//! Deterministic load generation for the sharded coordinator.
+//!
+//! Integration tests and benches need repeatable traffic, but the old
+//! approach (client threads + wall-clock sleeps) made request streams —
+//! and therefore metrics assertions — racy. This harness replays a
+//! *seeded trace* under a *virtual clock*:
+//!
+//! * [`Trace::seeded`] derives every frame and arrival tick from one seed,
+//!   so two runs (or two servers) see byte-identical request streams;
+//! * [`replay`] submits in virtual-arrival order with a bounded in-flight
+//!   window (closed loop), and the arrival ticks are **barriers**:
+//!   requests sharing a tick form one burst, and every in-flight request
+//!   is settled before the clock advances to the next tick. Time is the
+//!   trace's tick counter, not the wall clock: the replay never sleeps,
+//!   burstiness is shaped entirely by `mean_gap_ticks` (0 = one
+//!   back-to-back burst), and with `window <= workers * queue_depth` a
+//!   request can never be rejected by backpressure, so acceptance counts
+//!   are exactly reproducible.
+//!
+//! Responses are optionally checked against caller-provided expected
+//! outputs (the single-`PipelineSim` golden path), which is how the
+//! sharded server's bit-exactness is asserted.
+
+use std::collections::VecDeque;
+
+use super::{Pending, Server};
+use crate::sim::pipeline::PipelineSim;
+use crate::util::Rng;
+
+/// One request of a trace: a virtual arrival tick plus the input frame.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub at_tick: u64,
+    pub frame: Vec<i64>,
+}
+
+/// A deterministic request trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Generate `n` requests of `input_len` int8 features each. Arrival
+    /// gaps are uniform in `[0, 2 * mean_gap_ticks]` virtual ticks
+    /// (`mean_gap_ticks = 0` models a back-to-back burst).
+    pub fn seeded(seed: u64, n: usize, input_len: usize, mean_gap_ticks: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut tick = 0u64;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            tick += rng.below(2 * mean_gap_ticks + 1);
+            let frame: Vec<i64> = (0..input_len).map(|_| rng.int8() as i64).collect();
+            requests.push(TraceRequest {
+                at_tick: tick,
+                frame,
+            });
+        }
+        Trace { requests }
+    }
+
+    /// The trace's frames in arrival order (for computing golden outputs).
+    pub fn frames(&self) -> Vec<Vec<i64>> {
+        self.requests.iter().map(|r| r.frame.clone()).collect()
+    }
+}
+
+/// Golden outputs for a trace: every frame through one `PipelineSim`
+/// individually — the single-pipeline golden path that sharded serving
+/// must reproduce bit-for-bit (pass the result to [`replay`]).
+pub fn golden_outputs(sim: &PipelineSim, trace: &Trace) -> Vec<Vec<i64>> {
+    trace
+        .requests
+        .iter()
+        .map(|r| {
+            let mut res = sim
+                .run(std::slice::from_ref(&r.frame))
+                .expect("golden sim run failed");
+            res.outputs.swap_remove(0)
+        })
+        .collect()
+}
+
+/// Outcome counts of one replay.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LoadReport {
+    pub submitted: u64,
+    pub ok: u64,
+    /// Submissions refused by the server (backpressure or shutdown).
+    pub rejected: u64,
+    /// Accepted requests whose reply channel was dropped.
+    pub dropped: u64,
+    /// Responses that differed from the expected golden outputs.
+    pub mismatched: u64,
+}
+
+/// Replay `trace` against `server` with at most `window` requests in
+/// flight within one virtual tick; advancing to the next arrival tick
+/// settles everything outstanding first (tick barrier). When `expected`
+/// is given, response `i` must equal `expected[i]` bit-for-bit or it is
+/// counted as mismatched.
+pub fn replay(
+    server: &Server,
+    trace: &Trace,
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+) -> LoadReport {
+    fn settle(
+        idx: usize,
+        pending: Pending,
+        expected: Option<&[Vec<i64>]>,
+        report: &mut LoadReport,
+    ) {
+        match pending.wait() {
+            Ok(resp) => {
+                report.ok += 1;
+                if let Some(exp) = expected {
+                    if resp.logits != exp[idx] {
+                        report.mismatched += 1;
+                    }
+                }
+            }
+            Err(_) => report.dropped += 1,
+        }
+    }
+
+    let window = window.max(1);
+    let mut report = LoadReport::default();
+    let mut inflight: VecDeque<(usize, Pending)> = VecDeque::new();
+    let mut clock = trace.requests.first().map(|r| r.at_tick).unwrap_or(0);
+    for (i, req) in trace.requests.iter().enumerate() {
+        // Tick barrier: the virtual clock only advances once every
+        // request from earlier ticks has been answered.
+        if req.at_tick != clock {
+            clock = req.at_tick;
+            while let Some((idx, p)) = inflight.pop_front() {
+                settle(idx, p, expected, &mut report);
+            }
+        }
+        while inflight.len() >= window {
+            let (idx, p) = inflight.pop_front().unwrap();
+            settle(idx, p, expected, &mut report);
+        }
+        report.submitted += 1;
+        match server.submit(req.frame.clone()) {
+            Ok(p) => inflight.push_back((i, p)),
+            Err(_) => report.rejected += 1,
+        }
+    }
+    while let Some((idx, p)) = inflight.pop_front() {
+        settle(idx, p, expected, &mut report);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let a = Trace::seeded(9, 32, 16, 3);
+        let b = Trace::seeded(9, 32, 16, 3);
+        assert_eq!(a.frames(), b.frames());
+        assert_eq!(
+            a.requests.iter().map(|r| r.at_tick).collect::<Vec<_>>(),
+            b.requests.iter().map(|r| r.at_tick).collect::<Vec<_>>()
+        );
+        let c = Trace::seeded(10, 32, 16, 3);
+        assert_ne!(a.frames(), c.frames());
+    }
+
+    #[test]
+    fn ticks_are_monotone_and_frames_int8() {
+        let t = Trace::seeded(4, 64, 9, 5);
+        let mut prev = 0;
+        for r in &t.requests {
+            assert!(r.at_tick >= prev);
+            prev = r.at_tick;
+            assert_eq!(r.frame.len(), 9);
+            assert!(r.frame.iter().all(|v| v.abs() <= 127));
+        }
+    }
+
+    #[test]
+    fn zero_gap_trace_is_a_burst() {
+        let t = Trace::seeded(1, 16, 4, 0);
+        assert!(t.requests.iter().all(|r| r.at_tick == 0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Serving metrics: lock-free counters plus log2-bucketed latency
+//! histograms, kept per shard and merged into one aggregate snapshot.
+//!
+//! Shards never share cache lines for their hot counters (each shard owns
+//! its own `ShardMetrics` allocation), and the request path only ever does
+//! relaxed `fetch_add`s — snapshotting pays the merge cost instead.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency buckets: bucket `i` covers `[2^i, 2^(i+1))`
+/// nanoseconds, so 40 buckets span 1 ns .. ~18 minutes.
+pub const BUCKETS: usize = 40;
+
+/// A lock-free log2 latency histogram.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+fn bucket_index(ns: u64) -> usize {
+    (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// Upper edge (ns) of bucket `i`; quantiles report this bound, so they are
+/// conservative within a factor of two — adequate for p50/p95/p99 triage.
+fn bucket_upper_ns(i: usize) -> u64 {
+    if i + 1 >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time bucket counts (for merging across shards).
+    pub fn counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    pub fn quantile(&self, q: f64) -> Duration {
+        quantile(&self.counts(), q)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Quantile over (possibly merged) bucket counts.
+pub fn quantile(counts: &[u64; BUCKETS], q: f64) -> Duration {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return Duration::ZERO;
+    }
+    let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return Duration::from_nanos(bucket_upper_ns(i));
+        }
+    }
+    Duration::from_nanos(bucket_upper_ns(BUCKETS - 1))
+}
+
+/// Intake- and verifier-side counters, shared across the whole server.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    /// Requests placed on a shard other than their round-robin preference
+    /// (backpressure-aware spill).
+    pub spilled: AtomicU64,
+    pub verified: AtomicU64,
+    pub mismatches: AtomicU64,
+}
+
+/// Per-shard serving counters, owned by exactly one worker thread.
+#[derive(Default)]
+pub struct ShardMetrics {
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Steady-state simulated cycles attributed per frame (throughput).
+    pub sim_cycles_total: AtomicU64,
+    /// Simulated cycles this shard's pipeline spent occupied by frame
+    /// groups; the max across shards is the simulated makespan, from which
+    /// the aggregate projected throughput follows.
+    pub busy_cycles: AtomicU64,
+    pub service_ns_total: AtomicU64,
+    pub latency: Histogram,
+}
+
+/// A point-in-time view of one shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    pub completed: u64,
+    pub batches: u64,
+    pub busy_cycles: u64,
+    pub mean_batch: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+}
+
+impl ShardMetrics {
+    pub fn snapshot(&self, shard: usize) -> ShardSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        ShardSnapshot {
+            shard,
+            completed,
+            batches,
+            busy_cycles: self.busy_cycles.load(Ordering::Relaxed),
+            mean_batch: completed as f64 / batches.max(1) as f64,
+            p50: self.latency.quantile(0.50),
+            p95: self.latency.quantile(0.95),
+            p99: self.latency.quantile(0.99),
+        }
+    }
+}
+
+/// A point-in-time view of the whole server (all shards merged).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub workers: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub spilled: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub verified: u64,
+    pub mismatches: u64,
+    pub mean_batch: f64,
+    /// Mean wall-clock time from enqueue to answer.
+    pub mean_service: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Projected hardware throughput of ONE pipeline at the configured
+    /// clock (frames/s from mean steady-state cycles/frame).
+    pub projected_fps: f64,
+    /// Projected throughput of the sharded deployment: completed frames
+    /// over the simulated makespan (max busy cycles across shards) — this
+    /// is the number that scales with the worker count.
+    pub aggregate_fps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bracket_samples() {
+        let h = Histogram::new();
+        for us in [1u64, 2, 4, 100, 100, 100, 100, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // p50 lands in the 100us bucket (upper edge < 2x the sample).
+        assert!(p50 >= Duration::from_micros(100));
+        assert!(p50 < Duration::from_micros(200));
+        // p99 lands in the 5ms bucket.
+        assert!(p99 >= Duration::from_micros(5000));
+        assert!(p99 < Duration::from_micros(10000));
+    }
+
+    #[test]
+    fn merged_quantile_matches_union() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..9 {
+            a.record(Duration::from_nanos(100));
+        }
+        b.record(Duration::from_millis(1));
+        let mut merged = a.counts();
+        for (m, v) in merged.iter_mut().zip(b.counts().iter()) {
+            *m += v;
+        }
+        // 9 fast + 1 slow: p50 fast, p99 slow.
+        assert!(quantile(&merged, 0.5) < Duration::from_micros(1));
+        assert!(quantile(&merged, 0.99) >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn extreme_durations_clamp_into_range() {
+        let h = Histogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_secs(60 * 60));
+        assert!(h.quantile(0.25) > Duration::ZERO);
+        assert!(h.quantile(1.0) > Duration::from_secs(1));
+    }
+}

@@ -1,23 +1,47 @@
-//! Streaming inference coordinator (system S10) — the L3 serving layer.
+//! Sharded streaming inference coordinator (system S10) — the L3 serving
+//! layer.
 //!
 //! The paper's architecture is a continuous-flow pipeline: throughput is
-//! maximised when frames stream back-to-back so no unit ever starves.
-//! The coordinator therefore implements *data-rate-aware batching*: it
-//! drains the request queue into contiguous frame groups and feeds each
-//! group through the cycle-accurate pipeline as one uninterrupted stream,
-//! which is exactly the condition under which the hardware would hit its
-//! ~100% utilisation.
+//! maximised when frames stream back-to-back so no unit ever starves. Its
+//! companion work (*Data-Rate-Aware High-Speed CNN Inference on FPGAs*)
+//! scales past one stream by **replicating pipelines**; this coordinator
+//! mirrors that at the serving layer:
+//!
+//! * **N worker shards** — each worker thread owns its own [`PipelineSim`]
+//!   clone (one modelled pipeline replica) and a private bounded queue;
+//! * **data-rate-aware dispatch** — [`Server::submit`] places each request
+//!   on its round-robin-preferred shard, spilling to the next shard with
+//!   queue space when the preferred one is saturated, and rejecting only
+//!   when *every* shard queue is full (global backpressure);
+//! * **contiguous frame groups** — each shard drains its queue into groups
+//!   of up to `batch` frames (bounded by `batch_window`) and runs each
+//!   group through the simulator as one uninterrupted stream, the
+//!   condition under which the modelled hardware reaches ~100% utilisation;
+//! * **per-shard metrics** — every shard keeps its own counters and log2
+//!   latency histogram ([`metrics::ShardMetrics`]); snapshots merge them
+//!   into aggregate p50/p95/p99 and a sharded throughput projection
+//!   (`aggregate_fps` = frames over the max per-shard busy cycles);
+//! * **graceful drain** — [`Server::shutdown`] closes intake, enqueues a
+//!   shutdown marker *behind* every already-accepted request (FIFO), joins
+//!   the workers once they have answered everything, then joins the
+//!   verifier after its queue disconnects and drains. No sleeps, no
+//!   dropped accepted requests — the final snapshot is deterministic.
 //!
 //! Threads (std::thread — tokio is not vendored in this offline image):
+//! callers block on [`Server::infer`] (or hold a [`Pending`] from
+//! [`Server::submit`]); one worker thread per shard runs the pipeline
+//! simulator; an optional verifier thread owns the PJRT runtime and
+//! cross-checks a sample of responses against the AOT-compiled JAX int8
+//! golden model (never on the request path — samples are dropped, not
+//! queued, when it falls behind).
 //!
-//! * callers block on [`Server::infer`] (bounded queue = backpressure);
-//! * a batcher/worker thread drains the queue, runs the pipeline
-//!   simulator, and answers;
-//! * an optional verifier thread owns the PJRT runtime and cross-checks a
-//!   sample of responses against the AOT-compiled JAX int8 golden model
-//!   (never on the request path).
+//! [`loadgen`] provides the deterministic seeded-trace replay harness used
+//! by the integration tests and `benches/bench_coordinator.rs`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+pub mod loadgen;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,26 +49,34 @@ use std::time::{Duration, Instant};
 use crate::quant::QModel;
 use crate::sim::pipeline::PipelineSim;
 
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+use metrics::ShardMetrics;
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Number of worker shards (modelled pipeline replicas). Aggregate
+    /// simulated throughput scales with this count; 1 reproduces the
+    /// original single-pipeline server.
+    pub workers: usize,
     /// Max frames per continuous-flow group.
     pub batch: usize,
-    /// Bounded request queue depth (backpressure threshold).
+    /// Bounded request queue depth *per shard* (backpressure threshold).
     pub queue_depth: usize,
-    /// Cross-check every n-th request against the PJRT golden model
-    /// (0 = never).
+    /// Cross-check every n-th request (per shard) against the PJRT golden
+    /// model (0 = never).
     pub verify_every: usize,
     /// Modelled hardware clock, used to convert simulated cycles into
     /// projected hardware latency/throughput figures.
     pub clock_hz: f64,
-    /// How long the batcher waits to fill a group before flushing.
+    /// How long a shard waits to fill a group before flushing.
     pub batch_window: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
+            workers: 1,
             batch: 16,
             queue_depth: 256,
             verify_every: 8,
@@ -62,35 +94,8 @@ pub struct InferResponse {
     pub argmax: usize,
     /// Simulated hardware cycles from frame entry to last output.
     pub sim_latency_cycles: u64,
-    /// Wall-clock service time in the coordinator.
+    /// Wall-clock time from enqueue to answer.
     pub service_time: Duration,
-}
-
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub accepted: AtomicU64,
-    pub rejected: AtomicU64,
-    pub completed: AtomicU64,
-    pub batches: AtomicU64,
-    pub verified: AtomicU64,
-    pub mismatches: AtomicU64,
-    pub sim_cycles_total: AtomicU64,
-    pub service_ns_total: AtomicU64,
-}
-
-/// A point-in-time view of the metrics.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct MetricsSnapshot {
-    pub accepted: u64,
-    pub rejected: u64,
-    pub completed: u64,
-    pub batches: u64,
-    pub verified: u64,
-    pub mismatches: u64,
-    pub mean_batch: f64,
-    pub mean_service: Duration,
-    /// Projected hardware throughput (frames/s at the configured clock).
-    pub projected_fps: f64,
 }
 
 struct Request {
@@ -104,189 +109,341 @@ enum Job {
     Shutdown,
 }
 
-/// The running server.
-pub struct Server {
+/// A submitted-but-unanswered request (from [`Server::submit`]).
+pub struct Pending {
+    rx: Receiver<Result<InferResponse, String>>,
+}
+
+impl Pending {
+    /// Block until the answer arrives.
+    pub fn wait(self) -> Result<InferResponse, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "server dropped request".to_string())?
+    }
+}
+
+struct Shard {
     tx: SyncSender<Job>,
+    metrics: Arc<ShardMetrics>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The running sharded server.
+pub struct Server {
+    shards: Vec<Shard>,
+    rr: AtomicUsize,
     metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
     verifier: Option<std::thread::JoinHandle<()>>,
     config: ServerConfig,
+    open: AtomicBool,
 }
 
 impl Server {
-    /// Start a server over a quantized model. `verify_model` names an
-    /// artifact bundle to load in the verifier thread (None = no
-    /// verification, e.g. when artifacts are absent).
+    /// Start a server over a quantized model: the layer plan is computed
+    /// once, then each worker shard receives its own simulator clone.
+    /// `verify_model` names an artifact bundle to load in the verifier
+    /// thread (None = no verification, e.g. when artifacts are absent).
     pub fn start(
         qmodel: QModel,
         config: ServerConfig,
         verify_model: Option<String>,
     ) -> Result<Server, String> {
-        let sim = PipelineSim::new(qmodel.clone(), None)?;
+        let workers = config.workers.max(1);
+        let base_sim = PipelineSim::new(qmodel, None)?;
         let metrics = Arc::new(Metrics::default());
-        let (tx, rx) = sync_channel::<Job>(config.queue_depth);
 
-        // Verifier thread (owns the PJRT runtime end-to-end).
+        // Verifier thread (owns the PJRT runtime end-to-end). All shards
+        // share one sampling channel — the verifier handle is the channel,
+        // cloned per worker.
         let (vtx, vrx) = sync_channel::<(Vec<i64>, Vec<i64>)>(64);
         let verifier = verify_model.map(|name| {
             let vmetrics = Arc::clone(&metrics);
             std::thread::spawn(move || verifier_loop(&name, vrx, &vmetrics))
         });
 
-        let wmetrics = Arc::clone(&metrics);
-        let wconfig = config.clone();
-        let worker = std::thread::spawn(move || {
-            worker_loop(sim, wconfig, rx, vtx, &wmetrics);
-        });
+        let mut shards = Vec::with_capacity(workers);
+        for id in 0..workers {
+            let (tx, rx) = sync_channel::<Job>(config.queue_depth.max(1));
+            let shard_metrics = Arc::new(ShardMetrics::default());
+            let sim = base_sim.clone();
+            let wconfig = config.clone();
+            let wmetrics = Arc::clone(&shard_metrics);
+            let wvtx = vtx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cnn-flow-shard-{id}"))
+                .spawn(move || worker_loop(sim, wconfig, rx, wvtx, &wmetrics))
+                .map_err(|e| format!("spawn shard {id}: {e}"))?;
+            shards.push(Shard {
+                tx,
+                metrics: shard_metrics,
+                handle: Some(handle),
+            });
+        }
+        // Workers hold the only remaining sampling senders: the verifier's
+        // channel disconnects — and it drains, then exits — exactly when
+        // the last worker does.
+        drop(vtx);
+
         Ok(Server {
-            tx,
+            shards,
+            rr: AtomicUsize::new(0),
             metrics,
-            worker: Some(worker),
             verifier,
             config,
+            open: AtomicBool::new(true),
         })
     }
 
-    /// Blocking inference. Returns Err when the queue is saturated
-    /// (backpressure) or the server is shutting down.
-    pub fn infer(&self, x_q: Vec<i64>) -> Result<InferResponse, String> {
+    /// Enqueue a request without blocking for its answer. Dispatch is
+    /// round-robin across shards with backpressure-aware spill: if the
+    /// preferred shard's queue is full, the next shard with space takes
+    /// the request; `Err` is returned only when every queue is full
+    /// (counted as rejected) or the server has stopped.
+    pub fn submit(&self, x_q: Vec<i64>) -> Result<Pending, String> {
+        if !self.open.load(Ordering::Acquire) {
+            return Err("server stopped".into());
+        }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request {
+        let mut job = Job::Infer(Request {
             x_q,
             enqueued: Instant::now(),
             reply: rtx,
-        };
-        match self.tx.try_send(Job::Infer(req)) {
-            Ok(()) => {
-                self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+        });
+        let n = self.shards.len();
+        let preferred = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut disconnected = 0usize;
+        for i in 0..n {
+            let shard = &self.shards[(preferred + i) % n];
+            match shard.tx.try_send(job) {
+                Ok(()) => {
+                    self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                    if i > 0 {
+                        self.metrics.spilled.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(Pending { rx: rrx });
+                }
+                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Disconnected(j)) => {
+                    job = j;
+                    disconnected += 1;
+                }
             }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err("backpressure: request queue full".into());
-            }
-            Err(TrySendError::Disconnected(_)) => return Err("server stopped".into()),
         }
-        rrx.recv().map_err(|_| "server dropped request".to_string())?
+        if disconnected == n {
+            return Err("server stopped".into());
+        }
+        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        Err("backpressure: all shard queues full".into())
     }
 
+    /// Blocking inference. Returns Err when every shard queue is saturated
+    /// (backpressure) or the server is shutting down.
+    pub fn infer(&self, x_q: Vec<i64>) -> Result<InferResponse, String> {
+        self.submit(x_q)?.wait()
+    }
+
+    /// Aggregate snapshot across all shards.
     pub fn metrics(&self) -> MetricsSnapshot {
         let m = &self.metrics;
-        let completed = m.completed.load(Ordering::Relaxed);
-        let batches = m.batches.load(Ordering::Relaxed).max(1);
-        let service_ns = m.service_ns_total.load(Ordering::Relaxed);
-        let cycles = m.sim_cycles_total.load(Ordering::Relaxed);
+        let mut completed = 0u64;
+        let mut batches = 0u64;
+        let mut cycles = 0u64;
+        let mut service_ns = 0u64;
+        let mut busy_max = 0u64;
+        let mut buckets = [0u64; metrics::BUCKETS];
+        for s in &self.shards {
+            completed += s.metrics.completed.load(Ordering::Relaxed);
+            batches += s.metrics.batches.load(Ordering::Relaxed);
+            cycles += s.metrics.sim_cycles_total.load(Ordering::Relaxed);
+            service_ns += s.metrics.service_ns_total.load(Ordering::Relaxed);
+            busy_max = busy_max.max(s.metrics.busy_cycles.load(Ordering::Relaxed));
+            for (b, v) in buckets.iter_mut().zip(s.metrics.latency.counts().iter()) {
+                *b += v;
+            }
+        }
         MetricsSnapshot {
+            workers: self.shards.len(),
             accepted: m.accepted.load(Ordering::Relaxed),
             rejected: m.rejected.load(Ordering::Relaxed),
+            spilled: m.spilled.load(Ordering::Relaxed),
             completed,
             batches,
             verified: m.verified.load(Ordering::Relaxed),
             mismatches: m.mismatches.load(Ordering::Relaxed),
-            mean_batch: completed as f64 / batches as f64,
+            mean_batch: completed as f64 / batches.max(1) as f64,
             mean_service: Duration::from_nanos(if completed == 0 {
                 0
             } else {
                 service_ns / completed
             }),
+            p50: metrics::quantile(&buckets, 0.50),
+            p95: metrics::quantile(&buckets, 0.95),
+            p99: metrics::quantile(&buckets, 0.99),
             projected_fps: if cycles == 0 {
                 0.0
             } else {
                 completed as f64 / (cycles as f64 / self.config.clock_hz)
             },
+            aggregate_fps: if busy_max == 0 {
+                0.0
+            } else {
+                completed as f64 / (busy_max as f64 / self.config.clock_hz)
+            },
         }
     }
 
-    /// Graceful shutdown: drain, stop threads.
+    /// Per-shard snapshots (completed counts, busy cycles, latency
+    /// quantiles) for load-balance inspection.
+    pub fn shard_metrics(&self) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.metrics.snapshot(i))
+            .collect()
+    }
+
+    /// Graceful shutdown: close intake, drain every shard queue, join all
+    /// threads, return the final (deterministic) snapshot.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.close();
+        self.metrics()
+    }
+
+    /// Like [`Server::shutdown`] but without consuming the server, so the
+    /// final per-shard metrics stay inspectable. Idempotent; after
+    /// draining, every snapshot is frozen.
+    pub fn drain(&mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        self.open.store(false, Ordering::Release);
+        // The shutdown marker queues FIFO behind every accepted request,
+        // so workers answer everything before exiting.
+        for s in &self.shards {
+            let _ = s.tx.send(Job::Shutdown);
         }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+        // All worker-held sampling senders are gone now: the verifier
+        // drains its queue and exits.
         if let Some(v) = self.verifier.take() {
             let _ = v.join();
         }
-        self.metrics()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        // Verifier exits when its channel disconnects (worker dropped vtx).
-        if let Some(v) = self.verifier.take() {
-            let _ = v.join();
-        }
+        self.close();
     }
 }
 
+/// One shard: drain the queue into contiguous frame groups and stream
+/// each group through this shard's own pipeline replica.
 fn worker_loop(
     sim: PipelineSim,
     config: ServerConfig,
     rx: Receiver<Job>,
     vtx: SyncSender<(Vec<i64>, Vec<i64>)>,
-    metrics: &Metrics,
+    shard: &ShardMetrics,
 ) {
     let mut serial: u64 = 0;
-    loop {
+    let mut open = true;
+    while open {
         // Block for the first request, then drain up to `batch` within the
         // batching window — contiguous frames = continuous flow.
         let first = match rx.recv() {
             Ok(Job::Infer(r)) => r,
-            Ok(Job::Shutdown) | Err(_) => return,
+            Ok(Job::Shutdown) | Err(_) => break,
         };
         let mut group = vec![first];
         let deadline = Instant::now() + config.batch_window;
-        while group.len() < config.batch {
+        while group.len() < config.batch.max(1) {
             let left = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
                 Ok(Job::Infer(r)) => group.push(r),
-                Ok(Job::Shutdown) => break,
+                Ok(Job::Shutdown) => {
+                    open = false;
+                    break;
+                }
                 Err(_) => break,
             }
         }
-        let frames: Vec<Vec<i64>> = group.iter().map(|r| r.x_q.clone()).collect();
-        let started = Instant::now();
-        match sim.run(&frames) {
-            Ok(result) => {
-                metrics.batches.fetch_add(1, Ordering::Relaxed);
-                let per_frame_cycles = result.cycles_per_frame.max(1.0) as u64;
-                for (req, logits) in group.into_iter().zip(result.outputs.into_iter()) {
-                    serial += 1;
-                    let argmax = logits
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|(_, v)| **v)
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    let resp = InferResponse {
-                        logits: logits.clone(),
-                        argmax,
-                        sim_latency_cycles: result.first_frame_latency,
-                        service_time: req.enqueued.elapsed(),
-                    };
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .sim_cycles_total
-                        .fetch_add(per_frame_cycles, Ordering::Relaxed);
-                    metrics.service_ns_total.fetch_add(
-                        started.elapsed().as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
-                    if config.verify_every > 0 && serial % config.verify_every as u64 == 0 {
-                        // Sampled golden check; drop silently if the
-                        // verifier is busy (never blocks serving).
-                        let _ = vtx.try_send((req.x_q.clone(), logits.clone()));
-                    }
-                    let _ = req.reply.send(Ok(resp));
-                }
+        run_group(&sim, &config, group, &vtx, shard, &mut serial);
+    }
+    // Drain: answer anything still queued (e.g. requests that raced the
+    // shutdown marker) so no accepted request is dropped unanswered.
+    loop {
+        let mut group = Vec::new();
+        while group.len() < config.batch.max(1) {
+            match rx.try_recv() {
+                Ok(Job::Infer(r)) => group.push(r),
+                Ok(Job::Shutdown) => continue,
+                Err(_) => break,
             }
-            Err(e) => {
-                for req in group {
-                    let _ = req.reply.send(Err(e.clone()));
+        }
+        if group.is_empty() {
+            break;
+        }
+        run_group(&sim, &config, group, &vtx, shard, &mut serial);
+    }
+}
+
+fn run_group(
+    sim: &PipelineSim,
+    config: &ServerConfig,
+    group: Vec<Request>,
+    vtx: &SyncSender<(Vec<i64>, Vec<i64>)>,
+    shard: &ShardMetrics,
+    serial: &mut u64,
+) {
+    let frames: Vec<Vec<i64>> = group.iter().map(|r| r.x_q.clone()).collect();
+    match sim.run(&frames) {
+        Ok(result) => {
+            shard.batches.fetch_add(1, Ordering::Relaxed);
+            shard
+                .busy_cycles
+                .fetch_add(result.total_cycles, Ordering::Relaxed);
+            let per_frame_cycles = result.cycles_per_frame.max(1.0) as u64;
+            for (req, logits) in group.into_iter().zip(result.outputs.into_iter()) {
+                *serial += 1;
+                let argmax = logits
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| **v)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let service = req.enqueued.elapsed();
+                let resp = InferResponse {
+                    logits: logits.clone(),
+                    argmax,
+                    sim_latency_cycles: result.first_frame_latency,
+                    service_time: service,
+                };
+                shard.completed.fetch_add(1, Ordering::Relaxed);
+                shard
+                    .sim_cycles_total
+                    .fetch_add(per_frame_cycles, Ordering::Relaxed);
+                shard
+                    .service_ns_total
+                    .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
+                shard.latency.record(service);
+                if config.verify_every > 0 && *serial % config.verify_every as u64 == 0 {
+                    // Sampled golden check; drop silently if the verifier
+                    // is busy (never blocks serving).
+                    let _ = vtx.try_send((req.x_q.clone(), logits));
                 }
+                let _ = req.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            for req in group {
+                let _ = req.reply.send(Err(e.clone()));
             }
         }
     }
@@ -311,6 +468,8 @@ fn verifier_loop(
             return;
         }
     };
+    // Drains everything still queued after the workers disconnect, so a
+    // post-shutdown snapshot reflects every sampled request.
     while let Ok((x_q, logits)) = vrx.recv() {
         let xf: Vec<f32> = x_q.iter().map(|&v| v as f32).collect();
         match bundle.golden.run_f32(&xf) {
@@ -457,5 +616,111 @@ mod tests {
         }
         let m = server.shutdown();
         assert!(m.projected_fps > 0.0);
+        assert!(m.aggregate_fps > 0.0);
+    }
+
+    #[test]
+    fn sharded_server_matches_single_shard_golden() {
+        // The same seeded trace through 1 and 4 shards must produce
+        // bit-identical logits (checked against the single-sim oracle).
+        let qm = QModel::synthetic(8, 4, 6, 0x5EED);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let trace = loadgen::Trace::seeded(11, 48, 64, 2);
+        let expected = loadgen::golden_outputs(&sim, &trace);
+        for workers in [1usize, 4] {
+            let server = Server::start(
+                qm.clone(),
+                ServerConfig {
+                    workers,
+                    batch: 4,
+                    queue_depth: 64,
+                    verify_every: 0,
+                    batch_window: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                None,
+            )
+            .unwrap();
+            let report = loadgen::replay(&server, &trace, 8, Some(&expected));
+            let m = server.shutdown();
+            assert_eq!(report.ok, 48, "workers={workers}");
+            assert_eq!(report.mismatched, 0, "workers={workers}");
+            assert_eq!(report.rejected, 0, "workers={workers}");
+            assert_eq!(m.completed, 48, "workers={workers}");
+            assert_eq!(m.workers, workers);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        // Requests accepted before shutdown must all be answered: the
+        // shutdown marker queues behind them (deterministic, no sleeps).
+        let server = Server::start(
+            tiny_qmodel(),
+            ServerConfig {
+                workers: 1,
+                batch: 4,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_window: Duration::from_millis(0),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let pendings: Vec<Pending> = (0..8)
+            .map(|i| server.submit(vec![i, 0, 0, 0]).unwrap())
+            .collect();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.accepted, 8);
+        for (i, p) in pendings.into_iter().enumerate() {
+            let r = p.wait().unwrap();
+            assert_eq!(r.logits, vec![i as i64, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn round_robin_distributes_evenly_with_serial_load() {
+        // With one request in flight at a time every queue is empty at
+        // dispatch, so the round-robin preference is always honoured and
+        // the shards split the trace exactly evenly.
+        let qm = QModel::synthetic(8, 4, 6, 0xD15);
+        let server = Server::start(
+            qm,
+            ServerConfig {
+                workers: 4,
+                batch: 1,
+                queue_depth: 8,
+                verify_every: 0,
+                batch_window: Duration::from_millis(0),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let trace = loadgen::Trace::seeded(3, 32, 64, 0);
+        let report = loadgen::replay(&server, &trace, 1, None);
+        assert_eq!(report.ok, 32);
+        assert_eq!(report.rejected, 0);
+        let shards = server.shard_metrics();
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.completed, 8, "shard {} unbalanced", s.shard);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.spilled, 0);
+        assert_eq!(m.completed, 32);
+    }
+
+    #[test]
+    fn latency_quantiles_populated_and_ordered() {
+        let server = Server::start(tiny_qmodel(), ServerConfig::default(), None).unwrap();
+        for _ in 0..16 {
+            server.infer(vec![1, 2, 3, 4]).unwrap();
+        }
+        let m = server.shutdown();
+        assert!(m.p50 > Duration::ZERO);
+        assert!(m.p50 <= m.p95 && m.p95 <= m.p99, "{m:?}");
     }
 }

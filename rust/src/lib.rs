@@ -15,9 +15,21 @@
 //! * [`quant`] — the 8-bit fixed-point substrate shared with the JAX side,
 //! * [`fpga`] — the synthesis estimator standing in for Vivado
 //!   (Tables IX/X, Fig. 13),
-//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX model,
-//! * [`coordinator`] — the streaming inference server,
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX model
+//!   (gated behind the `pjrt` cargo feature; a stub otherwise, so the
+//!   default build has zero dependencies),
+//! * [`coordinator`] — the sharded streaming inference server: N worker
+//!   shards each owning a [`sim::pipeline::PipelineSim`] replica, fed by a
+//!   round-robin dispatcher with backpressure-aware spill; per-shard
+//!   metrics with p50/p95/p99 latency histograms, graceful drain-on-
+//!   shutdown, and a deterministic seeded-trace load harness
+//!   ([`coordinator::loadgen`]) with a virtual clock,
 //! * [`report`] — generators that print every paper table and figure.
+//!
+//! Serving scale-out mirrors the companion work (*Data-Rate-Aware
+//! High-Speed CNN Inference on FPGAs*): replicate the continuous-flow
+//! pipeline per stream, keep each replica's frames contiguous, and measure
+//! aggregate throughput as frames over the simulated makespan.
 
 pub mod complexity;
 pub mod coordinator;

@@ -6,7 +6,7 @@
 //! cnn-flow all-tables             every table + figure (EXPERIMENTS.md input)
 //! cnn-flow analyze --model M      rates, unit plan, resources per layer
 //! cnn-flow simulate --model M     cycle-accurate pipeline run + utilisation
-//! cnn-flow serve --model M        streaming coordinator demo (E12)
+//! cnn-flow serve --model M        sharded streaming coordinator demo (E12)
 //! cnn-flow list                   zoo models
 //! ```
 //!
@@ -92,7 +92,8 @@ fn usage() {
          usage:\n  cnn-flow table <1..10>\n  cnn-flow fig 13\n  cnn-flow all-tables\n  \
          cnn-flow ablation\n  cnn-flow analyze  --model <zoo-name|model.json> [--r0 n[/d]]\n  \
          cnn-flow simulate --model <digits|jsc> [--frames N] [--r0 n[/d]] [--reference]\n  \
-         cnn-flow serve    --model <digits|jsc> [--requests N] [--batch N]\n  \
+         cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
+                    [--batch N] [--queue-depth N] [--verify-every N]\n  \
          cnn-flow list"
     );
 }
@@ -332,30 +333,59 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
     let batch: usize = opts.get("batch").and_then(|s| s.parse().ok()).unwrap_or(16);
-    let qm = match load_qmodel(name) {
-        Ok(q) => q,
-        Err(e) => {
-            eprintln!("{e}");
-            return 1;
+    let workers: usize = opts
+        .get("workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let queue_depth: usize = opts
+        .get("queue-depth")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let verify_every: usize = opts
+        .get("verify-every")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    // --synthetic serves the artifact-free fixture (no golden verifier).
+    let (qm, verify_model) = if opts.contains_key("synthetic") {
+        (QModel::synthetic(12, 8, 10, 0xF1C), None)
+    } else {
+        match load_qmodel(name) {
+            Ok(q) => (q, Some(name.to_string())),
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
         }
     };
     let config = ServerConfig {
+        workers,
         batch,
+        queue_depth,
+        verify_every,
         ..Default::default()
     };
-    let server = match Server::start(qm.clone(), config, Some(name.to_string())) {
+    let server = match Server::start(qm.clone(), config, verify_model) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             return 1;
         }
     };
+    let vectors: Vec<Vec<i64>> = if qm.test_vectors.is_empty() {
+        let input_len: usize = qm.input_shape.iter().map(|&d| d.max(1)).product();
+        let mut rng = cnn_flow::util::Rng::new(0x5E21);
+        (0..64)
+            .map(|_| (0..input_len).map(|_| rng.int8() as i64).collect())
+            .collect()
+    } else {
+        qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect()
+    };
     let started = std::time::Instant::now();
     let server = std::sync::Arc::new(server);
     let mut handles = Vec::new();
     for c in 0..4usize {
         let s = std::sync::Arc::clone(&server);
-        let vectors: Vec<Vec<i64>> = qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect();
+        let vectors = vectors.clone();
         handles.push(std::thread::spawn(move || {
             let mut ok = 0usize;
             for i in 0..requests / 4 {
@@ -369,21 +399,46 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     }
     let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let elapsed = started.elapsed();
-    // Give the sampled verifier a moment to drain, then report.
-    std::thread::sleep(std::time::Duration::from_millis(300));
-    let m = std::sync::Arc::try_unwrap(server)
-        .map(|s| s.shutdown())
-        .unwrap_or_else(|s| s.metrics());
+    // Graceful drain: joins the workers and the verifier (which empties
+    // its sampling queue first), so the final snapshot is deterministic.
+    let mut server = match std::sync::Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("internal error: client threads still hold the server");
+            return 1;
+        }
+    };
+    server.drain();
+    let m = server.metrics();
     println!(
         "served {served}/{requests} requests in {elapsed:?} ({:.0} req/s wall)",
         served as f64 / elapsed.as_secs_f64()
     );
     println!(
-        "coordinator: mean batch {:.1}, mean service {:?}, projected hw throughput {:.2} MInf/s",
-        m.mean_batch,
-        m.mean_service,
-        m.projected_fps / 1e6
+        "coordinator: {} shard(s), mean batch {:.1}, mean service {:?} (p50 {:?}, p95 {:?}, p99 {:?})",
+        m.workers, m.mean_batch, m.mean_service, m.p50, m.p95, m.p99
     );
+    println!(
+        "projected hw throughput: {:.2} MInf/s per pipeline, {:.2} MInf/s aggregate ({} shards)",
+        m.projected_fps / 1e6,
+        m.aggregate_fps / 1e6,
+        m.workers
+    );
+    let mut t = Table::new(
+        "per-shard serving stats".to_string(),
+        &["shard", "completed", "batches", "busy cycles", "p50", "p99"],
+    );
+    for s in server.shard_metrics() {
+        t.row(&[
+            s.shard.to_string(),
+            s.completed.to_string(),
+            s.batches.to_string(),
+            s.busy_cycles.to_string(),
+            format!("{:?}", s.p50),
+            format!("{:?}", s.p99),
+        ]);
+    }
+    println!("{t}");
     println!(
         "golden cross-check: {} verified, {} mismatches",
         m.verified, m.mismatches

@@ -179,6 +179,76 @@ impl QModel {
         Self::from_json(&text)
     }
 
+    /// Build a tiny deterministic conv→pool→dense int8 model *without*
+    /// artifacts: a synthetic fixture for coordinator/pipeline tests and
+    /// benches, so they run (rather than skip) when `make artifacts`
+    /// hasn't. Weights are seeded int8/16 values, so all requantized
+    /// activations stay on the int8 grid; the final dense layer emits
+    /// accumulator-scale outputs exactly like the exporter's models.
+    ///
+    /// `f` is the (even, >= 4) input side length; the model is
+    /// conv 3x3 p1 (1 -> `channels`, ReLU, requant) → maxpool 2x2 →
+    /// dense (`classes` outputs, accumulator scale).
+    pub fn synthetic(f: usize, channels: usize, classes: usize, seed: u64) -> QModel {
+        assert!(f >= 4 && f % 2 == 0, "synthetic fixture needs even f >= 4");
+        assert!(channels >= 1 && classes >= 1);
+        let mut rng = crate::util::Rng::new(seed);
+        let mut wq = |n: usize| -> Vec<i64> {
+            (0..n).map(|_| rng.int8() as i64 / 16).collect()
+        };
+        let conv = QLayer {
+            name: "C1".into(),
+            kind: QKind::Conv,
+            k: 3,
+            s: 1,
+            p: 1,
+            relu: true,
+            w_q: wq(3 * 3 * channels),
+            w_shape: vec![3, 3, 1, channels],
+            b_q: (0..channels).map(|i| (i as i64 % 5) - 2).collect(),
+            m: 0.05,
+            in_shape: [f, f, 1],
+            out_shape: [f, f, channels],
+        };
+        let pool = QLayer {
+            name: "P1".into(),
+            kind: QKind::MaxPool,
+            k: 2,
+            s: 2,
+            p: 0,
+            relu: false,
+            w_q: vec![],
+            w_shape: vec![],
+            b_q: vec![],
+            m: 0.0,
+            in_shape: [f, f, channels],
+            out_shape: [f / 2, f / 2, channels],
+        };
+        let feats = (f / 2) * (f / 2) * channels;
+        let dense = QLayer {
+            name: "F1".into(),
+            kind: QKind::Dense,
+            k: 0,
+            s: 1,
+            p: 0,
+            relu: false,
+            w_q: wq(classes * feats),
+            w_shape: vec![classes, feats],
+            b_q: (0..classes).map(|i| i as i64 + 1).collect(),
+            m: 0.0, // final layer: accumulator out
+            in_shape: [1, 1, feats],
+            out_shape: [1, 1, classes],
+        };
+        QModel {
+            name: format!("synthetic-{f}x{f}x{channels}"),
+            input_shape: [f, f, 1],
+            input_scale: 1.0,
+            layers: vec![conv, pool, dense],
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        }
+    }
+
     /// Conv weight accessor: w[(u, v, cin, cout)].
     pub fn conv_w(l: &QLayer, u: usize, v: usize, cin: usize, cout: usize) -> i64 {
         let (k, ci, co) = (l.w_shape[0], l.w_shape[2], l.w_shape[3]);
@@ -274,6 +344,27 @@ mod tests {
         for q in [-127i64, -3, 0, 5, 127] {
             assert_eq!(quantize(q as f32 * 0.25, 0.25), q);
         }
+    }
+
+    #[test]
+    fn synthetic_fixture_is_deterministic_and_int8() {
+        let a = QModel::synthetic(8, 4, 6, 42);
+        let b = QModel::synthetic(8, 4, 6, 42);
+        assert_eq!(a.layers.len(), 3);
+        assert_eq!(a.input_shape, [8, 8, 1]);
+        assert_eq!(a.layers[0].w_q, b.layers[0].w_q);
+        assert_eq!(a.layers[2].w_q, b.layers[2].w_q);
+        assert_ne!(
+            QModel::synthetic(8, 4, 6, 43).layers[0].w_q,
+            a.layers[0].w_q
+        );
+        for l in &a.layers {
+            for &w in &l.w_q {
+                assert!(w.abs() <= 7, "weight {w} outside int8/16 grid");
+            }
+        }
+        assert_eq!(a.layers[2].w_shape, vec![6, 4 * 4 * 4]);
+        assert_eq!(a.layers[2].b_q.len(), 6);
     }
 
     #[test]

@@ -6,80 +6,23 @@
 //! Interchange is HLO text (see `python/compile/aot.py` and
 //! /opt/xla-example/README.md for why serialized protos don't work with
 //! xla_extension 0.5.1).
+//!
+//! The PJRT backend is gated behind the `pjrt` cargo feature because the
+//! `xla` crate is a vendored, platform-specific dependency that minimal CI
+//! containers don't carry. Without the feature this module compiles to a
+//! stub whose constructors return `Err`, so every caller (the coordinator's
+//! verifier thread, the e2e tests, the benches) degrades gracefully: the
+//! serving and simulation paths never require PJRT. The API surface is
+//! identical in both configurations, and errors are plain `String`s so the
+//! crate stays dependency-free by default.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
 use crate::quant::QModel;
 
-/// A compiled model executable bound to a PJRT client.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input element count expected by the HLO entry (flattened f32).
-    pub input_shape: Vec<usize>,
-}
-
-/// The runtime: one PJRT CPU client hosting any number of executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        Ok(Self {
-            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact.
-    pub fn load_hlo_text(&self, path: &Path, input_shape: &[usize]) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            input_shape: input_shape.to_vec(),
-        })
-    }
-}
-
-impl Executable {
-    /// Execute on one flattened f32 input; returns the flattened f32
-    /// output of the (single-element) result tuple.
-    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let n: usize = self.input_shape.iter().product();
-        anyhow::ensure!(
-            input.len() == n,
-            "input length {} != expected {n}",
-            input.len()
-        );
-        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True -> a 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// Everything the serving stack needs for one model: the quantized weight
-/// manifest (drives the cycle-accurate simulator) plus the compiled int8
-/// golden executable (drives verification).
-pub struct ModelBundle {
-    pub qmodel: QModel,
-    pub golden: Executable,
-}
+/// Runtime results use plain string errors so the default build carries no
+/// error-handling dependency.
+pub type RtResult<T> = Result<T, String>;
 
 /// Locate the artifacts directory: `$CNN_FLOW_ARTIFACTS` or
 /// `<manifest>/artifacts`.
@@ -89,12 +32,135 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::RtResult;
+    use std::path::Path;
+
+    /// A compiled model executable bound to a PJRT client.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Input element count expected by the HLO entry (flattened f32).
+        pub input_shape: Vec<usize>,
+    }
+
+    /// The runtime: one PJRT CPU client hosting any number of executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> RtResult<Self> {
+            Ok(Self {
+                client: xla::PjRtClient::cpu()
+                    .map_err(|e| format!("create PJRT CPU client: {e}"))?,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact.
+        pub fn load_hlo_text(&self, path: &Path, input_shape: &[usize]) -> RtResult<Executable> {
+            let text_path = path.to_str().ok_or("non-utf8 path")?;
+            let proto = xla::HloModuleProto::from_text_file(text_path)
+                .map_err(|e| format!("parse HLO text {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e}", path.display()))?;
+            Ok(Executable {
+                exe,
+                input_shape: input_shape.to_vec(),
+            })
+        }
+    }
+
+    impl Executable {
+        /// Execute on one flattened f32 input; returns the flattened f32
+        /// output of the (single-element) result tuple.
+        pub fn run_f32(&self, input: &[f32]) -> RtResult<Vec<f32>> {
+            let n: usize = self.input_shape.iter().product();
+            if input.len() != n {
+                return Err(format!("input length {} != expected {n}", input.len()));
+            }
+            let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .map_err(|e| format!("reshape input: {e}"))?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| format!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result: {e}"))?;
+            // aot.py lowers with return_tuple=True -> a 1-tuple.
+            let out = result.to_tuple1().map_err(|e| format!("untuple: {e}"))?;
+            out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::RtResult;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this build has the `pjrt` feature off. \
+         Vendor the `xla` crate (add `xla = { path = \"...\" }` under [dependencies] in \
+         rust/Cargo.toml) and build with `--features pjrt`";
+
+    /// Stub executable: carries the expected shape but cannot run.
+    pub struct Executable {
+        /// Input element count expected by the HLO entry (flattened f32).
+        pub input_shape: Vec<usize>,
+    }
+
+    /// Stub runtime: construction always fails with a diagnostic, so any
+    /// caller that tolerates a missing runtime (the coordinator's verifier
+    /// thread, artifact-gated tests) degrades gracefully.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> RtResult<Self> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path, _input_shape: &[usize]) -> RtResult<Executable> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _input: &[f32]) -> RtResult<Vec<f32>> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+}
+
+pub use backend::{Executable, Runtime};
+
+/// Everything the serving stack needs for one model: the quantized weight
+/// manifest (drives the cycle-accurate simulator) plus the compiled int8
+/// golden executable (drives verification).
+pub struct ModelBundle {
+    pub qmodel: QModel,
+    pub golden: Executable,
+}
+
 impl ModelBundle {
     /// Load `<artifacts>/weights/<name>.json` + `<artifacts>/<name>_int8.hlo.txt`.
-    pub fn load(rt: &Runtime, name: &str) -> Result<ModelBundle> {
+    pub fn load(rt: &Runtime, name: &str) -> RtResult<ModelBundle> {
         let dir = artifacts_dir();
-        let qmodel = QModel::load(&dir.join("weights").join(format!("{name}.json")))
-            .map_err(anyhow::Error::msg)?;
+        let qmodel = QModel::load(&dir.join("weights").join(format!("{name}.json")))?;
         let golden = rt.load_hlo_text(
             &dir.join(format!("{name}_int8.hlo.txt")),
             &qmodel.input_shape.to_vec(),
@@ -107,16 +173,33 @@ impl ModelBundle {
 mod tests {
     use super::*;
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn artifacts_dir_is_absolute_or_env() {
+        // Sanity: the resolver always yields a usable path string.
+        let d = artifacts_dir();
+        assert!(!d.as_os_str().is_empty());
+    }
+
+    #[cfg(feature = "pjrt")]
     fn artifacts_ready() -> bool {
         artifacts_dir().join("meta.json").exists()
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_creates_cpu_client() {
         let rt = Runtime::cpu().unwrap();
         assert!(!rt.platform().is_empty());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn golden_executable_matches_test_vectors() {
         // PJRT-executed JAX int8 golden vs the exporter's recorded outputs.
@@ -136,6 +219,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn golden_agrees_with_cycle_sim_on_random_inputs() {
         // Three-way agreement beyond the exported vectors: PJRT golden ==
@@ -165,6 +249,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn float_pallas_hlo_loads_and_runs() {
         // The pallas-kernel float graph must also load and execute.
@@ -184,6 +269,7 @@ mod tests {
         assert!(y.iter().all(|v| v.is_finite()));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn wrong_input_length_rejected() {
         if !artifacts_ready() {

@@ -69,6 +69,11 @@ pub fn qmodel_to_model(qm: &QModel) -> Model {
 }
 
 /// The pipeline simulator: a quantized model plus a unit plan.
+///
+/// `Clone + Send` by construction (all state is owned): the sharded
+/// coordinator plans once and hands each worker shard its own clone, so
+/// shards simulate concurrently without sharing mutable state.
+#[derive(Clone)]
 pub struct PipelineSim {
     pub qmodel: QModel,
     pub plans: Vec<PlannedLayer>,
@@ -581,6 +586,35 @@ mod tests {
         // small pipeline margin.
         assert!(res.first_frame_latency >= 15);
         assert!(res.first_frame_latency < 64, "{}", res.first_frame_latency);
+    }
+
+    #[test]
+    fn pipeline_sim_clones_are_independent_and_send() {
+        fn assert_send_clone<T: Send + Clone + 'static>(_: &T) {}
+        let qm = crate::quant::QModel::synthetic(8, 4, 6, 21);
+        let sim = PipelineSim::new(qm, None).unwrap();
+        assert_send_clone(&sim);
+        let clone = sim.clone();
+        let mut rng = Rng::new(22);
+        let x = rand_frame(&mut rng, 64);
+        let a = sim.run(&[x.clone()]).unwrap();
+        let b = clone.run(&[x]).unwrap();
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.total_cycles, b.total_cycles);
+    }
+
+    #[test]
+    fn synthetic_fixture_matches_direct_oracle() {
+        // The public fixture must agree with the plain int8 oracle, so
+        // coordinator tests can trust it as a golden path.
+        let qm = crate::quant::QModel::synthetic(8, 4, 6, 33);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let mut rng = Rng::new(34);
+        for _ in 0..6 {
+            let x = rand_frame(&mut rng, 64);
+            let res = sim.run(&[x.clone()]).unwrap();
+            assert_eq!(res.outputs[0], oracle(&qm, &x));
+        }
     }
 
     #[test]

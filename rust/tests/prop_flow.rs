@@ -186,6 +186,120 @@ fn json_roundtrip_random_models() {
     });
 }
 
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a.max(1)
+}
+
+#[test]
+fn eq8_propagation_exact_and_in_lowest_terms() {
+    // Random layer stacks: every step must satisfy Eq. 8 exactly —
+    // r_out * d_in * s^2 == r_in * d_out under u128 cross-multiplication
+    // (independent of Ratio's own mul/reduce code) — and every stored
+    // ratio must be in lowest terms. The whole chain must equal the
+    // independently-computed big fraction r0 * prod(d_out / (d_in * s^2)).
+    prop_check(300, 0xF17, |rng| {
+        let r0 = Ratio::new(rng.range(1, 32) as u64, rng.range(1, 32) as u64);
+        let mut r = r0;
+        let mut d_in = rng.range(1, 32);
+        let (mut big_num, mut big_den) = (r0.num() as u128, r0.den() as u128);
+        for step in 0..rng.range(1, 8) {
+            let d_out = rng.range(1, 32);
+            let s = [1usize, 1, 2, 3][rng.range(0, 3)];
+            let out = cnn_flow::flow::layer_rate(d_in, d_out, s, r);
+            // Eq. 8, cross-multiplied exactly.
+            let lhs = out.num() as u128 * (r.den() as u128 * (d_in * s * s) as u128);
+            let rhs = out.den() as u128 * (r.num() as u128 * d_out as u128);
+            prop_assert_eq!(lhs, rhs, "step {step} violates Eq. 8");
+            prop_assert_eq!(
+                gcd(out.num(), out.den()),
+                1,
+                "ratio {out} not in lowest terms"
+            );
+            prop_assert!(!out.is_zero(), "rate collapsed to zero at step {step}");
+            big_num *= d_out as u128;
+            big_den *= (d_in * s * s) as u128;
+            r = out;
+            d_in = d_out;
+        }
+        // Reduce the big fraction and compare with the chained result.
+        let (mut a, mut b) = (big_num, big_den);
+        while b != 0 {
+            (a, b) = (b, a % b);
+        }
+        let g = a.max(1);
+        prop_assert_eq!(
+            (r.num() as u128, r.den() as u128),
+            (big_num / g, big_den / g),
+            "chained rate != independent product"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn analyze_applies_eq8_to_every_layer() {
+    // The model-level walk must agree with the single-layer formula on
+    // random chain CNNs, layer by layer, with nonzero lowest-term rates.
+    prop_check(150, 0xF18, |rng| {
+        let m = random_model(rng);
+        let a = analyze(&m, None).map_err(|e| e.to_string())?;
+        for l in &a.layers {
+            let expect = cnn_flow::flow::layer_rate(
+                l.d_in(),
+                l.d_out(),
+                l.shaped.layer.s,
+                l.r_in,
+            );
+            prop_assert_eq!(
+                l.r_out,
+                expect,
+                "layer {} breaks Eq. 8",
+                l.shaped.layer.name
+            );
+            prop_assert!(!l.r_out.is_zero(), "{} rate is zero", l.shaped.layer.name);
+            prop_assert_eq!(
+                gcd(l.r_out.num(), l.r_out.den()),
+                1,
+                "{} rate not reduced",
+                l.shaped.layer.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planning_never_yields_zero_units_or_configs() {
+    // Any rated layer — conv, depthwise, pool, dense — at any positive
+    // rate must plan at least one physical unit and one configuration.
+    prop_check(400, 0xF19, |rng| {
+        let d_in = rng.range(1, 24);
+        let d_out = rng.range(1, 24);
+        let r = Ratio::new(rng.range(1, 48) as u64, rng.range(1, 48) as u64);
+        let k = [2usize, 3, 5][rng.range(0, 2)];
+        let f = k + 1 + rng.range(0, 12);
+        let layer = match rng.range(0, 3) {
+            0 => Layer::conv("c", k, 1, (k - 1) / 2, d_out),
+            1 => Layer::dwconv("dw", k, 1, (k - 1) / 2),
+            2 => Layer::maxpool("p", k, k),
+            _ => Layer::dense("d", d_out),
+        };
+        let pl = cnn_flow::report::synthetic_layer(layer, f, d_in, r);
+        prop_assert!(
+            pl.plan.unit_count() >= 1,
+            "zero units (d_in={d_in}, d_out={d_out}, r={r}, f={f}, k={k})"
+        );
+        prop_assert!(
+            pl.plan.configs() >= 1,
+            "zero configs (d_in={d_in}, d_out={d_out}, r={r}, f={f}, k={k})"
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn stall_detection_matches_cap() {
     // A conv stalls iff ceil(d_in / r) exceeds d_in * d_out (Eq. 17 cap).
