@@ -17,6 +17,7 @@
 //! | `--batch N` | 16 | max frames per contiguous continuous-flow group |
 //! | `--queue-depth N` | 256 | bounded queue depth per shard (backpressure threshold) |
 //! | `--verify-every N` | 4 (CLI: 8) | per-shard golden-verify sampling period (0 = off; forced off on the synthetic path, which has no PJRT golden model) |
+//! | `--engine compiled\|interp` | compiled | shard execution engine: the lowered `CompiledPipeline` + closed-form `SchedulePrediction` (default), or the fused cycle-exact interpreter oracle (which live-checks the prediction; see `cycle_divergence`) |
 //! | `--synthetic` | off | CLI only: serve the artifact-free synthetic fixture |
 //!
 //! ```bash
@@ -26,7 +27,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::coordinator::{EngineKind, Server, ServerConfig};
 use cnn_flow::quant::{quantize, QModel};
 use cnn_flow::runtime::artifacts_dir;
 use cnn_flow::sim::pipeline::PipelineSim;
@@ -86,6 +87,18 @@ fn flag(args: &[String], name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+fn engine_flag(args: &[String]) -> EngineKind {
+    match args
+        .iter()
+        .position(|a| a == "--engine")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+    {
+        Some("interp") | Some("interpreter") => EngineKind::Interpreter,
+        _ => EngineKind::Compiled,
+    }
+}
+
 fn shard_report(server: &Server) {
     println!("\nper-shard serving stats:");
     for s in server.shard_metrics() {
@@ -108,10 +121,20 @@ fn serve_synthetic(opts: &ServeOpts) {
         batch: opts.batch,
         queue_depth: opts.queue_depth,
         verify_every: 0, // no PJRT golden model on the synthetic path
+        engine: opts.engine,
         ..Default::default()
     };
     let clock_hz = config.clock_hz;
-    let server = Arc::new(Server::start(qm, config, None).unwrap());
+    let lowered = if golden.compiled.is_narrow() {
+        "narrow/i32"
+    } else {
+        "wide/i64"
+    };
+    println!(
+        "engine: {:?} (lowered {lowered}, steady {} cycles/frame predicted)",
+        opts.engine, golden.predicted.steady_cycles_per_frame,
+    );
+    let server = Arc::new(Server::start_prelowered(golden.clone(), config, None).unwrap());
     let started = Instant::now();
     let mut handles = Vec::new();
     for client in 0..4usize {
@@ -158,8 +181,13 @@ fn serve_synthetic(opts: &ServeOpts) {
         m.aggregate_fps / 1e6,
         clock_hz / 1e6,
     );
+    println!(
+        "cycle model: {} predicted cycles, {} interpreter-simulated, {} divergent groups",
+        m.predicted_cycles, m.simulated_cycles, m.cycle_divergence
+    );
     shard_report(&server);
     assert_eq!(exact, served, "sharded serving diverged from the golden sim");
+    assert_eq!(m.cycle_divergence, 0, "schedule prediction diverged");
     println!("OK (synthetic)");
 }
 
@@ -169,6 +197,7 @@ struct ServeOpts {
     batch: usize,
     queue_depth: usize,
     verify_every: usize,
+    engine: EngineKind,
 }
 
 fn main() {
@@ -179,6 +208,7 @@ fn main() {
         batch: flag(&args, "--batch", 16),
         queue_depth: flag(&args, "--queue-depth", 256),
         verify_every: flag(&args, "--verify-every", 4),
+        engine: engine_flag(&args),
     };
     let n_requests = opts.requests;
 
@@ -226,11 +256,21 @@ fn main() {
         batch: opts.batch,
         queue_depth: opts.queue_depth,
         verify_every: opts.verify_every,
+        engine: opts.engine,
         ..Default::default()
     };
     let clock_hz = config.clock_hz;
+    let lowered = if sim.compiled.is_narrow() {
+        "narrow/i32"
+    } else {
+        "wide/i64"
+    };
+    println!(
+        "engine: {:?} (lowered {lowered}, steady {} cycles/frame predicted)",
+        opts.engine, sim.predicted.steady_cycles_per_frame,
+    );
     let server = Arc::new(
-        Server::start(qm.clone(), config, Some("digits".to_string())).unwrap(),
+        Server::start_prelowered(sim.clone(), config, Some("digits".to_string())).unwrap(),
     );
     let n_clients = 4usize;
     let started = Instant::now();
@@ -295,10 +335,15 @@ fn main() {
     );
     shard_report(&server);
     println!(
+        "cycle model: {} predicted cycles, {} interpreter-simulated, {} divergent groups",
+        m.predicted_cycles, m.simulated_cycles, m.cycle_divergence
+    );
+    println!(
         "golden cross-check (PJRT): {} verified, {} mismatches",
         m.verified, m.mismatches
     );
     assert_eq!(m.mismatches, 0, "cycle sim diverged from the golden model");
+    assert_eq!(m.cycle_divergence, 0, "schedule prediction diverged");
     assert!(
         correct as f64 / served as f64 > 0.9,
         "accuracy regression on held-out digits"

@@ -1,58 +1,100 @@
-//! Benchmarks for the whole-CNN pipeline simulator (the E12 hot path):
-//! continuous-flow vs fully-parallel plans on the trained digits CNN, and
-//! the JSC MLP across data rates (Table X timing source).
+//! Benchmarks for the whole-CNN pipeline (the E12 hot path).
+//!
+//! The headline comparison — the fused pixel-by-pixel interpreter vs the
+//! compile-once engine (`CompiledPipeline` values + `SchedulePrediction`
+//! cycles) — runs on the synthetic digits-shaped fixture so it needs no
+//! artifacts, asserts the compiled path is >= 5x frames/sec, and records
+//! the numbers in `BENCH_pipeline.json` (via `util::bench`) so the perf
+//! trajectory is tracked across PRs. The original artifact benches
+//! (continuous-flow vs fully-parallel plans, JSC across rates) still run
+//! when `make artifacts` has.
 
 use cnn_flow::flow::Ratio;
 use cnn_flow::quant::QModel;
 use cnn_flow::runtime::artifacts_dir;
 use cnn_flow::sim::pipeline::PipelineSim;
-use cnn_flow::util::bench::{black_box, Bencher};
+use cnn_flow::util::bench::{self, black_box, Bencher};
+use cnn_flow::util::Rng;
+
+/// Measure one model both ways; iteration = a whole `frames` stream.
+fn compare(b: &Bencher, qm: QModel, frames: &[Vec<i64>]) -> bench::EngineComparison {
+    let sim = PipelineSim::new(qm, None).unwrap();
+    bench::compare_engines(b, &sim, frames)
+}
 
 fn main() {
     let b = Bencher::new("pipeline");
+    let mut comparisons = Vec::new();
+
+    // --- compiled vs interpreter: synthetic digits-shaped, artifact-free
+    let syn = QModel::synthetic(12, 8, 10, 0x51);
+    let input_len: usize = syn.input_shape.iter().map(|&d| d.max(1)).product();
+    let mut rng = Rng::new(0x52);
+    let syn_frames: Vec<Vec<i64>> = (0..16)
+        .map(|_| (0..input_len).map(|_| rng.int8() as i64).collect())
+        .collect();
+    comparisons.push(compare(&b, syn, &syn_frames));
+
+    // --- artifact models, when built ------------------------------------
     let digits = QModel::load(&artifacts_dir().join("weights/digits.json"));
     let jsc = QModel::load(&artifacts_dir().join("weights/jsc.json"));
-    let (digits, jsc) = match (digits, jsc) {
-        (Ok(d), Ok(j)) => (d, j),
-        _ => {
-            println!("artifacts not built; skipping pipeline benches");
-            return;
+    if let (Ok(digits), Ok(jsc)) = (digits, jsc) {
+        let frames: Vec<Vec<i64>> = digits
+            .test_vectors
+            .iter()
+            .cycle()
+            .take(16)
+            .map(|tv| tv.x_q.clone())
+            .collect();
+        comparisons.push(compare(&b, digits.clone(), &frames));
+
+        let sim = PipelineSim::new(digits.clone(), None).unwrap();
+        b.bench_throughput("digits_continuous_flow/16_frames", 16, || {
+            black_box(sim.run(&frames).unwrap());
+        });
+        let reference = PipelineSim::new_reference(digits).unwrap();
+        b.bench_throughput("digits_fully_parallel_ref/16_frames", 16, || {
+            black_box(reference.run(&frames).unwrap());
+        });
+
+        let jsc_frames: Vec<Vec<i64>> = jsc
+            .test_vectors
+            .iter()
+            .cycle()
+            .take(64)
+            .map(|tv| tv.x_q.clone())
+            .collect();
+        for r0 in [Ratio::int(16), Ratio::int(1), Ratio::new(1, 16)] {
+            let sim = PipelineSim::new(jsc.clone(), Some(r0)).unwrap();
+            b.bench_throughput(
+                &format!("jsc_r0_{}/64_frames", r0.paper().replace('/', "_")),
+                64,
+                || {
+                    black_box(sim.run(&jsc_frames).unwrap());
+                },
+            );
         }
-    };
+    } else {
+        println!("artifacts not built; skipping artifact pipeline benches");
+    }
 
-    let frames: Vec<Vec<i64>> = digits
-        .test_vectors
-        .iter()
-        .cycle()
-        .take(16)
-        .map(|tv| tv.x_q.clone())
-        .collect();
-
-    let sim = PipelineSim::new(digits.clone(), None).unwrap();
-    b.bench_throughput("digits_continuous_flow/16_frames", 16, || {
-        black_box(sim.run(&frames).unwrap());
-    });
-
-    let reference = PipelineSim::new_reference(digits.clone()).unwrap();
-    b.bench_throughput("digits_fully_parallel_ref/16_frames", 16, || {
-        black_box(reference.run(&frames).unwrap());
-    });
-
-    let jsc_frames: Vec<Vec<i64>> = jsc
-        .test_vectors
-        .iter()
-        .cycle()
-        .take(64)
-        .map(|tv| tv.x_q.clone())
-        .collect();
-    for r0 in [Ratio::int(16), Ratio::int(1), Ratio::new(1, 16)] {
-        let sim = PipelineSim::new(jsc.clone(), Some(r0)).unwrap();
-        b.bench_throughput(
-            &format!("jsc_r0_{}/64_frames", r0.paper().replace('/', "_")),
-            64,
-            || {
-                black_box(sim.run(&jsc_frames).unwrap());
-            },
+    bench::write_pipeline_bench_json(std::path::Path::new("BENCH_pipeline.json"), &comparisons)
+        .expect("write BENCH_pipeline.json");
+    for c in &comparisons {
+        println!(
+            "BENCH pipeline/{}/speedup compiled={:.3}M frames/s interp={:.3}M frames/s speedup={:.2}x narrow={}",
+            c.model,
+            c.compiled_fps() / 1e6,
+            c.interp_fps() / 1e6,
+            c.speedup(),
+            c.narrow,
         );
     }
+    let syn_speedup = comparisons[0].speedup();
+    assert!(
+        syn_speedup >= 5.0,
+        "compiled path must be >= 5x the interpreter on the synthetic digits \
+         fixture (got {syn_speedup:.2}x)"
+    );
+    println!("OK: compiled engine {syn_speedup:.1}x interpreter; BENCH_pipeline.json written");
 }

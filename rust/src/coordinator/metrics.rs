@@ -93,12 +93,22 @@ pub struct Metrics {
 pub struct ShardMetrics {
     pub completed: AtomicU64,
     pub batches: AtomicU64,
-    /// Steady-state simulated cycles attributed per frame (throughput).
+    /// Steady-state modelled cycles attributed per frame (throughput) by
+    /// whichever engine the shard runs.
     pub sim_cycles_total: AtomicU64,
-    /// Simulated cycles this shard's pipeline spent occupied by frame
+    /// Modelled cycles this shard's pipeline spent occupied by frame
     /// groups; the max across shards is the simulated makespan, from which
     /// the aggregate projected throughput follows.
     pub busy_cycles: AtomicU64,
+    /// Closed-form `SchedulePrediction` cycles for the served groups
+    /// (always recorded, whichever engine runs).
+    pub predicted_cycles: AtomicU64,
+    /// Cycle-exact interpreter cycles for the served groups (recorded
+    /// only on the `Interpreter` engine).
+    pub simulated_cycles: AtomicU64,
+    /// Groups where the closed-form prediction disagreed with the
+    /// interpreter's cycle count (must stay 0; interpreter engine only).
+    pub cycle_divergence: AtomicU64,
     pub service_ns_total: AtomicU64,
     pub latency: Histogram,
 }
@@ -144,6 +154,14 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub verified: u64,
     pub mismatches: u64,
+    /// Closed-form predicted cycles across all served groups.
+    pub predicted_cycles: u64,
+    /// Interpreter-measured cycles (0 unless the engine is `Interpreter`;
+    /// when populated, equal to `predicted_cycles` unless the analytic
+    /// schedule diverged).
+    pub simulated_cycles: u64,
+    /// Groups where prediction != interpreter cycles (must stay 0).
+    pub cycle_divergence: u64,
     pub mean_batch: f64,
     /// Mean wall-clock time from enqueue to answer.
     pub mean_service: Duration,

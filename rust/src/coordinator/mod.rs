@@ -8,7 +8,13 @@
 //! mirrors that at the serving layer:
 //!
 //! * **N worker shards** — each worker thread owns its own [`PipelineSim`]
-//!   clone (one modelled pipeline replica) and a private bounded queue;
+//!   clone (one modelled pipeline replica) and a private bounded queue.
+//!   By default a shard executes frames on the lowered
+//!   [`CompiledPipeline`] value engine and takes its cycle figures from
+//!   the closed-form `SchedulePrediction` — no per-frame cycle
+//!   simulation at all ([`EngineKind::Compiled`]);
+//!   [`EngineKind::Interpreter`] keeps the fused cycle-exact loop as a
+//!   serving-time oracle and cross-checks the prediction on every group;
 //! * **data-rate-aware dispatch** — [`Server::submit`] places each request
 //!   on its round-robin-preferred shard, spilling to the next shard with
 //!   queue space when the preferred one is saturated, and rejecting only
@@ -47,10 +53,26 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::quant::QModel;
+use crate::sim::compiled::CompiledPipeline;
 use crate::sim::pipeline::PipelineSim;
 
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 use metrics::ShardMetrics;
+
+/// Which execution engine the worker shards run (DESIGN.md §4/§5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The lowered [`CompiledPipeline`] value engine plus the closed-form
+    /// `SchedulePrediction` — no per-frame cycle simulation at all. The
+    /// serving default.
+    #[default]
+    Compiled,
+    /// The original fused pixel-by-pixel interpreter
+    /// ([`PipelineSim::run_interpreted`]) — the validation oracle. Also
+    /// cross-checks the closed-form cycle prediction live
+    /// (`MetricsSnapshot::cycle_divergence`).
+    Interpreter,
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -71,6 +93,8 @@ pub struct ServerConfig {
     pub clock_hz: f64,
     /// How long a shard waits to fill a group before flushing.
     pub batch_window: Duration,
+    /// Value/cycle engine the shards execute (compiled by default).
+    pub engine: EngineKind,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +106,7 @@ impl Default for ServerConfig {
             verify_every: 8,
             clock_hz: 600.0e6, // the paper's JSC designs close ~600 MHz
             batch_window: Duration::from_millis(1),
+            engine: EngineKind::Compiled,
         }
     }
 }
@@ -141,16 +166,28 @@ pub struct Server {
 
 impl Server {
     /// Start a server over a quantized model: the layer plan is computed
-    /// once, then each worker shard receives its own simulator clone.
-    /// `verify_model` names an artifact bundle to load in the verifier
-    /// thread (None = no verification, e.g. when artifacts are absent).
+    /// and lowered once, then each worker shard receives its own clone of
+    /// the compiled state. `verify_model` names an artifact bundle to load
+    /// in the verifier thread (None = no verification, e.g. when artifacts
+    /// are absent).
     pub fn start(
         qmodel: QModel,
         config: ServerConfig,
         verify_model: Option<String>,
     ) -> Result<Server, String> {
-        let workers = config.workers.max(1);
         let base_sim = PipelineSim::new(qmodel, None)?;
+        Self::start_prelowered(base_sim, config, verify_model)
+    }
+
+    /// Like [`Server::start`] but over an already planned-and-lowered
+    /// pipeline (e.g. from `runtime::ModelBundle`), so shards clone
+    /// compiled state instead of re-planning.
+    pub fn start_prelowered(
+        base_sim: PipelineSim,
+        config: ServerConfig,
+        verify_model: Option<String>,
+    ) -> Result<Server, String> {
+        let workers = config.workers.max(1);
         let metrics = Arc::new(Metrics::default());
 
         // Verifier thread (owns the PJRT runtime end-to-end). All shards
@@ -251,6 +288,9 @@ impl Server {
         let mut cycles = 0u64;
         let mut service_ns = 0u64;
         let mut busy_max = 0u64;
+        let mut predicted_cycles = 0u64;
+        let mut simulated_cycles = 0u64;
+        let mut cycle_divergence = 0u64;
         let mut buckets = [0u64; metrics::BUCKETS];
         for s in &self.shards {
             completed += s.metrics.completed.load(Ordering::Relaxed);
@@ -258,6 +298,9 @@ impl Server {
             cycles += s.metrics.sim_cycles_total.load(Ordering::Relaxed);
             service_ns += s.metrics.service_ns_total.load(Ordering::Relaxed);
             busy_max = busy_max.max(s.metrics.busy_cycles.load(Ordering::Relaxed));
+            predicted_cycles += s.metrics.predicted_cycles.load(Ordering::Relaxed);
+            simulated_cycles += s.metrics.simulated_cycles.load(Ordering::Relaxed);
+            cycle_divergence += s.metrics.cycle_divergence.load(Ordering::Relaxed);
             for (b, v) in buckets.iter_mut().zip(s.metrics.latency.counts().iter()) {
                 *b += v;
             }
@@ -271,6 +314,9 @@ impl Server {
             batches,
             verified: m.verified.load(Ordering::Relaxed),
             mismatches: m.mismatches.load(Ordering::Relaxed),
+            predicted_cycles,
+            simulated_cycles,
+            cycle_divergence,
             mean_batch: completed as f64 / batches.max(1) as f64,
             mean_service: Duration::from_nanos(if completed == 0 {
                 0
@@ -352,6 +398,13 @@ fn worker_loop(
     vtx: SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
 ) {
+    // The compiled engine is cloned once per shard and reused across all
+    // groups — scratch buffers included, so the hot path never allocates
+    // activation storage.
+    let mut engine: Option<CompiledPipeline> = match config.engine {
+        EngineKind::Compiled => Some(sim.compiled.clone()),
+        EngineKind::Interpreter => None,
+    };
     let mut serial: u64 = 0;
     let mut open = true;
     while open {
@@ -374,7 +427,7 @@ fn worker_loop(
                 Err(_) => break,
             }
         }
-        run_group(&sim, &config, group, &vtx, shard, &mut serial);
+        run_group(&sim, &mut engine, &config, group, &vtx, shard, &mut serial);
     }
     // Drain: answer anything still queued (e.g. requests that raced the
     // shutdown marker) so no accepted request is dropped unanswered.
@@ -390,62 +443,141 @@ fn worker_loop(
         if group.is_empty() {
             break;
         }
-        run_group(&sim, &config, group, &vtx, shard, &mut serial);
+        run_group(&sim, &mut engine, &config, group, &vtx, shard, &mut serial);
     }
 }
 
+/// Outcome of one frame group, engine-independent. Per-frame results so
+/// one malformed request (wrong length, out-of-grid values) errors only
+/// its own reply, never its co-batched neighbours.
+struct GroupResult {
+    outputs: Vec<Result<Vec<i64>, String>>,
+    /// Frame-0 latency (cycles) reported per response.
+    latency_cycles: u64,
+    /// Steady-state cycles attributed to each frame of the group.
+    per_frame_cycles: u64,
+    /// Total modelled cycles the group occupied the pipeline for.
+    group_cycles: u64,
+}
+
+/// Compiled hot path: per-frame value execution plus O(1) closed-form
+/// cycle figures — no cycle simulation.
+fn run_group_compiled(
+    sim: &PipelineSim,
+    engine: &mut CompiledPipeline,
+    group: &[Request],
+    shard: &ShardMetrics,
+) -> GroupResult {
+    let mut outputs = Vec::with_capacity(group.len());
+    for r in group {
+        outputs.push(engine.execute(&r.x_q).map(|o| o.to_vec()));
+    }
+    let n = group.len();
+    let group_cycles = sim.predicted.total_cycles(n);
+    shard
+        .predicted_cycles
+        .fetch_add(group_cycles, Ordering::Relaxed);
+    GroupResult {
+        outputs,
+        latency_cycles: sim.predicted.first_frame_latency,
+        per_frame_cycles: sim.predicted.cycles_per_frame(n).max(1.0) as u64,
+        group_cycles,
+    }
+}
+
+/// Oracle path: the fused interpreter, cross-checking the closed-form
+/// cycle prediction on every group.
+fn run_group_interpreted(
+    sim: &PipelineSim,
+    group: &[Request],
+    shard: &ShardMetrics,
+) -> GroupResult {
+    let frames: Vec<Vec<i64>> = group.iter().map(|r| r.x_q.clone()).collect();
+    let result = match sim.run_interpreted(&frames) {
+        Ok(r) => r,
+        Err(e) => {
+            // The fused loop answers all-or-nothing: surface the error on
+            // every reply (frame-length errors are per-request anyway).
+            return GroupResult {
+                outputs: group.iter().map(|_| Err(e.clone())).collect(),
+                latency_cycles: 0,
+                per_frame_cycles: 0,
+                group_cycles: 0,
+            };
+        }
+    };
+    let predicted = sim.predicted.total_cycles(group.len());
+    shard
+        .predicted_cycles
+        .fetch_add(predicted, Ordering::Relaxed);
+    shard
+        .simulated_cycles
+        .fetch_add(result.total_cycles, Ordering::Relaxed);
+    if predicted != result.total_cycles {
+        shard.cycle_divergence.fetch_add(1, Ordering::Relaxed);
+    }
+    GroupResult {
+        latency_cycles: result.first_frame_latency,
+        per_frame_cycles: result.cycles_per_frame.max(1.0) as u64,
+        group_cycles: result.total_cycles,
+        outputs: result.outputs.into_iter().map(Ok).collect(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_group(
     sim: &PipelineSim,
+    engine: &mut Option<CompiledPipeline>,
     config: &ServerConfig,
     group: Vec<Request>,
     vtx: &SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
     serial: &mut u64,
 ) {
-    let frames: Vec<Vec<i64>> = group.iter().map(|r| r.x_q.clone()).collect();
-    match sim.run(&frames) {
-        Ok(result) => {
-            shard.batches.fetch_add(1, Ordering::Relaxed);
-            shard
-                .busy_cycles
-                .fetch_add(result.total_cycles, Ordering::Relaxed);
-            let per_frame_cycles = result.cycles_per_frame.max(1.0) as u64;
-            for (req, logits) in group.into_iter().zip(result.outputs.into_iter()) {
-                *serial += 1;
-                let argmax = logits
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|(_, v)| **v)
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                let service = req.enqueued.elapsed();
-                let resp = InferResponse {
-                    logits: logits.clone(),
-                    argmax,
-                    sim_latency_cycles: result.first_frame_latency,
-                    service_time: service,
-                };
-                shard.completed.fetch_add(1, Ordering::Relaxed);
-                shard
-                    .sim_cycles_total
-                    .fetch_add(per_frame_cycles, Ordering::Relaxed);
-                shard
-                    .service_ns_total
-                    .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
-                shard.latency.record(service);
-                if config.verify_every > 0 && *serial % config.verify_every as u64 == 0 {
-                    // Sampled golden check; drop silently if the verifier
-                    // is busy (never blocks serving).
-                    let _ = vtx.try_send((req.x_q.clone(), logits));
-                }
-                let _ = req.reply.send(Ok(resp));
+    let result = match engine.as_mut() {
+        Some(cp) => run_group_compiled(sim, cp, &group, shard),
+        None => run_group_interpreted(sim, &group, shard),
+    };
+    shard.batches.fetch_add(1, Ordering::Relaxed);
+    shard
+        .busy_cycles
+        .fetch_add(result.group_cycles, Ordering::Relaxed);
+    for (req, outcome) in group.into_iter().zip(result.outputs.into_iter()) {
+        let logits = match outcome {
+            Ok(logits) => logits,
+            Err(e) => {
+                let _ = req.reply.send(Err(e));
+                continue;
             }
+        };
+        *serial += 1;
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let service = req.enqueued.elapsed();
+        let resp = InferResponse {
+            logits: logits.clone(),
+            argmax,
+            sim_latency_cycles: result.latency_cycles,
+            service_time: service,
+        };
+        shard.completed.fetch_add(1, Ordering::Relaxed);
+        shard
+            .sim_cycles_total
+            .fetch_add(result.per_frame_cycles, Ordering::Relaxed);
+        shard
+            .service_ns_total
+            .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
+        shard.latency.record(service);
+        if config.verify_every > 0 && *serial % config.verify_every as u64 == 0 {
+            // Sampled golden check; drop silently if the verifier
+            // is busy (never blocks serving).
+            let _ = vtx.try_send((req.x_q.clone(), logits));
         }
-        Err(e) => {
-            for req in group {
-                let _ = req.reply.send(Err(e.clone()));
-            }
-        }
+        let _ = req.reply.send(Ok(resp));
     }
 }
 
@@ -711,6 +843,62 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.spilled, 0);
         assert_eq!(m.completed, 32);
+    }
+
+    #[test]
+    fn interpreter_engine_matches_compiled_bit_for_bit() {
+        // The same seeded trace through both engines must produce
+        // identical logits, and the interpreter engine must confirm the
+        // closed-form cycle prediction on every group.
+        let qm = QModel::synthetic(8, 4, 6, 0xE6);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let trace = loadgen::Trace::seeded(17, 40, 64, 1);
+        let expected = loadgen::golden_outputs(&sim, &trace);
+        let mut snapshots = Vec::new();
+        for engine in [EngineKind::Compiled, EngineKind::Interpreter] {
+            let server = Server::start(
+                qm.clone(),
+                ServerConfig {
+                    workers: 2,
+                    batch: 4,
+                    queue_depth: 64,
+                    verify_every: 0,
+                    engine,
+                    batch_window: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                None,
+            )
+            .unwrap();
+            let report = loadgen::replay(&server, &trace, 8, Some(&expected));
+            let m = server.shutdown();
+            assert_eq!(report.ok, 40, "{engine:?}");
+            assert_eq!(report.mismatched, 0, "{engine:?}");
+            assert_eq!(m.cycle_divergence, 0, "{engine:?}");
+            snapshots.push(m);
+        }
+        // Interpreter mode measured cycles; they must equal its own
+        // predictions exactly (the live predicted-vs-simulated check).
+        let interp = &snapshots[1];
+        assert!(interp.simulated_cycles > 0);
+        assert_eq!(interp.simulated_cycles, interp.predicted_cycles);
+        // Compiled mode never simulates cycles but predicts the same
+        // totals for the same group shapes.
+        assert_eq!(snapshots[0].simulated_cycles, 0);
+        assert!(snapshots[0].predicted_cycles > 0);
+    }
+
+    #[test]
+    fn prelowered_start_serves_identically() {
+        let qm = QModel::synthetic(8, 4, 6, 0xE7);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let expect = sim.run(&[vec![1; 64]]).unwrap().outputs[0].clone();
+        let server =
+            Server::start_prelowered(sim, ServerConfig::default(), None).unwrap();
+        let resp = server.infer(vec![1; 64]).unwrap();
+        assert_eq!(resp.logits, expect);
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Continuous-flow analysis (systems S2 + S3): exact rational data rates,
-//! Eq.-8 propagation, and the interleaving planner of Section IV.
+//! Eq.-8 propagation, the interleaving planner of Section IV, and the
+//! analytic schedule model that turns a plan into closed-form cycle
+//! figures (DESIGN.md §4).
 
 pub mod plan;
 pub mod rate;
 pub mod ratio;
+pub mod schedule;
 
 pub use plan::{plan_all, plan_layer, PlannedLayer, UnitPlan};
 pub use rate::{analyze, layer_rate, RateAnalysis, RatedLayer};
 pub use ratio::Ratio;
+pub use schedule::{ScheduleModel, SchedulePrediction};

@@ -1,0 +1,655 @@
+//! Analytic schedule model (system S2/S6 bridge) — the *cycles* half of
+//! the values/cycles split (DESIGN.md §4).
+//!
+//! The pipeline interpreter (`sim::pipeline::PipelineSim::run_interpreted`)
+//! fuses two independent concerns in one loop: bit-exact int8 values and
+//! the continuous-flow cycle schedule. The schedule half is completely
+//! value-free: which cycle an output pixel completes on depends only on
+//! the Eq. 8 rates, the unit plan (initiation intervals), and the window
+//! geometry — never on activations. This module factors that half out:
+//!
+//! * [`ScheduleModel`] — a lowered, value-free replay of the interpreter's
+//!   exact cycle recurrence (`finish = max(dep, prev + period) + latency`),
+//!   with per-output-pixel dependency indices precomputed once. Replaying
+//!   `n` frames is O(output pixels · n) with no arithmetic on values, and
+//!   is **exactly** the interpreter's schedule by construction.
+//! * [`SchedulePrediction`] — a closed form on top of the replay: the
+//!   recurrence is a max-plus linear system, so after a short transient
+//!   every layer's completion times advance by a constant per frame. The
+//!   prediction replays frames until it certifies that steady state
+//!   (two consecutive frames with identical uniform shifts of the entire
+//!   schedule state), then answers `total_cycles(n)`,
+//!   `cycles_per_frame(n)` and per-layer utilisation for *any* frame
+//!   count in O(1) — which is what lets serving skip cycle simulation
+//!   entirely.
+
+use super::{PlannedLayer, Ratio, UnitPlan};
+use crate::model::LayerKind;
+
+/// Latency (pipeline register stages) per unit kind, as modelled by the
+/// interpreter: KPU-style window units take 3 cycles, PPU comparators 2,
+/// FCU accumulate/forward 2 (plus its weight-cycle tail `h`).
+const LAT_KPU: u64 = 3;
+const LAT_PPU: u64 = 2;
+const LAT_FCU: u64 = 2;
+
+/// Value-free per-layer schedule program.
+#[derive(Debug, Clone)]
+enum SKind {
+    /// Window layers (conv / dwconv / maxpool / avgpool): one entry per
+    /// output pixel giving the index (into the upstream completion
+    /// vector) of the last input pixel the window depends on.
+    Window { dep_idx: Vec<u32>, ops_per_out: u64 },
+    /// Fully connected: consumes the whole upstream frame, emits one
+    /// "pixel"; `h` is the FCU weight-cycle tail, `ii` the initiation
+    /// interval (= configurations C).
+    Dense { h: u64, ii: u64, ops_per_frame: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct SLayer {
+    name: String,
+    unit_kind: &'static str,
+    units: usize,
+    latency: u64,
+    /// Cycles per output pixel, d_l / r_l rounded up (unused by Dense).
+    out_period: u64,
+    kind: SKind,
+}
+
+/// Per-layer cycle statistics accumulated by a replay — field-for-field
+/// the schedule content of `sim::pipeline::LayerStats`.
+#[derive(Debug, Clone)]
+pub struct CycleStats {
+    pub name: String,
+    pub unit_kind: &'static str,
+    pub units: usize,
+    pub useful_ops: u64,
+    pub first_cycle: u64,
+    pub last_cycle: u64,
+    pub utilization: f64,
+}
+
+/// Result of replaying `n` frames through the schedule.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    /// Final-layer completion cycle of each frame.
+    pub frame_finishes: Vec<u64>,
+    pub stats: Vec<CycleStats>,
+    pub total_cycles: u64,
+    pub first_frame_latency: u64,
+    pub cycles_per_frame: f64,
+}
+
+/// Steady-state cycles/frame from per-frame completion cycles: frame 0 is
+/// the latency measurement and frame 1 absorbs pipeline warm-up, so the
+/// throughput difference is taken from frame 1 onward. (Differencing from
+/// frame 0 lets the fill transient — e.g. nonzero inter-frame zero-feed
+/// gaps, or ceil-rounded layer periods that only saturate after a frame —
+/// skew the multi-frame figure.)
+pub fn steady_cycles_per_frame(finishes: &[u64]) -> f64 {
+    match finishes.len() {
+        0 => 0.0,
+        1 => finishes[0] as f64,
+        2 => (finishes[1] - finishes[0]) as f64,
+        n => (finishes[n - 1] - finishes[1]) as f64 / (n - 2) as f64,
+    }
+}
+
+/// Mutable replay state: one entry per layer, carried across frames.
+#[derive(Debug, Clone)]
+pub struct ScheduleState {
+    /// Source pixel completion cycles for the current frame.
+    src: Vec<u64>,
+    /// Per-layer output-pixel completion cycles for the current frame.
+    outs: Vec<Vec<u64>>,
+    prev_finish: Vec<u64>,
+    ops: Vec<u64>,
+    first: Vec<u64>,
+    last: Vec<u64>,
+    frames_done: u64,
+}
+
+/// The lowered value-free schedule of a planned pipeline.
+#[derive(Debug, Clone)]
+pub struct ScheduleModel {
+    layers: Vec<SLayer>,
+    frame_pixels: usize,
+    /// Zero-feed pixels between frames (Section III-B shared padding
+    /// rows): p*f + p when the first layer pads, else 0.
+    gap_pixels: usize,
+    c0: u64,
+    r0: Ratio,
+}
+
+impl ScheduleModel {
+    /// Lower a unit plan into a replayable schedule. `input_hw` is the
+    /// (h, w) of the input feature map (each already `.max(1)`), `d0` its
+    /// channel count — exactly the values the interpreter reads from the
+    /// quantized model's input shape.
+    pub fn new(
+        plans: &[PlannedLayer],
+        input_hw: (usize, usize),
+        d0: usize,
+    ) -> Result<ScheduleModel, String> {
+        if plans.is_empty() {
+            return Err("schedule: empty plan".into());
+        }
+        let r0 = plans[0].rated.r_in;
+        if r0.is_zero() {
+            return Err("schedule: zero input rate".into());
+        }
+        let mut layers = Vec::with_capacity(plans.len());
+        for plan in plans {
+            layers.push(lower_layer(plan)?);
+        }
+        let first = &plans[0].rated.shaped.layer;
+        let gap_pixels = if first.p > 0 {
+            first.p * input_hw.1 + first.p
+        } else {
+            0
+        };
+        Ok(ScheduleModel {
+            layers,
+            frame_pixels: input_hw.0 * input_hw.1,
+            gap_pixels,
+            c0: d0 as u64,
+            r0,
+        })
+    }
+
+    pub fn start(&self) -> ScheduleState {
+        let n = self.layers.len();
+        ScheduleState {
+            src: vec![0; self.frame_pixels],
+            outs: vec![Vec::new(); n],
+            prev_finish: vec![0; n],
+            ops: vec![0; n],
+            first: vec![u64::MAX; n],
+            last: vec![0; n],
+            frames_done: 0,
+        }
+    }
+
+    /// Advance the replay by one frame; returns the final layer's last
+    /// completion cycle for this frame. Bit-for-bit the interpreter's
+    /// schedule recurrence (frames-outer vs layers-outer iteration order
+    /// is immaterial: each (layer, frame) step depends only on the same
+    /// layer's previous frame and the previous layer's same frame).
+    pub fn step_frame(&self, st: &mut ScheduleState) -> u64 {
+        // Source: pixel m's last feature arrives at ceil((m+1)*d0/r0) - 1,
+        // with inter-frame zero-feed gap pixels advancing the base index.
+        let base = st.frames_done * (self.frame_pixels + self.gap_pixels) as u64;
+        for (m, slot) in st.src.iter_mut().enumerate() {
+            *slot = ((base + m as u64 + 1) * self.c0 * self.r0.den()).div_ceil(self.r0.num()) - 1;
+        }
+        let mut frame_final = 0u64;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (done, rest) = st.outs.split_at_mut(li);
+            let ins: &[u64] = if li == 0 { &st.src } else { &done[li - 1] };
+            let out = &mut rest[0];
+            out.clear();
+            match &layer.kind {
+                SKind::Dense { h, ii, ops_per_frame } => {
+                    let dep = ins.last().copied().unwrap_or(0);
+                    let finish = (dep + h + layer.latency).max(st.prev_finish[li] + ii);
+                    st.ops[li] += ops_per_frame;
+                    st.first[li] = st.first[li].min(ins.first().copied().unwrap_or(dep));
+                    st.last[li] = st.last[li].max(finish);
+                    st.prev_finish[li] = finish;
+                    out.push(finish);
+                }
+                SKind::Window { dep_idx, ops_per_out } => {
+                    let mut prev = st.prev_finish[li];
+                    for &di in dep_idx {
+                        let dep = ins[di as usize];
+                        let finish = dep.max(prev + layer.out_period) + layer.latency;
+                        st.ops[li] += ops_per_out;
+                        st.first[li] = st.first[li].min(dep);
+                        st.last[li] = st.last[li].max(finish);
+                        prev = finish - layer.latency;
+                        out.push(finish);
+                    }
+                    st.prev_finish[li] = prev;
+                }
+            }
+            frame_final = *out.last().expect("layer emitted no pixels");
+        }
+        st.frames_done += 1;
+        frame_final
+    }
+
+    /// Replay `frames` frames from a cold pipeline and report the exact
+    /// interpreter schedule: per-frame finishes and per-layer statistics.
+    pub fn run(&self, frames: usize) -> ScheduleResult {
+        let mut st = self.start();
+        let mut finishes = Vec::with_capacity(frames);
+        for _ in 0..frames {
+            finishes.push(self.step_frame(&mut st));
+        }
+        let stats = self.stats_of(&st);
+        let total_cycles = finishes.last().copied().unwrap_or(0);
+        ScheduleResult {
+            first_frame_latency: finishes.first().copied().unwrap_or(0),
+            cycles_per_frame: steady_cycles_per_frame(&finishes),
+            frame_finishes: finishes,
+            stats,
+            total_cycles,
+        }
+    }
+
+    fn stats_of(&self, st: &ScheduleState) -> Vec<CycleStats> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                let elapsed = st.last[li].saturating_sub(st.first[li]).max(1);
+                CycleStats {
+                    name: l.name.clone(),
+                    unit_kind: l.unit_kind,
+                    units: l.units,
+                    useful_ops: st.ops[li],
+                    first_cycle: st.first[li],
+                    last_cycle: st.last[li],
+                    utilization: st.ops[li] as f64 / (l.units as f64 * elapsed as f64),
+                }
+            })
+            .collect()
+    }
+
+    /// Per-layer useful operations accounted per frame (constant).
+    fn ops_per_frame(&self, li: usize) -> u64 {
+        match &self.layers[li].kind {
+            SKind::Dense { ops_per_frame, .. } => *ops_per_frame,
+            SKind::Window {
+                dep_idx,
+                ops_per_out,
+            } => dep_idx.len() as u64 * ops_per_out,
+        }
+    }
+}
+
+fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, String> {
+    let sl = &plan.rated.shaped;
+    let layer = &sl.layer;
+    let (h_in, w_in) = (sl.input.f, sl.input.f);
+    let (h_out, w_out) = (sl.output.f, sl.output.f);
+    let (c_in, c_out) = (sl.input.d, sl.output.d);
+    let r_out = plan.rated.r_out;
+    if r_out.is_zero() {
+        return Err(format!("schedule: {}: zero output rate", layer.name));
+    }
+    let out_period = (c_out as u64 * r_out.den()).div_ceil(r_out.num()).max(1);
+    let unit_kind = match plan.plan {
+        UnitPlan::Kpu { .. } => "KPU",
+        UnitPlan::Ppu { .. } => "PPU",
+        UnitPlan::Fcu { .. } => "FCU",
+    };
+    let units = plan.plan.unit_count();
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    let kind = match layer.kind {
+        LayerKind::Dense => {
+            let h = match plan.plan {
+                UnitPlan::Fcu { h, .. } => h as u64,
+                _ => 1,
+            };
+            let ii = plan.plan.configs() as u64;
+            SKind::Dense {
+                h,
+                ii,
+                ops_per_frame: ii * units as u64,
+            }
+        }
+        LayerKind::MaxPool => {
+            // The interpreter's maxpool dependency ignores padding: the
+            // window's last pixel, clipped to the map.
+            let mut dep_idx = Vec::with_capacity(h_out * w_out);
+            for orow in 0..h_out {
+                for ocol in 0..w_out {
+                    let lr = (orow * s + k - 1).min(h_in - 1);
+                    let lc = (ocol * s + k - 1).min(w_in - 1);
+                    dep_idx.push((lr * w_in + lc) as u32);
+                }
+            }
+            SKind::Window {
+                dep_idx,
+                ops_per_out: c_out as u64,
+            }
+        }
+        LayerKind::Conv | LayerKind::DepthwiseConv | LayerKind::AvgPool => {
+            let pi = p as isize;
+            let mut dep_idx = Vec::with_capacity(h_out * w_out);
+            for orow in 0..h_out {
+                for ocol in 0..w_out {
+                    let lr = ((orow * s) as isize + k as isize - 1 - pi)
+                        .clamp(0, h_in as isize - 1) as usize;
+                    let lc = ((ocol * s) as isize + k as isize - 1 - pi)
+                        .clamp(0, w_in as isize - 1) as usize;
+                    dep_idx.push((lr * w_in + lc) as u32);
+                }
+            }
+            let ops_per_out = match layer.kind {
+                LayerKind::Conv => (c_in * c_out) as u64,
+                _ => c_out as u64,
+            };
+            SKind::Window {
+                dep_idx,
+                ops_per_out,
+            }
+        }
+        LayerKind::Pointwise => {
+            return Err(format!(
+                "schedule: {}: pointwise layers are not pipeline-simulated",
+                layer.name
+            ));
+        }
+    };
+    let latency = match layer.kind {
+        LayerKind::MaxPool => LAT_PPU,
+        LayerKind::Dense => LAT_FCU,
+        _ => LAT_KPU,
+    };
+    Ok(SLayer {
+        name: layer.name.clone(),
+        unit_kind,
+        units,
+        latency,
+        out_period,
+        kind,
+    })
+}
+
+/// Closed-form per-layer prediction derived from a certified steady state.
+#[derive(Debug, Clone)]
+pub struct LayerPrediction {
+    pub name: String,
+    pub unit_kind: &'static str,
+    pub units: usize,
+    pub ops_per_frame: u64,
+    pub first_cycle: u64,
+    /// Per-frame last-completion-cycle prefix (observed frames).
+    last_prefix: Vec<u64>,
+    /// Steady per-frame advance of this layer's completions.
+    last_delta: u64,
+    /// Limit utilisation as the frame count grows.
+    pub steady_utilization: f64,
+}
+
+/// Closed-form schedule figures: frame-0 latency, steady cycles/frame and
+/// per-layer utilisation, answering any frame count in O(1).
+///
+/// `exact` is true when the replay certified steady state (two
+/// consecutive frames whose entire schedule state — every layer's
+/// completion vector, carried initiation state, and the source stream —
+/// shifted by identical per-layer constants). Within the observed prefix
+/// the prediction is always exact; beyond it, extrapolation is exact when
+/// `exact` holds and a best-effort linear estimate otherwise.
+#[derive(Debug, Clone)]
+pub struct SchedulePrediction {
+    pub first_frame_latency: u64,
+    /// Steady per-frame advance of the final layer (throughput bound).
+    pub steady_cycles_per_frame: u64,
+    pub exact: bool,
+    finish_prefix: Vec<u64>,
+    finish_delta: u64,
+    pub layers: Vec<LayerPrediction>,
+}
+
+/// Frames the certification replay is allowed to observe before giving up
+/// and marking the prediction inexact.
+const CERT_HORIZON: usize = 32;
+
+impl SchedulePrediction {
+    pub fn new(model: &ScheduleModel) -> SchedulePrediction {
+        Self::with_horizon(model, CERT_HORIZON)
+    }
+
+    pub fn with_horizon(model: &ScheduleModel, max_frames: usize) -> SchedulePrediction {
+        let max_frames = max_frames.max(3);
+        let n_layers = model.layers.len();
+        let mut st = model.start();
+        let mut finishes: Vec<u64> = Vec::new();
+        let mut last_prefix: Vec<Vec<u64>> = vec![Vec::new(); n_layers];
+        let mut prev_deltas: Option<Vec<u64>> = None;
+        let mut exact = false;
+        let mut deltas: Vec<u64> = vec![0; n_layers];
+        while finishes.len() < max_frames {
+            let snap_src = st.src.clone();
+            let snap_outs = st.outs.clone();
+            let snap_pf = st.prev_finish.clone();
+            finishes.push(model.step_frame(&mut st));
+            for (li, prefix) in last_prefix.iter_mut().enumerate() {
+                prefix.push(st.last[li]);
+            }
+            if finishes.len() < 2 {
+                continue;
+            }
+            // Uniform-shift certificate for this frame vs the previous one.
+            let ds = uniform_deltas(&snap_src, &snap_outs, &snap_pf, &st);
+            match (ds, &prev_deltas) {
+                (Some(ds), Some(prev)) if *prev == ds => {
+                    deltas = ds;
+                    exact = true;
+                    break;
+                }
+                (Some(ds), _) => prev_deltas = Some(ds),
+                (None, _) => prev_deltas = None,
+            }
+        }
+        if !exact {
+            // Best-effort: extrapolate with the last observed advances.
+            for (li, prefix) in last_prefix.iter().enumerate() {
+                deltas[li] = match prefix.len() {
+                    0 | 1 => 1,
+                    n => (prefix[n - 1] - prefix[n - 2]).max(1),
+                };
+            }
+        }
+        let finish_delta = deltas.last().copied().unwrap_or(1).max(1);
+        let layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                let opf = model.ops_per_frame(li);
+                let d = deltas[li].max(1);
+                LayerPrediction {
+                    name: l.name.clone(),
+                    unit_kind: l.unit_kind,
+                    units: l.units,
+                    ops_per_frame: opf,
+                    first_cycle: st.first[li],
+                    last_prefix: last_prefix[li].clone(),
+                    last_delta: d,
+                    steady_utilization: opf as f64 / (l.units as f64 * d as f64),
+                }
+            })
+            .collect();
+        SchedulePrediction {
+            first_frame_latency: finishes.first().copied().unwrap_or(0),
+            steady_cycles_per_frame: finish_delta,
+            exact,
+            finish_prefix: finishes,
+            finish_delta,
+            layers,
+        }
+    }
+
+    /// Frames the replay observed before certifying (or giving up);
+    /// predictions up to this count are exact replays by construction.
+    pub fn frames_observed(&self) -> usize {
+        self.finish_prefix.len()
+    }
+
+    fn finish(&self, frame_idx: usize) -> u64 {
+        let n = self.finish_prefix.len();
+        if frame_idx < n {
+            self.finish_prefix[frame_idx]
+        } else {
+            self.finish_prefix[n - 1] + (frame_idx + 1 - n) as u64 * self.finish_delta
+        }
+    }
+
+    /// Completion cycle of the last output of an `frames`-frame stream —
+    /// the interpreter's `total_cycles`.
+    pub fn total_cycles(&self, frames: usize) -> u64 {
+        if frames == 0 {
+            return 0;
+        }
+        self.finish(frames - 1)
+    }
+
+    /// The interpreter's steady-state `cycles_per_frame` for an
+    /// `frames`-frame stream (same warm-up-excluding formula).
+    pub fn cycles_per_frame(&self, frames: usize) -> f64 {
+        match frames {
+            0 => 0.0,
+            1 => self.finish(0) as f64,
+            2 => (self.finish(1) - self.finish(0)) as f64,
+            n => (self.finish(n - 1) - self.finish(1)) as f64 / (n - 2) as f64,
+        }
+    }
+
+    /// Per-layer utilisation over an `frames`-frame stream.
+    pub fn utilization(&self, frames: usize) -> Vec<f64> {
+        self.layers
+            .iter()
+            .map(|l| {
+                if frames == 0 {
+                    return 0.0;
+                }
+                let n = l.last_prefix.len();
+                let last = if frames <= n {
+                    l.last_prefix[frames - 1]
+                } else {
+                    l.last_prefix[n - 1] + (frames - n) as u64 * l.last_delta
+                };
+                let elapsed = last.saturating_sub(l.first_cycle).max(1);
+                (l.ops_per_frame * frames as u64) as f64 / (l.units as f64 * elapsed as f64)
+            })
+            .collect()
+    }
+}
+
+/// If every layer's completion vector (and carried state), plus the
+/// source stream, advanced by a per-layer-uniform shift this frame,
+/// return those shifts.
+fn uniform_deltas(
+    snap_src: &[u64],
+    snap_outs: &[Vec<u64>],
+    snap_pf: &[u64],
+    st: &ScheduleState,
+) -> Option<Vec<u64>> {
+    // Source must shift uniformly (any constant).
+    let s0 = st.src.first()?.checked_sub(*snap_src.first()?)?;
+    if !st.src.iter().zip(snap_src).all(|(c, p)| c.wrapping_sub(*p) == s0) {
+        return None;
+    }
+    let mut ds = Vec::with_capacity(snap_outs.len());
+    for (li, prev) in snap_outs.iter().enumerate() {
+        let cur = &st.outs[li];
+        if prev.len() != cur.len() || prev.is_empty() {
+            return None;
+        }
+        let d = cur[0].checked_sub(prev[0])?;
+        if !cur.iter().zip(prev).all(|(c, p)| c.wrapping_sub(*p) == d) {
+            return None;
+        }
+        if st.prev_finish[li].checked_sub(snap_pf[li]) != Some(d) {
+            return None;
+        }
+        ds.push(d);
+    }
+    Some(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{analyze, plan_all};
+    use crate::model::{Layer, Model};
+
+    fn tiny_model() -> (Vec<PlannedLayer>, (usize, usize), usize) {
+        // Mirrors sim::pipeline's tiny fixture: conv3x3 p1 (1->2),
+        // maxpool 2x2, dense 4 on a 4x4x1 input.
+        let mut m = Model::new("tiny", 4, 1);
+        m.push(Layer::conv("C1", 3, 1, 1, 2));
+        m.push(Layer::maxpool("P1", 2, 2));
+        m.push(Layer::dense("F1", 4).no_relu());
+        let a = analyze(&m, None).unwrap();
+        (plan_all(&a), (4, 4), 1)
+    }
+
+    #[test]
+    fn steady_formula_excludes_warmup_frame() {
+        // Pinned semantics: frame 0 measures latency, frame 1 absorbs
+        // warm-up, steady state is the tail average from frame 1 on.
+        assert_eq!(steady_cycles_per_frame(&[]), 0.0);
+        assert_eq!(steady_cycles_per_frame(&[10]), 10.0);
+        assert_eq!(steady_cycles_per_frame(&[10, 31]), 21.0);
+        // Warm-up: frame 0 finishes early (delta 30), steady delta is 21.
+        // The old frame-0 baseline would report (103-10)/4 = 23.25.
+        assert_eq!(steady_cycles_per_frame(&[10, 40, 61, 82, 103]), 21.0);
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_monotone() {
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let a = model.run(6);
+        let b = model.run(6);
+        assert_eq!(a.frame_finishes, b.frame_finishes);
+        assert!(a.frame_finishes.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a.total_cycles, *a.frame_finishes.last().unwrap());
+        assert_eq!(a.first_frame_latency, a.frame_finishes[0]);
+        for s in &a.stats {
+            assert!(s.utilization > 0.0 && s.utilization <= 1.0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn prediction_matches_replay_exactly() {
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let pred = SchedulePrediction::new(&model);
+        assert!(pred.exact, "tiny model must certify steady state");
+        for n in [1usize, 2, 3, 5, 16, 64, 100] {
+            let replay = model.run(n);
+            assert_eq!(pred.total_cycles(n), replay.total_cycles, "n={n}");
+            assert_eq!(
+                pred.cycles_per_frame(n),
+                replay.cycles_per_frame,
+                "n={n}"
+            );
+            let u = pred.utilization(n);
+            for (li, s) in replay.stats.iter().enumerate() {
+                assert!(
+                    (u[li] - s.utilization).abs() < 1e-12,
+                    "n={n} layer {li}: {} vs {}",
+                    u[li],
+                    s.utilization
+                );
+            }
+        }
+        assert_eq!(pred.first_frame_latency, model.run(1).total_cycles);
+    }
+
+    #[test]
+    fn prediction_horizon_caps_observation() {
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let pred = SchedulePrediction::with_horizon(&model, 4);
+        assert!(pred.frames_observed() <= 4);
+        // Steady advance equals the frame period: 16 pixels + 5 gap.
+        assert_eq!(pred.steady_cycles_per_frame, 21);
+    }
+
+    #[test]
+    fn pointwise_is_rejected() {
+        let mut m = Model::new("pw", 4, 2);
+        m.push(Layer::pwconv("pw1", 4));
+        let a = analyze(&m, None).unwrap();
+        let plans = plan_all(&a);
+        assert!(ScheduleModel::new(&plans, (4, 4), 2).is_err());
+    }
+}

@@ -11,7 +11,10 @@
 //! * [`complexity`] — the closed-form resource model (Eqs. 23-37) with the
 //!   fully-parallel reference, regenerating Tables V-VIII,
 //! * [`sim`] — cycle-accurate, bit-accurate simulators for the KPU / PPU /
-//!   FCU units (Tables I-IV) and whole-network pipelines,
+//!   FCU units (Tables I-IV) and whole-network pipelines, plus the
+//!   compile-once lowered value engine ([`sim::compiled`]) and its
+//!   analytic cycle model ([`flow::schedule`]) that serving executes on
+//!   (DESIGN.md §4),
 //! * [`quant`] — the 8-bit fixed-point substrate shared with the JAX side,
 //! * [`fpga`] — the synthesis estimator standing in for Vivado
 //!   (Tables IX/X, Fig. 13),

@@ -15,12 +15,13 @@
 use std::collections::HashMap;
 
 use cnn_flow::complexity::{layer_cost, model_cost, CostOpts};
-use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::coordinator::{EngineKind, Server, ServerConfig};
 use cnn_flow::flow::{analyze, plan_all, Ratio};
 use cnn_flow::model::{config::model_from_json, zoo, Model};
 use cnn_flow::quant::QModel;
 use cnn_flow::report;
 use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::bench;
 use cnn_flow::util::{paper_count, Table};
 
 fn main() {
@@ -59,6 +60,7 @@ fn run(args: &[String]) -> i32 {
         "analyze" => cmd_analyze(&opts),
         "simulate" => cmd_simulate(&opts),
         "serve" => cmd_serve(&opts),
+        "bench" => cmd_bench(&opts),
         "list" => {
             for m in zoo::all_models() {
                 let shape = m.output_shape().unwrap();
@@ -93,7 +95,8 @@ fn usage() {
          cnn-flow ablation\n  cnn-flow analyze  --model <zoo-name|model.json> [--r0 n[/d]]\n  \
          cnn-flow simulate --model <digits|jsc> [--frames N] [--r0 n[/d]] [--reference]\n  \
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
-                    [--batch N] [--queue-depth N] [--verify-every N]\n  \
+                    [--batch N] [--queue-depth N] [--verify-every N] [--engine compiled|interp]\n  \
+         cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
          cnn-flow list"
     );
 }
@@ -345,6 +348,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .get("verify-every")
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
+    let engine = match opts.get("engine").map(String::as_str) {
+        Some("interp") | Some("interpreter") => EngineKind::Interpreter,
+        _ => EngineKind::Compiled,
+    };
     // --synthetic serves the artifact-free fixture (no golden verifier).
     let (qm, verify_model) = if opts.contains_key("synthetic") {
         (QModel::synthetic(12, 8, 10, 0xF1C), None)
@@ -362,9 +369,28 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         batch,
         queue_depth,
         verify_every,
+        engine,
         ..Default::default()
     };
-    let server = match Server::start(qm.clone(), config, verify_model) {
+    // Plan + lower once; every shard clones the compiled state.
+    let sim = match PipelineSim::new(qm.clone(), None) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let lowered = if sim.compiled.is_narrow() {
+        "narrow/i32"
+    } else {
+        "wide/i64"
+    };
+    println!(
+        "engine: {engine:?} (lowered {lowered}, predicted {} cycles/frame steady, {} cycles frame-0 latency)",
+        sim.predicted.steady_cycles_per_frame,
+        sim.predicted.first_frame_latency,
+    );
+    let server = match Server::start_prelowered(sim, config, verify_model) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -440,6 +466,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     }
     println!("{t}");
     println!(
+        "cycle model: {} predicted cycles, {} interpreter-simulated, {} divergent groups",
+        m.predicted_cycles, m.simulated_cycles, m.cycle_divergence
+    );
+    println!(
         "golden cross-check: {} verified, {} mismatches",
         m.verified, m.mismatches
     );
@@ -447,5 +477,86 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         eprintln!("GOLDEN MISMATCHES DETECTED");
         return 1;
     }
+    if m.cycle_divergence > 0 {
+        eprintln!("SCHEDULE PREDICTION DIVERGED FROM THE INTERPRETER");
+        return 1;
+    }
     0
+}
+
+/// `cnn-flow bench`: interpreter vs compiled frames/sec per model, with
+/// the comparison persisted to BENCH_pipeline.json (machine-readable, so
+/// the perf trajectory is tracked across PRs).
+fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
+    let frames_n: usize = opts
+        .get("frames")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+        .max(1);
+    let out_path = opts
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_pipeline.json".to_string());
+    // Artifact models when present (unless --synthetic), plus the
+    // always-available synthetic digits-shaped fixture.
+    let mut models: Vec<QModel> = Vec::new();
+    if !opts.contains_key("synthetic") {
+        for name in ["digits", "jsc"] {
+            if let Ok(qm) = load_qmodel(name) {
+                models.push(qm);
+            }
+        }
+    }
+    models.push(QModel::synthetic(12, 8, 10, 0xBE7C));
+    let b = bench::Bencher::with_opts(
+        "pipeline-cli",
+        bench::BenchOpts {
+            warmup: std::time::Duration::from_millis(100),
+            measure: std::time::Duration::from_millis(400),
+            max_iters: 100_000,
+        },
+    );
+    let mut comparisons = Vec::new();
+    for qm in models {
+        let name = qm.name.clone();
+        let input_len: usize = qm.input_shape.iter().map(|&d| d.max(1)).product();
+        let sim = match PipelineSim::new(qm.clone(), None) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{name}: {e}");
+                return 1;
+            }
+        };
+        let frames: Vec<Vec<i64>> = if qm.test_vectors.is_empty() {
+            let mut rng = cnn_flow::util::Rng::new(0xF2A);
+            (0..frames_n)
+                .map(|_| (0..input_len).map(|_| rng.int8() as i64).collect())
+                .collect()
+        } else {
+            qm.test_vectors
+                .iter()
+                .cycle()
+                .take(frames_n)
+                .map(|tv| tv.x_q.clone())
+                .collect()
+        };
+        let cmp = bench::compare_engines(&b, &sim, &frames);
+        println!(
+            "{name}: interpreter {:.3}M frames/s, compiled {:.3}M frames/s ({:.1}x)",
+            cmp.interp_fps() / 1e6,
+            cmp.compiled_fps() / 1e6,
+            cmp.speedup()
+        );
+        comparisons.push(cmp);
+    }
+    match bench::write_pipeline_bench_json(std::path::Path::new(&out_path), &comparisons) {
+        Ok(()) => {
+            println!("wrote {out_path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }

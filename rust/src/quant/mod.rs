@@ -268,6 +268,59 @@ impl QModel {
     }
 }
 
+/// Lowering accessors used by the compile-once engine (`sim::compiled`).
+impl QLayer {
+    /// The requant multiplier this layer applies after ReLU, fused at
+    /// lowering time: `None` for the final layer (accumulator-scale
+    /// output, the paper's wider final word), for m == 0, and always for
+    /// max pooling (which forwards maxima untouched whatever its m field
+    /// says — mirroring the pipeline interpreter).
+    pub fn fused_requant(&self, is_last: bool) -> Option<f32> {
+        if self.kind != QKind::MaxPool && !is_last && self.m != 0.0 {
+            Some(self.m)
+        } else {
+            None
+        }
+    }
+
+    /// Worst-case |accumulator| over this layer's outputs, given a bound
+    /// on the input magnitude — max over output channels of
+    /// |bias| + sum |w| * in_bound. Saturating, so pathological
+    /// non-requantized chains peg at `i128::MAX` instead of wrapping.
+    /// Pooling layers pass the input bound through. This is what proves
+    /// (or refutes) 32-bit-lane safety at lowering time.
+    pub fn acc_bound(&self, in_bound: i128) -> i128 {
+        let c_out = self.out_shape[2];
+        if self.kind == QKind::MaxPool || c_out == 0 {
+            return in_bound;
+        }
+        let mut sums = vec![0i128; c_out];
+        if self.kind == QKind::Dense {
+            let feats = self.w_shape.get(1).copied().unwrap_or(0).max(1);
+            for (i, &w) in self.w_q.iter().enumerate() {
+                let term = (w.unsigned_abs() as i128).saturating_mul(in_bound);
+                let u = (i / feats).min(c_out - 1);
+                sums[u] = sums[u].saturating_add(term);
+            }
+        } else {
+            for (i, &w) in self.w_q.iter().enumerate() {
+                let term = (w.unsigned_abs() as i128).saturating_mul(in_bound);
+                sums[i % c_out] = sums[i % c_out].saturating_add(term);
+            }
+        }
+        let mut worst = 0i128;
+        for (co, s) in sums.iter().enumerate() {
+            let b = self
+                .b_q
+                .get(co)
+                .map(|b| b.unsigned_abs() as i128)
+                .unwrap_or(0);
+            worst = worst.max(s.saturating_add(b));
+        }
+        worst
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +418,28 @@ mod tests {
         }
         assert_eq!(a.layers[2].w_shape, vec![6, 4 * 4 * 4]);
         assert_eq!(a.layers[2].b_q.len(), 6);
+    }
+
+    #[test]
+    fn lowering_accessors() {
+        let m = QModel::synthetic(8, 4, 6, 7);
+        // Conv layer requants unless it is last; final dense never does.
+        assert_eq!(m.layers[0].fused_requant(false), Some(0.05));
+        assert_eq!(m.layers[0].fused_requant(true), None);
+        assert_eq!(m.layers[2].fused_requant(true), None);
+        // MaxPool passes the bound through; conv bound covers |b| + Σ|w|·x.
+        assert_eq!(m.layers[1].acc_bound(127), 127);
+        let conv = &m.layers[0];
+        let max_abs_w: i64 = (0..conv.out_shape[2])
+            .map(|co| {
+                (0..9)
+                    .map(|t| conv.w_q[t * conv.out_shape[2] + co].abs())
+                    .sum::<i64>()
+            })
+            .max()
+            .unwrap();
+        assert!(conv.acc_bound(127) >= max_abs_w as i128 * 127);
+        assert!(conv.acc_bound(127) <= (max_abs_w as i128 + 2) * 127 + 2);
     }
 
     #[test]

@@ -149,10 +149,15 @@ mod backend {
 pub use backend::{Executable, Runtime};
 
 /// Everything the serving stack needs for one model: the quantized weight
-/// manifest (drives the cycle-accurate simulator) plus the compiled int8
-/// golden executable (drives verification).
+/// manifest, the planned-and-lowered pipeline (compiled value engine +
+/// analytic schedule, ready for worker shards to clone without
+/// re-planning), plus the compiled int8 golden executable (drives
+/// verification).
 pub struct ModelBundle {
     pub qmodel: QModel,
+    /// Pre-lowered pipeline: pass to `coordinator::Server::start_prelowered`
+    /// so every shard clones compiled state instead of re-planning.
+    pub pipeline: crate::sim::pipeline::PipelineSim,
     pub golden: Executable,
 }
 
@@ -161,11 +166,16 @@ impl ModelBundle {
     pub fn load(rt: &Runtime, name: &str) -> RtResult<ModelBundle> {
         let dir = artifacts_dir();
         let qmodel = QModel::load(&dir.join("weights").join(format!("{name}.json")))?;
+        let pipeline = crate::sim::pipeline::PipelineSim::new(qmodel.clone(), None)?;
         let golden = rt.load_hlo_text(
             &dir.join(format!("{name}_int8.hlo.txt")),
             &qmodel.input_shape.to_vec(),
         )?;
-        Ok(ModelBundle { qmodel, golden })
+        Ok(ModelBundle {
+            qmodel,
+            pipeline,
+            golden,
+        })
     }
 }
 

@@ -1,0 +1,831 @@
+//! Compile-once lowered execution engine — the *values* half of the
+//! values/cycles split (DESIGN.md §4).
+//!
+//! [`CompiledPipeline::lower`] turns a quantized model into a flat,
+//! branch-free program executed per frame by [`CompiledPipeline::execute`]:
+//!
+//! * **window index tables** — every conv/dwconv/pool output pixel gets a
+//!   precomputed list of `(weight base, input base)` taps with padding
+//!   already resolved (out-of-map taps simply don't exist), so the hot
+//!   loop never does per-pixel bounds arithmetic;
+//! * **contiguous weights** — conv weights stay in the exporter's
+//!   `[tap][c_in][c_out]` layout (the inner axpy walks one cache line);
+//!   dense weights are transposed to `[feature][unit]` so the per-feature
+//!   axpy is contiguous instead of strided per-MAC accessor calls;
+//! * **fused requant constants** — ReLU + requantization decisions
+//!   (including the final layer's accumulator-scale passthrough) are baked
+//!   into each layer at lowering time;
+//! * **preallocated ping-pong buffers** — `execute` allocates nothing;
+//!   activations bounce between two reusable buffers;
+//! * **narrow arithmetic when provably safe** — lowering computes exact
+//!   worst-case accumulator bounds (weights × int8 activation range); when
+//!   every bound fits `i32` the whole pipeline runs in 32-bit lanes
+//!   (twice the SIMD width of the interpreter's `i64` loop), otherwise it
+//!   falls back to a bit-identical 64-bit program.
+//!
+//! The contract, enforced by `tests/prop_compiled.rs`: `execute` is
+//! **bit-identical** to the interpreter (`PipelineSim::run_interpreted`)
+//! for int8-range frames. The engine computes values only; cycle figures
+//! come from `flow::schedule` — together they replace the fused
+//! interpreter on the serving hot path.
+
+use std::sync::Arc;
+
+use crate::quant::{requant, QKind, QModel, QMAX};
+
+/// Accumulator cell: the two arithmetic widths a lowered program can run
+/// in. Narrow (`i32`) programs are only built when the lowering-time bound
+/// analysis proves no accumulator can overflow for int8-range inputs.
+pub trait Cell:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + std::ops::AddAssign
+    + std::ops::Mul<Output = Self>
+    + std::fmt::Debug
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    /// Identity for max-pooling (the interpreter's `i64::MIN` seed; a
+    /// pool window is never empty in a narrow-eligible model).
+    const FLOOR: Self;
+    /// Narrow engines must validate frames to the int8 grid the bound
+    /// analysis assumed.
+    const CHECK_INT8: bool;
+    fn from_i64(v: i64) -> Self;
+    fn to_i64(self) -> i64;
+}
+
+impl Cell for i32 {
+    const ZERO: i32 = 0;
+    const FLOOR: i32 = i32::MIN;
+    const CHECK_INT8: bool = true;
+    #[inline(always)]
+    fn from_i64(v: i64) -> i32 {
+        v as i32
+    }
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+}
+
+impl Cell for i64 {
+    const ZERO: i64 = 0;
+    const FLOOR: i64 = i64::MIN;
+    const CHECK_INT8: bool = false;
+    #[inline(always)]
+    fn from_i64(v: i64) -> i64 {
+        v
+    }
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self
+    }
+}
+
+/// One precomputed window tap: base offsets into the weight and input
+/// buffers (all shapes here are far below `u32::MAX`).
+#[derive(Debug, Clone, Copy)]
+struct Tap {
+    w: u32,
+    x: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum COp {
+    Conv,
+    /// Depthwise conv; also average pooling (a depthwise conv with
+    /// constant weights, per Section VI).
+    Depthwise,
+    MaxPool,
+    Dense,
+}
+
+#[derive(Debug, Clone)]
+struct CLayer<T> {
+    name: String,
+    op: COp,
+    c_in: usize,
+    c_out: usize,
+    in_len: usize,
+    out_len: usize,
+    /// Per-output-pixel ranges into `taps` (window ops only).
+    tap_start: Vec<u32>,
+    taps: Vec<Tap>,
+    weights: Vec<T>,
+    bias: Vec<T>,
+    relu: bool,
+    /// `Some(m)` = requantize to int8 after ReLU; `None` = emit
+    /// accumulator-scale values (the final layer, or m == 0).
+    m: Option<f32>,
+}
+
+#[derive(Debug, Clone)]
+struct Program<T> {
+    layers: Vec<CLayer<T>>,
+    in_len: usize,
+    out_len: usize,
+    buf_len: usize,
+}
+
+/// A lowered program plus its reusable execution scratch. `Clone + Send`
+/// by construction: serving shards clone the compiled state instead of
+/// re-planning or re-lowering. The immutable program sits behind an
+/// `Arc`, so a clone shares weights/tap tables and copies only the
+/// per-executor scratch buffers.
+#[derive(Debug, Clone)]
+struct Engine<T> {
+    prog: Arc<Program<T>>,
+    ping: Vec<T>,
+    pong: Vec<T>,
+    acc: Vec<T>,
+    out: Vec<i64>,
+}
+
+#[derive(Debug, Clone)]
+enum Inner {
+    Narrow(Engine<i32>),
+    Wide(Engine<i64>),
+}
+
+/// The compile-once value engine. See the module docs for the lowering.
+#[derive(Debug, Clone)]
+pub struct CompiledPipeline {
+    inner: Inner,
+}
+
+impl CompiledPipeline {
+    /// Lower a quantized model. Fails on inconsistent layer shape chains
+    /// or weight layouts (conditions under which the interpreter would
+    /// panic or read out of bounds rather than answer).
+    pub fn lower(qm: &QModel) -> Result<CompiledPipeline, String> {
+        let inner = if narrow_safe(qm)? {
+            Inner::Narrow(Engine::build(qm)?)
+        } else {
+            Inner::Wide(Engine::build(qm)?)
+        };
+        Ok(CompiledPipeline { inner })
+    }
+
+    /// Run one frame (flat HWC int8-valued input) through the lowered
+    /// program; returns the final layer's outputs at accumulator scale,
+    /// bit-identical to the interpreter. The slice borrows internal
+    /// scratch — copy it out before the next `execute`.
+    pub fn execute(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        match &mut self.inner {
+            Inner::Narrow(e) => e.execute(frame),
+            Inner::Wide(e) => e.execute(frame),
+        }
+    }
+
+    /// Whether the bound analysis proved 32-bit lanes safe.
+    pub fn is_narrow(&self) -> bool {
+        matches!(self.inner, Inner::Narrow(_))
+    }
+
+    pub fn input_len(&self) -> usize {
+        match &self.inner {
+            Inner::Narrow(e) => e.prog.in_len,
+            Inner::Wide(e) => e.prog.in_len,
+        }
+    }
+
+    pub fn output_len(&self) -> usize {
+        match &self.inner {
+            Inner::Narrow(e) => e.prog.out_len,
+            Inner::Wide(e) => e.prog.out_len,
+        }
+    }
+}
+
+/// Exact worst-case bound analysis: propagate the maximum possible
+/// activation magnitude layer by layer (requantized layers reset it to
+/// the int8 grid) and check every accumulator fits `i32`. Saturating
+/// `i128` arithmetic, so pathological non-requantized chains simply land
+/// on the wide path. Also forces the wide path when a max-pool window can
+/// be empty (the interpreter's `i64::MIN` seed would then be observable).
+fn narrow_safe(qm: &QModel) -> Result<bool, String> {
+    const NARROW_LIMIT: i128 = i32::MAX as i128;
+    let mut in_bound: i128 = QMAX as i128;
+    let mut narrow = true;
+    let n = qm.layers.len();
+    for (idx, ql) in qm.layers.iter().enumerate() {
+        let last = idx + 1 == n;
+        if ql.kind != QKind::MaxPool && ql.out_shape[2] == 0 {
+            return Err(format!("compile: {}: zero output channels", ql.name));
+        }
+        if ql.kind == QKind::MaxPool {
+            // A pool window falling entirely off the map would surface the
+            // interpreter's i64::MIN seed: only the wide program matches.
+            let [h_in, w_in, _] = ql.in_shape;
+            let [h_out, w_out, _] = ql.out_shape;
+            if h_out > 0
+                && w_out > 0
+                && ((h_out - 1) * ql.s >= h_in || (w_out - 1) * ql.s >= w_in)
+            {
+                narrow = false;
+            }
+        }
+        let acc_bound = ql.acc_bound(in_bound);
+        if acc_bound > NARROW_LIMIT {
+            narrow = false;
+        }
+        in_bound = if ql.fused_requant(last).is_some() {
+            QMAX as i128
+        } else {
+            acc_bound
+        };
+    }
+    Ok(narrow)
+}
+
+impl<T: Cell> Engine<T> {
+    fn build(qm: &QModel) -> Result<Engine<T>, String> {
+        let prog = lower_program::<T>(qm)?;
+        Ok(Engine {
+            ping: vec![T::ZERO; prog.buf_len],
+            pong: vec![T::ZERO; prog.buf_len],
+            acc: Vec::new(),
+            out: Vec::new(),
+            prog: Arc::new(prog),
+        })
+    }
+
+    fn execute(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        let Engine {
+            prog,
+            ping,
+            pong,
+            acc,
+            out,
+        } = self;
+        if frame.len() != prog.in_len {
+            return Err(format!(
+                "compiled execute: frame len {} != {}",
+                frame.len(),
+                prog.in_len
+            ));
+        }
+        if T::CHECK_INT8 {
+            if let Some(bad) = frame.iter().find(|v| v.unsigned_abs() > QMAX as u64) {
+                return Err(format!(
+                    "compiled execute: frame value {bad} outside the int8 grid \
+                     the narrow lowering is proven for"
+                ));
+            }
+        }
+        for (slot, &v) in ping.iter_mut().zip(frame) {
+            *slot = T::from_i64(v);
+        }
+        let mut src_is_ping = true;
+        for layer in &prog.layers {
+            if src_is_ping {
+                run_layer(layer, &ping[..layer.in_len], &mut pong[..layer.out_len], acc);
+            } else {
+                run_layer(layer, &pong[..layer.in_len], &mut ping[..layer.out_len], acc);
+            }
+            src_is_ping = !src_is_ping;
+        }
+        let res: &[T] = if src_is_ping {
+            &ping[..prog.out_len]
+        } else {
+            &pong[..prog.out_len]
+        };
+        out.clear();
+        out.extend(res.iter().map(|v| v.to_i64()));
+        Ok(out.as_slice())
+    }
+}
+
+/// ReLU + requant epilogue, fused per layer at lowering time.
+#[inline]
+fn finalize<T: Cell>(layer: &CLayer<T>, acc: &[T], dst: &mut [T]) {
+    match layer.m {
+        Some(m) => {
+            for (d, &a) in dst.iter_mut().zip(acc) {
+                let v = if layer.relu && a < T::ZERO { T::ZERO } else { a };
+                *d = T::from_i64(requant(v.to_i64(), m));
+            }
+        }
+        None => {
+            for (d, &a) in dst.iter_mut().zip(acc) {
+                *d = if layer.relu && a < T::ZERO { T::ZERO } else { a };
+            }
+        }
+    }
+}
+
+fn run_layer<T: Cell>(layer: &CLayer<T>, src: &[T], dst: &mut [T], acc: &mut Vec<T>) {
+    let c_out = layer.c_out;
+    acc.resize(c_out, T::ZERO);
+    match layer.op {
+        COp::Conv => {
+            let c_in = layer.c_in;
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let a = &mut acc[..c_out];
+                a.copy_from_slice(&layer.bias);
+                for t in &layer.taps[win[0] as usize..win[1] as usize] {
+                    let xs = &src[t.x as usize..t.x as usize + c_in];
+                    for (ci, &x) in xs.iter().enumerate() {
+                        if x == T::ZERO {
+                            continue; // common after int8 ReLU
+                        }
+                        let wb = t.w as usize + ci * c_out;
+                        for (av, &wv) in a.iter_mut().zip(&layer.weights[wb..wb + c_out]) {
+                            *av += wv * x;
+                        }
+                    }
+                }
+                finalize(layer, a, &mut dst[o..o + c_out]);
+                o += c_out;
+            }
+        }
+        COp::Depthwise => {
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let a = &mut acc[..c_out];
+                a.copy_from_slice(&layer.bias);
+                for t in &layer.taps[win[0] as usize..win[1] as usize] {
+                    let xs = &src[t.x as usize..t.x as usize + c_out];
+                    let ws = &layer.weights[t.w as usize..t.w as usize + c_out];
+                    for ((av, &wv), &xv) in a.iter_mut().zip(ws).zip(xs) {
+                        *av += wv * xv;
+                    }
+                }
+                finalize(layer, a, &mut dst[o..o + c_out]);
+                o += c_out;
+            }
+        }
+        COp::MaxPool => {
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let a = &mut acc[..c_out];
+                a.fill(T::FLOOR);
+                for t in &layer.taps[win[0] as usize..win[1] as usize] {
+                    let xs = &src[t.x as usize..t.x as usize + c_out];
+                    for (av, &xv) in a.iter_mut().zip(xs) {
+                        if xv > *av {
+                            *av = xv;
+                        }
+                    }
+                }
+                // Pooling has no bias/ReLU/requant: emit the maxima as-is.
+                dst[o..o + c_out].copy_from_slice(a);
+                o += c_out;
+            }
+        }
+        COp::Dense => {
+            let a = &mut acc[..c_out];
+            a.copy_from_slice(&layer.bias);
+            for (f, &x) in src[..layer.in_len].iter().enumerate() {
+                if x == T::ZERO {
+                    continue;
+                }
+                let wrow = &layer.weights[f * c_out..(f + 1) * c_out];
+                for (av, &wv) in a.iter_mut().zip(wrow) {
+                    *av += wv * x;
+                }
+            }
+            finalize(layer, a, &mut dst[..c_out]);
+        }
+    }
+}
+
+fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
+    if qm.layers.is_empty() {
+        return Err("compile: model has no layers".into());
+    }
+    let [h0, w0, c0] = qm.input_shape;
+    let in_len = h0.max(1) * w0.max(1) * c0;
+    let mut cur_len = in_len;
+    let mut buf_len = in_len;
+    let mut layers = Vec::with_capacity(qm.layers.len());
+    let n = qm.layers.len();
+    for (idx, ql) in qm.layers.iter().enumerate() {
+        let last = idx + 1 == n;
+        let [h_in, w_in, c_in] = ql.in_shape;
+        let [h_out, w_out, c_out] = ql.out_shape;
+        let lin = h_in.max(1) * w_in.max(1) * c_in;
+        let lout = h_out.max(1) * w_out.max(1) * c_out;
+        if lin != cur_len {
+            return Err(format!(
+                "compile: {}: input len {lin} != upstream {cur_len}",
+                ql.name
+            ));
+        }
+        let m = ql.fused_requant(last);
+        let layer = match ql.kind {
+            QKind::Dense => {
+                let feats = lin;
+                if ql.w_shape.len() != 2 || ql.w_shape[1] != feats {
+                    return Err(format!(
+                        "compile: {}: dense w_shape {:?} inconsistent with {feats} features",
+                        ql.name, ql.w_shape
+                    ));
+                }
+                if ql.w_q.len() != c_out * feats || ql.b_q.len() != c_out {
+                    return Err(format!("compile: {}: dense weight/bias length", ql.name));
+                }
+                // Transpose (unit, feat) -> (feat, unit) for contiguous
+                // per-feature axpy rows.
+                let mut wt = vec![T::ZERO; ql.w_q.len()];
+                for (i, &w) in ql.w_q.iter().enumerate() {
+                    let (u, f) = (i / feats, i % feats);
+                    wt[f * c_out + u] = T::from_i64(w);
+                }
+                CLayer {
+                    name: ql.name.clone(),
+                    op: COp::Dense,
+                    c_in: feats,
+                    c_out,
+                    in_len: lin,
+                    out_len: lout,
+                    tap_start: Vec::new(),
+                    taps: Vec::new(),
+                    weights: wt,
+                    bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
+                    relu: ql.relu,
+                    m,
+                }
+            }
+            QKind::Conv => {
+                let (k, s, p) = (ql.k, ql.s, ql.p);
+                if k == 0 || s == 0 {
+                    return Err(format!("compile: {}: zero kernel/stride", ql.name));
+                }
+                if ql.w_q.len() != k * k * c_in * c_out || ql.b_q.len() != c_out {
+                    return Err(format!("compile: {}: conv weight/bias length", ql.name));
+                }
+                let (tap_start, taps) =
+                    padded_taps(h_in, w_in, h_out, w_out, k, s, p, c_in, c_in * c_out);
+                CLayer {
+                    name: ql.name.clone(),
+                    op: COp::Conv,
+                    c_in,
+                    c_out,
+                    in_len: lin,
+                    out_len: lout,
+                    tap_start,
+                    taps,
+                    weights: ql.w_q.iter().map(|&w| T::from_i64(w)).collect(),
+                    bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
+                    relu: ql.relu,
+                    m,
+                }
+            }
+            QKind::DwConv | QKind::AvgPool => {
+                let (k, s, p) = (ql.k, ql.s, ql.p);
+                if k == 0 || s == 0 {
+                    return Err(format!("compile: {}: zero kernel/stride", ql.name));
+                }
+                if c_in != c_out {
+                    return Err(format!("compile: {}: depthwise c_in != c_out", ql.name));
+                }
+                if ql.w_q.len() != k * k * c_out || ql.b_q.len() != c_out {
+                    return Err(format!(
+                        "compile: {}: depthwise weight/bias length",
+                        ql.name
+                    ));
+                }
+                let (tap_start, taps) =
+                    padded_taps(h_in, w_in, h_out, w_out, k, s, p, c_in, c_out);
+                CLayer {
+                    name: ql.name.clone(),
+                    op: COp::Depthwise,
+                    c_in,
+                    c_out,
+                    in_len: lin,
+                    out_len: lout,
+                    tap_start,
+                    taps,
+                    weights: ql.w_q.iter().map(|&w| T::from_i64(w)).collect(),
+                    bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
+                    relu: ql.relu,
+                    m,
+                }
+            }
+            QKind::MaxPool => {
+                let (k, s) = (ql.k, ql.s);
+                if k == 0 || s == 0 {
+                    return Err(format!("compile: {}: zero kernel/stride", ql.name));
+                }
+                if c_in != c_out {
+                    return Err(format!("compile: {}: pool c_in != c_out", ql.name));
+                }
+                // The interpreter's pool windows ignore padding and clip
+                // at the map edge; mirror that exactly.
+                let mut tap_start = Vec::with_capacity(h_out * w_out + 1);
+                tap_start.push(0u32);
+                let mut taps = Vec::new();
+                for orow in 0..h_out {
+                    for ocol in 0..w_out {
+                        for u in 0..k {
+                            let r = orow * s + u;
+                            if r >= h_in {
+                                continue;
+                            }
+                            for v in 0..k {
+                                let c = ocol * s + v;
+                                if c >= w_in {
+                                    continue;
+                                }
+                                taps.push(Tap {
+                                    w: 0,
+                                    x: ((r * w_in + c) * c_in) as u32,
+                                });
+                            }
+                        }
+                        tap_start.push(taps.len() as u32);
+                    }
+                }
+                CLayer {
+                    name: ql.name.clone(),
+                    op: COp::MaxPool,
+                    c_in,
+                    c_out,
+                    in_len: lin,
+                    out_len: lout,
+                    tap_start,
+                    taps,
+                    weights: Vec::new(),
+                    bias: Vec::new(),
+                    relu: false,
+                    m: None,
+                }
+            }
+        };
+        buf_len = buf_len.max(lout);
+        cur_len = lout;
+        layers.push(layer);
+    }
+    Ok(Program {
+        layers,
+        in_len,
+        out_len: cur_len,
+        buf_len,
+    })
+}
+
+/// Window tap table for padded (conv-style) kinds: per output pixel, the
+/// in-map taps in the interpreter's (u, v) order; padding taps are simply
+/// absent. `w_stride` is the weight-buffer distance between taps.
+#[allow(clippy::too_many_arguments)]
+fn padded_taps(
+    h_in: usize,
+    w_in: usize,
+    h_out: usize,
+    w_out: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    c_in: usize,
+    w_stride: usize,
+) -> (Vec<u32>, Vec<Tap>) {
+    let mut tap_start = Vec::with_capacity(h_out * w_out + 1);
+    tap_start.push(0u32);
+    let mut taps = Vec::new();
+    for orow in 0..h_out {
+        for ocol in 0..w_out {
+            for u in 0..k {
+                let r = (orow * s + u) as isize - p as isize;
+                if r < 0 || r >= h_in as isize {
+                    continue;
+                }
+                for v in 0..k {
+                    let c = (ocol * s + v) as isize - p as isize;
+                    if c < 0 || c >= w_in as isize {
+                        continue;
+                    }
+                    taps.push(Tap {
+                        w: ((u * k + v) * w_stride) as u32,
+                        x: ((r as usize * w_in + c as usize) * c_in) as u32,
+                    });
+                }
+            }
+            tap_start.push(taps.len() as u32);
+        }
+    }
+    (tap_start, taps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QLayer;
+    use crate::sim::pipeline::PipelineSim;
+    use crate::util::Rng;
+
+    fn rand_frame(rng: &mut Rng, n: usize) -> Vec<i64> {
+        (0..n).map(|_| rng.int8() as i64).collect()
+    }
+
+    /// conv -> dwconv -> avgpool -> maxpool -> dense, exercising every
+    /// lowered kind in one chain (8x8x1 input).
+    fn mixed_qmodel(seed: u64) -> QModel {
+        let mut rng = Rng::new(seed);
+        let mut wq = |n: usize| -> Vec<i64> {
+            (0..n).map(|_| rng.int8() as i64 / 16).collect()
+        };
+        let conv = QLayer {
+            name: "C1".into(),
+            kind: QKind::Conv,
+            k: 3,
+            s: 1,
+            p: 1,
+            relu: true,
+            w_q: wq(3 * 3 * 4),
+            w_shape: vec![3, 3, 1, 4],
+            b_q: vec![1, -2, 3, 0],
+            m: 0.04,
+            in_shape: [8, 8, 1],
+            out_shape: [8, 8, 4],
+        };
+        let dw = QLayer {
+            name: "DW".into(),
+            kind: QKind::DwConv,
+            k: 3,
+            s: 1,
+            p: 1,
+            relu: true,
+            w_q: wq(3 * 3 * 4),
+            w_shape: vec![3, 3, 4],
+            b_q: vec![0, 1, -1, 2],
+            m: 0.03,
+            in_shape: [8, 8, 4],
+            out_shape: [8, 8, 4],
+        };
+        let avg = QLayer {
+            name: "AP".into(),
+            kind: QKind::AvgPool,
+            k: 2,
+            s: 2,
+            p: 0,
+            relu: false,
+            w_q: vec![1; 2 * 2 * 4],
+            w_shape: vec![2, 2, 4],
+            b_q: vec![0, 0, 0, 0],
+            m: 0.2,
+            in_shape: [8, 8, 4],
+            out_shape: [4, 4, 4],
+        };
+        let pool = QLayer {
+            name: "P1".into(),
+            kind: QKind::MaxPool,
+            k: 2,
+            s: 2,
+            p: 0,
+            relu: false,
+            w_q: vec![],
+            w_shape: vec![],
+            b_q: vec![],
+            m: 0.0,
+            in_shape: [4, 4, 4],
+            out_shape: [2, 2, 4],
+        };
+        let dense = QLayer {
+            name: "F1".into(),
+            kind: QKind::Dense,
+            k: 0,
+            s: 1,
+            p: 0,
+            relu: false,
+            w_q: wq(5 * 16),
+            w_shape: vec![5, 16],
+            b_q: vec![1, 2, 3, 4, 5],
+            m: 0.0,
+            in_shape: [1, 1, 16],
+            out_shape: [1, 1, 5],
+        };
+        QModel {
+            name: "mixed".into(),
+            input_shape: [8, 8, 1],
+            input_scale: 1.0,
+            layers: vec![conv, dw, avg, pool, dense],
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        }
+    }
+
+    /// Chained non-requantized (m = 0) conv layers inflate the activation
+    /// bound until the dense head's accumulator exceeds i32, forcing the
+    /// 64-bit program.
+    fn wide_qmodel() -> QModel {
+        let big = |n: usize| -> Vec<i64> { vec![100; n] };
+        let mk_conv = |name: &str, m: f32| QLayer {
+            name: name.into(),
+            kind: QKind::Conv,
+            k: 3,
+            s: 1,
+            p: 1,
+            relu: false,
+            w_q: big(3 * 3 * 2 * 2),
+            w_shape: vec![3, 3, 2, 2],
+            b_q: vec![0, 0],
+            m,
+            in_shape: [4, 4, 2],
+            out_shape: [4, 4, 2],
+        };
+        QModel {
+            name: "wide".into(),
+            input_shape: [4, 4, 2],
+            input_scale: 1.0,
+            layers: vec![
+                mk_conv("W1", 0.0),
+                mk_conv("W2", 0.0),
+                QLayer {
+                    name: "F".into(),
+                    kind: QKind::Dense,
+                    k: 0,
+                    s: 1,
+                    p: 0,
+                    relu: false,
+                    w_q: vec![1; 2 * 32],
+                    w_shape: vec![2, 32],
+                    b_q: vec![0, 0],
+                    m: 0.0,
+                    in_shape: [1, 1, 32],
+                    out_shape: [1, 1, 2],
+                },
+            ],
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        }
+    }
+
+    #[test]
+    fn mixed_model_matches_interpreter() {
+        let qm = mixed_qmodel(7);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert!(engine.is_narrow(), "small int8 model must lower narrow");
+        let mut rng = Rng::new(8);
+        for _ in 0..12 {
+            let x = rand_frame(&mut rng, 64);
+            let want = sim.run_interpreted(&[x.clone()]).unwrap().outputs[0].clone();
+            let got = engine.execute(&x).unwrap().to_vec();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn synthetic_fixture_matches_interpreter() {
+        let qm = QModel::synthetic(8, 4, 6, 0xC0);
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert_eq!(engine.input_len(), 64);
+        assert_eq!(engine.output_len(), 6);
+        let mut rng = Rng::new(0xC1);
+        for _ in 0..8 {
+            let x = rand_frame(&mut rng, 64);
+            let want = sim.run_interpreted(&[x.clone()]).unwrap().outputs[0].clone();
+            assert_eq!(engine.execute(&x).unwrap(), &want[..]);
+        }
+    }
+
+    #[test]
+    fn wide_path_selected_and_bit_identical() {
+        let qm = wide_qmodel();
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert!(!engine.is_narrow(), "m=0 chain must force the i64 path");
+        let sim = PipelineSim::new(qm, None).unwrap();
+        let mut rng = Rng::new(3);
+        let x = rand_frame(&mut rng, 32);
+        let want = sim.run_interpreted(&[x.clone()]).unwrap().outputs[0].clone();
+        assert_eq!(engine.execute(&x).unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn rejects_bad_frames() {
+        let qm = QModel::synthetic(8, 4, 6, 1);
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert!(engine.execute(&[0; 7]).is_err(), "wrong length");
+        let mut big = vec![0i64; 64];
+        big[5] = 4096; // outside the int8 grid a narrow engine is proven for
+        assert!(engine.is_narrow());
+        assert!(engine.execute(&big).is_err());
+    }
+
+    #[test]
+    fn clones_are_independent() {
+        let qm = QModel::synthetic(8, 4, 6, 2);
+        let mut a = CompiledPipeline::lower(&qm).unwrap();
+        let mut b = a.clone();
+        let mut rng = Rng::new(4);
+        let x = rand_frame(&mut rng, 64);
+        let y = rand_frame(&mut rng, 64);
+        let ax = a.execute(&x).unwrap().to_vec();
+        let _ = b.execute(&y).unwrap();
+        assert_eq!(a.execute(&x).unwrap(), &ax[..], "scratch must not leak");
+    }
+
+    #[test]
+    fn rejects_inconsistent_shape_chain() {
+        let mut qm = QModel::synthetic(8, 4, 6, 3);
+        qm.layers[1].in_shape = [9, 9, 4];
+        assert!(CompiledPipeline::lower(&qm).is_err());
+    }
+}

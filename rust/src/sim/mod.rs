@@ -11,8 +11,11 @@
 //! * [`fcu`] — fully connected unit + input aggregator,
 //! * [`trace`] — the Tables I-IV emitters with oracle verification,
 //! * [`pipeline`] — whole-CNN continuous-flow pipeline with int8
-//!   quantised arithmetic and per-unit utilisation counters.
+//!   quantised arithmetic and per-unit utilisation counters,
+//! * [`compiled`] — the compile-once lowered value engine serving
+//!   executes on (bit-identical to the pipeline interpreter; DESIGN.md §4).
 
+pub mod compiled;
 pub mod fcu;
 pub mod fifo;
 pub mod kpu;
@@ -20,6 +23,7 @@ pub mod pipeline;
 pub mod ppu;
 pub mod trace;
 
+pub use compiled::CompiledPipeline;
 pub use fcu::{Aggregator, Fcu};
 pub use kpu::Kpu;
 pub use ppu::Ppu;

@@ -16,7 +16,16 @@
 //!
 //! The same simulator runs the fully-parallel reference plan (one unit per
 //! kernel/neuron) for the utilisation comparison of Table VIII.
+//!
+//! Since the compile-once refactor the two concerns are also *executed*
+//! separately: [`PipelineSim::run`] computes values on the lowered
+//! [`super::compiled::CompiledPipeline`] and cycles on the analytic
+//! [`crate::flow::schedule::ScheduleModel`], while
+//! [`PipelineSim::run_interpreted`] keeps the original fused loop as the
+//! oracle both tiers are property-tested against (`tests/prop_compiled.rs`).
 
+use super::compiled::CompiledPipeline;
+use crate::flow::schedule::{steady_cycles_per_frame, ScheduleModel, SchedulePrediction};
 use crate::flow::{analyze, plan_all, PlannedLayer, Ratio, UnitPlan};
 use crate::model::{Layer, Model};
 use crate::quant::{requant, QKind, QLayer, QModel};
@@ -47,7 +56,8 @@ pub struct PipelineResult {
     pub total_cycles: u64,
     /// Latency of frame 0: input cycle 0 -> last output cycle.
     pub first_frame_latency: u64,
-    /// Cycles per frame in steady state (throughput).
+    /// Cycles per frame in steady state (throughput), measured after a
+    /// one-frame warm-up (see `flow::schedule::steady_cycles_per_frame`).
     pub cycles_per_frame: f64,
 }
 
@@ -68,16 +78,32 @@ pub fn qmodel_to_model(qm: &QModel) -> Model {
     m
 }
 
-/// The pipeline simulator: a quantized model plus a unit plan.
+/// The pipeline simulator: a quantized model plus a unit plan, lowered
+/// once at construction into the two-tier execution engine (DESIGN.md §4):
+///
+/// * [`CompiledPipeline`] — the flat value engine [`PipelineSim::run`]
+///   executes frames on (bit-identical to the interpreter);
+/// * [`ScheduleModel`] / [`SchedulePrediction`] — the value-free cycle
+///   replay and its closed form, replacing the fused loop's bookkeeping;
+/// * [`PipelineSim::run_interpreted`] — the original fused
+///   pixel-by-pixel interpreter, retained as the oracle the compiled
+///   tiers are property-tested against.
 ///
 /// `Clone + Send` by construction (all state is owned): the sharded
-/// coordinator plans once and hands each worker shard its own clone, so
-/// shards simulate concurrently without sharing mutable state.
+/// coordinator plans and lowers once, then hands each worker shard its
+/// own clone, so shards execute concurrently without sharing mutable
+/// state — and without re-planning.
 #[derive(Clone)]
 pub struct PipelineSim {
     pub qmodel: QModel,
     pub plans: Vec<PlannedLayer>,
     pub fully_parallel: bool,
+    /// Lowered value engine (clone it to execute; see [`CompiledPipeline`]).
+    pub compiled: CompiledPipeline,
+    /// Exact value-free replay of the interpreter's cycle schedule.
+    pub schedule: ScheduleModel,
+    /// Closed-form schedule figures for the serving hot path.
+    pub predicted: SchedulePrediction,
 }
 
 impl PipelineSim {
@@ -85,27 +111,87 @@ impl PipelineSim {
     pub fn new(qmodel: QModel, r0: Option<Ratio>) -> Result<Self, String> {
         let model = qmodel_to_model(&qmodel);
         let analysis = analyze(&model, r0).map_err(|e| e.to_string())?;
-        Ok(Self {
-            qmodel,
-            plans: plan_all(&analysis),
-            fully_parallel: false,
-        })
+        let plans = plan_all(&analysis);
+        Self::assemble(qmodel, plans, false)
     }
 
     /// Fully-parallel reference plan (Table VIII "Ref.").
     pub fn new_reference(qmodel: QModel) -> Result<Self, String> {
         let model = qmodel_to_model(&qmodel);
         let analysis = analyze(&model, None).map_err(|e| e.to_string())?;
+        let plans = crate::complexity::parallel::fully_parallel_plan(&analysis);
+        Self::assemble(qmodel, plans, true)
+    }
+
+    /// Lower the planned model into the compiled value engine and the
+    /// analytic schedule — the compile-once step every constructor funnels
+    /// through.
+    fn assemble(
+        qmodel: QModel,
+        plans: Vec<PlannedLayer>,
+        fully_parallel: bool,
+    ) -> Result<Self, String> {
+        let compiled = CompiledPipeline::lower(&qmodel)?;
+        let [h0, w0, c0] = qmodel.input_shape;
+        let schedule = ScheduleModel::new(&plans, (h0.max(1), w0.max(1)), c0)?;
+        let predicted = SchedulePrediction::new(&schedule);
         Ok(Self {
             qmodel,
-            plans: crate::complexity::parallel::fully_parallel_plan(&analysis),
-            fully_parallel: true,
+            plans,
+            fully_parallel,
+            compiled,
+            schedule,
+            predicted,
         })
     }
 
     /// Simulate `frames` (each a flat x_q of the model's input shape, HWC
-    /// row-major, int8-valued).
+    /// row-major, int8-valued): values via the compiled engine, cycles via
+    /// the analytic schedule replay. Bit- and cycle-identical to
+    /// [`PipelineSim::run_interpreted`] (property-tested), but without
+    /// re-deriving window indices, weight lookups, or schedule state per
+    /// pixel.
     pub fn run(&self, frames: &[Vec<i64>]) -> Result<PipelineResult, String> {
+        let [h0, w0, c0] = self.qmodel.input_shape;
+        let in_len = h0.max(1) * w0.max(1) * c0;
+        for (i, f) in frames.iter().enumerate() {
+            if f.len() != in_len {
+                return Err(format!("frame {i}: len {} != {in_len}", f.len()));
+            }
+        }
+        let mut engine = self.compiled.clone();
+        let mut outputs = Vec::with_capacity(frames.len());
+        for f in frames {
+            outputs.push(engine.execute(f)?.to_vec());
+        }
+        let sched = self.schedule.run(frames.len());
+        let stats = sched
+            .stats
+            .into_iter()
+            .map(|s| LayerStats {
+                name: s.name,
+                units: s.units,
+                unit_kind: s.unit_kind,
+                useful_ops: s.useful_ops,
+                first_cycle: s.first_cycle,
+                last_cycle: s.last_cycle,
+                utilization: s.utilization,
+            })
+            .collect();
+        Ok(PipelineResult {
+            outputs,
+            stats,
+            total_cycles: sched.total_cycles,
+            first_frame_latency: sched.first_frame_latency,
+            cycles_per_frame: sched.cycles_per_frame,
+        })
+    }
+
+    /// The original fused interpreter: values and cycles re-derived
+    /// pixel-by-pixel in one loop. Retained as the oracle for the
+    /// compiled engine and the schedule model (and for engine comparison
+    /// in serving); `run` is the fast path.
+    pub fn run_interpreted(&self, frames: &[Vec<i64>]) -> Result<PipelineResult, String> {
         let [h0, w0, c0] = self.qmodel.input_shape;
         let in_len = h0.max(1) * w0.max(1) * c0;
         for (i, f) in frames.iter().enumerate() {
@@ -186,11 +272,7 @@ impl PipelineSim {
 
         let total_cycles = *frame_out_last.last().unwrap_or(&0);
         let first_frame_latency = frame_out_last[0];
-        let cycles_per_frame = if frames.len() > 1 {
-            (total_cycles - first_frame_latency) as f64 / (frames.len() - 1) as f64
-        } else {
-            total_cycles as f64
-        };
+        let cycles_per_frame = steady_cycles_per_frame(&frame_out_last);
         Ok(PipelineResult {
             outputs: maps,
             stats,
@@ -622,6 +704,60 @@ mod tests {
         let qm = tiny_qmodel(11);
         let sim = PipelineSim::new(qm, None).unwrap();
         assert!(sim.run(&[vec![0; 7]]).is_err());
+        assert!(sim.run_interpreted(&[vec![0; 7]]).is_err());
+    }
+
+    #[test]
+    fn compiled_run_is_identical_to_interpreter() {
+        // THE two-tier contract: run (compiled values + analytic schedule)
+        // must reproduce the fused interpreter outcome field for field.
+        for seed in [21u64, 22, 23] {
+            let qm = QModel::synthetic(8, 4, 6, seed);
+            let sim = PipelineSim::new(qm, None).unwrap();
+            let mut rng = Rng::new(seed ^ 0xF00);
+            let frames: Vec<Vec<i64>> =
+                (0..7).map(|_| rand_frame(&mut rng, 64)).collect();
+            let fast = sim.run(&frames).unwrap();
+            let oracle = sim.run_interpreted(&frames).unwrap();
+            assert_eq!(fast.outputs, oracle.outputs);
+            assert_eq!(fast.total_cycles, oracle.total_cycles);
+            assert_eq!(fast.first_frame_latency, oracle.first_frame_latency);
+            assert_eq!(fast.cycles_per_frame, oracle.cycles_per_frame);
+            assert_eq!(fast.stats.len(), oracle.stats.len());
+            for (a, b) in fast.stats.iter().zip(oracle.stats.iter()) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.units, b.units);
+                assert_eq!(a.unit_kind, b.unit_kind);
+                assert_eq!(a.useful_ops, b.useful_ops);
+                assert_eq!(a.first_cycle, b.first_cycle);
+                assert_eq!(a.last_cycle, b.last_cycle);
+                assert_eq!(a.utilization, b.utilization, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cycles_per_frame_excludes_warmup_frame() {
+        // Satellite pin: the steady-state figure must equal the shared
+        // warm-up-excluding formula applied to the per-frame completion
+        // cycles (prefix runs expose them: frames are causal, so an
+        // n-frame run's total_cycles is frame n-1's completion cycle).
+        use crate::flow::schedule::steady_cycles_per_frame;
+        let qm = tiny_qmodel(31);
+        let sim = PipelineSim::new(qm, None).unwrap();
+        let mut rng = Rng::new(32);
+        let frames: Vec<Vec<i64>> = (0..6).map(|_| rand_frame(&mut rng, 16)).collect();
+        let finishes: Vec<u64> = (1..=frames.len())
+            .map(|n| sim.run_interpreted(&frames[..n]).unwrap().total_cycles)
+            .collect();
+        let res = sim.run_interpreted(&frames).unwrap();
+        assert_eq!(res.cycles_per_frame, steady_cycles_per_frame(&finishes));
+        // And the analytic prediction agrees on the same figures.
+        assert_eq!(sim.predicted.total_cycles(frames.len()), res.total_cycles);
+        assert_eq!(
+            sim.predicted.cycles_per_frame(frames.len()),
+            res.cycles_per_frame
+        );
     }
 
     #[test]

@@ -97,6 +97,108 @@ impl Bencher {
     }
 }
 
+/// One interpreter-vs-compiled throughput comparison row, shared by
+/// `benches/bench_pipeline.rs` and the `cnn-flow bench` CLI and persisted
+/// to `BENCH_pipeline.json` so the perf trajectory is tracked across PRs.
+#[derive(Debug, Clone)]
+pub struct EngineComparison {
+    pub model: String,
+    /// Frames per measured iteration.
+    pub frames: usize,
+    pub interp_median_ns: f64,
+    pub compiled_median_ns: f64,
+    /// Whether the lowering proved 32-bit lanes safe.
+    pub narrow: bool,
+}
+
+impl EngineComparison {
+    pub fn interp_fps(&self) -> f64 {
+        self.frames as f64 / (self.interp_median_ns * 1e-9)
+    }
+
+    pub fn compiled_fps(&self) -> f64 {
+        self.frames as f64 / (self.compiled_median_ns * 1e-9)
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.interp_median_ns / self.compiled_median_ns
+    }
+}
+
+/// Measure one lowered model both ways — the fused interpreter vs the
+/// compiled engine + closed-form schedule (iteration = one pass over
+/// `frames`) — after asserting the two paths agree bit- and
+/// cycle-exactly. Shared by `benches/bench_pipeline.rs` and the
+/// `cnn-flow bench` CLI so BENCH_pipeline.json numbers stay comparable.
+pub fn compare_engines(
+    b: &Bencher,
+    sim: &crate::sim::pipeline::PipelineSim,
+    frames: &[Vec<i64>],
+) -> EngineComparison {
+    let name = sim.qmodel.name.clone();
+    let fast = sim.run(frames).expect("compiled run failed");
+    let oracle = sim.run_interpreted(frames).expect("interpreter run failed");
+    assert_eq!(fast.outputs, oracle.outputs, "{name}: value divergence");
+    assert_eq!(
+        fast.total_cycles, oracle.total_cycles,
+        "{name}: cycle divergence"
+    );
+    let interp_median_ns = b.bench_throughput(
+        &format!("{name}_interpreter/{}_frames", frames.len()),
+        frames.len() as u64,
+        || {
+            black_box(sim.run_interpreted(frames).unwrap());
+        },
+    );
+    let mut engine = sim.compiled.clone();
+    let compiled_median_ns = b.bench_throughput(
+        &format!("{name}_compiled/{}_frames", frames.len()),
+        frames.len() as u64,
+        || {
+            for f in frames {
+                black_box(engine.execute(f).unwrap());
+            }
+            black_box(sim.predicted.total_cycles(frames.len()));
+        },
+    );
+    EngineComparison {
+        model: name,
+        frames: frames.len(),
+        interp_median_ns,
+        compiled_median_ns,
+        narrow: sim.compiled.is_narrow(),
+    }
+}
+
+/// Write the machine-readable benchmark report. Layout:
+/// `{"bench":"pipeline","models":[{model, frames, interp_fps,
+/// compiled_fps, speedup, narrow}, ...]}`.
+pub fn write_pipeline_bench_json(
+    path: &std::path::Path,
+    comparisons: &[EngineComparison],
+) -> Result<(), String> {
+    use crate::util::json::Json;
+    let models: Vec<Json> = comparisons
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("model", Json::from(c.model.as_str())),
+                ("frames", Json::from(c.frames)),
+                ("interp_fps", Json::from(c.interp_fps())),
+                ("compiled_fps", Json::from(c.compiled_fps())),
+                ("speedup", Json::from(c.speedup())),
+                ("narrow", Json::Bool(c.narrow)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("pipeline")),
+        ("models", Json::Arr(models)),
+    ]);
+    std::fs::write(path, doc.render_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0}ns")
@@ -129,6 +231,28 @@ mod tests {
         });
         assert!(med >= 0.0);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn comparison_report_roundtrips() {
+        let c = EngineComparison {
+            model: "synthetic".into(),
+            frames: 16,
+            interp_median_ns: 8.0e6,
+            compiled_median_ns: 1.0e6,
+            narrow: true,
+        };
+        assert!((c.speedup() - 8.0).abs() < 1e-9);
+        assert!((c.compiled_fps() - 16.0e6).abs() < 1.0);
+        let path = std::env::temp_dir().join("cnn_flow_bench_pipeline_test.json");
+        write_pipeline_bench_json(&path, &[c]).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("pipeline"));
+        let row = &parsed.get("models").as_arr().unwrap()[0];
+        assert_eq!(row.get("model").as_str(), Some("synthetic"));
+        assert!((row.get("speedup").as_f64().unwrap() - 8.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Property tests for the compile-once execution engine (DESIGN.md §4):
+//! across seeded random zoo-shaped models (varying kernel/stride/padding
+//! and conv/dwconv/pool/dense mixes) and random int8 frames,
+//!
+//! * `CompiledPipeline::execute` must be **bit-identical** to the fused
+//!   interpreter (`PipelineSim::run_interpreted`), and
+//! * the analytic schedule (`ScheduleModel` replay and the closed-form
+//!   `SchedulePrediction`) must reproduce the interpreter's
+//!   `total_cycles` / `first_frame_latency` / `cycles_per_frame` and
+//!   per-layer statistics **exactly**.
+
+use cnn_flow::flow::Ratio;
+use cnn_flow::quant::{QKind, QLayer, QModel};
+use cnn_flow::sim::compiled::CompiledPipeline;
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::prop::prop_check;
+use cnn_flow::util::Rng;
+use cnn_flow::{prop_assert, prop_assert_eq};
+
+/// Build a random small quantized model mixing every simulated layer
+/// kind, with valid shape/rate chains by construction.
+fn random_qmodel(rng: &mut Rng) -> QModel {
+    let f0 = [6usize, 8, 9][rng.range(0, 2)];
+    let c0 = rng.range(1, 2);
+    let (mut f, mut c) = (f0, c0);
+    let mut layers: Vec<QLayer> = Vec::new();
+    let n_window = rng.range(1, 3);
+    for i in 0..n_window {
+        if f < 4 {
+            break;
+        }
+        match rng.range(0, 3) {
+            0 => {
+                // Standard conv with varying k/s/p.
+                let k = [1usize, 3][rng.range(0, 1)];
+                let s = if f >= 6 { rng.range(1, 2) } else { 1 };
+                let p = if k == 3 && rng.range(0, 1) == 1 { 1 } else { 0 };
+                let cout = rng.range(1, 4);
+                let f_out = (f + 2 * p - k) / s + 1;
+                layers.push(QLayer {
+                    name: format!("C{i}"),
+                    kind: QKind::Conv,
+                    k,
+                    s,
+                    p,
+                    relu: rng.range(0, 1) == 1,
+                    w_q: (0..k * k * c * cout)
+                        .map(|_| rng.range(0, 16) as i64 - 8)
+                        .collect(),
+                    w_shape: vec![k, k, c, cout],
+                    b_q: (0..cout).map(|_| rng.range(0, 40) as i64 - 20).collect(),
+                    m: 0.002 + rng.f64() as f32 * 0.01,
+                    in_shape: [f, f, c],
+                    out_shape: [f_out, f_out, cout],
+                });
+                f = f_out;
+                c = cout;
+            }
+            1 => {
+                // Depthwise conv.
+                let k = 3;
+                let s = if f >= 6 { rng.range(1, 2) } else { 1 };
+                let p = rng.range(0, 1);
+                let f_out = (f + 2 * p - k) / s + 1;
+                layers.push(QLayer {
+                    name: format!("D{i}"),
+                    kind: QKind::DwConv,
+                    k,
+                    s,
+                    p,
+                    relu: rng.range(0, 1) == 1,
+                    w_q: (0..k * k * c).map(|_| rng.range(0, 16) as i64 - 8).collect(),
+                    w_shape: vec![k, k, c],
+                    b_q: (0..c).map(|_| rng.range(0, 20) as i64 - 10).collect(),
+                    m: 0.01 + rng.f64() as f32 * 0.02,
+                    in_shape: [f, f, c],
+                    out_shape: [f_out, f_out, c],
+                });
+                f = f_out;
+            }
+            2 => {
+                // Max pooling.
+                let f_out = (f - 2) / 2 + 1;
+                layers.push(QLayer {
+                    name: format!("P{i}"),
+                    kind: QKind::MaxPool,
+                    k: 2,
+                    s: 2,
+                    p: 0,
+                    relu: false,
+                    w_q: vec![],
+                    w_shape: vec![],
+                    b_q: vec![],
+                    m: 0.0,
+                    in_shape: [f, f, c],
+                    out_shape: [f_out, f_out, c],
+                });
+                f = f_out;
+            }
+            _ => {
+                // Average pooling (depthwise conv with constant weights).
+                let f_out = (f - 2) / 2 + 1;
+                layers.push(QLayer {
+                    name: format!("A{i}"),
+                    kind: QKind::AvgPool,
+                    k: 2,
+                    s: 2,
+                    p: 0,
+                    relu: false,
+                    w_q: vec![1; 2 * 2 * c],
+                    w_shape: vec![2, 2, c],
+                    b_q: vec![0; c],
+                    m: 0.05 + rng.f64() as f32 * 0.1,
+                    in_shape: [f, f, c],
+                    out_shape: [f_out, f_out, c],
+                });
+                f = f_out;
+            }
+        }
+    }
+    let feats = f * f * c;
+    let units = rng.range(2, 6);
+    layers.push(QLayer {
+        name: "F".into(),
+        kind: QKind::Dense,
+        k: 0,
+        s: 1,
+        p: 0,
+        relu: false,
+        w_q: (0..units * feats)
+            .map(|_| rng.range(0, 10) as i64 - 5)
+            .collect(),
+        w_shape: vec![units, feats],
+        b_q: (0..units).map(|_| rng.range(0, 20) as i64 - 10).collect(),
+        m: 0.0,
+        in_shape: [1, 1, feats],
+        out_shape: [1, 1, units],
+    });
+    QModel {
+        name: "rand-compiled".into(),
+        input_shape: [f0, f0, c0],
+        input_scale: 1.0,
+        layers,
+        test_vectors: vec![],
+        qat_accuracy: 0.0,
+    }
+}
+
+fn rand_frames(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<i64>> {
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.int8() as i64).collect())
+        .collect()
+}
+
+#[test]
+fn compiled_values_match_interpreter() {
+    prop_check(50, 0xC0F1, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        let mut engine = CompiledPipeline::lower(&qm)?;
+        for _ in 0..3 {
+            let x: Vec<i64> = (0..len).map(|_| rng.int8() as i64).collect();
+            let want = sim.run_interpreted(std::slice::from_ref(&x))?.outputs[0].clone();
+            let got = engine.execute(&x)?.to_vec();
+            prop_assert_eq!(got, want, "standalone engine diverged");
+            let fast = sim.run(std::slice::from_ref(&x))?;
+            prop_assert_eq!(
+                fast.outputs[0].clone(),
+                want,
+                "PipelineSim::run diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedule_matches_interpreter_exactly() {
+    prop_check(40, 0xC0F2, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        for n in [1usize, 2, 3, 6] {
+            let frames = rand_frames(rng, n, len);
+            let fast = sim.run(&frames)?;
+            let oracle = sim.run_interpreted(&frames)?;
+            prop_assert_eq!(fast.total_cycles, oracle.total_cycles, "total n={n}");
+            prop_assert_eq!(
+                fast.first_frame_latency,
+                oracle.first_frame_latency,
+                "latency n={n}"
+            );
+            prop_assert_eq!(
+                fast.cycles_per_frame,
+                oracle.cycles_per_frame,
+                "cycles/frame n={n}"
+            );
+            for (a, b) in fast.stats.iter().zip(oracle.stats.iter()) {
+                prop_assert_eq!(a.useful_ops, b.useful_ops, "{} ops n={n}", a.name);
+                prop_assert_eq!(a.first_cycle, b.first_cycle, "{} first n={n}", a.name);
+                prop_assert_eq!(a.last_cycle, b.last_cycle, "{} last n={n}", a.name);
+                prop_assert!(
+                    (a.utilization - b.utilization).abs() < 1e-12,
+                    "{} utilization n={n}",
+                    a.name
+                );
+            }
+            // The closed form answers the same questions without replay.
+            if sim.predicted.exact || n <= sim.predicted.frames_observed() {
+                prop_assert_eq!(
+                    sim.predicted.total_cycles(n),
+                    oracle.total_cycles,
+                    "prediction total n={n}"
+                );
+                prop_assert_eq!(
+                    sim.predicted.cycles_per_frame(n),
+                    oracle.cycles_per_frame,
+                    "prediction cycles/frame n={n}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prediction_extrapolates_beyond_observation() {
+    // For full-rate models the steady state certifies quickly, and the
+    // closed form must stay exact far past its observed prefix.
+    prop_check(15, 0xC0F3, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        prop_assert!(
+            sim.predicted.exact,
+            "full-rate model failed to certify steady state"
+        );
+        let n = sim.predicted.frames_observed() + 8;
+        let frames = rand_frames(rng, n, len);
+        let oracle = sim.run_interpreted(&frames)?;
+        prop_assert_eq!(
+            sim.predicted.total_cycles(n),
+            oracle.total_cycles,
+            "extrapolated total"
+        );
+        prop_assert_eq!(
+            sim.predicted.cycles_per_frame(n),
+            oracle.cycles_per_frame,
+            "extrapolated cycles/frame"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn schedule_replay_exact_at_scaled_rates() {
+    // Rational r0 sweeps (Table X territory): the value-free replay must
+    // still track the interpreter cycle-for-cycle.
+    prop_check(15, 0xC0F4, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let d0 = qm.input_shape[2] as u64;
+        for r0 in [Ratio::new(d0, 2), Ratio::new(d0, 3)] {
+            let sim = PipelineSim::new(qm.clone(), Some(r0))?;
+            let frames = rand_frames(rng, 4, len);
+            let fast = sim.run(&frames)?;
+            let oracle = sim.run_interpreted(&frames)?;
+            prop_assert_eq!(fast.outputs, oracle.outputs, "values r0={r0}");
+            prop_assert_eq!(fast.total_cycles, oracle.total_cycles, "total r0={r0}");
+            prop_assert_eq!(
+                fast.cycles_per_frame,
+                oracle.cycles_per_frame,
+                "cycles/frame r0={r0}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reference_plan_compiled_equivalence() {
+    prop_check(20, 0xC0F5, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let ours = PipelineSim::new(qm.clone(), None)?;
+        let reference = PipelineSim::new_reference(qm)?;
+        let frames = rand_frames(rng, 2, len);
+        prop_assert_eq!(
+            ours.run(&frames)?.outputs,
+            reference.run(&frames)?.outputs,
+            "reference plan values diverged"
+        );
+        Ok(())
+    });
+}

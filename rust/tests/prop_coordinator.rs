@@ -60,8 +60,7 @@ fn routing_every_request_gets_its_own_answer() {
                     ..Default::default()
                 },
                 None,
-            )
-            .map_err(|e| e)?,
+            )?,
         );
         let mut handles = Vec::new();
         for c in 0..clients {
@@ -109,8 +108,7 @@ fn batching_respects_group_bound() {
                     ..Default::default()
                 },
                 None,
-            )
-            .map_err(|e| e)?,
+            )?,
         );
         let total = batch * 6;
         let mut handles = Vec::new();
@@ -149,8 +147,7 @@ fn metrics_account_for_backpressure() {
                     ..Default::default()
                 },
                 None,
-            )
-            .map_err(|e| e)?,
+            )?,
         );
         let burst = rng.range(8, 40);
         let mut handles = Vec::new();

@@ -165,10 +165,10 @@ fn pipeline_matches_independent_evaluator() {
     prop_check(60, 0xA1, |rng| {
         let qm = random_qmodel(rng);
         let n: usize = qm.input_shape.iter().product();
-        let sim = PipelineSim::new(qm.clone(), None).map_err(|e| e)?;
+        let sim = PipelineSim::new(qm.clone(), None)?;
         for _ in 0..3 {
             let x: Vec<i64> = (0..n).map(|_| rng.int8() as i64).collect();
-            let got = sim.run(&[x.clone()]).map_err(|e| e)?.outputs[0].clone();
+            let got = sim.run(&[x.clone()])?.outputs[0].clone();
             let want = naive_eval(&qm, &x);
             prop_assert_eq!(got, want, "model {:?}", qm.input_shape);
         }
@@ -182,8 +182,8 @@ fn reference_plan_value_equivalence() {
     prop_check(40, 0xA2, |rng| {
         let qm = random_qmodel(rng);
         let n: usize = qm.input_shape.iter().product();
-        let ours = PipelineSim::new(qm.clone(), None).map_err(|e| e)?;
-        let reference = PipelineSim::new_reference(qm).map_err(|e| e)?;
+        let ours = PipelineSim::new(qm.clone(), None)?;
+        let reference = PipelineSim::new_reference(qm)?;
         let x: Vec<i64> = (0..n).map(|_| rng.int8() as i64).collect();
         prop_assert_eq!(
             ours.run(&[x.clone()]).unwrap().outputs,
@@ -251,14 +251,8 @@ fn throughput_scales_inversely_with_rate() {
             .map(|_| (0..n).map(|_| rng.int8() as i64).collect())
             .collect();
         let d0 = qm.input_shape[2] as u64;
-        let full = PipelineSim::new(qm.clone(), Some(Ratio::int(d0)))
-            .map_err(|e| e)?
-            .run(&frames)
-            .map_err(|e| e)?;
-        let half = PipelineSim::new(qm, Some(Ratio::new(d0, 2)))
-            .map_err(|e| e)?
-            .run(&frames)
-            .map_err(|e| e)?;
+        let full = PipelineSim::new(qm.clone(), Some(Ratio::int(d0)))?.run(&frames)?;
+        let half = PipelineSim::new(qm, Some(Ratio::new(d0, 2)))?.run(&frames)?;
         let ratio = half.cycles_per_frame / full.cycles_per_frame;
         prop_assert!(
             (1.7..2.3).contains(&ratio),
