@@ -118,7 +118,7 @@ fn serve_synthetic(opts: &ServeOpts) {
     let golden = PipelineSim::new(qm.clone(), None).unwrap();
     let config = ServerConfig {
         workers: opts.workers,
-        batch: opts.batch,
+        max_batch: opts.batch,
         queue_depth: opts.queue_depth,
         verify_every: 0, // no PJRT golden model on the synthetic path
         engine: opts.engine,
@@ -253,7 +253,7 @@ fn main() {
     // --- serve a stream -------------------------------------------------
     let config = ServerConfig {
         workers: opts.workers,
-        batch: opts.batch,
+        max_batch: opts.batch,
         queue_depth: opts.queue_depth,
         verify_every: opts.verify_every,
         engine: opts.engine,

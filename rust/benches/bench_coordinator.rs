@@ -30,10 +30,10 @@ fn main() {
             qm.clone(),
             ServerConfig {
                 workers,
-                batch: 8,
+                max_batch: 8,
                 queue_depth: 64,
                 verify_every: 0,
-                batch_window: Duration::from_micros(200),
+                batch_deadline: Duration::from_micros(200),
                 ..Default::default()
             },
             None,

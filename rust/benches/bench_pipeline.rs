@@ -1,13 +1,18 @@
 //! Benchmarks for the whole-CNN pipeline (the E12 hot path).
 //!
-//! The headline comparison — the fused pixel-by-pixel interpreter vs the
-//! compile-once engine (`CompiledPipeline` values + `SchedulePrediction`
-//! cycles) — runs on the synthetic digits-shaped fixture so it needs no
-//! artifacts, asserts the compiled path is >= 5x frames/sec, and records
-//! the numbers in `BENCH_pipeline.json` (via `util::bench`) so the perf
-//! trajectory is tracked across PRs. The original artifact benches
-//! (continuous-flow vs fully-parallel plans, JSC across rates) still run
-//! when `make artifacts` has.
+//! Two headline comparisons, both on the synthetic digits-shaped fixture
+//! so they need no artifacts, both recorded in `BENCH_pipeline.json` (via
+//! `util::bench`) so the perf trajectory is tracked across PRs:
+//!
+//! * the fused pixel-by-pixel interpreter vs the compile-once engine
+//!   (`CompiledPipeline` values + `SchedulePrediction` cycles) — the
+//!   compiled path must be >= 5x frames/sec;
+//! * frame-at-a-time compiled execution vs the batched tier
+//!   (`CompiledPipeline::execute_batch`, one program traversal per
+//!   batch) — batched must be >= 1.5x single-frame compiled throughput.
+//!
+//! The original artifact benches (continuous-flow vs fully-parallel
+//! plans, JSC across rates) still run when `make artifacts` has.
 
 use cnn_flow::flow::Ratio;
 use cnn_flow::quant::QModel;
@@ -82,11 +87,13 @@ fn main() {
         .expect("write BENCH_pipeline.json");
     for c in &comparisons {
         println!(
-            "BENCH pipeline/{}/speedup compiled={:.3}M frames/s interp={:.3}M frames/s speedup={:.2}x narrow={}",
+            "BENCH pipeline/{}/speedup compiled={:.3}M frames/s interp={:.3}M frames/s speedup={:.2}x batched={:.3}M frames/s batch_speedup={:.2}x narrow={}",
             c.model,
             c.compiled_fps() / 1e6,
             c.interp_fps() / 1e6,
             c.speedup(),
+            c.batched_fps() / 1e6,
+            c.batch_speedup(),
             c.narrow,
         );
     }
@@ -96,5 +103,14 @@ fn main() {
         "compiled path must be >= 5x the interpreter on the synthetic digits \
          fixture (got {syn_speedup:.2}x)"
     );
-    println!("OK: compiled engine {syn_speedup:.1}x interpreter; BENCH_pipeline.json written");
+    let batch_speedup = comparisons[0].batch_speedup();
+    assert!(
+        batch_speedup >= 1.5,
+        "batched execution must be >= 1.5x single-frame compiled throughput \
+         on the synthetic digits fixture (got {batch_speedup:.2}x)"
+    );
+    println!(
+        "OK: compiled engine {syn_speedup:.1}x interpreter, batched tier \
+         {batch_speedup:.1}x single-frame; BENCH_pipeline.json written"
+    );
 }

@@ -35,9 +35,9 @@ fn main() {
     let server = Server::start(
         qm.clone(),
         ServerConfig {
-            batch: 1,
+            max_batch: 1,
             verify_every: 0,
-            batch_window: std::time::Duration::from_micros(0),
+            batch_deadline: std::time::Duration::from_micros(0),
             ..Default::default()
         },
         None,
@@ -53,7 +53,7 @@ fn main() {
         Server::start(
             qm.clone(),
             ServerConfig {
-                batch: 16,
+                max_batch: 16,
                 verify_every: 0,
                 ..Default::default()
             },

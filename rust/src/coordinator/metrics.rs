@@ -1,9 +1,16 @@
 //! Serving metrics: lock-free counters plus log2-bucketed latency
-//! histograms, kept per shard and merged into one aggregate snapshot.
+//! histograms and per-batch occupancy/flush accounting, kept per shard
+//! and merged into one aggregate snapshot.
 //!
 //! Shards never share cache lines for their hot counters (each shard owns
 //! its own `ShardMetrics` allocation), and the request path only ever does
 //! relaxed `fetch_add`s — snapshotting pays the merge cost instead.
+//!
+//! The batch accounting reconciles exactly (DESIGN.md §6, pinned by
+//! `tests/coordinator_scaling.rs`): `occupancy_frames` equals
+//! `completed + errored`, the flush-reason counters sum to `batches`, and
+//! so do the occupancy histogram's buckets — including the partial batch
+//! a drain-on-shutdown flushes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -11,6 +18,42 @@ use std::time::Duration;
 /// Number of log2 latency buckets: bucket `i` covers `[2^i, 2^(i+1))`
 /// nanoseconds, so 40 buckets span 1 ns .. ~18 minutes.
 pub const BUCKETS: usize = 40;
+
+/// Batch-occupancy buckets: bucket `i` counts batches of exactly `i + 1`
+/// frames; the last bucket collects every batch at least that large
+/// (exact frame totals come from the `occupancy_frames` counter, which
+/// never saturates).
+pub const OCC_BUCKETS: usize = 32;
+
+/// A lock-free batch-size histogram.
+pub struct OccupancyHistogram {
+    buckets: [AtomicU64; OCC_BUCKETS],
+}
+
+impl OccupancyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one batch of `frames` frames (empty batches never flush).
+    pub fn record(&self, frames: usize) {
+        let idx = frames.clamp(1, OCC_BUCKETS) - 1;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time bucket counts (for merging across shards).
+    pub fn counts(&self) -> [u64; OCC_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+impl Default for OccupancyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// A lock-free log2 latency histogram.
 pub struct Histogram {
@@ -111,6 +154,20 @@ pub struct ShardMetrics {
     pub cycle_divergence: AtomicU64,
     pub service_ns_total: AtomicU64,
     pub latency: Histogram,
+    /// Requests answered with an error (malformed frames); grouped frames
+    /// reconcile as `occupancy_frames == completed + errored`.
+    pub errored: AtomicU64,
+    /// Total frames over all recorded batch occupancies.
+    pub occupancy_frames: AtomicU64,
+    /// Batches flushed because they reached `max_batch`.
+    pub flush_full: AtomicU64,
+    /// Batches flushed by the `batch_deadline` expiring.
+    pub flush_deadline: AtomicU64,
+    /// Batches flushed by shutdown/disconnect drains (incl. the final
+    /// partial batch).
+    pub flush_drain: AtomicU64,
+    /// Batch-size distribution.
+    pub occupancy: OccupancyHistogram,
 }
 
 /// A point-in-time view of one shard.
@@ -121,6 +178,12 @@ pub struct ShardSnapshot {
     pub batches: u64,
     pub busy_cycles: u64,
     pub mean_batch: f64,
+    /// Frames summed over this shard's batch occupancies
+    /// (= completed + errored).
+    pub occupancy_frames: u64,
+    pub flush_full: u64,
+    pub flush_deadline: u64,
+    pub flush_drain: u64,
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
@@ -136,6 +199,10 @@ impl ShardMetrics {
             batches,
             busy_cycles: self.busy_cycles.load(Ordering::Relaxed),
             mean_batch: completed as f64 / batches.max(1) as f64,
+            occupancy_frames: self.occupancy_frames.load(Ordering::Relaxed),
+            flush_full: self.flush_full.load(Ordering::Relaxed),
+            flush_deadline: self.flush_deadline.load(Ordering::Relaxed),
+            flush_drain: self.flush_drain.load(Ordering::Relaxed),
             p50: self.latency.quantile(0.50),
             p95: self.latency.quantile(0.95),
             p99: self.latency.quantile(0.99),
@@ -162,6 +229,18 @@ pub struct MetricsSnapshot {
     pub simulated_cycles: u64,
     /// Groups where prediction != interpreter cycles (must stay 0).
     pub cycle_divergence: u64,
+    /// Requests answered with an error (malformed frames).
+    pub errored: u64,
+    /// Frames summed over all batch occupancies (= completed + errored).
+    pub occupancy_frames: u64,
+    /// Batches flushed full / by deadline / by drain; the three sum to
+    /// `batches`.
+    pub flush_full: u64,
+    pub flush_deadline: u64,
+    pub flush_drain: u64,
+    /// Merged batch-occupancy histogram: bucket `i` counts batches of
+    /// `i + 1` frames (last bucket: at least [`OCC_BUCKETS`] frames).
+    pub batch_occupancy: [u64; OCC_BUCKETS],
     pub mean_batch: f64,
     /// Mean wall-clock time from enqueue to answer.
     pub mean_service: Duration,
@@ -219,6 +298,21 @@ mod tests {
         // 9 fast + 1 slow: p50 fast, p99 slow.
         assert!(quantile(&merged, 0.5) < Duration::from_micros(1));
         assert!(quantile(&merged, 0.99) >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn occupancy_histogram_buckets_exact_sizes() {
+        let h = OccupancyHistogram::new();
+        h.record(1);
+        h.record(1);
+        h.record(4);
+        h.record(OCC_BUCKETS); // last exact bucket
+        h.record(OCC_BUCKETS + 9); // overflow collects in the last bucket
+        let c = h.counts();
+        assert_eq!(c[0], 2);
+        assert_eq!(c[3], 1);
+        assert_eq!(c[OCC_BUCKETS - 1], 2);
+        assert_eq!(c.iter().sum::<u64>(), 5, "every batch lands in a bucket");
     }
 
     #[test]

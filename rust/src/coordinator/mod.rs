@@ -19,10 +19,17 @@
 //!   on its round-robin-preferred shard, spilling to the next shard with
 //!   queue space when the preferred one is saturated, and rejecting only
 //!   when *every* shard queue is full (global backpressure);
-//! * **contiguous frame groups** — each shard drains its queue into groups
-//!   of up to `batch` frames (bounded by `batch_window`) and runs each
-//!   group through the simulator as one uninterrupted stream, the
-//!   condition under which the modelled hardware reaches ~100% utilisation;
+//! * **deadline-aware micro-batching** — each shard accumulates requests
+//!   into a batch of up to `max_batch` frames, flushing early when the
+//!   *oldest* queued request's age reaches `batch_deadline` (whichever
+//!   comes first; shutdown drains flush whatever has accumulated). A
+//!   compiled shard runs the whole batch through
+//!   [`CompiledPipeline::execute_batch`] — one program traversal per
+//!   batch — and each flush records its occupancy and reason
+//!   ([`metrics::OccupancyHistogram`], flush-full/-deadline/-drain
+//!   counters) next to the existing p50/p95/p99 aggregation. Contiguous
+//!   frames are also the condition under which the modelled hardware
+//!   reaches ~100% utilisation;
 //! * **per-shard metrics** — every shard keeps its own counters and log2
 //!   latency histogram ([`metrics::ShardMetrics`]); snapshots merge them
 //!   into aggregate p50/p95/p99 and a sharded throughput projection
@@ -48,7 +55,7 @@ pub mod loadgen;
 pub mod metrics;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -81,8 +88,8 @@ pub struct ServerConfig {
     /// simulated throughput scales with this count; 1 reproduces the
     /// original single-pipeline server.
     pub workers: usize,
-    /// Max frames per continuous-flow group.
-    pub batch: usize,
+    /// Max frames per micro-batch (one continuous-flow group).
+    pub max_batch: usize,
     /// Bounded request queue depth *per shard* (backpressure threshold).
     pub queue_depth: usize,
     /// Cross-check every n-th request (per shard) against the PJRT golden
@@ -91,8 +98,10 @@ pub struct ServerConfig {
     /// Modelled hardware clock, used to convert simulated cycles into
     /// projected hardware latency/throughput figures.
     pub clock_hz: f64,
-    /// How long a shard waits to fill a group before flushing.
-    pub batch_window: Duration,
+    /// Deadline-aware flush bound: a batch flushes as soon as its
+    /// *oldest* request has been waiting this long since enqueue (so the
+    /// added batching latency is capped per request, not per group).
+    pub batch_deadline: Duration,
     /// Value/cycle engine the shards execute (compiled by default).
     pub engine: EngineKind,
 }
@@ -101,14 +110,25 @@ impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             workers: 1,
-            batch: 16,
+            max_batch: 16,
             queue_depth: 256,
             verify_every: 8,
             clock_hz: 600.0e6, // the paper's JSC designs close ~600 MHz
-            batch_window: Duration::from_millis(1),
+            batch_deadline: Duration::from_millis(1),
             engine: EngineKind::Compiled,
         }
     }
+}
+
+/// Why a shard flushed an accumulating micro-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FlushReason {
+    /// The batch reached `max_batch` frames.
+    Full,
+    /// The oldest request's `batch_deadline` expired.
+    Deadline,
+    /// Shutdown/disconnect drain (incl. the final partial batch).
+    Drain,
 }
 
 /// One inference answer.
@@ -291,6 +311,12 @@ impl Server {
         let mut predicted_cycles = 0u64;
         let mut simulated_cycles = 0u64;
         let mut cycle_divergence = 0u64;
+        let mut errored = 0u64;
+        let mut occupancy_frames = 0u64;
+        let mut flush_full = 0u64;
+        let mut flush_deadline = 0u64;
+        let mut flush_drain = 0u64;
+        let mut batch_occupancy = [0u64; metrics::OCC_BUCKETS];
         let mut buckets = [0u64; metrics::BUCKETS];
         for s in &self.shards {
             completed += s.metrics.completed.load(Ordering::Relaxed);
@@ -301,6 +327,14 @@ impl Server {
             predicted_cycles += s.metrics.predicted_cycles.load(Ordering::Relaxed);
             simulated_cycles += s.metrics.simulated_cycles.load(Ordering::Relaxed);
             cycle_divergence += s.metrics.cycle_divergence.load(Ordering::Relaxed);
+            errored += s.metrics.errored.load(Ordering::Relaxed);
+            occupancy_frames += s.metrics.occupancy_frames.load(Ordering::Relaxed);
+            flush_full += s.metrics.flush_full.load(Ordering::Relaxed);
+            flush_deadline += s.metrics.flush_deadline.load(Ordering::Relaxed);
+            flush_drain += s.metrics.flush_drain.load(Ordering::Relaxed);
+            for (b, v) in batch_occupancy.iter_mut().zip(s.metrics.occupancy.counts().iter()) {
+                *b += v;
+            }
             for (b, v) in buckets.iter_mut().zip(s.metrics.latency.counts().iter()) {
                 *b += v;
             }
@@ -317,6 +351,12 @@ impl Server {
             predicted_cycles,
             simulated_cycles,
             cycle_divergence,
+            errored,
+            occupancy_frames,
+            flush_full,
+            flush_deadline,
+            flush_drain,
+            batch_occupancy,
             mean_batch: completed as f64 / batches.max(1) as f64,
             mean_service: Duration::from_nanos(if completed == 0 {
                 0
@@ -389,8 +429,9 @@ impl Drop for Server {
     }
 }
 
-/// One shard: drain the queue into contiguous frame groups and stream
-/// each group through this shard's own pipeline replica.
+/// One shard: accumulate queued requests into deadline-bounded
+/// micro-batches and stream each batch through this shard's own pipeline
+/// replica.
 fn worker_loop(
     sim: PipelineSim,
     config: ServerConfig,
@@ -405,35 +446,53 @@ fn worker_loop(
         EngineKind::Compiled => Some(sim.compiled.clone()),
         EngineKind::Interpreter => None,
     };
+    let max_batch = config.max_batch.max(1);
     let mut serial: u64 = 0;
     let mut open = true;
     while open {
-        // Block for the first request, then drain up to `batch` within the
-        // batching window — contiguous frames = continuous flow.
+        // Block for the first request, then accumulate until the batch is
+        // full or the first request's deadline expires — contiguous
+        // frames = continuous flow, the deadline caps the added latency.
         let first = match rx.recv() {
             Ok(Job::Infer(r)) => r,
             Ok(Job::Shutdown) | Err(_) => break,
         };
+        // checked_add: an absurd --batch-deadline must degrade to "wait
+        // a day" rather than panic on Instant overflow.
+        let deadline = first
+            .enqueued
+            .checked_add(config.batch_deadline)
+            .unwrap_or_else(|| Instant::now() + Duration::from_secs(86_400));
         let mut group = vec![first];
-        let deadline = Instant::now() + config.batch_window;
-        while group.len() < config.batch.max(1) {
+        let mut reason = FlushReason::Full;
+        while group.len() < max_batch {
             let left = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
                 Ok(Job::Infer(r)) => group.push(r),
                 Ok(Job::Shutdown) => {
                     open = false;
+                    reason = FlushReason::Drain;
                     break;
                 }
-                Err(_) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    reason = FlushReason::Deadline;
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    reason = FlushReason::Drain;
+                    break;
+                }
             }
         }
-        run_group(&sim, &mut engine, &config, group, &vtx, shard, &mut serial);
+        run_group(&sim, &mut engine, &config, group, &vtx, shard, &mut serial, reason);
     }
     // Drain: answer anything still queued (e.g. requests that raced the
-    // shutdown marker) so no accepted request is dropped unanswered.
+    // shutdown marker) so no accepted request is dropped unanswered. The
+    // final partial batches record like any other flush.
     loop {
         let mut group = Vec::new();
-        while group.len() < config.batch.max(1) {
+        while group.len() < max_batch {
             match rx.try_recv() {
                 Ok(Job::Infer(r)) => group.push(r),
                 Ok(Job::Shutdown) => continue,
@@ -443,7 +502,16 @@ fn worker_loop(
         if group.is_empty() {
             break;
         }
-        run_group(&sim, &mut engine, &config, group, &vtx, shard, &mut serial);
+        run_group(
+            &sim,
+            &mut engine,
+            &config,
+            group,
+            &vtx,
+            shard,
+            &mut serial,
+            FlushReason::Drain,
+        );
     }
 }
 
@@ -460,28 +528,52 @@ struct GroupResult {
     group_cycles: u64,
 }
 
-/// Compiled hot path: per-frame value execution plus O(1) closed-form
-/// cycle figures — no cycle simulation.
+/// Compiled hot path: the whole micro-batch runs through
+/// [`CompiledPipeline::execute_batch`] (one program traversal, batch
+/// innermost), with O(1) closed-form cycle figures from the
+/// [`crate::flow::BatchPrediction`] — no cycle simulation. Requests are
+/// screened individually first, so one malformed frame errors only its
+/// own reply, never its co-batched neighbours.
 fn run_group_compiled(
     sim: &PipelineSim,
     engine: &mut CompiledPipeline,
     group: &[Request],
     shard: &ShardMetrics,
 ) -> GroupResult {
-    let mut outputs = Vec::with_capacity(group.len());
-    for r in group {
-        outputs.push(engine.execute(&r.x_q).map(|o| o.to_vec()));
+    let mut outputs: Vec<Result<Vec<i64>, String>> = Vec::with_capacity(group.len());
+    let mut frames: Vec<&[i64]> = Vec::with_capacity(group.len());
+    let mut slots: Vec<usize> = Vec::with_capacity(group.len());
+    for (i, r) in group.iter().enumerate() {
+        match engine.validate_frame(&r.x_q) {
+            Ok(()) => {
+                slots.push(i);
+                frames.push(&r.x_q);
+                outputs.push(Ok(Vec::new()));
+            }
+            Err(e) => outputs.push(Err(e)),
+        }
     }
-    let n = group.len();
-    let group_cycles = sim.predicted.total_cycles(n);
+    match engine.execute_batch(&frames) {
+        Ok(batch_out) => {
+            for (&slot, o) in slots.iter().zip(batch_out) {
+                outputs[slot] = Ok(o);
+            }
+        }
+        Err(e) => {
+            for &slot in &slots {
+                outputs[slot] = Err(e.clone());
+            }
+        }
+    }
+    let bp = sim.predicted.batched(frames.len());
     shard
         .predicted_cycles
-        .fetch_add(group_cycles, Ordering::Relaxed);
+        .fetch_add(bp.total_cycles, Ordering::Relaxed);
     GroupResult {
         outputs,
-        latency_cycles: sim.predicted.first_frame_latency,
-        per_frame_cycles: sim.predicted.cycles_per_frame(n).max(1.0) as u64,
-        group_cycles,
+        latency_cycles: bp.first_frame_latency,
+        per_frame_cycles: bp.steady_cycles_per_frame.max(1.0) as u64,
+        group_cycles: bp.total_cycles,
     }
 }
 
@@ -533,12 +625,22 @@ fn run_group(
     vtx: &SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
     serial: &mut u64,
+    reason: FlushReason,
 ) {
     let result = match engine.as_mut() {
         Some(cp) => run_group_compiled(sim, cp, &group, shard),
         None => run_group_interpreted(sim, &group, shard),
     };
     shard.batches.fetch_add(1, Ordering::Relaxed);
+    match reason {
+        FlushReason::Full => shard.flush_full.fetch_add(1, Ordering::Relaxed),
+        FlushReason::Deadline => shard.flush_deadline.fetch_add(1, Ordering::Relaxed),
+        FlushReason::Drain => shard.flush_drain.fetch_add(1, Ordering::Relaxed),
+    };
+    shard
+        .occupancy_frames
+        .fetch_add(group.len() as u64, Ordering::Relaxed);
+    shard.occupancy.record(group.len());
     shard
         .busy_cycles
         .fetch_add(result.group_cycles, Ordering::Relaxed);
@@ -546,6 +648,7 @@ fn run_group(
         let logits = match outcome {
             Ok(logits) => logits,
             Err(e) => {
+                shard.errored.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(e));
                 continue;
             }
@@ -691,8 +794,8 @@ mod tests {
     #[test]
     fn batching_groups_requests() {
         let config = ServerConfig {
-            batch: 8,
-            batch_window: Duration::from_millis(20),
+            max_batch: 8,
+            batch_deadline: Duration::from_millis(20),
             ..Default::default()
         };
         let server = Arc::new(Server::start(tiny_qmodel(), config, None).unwrap());
@@ -718,9 +821,9 @@ mod tests {
         // Queue depth 1 and a slow drain: the burst must see rejections
         // rather than unbounded queueing.
         let config = ServerConfig {
-            batch: 1,
+            max_batch: 1,
             queue_depth: 1,
-            batch_window: Duration::from_millis(0),
+            batch_deadline: Duration::from_millis(0),
             ..Default::default()
         };
         let server = Arc::new(Server::start(tiny_qmodel(), config, None).unwrap());
@@ -764,10 +867,10 @@ mod tests {
                 qm.clone(),
                 ServerConfig {
                     workers,
-                    batch: 4,
+                    max_batch: 4,
                     queue_depth: 64,
                     verify_every: 0,
-                    batch_window: Duration::from_millis(1),
+                    batch_deadline: Duration::from_millis(1),
                     ..Default::default()
                 },
                 None,
@@ -791,10 +894,10 @@ mod tests {
             tiny_qmodel(),
             ServerConfig {
                 workers: 1,
-                batch: 4,
+                max_batch: 4,
                 queue_depth: 64,
                 verify_every: 0,
-                batch_window: Duration::from_millis(0),
+                batch_deadline: Duration::from_millis(0),
                 ..Default::default()
             },
             None,
@@ -822,10 +925,10 @@ mod tests {
             qm,
             ServerConfig {
                 workers: 4,
-                batch: 1,
+                max_batch: 1,
                 queue_depth: 8,
                 verify_every: 0,
-                batch_window: Duration::from_millis(0),
+                batch_deadline: Duration::from_millis(0),
                 ..Default::default()
             },
             None,
@@ -860,11 +963,11 @@ mod tests {
                 qm.clone(),
                 ServerConfig {
                     workers: 2,
-                    batch: 4,
+                    max_batch: 4,
                     queue_depth: 64,
                     verify_every: 0,
                     engine,
-                    batch_window: Duration::from_millis(1),
+                    batch_deadline: Duration::from_millis(1),
                     ..Default::default()
                 },
                 None,

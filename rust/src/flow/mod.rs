@@ -11,4 +11,4 @@ pub mod schedule;
 pub use plan::{plan_all, plan_layer, PlannedLayer, UnitPlan};
 pub use rate::{analyze, layer_rate, RateAnalysis, RatedLayer};
 pub use ratio::Ratio;
-pub use schedule::{ScheduleModel, SchedulePrediction};
+pub use schedule::{BatchPrediction, ScheduleModel, SchedulePrediction};

@@ -7,6 +7,18 @@
 
 /// A non-negative rational number `num/den`, always stored reduced with
 /// `den > 0`.
+///
+/// ```
+/// use cnn_flow::flow::Ratio;
+///
+/// // Eq. 8 for the running example's P2 layer:
+/// // r = d_l * r_in / (d_in * s^2) = 16 * 4 / (16 * 9) = 4/9, kept exact.
+/// let r = Ratio::int(4).mul(Ratio::new(16, 16 * 9));
+/// assert_eq!(r, Ratio::new(4, 9));
+/// assert_eq!(r.paper(), "4/9");
+/// // Eq. 17's ceiling division: 256 features at rate 4/9 need 576 cycles.
+/// assert_eq!(r.ceil_div_into(256), 576);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Ratio {
     num: u64,

@@ -378,6 +378,27 @@ pub struct LayerPrediction {
 /// Closed-form schedule figures: frame-0 latency, steady cycles/frame and
 /// per-layer utilisation, answering any frame count in O(1).
 ///
+/// ```
+/// use cnn_flow::flow::schedule::{ScheduleModel, SchedulePrediction};
+/// use cnn_flow::flow::{analyze, plan_all};
+/// use cnn_flow::model::{Layer, Model};
+///
+/// // conv3x3 p1 (1 -> 2) + maxpool 2x2 + dense 4 on a 4x4x1 input.
+/// let mut m = Model::new("tiny", 4, 1);
+/// m.push(Layer::conv("C1", 3, 1, 1, 2));
+/// m.push(Layer::maxpool("P1", 2, 2));
+/// m.push(Layer::dense("F1", 4).no_relu());
+/// let plans = plan_all(&analyze(&m, None).unwrap());
+/// let model = ScheduleModel::new(&plans, (4, 4), 1).unwrap();
+///
+/// let pred = SchedulePrediction::new(&model);
+/// assert!(pred.exact);
+/// // Steady advance = the frame period: 16 pixels + 5 gap pixels.
+/// assert_eq!(pred.steady_cycles_per_frame, 21);
+/// // O(1) answers equal the exact replay at any frame count.
+/// assert_eq!(pred.total_cycles(100), model.run(100).total_cycles);
+/// ```
+///
 /// `exact` is true when the replay certified steady state (two
 /// consecutive frames whose entire schedule state — every layer's
 /// completion vector, carried initiation state, and the source stream —
@@ -510,6 +531,22 @@ impl SchedulePrediction {
         }
     }
 
+    /// Closed-form figures for a `batch`-frame group streamed
+    /// back-to-back — the batched serving tier's cycle source (DESIGN.md
+    /// §6). Every field is the O(1) answer the per-count methods give, so
+    /// divergence against [`ScheduleModel::run`] stays checkable at any
+    /// batch size.
+    pub fn batched(&self, batch: usize) -> BatchPrediction {
+        BatchPrediction {
+            batch,
+            total_cycles: self.total_cycles(batch),
+            steady_cycles_per_frame: self.cycles_per_frame(batch),
+            first_frame_latency: if batch == 0 { 0 } else { self.first_frame_latency },
+            utilization: self.utilization(batch),
+            exact: self.exact || batch <= self.frames_observed(),
+        }
+    }
+
     /// Per-layer utilisation over an `frames`-frame stream.
     pub fn utilization(&self, frames: usize) -> Vec<f64> {
         self.layers
@@ -529,6 +566,33 @@ impl SchedulePrediction {
             })
             .collect()
     }
+}
+
+/// Closed-form schedule figures for one fixed batch size, produced by
+/// [`SchedulePrediction::batched`]: what a `batch`-frame group costs when
+/// its frames stream back-to-back through the pipeline.
+///
+/// The contract (enforced by unit and property tests): `total_cycles`,
+/// `steady_cycles_per_frame` and `utilization` equal the
+/// [`ScheduleModel::run`] replay of the same frame count **exactly** —
+/// cycle divergence at any batch size is a bug.
+#[derive(Debug, Clone)]
+pub struct BatchPrediction {
+    /// Frames in the group.
+    pub batch: usize,
+    /// Completion cycle of the group's last output (the interpreter's
+    /// `total_cycles` for a `batch`-frame stream).
+    pub total_cycles: u64,
+    /// Warm-up-excluding cycles/frame over the group (the interpreter's
+    /// `cycles_per_frame`).
+    pub steady_cycles_per_frame: f64,
+    /// Frame-0 latency (0 for an empty group).
+    pub first_frame_latency: u64,
+    /// Per-layer utilisation over the group.
+    pub utilization: Vec<f64>,
+    /// Whether the figures are certified-exact extrapolations (always
+    /// true within the observed prefix).
+    pub exact: bool,
 }
 
 /// If every layer's completion vector (and carried state), plus the
@@ -642,6 +706,31 @@ mod tests {
         assert!(pred.frames_observed() <= 4);
         // Steady advance equals the frame period: 16 pixels + 5 gap.
         assert_eq!(pred.steady_cycles_per_frame, 21);
+    }
+
+    #[test]
+    fn batch_prediction_has_zero_divergence_at_any_size() {
+        // The batched serving tier's contract: the closed-form group
+        // figures equal the exact schedule replay at every batch size.
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let pred = SchedulePrediction::new(&model);
+        for b in [1usize, 2, 3, 4, 7, 8, 16, 64, 257] {
+            let bp = pred.batched(b);
+            let replay = model.run(b);
+            assert_eq!(bp.batch, b);
+            assert!(bp.exact, "B={b}");
+            assert_eq!(bp.total_cycles, replay.total_cycles, "B={b}");
+            assert_eq!(bp.steady_cycles_per_frame, replay.cycles_per_frame, "B={b}");
+            assert_eq!(bp.first_frame_latency, replay.first_frame_latency, "B={b}");
+            for (u, s) in bp.utilization.iter().zip(&replay.stats) {
+                assert!((u - s.utilization).abs() < 1e-12, "B={b}");
+            }
+        }
+        let empty = pred.batched(0);
+        assert_eq!(empty.total_cycles, 0);
+        assert_eq!(empty.first_frame_latency, 0);
+        assert_eq!(empty.steady_cycles_per_frame, 0.0);
     }
 
     #[test]

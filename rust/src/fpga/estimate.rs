@@ -2,7 +2,7 @@
 //!
 //! Per-primitive costs (8-bit datapath on UltraScale+), calibrated once
 //! against the paper's published JSC and MobileNet rows and then held
-//! fixed — see EXPERIMENTS.md §Calibration for the comparison:
+//! fixed — the comparison is pinned by this module's unit tests:
 //!
 //! * adder (8b + carry headroom): 8 LUTs;
 //! * interleave/data mux: folded into unit control (weight muxes are ROM);
@@ -145,7 +145,7 @@ pub fn estimate_resources(
     }
     let bram36 = bram18 as f64 / 2.0;
 
-    // Fmax model (calibrated, documented in EXPERIMENTS.md): fully
+    // Fmax model (calibrated against the paper's published rows): fully
     // combinational single-config designs close near 690 MHz; BRAM-backed
     // reconfigurable designs near 600 MHz; very large designs derate with
     // size (routing pressure).

@@ -6,8 +6,8 @@
 //! latency, throughput, power and energy so Tables IX/X and Fig. 13 can be
 //! regenerated. Absolute numbers are estimates; the *shape* (scaling with
 //! the data rate r0, DSP vs no-DSP trade-off, Pareto frontier position) is
-//! the reproduction target — see EXPERIMENTS.md for calibration notes and
-//! measured-vs-paper deltas.
+//! the reproduction target — the calibration notes live in [`estimate`],
+//! with the measured-vs-paper comparison pinned by its unit tests.
 //!
 //! Key mapping decisions (each mirrors a statement in the paper):
 //!

@@ -23,10 +23,14 @@
 //!   default build has zero dependencies),
 //! * [`coordinator`] — the sharded streaming inference server: N worker
 //!   shards each owning a [`sim::pipeline::PipelineSim`] replica, fed by a
-//!   round-robin dispatcher with backpressure-aware spill; per-shard
-//!   metrics with p50/p95/p99 latency histograms, graceful drain-on-
-//!   shutdown, and a deterministic seeded-trace load harness
-//!   ([`coordinator::loadgen`]) with a virtual clock,
+//!   round-robin dispatcher with backpressure-aware spill;
+//!   deadline-aware micro-batching (accumulate up to `max_batch` frames
+//!   or until the oldest request's `batch_deadline` expires, then run
+//!   the whole batch through one compiled program traversal); per-shard
+//!   metrics with p50/p95/p99 latency histograms, batch occupancy and
+//!   flush-reason accounting, graceful drain-on-shutdown, and a
+//!   deterministic seeded-trace load harness ([`coordinator::loadgen`])
+//!   with a virtual clock,
 //! * [`report`] — generators that print every paper table and figure.
 //!
 //! Serving scale-out mirrors the companion work (*Data-Rate-Aware

@@ -3,7 +3,7 @@
 //! ```text
 //! cnn-flow table <1..10>          reproduce a paper table
 //! cnn-flow fig 13                 reproduce the Fig. 13 Pareto data
-//! cnn-flow all-tables             every table + figure (EXPERIMENTS.md input)
+//! cnn-flow all-tables             every table + figure (report input)
 //! cnn-flow analyze --model M      rates, unit plan, resources per layer
 //! cnn-flow simulate --model M     cycle-accurate pipeline run + utilisation
 //! cnn-flow serve --model M        sharded streaming coordinator demo (E12)
@@ -95,7 +95,8 @@ fn usage() {
          cnn-flow ablation\n  cnn-flow analyze  --model <zoo-name|model.json> [--r0 n[/d]]\n  \
          cnn-flow simulate --model <digits|jsc> [--frames N] [--r0 n[/d]] [--reference]\n  \
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
-                    [--batch N] [--queue-depth N] [--verify-every N] [--engine compiled|interp]\n  \
+                    [--max-batch N] [--batch-deadline USEC] [--queue-depth N]\n  \
+                    [--verify-every N] [--engine compiled|interp]\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
          cnn-flow list"
     );
@@ -335,7 +336,16 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .get("requests")
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
-    let batch: usize = opts.get("batch").and_then(|s| s.parse().ok()).unwrap_or(16);
+    // --max-batch is the micro-batch bound; --batch stays as an alias.
+    let max_batch: usize = opts
+        .get("max-batch")
+        .or_else(|| opts.get("batch"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let batch_deadline_us: u64 = opts
+        .get("batch-deadline")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
     let workers: usize = opts
         .get("workers")
         .and_then(|s| s.parse().ok())
@@ -366,10 +376,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     };
     let config = ServerConfig {
         workers,
-        batch,
+        max_batch,
         queue_depth,
         verify_every,
         engine,
+        batch_deadline: std::time::Duration::from_micros(batch_deadline_us),
         ..Default::default()
     };
     // Plan + lower once; every shard clones the compiled state.
@@ -444,6 +455,25 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         "coordinator: {} shard(s), mean batch {:.1}, mean service {:?} (p50 {:?}, p95 {:?}, p99 {:?})",
         m.workers, m.mean_batch, m.mean_service, m.p50, m.p95, m.p99
     );
+    println!(
+        "micro-batching: {} batches ({} full, {} deadline, {} drain), {} frames batched",
+        m.batches, m.flush_full, m.flush_deadline, m.flush_drain, m.occupancy_frames
+    );
+    let occupied: Vec<String> = m
+        .batch_occupancy
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| {
+            // The last bucket collects every batch of >= OCC_BUCKETS frames.
+            if i + 1 == cnn_flow::coordinator::metrics::OCC_BUCKETS {
+                format!(">={}x{c}", i + 1)
+            } else {
+                format!("{}x{c}", i + 1)
+            }
+        })
+        .collect();
+    println!("batch occupancy (size x count): {}", occupied.join(" "));
     println!(
         "projected hw throughput: {:.2} MInf/s per pipeline, {:.2} MInf/s aggregate ({} shards)",
         m.projected_fps / 1e6,
@@ -542,10 +572,13 @@ fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
         };
         let cmp = bench::compare_engines(&b, &sim, &frames);
         println!(
-            "{name}: interpreter {:.3}M frames/s, compiled {:.3}M frames/s ({:.1}x)",
+            "{name}: interpreter {:.3}M frames/s, compiled {:.3}M frames/s ({:.1}x), \
+             batched {:.3}M frames/s ({:.2}x over single-frame)",
             cmp.interp_fps() / 1e6,
             cmp.compiled_fps() / 1e6,
-            cmp.speedup()
+            cmp.speedup(),
+            cmp.batched_fps() / 1e6,
+            cmp.batch_speedup()
         );
         comparisons.push(cmp);
     }

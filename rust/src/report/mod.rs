@@ -2,7 +2,8 @@
 //!
 //! Every table and figure of the paper's evaluation has a generator here
 //! that prints the same rows the paper reports, from this crate's own
-//! models — see DESIGN.md §5 for the experiment index. The CLI exposes
+//! models — see docs/PAPER_MAP.md for the artifact → module → test
+//! index. The CLI exposes
 //! them as `cnn-flow table <n>` / `cnn-flow fig 13`.
 
 pub mod ablation;

@@ -89,7 +89,7 @@ pub fn table9() -> Table {
         "70.5% (paper)".to_string(),
     ]);
     t.footnote("Baseline rows are the paper's published values; 'Ours' is this crate's");
-    t.footnote("synthesis estimator + analytic timing (see EXPERIMENTS.md for deltas).");
+    t.footnote("synthesis estimator + analytic timing (see docs/PAPER_MAP.md).");
     t
 }
 

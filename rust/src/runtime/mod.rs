@@ -149,14 +149,19 @@ mod backend {
 pub use backend::{Executable, Runtime};
 
 /// Everything the serving stack needs for one model: the quantized weight
-/// manifest, the planned-and-lowered pipeline (compiled value engine +
-/// analytic schedule, ready for worker shards to clone without
-/// re-planning), plus the compiled int8 golden executable (drives
+/// manifest, the planned-and-lowered pipeline (compiled value engine with
+/// its batched tier + analytic schedule, ready for worker shards to clone
+/// without re-planning), plus the compiled int8 golden executable (drives
 /// verification).
 pub struct ModelBundle {
     pub qmodel: QModel,
-    /// Pre-lowered pipeline: pass to `coordinator::Server::start_prelowered`
-    /// so every shard clones compiled state instead of re-planning.
+    /// Pre-lowered pipeline: pass to
+    /// [`crate::coordinator::Server::start_prelowered`] so every shard
+    /// clones compiled state instead of re-planning. The clone carries
+    /// the lowered program behind an `Arc`, so sharding never duplicates
+    /// weights or tap tables — each shard adds only its own execution
+    /// scratch (single-frame ping-pong plus the batched tier's
+    /// lane-interleaved buffers).
     pub pipeline: crate::sim::pipeline::PipelineSim,
     pub golden: Executable,
 }

@@ -28,10 +28,29 @@
 //! for int8-range frames. The engine computes values only; cycle figures
 //! come from `flow::schedule` — together they replace the fused
 //! interpreter on the serving hot path.
+//!
+//! # The batched tier (DESIGN.md §6)
+//!
+//! [`CompiledPipeline::execute_batch`] runs B frames through the same
+//! lowered program with the batch as the **innermost loop of every
+//! instruction**: one program traversal per batch instead of one per
+//! frame. Activations live in lane-interleaved ping-pong buffers
+//! (`buffer[position * lane_stride + lane]`), and every kernel walks its
+//! tap table once per output position while a fixed-size accumulator tile
+//! covers `LANES` lanes — full tiles get compile-time loop bounds (so
+//! the lane loop unrolls and vectorises, with each weight scalar
+//! broadcast across the whole tile), the tail tile runs the same code
+//! with a runtime bound. Per frame the result is bit-identical to
+//! [`CompiledPipeline::execute`]: integer accumulation commutes exactly,
+//! so reordering lanes never changes a value.
 
 use std::sync::Arc;
 
 use crate::quant::{requant, QKind, QModel, QMAX};
+
+/// Lanes per batch tile: accumulator tiles are `[T; LANES]` locals so
+/// full tiles stay in registers across a whole tap walk.
+const LANES: usize = 8;
 
 /// Accumulator cell: the two arithmetic widths a lowered program can run
 /// in. Narrow (`i32`) programs are only built when the lowering-time bound
@@ -143,6 +162,10 @@ struct Engine<T> {
     pong: Vec<T>,
     acc: Vec<T>,
     out: Vec<i64>,
+    /// Lane-interleaved ping-pong scratch for the batched tier; grown on
+    /// first use, then reused across batches.
+    bping: Vec<T>,
+    bpong: Vec<T>,
 }
 
 #[derive(Debug, Clone)]
@@ -178,6 +201,32 @@ impl CompiledPipeline {
         match &mut self.inner {
             Inner::Narrow(e) => e.execute(frame),
             Inner::Wide(e) => e.execute(frame),
+        }
+    }
+
+    /// Run a batch of frames with one program traversal (the batch is the
+    /// innermost loop of every instruction — see the module docs and
+    /// DESIGN.md §6). Returns one output vector per frame, each
+    /// **bit-identical** to what [`CompiledPipeline::execute`] returns
+    /// for that frame alone. All-or-nothing: any malformed frame fails
+    /// the whole batch (pre-screen with
+    /// [`CompiledPipeline::validate_frame`] to isolate bad requests).
+    pub fn execute_batch(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        match &mut self.inner {
+            Inner::Narrow(e) => e.execute_batch(frames),
+            Inner::Wide(e) => e.execute_batch(frames),
+        }
+    }
+
+    /// Check one frame against the lowered program's input contract:
+    /// exact length, and the int8 grid when the narrow lowering's bound
+    /// analysis assumed it. Exactly the screening `execute` performs, so
+    /// callers batching many requests can reject malformed ones
+    /// individually before a group [`CompiledPipeline::execute_batch`].
+    pub fn validate_frame(&self, frame: &[i64]) -> Result<(), String> {
+        match &self.inner {
+            Inner::Narrow(e) => validate(&e.prog, frame),
+            Inner::Wide(e) => validate(&e.prog, frame),
         }
     }
 
@@ -242,6 +291,28 @@ fn narrow_safe(qm: &QModel) -> Result<bool, String> {
     Ok(narrow)
 }
 
+/// The input screening shared by `execute`, `execute_batch` and
+/// `CompiledPipeline::validate_frame`: exact frame length, plus the int8
+/// grid whenever the narrow bound analysis assumed it.
+fn validate<T: Cell>(prog: &Program<T>, frame: &[i64]) -> Result<(), String> {
+    if frame.len() != prog.in_len {
+        return Err(format!(
+            "compiled execute: frame len {} != {}",
+            frame.len(),
+            prog.in_len
+        ));
+    }
+    if T::CHECK_INT8 {
+        if let Some(bad) = frame.iter().find(|v| v.unsigned_abs() > QMAX as u64) {
+            return Err(format!(
+                "compiled execute: frame value {bad} outside the int8 grid \
+                 the narrow lowering is proven for"
+            ));
+        }
+    }
+    Ok(())
+}
+
 impl<T: Cell> Engine<T> {
     fn build(qm: &QModel) -> Result<Engine<T>, String> {
         let prog = lower_program::<T>(qm)?;
@@ -250,6 +321,8 @@ impl<T: Cell> Engine<T> {
             pong: vec![T::ZERO; prog.buf_len],
             acc: Vec::new(),
             out: Vec::new(),
+            bping: Vec::new(),
+            bpong: Vec::new(),
             prog: Arc::new(prog),
         })
     }
@@ -261,22 +334,9 @@ impl<T: Cell> Engine<T> {
             pong,
             acc,
             out,
+            ..
         } = self;
-        if frame.len() != prog.in_len {
-            return Err(format!(
-                "compiled execute: frame len {} != {}",
-                frame.len(),
-                prog.in_len
-            ));
-        }
-        if T::CHECK_INT8 {
-            if let Some(bad) = frame.iter().find(|v| v.unsigned_abs() > QMAX as u64) {
-                return Err(format!(
-                    "compiled execute: frame value {bad} outside the int8 grid \
-                     the narrow lowering is proven for"
-                ));
-            }
-        }
+        validate(prog, frame)?;
         for (slot, &v) in ping.iter_mut().zip(frame) {
             *slot = T::from_i64(v);
         }
@@ -297,6 +357,67 @@ impl<T: Cell> Engine<T> {
         out.clear();
         out.extend(res.iter().map(|v| v.to_i64()));
         Ok(out.as_slice())
+    }
+
+    fn execute_batch(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
+        if frames.len() == 1 {
+            // Lane tiling buys nothing at B = 1: reuse the scalar path.
+            let out = self.execute(frames[0])?;
+            return Ok(vec![out.to_vec()]);
+        }
+        for (i, f) in frames.iter().enumerate() {
+            validate(&self.prog, f).map_err(|e| format!("batch frame {i}: {e}"))?;
+        }
+        let b = frames.len();
+        // Lane stride rounded up to LANES so every tile can slice a full
+        // chunk; pad lanes are never read (tiles loop to their length).
+        let bp = b.div_ceil(LANES) * LANES;
+        let Engine { prog, bping, bpong, .. } = self;
+        bping.resize(prog.buf_len * bp, T::ZERO);
+        bpong.resize(prog.buf_len * bp, T::ZERO);
+        // Transpose in: position-major, lane-minor interleave.
+        for (lane, f) in frames.iter().enumerate() {
+            for (pos, &v) in f.iter().enumerate() {
+                bping[pos * bp + lane] = T::from_i64(v);
+            }
+        }
+        let mut src_is_ping = true;
+        for layer in &prog.layers {
+            if src_is_ping {
+                run_layer_batch(
+                    layer,
+                    &bping[..layer.in_len * bp],
+                    &mut bpong[..layer.out_len * bp],
+                    b,
+                    bp,
+                );
+            } else {
+                run_layer_batch(
+                    layer,
+                    &bpong[..layer.in_len * bp],
+                    &mut bping[..layer.out_len * bp],
+                    b,
+                    bp,
+                );
+            }
+            src_is_ping = !src_is_ping;
+        }
+        let res: &[T] = if src_is_ping {
+            &bping[..prog.out_len * bp]
+        } else {
+            &bpong[..prog.out_len * bp]
+        };
+        let mut outs = vec![Vec::with_capacity(prog.out_len); b];
+        for pos in 0..prog.out_len {
+            let lanes = &res[pos * bp..pos * bp + b];
+            for (out, &v) in outs.iter_mut().zip(lanes) {
+                out.push(v.to_i64());
+            }
+        }
+        Ok(outs)
     }
 }
 
@@ -391,6 +512,136 @@ fn run_layer<T: Cell>(layer: &CLayer<T>, src: &[T], dst: &mut [T], acc: &mut Vec
                 }
             }
             finalize(layer, a, &mut dst[..c_out]);
+        }
+    }
+}
+
+/// ReLU + requant epilogue for one accumulator tile: the scalar
+/// [`finalize`] applied to `len` lanes, so the fused epilogue logic lives
+/// in exactly one place.
+#[inline]
+fn store_tile<T: Cell>(layer: &CLayer<T>, acc: &[T; LANES], dst: &mut [T], len: usize) {
+    finalize(layer, &acc[..len], &mut dst[..len]);
+}
+
+/// One lowered layer over the whole batch: full [`LANES`]-wide tiles get
+/// a compile-time lane bound (the call below passes the literal, so the
+/// inlined tile unrolls), the tail tile reuses the same code with a
+/// runtime bound.
+fn run_layer_batch<T: Cell>(layer: &CLayer<T>, src: &[T], dst: &mut [T], b: usize, bp: usize) {
+    let full = b / LANES;
+    for c in 0..full {
+        run_layer_tile(layer, src, dst, bp, c * LANES, LANES);
+    }
+    let tail = b % LANES;
+    if tail > 0 {
+        run_layer_tile(layer, src, dst, bp, full * LANES, tail);
+    }
+}
+
+/// One lane tile of one layer. The accumulator is a `[T; LANES]` local,
+/// so a full tile keeps it in registers across the whole tap walk and
+/// every weight scalar is broadcast over the tile — the loop structure
+/// that makes the batch the innermost axis of each instruction. Per lane
+/// the accumulation order over (tap, channel) is exactly [`run_layer`]'s,
+/// and skipped zero terms (there: zero activations, here: zero weights)
+/// only ever drop additions of zero, so values stay bit-identical.
+#[inline]
+fn run_layer_tile<T: Cell>(
+    layer: &CLayer<T>,
+    src: &[T],
+    dst: &mut [T],
+    bp: usize,
+    off: usize,
+    len: usize,
+) {
+    let c_out = layer.c_out;
+    match layer.op {
+        COp::Conv => {
+            let c_in = layer.c_in;
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                for (co, &bias) in layer.bias.iter().enumerate() {
+                    let mut acc = [bias; LANES];
+                    for t in taps {
+                        let xb = t.x as usize * bp + off;
+                        let wb = t.w as usize + co;
+                        for ci in 0..c_in {
+                            let w = layer.weights[wb + ci * c_out];
+                            if w == T::ZERO {
+                                continue;
+                            }
+                            let xs = &src[xb + ci * bp..xb + ci * bp + LANES];
+                            for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                                *a += w * x;
+                            }
+                        }
+                    }
+                    store_tile(layer, &acc, &mut dst[(o + co) * bp + off..], len);
+                }
+                o += c_out;
+            }
+        }
+        COp::Depthwise => {
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                for (ch, &bias) in layer.bias.iter().enumerate() {
+                    let mut acc = [bias; LANES];
+                    for t in taps {
+                        let w = layer.weights[t.w as usize + ch];
+                        if w == T::ZERO {
+                            continue;
+                        }
+                        let xb = (t.x as usize + ch) * bp + off;
+                        let xs = &src[xb..xb + LANES];
+                        for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                            *a += w * x;
+                        }
+                    }
+                    store_tile(layer, &acc, &mut dst[(o + ch) * bp + off..], len);
+                }
+                o += c_out;
+            }
+        }
+        COp::MaxPool => {
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                for ch in 0..c_out {
+                    let mut acc = [T::FLOOR; LANES];
+                    for t in taps {
+                        let xb = (t.x as usize + ch) * bp + off;
+                        let xs = &src[xb..xb + LANES];
+                        for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                            if x > *a {
+                                *a = x;
+                            }
+                        }
+                    }
+                    // Pooling has no bias/ReLU/requant: emit maxima as-is.
+                    dst[(o + ch) * bp + off..(o + ch) * bp + off + len]
+                        .copy_from_slice(&acc[..len]);
+                }
+                o += c_out;
+            }
+        }
+        COp::Dense => {
+            for (u, &bias) in layer.bias.iter().enumerate() {
+                let mut acc = [bias; LANES];
+                for f in 0..layer.c_in {
+                    let w = layer.weights[f * c_out + u];
+                    if w == T::ZERO {
+                        continue;
+                    }
+                    let xs = &src[f * bp + off..f * bp + off + LANES];
+                    for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                        *a += w * x;
+                    }
+                }
+                store_tile(layer, &acc, &mut dst[u * bp + off..], len);
+            }
         }
     }
 }
@@ -827,5 +1078,70 @@ mod tests {
         let mut qm = QModel::synthetic(8, 4, 6, 3);
         qm.layers[1].in_shape = [9, 9, 4];
         assert!(CompiledPipeline::lower(&qm).is_err());
+    }
+
+    /// THE batched-tier contract: every batch size (full tiles, tail
+    /// tiles, the B = 1 scalar dispatch) is bit-identical per frame to
+    /// `execute`, on a model exercising every lowered kind.
+    #[test]
+    fn execute_batch_matches_execute_per_frame() {
+        let qm = mixed_qmodel(19);
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        let mut rng = Rng::new(20);
+        for b in [1usize, 2, 3, 7, 8, 9, 15, 16, 33] {
+            let frames: Vec<Vec<i64>> = (0..b).map(|_| rand_frame(&mut rng, 64)).collect();
+            let want: Vec<Vec<i64>> = frames
+                .iter()
+                .map(|f| engine.execute(f).unwrap().to_vec())
+                .collect();
+            let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+            let got = engine.execute_batch(&refs).unwrap();
+            assert_eq!(got, want, "batch size {b} diverged");
+        }
+    }
+
+    #[test]
+    fn execute_batch_wide_path_matches() {
+        let qm = wide_qmodel();
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert!(!engine.is_narrow());
+        let mut rng = Rng::new(21);
+        let frames: Vec<Vec<i64>> = (0..5).map(|_| rand_frame(&mut rng, 32)).collect();
+        let want: Vec<Vec<i64>> = frames
+            .iter()
+            .map(|f| engine.execute(f).unwrap().to_vec())
+            .collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(engine.execute_batch(&refs).unwrap(), want);
+    }
+
+    #[test]
+    fn execute_batch_rejects_any_malformed_frame() {
+        let qm = QModel::synthetic(8, 4, 6, 5);
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        assert!(engine.execute_batch(&[]).unwrap().is_empty());
+        let good = vec![1i64; 64];
+        let short = vec![1i64; 7];
+        let err = engine.execute_batch(&[good.as_slice(), short.as_slice()]).unwrap_err();
+        assert!(err.contains("batch frame 1"), "{err}");
+        let mut big = vec![0i64; 64];
+        big[3] = 4096;
+        assert!(engine.is_narrow());
+        assert!(engine
+            .execute_batch(&[good.as_slice(), big.as_slice(), good.as_slice()])
+            .is_err());
+    }
+
+    #[test]
+    fn validate_frame_mirrors_execute_screening() {
+        let qm = QModel::synthetic(8, 4, 6, 6);
+        let engine = CompiledPipeline::lower(&qm).unwrap();
+        let zeros = vec![0i64; 64];
+        assert!(engine.validate_frame(&zeros).is_ok());
+        assert!(engine.validate_frame(&[0; 7]).is_err());
+        let mut big = vec![0i64; 64];
+        big[0] = 1 << 20;
+        assert!(engine.is_narrow());
+        assert!(engine.validate_frame(&big).is_err());
     }
 }

@@ -149,7 +149,7 @@ impl Aggregator {
     }
 }
 
-/// Dense-layer oracle: y[n] = bias[n] + sum_m x[m] * w[n][m] (Eq. 7).
+/// Dense-layer oracle: `y[n] = bias[n] + sum_m x[m] * w[n][m]` (Eq. 7).
 pub fn dense_oracle(x: &[i64], w: &[Vec<i64>], bias: &[i64]) -> Vec<i64> {
     w.iter()
         .zip(bias.iter())

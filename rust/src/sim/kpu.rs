@@ -14,7 +14,7 @@
 use super::fifo::Fifo;
 
 /// Output of one KPU clock cycle. Borrows the KPU's scratch buffers so a
-/// tick performs no heap allocation (see EXPERIMENTS.md §Perf).
+/// tick performs no heap allocation.
 #[derive(Debug)]
 pub struct KpuOut<'a> {
     /// Combinational node values, flat k*k row-major: `node(u, v)` is the

@@ -146,8 +146,9 @@ impl PipelineSim {
     }
 
     /// Simulate `frames` (each a flat x_q of the model's input shape, HWC
-    /// row-major, int8-valued): values via the compiled engine, cycles via
-    /// the analytic schedule replay. Bit- and cycle-identical to
+    /// row-major, int8-valued): values via the compiled engine's batched
+    /// tier (one program traversal for the whole stream), cycles via the
+    /// analytic schedule replay. Bit- and cycle-identical to
     /// [`PipelineSim::run_interpreted`] (property-tested), but without
     /// re-deriving window indices, weight lookups, or schedule state per
     /// pixel.
@@ -160,9 +161,13 @@ impl PipelineSim {
             }
         }
         let mut engine = self.compiled.clone();
+        // Fixed-size batches keep the lane-interleaved scratch bounded on
+        // long streams (it scales with the batch size); per-frame values
+        // are independent, so chunking never changes them.
         let mut outputs = Vec::with_capacity(frames.len());
-        for f in frames {
-            outputs.push(engine.execute(f)?.to_vec());
+        for chunk in frames.chunks(64) {
+            let refs: Vec<&[i64]> = chunk.iter().map(|f| f.as_slice()).collect();
+            outputs.extend(engine.execute_batch(&refs)?);
         }
         let sched = self.schedule.run(frames.len());
         let stats = sched
@@ -381,7 +386,7 @@ fn step_layer(
         }
         QKind::Conv | QKind::DwConv | QKind::AvgPool => {
             let p = ql.p as isize;
-            // Hot loop (see EXPERIMENTS.md §Perf): accumulate all output
+            // Hot loop (see DESIGN.md §4): accumulate all output
             // channels of a pixel together so each (u, v) tap touches the
             // weight tensor contiguously ([ci][co] layout) and the inner
             // loop vectorises; skips multiplying zero activations (common

@@ -49,7 +49,7 @@ pub struct KpuTrace {
     pub node_names: Vec<String>,
     /// (u, v) of each observable node, matching `node_names`.
     pub node_pos: Vec<(usize, usize)>,
-    /// rows[t] = (input label, pad tuple, cells, y cell)
+    /// `rows[t]` = (input label, pad tuple, cells, y cell)
     pub rows: Vec<(String, String, Vec<TraceCell>, TraceCell)>,
 }
 

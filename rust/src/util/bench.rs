@@ -97,9 +97,10 @@ impl Bencher {
     }
 }
 
-/// One interpreter-vs-compiled throughput comparison row, shared by
-/// `benches/bench_pipeline.rs` and the `cnn-flow bench` CLI and persisted
-/// to `BENCH_pipeline.json` so the perf trajectory is tracked across PRs.
+/// One interpreter-vs-compiled-vs-batched throughput comparison row,
+/// shared by `benches/bench_pipeline.rs` and the `cnn-flow bench` CLI and
+/// persisted to `BENCH_pipeline.json` so the perf trajectory is tracked
+/// across PRs.
 #[derive(Debug, Clone)]
 pub struct EngineComparison {
     pub model: String,
@@ -107,6 +108,8 @@ pub struct EngineComparison {
     pub frames: usize,
     pub interp_median_ns: f64,
     pub compiled_median_ns: f64,
+    /// One `execute_batch` traversal over the same frames.
+    pub batched_median_ns: f64,
     /// Whether the lowering proved 32-bit lanes safe.
     pub narrow: bool,
 }
@@ -120,15 +123,25 @@ impl EngineComparison {
         self.frames as f64 / (self.compiled_median_ns * 1e-9)
     }
 
+    pub fn batched_fps(&self) -> f64 {
+        self.frames as f64 / (self.batched_median_ns * 1e-9)
+    }
+
     pub fn speedup(&self) -> f64 {
         self.interp_median_ns / self.compiled_median_ns
     }
+
+    /// Batched tier vs frame-at-a-time compiled execution.
+    pub fn batch_speedup(&self) -> f64 {
+        self.compiled_median_ns / self.batched_median_ns
+    }
 }
 
-/// Measure one lowered model both ways — the fused interpreter vs the
-/// compiled engine + closed-form schedule (iteration = one pass over
-/// `frames`) — after asserting the two paths agree bit- and
-/// cycle-exactly. Shared by `benches/bench_pipeline.rs` and the
+/// Measure one lowered model three ways — the fused interpreter, the
+/// compiled engine executing frame-at-a-time, and the compiled engine's
+/// batched tier traversing the program once for the whole group
+/// (iteration = one pass over `frames`) — after asserting all paths agree
+/// bit- and cycle-exactly. Shared by `benches/bench_pipeline.rs` and the
 /// `cnn-flow bench` CLI so BENCH_pipeline.json numbers stay comparable.
 pub fn compare_engines(
     b: &Bencher,
@@ -143,6 +156,10 @@ pub fn compare_engines(
         fast.total_cycles, oracle.total_cycles,
         "{name}: cycle divergence"
     );
+    let mut engine = sim.compiled.clone();
+    let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+    let batched = engine.execute_batch(&refs).expect("batched run failed");
+    assert_eq!(batched, oracle.outputs, "{name}: batched value divergence");
     let interp_median_ns = b.bench_throughput(
         &format!("{name}_interpreter/{}_frames", frames.len()),
         frames.len() as u64,
@@ -150,7 +167,6 @@ pub fn compare_engines(
             black_box(sim.run_interpreted(frames).unwrap());
         },
     );
-    let mut engine = sim.compiled.clone();
     let compiled_median_ns = b.bench_throughput(
         &format!("{name}_compiled/{}_frames", frames.len()),
         frames.len() as u64,
@@ -161,18 +177,27 @@ pub fn compare_engines(
             black_box(sim.predicted.total_cycles(frames.len()));
         },
     );
+    let batched_median_ns = b.bench_throughput(
+        &format!("{name}_batched/{}_frames", frames.len()),
+        frames.len() as u64,
+        || {
+            black_box(engine.execute_batch(&refs).unwrap());
+            black_box(sim.predicted.batched(frames.len()).total_cycles);
+        },
+    );
     EngineComparison {
         model: name,
         frames: frames.len(),
         interp_median_ns,
         compiled_median_ns,
+        batched_median_ns,
         narrow: sim.compiled.is_narrow(),
     }
 }
 
 /// Write the machine-readable benchmark report. Layout:
 /// `{"bench":"pipeline","models":[{model, frames, interp_fps,
-/// compiled_fps, speedup, narrow}, ...]}`.
+/// compiled_fps, batched_fps, speedup, batch_speedup, narrow}, ...]}`.
 pub fn write_pipeline_bench_json(
     path: &std::path::Path,
     comparisons: &[EngineComparison],
@@ -186,7 +211,9 @@ pub fn write_pipeline_bench_json(
                 ("frames", Json::from(c.frames)),
                 ("interp_fps", Json::from(c.interp_fps())),
                 ("compiled_fps", Json::from(c.compiled_fps())),
+                ("batched_fps", Json::from(c.batched_fps())),
                 ("speedup", Json::from(c.speedup())),
+                ("batch_speedup", Json::from(c.batch_speedup())),
                 ("narrow", Json::Bool(c.narrow)),
             ])
         })
@@ -240,10 +267,13 @@ mod tests {
             frames: 16,
             interp_median_ns: 8.0e6,
             compiled_median_ns: 1.0e6,
+            batched_median_ns: 0.5e6,
             narrow: true,
         };
         assert!((c.speedup() - 8.0).abs() < 1e-9);
         assert!((c.compiled_fps() - 16.0e6).abs() < 1.0);
+        assert!((c.batched_fps() - 32.0e6).abs() < 1.0);
+        assert!((c.batch_speedup() - 2.0).abs() < 1e-9);
         let path = std::env::temp_dir().join("cnn_flow_bench_pipeline_test.json");
         write_pipeline_bench_json(&path, &[c]).unwrap();
         let parsed =
@@ -252,6 +282,7 @@ mod tests {
         let row = &parsed.get("models").as_arr().unwrap()[0];
         assert_eq!(row.get("model").as_str(), Some("synthetic"));
         assert!((row.get("speedup").as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert!((row.get("batch_speedup").as_f64().unwrap() - 2.0).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
     }
 

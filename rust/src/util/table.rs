@@ -91,7 +91,7 @@ impl Table {
         out
     }
 
-    /// Render as CSV (for EXPERIMENTS.md ingestion / plotting).
+    /// Render as CSV (for downstream ingestion / plotting).
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {

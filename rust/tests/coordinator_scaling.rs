@@ -28,10 +28,10 @@ fn concurrent_load_is_bit_identical_to_single_sim() {
             qm,
             ServerConfig {
                 workers: 4,
-                batch: 4,
+                max_batch: 4,
                 queue_depth: 128,
                 verify_every: 0,
-                batch_window: Duration::from_millis(1),
+                batch_deadline: Duration::from_millis(1),
                 ..Default::default()
             },
             None,
@@ -72,10 +72,10 @@ fn queue_overflow_rejects_and_counters_reconcile() {
         qm,
         ServerConfig {
             workers: 2,
-            batch: 1,
+            max_batch: 1,
             queue_depth: 1,
             verify_every: 0,
-            batch_window: Duration::from_millis(0),
+            batch_deadline: Duration::from_millis(0),
             ..Default::default()
         },
         None,
@@ -121,10 +121,10 @@ fn simulated_throughput_scales_with_workers() {
             qm.clone(),
             ServerConfig {
                 workers,
-                batch: 1,
+                max_batch: 1,
                 queue_depth: 16,
                 verify_every: 0,
-                batch_window: Duration::from_millis(0),
+                batch_deadline: Duration::from_millis(0),
                 ..Default::default()
             },
             None,
@@ -168,10 +168,10 @@ fn scaling_preserves_bit_exactness_via_loadgen() {
             qm.clone(),
             ServerConfig {
                 workers,
-                batch: 6,
+                max_batch: 6,
                 queue_depth: 32,
                 verify_every: 0,
-                batch_window: Duration::from_micros(500),
+                batch_deadline: Duration::from_micros(500),
                 ..Default::default()
             },
             None,
@@ -191,4 +191,102 @@ fn scaling_preserves_bit_exactness_via_loadgen() {
         assert_eq!(shard_sum, m.completed, "workers={workers}");
         assert!(m.p50 <= m.p99, "workers={workers}");
     }
+}
+
+#[test]
+fn batch_metrics_reconcile_under_seeded_trace() {
+    // Micro-batch accounting must reconcile exactly for every worker
+    // count: the summed batch occupancies equal the completed requests
+    // (no frame counted twice, none dropped), the flush-reason counters
+    // and the occupancy histogram both sum to the batch count, and the
+    // same invariants hold per shard.
+    let qm = fixture();
+    let trace = loadgen::Trace::seeded(0xBA7C, 72, 64, 1);
+    for workers in [1usize, 3] {
+        let mut server = Server::start(
+            qm.clone(),
+            ServerConfig {
+                workers,
+                max_batch: 5,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_micros(200),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let report = loadgen::replay(&server, &trace, 12, None);
+        assert_eq!(report.ok, 72, "workers={workers}");
+        server.drain();
+        let m = server.metrics();
+        assert_eq!(m.completed, 72, "workers={workers}");
+        assert_eq!(m.errored, 0, "workers={workers}");
+        assert_eq!(
+            m.occupancy_frames,
+            m.completed,
+            "workers={workers}: sum(batch occupancies) != completed"
+        );
+        assert_eq!(
+            m.flush_full + m.flush_deadline + m.flush_drain,
+            m.batches,
+            "workers={workers}: flush reasons must partition the batches"
+        );
+        let hist_batches: u64 = m.batch_occupancy.iter().sum();
+        assert_eq!(hist_batches, m.batches, "workers={workers}");
+        // Sizes tracked exactly below the overflow bucket reconstruct the
+        // frame total (max_batch = 5 stays far below OCC_BUCKETS).
+        let hist_frames: u64 = m
+            .batch_occupancy
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        assert_eq!(hist_frames, m.occupancy_frames, "workers={workers}");
+        for s in server.shard_metrics() {
+            assert_eq!(s.occupancy_frames, s.completed, "shard {}", s.shard);
+            assert_eq!(
+                s.flush_full + s.flush_deadline + s.flush_drain,
+                s.batches,
+                "shard {}",
+                s.shard
+            );
+        }
+    }
+}
+
+#[test]
+fn drain_on_shutdown_partial_batch_is_accounted() {
+    // Queue K < max_batch requests with a deadline far in the future,
+    // then shut down: the worker is still accumulating when the shutdown
+    // marker arrives, so the whole group flushes as ONE drain batch of
+    // exactly K frames — and the occupancy metrics must include it.
+    let qm = fixture();
+    let server = Server::start(
+        qm,
+        ServerConfig {
+            workers: 1,
+            max_batch: 16,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::from_secs(30),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let frame = vec![1i64; 64];
+    let pendings: Vec<Pending> = (0..5)
+        .map(|_| server.submit(frame.clone()).unwrap())
+        .collect();
+    let m = server.shutdown();
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.batches, 1, "one partial drain batch expected");
+    assert_eq!(m.occupancy_frames, 5, "partial batch must be accounted");
+    assert_eq!(m.flush_drain, 1);
+    assert_eq!(m.flush_full + m.flush_deadline, 0);
+    assert_eq!(m.batch_occupancy[4], 1, "occupancy bucket for size 5");
 }

@@ -50,7 +50,7 @@ fn serve_fixture_stream_bit_identical() {
         qm,
         ServerConfig {
             workers: 3,
-            batch: 8,
+            max_batch: 8,
             queue_depth: 64,
             verify_every: 0,
             ..Default::default()
@@ -80,7 +80,7 @@ fn serve_fixture_concurrent_clients() {
             qm,
             ServerConfig {
                 workers: 4,
-                batch: 4,
+                max_batch: 4,
                 queue_depth: 256,
                 verify_every: 0,
                 ..Default::default()
@@ -190,7 +190,7 @@ fn serve_digits_artifact_bit_identical_no_pjrt_needed() {
         qm.clone(),
         ServerConfig {
             workers: 2,
-            batch: 8,
+            max_batch: 8,
             verify_every: 0,
             ..Default::default()
         },
@@ -250,7 +250,7 @@ fn serve_with_live_golden_verification() {
             qm.clone(),
             ServerConfig {
                 workers: 2,
-                batch: 8,
+                max_batch: 8,
                 verify_every: 2, // verify half of all requests
                 ..Default::default()
             },

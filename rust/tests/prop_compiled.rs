@@ -176,6 +176,65 @@ fn compiled_values_match_interpreter() {
 }
 
 #[test]
+fn execute_batch_bit_identical_to_execute() {
+    // The batched tier's contract (DESIGN.md §6): for random models
+    // mixing conv/dwconv/pool/dense and any batch size — full lane
+    // tiles, ragged tails, the B = 1 dispatch — `execute_batch` is
+    // bit-identical per frame to `execute` (and so to the interpreter).
+    prop_check(30, 0xBA7C, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        let mut engine = CompiledPipeline::lower(&qm)?;
+        for b in [1usize, 3, 8, 13] {
+            let frames = rand_frames(rng, b, len);
+            let mut want = Vec::with_capacity(b);
+            for f in &frames {
+                want.push(engine.execute(f)?.to_vec());
+            }
+            let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+            let got = engine.execute_batch(&refs)?;
+            prop_assert_eq!(&got, &want, "batch B={b} diverged from execute");
+            let oracle = sim.run_interpreted(&frames)?;
+            prop_assert_eq!(got, oracle.outputs, "batch B={b} diverged from the interpreter");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_prediction_divergence_is_zero_at_any_size() {
+    // Closed-form batched cycle figures must equal the exact schedule
+    // replay at every batch size (the serving tier's cycle contract).
+    prop_check(20, 0xBA7D, |rng| {
+        let qm = random_qmodel(rng);
+        let sim = PipelineSim::new(qm, None)?;
+        for b in [1usize, 2, 5, 9, 33] {
+            let bp = sim.predicted.batched(b);
+            let replay = sim.schedule.run(b);
+            prop_assert!(bp.exact, "full-rate model must certify exact batch figures (B={b})");
+            prop_assert_eq!(
+                bp.total_cycles,
+                replay.total_cycles,
+                "batched total_cycles diverged (B={b})"
+            );
+            prop_assert_eq!(
+                bp.steady_cycles_per_frame,
+                replay.cycles_per_frame,
+                "batched cycles/frame diverged (B={b})"
+            );
+            for (u, s) in bp.utilization.iter().zip(&replay.stats) {
+                prop_assert!(
+                    (u - s.utilization).abs() < 1e-12,
+                    "batched utilisation diverged (B={b})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn schedule_matches_interpreter_exactly() {
     prop_check(40, 0xC0F2, |rng| {
         let qm = random_qmodel(rng);

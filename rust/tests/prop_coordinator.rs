@@ -53,10 +53,10 @@ fn routing_every_request_gets_its_own_answer() {
             Server::start(
                 probe_model(n),
                 ServerConfig {
-                    batch,
+                    max_batch: batch,
                     queue_depth: 1024,
                     verify_every: 0,
-                    batch_window: Duration::from_millis(2),
+                    batch_deadline: Duration::from_millis(2),
                     ..Default::default()
                 },
                 None,
@@ -101,10 +101,10 @@ fn batching_respects_group_bound() {
             Server::start(
                 probe_model(4),
                 ServerConfig {
-                    batch,
+                    max_batch: batch,
                     queue_depth: 512,
                     verify_every: 0,
-                    batch_window: Duration::from_millis(10),
+                    batch_deadline: Duration::from_millis(10),
                     ..Default::default()
                 },
                 None,
@@ -140,10 +140,10 @@ fn metrics_account_for_backpressure() {
             Server::start(
                 probe_model(4),
                 ServerConfig {
-                    batch: 1,
+                    max_batch: 1,
                     queue_depth: 1,
                     verify_every: 0,
-                    batch_window: Duration::from_millis(0),
+                    batch_deadline: Duration::from_millis(0),
                     ..Default::default()
                 },
                 None,
