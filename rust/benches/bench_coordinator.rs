@@ -11,9 +11,16 @@
 //! Output is grep-stable: one `BENCH coordinator/...` line per
 //! configuration.
 
+//! A second, mixed-traffic case replays one seeded **heterogeneous**
+//! trace (three serving-zoo models) through a multi-model server with
+//! per-model shard groups, checks every response against each model's own
+//! golden sim, and reports per-model + aggregate figures — one `BENCH
+//! coordinator/mixed/...` line per model.
+
 use std::time::{Duration, Instant};
 
 use cnn_flow::coordinator::{loadgen, Server, ServerConfig};
+use cnn_flow::model::zoo;
 use cnn_flow::quant::QModel;
 use cnn_flow::sim::pipeline::PipelineSim;
 
@@ -76,4 +83,77 @@ fn main() {
         }
     }
     println!("OK: simulated throughput scales with worker count");
+
+    // --- mixed-traffic multi-model case --------------------------------
+    let zoo_models = [zoo::digits_cnn(), zoo::mobilenet_micro(), zoo::vgg_micro()];
+    let mut sims: Vec<(String, PipelineSim)> = Vec::new();
+    for (i, m) in zoo_models.iter().enumerate() {
+        let qm = QModel::synthesize(m, 0xBEA7 + i as u64).unwrap();
+        sims.push((m.name.clone(), PipelineSim::new(qm, None).unwrap()));
+    }
+    let specs: Vec<(String, usize)> = sims
+        .iter()
+        .map(|(id, sim)| (id.clone(), sim.input_len()))
+        .collect();
+    let trace = loadgen::MultiTrace::seeded(0x317D, 192, &specs, 0);
+    let golden_refs: Vec<&PipelineSim> = sims.iter().map(|(_, s)| s).collect();
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+    let bundles: Vec<(String, PipelineSim)> = sims
+        .iter()
+        .map(|(id, sim)| (id.clone(), sim.clone()))
+        .collect();
+    let mut server = Server::start_multi(
+        bundles,
+        ServerConfig {
+            workers: 2, // per model: 3 groups x 2 shards
+            max_batch: 8,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::from_micros(200),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let started = Instant::now();
+    let report = loadgen::replay_multi(&server, &trace, 24, Some(&expected));
+    let wall = started.elapsed();
+    server.drain();
+    let m = server.metrics();
+    assert_eq!(report.aggregate.ok, 192, "mixed: not all requests served");
+    assert_eq!(
+        report.aggregate.mismatched, 0,
+        "mixed: responses diverged from the per-model golden sims"
+    );
+    assert_eq!(m.completed, 192);
+    assert_eq!(
+        m.occupancy_frames,
+        m.completed + m.errored,
+        "mixed: batch accounting must reconcile"
+    );
+    for (mm, rep) in server.model_metrics().iter().zip(&report.per_model) {
+        assert_eq!(
+            mm.metrics.completed, rep.ok,
+            "mixed: {} completed != replay ok",
+            mm.model
+        );
+        println!(
+            "BENCH coordinator/mixed/{} completed={} batches={} mean_batch={:.1} \
+             aggregate={:.3}M inf/s p99={:?}",
+            mm.model,
+            mm.metrics.completed,
+            mm.metrics.batches,
+            mm.metrics.mean_batch,
+            mm.metrics.aggregate_fps / 1e6,
+            mm.metrics.p99,
+        );
+    }
+    println!(
+        "BENCH coordinator/mixed/aggregate wall={wall:?} completed={} \
+         aggregate={:.3}M inf/s models={}",
+        m.completed,
+        m.aggregate_fps / 1e6,
+        m.models,
+    );
+    println!("OK: mixed 3-model traffic served bit-exactly with reconciled metrics");
 }

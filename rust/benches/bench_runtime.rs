@@ -14,8 +14,8 @@ fn main() {
         println!("artifacts not built; skipping runtime benches");
         return;
     }
-    if cfg!(not(feature = "pjrt")) {
-        println!("pjrt feature disabled; skipping runtime benches");
+    if cfg!(not(feature = "pjrt-xla")) {
+        println!("pjrt-xla backend disabled; skipping runtime benches");
         return;
     }
     let rt = Runtime::cpu().expect("PJRT CPU client");

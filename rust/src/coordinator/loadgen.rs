@@ -65,17 +65,22 @@ impl Trace {
     }
 }
 
-/// Golden outputs for a trace: every frame through one `PipelineSim`
-/// individually — the single-pipeline golden path that sharded serving
-/// must reproduce bit-for-bit (pass the result to [`replay`]).
+/// Golden outputs for a trace: every frame through one `PipelineSim`'s
+/// **fused interpreter** individually (`run_interpreted`) — the
+/// single-pipeline golden path that sharded serving must reproduce
+/// bit-for-bit (pass the result to [`replay`]). Like
+/// [`golden_outputs_multi`], the oracle is deliberately NOT the compiled
+/// tier the server executes by default, so a value bug in the
+/// compiled/batched path cannot corrupt responses and expectations
+/// identically.
 pub fn golden_outputs(sim: &PipelineSim, trace: &Trace) -> Vec<Vec<i64>> {
     trace
         .requests
         .iter()
         .map(|r| {
             let mut res = sim
-                .run(std::slice::from_ref(&r.frame))
-                .expect("golden sim run failed");
+                .run_interpreted(std::slice::from_ref(&r.frame))
+                .expect("golden interpreter run failed");
             res.outputs.swap_remove(0)
         })
         .collect()
@@ -99,56 +104,218 @@ pub struct LoadReport {
 /// settles everything outstanding first (tick barrier). When `expected`
 /// is given, response `i` must equal `expected[i]` bit-for-bit or it is
 /// counted as mismatched.
+///
+/// This is the single-model view of the shared `replay_core` loop — the
+/// trace is viewed as a one-model request stream targeting the server's
+/// first (default) group, so this and [`replay_multi`] can never drift
+/// apart semantically. Only borrows are collected here; frames are
+/// cloned once, at submission, like every other path.
 pub fn replay(
     server: &Server,
     trace: &Trace,
     window: usize,
     expected: Option<&[Vec<i64>]>,
 ) -> LoadReport {
+    let model = server
+        .models()
+        .into_iter()
+        .next()
+        .expect("server has at least one model group");
+    let requests: Vec<(u64, usize, &[i64])> = trace
+        .requests
+        .iter()
+        .map(|r| (r.at_tick, 0, r.frame.as_slice()))
+        .collect();
+    replay_core(server, &[model], &requests, window, expected).aggregate
+}
+
+// ---------------------------------------------------------------------
+// Heterogeneous (multi-model) traces.
+// ---------------------------------------------------------------------
+
+/// One request of a heterogeneous trace: a virtual arrival tick, the
+/// index of its model in [`MultiTrace::models`], and the input frame
+/// (already sized for that model).
+#[derive(Debug, Clone)]
+pub struct MultiTraceRequest {
+    pub at_tick: u64,
+    pub model: usize,
+    pub frame: Vec<i64>,
+}
+
+/// A deterministic mixed-traffic trace over several models: every frame,
+/// arrival tick **and model assignment** derives from one seed, so two
+/// replays see byte-identical request streams — including identical
+/// per-model request counts.
+#[derive(Debug, Clone)]
+pub struct MultiTrace {
+    /// Model ids, in the order [`MultiTraceRequest::model`] indexes.
+    pub models: Vec<String>,
+    pub requests: Vec<MultiTraceRequest>,
+}
+
+impl MultiTrace {
+    /// Generate `n` requests over `models` (`(model id, input frame
+    /// length)` pairs). Each request picks its model uniformly from the
+    /// same seeded stream that shapes arrivals and frames; gaps are
+    /// uniform in `[0, 2 * mean_gap_ticks]` virtual ticks, as in
+    /// [`Trace::seeded`].
+    pub fn seeded(
+        seed: u64,
+        n: usize,
+        models: &[(String, usize)],
+        mean_gap_ticks: u64,
+    ) -> MultiTrace {
+        assert!(!models.is_empty(), "MultiTrace needs at least one model");
+        let mut rng = Rng::new(seed);
+        let mut tick = 0u64;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            tick += rng.below(2 * mean_gap_ticks + 1);
+            let model = rng.below(models.len() as u64) as usize;
+            let frame: Vec<i64> = (0..models[model].1).map(|_| rng.int8() as i64).collect();
+            requests.push(MultiTraceRequest {
+                at_tick: tick,
+                model,
+                frame,
+            });
+        }
+        MultiTrace {
+            models: models.iter().map(|(id, _)| id.clone()).collect(),
+            requests,
+        }
+    }
+
+    /// Requests per model, indexed like [`MultiTrace::models`].
+    pub fn per_model_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.models.len()];
+        for r in &self.requests {
+            counts[r.model] += 1;
+        }
+        counts
+    }
+}
+
+/// Golden outputs for a heterogeneous trace: every frame through its own
+/// model's **fused interpreter** individually
+/// (`PipelineSim::run_interpreted`; `sims` indexed like
+/// [`MultiTrace::models`]). The oracle engine is deliberately NOT the
+/// compiled tier the server executes by default, so a value bug in the
+/// compiled/batched path cannot corrupt the expected outputs the same
+/// way it corrupts the responses — multi-model serving must reproduce
+/// the per-model interpreter replay bit-for-bit.
+pub fn golden_outputs_multi(sims: &[&PipelineSim], trace: &MultiTrace) -> Vec<Vec<i64>> {
+    assert_eq!(sims.len(), trace.models.len(), "one sim per trace model");
+    trace
+        .requests
+        .iter()
+        .map(|r| {
+            let mut res = sims[r.model]
+                .run_interpreted(std::slice::from_ref(&r.frame))
+                .expect("golden interpreter run failed");
+            res.outputs.swap_remove(0)
+        })
+        .collect()
+}
+
+/// Outcome counts of one heterogeneous replay: the aggregate plus one
+/// [`LoadReport`] per model (indexed like [`MultiTrace::models`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MultiLoadReport {
+    pub aggregate: LoadReport,
+    pub per_model: Vec<LoadReport>,
+}
+
+/// Replay a heterogeneous `trace` against a multi-model `server` with the
+/// same virtual-clock semantics as [`replay`] (tick barriers, bounded
+/// in-flight window), dispatching every request to its model's shard
+/// group via `Server::submit_to`. When `expected` is given (indexed like
+/// `trace.requests`), response `i` must equal `expected[i]` bit-for-bit
+/// or it counts as mismatched — both in the aggregate and in its model's
+/// report.
+pub fn replay_multi(
+    server: &Server,
+    trace: &MultiTrace,
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+) -> MultiLoadReport {
+    let requests: Vec<(u64, usize, &[i64])> = trace
+        .requests
+        .iter()
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice()))
+        .collect();
+    replay_core(server, &trace.models, &requests, window, expected)
+}
+
+/// The shared virtual-clock replay loop behind [`replay`] and
+/// [`replay_multi`]: requests are `(arrival tick, model index, frame)`
+/// borrows, submitted to `models[model index]`'s shard group in arrival
+/// order with a bounded in-flight window; arrival ticks are barriers
+/// (everything outstanding settles before the clock advances).
+fn replay_core(
+    server: &Server,
+    models: &[String],
+    requests: &[(u64, usize, &[i64])],
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+) -> MultiLoadReport {
     fn settle(
         idx: usize,
+        model: usize,
         pending: Pending,
         expected: Option<&[Vec<i64>]>,
-        report: &mut LoadReport,
+        report: &mut MultiLoadReport,
     ) {
         match pending.wait() {
             Ok(resp) => {
-                report.ok += 1;
+                report.aggregate.ok += 1;
+                report.per_model[model].ok += 1;
                 if let Some(exp) = expected {
                     if resp.logits != exp[idx] {
-                        report.mismatched += 1;
+                        report.aggregate.mismatched += 1;
+                        report.per_model[model].mismatched += 1;
                     }
                 }
             }
-            Err(_) => report.dropped += 1,
+            Err(_) => {
+                report.aggregate.dropped += 1;
+                report.per_model[model].dropped += 1;
+            }
         }
     }
 
     let window = window.max(1);
-    let mut report = LoadReport::default();
-    let mut inflight: VecDeque<(usize, Pending)> = VecDeque::new();
-    let mut clock = trace.requests.first().map(|r| r.at_tick).unwrap_or(0);
-    for (i, req) in trace.requests.iter().enumerate() {
+    let mut report = MultiLoadReport {
+        aggregate: LoadReport::default(),
+        per_model: vec![LoadReport::default(); models.len()],
+    };
+    let mut inflight: VecDeque<(usize, usize, Pending)> = VecDeque::new();
+    let mut clock = requests.first().map(|&(tick, _, _)| tick).unwrap_or(0);
+    for (i, &(at_tick, model, frame)) in requests.iter().enumerate() {
         // Tick barrier: the virtual clock only advances once every
         // request from earlier ticks has been answered.
-        if req.at_tick != clock {
-            clock = req.at_tick;
-            while let Some((idx, p)) = inflight.pop_front() {
-                settle(idx, p, expected, &mut report);
+        if at_tick != clock {
+            clock = at_tick;
+            while let Some((idx, m, p)) = inflight.pop_front() {
+                settle(idx, m, p, expected, &mut report);
             }
         }
         while inflight.len() >= window {
-            let (idx, p) = inflight.pop_front().unwrap();
-            settle(idx, p, expected, &mut report);
+            let (idx, m, p) = inflight.pop_front().unwrap();
+            settle(idx, m, p, expected, &mut report);
         }
-        report.submitted += 1;
-        match server.submit(req.frame.clone()) {
-            Ok(p) => inflight.push_back((i, p)),
-            Err(_) => report.rejected += 1,
+        report.aggregate.submitted += 1;
+        report.per_model[model].submitted += 1;
+        match server.submit_to(&models[model], frame.to_vec()) {
+            Ok(p) => inflight.push_back((i, model, p)),
+            Err(_) => {
+                report.aggregate.rejected += 1;
+                report.per_model[model].rejected += 1;
+            }
         }
     }
-    while let Some((idx, p)) = inflight.pop_front() {
-        settle(idx, p, expected, &mut report);
+    while let Some((idx, m, p)) = inflight.pop_front() {
+        settle(idx, m, p, expected, &mut report);
     }
     report
 }
@@ -186,5 +353,36 @@ mod tests {
     fn zero_gap_trace_is_a_burst() {
         let t = Trace::seeded(1, 16, 4, 0);
         assert!(t.requests.iter().all(|r| r.at_tick == 0));
+    }
+
+    #[test]
+    fn multi_traces_are_deterministic_per_seed() {
+        let specs = [("a".to_string(), 4usize), ("b".to_string(), 9)];
+        let x = MultiTrace::seeded(7, 48, &specs, 2);
+        let y = MultiTrace::seeded(7, 48, &specs, 2);
+        assert_eq!(x.models, y.models);
+        assert_eq!(x.per_model_counts(), y.per_model_counts());
+        for (rx, ry) in x.requests.iter().zip(&y.requests) {
+            assert_eq!(rx.at_tick, ry.at_tick);
+            assert_eq!(rx.model, ry.model);
+            assert_eq!(rx.frame, ry.frame);
+        }
+        let z = MultiTrace::seeded(8, 48, &specs, 2);
+        assert_ne!(
+            x.requests.iter().map(|r| r.model).collect::<Vec<_>>(),
+            z.requests.iter().map(|r| r.model).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn multi_trace_frames_sized_per_model_and_counts_reconcile() {
+        let specs = [("small".to_string(), 3usize), ("big".to_string(), 12)];
+        let t = MultiTrace::seeded(11, 64, &specs, 1);
+        for r in &t.requests {
+            assert_eq!(r.frame.len(), specs[r.model].1);
+        }
+        let counts = t.per_model_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 64);
+        assert!(counts.iter().all(|&c| c > 0), "both models drawn: {counts:?}");
     }
 }

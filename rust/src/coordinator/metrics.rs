@@ -119,16 +119,26 @@ pub fn quantile(counts: &[u64; BUCKETS], q: f64) -> Duration {
     Duration::from_nanos(bucket_upper_ns(BUCKETS - 1))
 }
 
-/// Intake- and verifier-side counters, shared across the whole server.
+/// Server-global counters: the golden verifier's tallies plus requests
+/// refused because no route matched their model tag. Intake counters
+/// (accepted/rejected/spilled) live per model group in
+/// [`IntakeMetrics`] since the multi-model split.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    pub verified: AtomicU64,
+    pub mismatches: AtomicU64,
+    /// Tagged submissions naming a model the server has no route for.
+    pub unrouted: AtomicU64,
+}
+
+/// Per-model-group intake counters (one instance per shard group).
+#[derive(Debug, Default)]
+pub struct IntakeMetrics {
     pub accepted: AtomicU64,
     pub rejected: AtomicU64,
     /// Requests placed on a shard other than their round-robin preference
-    /// (backpressure-aware spill).
+    /// (backpressure-aware spill, always within the model's own group).
     pub spilled: AtomicU64,
-    pub verified: AtomicU64,
-    pub mismatches: AtomicU64,
 }
 
 /// Per-shard serving counters, owned by exactly one worker thread.
@@ -171,9 +181,12 @@ pub struct ShardMetrics {
 }
 
 /// A point-in-time view of one shard.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardSnapshot {
     pub shard: usize,
+    /// Model id this shard serves (its group's route key; filled in by
+    /// `Server::shard_metrics`).
+    pub model: String,
     pub completed: u64,
     pub batches: u64,
     pub busy_cycles: u64,
@@ -195,6 +208,7 @@ impl ShardMetrics {
         let batches = self.batches.load(Ordering::Relaxed);
         ShardSnapshot {
             shard,
+            model: String::new(),
             completed,
             batches,
             busy_cycles: self.busy_cycles.load(Ordering::Relaxed),
@@ -210,13 +224,19 @@ impl ShardMetrics {
     }
 }
 
-/// A point-in-time view of the whole server (all shards merged).
+/// A point-in-time view of the whole server (all shards merged), or —
+/// via `Server::model_metrics` — of one model's shard group.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
     pub workers: usize,
+    /// Model groups covered by this snapshot (1 for a per-model view).
+    pub models: usize,
     pub accepted: u64,
     pub rejected: u64,
     pub spilled: u64,
+    /// Tagged submissions naming an unknown model (server-global; 0 in
+    /// per-model views).
+    pub unrouted: u64,
     pub completed: u64,
     pub batches: u64,
     pub verified: u64,
@@ -254,6 +274,18 @@ pub struct MetricsSnapshot {
     /// over the simulated makespan (max busy cycles across shards) — this
     /// is the number that scales with the worker count.
     pub aggregate_fps: f64,
+}
+
+/// One model's metrics view: the group's route key plus a
+/// [`MetricsSnapshot`] restricted to that group's intake and shards
+/// (DESIGN.md §7 — per-model and aggregate views reconcile exactly:
+/// summing per-model counters over all models reproduces the aggregate,
+/// except the server-global verifier/unrouted counters, which per-model
+/// views report as 0).
+#[derive(Debug, Clone)]
+pub struct ModelMetricsSnapshot {
+    pub model: String,
+    pub metrics: MetricsSnapshot,
 }
 
 #[cfg(test)]

@@ -38,7 +38,17 @@
 //!   shutdown marker *behind* every already-accepted request (FIFO), joins
 //!   the workers once they have answered everything, then joins the
 //!   verifier after its queue disconnects and drains. No sleeps, no
-//!   dropped accepted requests — the final snapshot is deterministic.
+//!   dropped accepted requests — the final snapshot is deterministic;
+//! * **multi-model routing** — [`Server::start_multi`] hosts several
+//!   heterogeneous models behind one intake: each model id owns a *shard
+//!   group* (its shards clone that model's pre-lowered pipeline, with the
+//!   per-group worker count taken from the [`ServerConfig::routes`]
+//!   table), tagged requests ([`Server::submit_to`] /
+//!   [`Server::infer_to`]) are dispatched round-robin *within* their
+//!   model's group (spill never crosses models — the pipelines differ),
+//!   and metrics split into per-model views ([`Server::model_metrics`])
+//!   next to the aggregate snapshot. Lowering is amortized across servers
+//!   by [`crate::runtime::ModelRegistry`] (DESIGN.md §7).
 //!
 //! Threads (std::thread — tokio is not vendored in this offline image):
 //! callers block on [`Server::infer`] (or hold a [`Pending`] from
@@ -63,8 +73,8 @@ use crate::quant::QModel;
 use crate::sim::compiled::CompiledPipeline;
 use crate::sim::pipeline::PipelineSim;
 
-pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
-use metrics::ShardMetrics;
+pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot, ShardSnapshot};
+use metrics::{IntakeMetrics, ShardMetrics};
 
 /// Which execution engine the worker shards run (DESIGN.md §4/§5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -79,6 +89,59 @@ pub enum EngineKind {
     /// cross-checks the closed-form cycle prediction live
     /// (`MetricsSnapshot::cycle_divergence`).
     Interpreter,
+}
+
+impl EngineKind {
+    /// The engine named by `$CNN_FLOW_ENGINE` (`compiled`, or `interp` /
+    /// `interpreter`). CI's interpreter matrix leg forces the oracle
+    /// engine through every default-configured test this way, so both
+    /// engines stay green. Unset or empty means "no override"; an
+    /// unrecognized non-empty value **panics** — silently falling back
+    /// to the compiled default would turn a typo in the CI matrix into a
+    /// leg that tests the wrong engine while staying green.
+    pub fn from_env() -> Option<EngineKind> {
+        let raw = std::env::var("CNN_FLOW_ENGINE").ok()?;
+        if raw.is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Some(engine) => Some(engine),
+            None => panic!(
+                "CNN_FLOW_ENGINE='{raw}' is not a recognized engine \
+                 (expected compiled | interp | interpreter)"
+            ),
+        }
+    }
+
+    /// Parse an engine name (`compiled`, `interp`, `interpreter`;
+    /// case-insensitive) — shared by the env override and the CLI's
+    /// `--engine` flag.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "interp" | "interpreter" => Some(EngineKind::Interpreter),
+            "compiled" => Some(EngineKind::Compiled),
+            _ => None,
+        }
+    }
+
+    /// [`EngineKind::from_env`], falling back to the compiled default.
+    /// This is what `ServerConfig::default()` uses — which means every
+    /// config built with `..Default::default()` reads the env var (and
+    /// panics on an unrecognized value) even when it then overrides
+    /// `engine` explicitly: the override wins for execution, but a
+    /// malformed `$CNN_FLOW_ENGINE` is a config error everywhere.
+    pub fn default_from_env() -> EngineKind {
+        Self::from_env().unwrap_or_default()
+    }
+}
+
+/// One row of the multi-model route table: how many worker shards the
+/// named model's group gets in [`Server::start_multi`]. Models without a
+/// route fall back to [`ServerConfig::workers`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelRoute {
+    pub model: String,
+    pub workers: usize,
 }
 
 /// Server configuration.
@@ -102,8 +165,14 @@ pub struct ServerConfig {
     /// *oldest* request has been waiting this long since enqueue (so the
     /// added batching latency is capped per request, not per group).
     pub batch_deadline: Duration,
-    /// Value/cycle engine the shards execute (compiled by default).
+    /// Value/cycle engine the shards execute (compiled by default; the
+    /// default honours `$CNN_FLOW_ENGINE`, see [`EngineKind::from_env`]).
     pub engine: EngineKind,
+    /// Multi-model route table: per-model worker counts consulted by
+    /// [`Server::start_multi`]. Models not listed here get
+    /// [`ServerConfig::workers`] shards. Ignored by the single-model
+    /// constructors beyond their own model's entry.
+    pub routes: Vec<ModelRoute>,
 }
 
 impl Default for ServerConfig {
@@ -115,8 +184,22 @@ impl Default for ServerConfig {
             verify_every: 8,
             clock_hz: 600.0e6, // the paper's JSC designs close ~600 MHz
             batch_deadline: Duration::from_millis(1),
-            engine: EngineKind::Compiled,
+            engine: EngineKind::default_from_env(),
+            routes: Vec::new(),
         }
+    }
+}
+
+impl ServerConfig {
+    /// Worker-shard count for `model`: its route-table entry, or the
+    /// global `workers` default (always at least 1).
+    pub fn route_workers(&self, model: &str) -> usize {
+        self.routes
+            .iter()
+            .find(|r| r.model == model)
+            .map(|r| r.workers)
+            .unwrap_or(self.workers)
+            .max(1)
     }
 }
 
@@ -174,10 +257,18 @@ struct Shard {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
-/// The running sharded server.
-pub struct Server {
+/// One model's shard group: the shards serving its pre-lowered pipeline,
+/// that model's round-robin cursor, and its intake counters.
+struct Group {
+    model: String,
     shards: Vec<Shard>,
     rr: AtomicUsize,
+    intake: IntakeMetrics,
+}
+
+/// The running sharded server (one or many models).
+pub struct Server {
+    groups: Vec<Group>,
     metrics: Arc<Metrics>,
     verifier: Option<std::thread::JoinHandle<()>>,
     config: ServerConfig,
@@ -200,41 +291,85 @@ impl Server {
     }
 
     /// Like [`Server::start`] but over an already planned-and-lowered
-    /// pipeline (e.g. from `runtime::ModelBundle`), so shards clone
-    /// compiled state instead of re-planning.
+    /// pipeline (e.g. from `runtime::ModelBundle` or a
+    /// [`crate::runtime::ModelRegistry`] entry), so shards clone compiled
+    /// state instead of re-planning.
     pub fn start_prelowered(
         base_sim: PipelineSim,
         config: ServerConfig,
         verify_model: Option<String>,
     ) -> Result<Server, String> {
-        let workers = config.workers.max(1);
+        let id = base_sim.qmodel.name.clone();
+        Self::start_multi(vec![(id, base_sim)], config, verify_model)
+    }
+
+    /// Start a multi-model server: one shard group per `(model id,
+    /// pre-lowered pipeline)` entry, with per-group worker counts from
+    /// [`ServerConfig::routes`] (fallback [`ServerConfig::workers`]).
+    /// Tagged requests route via [`Server::submit_to`]; the untagged
+    /// [`Server::submit`] serves the first group. When `verify_model` is
+    /// given with several groups, only the matching group's shards sample
+    /// into the golden verifier (a single-model server always samples).
+    pub fn start_multi(
+        models: Vec<(String, PipelineSim)>,
+        config: ServerConfig,
+        verify_model: Option<String>,
+    ) -> Result<Server, String> {
+        if models.is_empty() {
+            return Err("start_multi requires at least one model".into());
+        }
+        for (i, (id, _)) in models.iter().enumerate() {
+            if models[..i].iter().any(|(other, _)| other == id) {
+                return Err(format!("duplicate model id '{id}'"));
+            }
+        }
+        let single = models.len() == 1;
         let metrics = Arc::new(Metrics::default());
 
-        // Verifier thread (owns the PJRT runtime end-to-end). All shards
-        // share one sampling channel — the verifier handle is the channel,
+        // Verifier thread (owns the PJRT runtime end-to-end). All sampling
+        // shards share one channel — the verifier handle is the channel,
         // cloned per worker.
         let (vtx, vrx) = sync_channel::<(Vec<i64>, Vec<i64>)>(64);
-        let verifier = verify_model.map(|name| {
+        let verifier = verify_model.clone().map(|name| {
             let vmetrics = Arc::clone(&metrics);
             std::thread::spawn(move || verifier_loop(&name, vrx, &vmetrics))
         });
 
-        let mut shards = Vec::with_capacity(workers);
-        for id in 0..workers {
-            let (tx, rx) = sync_channel::<Job>(config.queue_depth.max(1));
-            let shard_metrics = Arc::new(ShardMetrics::default());
-            let sim = base_sim.clone();
-            let wconfig = config.clone();
-            let wmetrics = Arc::clone(&shard_metrics);
-            let wvtx = vtx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("cnn-flow-shard-{id}"))
-                .spawn(move || worker_loop(sim, wconfig, rx, wvtx, &wmetrics))
-                .map_err(|e| format!("spawn shard {id}: {e}"))?;
-            shards.push(Shard {
-                tx,
-                metrics: shard_metrics,
-                handle: Some(handle),
+        let mut groups = Vec::with_capacity(models.len());
+        let mut shard_id = 0usize;
+        for (model_id, base_sim) in models {
+            let workers = config.route_workers(&model_id);
+            // Only the verified model's shards sample responses — the
+            // golden executable belongs to exactly one model.
+            let samples = verify_model.is_some()
+                && (single || verify_model.as_deref() == Some(model_id.as_str()));
+            let mut shards = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (tx, rx) = sync_channel::<Job>(config.queue_depth.max(1));
+                let shard_metrics = Arc::new(ShardMetrics::default());
+                let sim = base_sim.clone();
+                let mut wconfig = config.clone();
+                if !samples {
+                    wconfig.verify_every = 0;
+                }
+                let wmetrics = Arc::clone(&shard_metrics);
+                let wvtx = vtx.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("cnn-flow-shard-{shard_id}"))
+                    .spawn(move || worker_loop(sim, wconfig, rx, wvtx, &wmetrics))
+                    .map_err(|e| format!("spawn shard {shard_id}: {e}"))?;
+                shards.push(Shard {
+                    tx,
+                    metrics: shard_metrics,
+                    handle: Some(handle),
+                });
+                shard_id += 1;
+            }
+            groups.push(Group {
+                model: model_id,
+                shards,
+                rr: AtomicUsize::new(0),
+                intake: IntakeMetrics::default(),
             });
         }
         // Workers hold the only remaining sampling senders: the verifier's
@@ -243,8 +378,7 @@ impl Server {
         drop(vtx);
 
         Ok(Server {
-            shards,
-            rr: AtomicUsize::new(0),
+            groups,
             metrics,
             verifier,
             config,
@@ -252,31 +386,32 @@ impl Server {
         })
     }
 
-    /// Enqueue a request without blocking for its answer. Dispatch is
-    /// round-robin across shards with backpressure-aware spill: if the
-    /// preferred shard's queue is full, the next shard with space takes
-    /// the request; `Err` is returned only when every queue is full
-    /// (counted as rejected) or the server has stopped.
-    pub fn submit(&self, x_q: Vec<i64>) -> Result<Pending, String> {
-        if !self.open.load(Ordering::Acquire) {
-            return Err("server stopped".into());
-        }
+    /// The model ids this server routes, in group order.
+    pub fn models(&self) -> Vec<String> {
+        self.groups.iter().map(|g| g.model.clone()).collect()
+    }
+
+    /// Dispatch within one model's shard group: round-robin with
+    /// backpressure-aware spill across that group's shards; `Err` only
+    /// when every queue in the group is full (counted as rejected) or the
+    /// server has stopped.
+    fn submit_group(&self, group: &Group, x_q: Vec<i64>) -> Result<Pending, String> {
         let (rtx, rrx) = sync_channel(1);
         let mut job = Job::Infer(Request {
             x_q,
             enqueued: Instant::now(),
             reply: rtx,
         });
-        let n = self.shards.len();
-        let preferred = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let n = group.shards.len();
+        let preferred = group.rr.fetch_add(1, Ordering::Relaxed) % n;
         let mut disconnected = 0usize;
         for i in 0..n {
-            let shard = &self.shards[(preferred + i) % n];
+            let shard = &group.shards[(preferred + i) % n];
             match shard.tx.try_send(job) {
                 Ok(()) => {
-                    self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                    group.intake.accepted.fetch_add(1, Ordering::Relaxed);
                     if i > 0 {
-                        self.metrics.spilled.fetch_add(1, Ordering::Relaxed);
+                        group.intake.spilled.fetch_add(1, Ordering::Relaxed);
                     }
                     return Ok(Pending { rx: rrx });
                 }
@@ -290,19 +425,56 @@ impl Server {
         if disconnected == n {
             return Err("server stopped".into());
         }
-        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        group.intake.rejected.fetch_add(1, Ordering::Relaxed);
         Err("backpressure: all shard queues full".into())
     }
 
-    /// Blocking inference. Returns Err when every shard queue is saturated
-    /// (backpressure) or the server is shutting down.
+    /// Enqueue a request without blocking for its answer, dispatched to
+    /// the first (default) model group — the single-model API.
+    pub fn submit(&self, x_q: Vec<i64>) -> Result<Pending, String> {
+        if !self.open.load(Ordering::Acquire) {
+            return Err("server stopped".into());
+        }
+        self.submit_group(&self.groups[0], x_q)
+    }
+
+    /// Enqueue a tagged request for `model`'s shard group. Unknown model
+    /// ids are refused (and counted as `unrouted` in the snapshot);
+    /// requests never spill across models.
+    pub fn submit_to(&self, model: &str, x_q: Vec<i64>) -> Result<Pending, String> {
+        if !self.open.load(Ordering::Acquire) {
+            return Err("server stopped".into());
+        }
+        match self.groups.iter().find(|g| g.model == model) {
+            Some(group) => self.submit_group(group, x_q),
+            None => {
+                self.metrics.unrouted.fetch_add(1, Ordering::Relaxed);
+                Err(format!("no route for model '{model}'"))
+            }
+        }
+    }
+
+    /// Blocking inference on the default (first) model group. Returns Err
+    /// when every shard queue is saturated (backpressure) or the server
+    /// is shutting down.
     pub fn infer(&self, x_q: Vec<i64>) -> Result<InferResponse, String> {
         self.submit(x_q)?.wait()
     }
 
-    /// Aggregate snapshot across all shards.
-    pub fn metrics(&self) -> MetricsSnapshot {
-        let m = &self.metrics;
+    /// Blocking tagged inference on `model`'s shard group.
+    pub fn infer_to(&self, model: &str, x_q: Vec<i64>) -> Result<InferResponse, String> {
+        self.submit_to(model, x_q)?.wait()
+    }
+
+    /// Merge intake + shard counters over a set of groups into one
+    /// snapshot. Verifier counters and `unrouted` are server-global, so
+    /// they stay zero here and are filled in by [`Server::metrics`] —
+    /// per-model views report them as 0 by contract (DESIGN.md §7).
+    fn snapshot_of(&self, groups: &[&Group]) -> MetricsSnapshot {
+        let mut workers = 0usize;
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let mut spilled = 0u64;
         let mut completed = 0u64;
         let mut batches = 0u64;
         let mut cycles = 0u64;
@@ -318,36 +490,47 @@ impl Server {
         let mut flush_drain = 0u64;
         let mut batch_occupancy = [0u64; metrics::OCC_BUCKETS];
         let mut buckets = [0u64; metrics::BUCKETS];
-        for s in &self.shards {
-            completed += s.metrics.completed.load(Ordering::Relaxed);
-            batches += s.metrics.batches.load(Ordering::Relaxed);
-            cycles += s.metrics.sim_cycles_total.load(Ordering::Relaxed);
-            service_ns += s.metrics.service_ns_total.load(Ordering::Relaxed);
-            busy_max = busy_max.max(s.metrics.busy_cycles.load(Ordering::Relaxed));
-            predicted_cycles += s.metrics.predicted_cycles.load(Ordering::Relaxed);
-            simulated_cycles += s.metrics.simulated_cycles.load(Ordering::Relaxed);
-            cycle_divergence += s.metrics.cycle_divergence.load(Ordering::Relaxed);
-            errored += s.metrics.errored.load(Ordering::Relaxed);
-            occupancy_frames += s.metrics.occupancy_frames.load(Ordering::Relaxed);
-            flush_full += s.metrics.flush_full.load(Ordering::Relaxed);
-            flush_deadline += s.metrics.flush_deadline.load(Ordering::Relaxed);
-            flush_drain += s.metrics.flush_drain.load(Ordering::Relaxed);
-            for (b, v) in batch_occupancy.iter_mut().zip(s.metrics.occupancy.counts().iter()) {
-                *b += v;
-            }
-            for (b, v) in buckets.iter_mut().zip(s.metrics.latency.counts().iter()) {
-                *b += v;
+        for g in groups {
+            workers += g.shards.len();
+            accepted += g.intake.accepted.load(Ordering::Relaxed);
+            rejected += g.intake.rejected.load(Ordering::Relaxed);
+            spilled += g.intake.spilled.load(Ordering::Relaxed);
+            for s in &g.shards {
+                completed += s.metrics.completed.load(Ordering::Relaxed);
+                batches += s.metrics.batches.load(Ordering::Relaxed);
+                cycles += s.metrics.sim_cycles_total.load(Ordering::Relaxed);
+                service_ns += s.metrics.service_ns_total.load(Ordering::Relaxed);
+                busy_max = busy_max.max(s.metrics.busy_cycles.load(Ordering::Relaxed));
+                predicted_cycles += s.metrics.predicted_cycles.load(Ordering::Relaxed);
+                simulated_cycles += s.metrics.simulated_cycles.load(Ordering::Relaxed);
+                cycle_divergence += s.metrics.cycle_divergence.load(Ordering::Relaxed);
+                errored += s.metrics.errored.load(Ordering::Relaxed);
+                occupancy_frames += s.metrics.occupancy_frames.load(Ordering::Relaxed);
+                flush_full += s.metrics.flush_full.load(Ordering::Relaxed);
+                flush_deadline += s.metrics.flush_deadline.load(Ordering::Relaxed);
+                flush_drain += s.metrics.flush_drain.load(Ordering::Relaxed);
+                for (b, v) in batch_occupancy
+                    .iter_mut()
+                    .zip(s.metrics.occupancy.counts().iter())
+                {
+                    *b += v;
+                }
+                for (b, v) in buckets.iter_mut().zip(s.metrics.latency.counts().iter()) {
+                    *b += v;
+                }
             }
         }
         MetricsSnapshot {
-            workers: self.shards.len(),
-            accepted: m.accepted.load(Ordering::Relaxed),
-            rejected: m.rejected.load(Ordering::Relaxed),
-            spilled: m.spilled.load(Ordering::Relaxed),
+            workers,
+            models: groups.len(),
+            accepted,
+            rejected,
+            spilled,
+            unrouted: 0,
             completed,
             batches,
-            verified: m.verified.load(Ordering::Relaxed),
-            mismatches: m.mismatches.load(Ordering::Relaxed),
+            verified: 0,
+            mismatches: 0,
             predicted_cycles,
             simulated_cycles,
             cycle_divergence,
@@ -379,14 +562,43 @@ impl Server {
         }
     }
 
-    /// Per-shard snapshots (completed counts, busy cycles, latency
-    /// quantiles) for load-balance inspection.
-    pub fn shard_metrics(&self) -> Vec<ShardSnapshot> {
-        self.shards
+    /// Aggregate snapshot across all models and shards.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let groups: Vec<&Group> = self.groups.iter().collect();
+        let mut snap = self.snapshot_of(&groups);
+        snap.verified = self.metrics.verified.load(Ordering::Relaxed);
+        snap.mismatches = self.metrics.mismatches.load(Ordering::Relaxed);
+        snap.unrouted = self.metrics.unrouted.load(Ordering::Relaxed);
+        snap
+    }
+
+    /// Per-model snapshots (one per shard group), in group order. Each is
+    /// the same shape as the aggregate view, restricted to that model's
+    /// intake and shards; verifier counters and `unrouted` are
+    /// server-global and report 0 here.
+    pub fn model_metrics(&self) -> Vec<ModelMetricsSnapshot> {
+        self.groups
             .iter()
-            .enumerate()
-            .map(|(i, s)| s.metrics.snapshot(i))
+            .map(|g| ModelMetricsSnapshot {
+                model: g.model.clone(),
+                metrics: self.snapshot_of(&[g]),
+            })
             .collect()
+    }
+
+    /// Per-shard snapshots (completed counts, busy cycles, latency
+    /// quantiles) for load-balance inspection, tagged with the model the
+    /// shard serves; shard indices are global across groups.
+    pub fn shard_metrics(&self) -> Vec<ShardSnapshot> {
+        let mut out = Vec::new();
+        for g in &self.groups {
+            for s in &g.shards {
+                let mut snap = s.metrics.snapshot(out.len());
+                snap.model = g.model.clone();
+                out.push(snap);
+            }
+        }
+        out
     }
 
     /// Graceful shutdown: close intake, drain every shard queue, join all
@@ -407,12 +619,16 @@ impl Server {
         self.open.store(false, Ordering::Release);
         // The shutdown marker queues FIFO behind every accepted request,
         // so workers answer everything before exiting.
-        for s in &self.shards {
-            let _ = s.tx.send(Job::Shutdown);
+        for g in &self.groups {
+            for s in &g.shards {
+                let _ = s.tx.send(Job::Shutdown);
+            }
         }
-        for s in &mut self.shards {
-            if let Some(h) = s.handle.take() {
-                let _ = h.join();
+        for g in &mut self.groups {
+            for s in &mut g.shards {
+                if let Some(h) = s.handle.take() {
+                    let _ = h.join();
+                }
             }
         }
         // All worker-held sampling senders are gone now: the verifier
@@ -553,7 +769,9 @@ fn run_group_compiled(
             Err(e) => outputs.push(Err(e)),
         }
     }
-    match engine.execute_batch(&frames) {
+    // Every frame in `frames` passed validate_frame above, so the
+    // prevalidated entry point skips the redundant second scan.
+    match engine.execute_batch_prevalidated(&frames) {
         Ok(batch_out) => {
             for (&slot, o) in slots.iter().zip(batch_out) {
                 outputs[slot] = Ok(o);
@@ -1002,6 +1220,95 @@ mod tests {
         assert_eq!(resp.logits, expect);
         let m = server.shutdown();
         assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn engine_names_parse_case_insensitively() {
+        assert_eq!(EngineKind::parse("interp"), Some(EngineKind::Interpreter));
+        assert_eq!(
+            EngineKind::parse("Interpreter"),
+            Some(EngineKind::Interpreter)
+        );
+        assert_eq!(EngineKind::parse("COMPILED"), Some(EngineKind::Compiled));
+        assert_eq!(EngineKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn multi_model_routes_requests_and_splits_metrics() {
+        let qa = QModel::synthetic(8, 4, 6, 0xA);
+        let qb = QModel::synthetic(12, 4, 5, 0xB);
+        let sa = PipelineSim::new(qa, None).unwrap();
+        let sb = PipelineSim::new(qb, None).unwrap();
+        let ea = sa.run(&[vec![1; 64]]).unwrap().outputs[0].clone();
+        let eb = sb.run(&[vec![2; 144]]).unwrap().outputs[0].clone();
+        let config = ServerConfig {
+            workers: 1,
+            verify_every: 0,
+            batch_deadline: Duration::from_millis(0),
+            routes: vec![ModelRoute {
+                model: "b".into(),
+                workers: 2,
+            }],
+            ..Default::default()
+        };
+        let mut server = Server::start_multi(
+            vec![("a".to_string(), sa), ("b".to_string(), sb)],
+            config,
+            None,
+        )
+        .unwrap();
+        assert_eq!(server.models(), vec!["a".to_string(), "b".to_string()]);
+        // Tagged requests reach their own model's pipeline, bit-exactly.
+        assert_eq!(server.infer_to("a", vec![1; 64]).unwrap().logits, ea);
+        assert_eq!(server.infer_to("b", vec![2; 144]).unwrap().logits, eb);
+        // Untagged submits serve the first (default) group.
+        assert_eq!(server.infer(vec![1; 64]).unwrap().logits, ea);
+        // Unknown tags are refused and counted, never silently served.
+        assert!(server.submit_to("nope", vec![0; 64]).is_err());
+        server.drain();
+        let m = server.metrics();
+        assert_eq!(m.models, 2);
+        assert_eq!(m.workers, 3, "route table: 1 shard for a + 2 for b");
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.unrouted, 1);
+        let per = server.model_metrics();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].model, "a");
+        assert_eq!(per[0].metrics.completed, 2);
+        assert_eq!(per[0].metrics.workers, 1);
+        assert_eq!(per[1].model, "b");
+        assert_eq!(per[1].metrics.completed, 1);
+        assert_eq!(per[1].metrics.workers, 2);
+        // Per-model counters reconcile with the aggregate exactly.
+        assert_eq!(
+            per.iter().map(|p| p.metrics.completed).sum::<u64>(),
+            m.completed
+        );
+        assert_eq!(
+            per.iter().map(|p| p.metrics.accepted).sum::<u64>(),
+            m.accepted
+        );
+        // Per-model views report the server-global counters as 0.
+        assert_eq!(per[0].metrics.unrouted, 0);
+        let shards = server.shard_metrics();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0].model, "a");
+        assert!(shards[1..].iter().all(|s| s.model == "b"));
+        assert_eq!(shards[1].shard, 1, "shard indices stay global");
+    }
+
+    #[test]
+    fn multi_model_rejects_duplicates_and_empty() {
+        let qm = QModel::synthetic(8, 4, 6, 0xD0);
+        let s1 = PipelineSim::new(qm.clone(), None).unwrap();
+        let s2 = PipelineSim::new(qm, None).unwrap();
+        assert!(Server::start_multi(
+            vec![("m".to_string(), s1), ("m".to_string(), s2)],
+            ServerConfig::default(),
+            None,
+        )
+        .is_err());
+        assert!(Server::start_multi(Vec::new(), ServerConfig::default(), None).is_err());
     }
 
     #[test]

@@ -547,6 +547,17 @@ impl SchedulePrediction {
         }
     }
 
+    /// Projected steady-state hardware throughput (frames/s) at a given
+    /// modelled clock — the per-model headline figure the multi-model
+    /// serve CLI reports next to each group's measured metrics.
+    pub fn throughput_fps(&self, clock_hz: f64) -> f64 {
+        if self.steady_cycles_per_frame == 0 {
+            0.0
+        } else {
+            clock_hz / self.steady_cycles_per_frame as f64
+        }
+    }
+
     /// Per-layer utilisation over an `frames`-frame stream.
     pub fn utilization(&self, frames: usize) -> Vec<f64> {
         self.layers

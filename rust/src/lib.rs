@@ -19,8 +19,11 @@
 //! * [`fpga`] — the synthesis estimator standing in for Vivado
 //!   (Tables IX/X, Fig. 13),
 //! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX model
-//!   (gated behind the `pjrt` cargo feature; a stub otherwise, so the
-//!   default build has zero dependencies),
+//!   (real backend gated behind the `pjrt-xla` cargo feature; a stub
+//!   otherwise, so the default build has zero dependencies), plus the
+//!   multi-model serving registry ([`runtime::ModelRegistry`]): each
+//!   model id is lowered once into its compiled pipeline bundle,
+//!   LRU-bounded with hit/miss/eviction counters,
 //! * [`coordinator`] — the sharded streaming inference server: N worker
 //!   shards each owning a [`sim::pipeline::PipelineSim`] replica, fed by a
 //!   round-robin dispatcher with backpressure-aware spill;
@@ -28,9 +31,11 @@
 //!   or until the oldest request's `batch_deadline` expires, then run
 //!   the whole batch through one compiled program traversal); per-shard
 //!   metrics with p50/p95/p99 latency histograms, batch occupancy and
-//!   flush-reason accounting, graceful drain-on-shutdown, and a
-//!   deterministic seeded-trace load harness ([`coordinator::loadgen`])
-//!   with a virtual clock,
+//!   flush-reason accounting, graceful drain-on-shutdown, multi-model
+//!   routing (per-model shard groups fed by a route table, tagged
+//!   submits, per-model + aggregate metrics views — DESIGN.md §7), and a
+//!   deterministic seeded-trace load harness ([`coordinator::loadgen`],
+//!   incl. heterogeneous multi-model traces) with a virtual clock,
 //! * [`report`] — generators that print every paper table and figure.
 //!
 //! Serving scale-out mirrors the companion work (*Data-Rate-Aware

@@ -7,6 +7,8 @@
 //! cnn-flow analyze --model M      rates, unit plan, resources per layer
 //! cnn-flow simulate --model M     cycle-accurate pipeline run + utilisation
 //! cnn-flow serve --model M        sharded streaming coordinator demo (E12)
+//! cnn-flow serve --models A,B,C   multi-model serving: registry-lowered zoo
+//!                                 configs behind per-model shard groups
 //! cnn-flow list                   zoo models
 //! ```
 //!
@@ -97,6 +99,8 @@ fn usage() {
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
                     [--max-batch N] [--batch-deadline USEC] [--queue-depth N]\n  \
                     [--verify-every N] [--engine compiled|interp]\n  \
+         cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
+                    except --verify-every; --workers = shards per model)\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
          cnn-flow list"
     );
@@ -330,7 +334,193 @@ fn cmd_simulate(opts: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// Resolve `--engine`, failing loudly on a typo — silently falling back
+/// to the compiled default would run the wrong engine while looking
+/// green (mirrors `EngineKind::from_env`, which panics on bad values).
+fn engine_flag(opts: &HashMap<String, String>) -> Result<EngineKind, String> {
+    match opts.get("engine") {
+        None => Ok(EngineKind::default_from_env()),
+        Some(s) => EngineKind::parse(s).ok_or_else(|| {
+            format!("unknown engine '{s}' (expected compiled | interp | interpreter)")
+        }),
+    }
+}
+
+/// Stable per-model weight seed for the synthesized serving zoo, derived
+/// from the model name so repeated runs (and tests) agree.
+fn model_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
+}
+
+/// `serve --models a,b,c`: lower each zoo config once through the
+/// `ModelRegistry`, serve them behind per-model shard groups, replay a
+/// seeded heterogeneous trace checked bit-for-bit against each model's
+/// own golden sim, and report per-model + aggregate metrics.
+fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
+    use cnn_flow::coordinator::loadgen;
+    use cnn_flow::runtime::ModelRegistry;
+
+    // Canonicalize aliases through the zoo and dedupe: `digits` and
+    // `digits_cnn` name the same config, which is lowered (and seeded)
+    // once under its canonical name and hosted by exactly one group.
+    let mut names: Vec<String> = Vec::new();
+    for raw in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let Some(model) = zoo::by_name(raw) else {
+            eprintln!("unknown zoo model '{raw}' (see `cnn-flow list`)");
+            return 2;
+        };
+        if !names.contains(&model.name) {
+            names.push(model.name.clone());
+        }
+    }
+    if names.is_empty() {
+        eprintln!("--models needs at least one zoo model name");
+        return 2;
+    }
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let workers: usize = opts.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let max_batch: usize = opts
+        .get("max-batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let batch_deadline_us: u64 = opts
+        .get("batch-deadline")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let queue_depth: usize = opts
+        .get("queue-depth")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let engine = match engine_flag(opts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if opts.contains_key("verify-every") {
+        eprintln!("note: --verify-every is ignored with --models (no PJRT golden verifier on the synthesized zoo path)");
+    }
+
+    // Lower every model exactly once through the registry (names are
+    // canonical and unique at this point).
+    let registry = ModelRegistry::new(names.len());
+    let mut lowered = Vec::new();
+    for name in &names {
+        let bundle = registry.get_or_lower(name, || {
+            let model = zoo::by_name(name)
+                .ok_or_else(|| format!("unknown zoo model '{name}' (see `cnn-flow list`)"))?;
+            QModel::synthesize(&model, model_seed(name))
+        });
+        match bundle {
+            Ok(b) => lowered.push(b),
+            Err(e) => {
+                eprintln!("{name}: {e}");
+                return 1;
+            }
+        }
+    }
+    let rs = registry.stats();
+    println!(
+        "registry: {} models cached ({} hits, {} misses, {} evictions)",
+        rs.cached, rs.hits, rs.misses, rs.evictions
+    );
+    for (name, b) in names.iter().zip(&lowered) {
+        println!(
+            "  {name}: {} inputs, predicted {} cycles/frame steady ({:.2} MInf/s at 600 MHz)",
+            b.input_len(),
+            b.pipeline.predicted.steady_cycles_per_frame,
+            b.pipeline.predicted.throughput_fps(600.0e6) / 1e6,
+        );
+    }
+
+    let config = ServerConfig {
+        workers,
+        max_batch,
+        queue_depth,
+        verify_every: 0,
+        engine,
+        batch_deadline: std::time::Duration::from_micros(batch_deadline_us),
+        ..Default::default()
+    };
+    let bundles: Vec<(String, cnn_flow::sim::pipeline::PipelineSim)> = names
+        .iter()
+        .cloned()
+        .zip(lowered.iter().map(|b| b.pipeline.clone()))
+        .collect();
+    let mut server = match Server::start_multi(bundles, config, None) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+
+    let specs: Vec<(String, usize)> = names
+        .iter()
+        .cloned()
+        .zip(lowered.iter().map(|b| b.input_len()))
+        .collect();
+    let trace = loadgen::MultiTrace::seeded(0x517A, requests, &specs, 1);
+    let sims: Vec<&cnn_flow::sim::pipeline::PipelineSim> =
+        lowered.iter().map(|b| &b.pipeline).collect();
+    let expected = loadgen::golden_outputs_multi(&sims, &trace);
+    let started = std::time::Instant::now();
+    let report = loadgen::replay_multi(&server, &trace, 4 * workers.max(1), Some(&expected));
+    let elapsed = started.elapsed();
+    server.drain();
+
+    let m = server.metrics();
+    println!(
+        "served {}/{} requests in {elapsed:?} ({} mismatched, {} rejected)",
+        report.aggregate.ok, requests, report.aggregate.mismatched, report.aggregate.rejected
+    );
+    let mut t = Table::new(
+        format!("per-model serving stats ({engine:?} engine)"),
+        &["model", "shards", "completed", "batches", "mean batch", "p99", "agg MInf/s"],
+    );
+    for (mm, rep) in server.model_metrics().iter().zip(&report.per_model) {
+        t.row(&[
+            mm.model.clone(),
+            mm.metrics.workers.to_string(),
+            format!("{} ({} ok)", mm.metrics.completed, rep.ok),
+            mm.metrics.batches.to_string(),
+            format!("{:.1}", mm.metrics.mean_batch),
+            format!("{:?}", mm.metrics.p99),
+            format!("{:.2}", mm.metrics.aggregate_fps / 1e6),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "aggregate: {} models, {} shards, {} completed, mean batch {:.1}, \
+         {:.2} MInf/s aggregate, {} predicted cycles, {} divergent groups",
+        m.models,
+        m.workers,
+        m.completed,
+        m.mean_batch,
+        m.aggregate_fps / 1e6,
+        m.predicted_cycles,
+        m.cycle_divergence
+    );
+    if report.aggregate.mismatched > 0 {
+        eprintln!("PER-MODEL GOLDEN MISMATCHES DETECTED");
+        return 1;
+    }
+    if m.occupancy_frames != m.completed + m.errored {
+        eprintln!("METRICS RECONCILIATION FAILED");
+        return 1;
+    }
+    0
+}
+
 fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
+    if let Some(list) = opts.get("models") {
+        return cmd_serve_multi(list, opts);
+    }
     let name = opts.get("model").map(String::as_str).unwrap_or("digits");
     let requests: usize = opts
         .get("requests")
@@ -358,9 +548,12 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .get("verify-every")
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let engine = match opts.get("engine").map(String::as_str) {
-        Some("interp") | Some("interpreter") => EngineKind::Interpreter,
-        _ => EngineKind::Compiled,
+    let engine = match engine_flag(opts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
     // --synthetic serves the artifact-free fixture (no golden verifier).
     let (qm, verify_model) = if opts.contains_key("synthetic") {
@@ -528,7 +721,9 @@ fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
         .cloned()
         .unwrap_or_else(|| "BENCH_pipeline.json".to_string());
     // Artifact models when present (unless --synthetic), plus the
-    // always-available synthetic digits-shaped fixture.
+    // always-available synthetic digits-shaped fixture and the serving
+    // zoo configs — every BENCH_pipeline.json row names the model that
+    // produced its figures, so mixed reports stay attributable.
     let mut models: Vec<QModel> = Vec::new();
     if !opts.contains_key("synthetic") {
         for name in ["digits", "jsc"] {
@@ -538,6 +733,15 @@ fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
         }
     }
     models.push(QModel::synthetic(12, 8, 10, 0xBE7C));
+    for zm in zoo::serving_zoo() {
+        match QModel::synthesize(&zm, model_seed(&zm.name)) {
+            Ok(qm) => models.push(qm),
+            Err(e) => {
+                eprintln!("{}: {e}", zm.name);
+                return 1;
+            }
+        }
+    }
     let b = bench::Bencher::with_opts(
         "pipeline-cli",
         bench::BenchOpts {

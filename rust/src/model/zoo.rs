@@ -170,6 +170,52 @@ pub fn vgg_tiny() -> Model {
     m
 }
 
+/// MobileNet-like depthwise-separable stack at serving scale (16x16x1
+/// input): first standard conv, then three dw/pw blocks (one stride-2),
+/// global-ish average pool, dense head. Small enough that the full
+/// compiled/batched serving path (and its interpreter oracle) runs it in
+/// test time, while still exercising every MobileNet mechanism the
+/// paper's lowering cares about — depthwise kernels, FCU-mapped pointwise
+/// layers, stride-induced rate drops, and the avgpool-as-dwconv trick.
+pub fn mobilenet_micro() -> Model {
+    let mut m = Model::new("mobilenet_micro", 16, 1);
+    m.push(Layer::conv("c1", 3, 1, 1, 8));
+    m.push(Layer::dwconv("dw1", 3, 1, 1));
+    m.push(Layer::pwconv("pw1", 16));
+    m.push(Layer::dwconv("dw2", 3, 2, 1));
+    m.push(Layer::pwconv("pw2", 24));
+    m.push(Layer::dwconv("dw3", 3, 1, 1));
+    m.push(Layer::pwconv("pw3", 32));
+    m.push(Layer::avgpool("ap", 2, 2));
+    m.push(Layer::dense("fc", 10));
+    m
+}
+
+/// VGG-style all-3x3 net at serving scale (16x16x1 input): two
+/// double-conv + maxpool stages and a two-layer dense head — the deep
+/// same-padding stack shape of [`vgg_tiny`], sized for the serving tests.
+pub fn vgg_micro() -> Model {
+    let mut m = Model::new("vgg_micro", 16, 1);
+    m.push(Layer::conv("conv1_0", 3, 1, 1, 8));
+    m.push(Layer::conv("conv1_1", 3, 1, 1, 8));
+    m.push(Layer::maxpool("pool1", 2, 2));
+    m.push(Layer::conv("conv2_0", 3, 1, 1, 16));
+    m.push(Layer::conv("conv2_1", 3, 1, 1, 16));
+    m.push(Layer::maxpool("pool2", 2, 2));
+    m.push(Layer::dense("fc1", 24));
+    m.push(Layer::dense("fc2", 10));
+    m
+}
+
+/// The serving zoo: every chain-topology config sized to run through the
+/// full compiled/batched serving path (registry lowering, shard groups,
+/// differential tests) in test time. These are the models
+/// `serve --models a,b,c` accepts and `tests/prop_compiled.rs` pins
+/// bit-identical across interpreter / `execute` / `execute_batch`.
+pub fn serving_zoo() -> Vec<Model> {
+    vec![digits_cnn(), mobilenet_micro(), vgg_micro(), jsc_mlp()]
+}
+
 /// Every model in the zoo, for CLI listing and sweep harnesses.
 pub fn all_models() -> Vec<Model> {
     vec![
@@ -183,6 +229,8 @@ pub fn all_models() -> Vec<Model> {
         digits_cnn(),
         lenet5(),
         vgg_tiny(),
+        mobilenet_micro(),
+        vgg_micro(),
     ]
 }
 
@@ -199,6 +247,8 @@ pub fn by_name(name: &str) -> Option<Model> {
         "digits_cnn" | "digits" => Some(digits_cnn()),
         "lenet5" | "lenet" => Some(lenet5()),
         "vgg_tiny" | "vgg" => Some(vgg_tiny()),
+        "mobilenet_micro" => Some(mobilenet_micro()),
+        "vgg_micro" => Some(vgg_micro()),
         _ => None,
     }
 }
@@ -308,6 +358,41 @@ mod tests {
         for l in &a.layers {
             assert!(!l.r_out.is_zero());
         }
+    }
+
+    #[test]
+    fn serving_zoo_shapes_are_chain_and_small() {
+        for m in serving_zoo() {
+            let shapes = m.shapes().unwrap();
+            assert!(shapes.iter().all(|sl| !sl.merges), "{}: chains only", m.name);
+            assert!(
+                m.input.features() <= 16 * 16 * 3,
+                "{}: serving zoo must stay test-sized",
+                m.name
+            );
+            assert_eq!(m.output_shape().unwrap().f, 1, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn mobilenet_micro_progression() {
+        let m = mobilenet_micro();
+        let shapes = m.shapes().unwrap();
+        // conv1 16x16x8; dw2 halves to 8x8; avgpool to 4x4x32; fc 10.
+        assert_eq!((shapes[0].output.f, shapes[0].output.d), (16, 8));
+        let ap = &shapes[shapes.len() - 2];
+        assert_eq!((ap.output.f, ap.output.d), (4, 32));
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+    }
+
+    #[test]
+    fn vgg_micro_progression() {
+        let m = vgg_micro();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+        let shapes = m.shapes().unwrap();
+        // Two pool halvings: 16 -> 8 -> 4 before the dense head.
+        let before_fc = &shapes[shapes.len() - 3];
+        assert_eq!((before_fc.output.f, before_fc.output.d), (4, 16));
     }
 
     #[test]

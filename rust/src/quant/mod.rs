@@ -249,6 +249,137 @@ impl QModel {
         }
     }
 
+    /// Synthesize a deterministic int8 [`QModel`] from a layer-graph
+    /// [`crate::model::Model`] (a zoo config), so any chain-topology
+    /// architecture becomes a first-class serving scenario without
+    /// artifacts: conv / pointwise / depthwise / pooling / dense layers
+    /// get seeded small-magnitude weights (same grid as
+    /// [`QModel::synthetic`]), intermediate layers requantize back onto
+    /// the int8 activation grid, and the final layer emits
+    /// accumulator-scale outputs exactly like the exporter's models.
+    ///
+    /// Residual topologies (ResNet) are rejected: the quantized pipeline
+    /// IR is a chain.
+    pub fn synthesize(model: &crate::model::Model, seed: u64) -> Result<QModel, String> {
+        use crate::model::LayerKind;
+        let shaped = model.shapes().map_err(|e| e.to_string())?;
+        if shaped.iter().any(|sl| sl.merges) {
+            return Err(format!(
+                "{}: residual topologies cannot be synthesized into a QModel chain",
+                model.name
+            ));
+        }
+        let mut rng = crate::util::Rng::new(seed);
+        let mut wq = |n: usize| -> Vec<i64> {
+            (0..n).map(|_| rng.int8() as i64 / 16).collect()
+        };
+        let n_layers = shaped.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        for (i, sl) in shaped.iter().enumerate() {
+            let l = &sl.layer;
+            let is_last = i + 1 == n_layers;
+            let (f_in, d_in) = (sl.input.f, sl.input.d);
+            let (f_out, d_out) = (sl.output.f, sl.output.d);
+            // Intermediate layers requantize; the final layer emits
+            // accumulator-scale values (m = 0).
+            let m = |scale: f32| if is_last { 0.0 } else { scale };
+            let ql = match l.kind {
+                LayerKind::Conv | LayerKind::Pointwise => {
+                    let k = l.k.max(1); // pointwise is a 1x1 conv
+                    QLayer {
+                        name: l.name.clone(),
+                        kind: QKind::Conv,
+                        k,
+                        s: l.s,
+                        p: l.p,
+                        relu: l.relu,
+                        w_q: wq(k * k * d_in * d_out),
+                        w_shape: vec![k, k, d_in, d_out],
+                        b_q: (0..d_out).map(|c| (c as i64 % 5) - 2).collect(),
+                        m: m(0.05),
+                        in_shape: [f_in, f_in, d_in],
+                        out_shape: [f_out, f_out, d_out],
+                    }
+                }
+                LayerKind::DepthwiseConv => QLayer {
+                    name: l.name.clone(),
+                    kind: QKind::DwConv,
+                    k: l.k,
+                    s: l.s,
+                    p: l.p,
+                    relu: l.relu,
+                    w_q: wq(l.k * l.k * d_in),
+                    w_shape: vec![l.k, l.k, d_in],
+                    b_q: (0..d_out).map(|c| (c as i64 % 3) - 1).collect(),
+                    m: m(0.05),
+                    in_shape: [f_in, f_in, d_in],
+                    out_shape: [f_out, f_out, d_out],
+                },
+                LayerKind::MaxPool => QLayer {
+                    name: l.name.clone(),
+                    kind: QKind::MaxPool,
+                    k: l.k,
+                    s: l.s,
+                    p: l.p,
+                    relu: false,
+                    w_q: vec![],
+                    w_shape: vec![],
+                    b_q: vec![],
+                    m: 0.0, // max pooling forwards maxima untouched
+                    in_shape: [f_in, f_in, d_in],
+                    out_shape: [f_out, f_out, d_out],
+                },
+                LayerKind::AvgPool => QLayer {
+                    name: l.name.clone(),
+                    kind: QKind::AvgPool,
+                    k: l.k,
+                    s: l.s,
+                    p: l.p,
+                    relu: false,
+                    // Constant weights + requant by 1/k^2: the paper's
+                    // average pool as a depthwise conv (Section VI). The
+                    // multiplier is part of the op's definition, so it is
+                    // recorded unconditionally — though if an avgpool is
+                    // the FINAL layer, the engines still emit
+                    // accumulator-scale window sums (every last layer
+                    // skips requant by convention; see fused_requant).
+                    w_q: vec![1; l.k * l.k * d_in],
+                    w_shape: vec![l.k, l.k, d_in],
+                    b_q: vec![0; d_out],
+                    m: 1.0 / (l.k * l.k) as f32,
+                    in_shape: [f_in, f_in, d_in],
+                    out_shape: [f_out, f_out, d_out],
+                },
+                LayerKind::Dense => {
+                    let feats = sl.input.features();
+                    QLayer {
+                        name: l.name.clone(),
+                        kind: QKind::Dense,
+                        k: 0,
+                        s: 1,
+                        p: 0,
+                        relu: l.relu,
+                        w_q: wq(d_out * feats),
+                        w_shape: vec![d_out, feats],
+                        b_q: (0..d_out).map(|c| c as i64 + 1).collect(),
+                        m: m(0.02),
+                        in_shape: [1, 1, feats],
+                        out_shape: [1, 1, d_out],
+                    }
+                }
+            };
+            layers.push(ql);
+        }
+        Ok(QModel {
+            name: model.name.clone(),
+            input_shape: [model.input.f, model.input.f, model.input.d],
+            input_scale: 1.0,
+            layers,
+            test_vectors: vec![],
+            qat_accuracy: 1.0,
+        })
+    }
+
     /// Conv weight accessor: w[(u, v, cin, cout)].
     pub fn conv_w(l: &QLayer, u: usize, v: usize, cin: usize, cout: usize) -> i64 {
         let (k, ci, co) = (l.w_shape[0], l.w_shape[2], l.w_shape[3]);
@@ -440,6 +571,57 @@ mod tests {
             .unwrap();
         assert!(conv.acc_bound(127) >= max_abs_w as i128 * 127);
         assert!(conv.acc_bound(127) <= (max_abs_w as i128 + 2) * 127 + 2);
+    }
+
+    #[test]
+    fn synthesize_zoo_chain_is_deterministic() {
+        let m = crate::model::zoo::vgg_micro();
+        let a = QModel::synthesize(&m, 7).unwrap();
+        let b = QModel::synthesize(&m, 7).unwrap();
+        assert_eq!(a.name, "vgg_micro");
+        assert_eq!(a.input_shape, [16, 16, 1]);
+        assert_eq!(a.layers.len(), m.layers().len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w_q, lb.w_q, "{}", la.name);
+            assert!(la.w_q.iter().all(|w| w.abs() <= 7), "{}", la.name);
+        }
+        assert_ne!(
+            QModel::synthesize(&m, 8).unwrap().layers[0].w_q,
+            a.layers[0].w_q,
+            "different seeds must give different weights"
+        );
+        // Intermediate layers requantize; the final layer is
+        // accumulator-scale; maxpool never requantizes.
+        assert_eq!(a.layers.last().unwrap().m, 0.0);
+        assert!(a.layers[0].m != 0.0);
+        let pool = a.layers.iter().find(|l| l.kind == QKind::MaxPool).unwrap();
+        assert_eq!(pool.m, 0.0);
+    }
+
+    #[test]
+    fn synthesize_maps_pointwise_dw_and_avgpool() {
+        let q = QModel::synthesize(&crate::model::zoo::mobilenet_micro(), 1).unwrap();
+        let pw = q.layers.iter().find(|l| l.name == "pw1").unwrap();
+        assert_eq!(pw.kind, QKind::Conv);
+        assert_eq!(pw.k, 1);
+        assert_eq!(pw.w_shape, vec![1, 1, 8, 16]);
+        let dw = q.layers.iter().find(|l| l.name == "dw1").unwrap();
+        assert_eq!(dw.kind, QKind::DwConv);
+        assert_eq!(dw.w_shape, vec![3, 3, 8]);
+        let ap = q.layers.iter().find(|l| l.name == "ap").unwrap();
+        assert_eq!(ap.kind, QKind::AvgPool);
+        assert!(ap.w_q.iter().all(|&w| w == 1));
+        assert_eq!(ap.m, 0.25);
+        // Dense head flattens to [1, 1, feats].
+        let fc = q.layers.last().unwrap();
+        assert_eq!(fc.kind, QKind::Dense);
+        assert_eq!(fc.in_shape, [1, 1, 4 * 4 * 32]);
+    }
+
+    #[test]
+    fn synthesize_rejects_residual_topologies() {
+        let err = QModel::synthesize(&crate::model::zoo::resnet18(), 1).unwrap_err();
+        assert!(err.contains("residual"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Multi-model lowering cache (system S9b): lower each registered
+//! [`QModel`] **once** into its compiled serving bundle and hand every
+//! later caller the same artifact.
+//!
+//! The dataflow toolflows this reproduction follows (Haddoc-style
+//! automated deployment, FINN-style dataflow builds — see PAPERS.md) pay
+//! a real per-model cost before the first frame runs: rate analysis
+//! (Eq. 8), unit planning (Eqs. 12-22), and the compile-once lowering of
+//! DESIGN.md §4 (tap tables, transposed weights, fused epilogues, the
+//! analytic schedule). Serving many heterogeneous CNNs behind one
+//! coordinator therefore needs a registry that amortizes that cost:
+//!
+//! * **keyed by model id** — the caller-chosen string the coordinator's
+//!   route table uses (`zoo` name, artifact name, tenant id, ...);
+//! * **single-flight** — concurrent [`ModelRegistry::get_or_lower`] calls
+//!   for the same id observe exactly one lowering and share one
+//!   [`Arc<LoweredModel>`] (the registry lock is held across the lowering,
+//!   so a second caller always finds the finished entry; hits never pay
+//!   more than the lock);
+//! * **LRU-bounded** — at most `capacity` lowered models are retained;
+//!   inserting past the bound evicts the least-recently-used entry (an
+//!   `Arc` already handed out stays alive with its holder — eviction only
+//!   drops the cache's reference);
+//! * **observable** — hit / miss / eviction counters
+//!   ([`ModelRegistry::stats`]) so serving dashboards can see whether the
+//!   cache is sized right.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::quant::QModel;
+use crate::sim::pipeline::PipelineSim;
+
+/// One model lowered for serving: the quantized manifest plus the
+/// planned-and-lowered [`PipelineSim`] (compiled value engine, batched
+/// tier and closed-form [`crate::flow::schedule::SchedulePrediction`] —
+/// everything a shard group clones without re-planning).
+pub struct LoweredModel {
+    pub qmodel: QModel,
+    pub pipeline: PipelineSim,
+}
+
+impl LoweredModel {
+    /// Flattened input frame length the lowered engines expect.
+    pub fn input_len(&self) -> usize {
+        self.pipeline.input_len()
+    }
+}
+
+struct Entry {
+    lowered: Arc<LoweredModel>,
+    /// Logical access time (monotone tick), the LRU ordering key.
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+}
+
+/// Point-in-time registry counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to lower (including re-lowering after eviction).
+    pub misses: u64,
+    /// Entries dropped to enforce the capacity bound.
+    pub evictions: u64,
+    /// Models currently cached.
+    pub cached: usize,
+}
+
+/// The LRU-bounded model-id → lowered-pipeline cache.
+pub struct ModelRegistry {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Lock the map, recovering from poisoning: the map is only mutated
+    /// AFTER a lowering succeeds, so a panic inside a caller's `build`
+    /// closure (or the lowering itself) leaves the map consistent — one
+    /// bad model must not brick the registry for every other model.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// A registry retaining at most `capacity` lowered models
+    /// (`capacity` is clamped to at least 1).
+    pub fn new(capacity: usize) -> ModelRegistry {
+        ModelRegistry {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The lowered bundle for `id`, lowering `build`'s [`QModel`] on the
+    /// first request (or after an eviction). Concurrent callers for the
+    /// same id are single-flight: exactly one runs `build` + lowering,
+    /// everyone receives the same [`Arc`]. A `build` or lowering error is
+    /// returned to the caller and nothing is cached.
+    pub fn get_or_lower<F>(&self, id: &str, build: F) -> Result<Arc<LoweredModel>, String>
+    where
+        F: FnOnce() -> Result<QModel, String>,
+    {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(id) {
+            e.last_used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&e.lowered));
+        }
+        // Miss: lower while holding the lock (single-flight). Lowering a
+        // model is milliseconds at most; a second caller blocking here is
+        // exactly the caller that must not lower twice. Known trade-off:
+        // a cold lowering also briefly blocks hits for OTHER ids — if a
+        // future workload lowers models large enough for that to matter,
+        // replace the map values with per-id in-flight slots (e.g.
+        // Arc<OnceLock>) so the map lock is only held for lookup/insert.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let qmodel = build()?;
+        let pipeline = PipelineSim::new(qmodel.clone(), None)?;
+        let lowered = Arc::new(LoweredModel { qmodel, pipeline });
+        if inner.map.len() >= self.capacity {
+            // Evict the least-recently-used entry to stay within bound.
+            if let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert(
+            id.to_string(),
+            Entry {
+                lowered: Arc::clone(&lowered),
+                last_used: tick,
+            },
+        );
+        Ok(lowered)
+    }
+
+    /// Cache lookup without lowering (refreshes the LRU position). A
+    /// cold or evicted id counts as a miss, so mixed `get`/`get_or_lower`
+    /// callers still see honest hit/miss ratios in [`ModelRegistry::stats`].
+    pub fn get(&self, id: &str) -> Option<Arc<LoweredModel>> {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(id) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.lowered))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Whether `id` is currently cached (no LRU refresh, no counters).
+    pub fn contains(&self, id: &str) -> bool {
+        self.lock().map.contains_key(id)
+    }
+
+    /// Models currently cached.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time hit / miss / eviction counters.
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            cached: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qm(seed: u64) -> QModel {
+        QModel::synthetic(8, 4, 6, seed)
+    }
+
+    #[test]
+    fn miss_then_hit_shares_one_artifact() {
+        let reg = ModelRegistry::new(4);
+        let a = reg.get_or_lower("a", || Ok(qm(1))).unwrap();
+        let b = reg
+            .get_or_lower("a", || Err("must not re-lower a cached model".into()))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.cached), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let reg = ModelRegistry::new(2);
+        reg.get_or_lower("a", || Ok(qm(1))).unwrap();
+        reg.get_or_lower("b", || Ok(qm(2))).unwrap();
+        reg.get("a").unwrap(); // refresh a: b is now LRU
+        reg.get_or_lower("c", || Ok(qm(3))).unwrap();
+        assert!(reg.contains("a"));
+        assert!(!reg.contains("b"));
+        assert!(reg.contains("c"));
+        assert_eq!(reg.stats().evictions, 1);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn build_error_caches_nothing() {
+        let reg = ModelRegistry::new(2);
+        let err = reg.get_or_lower("bad", || Err("nope".into())).unwrap_err();
+        assert_eq!(err, "nope");
+        assert!(!reg.contains("bad"));
+        assert_eq!(reg.stats().misses, 1);
+        // A later successful build still works.
+        reg.get_or_lower("bad", || Ok(qm(4))).unwrap();
+        assert!(reg.contains("bad"));
+    }
+
+    #[test]
+    fn panicking_build_does_not_brick_the_registry() {
+        let reg = Arc::new(ModelRegistry::new(2));
+        let r = Arc::clone(&reg);
+        let res = std::thread::spawn(move || {
+            let _ = r.get_or_lower("boom", || panic!("bad model config"));
+        })
+        .join();
+        assert!(res.is_err(), "build panic must surface in its own thread");
+        // The poisoned lock is reclaimed (the map was never mutated), so
+        // every other model keeps working.
+        assert!(!reg.contains("boom"));
+        reg.get_or_lower("ok", || Ok(qm(9))).unwrap();
+        assert!(reg.contains("ok"));
+    }
+
+    #[test]
+    fn evicted_arc_stays_alive_with_holder() {
+        let reg = ModelRegistry::new(1);
+        let a = reg.get_or_lower("a", || Ok(qm(5))).unwrap();
+        reg.get_or_lower("b", || Ok(qm(6))).unwrap();
+        assert!(!reg.contains("a"));
+        // The handed-out bundle is still usable after eviction.
+        assert_eq!(a.input_len(), 64);
+    }
+}

@@ -218,6 +218,22 @@ impl CompiledPipeline {
         }
     }
 
+    /// Like [`CompiledPipeline::execute_batch`] but without the per-frame
+    /// input screening: for callers that have already screened every
+    /// frame with [`CompiledPipeline::validate_frame`] (the coordinator's
+    /// serving hot path), so each frame is scanned exactly once.
+    /// Crate-internal because an unscreened malformed frame can corrupt
+    /// the lane scratch or panic instead of returning `Err`.
+    pub(crate) fn execute_batch_prevalidated(
+        &mut self,
+        frames: &[&[i64]],
+    ) -> Result<Vec<Vec<i64>>, String> {
+        match &mut self.inner {
+            Inner::Narrow(e) => e.execute_batch_prevalidated(frames),
+            Inner::Wide(e) => e.execute_batch_prevalidated(frames),
+        }
+    }
+
     /// Check one frame against the lowered program's input contract:
     /// exact length, and the int8 grid when the narrow lowering's bound
     /// analysis assumed it. Exactly the screening `execute` performs, so
@@ -328,6 +344,13 @@ impl<T: Cell> Engine<T> {
     }
 
     fn execute(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        validate(&self.prog, frame)?;
+        self.execute_unchecked(frame)
+    }
+
+    /// The scalar path minus the input screening — callers must have run
+    /// `validate` on `frame` already.
+    fn execute_unchecked(&mut self, frame: &[i64]) -> Result<&[i64], String> {
         let Engine {
             prog,
             ping,
@@ -336,7 +359,6 @@ impl<T: Cell> Engine<T> {
             out,
             ..
         } = self;
-        validate(prog, frame)?;
         for (slot, &v) in ping.iter_mut().zip(frame) {
             *slot = T::from_i64(v);
         }
@@ -360,16 +382,24 @@ impl<T: Cell> Engine<T> {
     }
 
     fn execute_batch(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        for (i, f) in frames.iter().enumerate() {
+            validate(&self.prog, f).map_err(|e| format!("batch frame {i}: {e}"))?;
+        }
+        self.execute_batch_prevalidated(frames)
+    }
+
+    /// The batched path minus the per-frame screening — callers must have
+    /// run `validate` on every frame already (the coordinator's hot path
+    /// screens per request via `validate_frame`, so re-validating here
+    /// would scan every frame twice).
+    fn execute_batch_prevalidated(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
         if frames.is_empty() {
             return Ok(Vec::new());
         }
         if frames.len() == 1 {
             // Lane tiling buys nothing at B = 1: reuse the scalar path.
-            let out = self.execute(frames[0])?;
+            let out = self.execute_unchecked(frames[0])?;
             return Ok(vec![out.to_vec()]);
-        }
-        for (i, f) in frames.iter().enumerate() {
-            validate(&self.prog, f).map_err(|e| format!("batch frame {i}: {e}"))?;
         }
         let b = frames.len();
         // Lane stride rounded up to LANES so every tile can slice a full

@@ -145,6 +145,12 @@ impl PipelineSim {
         })
     }
 
+    /// Flattened input frame length (HWC) the engines expect — what the
+    /// serving registry, load generators and CLI size their frames to.
+    pub fn input_len(&self) -> usize {
+        self.qmodel.input_shape.iter().map(|&d| d.max(1)).product()
+    }
+
     /// Simulate `frames` (each a flat x_q of the model's input shape, HWC
     /// row-major, int8-valued): values via the compiled engine's batched
     /// tier (one program traversal for the whole stream), cycles via the
@@ -153,8 +159,7 @@ impl PipelineSim {
     /// re-deriving window indices, weight lookups, or schedule state per
     /// pixel.
     pub fn run(&self, frames: &[Vec<i64>]) -> Result<PipelineResult, String> {
-        let [h0, w0, c0] = self.qmodel.input_shape;
-        let in_len = h0.max(1) * w0.max(1) * c0;
+        let in_len = self.input_len();
         for (i, f) in frames.iter().enumerate() {
             if f.len() != in_len {
                 return Err(format!("frame {i}: len {} != {in_len}", f.len()));

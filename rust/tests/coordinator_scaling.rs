@@ -1,22 +1,47 @@
 //! Integration tests for the sharded coordinator: bit-exactness against
 //! the single-`PipelineSim` golden path under concurrent load, rejection
 //! under queue overflow, metric reconciliation, and deterministic
-//! simulated-throughput scaling with the worker count.
+//! simulated-throughput scaling with the worker count — plus the
+//! multi-model tier: registry caching (hit/miss/eviction, single-flight,
+//! cold-vs-warm lowering), seeded heterogeneous traces, and per-model +
+//! aggregate reconciliation including drain partial batches.
 //!
-//! Everything runs on the synthetic fixture — no artifacts, no skips, no
-//! wall-clock sleeps: determinism comes from seeded traces, the FIFO
-//! drain-on-shutdown, and simulated (not wall) time.
+//! Everything runs on synthetic or synthesized fixtures — no artifacts,
+//! no skips, no wall-clock sleeps: determinism comes from seeded traces,
+//! the FIFO drain-on-shutdown, and simulated (not wall) time.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use cnn_flow::coordinator::{loadgen, Pending, Server, ServerConfig};
+use cnn_flow::coordinator::{loadgen, ModelRoute, Pending, Server, ServerConfig};
+use cnn_flow::model::zoo;
 use cnn_flow::quant::QModel;
+use cnn_flow::runtime::ModelRegistry;
 use cnn_flow::sim::pipeline::PipelineSim;
 use cnn_flow::util::Rng;
 
 fn fixture() -> QModel {
     QModel::synthetic(8, 4, 6, 0x5CA1E)
+}
+
+/// Three heterogeneous serving-zoo models, synthesized with fixed seeds:
+/// the mixed-traffic fleet every multi-model test replays against.
+fn three_model_fleet() -> Vec<(String, PipelineSim)> {
+    [zoo::digits_cnn(), zoo::mobilenet_micro(), zoo::vgg_micro()]
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0xF1EE7 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
+fn fleet_specs(fleet: &[(String, PipelineSim)]) -> Vec<(String, usize)> {
+    fleet
+        .iter()
+        .map(|(id, sim)| (id.clone(), sim.input_len()))
+        .collect()
 }
 
 #[test]
@@ -253,6 +278,260 @@ fn batch_metrics_reconcile_under_seeded_trace() {
             );
         }
     }
+}
+
+// --------------------------------------------------------------------
+// Registry: lowered-pipeline cache behaviour.
+// --------------------------------------------------------------------
+
+#[test]
+fn registry_counts_hits_misses_and_evictions() {
+    let reg = ModelRegistry::new(2);
+    let a1 = reg
+        .get_or_lower("a", || Ok(QModel::synthetic(8, 4, 6, 1)))
+        .unwrap();
+    let a2 = reg
+        .get_or_lower("a", || Err("cached entries must not re-lower".into()))
+        .unwrap();
+    assert!(Arc::ptr_eq(&a1, &a2), "hit must return the cached artifact");
+    reg.get_or_lower("b", || Ok(QModel::synthetic(8, 4, 6, 2)))
+        .unwrap();
+    // Capacity 2: inserting c evicts the LRU entry (a, last used before b).
+    reg.get_or_lower("c", || Ok(QModel::synthetic(8, 4, 6, 3)))
+        .unwrap();
+    assert!(!reg.contains("a"));
+    assert!(reg.contains("b") && reg.contains("c"));
+    // Re-requesting the evicted model is a fresh miss (and evicts b).
+    reg.get_or_lower("a", || Ok(QModel::synthetic(8, 4, 6, 1)))
+        .unwrap();
+    let s = reg.stats();
+    assert_eq!(s.hits, 1, "{s:?}");
+    assert_eq!(s.misses, 4, "{s:?}");
+    assert_eq!(s.evictions, 2, "{s:?}");
+    assert_eq!(s.cached, 2, "{s:?}");
+}
+
+#[test]
+fn registry_concurrent_get_or_lower_shares_one_artifact() {
+    // Single-flight: N threads racing on a cold key observe exactly one
+    // lowering and end up holding the same Arc.
+    let reg = Arc::new(ModelRegistry::new(4));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let r = Arc::clone(&reg);
+        handles.push(std::thread::spawn(move || {
+            r.get_or_lower("shared", || Ok(QModel::synthetic(12, 8, 10, 0xCC)))
+                .unwrap()
+        }));
+    }
+    let artifacts: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for a in &artifacts[1..] {
+        assert!(Arc::ptr_eq(&artifacts[0], a), "racers must share one bundle");
+    }
+    let s = reg.stats();
+    assert_eq!(s.misses, 1, "exactly one lowering: {s:?}");
+    assert_eq!(s.hits, 7, "{s:?}");
+}
+
+#[test]
+fn registry_warm_lookup_beats_cold_lowering() {
+    // Cold = synthesize + plan + lower a heavyweight fixture; warm = a
+    // lock + hash lookup. The gap is orders of magnitude, so asserting
+    // warm <= cold is robust.
+    let reg = ModelRegistry::new(2);
+    let t0 = Instant::now();
+    reg.get_or_lower("heavy", || Ok(QModel::synthetic(24, 8, 10, 0xC01D)))
+        .unwrap();
+    let cold = t0.elapsed();
+    let t1 = Instant::now();
+    reg.get_or_lower("heavy", || Err("warm lookups must not re-lower".into()))
+        .unwrap();
+    let warm = t1.elapsed();
+    // Generous escape hatch against scheduler noise: a warm hit is a lock
+    // + hash lookup, so it either beats the cold path outright or stays
+    // far below any plausible lowering time.
+    assert!(
+        warm <= cold || warm < Duration::from_micros(50),
+        "warm lookup {warm:?} slower than cold lowering {cold:?}"
+    );
+}
+
+// --------------------------------------------------------------------
+// Multi-model serving: heterogeneous traces, routing, reconciliation.
+// --------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_trace_same_seed_is_deterministic() {
+    // Same seed => identical per-model completion counts and identical
+    // per-model metrics reconciliation across independent replays.
+    let mut per_run_completed: Vec<Vec<u64>> = Vec::new();
+    for _run in 0..2 {
+        let fleet = three_model_fleet();
+        let specs = fleet_specs(&fleet);
+        let trace = loadgen::MultiTrace::seeded(0xDE7E, 75, &specs, 2);
+        let mut server = Server::start_multi(
+            fleet,
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_micros(300),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let report = loadgen::replay_multi(&server, &trace, 8, None);
+        assert_eq!(report.aggregate.ok, 75);
+        assert_eq!(report.aggregate.rejected, 0);
+        server.drain();
+        let m = server.metrics();
+        assert_eq!(m.completed, 75);
+        assert_eq!(m.errored, 0);
+        assert_eq!(
+            m.occupancy_frames,
+            m.completed + m.errored,
+            "aggregate occupancy must reconcile"
+        );
+        assert_eq!(m.flush_full + m.flush_deadline + m.flush_drain, m.batches);
+        let per = server.model_metrics();
+        let counts: Vec<u64> = per.iter().map(|p| p.metrics.completed).collect();
+        // Replay-side per-model ok counts agree with the server's view,
+        // and both match the seeded trace's model assignment.
+        for ((p, rep), trace_count) in per
+            .iter()
+            .zip(&report.per_model)
+            .zip(trace.per_model_counts())
+        {
+            assert_eq!(p.metrics.completed, rep.ok, "{}", p.model);
+            assert_eq!(p.metrics.completed, trace_count, "{}", p.model);
+            assert_eq!(
+                p.metrics.occupancy_frames,
+                p.metrics.completed + p.metrics.errored,
+                "{}: per-model occupancy must reconcile",
+                p.model
+            );
+            assert_eq!(
+                p.metrics.flush_full + p.metrics.flush_deadline + p.metrics.flush_drain,
+                p.metrics.batches,
+                "{}: flush reasons must partition the batches",
+                p.model
+            );
+        }
+        per_run_completed.push(counts);
+    }
+    assert_eq!(
+        per_run_completed[0], per_run_completed[1],
+        "same seed must give identical per-model completion counts"
+    );
+}
+
+#[test]
+fn mixed_three_model_trace_bit_exact_and_fully_reconciled() {
+    // THE acceptance case: a seeded 3-model trace through per-model shard
+    // groups (sized by the route table) is bit-exact against each model's
+    // own single-`PipelineSim` interpreter-backed golden path, and every
+    // per-model + aggregate counter reconciles exactly.
+    let fleet = three_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let golden_sims: Vec<PipelineSim> = fleet.iter().map(|(_, s)| s.clone()).collect();
+    let golden_refs: Vec<&PipelineSim> = golden_sims.iter().collect();
+    let trace = loadgen::MultiTrace::seeded(0x3A0D, 90, &specs, 1);
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+    let routes: Vec<ModelRoute> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, (id, _))| ModelRoute {
+            model: id.clone(),
+            workers: 1 + i % 2, // mixed group sizes: 1, 2, 1
+        })
+        .collect();
+    let mut server = Server::start_multi(
+        fleet,
+        ServerConfig {
+            workers: 4, // overridden per model by the route table
+            max_batch: 5,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::from_micros(400),
+            routes,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let report = loadgen::replay_multi(&server, &trace, 10, Some(&expected));
+    assert_eq!(report.aggregate.ok, 90);
+    assert_eq!(report.aggregate.mismatched, 0, "multi-model serving diverged");
+    assert_eq!(report.aggregate.rejected, 0);
+    server.drain();
+    let m = server.metrics();
+    assert_eq!(m.models, 3);
+    assert_eq!(m.workers, 4, "route table: 1 + 2 + 1 shards");
+    assert_eq!(m.completed, 90);
+    assert_eq!(m.accepted, 90);
+    assert_eq!(m.occupancy_frames, m.completed + m.errored);
+    assert_eq!(m.flush_full + m.flush_deadline + m.flush_drain, m.batches);
+    let hist_batches: u64 = m.batch_occupancy.iter().sum();
+    assert_eq!(hist_batches, m.batches);
+    let per = server.model_metrics();
+    assert_eq!(per.iter().map(|p| p.metrics.completed).sum::<u64>(), 90);
+    assert_eq!(
+        per.iter().map(|p| p.metrics.batches).sum::<u64>(),
+        m.batches,
+        "per-model batches must sum to the aggregate"
+    );
+    for (p, rep) in per.iter().zip(&report.per_model) {
+        assert_eq!(p.metrics.completed, rep.ok, "{}", p.model);
+        assert_eq!(rep.mismatched, 0, "{}", p.model);
+    }
+}
+
+#[test]
+fn multi_model_drain_partial_batches_reconcile_per_model() {
+    // Queue a different sub-max_batch request count per model with a far
+    // deadline, then shut down: each group flushes exactly one drain
+    // batch, and per-model + aggregate occupancy accounting includes
+    // these partial batches.
+    let fleet = three_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let models: Vec<String> = specs.iter().map(|(id, _)| id.clone()).collect();
+    let server = Server::start_multi(
+        fleet,
+        ServerConfig {
+            workers: 1,
+            max_batch: 16,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::from_secs(30),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let mut pendings: Vec<Pending> = Vec::new();
+    for (i, (id, len)) in specs.iter().enumerate() {
+        for _ in 0..=i {
+            pendings.push(server.submit_to(id, vec![1i64; *len]).unwrap());
+        }
+    }
+    // Inspect per-model views before consuming the server.
+    let per_before = server.models();
+    assert_eq!(per_before, models);
+    let m = server.shutdown();
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    assert_eq!(m.completed, 6, "1 + 2 + 3 drained requests");
+    assert_eq!(m.batches, 3, "one partial drain batch per model");
+    assert_eq!(m.flush_drain, 3);
+    assert_eq!(m.flush_full + m.flush_deadline, 0);
+    assert_eq!(m.occupancy_frames, 6, "drain partial batches accounted");
+    // Occupancy histogram: one batch each of sizes 1, 2 and 3.
+    assert_eq!(m.batch_occupancy[0], 1);
+    assert_eq!(m.batch_occupancy[1], 1);
+    assert_eq!(m.batch_occupancy[2], 1);
 }
 
 #[test]

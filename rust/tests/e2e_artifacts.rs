@@ -20,9 +20,9 @@ use cnn_flow::runtime::artifacts_dir;
 use cnn_flow::sim::pipeline::PipelineSim;
 use cnn_flow::util::json::Json;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 use cnn_flow::runtime::{ModelBundle, Runtime};
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 use cnn_flow::util::Rng;
 
 fn ready() -> bool {
@@ -205,7 +205,7 @@ fn serve_digits_artifact_bit_identical_no_pjrt_needed() {
     assert_eq!(m.completed, qm.test_vectors.len() as u64);
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 #[test]
 fn three_way_agreement_on_random_inputs() {
     if !ready() {
@@ -238,7 +238,7 @@ fn three_way_agreement_on_random_inputs() {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 #[test]
 fn serve_with_live_golden_verification() {
     if !ready() {

@@ -10,6 +10,7 @@
 //!   per-layer statistics **exactly**.
 
 use cnn_flow::flow::Ratio;
+use cnn_flow::model::zoo;
 use cnn_flow::quant::{QKind, QLayer, QModel};
 use cnn_flow::sim::compiled::CompiledPipeline;
 use cnn_flow::sim::pipeline::PipelineSim;
@@ -232,6 +233,79 @@ fn batch_prediction_divergence_is_zero_at_any_size() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn serving_zoo_configs_bit_identical_across_every_tier() {
+    // The multi-model serving contract (DESIGN.md §7): every serving-zoo
+    // config — MobileNet-like depthwise stack, VGG-style net, digits CNN,
+    // JSC MLP — lowers and runs **bit-identical** across the fused
+    // interpreter, single-frame `execute`, and the batched
+    // `execute_batch`, and the closed-form `SchedulePrediction` matches
+    // the exact `ScheduleModel` replay cycle-for-cycle.
+    let mut rng = Rng::new(0x5E2F);
+    for (i, model) in zoo::serving_zoo().iter().enumerate() {
+        let qm = QModel::synthesize(model, 0x600 + i as u64)
+            .unwrap_or_else(|e| panic!("{}: synthesize failed: {e}", model.name));
+        let sim = PipelineSim::new(qm.clone(), None)
+            .unwrap_or_else(|e| panic!("{}: lowering failed: {e}", model.name));
+        let mut engine = CompiledPipeline::lower(&qm).unwrap();
+        let len = sim.input_len();
+        let frames = rand_frames(&mut rng, 5, len);
+        let oracle = sim.run_interpreted(&frames).unwrap();
+        // Tier 1: single-frame compiled execution.
+        for (f, want) in frames.iter().zip(&oracle.outputs) {
+            assert_eq!(
+                engine.execute(f).unwrap(),
+                want.as_slice(),
+                "{}: execute diverged from the interpreter",
+                model.name
+            );
+        }
+        // Tier 2: one batched traversal over the whole stream.
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(
+            engine.execute_batch(&refs).unwrap(),
+            oracle.outputs,
+            "{}: execute_batch diverged from the interpreter",
+            model.name
+        );
+        // Tier 3: the analytic schedule. The exact replay must reproduce
+        // the interpreter's cycles, and the closed-form prediction must
+        // reproduce the replay at every count (these full-rate plans
+        // certify their steady state).
+        assert!(
+            sim.predicted.exact,
+            "{}: full-rate serving config failed to certify steady state",
+            model.name
+        );
+        for n in [1usize, 2, frames.len(), 40] {
+            let replay = sim.schedule.run(n);
+            assert_eq!(
+                sim.predicted.total_cycles(n),
+                replay.total_cycles,
+                "{}: prediction total_cycles diverged at n={n}",
+                model.name
+            );
+            assert_eq!(
+                sim.predicted.cycles_per_frame(n),
+                replay.cycles_per_frame,
+                "{}: prediction cycles/frame diverged at n={n}",
+                model.name
+            );
+        }
+        let replay = sim.schedule.run(frames.len());
+        assert_eq!(
+            replay.total_cycles, oracle.total_cycles,
+            "{}: schedule replay diverged from the interpreter",
+            model.name
+        );
+        assert_eq!(
+            replay.first_frame_latency, oracle.first_frame_latency,
+            "{}: frame-0 latency diverged",
+            model.name
+        );
+    }
 }
 
 #[test]
