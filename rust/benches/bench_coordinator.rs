@@ -16,13 +16,22 @@
 //! per-model shard groups, checks every response against each model's own
 //! golden sim, and reports per-model + aggregate figures — one `BENCH
 //! coordinator/mixed/...` line per model.
+//!
+//! A third case measures the TCP front-end's tax: the median round-trip
+//! of one blocking request in-process (`Server::infer`) vs over a
+//! localhost socket (`net::Client::infer` against a `NetServer` on
+//! 127.0.0.1), merged into `BENCH_pipeline.json` under `"net"` so the
+//! socket overhead is tracked across PRs next to the engine numbers.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cnn_flow::coordinator::{loadgen, Server, ServerConfig};
 use cnn_flow::model::zoo;
+use cnn_flow::net::{Client, NetServer};
 use cnn_flow::quant::QModel;
 use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::bench::{self, black_box, BenchOpts, Bencher, NetComparison};
 
 fn main() {
     println!("# bench group: coordinator");
@@ -156,4 +165,60 @@ fn main() {
         m.models,
     );
     println!("OK: mixed 3-model traffic served bit-exactly with reconciled metrics");
+
+    // --- localhost round-trip vs in-process submit overhead ------------
+    let qm = QModel::synthetic(8, 4, 6, 0x7C9);
+    let coord = Arc::new(
+        Server::start(
+            qm,
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_millis(0),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let model = coord.models()[0].clone();
+    let frame = vec![1i64; 64];
+    let expect = coord.infer(frame.clone()).unwrap().logits;
+    let b = Bencher::with_opts(
+        "coordinator",
+        BenchOpts {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(250),
+            max_iters: 50_000,
+        },
+    );
+    let inproc_rtt_ns = b.bench("inproc_rtt", || {
+        black_box(coord.infer(frame.clone()).unwrap());
+    });
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 1).unwrap();
+    // Sanity: the socket path answers bit-identically before we time it.
+    assert_eq!(client.infer(&model, &frame).unwrap().logits, expect);
+    let tcp_rtt_ns = b.bench("tcp_rtt", || {
+        black_box(client.infer(&model, &frame).unwrap());
+    });
+    let snap = net.shutdown();
+    assert_eq!(snap.errors_total(), 0, "net bench saw protocol errors");
+    let cmp = NetComparison {
+        inproc_rtt_ns,
+        tcp_rtt_ns,
+    };
+    println!(
+        "BENCH coordinator/net inproc_rtt={:.2}us tcp_rtt={:.2}us \
+         overhead={:.2}us ratio={:.1}x",
+        cmp.inproc_rtt_ns / 1e3,
+        cmp.tcp_rtt_ns / 1e3,
+        cmp.overhead_ns() / 1e3,
+        cmp.overhead_ratio(),
+    );
+    bench::merge_net_bench_json(std::path::Path::new("BENCH_pipeline.json"), &cmp)
+        .expect("merge net figures into BENCH_pipeline.json");
+    println!("OK: localhost round-trip measured and merged into BENCH_pipeline.json");
 }

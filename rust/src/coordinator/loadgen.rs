@@ -20,10 +20,18 @@
 //! Responses are optionally checked against caller-provided expected
 //! outputs (the single-`PipelineSim` golden path), which is how the
 //! sharded server's bit-exactness is asserted.
+//!
+//! The replay loop is generic over a [`ReplayTransport`], so the same
+//! harness drives the server in-process ([`replay`], [`replay_multi`])
+//! and over localhost sockets through the TCP front-end ([`replay_net`])
+//! — the network path must reproduce the in-process golden outputs
+//! byte-for-byte (DESIGN.md §8, pinned by `tests/net_serving.rs`).
 
 use std::collections::VecDeque;
 
 use super::{Pending, Server};
+use crate::net::client::{Client, ClientPending};
+use crate::net::proto::ErrorCode;
 use crate::sim::pipeline::PipelineSim;
 use crate::util::Rng;
 
@@ -91,12 +99,91 @@ pub fn golden_outputs(sim: &PipelineSim, trace: &Trace) -> Vec<Vec<i64>> {
 pub struct LoadReport {
     pub submitted: u64,
     pub ok: u64,
-    /// Submissions refused by the server (backpressure or shutdown).
+    /// Submissions refused by the server — backpressure, unknown route,
+    /// or shutdown/drain (including the drain race that loses an
+    /// accepted request's reply channel) — whether the refusal surfaced
+    /// at submit time (in-process) or as a typed protocol error at
+    /// settle time (TCP); both transports share one `classify` split.
     pub rejected: u64,
-    /// Accepted requests whose reply channel was dropped.
+    /// Requests whose answer failed for per-request reasons: frame
+    /// validation errors or transport losses.
     pub dropped: u64,
     /// Responses that differed from the expected golden outputs.
     pub mismatched: u64,
+}
+
+/// How a failed replay request is counted: `Rejected` maps to
+/// [`LoadReport::rejected`], `Dropped` to [`LoadReport::dropped`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayError {
+    Rejected,
+    Dropped,
+}
+
+/// A transport the virtual-clock replay loop can drive. Two
+/// implementations: in-process ([`Server`] — `submit_to` + `Pending`)
+/// and over TCP ([`Client`] — one pooled socket per in-flight request).
+/// `submit` must never block on the answer; `wait` settles one request.
+/// Keeping both behind one trait is what guarantees [`replay_multi`] and
+/// [`replay_net`] can never drift apart semantically — the golden
+/// network-equality tests compare their reports directly.
+pub trait ReplayTransport {
+    type Pending;
+    /// Borrowed frame: each transport copies exactly once (the in-process
+    /// path into its `Vec`, the TCP path into the wire frame).
+    fn submit(&self, model: &str, frame: &[i64]) -> Result<Self::Pending, ReplayError>;
+    fn wait(pending: Self::Pending) -> Result<Vec<i64>, ReplayError>;
+}
+
+/// The single rejected/dropped split both transports share, keyed on the
+/// wire-level [`ErrorCode`] classification (in-process errors are run
+/// through [`ErrorCode::from_reject`] first): server *refusals* —
+/// backpressure, unknown route, drain — count as rejected; per-request
+/// validation failures and transport losses count as dropped. One
+/// classifier for both paths is what makes the report-equality contract
+/// (`tests/net_serving.rs`) hold even on error-bearing traces.
+fn classify(code: ErrorCode) -> ReplayError {
+    match code {
+        ErrorCode::QueueFull | ErrorCode::UnknownModel | ErrorCode::Draining => {
+            ReplayError::Rejected
+        }
+        ErrorCode::InvalidFrame | ErrorCode::Malformed => ReplayError::Dropped,
+    }
+}
+
+impl ReplayTransport for Server {
+    type Pending = Pending;
+
+    fn submit(&self, model: &str, frame: &[i64]) -> Result<Pending, ReplayError> {
+        // Every in-process submit refusal (backpressure, unknown route,
+        // stopped server) classifies as a rejection.
+        self.submit_to(model, frame.to_vec())
+            .map_err(|e| classify(ErrorCode::from_reject(&e)))
+    }
+
+    fn wait(pending: Pending) -> Result<Vec<i64>, ReplayError> {
+        pending
+            .wait()
+            .map(|resp| resp.logits)
+            .map_err(|e| classify(ErrorCode::from_reject(&e)))
+    }
+}
+
+impl ReplayTransport for Client {
+    type Pending = ClientPending;
+
+    fn submit(&self, model: &str, frame: &[i64]) -> Result<ClientPending, ReplayError> {
+        // A submit failure here is a transport problem (dial/send), not a
+        // server refusal — refusals come back as typed protocol errors.
+        Client::submit(self, model, frame).map_err(|_| ReplayError::Dropped)
+    }
+
+    fn wait(pending: ClientPending) -> Result<Vec<i64>, ReplayError> {
+        match pending.wait() {
+            Ok(resp) => Ok(resp.logits),
+            Err(e) => Err(e.code.map_or(ReplayError::Dropped, classify)),
+        }
+    }
 }
 
 /// Replay `trace` against `server` with at most `window` requests in
@@ -247,37 +334,65 @@ pub fn replay_multi(
     replay_core(server, &trace.models, &requests, window, expected)
 }
 
-/// The shared virtual-clock replay loop behind [`replay`] and
-/// [`replay_multi`]: requests are `(arrival tick, model index, frame)`
-/// borrows, submitted to `models[model index]`'s shard group in arrival
-/// order with a bounded in-flight window; arrival ticks are barriers
-/// (everything outstanding settles before the clock advances).
-fn replay_core(
-    server: &Server,
+/// Replay a heterogeneous `trace` **over localhost sockets** through a
+/// pooled [`Client`], with the same virtual-clock semantics as
+/// [`replay_multi`] (tick barriers, bounded in-flight window — each
+/// in-flight request holds one pooled connection, so size the client's
+/// pool to `window` to avoid re-dialing). The TCP path must be
+/// **byte-identical** to the in-process replay: the same `expected`
+/// golden outputs apply unchanged, and `tests/net_serving.rs` pins that
+/// both transports produce equal reports for the same seeded trace.
+pub fn replay_net(
+    client: &Client,
+    trace: &MultiTrace,
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+) -> MultiLoadReport {
+    let requests: Vec<(u64, usize, &[i64])> = trace
+        .requests
+        .iter()
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice()))
+        .collect();
+    replay_core(client, &trace.models, &requests, window, expected)
+}
+
+/// The shared virtual-clock replay loop behind [`replay`],
+/// [`replay_multi`] and [`replay_net`]: requests are `(arrival tick,
+/// model index, frame)` borrows, submitted to `models[model index]`'s
+/// shard group in arrival order with a bounded in-flight window; arrival
+/// ticks are barriers (everything outstanding settles before the clock
+/// advances). Generic over the [`ReplayTransport`], so the in-process
+/// and TCP paths share every semantic.
+fn replay_core<T: ReplayTransport>(
+    target: &T,
     models: &[String],
     requests: &[(u64, usize, &[i64])],
     window: usize,
     expected: Option<&[Vec<i64>]>,
 ) -> MultiLoadReport {
-    fn settle(
+    fn settle<T: ReplayTransport>(
         idx: usize,
         model: usize,
-        pending: Pending,
+        pending: T::Pending,
         expected: Option<&[Vec<i64>]>,
         report: &mut MultiLoadReport,
     ) {
-        match pending.wait() {
-            Ok(resp) => {
+        match T::wait(pending) {
+            Ok(logits) => {
                 report.aggregate.ok += 1;
                 report.per_model[model].ok += 1;
                 if let Some(exp) = expected {
-                    if resp.logits != exp[idx] {
+                    if logits != exp[idx] {
                         report.aggregate.mismatched += 1;
                         report.per_model[model].mismatched += 1;
                     }
                 }
             }
-            Err(_) => {
+            Err(ReplayError::Rejected) => {
+                report.aggregate.rejected += 1;
+                report.per_model[model].rejected += 1;
+            }
+            Err(ReplayError::Dropped) => {
                 report.aggregate.dropped += 1;
                 report.per_model[model].dropped += 1;
             }
@@ -289,7 +404,7 @@ fn replay_core(
         aggregate: LoadReport::default(),
         per_model: vec![LoadReport::default(); models.len()],
     };
-    let mut inflight: VecDeque<(usize, usize, Pending)> = VecDeque::new();
+    let mut inflight: VecDeque<(usize, usize, T::Pending)> = VecDeque::new();
     let mut clock = requests.first().map(|&(tick, _, _)| tick).unwrap_or(0);
     for (i, &(at_tick, model, frame)) in requests.iter().enumerate() {
         // Tick barrier: the virtual clock only advances once every
@@ -297,25 +412,29 @@ fn replay_core(
         if at_tick != clock {
             clock = at_tick;
             while let Some((idx, m, p)) = inflight.pop_front() {
-                settle(idx, m, p, expected, &mut report);
+                settle::<T>(idx, m, p, expected, &mut report);
             }
         }
         while inflight.len() >= window {
             let (idx, m, p) = inflight.pop_front().unwrap();
-            settle(idx, m, p, expected, &mut report);
+            settle::<T>(idx, m, p, expected, &mut report);
         }
         report.aggregate.submitted += 1;
         report.per_model[model].submitted += 1;
-        match server.submit_to(&models[model], frame.to_vec()) {
+        match target.submit(&models[model], frame) {
             Ok(p) => inflight.push_back((i, model, p)),
-            Err(_) => {
+            Err(ReplayError::Rejected) => {
                 report.aggregate.rejected += 1;
                 report.per_model[model].rejected += 1;
+            }
+            Err(ReplayError::Dropped) => {
+                report.aggregate.dropped += 1;
+                report.per_model[model].dropped += 1;
             }
         }
     }
     while let Some((idx, m, p)) = inflight.pop_front() {
-        settle(idx, m, p, expected, &mut report);
+        settle::<T>(idx, m, p, expected, &mut report);
     }
     report
 }

@@ -15,6 +15,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::util::json::Json;
+
 /// Number of log2 latency buckets: bucket `i` covers `[2^i, 2^(i+1))`
 /// nanoseconds, so 40 buckets span 1 ns .. ~18 minutes.
 pub const BUCKETS: usize = 40;
@@ -276,6 +278,54 @@ pub struct MetricsSnapshot {
     pub aggregate_fps: f64,
 }
 
+impl MetricsSnapshot {
+    /// Machine-readable export via `util::json`: counters as integers,
+    /// durations in nanoseconds, the occupancy histogram as an array.
+    /// (Counts pass through `f64`, exact up to 2^53 — far beyond any
+    /// serving session this repo models.)
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::from(self.workers)),
+            ("models", Json::from(self.models)),
+            ("accepted", Json::from(self.accepted as f64)),
+            ("rejected", Json::from(self.rejected as f64)),
+            ("spilled", Json::from(self.spilled as f64)),
+            ("unrouted", Json::from(self.unrouted as f64)),
+            ("completed", Json::from(self.completed as f64)),
+            ("batches", Json::from(self.batches as f64)),
+            ("verified", Json::from(self.verified as f64)),
+            ("mismatches", Json::from(self.mismatches as f64)),
+            ("predicted_cycles", Json::from(self.predicted_cycles as f64)),
+            ("simulated_cycles", Json::from(self.simulated_cycles as f64)),
+            ("cycle_divergence", Json::from(self.cycle_divergence as f64)),
+            ("errored", Json::from(self.errored as f64)),
+            ("occupancy_frames", Json::from(self.occupancy_frames as f64)),
+            ("flush_full", Json::from(self.flush_full as f64)),
+            ("flush_deadline", Json::from(self.flush_deadline as f64)),
+            ("flush_drain", Json::from(self.flush_drain as f64)),
+            (
+                "batch_occupancy",
+                Json::Arr(
+                    self.batch_occupancy
+                        .iter()
+                        .map(|&c| Json::from(c as f64))
+                        .collect(),
+                ),
+            ),
+            ("mean_batch", Json::from(self.mean_batch)),
+            (
+                "mean_service_ns",
+                Json::from(self.mean_service.as_nanos() as f64),
+            ),
+            ("p50_ns", Json::from(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::from(self.p95.as_nanos() as f64)),
+            ("p99_ns", Json::from(self.p99.as_nanos() as f64)),
+            ("projected_fps", Json::from(self.projected_fps)),
+            ("aggregate_fps", Json::from(self.aggregate_fps)),
+        ])
+    }
+}
+
 /// One model's metrics view: the group's route key plus a
 /// [`MetricsSnapshot`] restricted to that group's intake and shards
 /// (DESIGN.md §7 — per-model and aggregate views reconcile exactly:
@@ -286,6 +336,124 @@ pub struct MetricsSnapshot {
 pub struct ModelMetricsSnapshot {
     pub model: String,
     pub metrics: MetricsSnapshot,
+}
+
+impl ModelMetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::from(self.model.as_str())),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// TCP front-end counters (`net::server::NetServer`): per-connection
+/// bookkeeping plus one protocol-error tally per [`ErrorCode`] — each
+/// code reconciling with exactly one coordinator counter (DESIGN.md §8,
+/// pinned by `tests/net_serving.rs`):
+///
+/// * `responses_ok` ↔ shard `completed` (when the front-end is the only
+///   intake);
+/// * `err_queue_full` ↔ intake `rejected`;
+/// * `err_unknown_model` ↔ [`Metrics::unrouted`];
+/// * `err_invalid_frame` ↔ shard `errored`;
+/// * `err_draining` — refused at the net layer or by a closed intake
+///   (no coordinator counter moves), plus the rare accepted request
+///   whose reply was lost to a drain race (`server dropped request`);
+/// * `err_malformed` — wire-level violations that never became decoded
+///   requests, excluded from the `requests` balance below.
+///
+/// Once drained, `requests == responses_ok + err_queue_full +
+/// err_invalid_frame + err_unknown_model + err_draining`.
+///
+/// [`ErrorCode`]: crate::net::proto::ErrorCode
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Connections accepted.
+    pub connections: AtomicU64,
+    /// Connections fully torn down (reader EOF + writer drained).
+    pub disconnects: AtomicU64,
+    /// Decoded `InferRequest` messages.
+    pub requests: AtomicU64,
+    pub responses_ok: AtomicU64,
+    pub err_queue_full: AtomicU64,
+    pub err_invalid_frame: AtomicU64,
+    pub err_unknown_model: AtomicU64,
+    pub err_draining: AtomicU64,
+    pub err_malformed: AtomicU64,
+}
+
+impl NetMetrics {
+    pub fn snapshot(&self) -> NetMetricsSnapshot {
+        NetMetricsSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            responses_ok: self.responses_ok.load(Ordering::Relaxed),
+            err_queue_full: self.err_queue_full.load(Ordering::Relaxed),
+            err_invalid_frame: self.err_invalid_frame.load(Ordering::Relaxed),
+            err_unknown_model: self.err_unknown_model.load(Ordering::Relaxed),
+            err_draining: self.err_draining.load(Ordering::Relaxed),
+            err_malformed: self.err_malformed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`NetMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetMetricsSnapshot {
+    pub connections: u64,
+    pub disconnects: u64,
+    pub requests: u64,
+    pub responses_ok: u64,
+    pub err_queue_full: u64,
+    pub err_invalid_frame: u64,
+    pub err_unknown_model: u64,
+    pub err_draining: u64,
+    pub err_malformed: u64,
+}
+
+impl NetMetricsSnapshot {
+    /// Protocol errors answered to decoded requests (everything except
+    /// `err_malformed`, which never became a request).
+    pub fn errors_total(&self) -> u64 {
+        self.err_queue_full + self.err_invalid_frame + self.err_unknown_model + self.err_draining
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::from(self.connections as f64)),
+            ("disconnects", Json::from(self.disconnects as f64)),
+            ("requests", Json::from(self.requests as f64)),
+            ("responses_ok", Json::from(self.responses_ok as f64)),
+            ("err_queue_full", Json::from(self.err_queue_full as f64)),
+            ("err_invalid_frame", Json::from(self.err_invalid_frame as f64)),
+            ("err_unknown_model", Json::from(self.err_unknown_model as f64)),
+            ("err_draining", Json::from(self.err_draining as f64)),
+            ("err_malformed", Json::from(self.err_malformed as f64)),
+        ])
+    }
+}
+
+/// The full machine-readable metrics report `serve --metrics-json`
+/// writes on shutdown: the aggregate snapshot, the per-model views, and
+/// (when the TCP front-end ran) the net-layer counters.
+pub fn metrics_report_json(
+    aggregate: &MetricsSnapshot,
+    per_model: &[ModelMetricsSnapshot],
+    net: Option<&NetMetricsSnapshot>,
+) -> Json {
+    let mut pairs = vec![
+        ("aggregate", aggregate.to_json()),
+        (
+            "models",
+            Json::Arr(per_model.iter().map(|m| m.to_json()).collect()),
+        ),
+    ];
+    if let Some(n) = net {
+        pairs.push(("net", n.to_json()));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
@@ -345,6 +513,78 @@ mod tests {
         assert_eq!(c[3], 1);
         assert_eq!(c[OCC_BUCKETS - 1], 2);
         assert_eq!(c.iter().sum::<u64>(), 5, "every batch lands in a bucket");
+    }
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            workers: 2,
+            models: 1,
+            accepted: 10,
+            rejected: 1,
+            spilled: 0,
+            unrouted: 2,
+            completed: 9,
+            batches: 3,
+            verified: 0,
+            mismatches: 0,
+            predicted_cycles: 1234,
+            simulated_cycles: 0,
+            cycle_divergence: 0,
+            errored: 1,
+            occupancy_frames: 10,
+            flush_full: 1,
+            flush_deadline: 1,
+            flush_drain: 1,
+            batch_occupancy: [0; OCC_BUCKETS],
+            mean_batch: 3.3,
+            mean_service: Duration::from_micros(5),
+            p50: Duration::from_micros(4),
+            p95: Duration::from_micros(8),
+            p99: Duration::from_micros(9),
+            projected_fps: 1.0e6,
+            aggregate_fps: 2.0e6,
+        }
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips_through_parser() {
+        let snap = sample_snapshot();
+        let text = snap.to_json().render_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("completed").as_usize(), Some(9));
+        assert_eq!(parsed.get("rejected").as_usize(), Some(1));
+        assert_eq!(parsed.get("p99_ns").as_usize(), Some(9000));
+        assert_eq!(
+            parsed.get("batch_occupancy").as_arr().unwrap().len(),
+            OCC_BUCKETS
+        );
+    }
+
+    #[test]
+    fn metrics_report_includes_models_and_net() {
+        let snap = sample_snapshot();
+        let per = vec![ModelMetricsSnapshot {
+            model: "digits_cnn".into(),
+            metrics: snap,
+        }];
+        let net = NetMetrics::default();
+        net.requests.fetch_add(12, Ordering::Relaxed);
+        net.responses_ok.fetch_add(9, Ordering::Relaxed);
+        net.err_queue_full.fetch_add(1, Ordering::Relaxed);
+        net.err_unknown_model.fetch_add(2, Ordering::Relaxed);
+        let ns = net.snapshot();
+        assert_eq!(ns.errors_total(), 3);
+        let doc = metrics_report_json(&snap, &per, Some(&ns));
+        let parsed = Json::parse(&doc.render()).unwrap();
+        assert_eq!(
+            parsed.get("models").as_arr().unwrap()[0]
+                .get("model")
+                .as_str(),
+            Some("digits_cnn")
+        );
+        assert_eq!(parsed.get("net").get("requests").as_usize(), Some(12));
+        let without_net = metrics_report_json(&snap, &per, None);
+        assert_eq!(*without_net.get("net"), Json::Null);
     }
 
     #[test]

@@ -66,14 +66,17 @@ pub mod metrics;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::quant::QModel;
 use crate::sim::compiled::CompiledPipeline;
 use crate::sim::pipeline::PipelineSim;
 
-pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot, ShardSnapshot};
+pub use metrics::{
+    metrics_report_json, Metrics, MetricsSnapshot, ModelMetricsSnapshot, NetMetrics,
+    NetMetricsSnapshot, ShardSnapshot,
+};
 use metrics::{IntakeMetrics, ShardMetrics};
 
 /// Which execution engine the worker shards run (DESIGN.md §4/§5).
@@ -254,13 +257,19 @@ impl Pending {
 struct Shard {
     tx: SyncSender<Job>,
     metrics: Arc<ShardMetrics>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    /// Worker join handle. Behind a mutex so [`Server::close`] can run
+    /// through a shared reference — the TCP front-end holds the server in
+    /// an `Arc` and must be able to drain it ([`Server::drain_shared`]).
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 /// One model's shard group: the shards serving its pre-lowered pipeline,
 /// that model's round-robin cursor, and its intake counters.
 struct Group {
     model: String,
+    /// Flattened input frame length the group's pipeline expects —
+    /// advertised to TCP clients via [`Server::model_specs`].
+    input_len: usize,
     shards: Vec<Shard>,
     rr: AtomicUsize,
     intake: IntakeMetrics,
@@ -270,7 +279,7 @@ struct Group {
 pub struct Server {
     groups: Vec<Group>,
     metrics: Arc<Metrics>,
-    verifier: Option<std::thread::JoinHandle<()>>,
+    verifier: Mutex<Option<std::thread::JoinHandle<()>>>,
     config: ServerConfig,
     open: AtomicBool,
 }
@@ -339,6 +348,7 @@ impl Server {
         let mut shard_id = 0usize;
         for (model_id, base_sim) in models {
             let workers = config.route_workers(&model_id);
+            let input_len = base_sim.input_len();
             // Only the verified model's shards sample responses — the
             // golden executable belongs to exactly one model.
             let samples = verify_model.is_some()
@@ -361,12 +371,13 @@ impl Server {
                 shards.push(Shard {
                     tx,
                     metrics: shard_metrics,
-                    handle: Some(handle),
+                    handle: Mutex::new(Some(handle)),
                 });
                 shard_id += 1;
             }
             groups.push(Group {
                 model: model_id,
+                input_len,
                 shards,
                 rr: AtomicUsize::new(0),
                 intake: IntakeMetrics::default(),
@@ -380,7 +391,7 @@ impl Server {
         Ok(Server {
             groups,
             metrics,
-            verifier,
+            verifier: Mutex::new(verifier),
             config,
             open: AtomicBool::new(true),
         })
@@ -389,6 +400,17 @@ impl Server {
     /// The model ids this server routes, in group order.
     pub fn models(&self) -> Vec<String> {
         self.groups.iter().map(|g| g.model.clone()).collect()
+    }
+
+    /// `(model id, flattened input frame length)` per group, in group
+    /// order — what the TCP front-end ([`crate::net::server::NetServer`])
+    /// advertises so clients can synthesize valid traffic without
+    /// out-of-band knowledge of the hosted models.
+    pub fn model_specs(&self) -> Vec<(String, usize)> {
+        self.groups
+            .iter()
+            .map(|g| (g.model.clone(), g.input_len))
+            .collect()
     }
 
     /// Dispatch within one model's shard group: round-robin with
@@ -615,7 +637,17 @@ impl Server {
         self.close();
     }
 
-    fn close(&mut self) {
+    /// [`Server::drain`] through a shared reference — for callers that
+    /// hold the server in an `Arc`, like the TCP front-end, which must
+    /// flush in-flight coordinator work *between* EOF-ing its connection
+    /// readers and joining its connection writers
+    /// (`net::server::NetServer::shutdown`). Same semantics, same
+    /// idempotence: concurrent drains race benignly on the taken handles.
+    pub fn drain_shared(&self) {
+        self.close();
+    }
+
+    fn close(&self) {
         self.open.store(false, Ordering::Release);
         // The shutdown marker queues FIFO behind every accepted request,
         // so workers answer everything before exiting.
@@ -624,16 +656,26 @@ impl Server {
                 let _ = s.tx.send(Job::Shutdown);
             }
         }
-        for g in &mut self.groups {
-            for s in &mut g.shards {
-                if let Some(h) = s.handle.take() {
+        for g in &self.groups {
+            for s in &g.shards {
+                let handle = s
+                    .handle
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .take();
+                if let Some(h) = handle {
                     let _ = h.join();
                 }
             }
         }
         // All worker-held sampling senders are gone now: the verifier
         // drains its queue and exits.
-        if let Some(v) = self.verifier.take() {
+        let verifier = self
+            .verifier
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take();
+        if let Some(v) = verifier {
             let _ = v.join();
         }
     }

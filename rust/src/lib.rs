@@ -36,6 +36,13 @@
 //!   submits, per-model + aggregate metrics views — DESIGN.md §7), and a
 //!   deterministic seeded-trace load harness ([`coordinator::loadgen`],
 //!   incl. heterogeneous multi-model traces) with a virtual clock,
+//! * [`net`] — the dependency-free TCP serving front-end: a versioned
+//!   length-prefixed wire protocol with typed error codes mapping 1:1
+//!   onto coordinator rejection reasons, a threaded pipelining server
+//!   that fronts `Server::start_multi` (backpressure as protocol errors,
+//!   graceful drain over sockets), a pooled blocking client, and a
+//!   network replay harness whose responses are byte-identical to
+//!   in-process serving (DESIGN.md §8),
 //! * [`report`] — generators that print every paper table and figure.
 //!
 //! Serving scale-out mirrors the companion work (*Data-Rate-Aware
@@ -48,6 +55,7 @@ pub mod coordinator;
 pub mod flow;
 pub mod fpga;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod report;
 pub mod runtime;

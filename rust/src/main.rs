@@ -9,6 +9,10 @@
 //! cnn-flow serve --model M        sharded streaming coordinator demo (E12)
 //! cnn-flow serve --models A,B,C   multi-model serving: registry-lowered zoo
 //!                                 configs behind per-model shard groups
+//! cnn-flow serve --listen H:P     expose the coordinator over TCP (net
+//!                                 front-end; EOF on stdin drains + exits)
+//! cnn-flow client --connect H:P   blocking TCP client: list models, send
+//!                                 seeded traffic, report latency
 //! cnn-flow list                   zoo models
 //! ```
 //!
@@ -17,14 +21,18 @@
 use std::collections::HashMap;
 
 use cnn_flow::complexity::{layer_cost, model_cost, CostOpts};
-use cnn_flow::coordinator::{EngineKind, Server, ServerConfig};
+use cnn_flow::coordinator::{
+    metrics_report_json, EngineKind, MetricsSnapshot, ModelMetricsSnapshot, NetMetricsSnapshot,
+    Server, ServerConfig,
+};
 use cnn_flow::flow::{analyze, plan_all, Ratio};
 use cnn_flow::model::{config::model_from_json, zoo, Model};
+use cnn_flow::net::{Client, NetServer};
 use cnn_flow::quant::QModel;
 use cnn_flow::report;
 use cnn_flow::sim::pipeline::PipelineSim;
 use cnn_flow::util::bench;
-use cnn_flow::util::{paper_count, Table};
+use cnn_flow::util::{paper_count, Rng, Table};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +70,7 @@ fn run(args: &[String]) -> i32 {
         "analyze" => cmd_analyze(&opts),
         "simulate" => cmd_simulate(&opts),
         "serve" => cmd_serve(&opts),
+        "client" => cmd_client(&opts),
         "bench" => cmd_bench(&opts),
         "list" => {
             for m in zoo::all_models() {
@@ -99,8 +108,13 @@ fn usage() {
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
                     [--max-batch N] [--batch-deadline USEC] [--queue-depth N]\n  \
                     [--verify-every N] [--engine compiled|interp]\n  \
+                    [--metrics-json PATH]\n  \
          cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
                     except --verify-every; --workers = shards per model)\n  \
+         cnn-flow serve    --listen <host:port> [--model M|--models A,B|--synthetic]\n  \
+                    (TCP front-end; EOF on stdin drains and exits)\n  \
+         cnn-flow client   --connect <host:port> [--model M] [--requests N] [--pool N]\n  \
+                    [--seed S]\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
          cnn-flow list"
     );
@@ -353,61 +367,27 @@ fn model_seed(name: &str) -> u64 {
         .fold(0xCBF29CE484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001B3))
 }
 
-/// `serve --models a,b,c`: lower each zoo config once through the
-/// `ModelRegistry`, serve them behind per-model shard groups, replay a
-/// seeded heterogeneous trace checked bit-for-bit against each model's
-/// own golden sim, and report per-model + aggregate metrics.
-fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
-    use cnn_flow::coordinator::loadgen;
+/// Canonicalize `--models` aliases through the zoo, dedupe, and lower
+/// each config exactly once through the `ModelRegistry` (`digits` and
+/// `digits_cnn` name the same config, which is lowered and seeded once
+/// under its canonical name and hosted by exactly one group). Prints the
+/// registry stats and per-model predictions; returns `(model id,
+/// pre-lowered pipeline)` pairs ready for `Server::start_multi`.
+fn lower_zoo_models(list: &str) -> Result<Vec<(String, PipelineSim)>, String> {
     use cnn_flow::runtime::ModelRegistry;
 
-    // Canonicalize aliases through the zoo and dedupe: `digits` and
-    // `digits_cnn` name the same config, which is lowered (and seeded)
-    // once under its canonical name and hosted by exactly one group.
     let mut names: Vec<String> = Vec::new();
     for raw in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let Some(model) = zoo::by_name(raw) else {
-            eprintln!("unknown zoo model '{raw}' (see `cnn-flow list`)");
-            return 2;
+            return Err(format!("unknown zoo model '{raw}' (see `cnn-flow list`)"));
         };
         if !names.contains(&model.name) {
             names.push(model.name.clone());
         }
     }
     if names.is_empty() {
-        eprintln!("--models needs at least one zoo model name");
-        return 2;
+        return Err("--models needs at least one zoo model name".into());
     }
-    let requests: usize = opts
-        .get("requests")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(256);
-    let workers: usize = opts.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
-    let max_batch: usize = opts
-        .get("max-batch")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8);
-    let batch_deadline_us: u64 = opts
-        .get("batch-deadline")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(200);
-    let queue_depth: usize = opts
-        .get("queue-depth")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(256);
-    let engine = match engine_flag(opts) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    if opts.contains_key("verify-every") {
-        eprintln!("note: --verify-every is ignored with --models (no PJRT golden verifier on the synthesized zoo path)");
-    }
-
-    // Lower every model exactly once through the registry (names are
-    // canonical and unique at this point).
     let registry = ModelRegistry::new(names.len());
     let mut lowered = Vec::new();
     for name in &names {
@@ -418,16 +398,17 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
         });
         match bundle {
             Ok(b) => lowered.push(b),
-            Err(e) => {
-                eprintln!("{name}: {e}");
-                return 1;
-            }
+            Err(e) => return Err(format!("{name}: {e}")),
         }
     }
     let rs = registry.stats();
     println!(
-        "registry: {} models cached ({} hits, {} misses, {} evictions)",
-        rs.cached, rs.hits, rs.misses, rs.evictions
+        "registry: {}/{} models cached ({} hits, {} misses, {} evictions)",
+        rs.cached,
+        registry.capacity(),
+        rs.hits,
+        rs.misses,
+        rs.evictions
     );
     for (name, b) in names.iter().zip(&lowered) {
         println!(
@@ -437,22 +418,96 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
             b.pipeline.predicted.throughput_fps(600.0e6) / 1e6,
         );
     }
+    Ok(names
+        .into_iter()
+        .zip(lowered.iter().map(|b| b.pipeline.clone()))
+        .collect())
+}
 
-    let config = ServerConfig {
+/// Shared `serve` flag parsing — one place wires a `ServerConfig` flag
+/// for every serve mode (`--model`, `--models`, `--listen`), so a new
+/// flag cannot be silently honored by one mode and ignored by another.
+/// Per-mode defaults come in as arguments; `verify_every` starts at 0
+/// (only the single-artifact-model paths opt into the PJRT verifier).
+fn serve_config(
+    opts: &HashMap<String, String>,
+    workers_default: usize,
+    max_batch_default: usize,
+    deadline_default_us: u64,
+) -> Result<ServerConfig, String> {
+    let workers = opts
+        .get("workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(workers_default);
+    // --max-batch is the micro-batch bound; --batch stays as an alias.
+    let max_batch = opts
+        .get("max-batch")
+        .or_else(|| opts.get("batch"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(max_batch_default);
+    let batch_deadline_us = opts
+        .get("batch-deadline")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(deadline_default_us);
+    let queue_depth = opts
+        .get("queue-depth")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    Ok(ServerConfig {
         workers,
         max_batch,
         queue_depth,
         verify_every: 0,
-        engine,
+        engine: engine_flag(opts)?,
         batch_deadline: std::time::Duration::from_micros(batch_deadline_us),
         ..Default::default()
+    })
+}
+
+/// Dump the machine-readable metrics report (`--metrics-json PATH`).
+fn write_metrics_json(
+    path: &str,
+    aggregate: &MetricsSnapshot,
+    per_model: &[ModelMetricsSnapshot],
+    net: Option<&NetMetricsSnapshot>,
+) -> Result<(), String> {
+    let doc = metrics_report_json(aggregate, per_model, net);
+    std::fs::write(path, doc.render_pretty()).map_err(|e| format!("write {path}: {e}"))
+}
+
+/// `serve --models a,b,c`: lower each zoo config once through the
+/// `ModelRegistry`, serve them behind per-model shard groups, replay a
+/// seeded heterogeneous trace checked bit-for-bit against each model's
+/// own golden sim, and report per-model + aggregate metrics.
+fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
+    use cnn_flow::coordinator::loadgen;
+
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let config = match serve_config(opts, 2, 8, 200) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
-    let bundles: Vec<(String, cnn_flow::sim::pipeline::PipelineSim)> = names
-        .iter()
-        .cloned()
-        .zip(lowered.iter().map(|b| b.pipeline.clone()))
-        .collect();
-    let mut server = match Server::start_multi(bundles, config, None) {
+    let workers = config.workers;
+    let engine = config.engine;
+    if opts.contains_key("verify-every") {
+        eprintln!("note: --verify-every is ignored with --models (no PJRT golden verifier on the synthesized zoo path)");
+    }
+
+    let models = match lower_zoo_models(list) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let mut server = match Server::start_multi(models.clone(), config, None) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -460,14 +515,12 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
         }
     };
 
-    let specs: Vec<(String, usize)> = names
+    let specs: Vec<(String, usize)> = models
         .iter()
-        .cloned()
-        .zip(lowered.iter().map(|b| b.input_len()))
+        .map(|(id, sim)| (id.clone(), sim.input_len()))
         .collect();
     let trace = loadgen::MultiTrace::seeded(0x517A, requests, &specs, 1);
-    let sims: Vec<&cnn_flow::sim::pipeline::PipelineSim> =
-        lowered.iter().map(|b| &b.pipeline).collect();
+    let sims: Vec<&PipelineSim> = models.iter().map(|(_, sim)| sim).collect();
     let expected = loadgen::golden_outputs_multi(&sims, &trace);
     let started = std::time::Instant::now();
     let report = loadgen::replay_multi(&server, &trace, 4 * workers.max(1), Some(&expected));
@@ -506,6 +559,13 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
         m.predicted_cycles,
         m.cycle_divergence
     );
+    if let Some(path) = opts.get("metrics-json") {
+        if let Err(e) = write_metrics_json(path, &m, &server.model_metrics(), None) {
+            eprintln!("{e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
     if report.aggregate.mismatched > 0 {
         eprintln!("PER-MODEL GOLDEN MISMATCHES DETECTED");
         return 1;
@@ -517,7 +577,211 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// `serve --listen host:port`: expose the coordinator over TCP. Hosts
+/// either the zoo fleet (`--models a,b,c`, registry-lowered) or a single
+/// model (`--model`/`--synthetic`), prints the bound address, then
+/// serves until stdin reaches EOF — at which point the net front-end
+/// drains gracefully (in-flight requests complete, sockets close) and
+/// the final coordinator + net metrics are reported.
+fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
+    let mut config = match serve_config(opts, 2, 16, 1000) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let server = if let Some(list) = opts.get("models") {
+        let models = match lower_zoo_models(list) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        Server::start_multi(models, config, None)
+    } else if opts.contains_key("synthetic") {
+        Server::start(QModel::synthetic(12, 8, 10, 0xF1C), config, None)
+    } else {
+        let name = opts.get("model").map(String::as_str).unwrap_or("digits");
+        let qm = match load_qmodel(name) {
+            Ok(q) => q,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        config.verify_every = opts
+            .get("verify-every")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8);
+        Server::start(qm, config, Some(name.to_string()))
+    };
+    let server = match server {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+
+    let mut net = match NetServer::bind(addr, std::sync::Arc::clone(&server)) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let bound = net.local_addr();
+    let routed: Vec<String> = server
+        .model_specs()
+        .iter()
+        .map(|(id, len)| format!("{id} ({len} inputs)"))
+        .collect();
+    println!("listening on {bound} — routing {}", routed.join(", "));
+    println!("serving until stdin reaches EOF (try `cnn-flow client --connect {bound}`)");
+
+    // Block until the controlling stdin closes, then drain.
+    let mut buf = [0u8; 4096];
+    let mut stdin = std::io::stdin();
+    while matches!(std::io::Read::read(&mut stdin, &mut buf), Ok(n) if n > 0) {}
+
+    let net_snap = net.shutdown(); // drains the coordinator too
+    let m = server.metrics();
+    println!(
+        "net: {} connection(s), {} request(s), {} ok, {} queue-full, {} invalid-frame, \
+         {} unknown-model, {} draining, {} malformed",
+        net_snap.connections,
+        net_snap.requests,
+        net_snap.responses_ok,
+        net_snap.err_queue_full,
+        net_snap.err_invalid_frame,
+        net_snap.err_unknown_model,
+        net_snap.err_draining,
+        net_snap.err_malformed
+    );
+    println!(
+        "coordinator: {} completed, {} batches (mean {:.1}), {} rejected, {} unrouted, \
+         p99 {:?}, {:.2} MInf/s aggregate",
+        m.completed,
+        m.batches,
+        m.mean_batch,
+        m.rejected,
+        m.unrouted,
+        m.p99,
+        m.aggregate_fps / 1e6
+    );
+    if let Some(path) = opts.get("metrics-json") {
+        if let Err(e) = write_metrics_json(path, &m, &server.model_metrics(), Some(&net_snap)) {
+            eprintln!("{e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// `cnn-flow client --connect host:port`: the TCP counterpart of `serve
+/// --listen`. Queries the server's model list, sends seeded random
+/// traffic at the requested model (default: the first route), and
+/// reports wall-clock latency quantiles and throughput.
+fn cmd_client(opts: &HashMap<String, String>) -> i32 {
+    let Some(addr) = opts.get("connect") else {
+        eprintln!("client requires --connect <host:port>");
+        return 2;
+    };
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let pool: usize = opts.get("pool").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let seed: u64 = opts
+        .get("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC11E27);
+    let client = match Client::connect(addr, pool) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let specs = match client.models() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("server routes {} model(s):", specs.len());
+    for (id, len) in &specs {
+        println!("  {id}: {len} inputs");
+    }
+    let (model, input_len) = match opts.get("model") {
+        Some(want) => match specs.iter().find(|(id, _)| id == want) {
+            Some(s) => s.clone(),
+            None => {
+                eprintln!("server has no route for '{want}'");
+                return 1;
+            }
+        },
+        None => match specs.first() {
+            Some(s) => s.clone(),
+            None => {
+                eprintln!("server advertises no models");
+                return 1;
+            }
+        },
+    };
+
+    let mut rng = Rng::new(seed);
+    let mut latencies = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    let started = std::time::Instant::now();
+    for _ in 0..requests {
+        let frame: Vec<i64> = (0..input_len).map(|_| rng.int8() as i64).collect();
+        let t0 = std::time::Instant::now();
+        match client.infer(&model, &frame) {
+            Ok(_) => latencies.push(t0.elapsed()),
+            Err(e) => {
+                errors += 1;
+                if errors <= 3 {
+                    eprintln!("{e}");
+                }
+            }
+        }
+    }
+    let wall = started.elapsed();
+    latencies.sort();
+    let quantile = |q: f64| -> std::time::Duration {
+        if latencies.is_empty() {
+            std::time::Duration::ZERO
+        } else {
+            let idx = ((latencies.len() as f64 * q) as usize).min(latencies.len() - 1);
+            latencies[idx]
+        }
+    };
+    println!(
+        "{}: {}/{} ok in {wall:?} ({:.0} req/s), p50 {:?}, p99 {:?}",
+        model,
+        latencies.len(),
+        requests,
+        latencies.len() as f64 / wall.as_secs_f64().max(1e-9),
+        quantile(0.50),
+        quantile(0.99),
+    );
+    if errors > 0 {
+        eprintln!("{errors} request(s) failed");
+        return 1;
+    }
+    0
+}
+
 fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
+    if let Some(addr) = opts.get("listen") {
+        return cmd_serve_listen(addr, opts);
+    }
     if let Some(list) = opts.get("models") {
         return cmd_serve_multi(list, opts);
     }
@@ -526,35 +790,18 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .get("requests")
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
-    // --max-batch is the micro-batch bound; --batch stays as an alias.
-    let max_batch: usize = opts
-        .get("max-batch")
-        .or_else(|| opts.get("batch"))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(16);
-    let batch_deadline_us: u64 = opts
-        .get("batch-deadline")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1000);
-    let workers: usize = opts
-        .get("workers")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1);
-    let queue_depth: usize = opts
-        .get("queue-depth")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(256);
-    let verify_every: usize = opts
-        .get("verify-every")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8);
-    let engine = match engine_flag(opts) {
-        Ok(e) => e,
+    let mut config = match serve_config(opts, 1, 16, 1000) {
+        Ok(c) => c,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    config.verify_every = opts
+        .get("verify-every")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let engine = config.engine;
     // --synthetic serves the artifact-free fixture (no golden verifier).
     let (qm, verify_model) = if opts.contains_key("synthetic") {
         (QModel::synthetic(12, 8, 10, 0xF1C), None)
@@ -566,15 +813,6 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
                 return 1;
             }
         }
-    };
-    let config = ServerConfig {
-        workers,
-        max_batch,
-        queue_depth,
-        verify_every,
-        engine,
-        batch_deadline: std::time::Duration::from_micros(batch_deadline_us),
-        ..Default::default()
     };
     // Plan + lower once; every shard clones the compiled state.
     let sim = match PipelineSim::new(qm.clone(), None) {
@@ -696,6 +934,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         "golden cross-check: {} verified, {} mismatches",
         m.verified, m.mismatches
     );
+    if let Some(path) = opts.get("metrics-json") {
+        if let Err(e) = write_metrics_json(path, &m, &server.model_metrics(), None) {
+            eprintln!("{e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
     if m.mismatches > 0 {
         eprintln!("GOLDEN MISMATCHES DETECTED");
         return 1;

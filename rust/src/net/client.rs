@@ -1,0 +1,308 @@
+//! Blocking TCP client for the serving front-end, with a small
+//! connection pool (DESIGN.md §8).
+//!
+//! [`Client`] is cheaply cloneable (an `Arc` inside) and thread-safe:
+//! every request checks a connection out of the pool (dialing a fresh one
+//! when the pool is empty), writes one [`Msg::InferRequest`], and returns
+//! a [`ClientPending`] holding that connection. `wait()` reads the reply
+//! and returns the connection to the pool — so at most `pool_cap` idle
+//! sockets are retained, while the in-flight window is bounded only by
+//! the caller (each outstanding [`ClientPending`] owns its own socket;
+//! one request is outstanding per connection, the server's per-connection
+//! pipelining is exercised by callers that share a raw socket).
+//!
+//! Server refusals arrive as typed [`ErrorCode`]s inside [`NetError`]
+//! (`code: Some(_)`); transport failures (dial, send, read) carry
+//! `code: None` and the affected connection is dropped, never pooled.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::proto::{self, ErrorCode, Msg};
+
+/// A client-side inference failure: a typed protocol refusal from the
+/// server (`code: Some(..)`, connection still healthy) or a transport
+/// error (`code: None`, connection discarded).
+#[derive(Debug, Clone)]
+pub struct NetError {
+    pub code: Option<ErrorCode>,
+    pub message: String,
+}
+
+impl NetError {
+    fn transport(message: String) -> NetError {
+        NetError {
+            code: None,
+            message,
+        }
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.code {
+            Some(code) => write!(f, "server refused ({code}): {}", self.message),
+            None => write!(f, "transport error: {}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// One successful answer over the wire — the network image of
+/// `coordinator::InferResponse` (service time is a client-side concern,
+/// so it is not carried on the wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetResponse {
+    /// Final-layer accumulator-scale outputs, lossless i64 — byte-
+    /// identical to the in-process response.
+    pub logits: Vec<i64>,
+    pub argmax: usize,
+    pub sim_latency_cycles: u64,
+}
+
+struct ClientInner {
+    addr: String,
+    pool_cap: usize,
+    pool: Mutex<Vec<TcpStream>>,
+    next_id: AtomicU64,
+}
+
+/// The pooled blocking client. Clone freely; clones share the pool.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<ClientInner>,
+}
+
+impl Client {
+    /// Connect to `addr` (host:port), retaining at most `pool_cap` idle
+    /// connections (clamped to ≥ 1). Dials one connection eagerly so an
+    /// unreachable server fails here, not on the first request.
+    pub fn connect(addr: &str, pool_cap: usize) -> Result<Client, String> {
+        let client = Client {
+            inner: Arc::new(ClientInner {
+                addr: addr.to_string(),
+                pool_cap: pool_cap.max(1),
+                pool: Mutex::new(Vec::new()),
+                next_id: AtomicU64::new(1),
+            }),
+        };
+        let probe = client.dial().map_err(|e| e.message)?;
+        client.checkin(probe);
+        Ok(client)
+    }
+
+    fn dial(&self) -> Result<TcpStream, NetError> {
+        let stream = TcpStream::connect(&self.inner.addr)
+            .map_err(|e| NetError::transport(format!("connect {}: {e}", self.inner.addr)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    fn checkout(&self) -> Result<TcpStream, NetError> {
+        let pooled = self
+            .inner
+            .pool
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop();
+        match pooled {
+            Some(stream) => Ok(stream),
+            None => self.dial(),
+        }
+    }
+
+    fn checkin(&self, stream: TcpStream) {
+        let mut pool = self.inner.pool.lock().unwrap_or_else(|p| p.into_inner());
+        if pool.len() < self.inner.pool_cap {
+            pool.push(stream);
+        }
+        // else: drop — the socket closes, the pool stays small.
+    }
+
+    /// Idle pooled connections right now (observability / tests).
+    pub fn pooled_idle(&self) -> usize {
+        self.inner.pool.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// Send one request without waiting for its answer. The returned
+    /// [`ClientPending`] owns a connection until settled, so the caller's
+    /// outstanding-pending count is its in-flight window.
+    pub fn submit(&self, model: &str, frame: &[i64]) -> Result<ClientPending, NetError> {
+        let mut stream = self.checkout()?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let msg = Msg::InferRequest {
+            id,
+            model: model.to_string(),
+            frame: frame.to_vec(),
+        };
+        proto::write_frame(&mut stream, &msg)
+            .map_err(|e| NetError::transport(format!("send request: {e}")))?;
+        Ok(ClientPending {
+            client: self.clone(),
+            stream,
+            id,
+        })
+    }
+
+    /// Blocking inference: submit + wait.
+    pub fn infer(&self, model: &str, frame: &[i64]) -> Result<NetResponse, NetError> {
+        self.submit(model, frame)?.wait()
+    }
+
+    /// Ask the server which models it routes: `(model id, input frame
+    /// length)` in route order — enough to synthesize valid traffic.
+    pub fn models(&self) -> Result<Vec<(String, usize)>, NetError> {
+        let mut stream = self.checkout()?;
+        proto::write_frame(&mut stream, &Msg::ListModels)
+            .map_err(|e| NetError::transport(format!("send list-models: {e}")))?;
+        match proto::read_frame(&mut stream) {
+            Ok(Some(Msg::ModelList { models })) => {
+                self.checkin(stream);
+                Ok(models
+                    .into_iter()
+                    .map(|(id, len)| (id, len as usize))
+                    .collect())
+            }
+            Ok(Some(other)) => Err(NetError::transport(format!(
+                "unexpected reply to list-models: {other:?}"
+            ))),
+            Ok(None) => Err(NetError::transport(
+                "connection closed before model list".into(),
+            )),
+            Err(e) => Err(NetError::transport(format!("read model list: {e}"))),
+        }
+    }
+}
+
+/// A submitted-but-unanswered network request; holds its connection.
+pub struct ClientPending {
+    client: Client,
+    stream: TcpStream,
+    id: u64,
+}
+
+impl ClientPending {
+    /// Block until the reply arrives. Typed server refusals return the
+    /// connection to the pool (the stream is still in sync); transport
+    /// errors and id mismatches discard it.
+    pub fn wait(self) -> Result<NetResponse, NetError> {
+        let ClientPending {
+            client,
+            mut stream,
+            id,
+        } = self;
+        match proto::read_frame(&mut stream) {
+            Ok(Some(Msg::InferOk {
+                id: got,
+                argmax,
+                sim_latency_cycles,
+                logits,
+            })) if got == id => {
+                client.checkin(stream);
+                Ok(NetResponse {
+                    logits,
+                    argmax: argmax as usize,
+                    sim_latency_cycles,
+                })
+            }
+            Ok(Some(Msg::InferErr {
+                id: got,
+                code,
+                message,
+            })) if got == id || got == 0 => {
+                // id 0 marks a connection-level error (e.g. malformed):
+                // the stream cannot be reused after those.
+                if got == id && code != ErrorCode::Malformed {
+                    client.checkin(stream);
+                }
+                Err(NetError {
+                    code: Some(code),
+                    message,
+                })
+            }
+            Ok(Some(other)) => Err(NetError::transport(format!(
+                "reply desynchronized (expected id {id}): {other:?}"
+            ))),
+            Ok(None) => Err(NetError::transport(
+                "connection closed before reply".into(),
+            )),
+            Err(e) => Err(NetError::transport(format!("read reply: {e}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Server, ServerConfig};
+    use crate::net::server::NetServer;
+    use crate::quant::QModel;
+    use std::time::Duration;
+
+    fn serving_pair() -> (Arc<Server>, NetServer) {
+        let qm = QModel::synthetic(8, 4, 6, 0xC11);
+        let coord = Arc::new(
+            Server::start(
+                qm,
+                ServerConfig {
+                    workers: 1,
+                    max_batch: 4,
+                    queue_depth: 32,
+                    verify_every: 0,
+                    batch_deadline: Duration::from_millis(0),
+                    ..Default::default()
+                },
+                None,
+            )
+            .unwrap(),
+        );
+        let net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        (coord, net)
+    }
+
+    #[test]
+    fn pool_reuses_connections_up_to_cap() {
+        let (_coord, mut net) = serving_pair();
+        let client = Client::connect(&net.local_addr().to_string(), 2).unwrap();
+        let (model, len) = client.models().unwrap()[0].clone();
+        let frame = vec![2i64; len];
+        for _ in 0..4 {
+            client.infer(&model, &frame).unwrap();
+        }
+        // Serial requests reuse the single pooled connection.
+        assert_eq!(client.pooled_idle(), 1);
+        let snap = net.shutdown();
+        assert_eq!(snap.connections, 1, "pooled connection must be reused");
+        assert_eq!(snap.responses_ok, 4);
+    }
+
+    #[test]
+    fn concurrent_pendings_each_own_a_connection() {
+        let (_coord, mut net) = serving_pair();
+        let client = Client::connect(&net.local_addr().to_string(), 3).unwrap();
+        let (model, len) = client.models().unwrap()[0].clone();
+        let frame = vec![1i64; len];
+        let pendings: Vec<ClientPending> = (0..3)
+            .map(|_| client.submit(&model, &frame).unwrap())
+            .collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        assert_eq!(client.pooled_idle(), 3);
+        let snap = net.shutdown();
+        assert_eq!(snap.responses_ok, 3);
+        assert!(snap.connections >= 2, "parallel pendings need own sockets");
+    }
+
+    #[test]
+    fn connect_to_dead_port_fails_eagerly() {
+        // Bind-then-drop leaves a port that refuses connections.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(Client::connect(&addr, 1).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! TCP serving front-end (system S11): the network ingress for the
+//! sharded coordinator — `std::net` only, zero external dependencies.
+//!
+//! PRs 1–4 built a multi-model, micro-batching coordinator whose
+//! continuous-flow engine keeps the modelled hardware near 100%
+//! utilisation; this layer carries those semantics across a socket
+//! instead of flattening them (the batched-RPC front-end lesson of
+//! Clipper-style prediction serving — see PAPERS.md): backpressure and
+//! drain surface as **typed protocol errors**, never as a blocked accept
+//! loop, and per-connection pipelining keeps shard micro-batches full.
+//!
+//! Three pieces (contracts in DESIGN.md §8, pinned by
+//! `tests/net_serving.rs`):
+//!
+//! * [`proto`] — the versioned, length-prefixed binary wire protocol:
+//!   model-tagged requests, lossless i64 logits, and one
+//!   [`proto::ErrorCode`] per coordinator rejection reason;
+//! * [`server`] — the threaded front-end over
+//!   [`crate::coordinator::Server`]: reader/writer pair per connection
+//!   (pipelined, in-order responses), graceful drain, malformed input
+//!   answered rather than panicking;
+//! * [`client`] — the blocking client with a small connection pool,
+//!   whose responses are **byte-identical** to in-process serving
+//!   (`coordinator::loadgen::replay_net` replays a seeded `MultiTrace`
+//!   over localhost to pin exactly that).
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{Client, ClientPending, NetError, NetResponse};
+pub use proto::{ErrorCode, Msg, ProtoError, MAX_BODY, PROTO_VERSION};
+pub use server::NetServer;

@@ -1,0 +1,603 @@
+//! Versioned, length-prefixed binary wire protocol for the TCP serving
+//! front-end (DESIGN.md §8).
+//!
+//! Every frame on the wire is `u32 BE body length | body`, where the body
+//! starts with a protocol version byte and a message kind byte. Integers
+//! are big-endian; strings are `u16 BE length | UTF-8 bytes`; activation
+//! and logit vectors are `u32 BE count | i64 BE * count` — lossless for
+//! the accumulator-scale `i64` values the coordinator serves, which is
+//! what makes the TCP path byte-identical to in-process serving.
+//!
+//! Design constraints, all pinned by tests (`tests/net_serving.rs`):
+//!
+//! * **zero dependencies** — hand-rolled encode/decode over
+//!   `std::io::{Read, Write}`; no serde, no tokio;
+//! * **malformed input must never panic the server** — every decode path
+//!   is bounds-checked and returns a typed [`ProtoError`]; oversized
+//!   length prefixes are rejected *before* any allocation
+//!   ([`MAX_BODY`]);
+//! * **typed error codes** ([`ErrorCode`]) map 1:1 onto coordinator
+//!   rejection reasons ([`ErrorCode::from_reject`]), so a TCP client can
+//!   distinguish backpressure from a bad frame from a drain without
+//!   string matching.
+
+use std::io::{self, Read, Write};
+
+/// Current protocol version, the first byte of every frame body. Decoding
+/// any other value fails with [`ProtoError::BadVersion`] — version skew
+/// must be loud, not silently misparsed.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on a frame body (bytes), enforced before the body is
+/// allocated: a hostile or corrupt length prefix must not let a single
+/// connection allocate unbounded memory. 1 MiB comfortably covers the
+/// largest zoo model's input frame (`24*24*8` i64 values ≈ 36 KiB) plus
+/// headers.
+pub const MAX_BODY: u32 = 1 << 20;
+
+const KIND_INFER_REQUEST: u8 = 0x01;
+const KIND_INFER_OK: u8 = 0x02;
+const KIND_INFER_ERR: u8 = 0x03;
+const KIND_LIST_MODELS: u8 = 0x04;
+const KIND_MODEL_LIST: u8 = 0x05;
+
+/// Typed protocol error codes, one per coordinator rejection reason
+/// (DESIGN.md §8). The mapping is a serving contract pinned by
+/// `tests/net_serving.rs`: each code reconciles with exactly one
+/// coordinator counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Every shard queue in the model's group was full (backpressure
+    /// spill exhausted) — reconciles with intake `rejected`.
+    QueueFull = 1,
+    /// The request was accepted but its frame failed validation (wrong
+    /// length, out-of-grid values) — reconciles with shard `errored`.
+    InvalidFrame = 2,
+    /// No route for the requested model id — reconciles with `unrouted`.
+    UnknownModel = 3,
+    /// The server is draining (or has drained): intake is closed, new
+    /// requests are refused, in-flight ones still complete.
+    Draining = 4,
+    /// The peer violated the wire protocol (bad frame, bad version,
+    /// oversized body, unexpected message kind). Net-layer only — no
+    /// coordinator counter moves.
+    Malformed = 5,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::QueueFull),
+            2 => Some(ErrorCode::InvalidFrame),
+            3 => Some(ErrorCode::UnknownModel),
+            4 => Some(ErrorCode::Draining),
+            5 => Some(ErrorCode::Malformed),
+            _ => None,
+        }
+    }
+
+    /// Classify a coordinator rejection message into its wire code — the
+    /// 1:1 mapping the front-end applies to every `Err` the coordinator
+    /// returns (`Server::submit_to` at submit time, `Pending::wait` for
+    /// per-request validation errors). Frame-validation failures are the
+    /// only per-request errors the shards emit, so everything that is
+    /// neither backpressure, an unknown route, nor a shutdown is
+    /// [`ErrorCode::InvalidFrame`].
+    ///
+    /// Known trade-off: this matches the coordinator's error *strings*
+    /// rather than a typed reject enum (the coordinator API is
+    /// stringly-typed end to end). Drift is caught loudly: the
+    /// reconciliation tests in `tests/net_serving.rs` assert each code
+    /// against the corresponding coordinator counter, so a reworded
+    /// message fails CI instead of silently reclassifying.
+    pub fn from_reject(msg: &str) -> ErrorCode {
+        // Prefix/exact matches only, and the unknown-route message first:
+        // it is the one message that embeds a client-chosen string (the
+        // model id), so looser contains() heuristics after it must never
+        // get a chance to match id contents like "backpressure".
+        if msg.starts_with("no route for model") {
+            ErrorCode::UnknownModel
+        } else if msg.starts_with("backpressure") {
+            ErrorCode::QueueFull
+        } else if msg == "server stopped" || msg == "server dropped request" {
+            ErrorCode::Draining
+        } else {
+            ErrorCode::InvalidFrame
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            ErrorCode::QueueFull => "queue-full",
+            ErrorCode::InvalidFrame => "invalid-frame",
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::Draining => "draining",
+            ErrorCode::Malformed => "malformed",
+        };
+        f.write_str(name)
+    }
+}
+
+/// A decode failure. Malformed peers get one of these instead of a panic;
+/// the server answers with [`ErrorCode::Malformed`] and closes the
+/// connection (the stream cannot be resynchronized once framing is lost).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Underlying socket/stream error.
+    Io(String),
+    /// The stream ended in the middle of a frame (length prefix or body).
+    Truncated,
+    /// The length prefix exceeds [`MAX_BODY`]; rejected before allocation.
+    Oversized(u32),
+    /// The body's version byte is not [`PROTO_VERSION`].
+    BadVersion(u8),
+    /// Structurally invalid body (unknown kind, short payload, bad UTF-8,
+    /// inconsistent counts, trailing bytes).
+    Malformed(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io error: {e}"),
+            ProtoError::Truncated => write!(f, "truncated frame"),
+            ProtoError::Oversized(n) => {
+                write!(f, "oversized frame body ({n} bytes > {MAX_BODY} max)")
+            }
+            ProtoError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (expected {PROTO_VERSION})")
+            }
+            ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// One protocol message. Request ids are caller-chosen and echoed back
+/// verbatim; the server answers a connection's requests **in request
+/// order**, so a pipelining client may key on order or on id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    /// Client → server: run `frame` through `model`'s shard group.
+    InferRequest {
+        id: u64,
+        model: String,
+        frame: Vec<i64>,
+    },
+    /// Server → client: successful inference (accumulator-scale logits).
+    InferOk {
+        id: u64,
+        argmax: u32,
+        sim_latency_cycles: u64,
+        logits: Vec<i64>,
+    },
+    /// Server → client: typed refusal (id 0 when the failing request
+    /// could not be decoded).
+    InferErr {
+        id: u64,
+        code: ErrorCode,
+        message: String,
+    },
+    /// Client → server: what models does this server route?
+    ListModels,
+    /// Server → client: `(model id, input frame length)` per group, in
+    /// route order — enough for a client to synthesize valid traffic.
+    ModelList { models: Vec<(String, u32)> },
+}
+
+impl Msg {
+    /// Encode into a complete wire frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(32);
+        body.push(PROTO_VERSION);
+        match self {
+            Msg::InferRequest { id, model, frame } => {
+                body.push(KIND_INFER_REQUEST);
+                push_u64(&mut body, *id);
+                push_str16(&mut body, model);
+                push_vec_i64(&mut body, frame);
+            }
+            Msg::InferOk {
+                id,
+                argmax,
+                sim_latency_cycles,
+                logits,
+            } => {
+                body.push(KIND_INFER_OK);
+                push_u64(&mut body, *id);
+                push_u32(&mut body, *argmax);
+                push_u64(&mut body, *sim_latency_cycles);
+                push_vec_i64(&mut body, logits);
+            }
+            Msg::InferErr { id, code, message } => {
+                body.push(KIND_INFER_ERR);
+                push_u64(&mut body, *id);
+                body.push(code.as_u8());
+                push_str16(&mut body, message);
+            }
+            Msg::ListModels => body.push(KIND_LIST_MODELS),
+            Msg::ModelList { models } => {
+                body.push(KIND_MODEL_LIST);
+                push_u16(&mut body, models.len() as u16);
+                for (id, input_len) in models {
+                    push_str16(&mut body, id);
+                    push_u32(&mut body, *input_len);
+                }
+            }
+        }
+        debug_assert!(body.len() as u64 <= MAX_BODY as u64, "frame exceeds MAX_BODY");
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a frame body (everything after the length prefix). The body
+    /// must be consumed exactly — trailing bytes are malformed.
+    pub fn decode(body: &[u8]) -> Result<Msg, ProtoError> {
+        let mut cur = Cur { b: body, i: 0 };
+        let version = cur.u8()?;
+        if version != PROTO_VERSION {
+            return Err(ProtoError::BadVersion(version));
+        }
+        let kind = cur.u8()?;
+        let msg = match kind {
+            KIND_INFER_REQUEST => Msg::InferRequest {
+                id: cur.u64()?,
+                model: cur.str16()?,
+                frame: cur.vec_i64()?,
+            },
+            KIND_INFER_OK => Msg::InferOk {
+                id: cur.u64()?,
+                argmax: cur.u32()?,
+                sim_latency_cycles: cur.u64()?,
+                logits: cur.vec_i64()?,
+            },
+            KIND_INFER_ERR => {
+                let id = cur.u64()?;
+                let raw = cur.u8()?;
+                let code = ErrorCode::from_u8(raw)
+                    .ok_or_else(|| ProtoError::Malformed(format!("unknown error code {raw}")))?;
+                Msg::InferErr {
+                    id,
+                    code,
+                    message: cur.str16()?,
+                }
+            }
+            KIND_LIST_MODELS => Msg::ListModels,
+            KIND_MODEL_LIST => {
+                let n = cur.u16()? as usize;
+                let mut models = Vec::with_capacity(n.min(256));
+                for _ in 0..n {
+                    let id = cur.str16()?;
+                    let input_len = cur.u32()?;
+                    models.push((id, input_len));
+                }
+                Msg::ModelList { models }
+            }
+            other => {
+                return Err(ProtoError::Malformed(format!("unknown message kind {other:#04x}")))
+            }
+        };
+        cur.done()?;
+        Ok(msg)
+    }
+}
+
+/// Read one frame from `r`. `Ok(None)` means the stream ended cleanly at
+/// a frame boundary (the peer closed); EOF mid-frame is
+/// [`ProtoError::Truncated`]. Oversized length prefixes fail before the
+/// body is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Msg>, ProtoError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(ProtoError::Truncated)
+                }
+            }
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e.to_string())),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_BODY {
+        return Err(ProtoError::Oversized(len));
+    }
+    if len < 2 {
+        return Err(ProtoError::Malformed(format!(
+            "body length {len} shorter than the version+kind header"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            ProtoError::Truncated
+        } else {
+            ProtoError::Io(e.to_string())
+        }
+    })?;
+    Msg::decode(&body).map(Some)
+}
+
+/// Write one complete frame (and flush, so a buffered writer's pipelined
+/// responses reach the socket per message).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
+    w.write_all(&msg.encode())?;
+    w.flush()
+}
+
+// -- encode helpers ----------------------------------------------------
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn push_str16(out: &mut Vec<u8>, s: &str) {
+    // Truncate (at a char boundary) rather than let the u16 length
+    // prefix wrap and desynchronize the frame: model ids and error
+    // messages are the only strings on the wire, both far below the cap
+    // in practice, and a consistent-but-shortened frame beats a corrupt
+    // one in a release build.
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    push_u16(out, end as u16);
+    out.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+fn push_vec_i64(out: &mut Vec<u8>, xs: &[i64]) {
+    push_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_be_bytes());
+    }
+}
+
+// -- decode cursor -----------------------------------------------------
+
+/// Bounds-checked cursor over one frame body: every read validates the
+/// remaining length first, so hostile bodies can under-declare or
+/// over-declare counts without ever causing a panic or an oversized
+/// allocation.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() - self.i < n {
+            return Err(ProtoError::Malformed(format!(
+                "body too short: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String, ProtoError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtoError::Malformed("string is not valid UTF-8".into()))
+    }
+
+    fn vec_i64(&mut self) -> Result<Vec<i64>, ProtoError> {
+        let n = self.u32()? as usize;
+        // The declared count must fit in the bytes actually present —
+        // checked before allocating, so a lying prefix cannot balloon.
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            ProtoError::Malformed("i64 vector count overflows".into())
+        })?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_be_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::Malformed(format!(
+                "{} trailing bytes after message",
+                self.b.len() - self.i
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let bytes = msg.encode();
+        let mut cursor = &bytes[..];
+        read_frame(&mut cursor)
+            .expect("roundtrip decode failed")
+            .expect("unexpected EOF")
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        let msgs = [
+            Msg::InferRequest {
+                id: 7,
+                model: "digits_cnn".into(),
+                frame: vec![-127, 0, 127, 5],
+            },
+            Msg::InferOk {
+                id: 7,
+                argmax: 3,
+                sim_latency_cycles: 12345,
+                logits: vec![i64::MIN, -1, 0, i64::MAX],
+            },
+            Msg::InferErr {
+                id: 9,
+                code: ErrorCode::QueueFull,
+                message: "backpressure: all shard queues full".into(),
+            },
+            Msg::ListModels,
+            Msg::ModelList {
+                models: vec![("a".into(), 64), ("b".into(), 144)],
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m);
+        }
+    }
+
+    #[test]
+    fn empty_vectors_and_strings_roundtrip() {
+        let m = Msg::InferRequest {
+            id: 0,
+            model: String::new(),
+            frame: Vec::new(),
+        };
+        assert_eq!(roundtrip(&m), m);
+        let m = Msg::ModelList { models: Vec::new() };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_mid_prefix_truncated() {
+        let mut empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut empty).unwrap(), None);
+        let mut partial: &[u8] = &[0, 0];
+        assert_eq!(read_frame(&mut partial), Err(ProtoError::Truncated));
+    }
+
+    #[test]
+    fn truncated_body_detected() {
+        let bytes = Msg::ListModels.encode();
+        let mut cut = &bytes[..bytes.len() - 1];
+        assert_eq!(read_frame(&mut cut), Err(ProtoError::Truncated));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(MAX_BODY + 1).to_be_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut cursor = &bytes[..];
+        assert_eq!(
+            read_frame(&mut cursor),
+            Err(ProtoError::Oversized(MAX_BODY + 1))
+        );
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut bytes = Msg::ListModels.encode();
+        bytes[4] = PROTO_VERSION + 1; // first body byte
+        let mut cursor = &bytes[..];
+        assert_eq!(
+            read_frame(&mut cursor),
+            Err(ProtoError::BadVersion(PROTO_VERSION + 1))
+        );
+    }
+
+    #[test]
+    fn unknown_kind_and_trailing_bytes_rejected() {
+        assert!(matches!(
+            Msg::decode(&[PROTO_VERSION, 0x7F]),
+            Err(ProtoError::Malformed(_))
+        ));
+        let mut body = Msg::ListModels.encode()[4..].to_vec();
+        body.push(0);
+        assert!(matches!(Msg::decode(&body), Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn lying_vector_count_rejected_without_allocation() {
+        // InferRequest declaring u32::MAX frame values in a tiny body.
+        let mut body = vec![PROTO_VERSION, KIND_INFER_REQUEST];
+        push_u64(&mut body, 1);
+        push_str16(&mut body, "m");
+        push_u32(&mut body, u32::MAX);
+        assert!(matches!(Msg::decode(&body), Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_classify() {
+        for code in [
+            ErrorCode::QueueFull,
+            ErrorCode::InvalidFrame,
+            ErrorCode::UnknownModel,
+            ErrorCode::Draining,
+            ErrorCode::Malformed,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(
+            ErrorCode::from_reject("backpressure: all shard queues full"),
+            ErrorCode::QueueFull
+        );
+        assert_eq!(
+            ErrorCode::from_reject("no route for model 'x'"),
+            ErrorCode::UnknownModel
+        );
+        assert_eq!(ErrorCode::from_reject("server stopped"), ErrorCode::Draining);
+        assert_eq!(
+            ErrorCode::from_reject("server dropped request"),
+            ErrorCode::Draining
+        );
+        assert_eq!(
+            ErrorCode::from_reject("frame length 3 != expected 64"),
+            ErrorCode::InvalidFrame
+        );
+        // A client-chosen model id embedded in the unknown-route message
+        // must not be able to steer classification toward another code.
+        assert_eq!(
+            ErrorCode::from_reject("no route for model 'backpressure'"),
+            ErrorCode::UnknownModel
+        );
+        assert_eq!(
+            ErrorCode::from_reject("no route for model 'server stopped'"),
+            ErrorCode::UnknownModel
+        );
+    }
+}

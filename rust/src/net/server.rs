@@ -1,0 +1,512 @@
+//! Threaded TCP front-end over the sharded coordinator (DESIGN.md §8).
+//!
+//! [`NetServer`] fronts a [`Server`] (usually started via
+//! `Server::start_multi`) with `std::net` only — no tokio, no external
+//! crates, mirroring the crate's dependency-free constraint. The design
+//! carries the coordinator's data-rate-aware semantics across the socket
+//! boundary instead of flattening them:
+//!
+//! * **per-connection pipelining** — a connection's reader decodes and
+//!   submits requests as fast as they arrive (it never waits for an
+//!   answer), while a paired writer thread settles the in-flight
+//!   [`Pending`]s and writes responses back **in request order**. A
+//!   client may therefore keep many requests outstanding on one socket,
+//!   which is exactly what keeps shard micro-batches full;
+//! * **backpressure as protocol errors** — when the coordinator refuses a
+//!   submission (queue-full spill exhausted, unknown model route, drain),
+//!   the reader immediately queues a typed [`Msg::InferErr`] instead of
+//!   blocking the socket: the accept loop and other connections never
+//!   stall behind one overloaded model;
+//! * **graceful drain** — [`NetServer::shutdown`] stops the accept loop,
+//!   EOFs every connection's read half (no new requests), flushes the
+//!   coordinator via [`Server::drain_shared`] so every in-flight request
+//!   is answered, then joins the connection writers — which write those
+//!   final responses before the sockets close cleanly. Requests that
+//!   race the drain window are answered with [`ErrorCode::Draining`];
+//! * **malformed input never panics** — protocol errors are answered
+//!   with [`ErrorCode::Malformed`] (request id 0) and the connection is
+//!   closed, because a framing violation cannot be resynchronized.
+//!
+//! Counters live in [`NetMetrics`] (coordinator::metrics), one error
+//! tally per [`ErrorCode`], reconciling 1:1 with the coordinator's
+//! intake/shard counters — pinned by `tests/net_serving.rs`.
+
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{NetMetrics, NetMetricsSnapshot, Pending, Server};
+
+use super::proto::{self, ErrorCode, Msg};
+
+/// Bound on a connection's queued-but-unwritten replies. A client that
+/// pipelines requests without ever reading responses eventually fills
+/// this queue, which blocks its *own* reader (per-connection
+/// backpressure) instead of growing server memory without limit — the
+/// net-layer analogue of the coordinator's bounded shard queues.
+const WRITER_QUEUE_DEPTH: usize = 1024;
+
+/// A single blocked `write` to a non-reading client is abandoned after
+/// this long; the connection is then torn down (its coordinator replies
+/// are dropped, never re-queued), so one stalled client cannot pin a
+/// writer thread forever.
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One queued reply on a connection's writer channel: either a message
+/// that is ready now (typed errors, model lists) or a coordinator
+/// [`Pending`] the writer settles in FIFO order — which is what keeps
+/// pipelined responses in request order.
+enum WriteItem {
+    Ready(Msg),
+    Wait(u64, Pending),
+}
+
+/// The running TCP front-end. Dropping it shuts it down (idempotently).
+pub struct NetServer {
+    addr: SocketAddr,
+    open: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+    coordinator: Arc<Server>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<Option<TcpStream>>>>,
+    handlers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start accepting connections for `coordinator`. The advertised
+    /// model list is taken from [`Server::model_specs`].
+    pub fn bind(addr: &str, coordinator: Arc<Server>) -> Result<NetServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let open = Arc::new(AtomicBool::new(true));
+        let metrics = Arc::new(NetMetrics::default());
+        let conns: Arc<Mutex<Vec<Option<TcpStream>>>> = Arc::new(Mutex::new(Vec::new()));
+        let handlers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let specs: Arc<Vec<(String, u32)>> = Arc::new(
+            coordinator
+                .model_specs()
+                .into_iter()
+                .map(|(id, len)| (id, len as u32))
+                .collect(),
+        );
+
+        let accept = {
+            let open = Arc::clone(&open);
+            let metrics = Arc::clone(&metrics);
+            let conns = Arc::clone(&conns);
+            let handlers = Arc::clone(&handlers);
+            let coordinator = Arc::clone(&coordinator);
+            std::thread::Builder::new()
+                .name("cnn-flow-net-accept".into())
+                .spawn(move || {
+                    accept_loop(
+                        listener,
+                        &open,
+                        &metrics,
+                        &conns,
+                        &handlers,
+                        &coordinator,
+                        &specs,
+                    )
+                })
+                .map_err(|e| format!("spawn accept loop: {e}"))?
+        };
+
+        Ok(NetServer {
+            addr: local,
+            open,
+            metrics,
+            coordinator,
+            accept: Some(accept),
+            conns,
+            handlers,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point-in-time net-layer counters.
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, EOF every connection's read half,
+    /// flush the coordinator ([`Server::drain_shared`] — every accepted
+    /// request is answered), join the connection threads (their writers
+    /// deliver those final responses), and return the final counters.
+    /// Idempotent; also runs on drop.
+    ///
+    /// The ordering matters: the coordinator drain sits *between* reader
+    /// EOF and writer join, because a writer blocked on a long-deadline
+    /// micro-batch can only finish once the coordinator's shutdown
+    /// markers flush that batch.
+    pub fn shutdown(&mut self) -> NetMetricsSnapshot {
+        if self.open.swap(false, Ordering::SeqCst) {
+            // Unblock the accept loop (it re-checks `open` per accept) by
+            // dialing the listener. A wildcard bind (0.0.0.0 / ::) is not
+            // self-connectable everywhere, so dial loopback:port instead;
+            // if even that fails (firewalled interface), detach the
+            // accept thread rather than hang the shutdown on its join.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match self.addr {
+                    SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            match TcpStream::connect_timeout(&wake, Duration::from_secs(1)) {
+                Ok(_) => {
+                    if let Some(h) = self.accept.take() {
+                        let _ = h.join();
+                    }
+                }
+                Err(_) => drop(self.accept.take()),
+            }
+            for slot in self
+                .conns
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .iter()
+            {
+                if let Some(s) = slot {
+                    let _ = s.shutdown(Shutdown::Read);
+                }
+            }
+            self.coordinator.drain_shared();
+            let handlers: Vec<_> = std::mem::take(
+                &mut *self.handlers.lock().unwrap_or_else(|p| p.into_inner()),
+            );
+            for h in handlers {
+                let _ = h.join();
+            }
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    open: &Arc<AtomicBool>,
+    metrics: &Arc<NetMetrics>,
+    conns: &Arc<Mutex<Vec<Option<TcpStream>>>>,
+    handlers: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    coordinator: &Arc<Server>,
+    specs: &Arc<Vec<(String, u32)>>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if !open.load(Ordering::Acquire) {
+                    return;
+                }
+                // Transient accept error (e.g. EMFILE under a connection
+                // flood): back off briefly instead of spinning a core at
+                // exactly the moment the host is overloaded.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if !open.load(Ordering::Acquire) {
+            // The shutdown wake-up connection (or a client racing it):
+            // dropped unanswered — the listener is about to close.
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        // Register the read-half handle BEFORE spawning the handler, so
+        // shutdown's conns sweep (which runs after the accept loop joins)
+        // is guaranteed to see every live connection — otherwise a reader
+        // could block forever and deadlock the handler join.
+        let kick = match stream.try_clone() {
+            Ok(k) => k,
+            Err(_) => continue, // cannot guarantee bounded shutdown: refuse
+        };
+        metrics.connections.fetch_add(1, Ordering::Relaxed);
+        // Reuse a vacated slot so a long-lived server's registry stays
+        // proportional to *live* connections, not total ever accepted.
+        let slot = {
+            let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
+            match conns.iter().position(|s| s.is_none()) {
+                Some(i) => {
+                    conns[i] = Some(kick);
+                    i
+                }
+                None => {
+                    conns.push(Some(kick));
+                    conns.len() - 1
+                }
+            }
+        };
+        let hmetrics = Arc::clone(metrics);
+        let hconns = Arc::clone(conns);
+        let hcoordinator = Arc::clone(coordinator);
+        let hspecs = Arc::clone(specs);
+        let hopen = Arc::clone(open);
+        let spawned = std::thread::Builder::new()
+            .name(format!("cnn-flow-net-conn-{slot}"))
+            .spawn(move || {
+                handle_conn(stream, &hcoordinator, &hspecs, &hopen, &hmetrics);
+                hconns.lock().unwrap_or_else(|p| p.into_inner())[slot] = None;
+            });
+        match spawned {
+            Ok(handle) => {
+                let mut handlers = handlers.lock().unwrap_or_else(|p| p.into_inner());
+                // Reap finished connection threads opportunistically so
+                // the join list doesn't grow with total connections.
+                handlers.retain(|h| !h.is_finished());
+                handlers.push(handle);
+            }
+            Err(_) => {
+                // Spawn failed: deregister and drop the connection,
+                // balancing the accounting (connections == disconnects
+                // must hold for every accepted-then-closed socket).
+                conns.lock().unwrap_or_else(|p| p.into_inner())[slot] = None;
+                metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn count_error(metrics: &NetMetrics, code: ErrorCode) {
+    let counter = match code {
+        ErrorCode::QueueFull => &metrics.err_queue_full,
+        ErrorCode::InvalidFrame => &metrics.err_invalid_frame,
+        ErrorCode::UnknownModel => &metrics.err_unknown_model,
+        ErrorCode::Draining => &metrics.err_draining,
+        ErrorCode::Malformed => &metrics.err_malformed,
+    };
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One connection: reader (this thread) + writer (paired thread). The
+/// reader never blocks on an answer, the writer preserves request order.
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: &Arc<Server>,
+    specs: &Arc<Vec<(String, u32)>>,
+    open: &Arc<AtomicBool>,
+    metrics: &Arc<NetMetrics>,
+) {
+    let write_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // A stalled (non-reading) client eventually blocks the writer on a
+    // full TCP send buffer; the timeout abandons that write and tears
+    // the connection down instead of pinning the thread forever.
+    let _ = write_stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+    // Bounded: when a client pipelines without reading replies, the
+    // reader blocks HERE (its own backpressure) once the writer falls
+    // `WRITER_QUEUE_DEPTH` replies behind — server memory stays bounded.
+    let (tx, rx) = mpsc::sync_channel::<WriteItem>(WRITER_QUEUE_DEPTH);
+    let writer = {
+        let metrics = Arc::clone(metrics);
+        std::thread::spawn(move || writer_loop(write_stream, rx, &metrics))
+    };
+    let mut reader = stream;
+    loop {
+        match proto::read_frame(&mut reader) {
+            Ok(Some(msg)) => {
+                if !dispatch(msg, coordinator, specs, open, metrics, &tx) {
+                    break;
+                }
+            }
+            Ok(None) => break, // clean EOF (client closed, or drain kick)
+            // Transport failures (reset sockets, peers dying mid-frame)
+            // are not protocol violations: close quietly, count nothing —
+            // `err_malformed` stays a wire-violation counter.
+            Err(proto::ProtoError::Io(_)) | Err(proto::ProtoError::Truncated) => break,
+            Err(e) => {
+                // Framing is lost: answer with a typed error, then close.
+                count_error(metrics, ErrorCode::Malformed);
+                let _ = tx.send(WriteItem::Ready(Msg::InferErr {
+                    id: 0,
+                    code: ErrorCode::Malformed,
+                    message: e.to_string(),
+                }));
+                break;
+            }
+        }
+    }
+    drop(tx); // writer drains in-flight replies, then exits
+    let _ = writer.join();
+    let _ = reader.shutdown(Shutdown::Both);
+    metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Handle one decoded message; returns false when the connection must
+/// close (protocol violation or a dead writer).
+fn dispatch(
+    msg: Msg,
+    coordinator: &Arc<Server>,
+    specs: &Arc<Vec<(String, u32)>>,
+    open: &Arc<AtomicBool>,
+    metrics: &Arc<NetMetrics>,
+    tx: &mpsc::SyncSender<WriteItem>,
+) -> bool {
+    match msg {
+        Msg::InferRequest { id, model, frame } => {
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            let item = if !open.load(Ordering::Acquire) {
+                count_error(metrics, ErrorCode::Draining);
+                WriteItem::Ready(Msg::InferErr {
+                    id,
+                    code: ErrorCode::Draining,
+                    message: "drain in progress".into(),
+                })
+            } else {
+                match coordinator.submit_to(&model, frame) {
+                    Ok(pending) => WriteItem::Wait(id, pending),
+                    Err(e) => {
+                        let code = ErrorCode::from_reject(&e);
+                        count_error(metrics, code);
+                        WriteItem::Ready(Msg::InferErr {
+                            id,
+                            code,
+                            message: e,
+                        })
+                    }
+                }
+            };
+            tx.send(item).is_ok()
+        }
+        Msg::ListModels => tx
+            .send(WriteItem::Ready(Msg::ModelList {
+                models: specs.as_ref().clone(),
+            }))
+            .is_ok(),
+        // Server→client kinds arriving at the server are a protocol
+        // violation; answer once and close.
+        Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. } => {
+            count_error(metrics, ErrorCode::Malformed);
+            let _ = tx.send(WriteItem::Ready(Msg::InferErr {
+                id: 0,
+                code: ErrorCode::Malformed,
+                message: "unexpected message kind from client".into(),
+            }));
+            false
+        }
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<WriteItem>, metrics: &NetMetrics) {
+    // Once a write fails (client gone), keep *settling* the queued
+    // replies — every decoded request must still land in exactly one
+    // counter so the documented balance `requests == responses_ok +
+    // typed errors` survives clients that pipeline and vanish — but
+    // stop touching the dead socket. The reader EOFs right after, so
+    // this drain is bounded by the coordinator answering its accepted
+    // requests (which it always does, drain included).
+    let mut sink_only = false;
+    while let Ok(item) = rx.recv() {
+        let msg = match item {
+            WriteItem::Ready(m) => m,
+            WriteItem::Wait(id, pending) => match pending.wait() {
+                Ok(resp) => {
+                    // Counted when settled, delivered or not: the
+                    // counter reconciles with coordinator `completed`.
+                    metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+                    Msg::InferOk {
+                        id,
+                        argmax: resp.argmax as u32,
+                        sim_latency_cycles: resp.sim_latency_cycles,
+                        logits: resp.logits,
+                    }
+                }
+                Err(e) => {
+                    let code = ErrorCode::from_reject(&e);
+                    count_error(metrics, code);
+                    Msg::InferErr {
+                        id,
+                        code,
+                        message: e,
+                    }
+                }
+            },
+        };
+        if !sink_only && proto::write_frame(&mut stream, &msg).is_err() {
+            sink_only = true;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::net::client::Client;
+    use crate::quant::QModel;
+    use std::time::Duration;
+
+    fn tiny_server() -> Arc<Server> {
+        let qm = QModel::synthetic(8, 4, 6, 0x7CF);
+        Arc::new(
+            Server::start(
+                qm,
+                ServerConfig {
+                    workers: 1,
+                    max_batch: 4,
+                    queue_depth: 32,
+                    verify_every: 0,
+                    batch_deadline: Duration::from_millis(0),
+                    ..Default::default()
+                },
+                None,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn bind_serve_and_shutdown_roundtrip() {
+        let coord = tiny_server();
+        let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let client = Client::connect(&net.local_addr().to_string(), 1).unwrap();
+        let specs = client.models().unwrap();
+        assert_eq!(specs, coord.model_specs());
+        let (model, input_len) = specs[0].clone();
+        let frame = vec![1i64; input_len];
+        let resp = client.infer(&model, &frame).unwrap();
+        let direct = coord.infer(frame.clone()).unwrap();
+        assert_eq!(resp.logits, direct.logits, "TCP path must be bit-identical");
+        assert_eq!(resp.argmax, direct.argmax);
+        let snap = net.shutdown();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.responses_ok, 1);
+        assert_eq!(snap.connections, 1);
+        // Idempotent: a second shutdown returns the same counters.
+        assert_eq!(net.shutdown(), snap);
+        // The coordinator was drained by the front-end.
+        assert_eq!(coord.metrics().completed, 2);
+    }
+
+    #[test]
+    fn shutdown_refuses_new_connections() {
+        let coord = tiny_server();
+        let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let addr = net.local_addr().to_string();
+        net.shutdown();
+        // The listener is gone: connecting either fails outright or the
+        // socket is closed before any reply.
+        match Client::connect(&addr, 1) {
+            Err(_) => {}
+            Ok(client) => assert!(client.models().is_err()),
+        }
+    }
+}

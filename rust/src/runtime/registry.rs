@@ -189,6 +189,13 @@ impl ModelRegistry {
         self.len() == 0
     }
 
+    /// The retention bound this registry was built with (`len()` never
+    /// exceeds it) — lets serving dashboards report cache pressure as
+    /// `len() / capacity()` next to the hit/miss counters.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Point-in-time hit / miss / eviction counters.
     pub fn stats(&self) -> RegistryStats {
         RegistryStats {
@@ -260,6 +267,49 @@ mod tests {
         assert!(!reg.contains("boom"));
         reg.get_or_lower("ok", || Ok(qm(9))).unwrap();
         assert!(reg.contains("ok"));
+    }
+
+    #[test]
+    fn capacity_is_reported_and_bounds_len() {
+        let reg = ModelRegistry::new(2);
+        assert_eq!(reg.capacity(), 2);
+        assert_eq!(reg.len(), 0);
+        for (i, id) in ["a", "b", "c", "d"].iter().enumerate() {
+            reg.get_or_lower(id, || Ok(qm(i as u64))).unwrap();
+            assert!(reg.len() <= reg.capacity());
+        }
+        assert_eq!(reg.len(), 2);
+        // The clamp: capacity 0 still retains one model.
+        assert_eq!(ModelRegistry::new(0).capacity(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order_under_interleaved_hits() {
+        // Pin the exact eviction sequence when `get_or_lower` hits
+        // interleave with inserts: a hit refreshes recency, so the victim
+        // is always the entry whose last *touch* (not insert) is oldest.
+        let reg = ModelRegistry::new(3);
+        for (i, id) in ["a", "b", "c"].iter().enumerate() {
+            reg.get_or_lower(id, || Ok(qm(i as u64))).unwrap();
+        }
+        // Recency now a < b < c. Touch a then b: recency c < a < b.
+        reg.get_or_lower("a", || Err("a is cached".into())).unwrap();
+        reg.get_or_lower("b", || Err("b is cached".into())).unwrap();
+        // Insert d: the victim must be c (oldest touch), not a (oldest
+        // insert).
+        reg.get_or_lower("d", || Ok(qm(3))).unwrap();
+        assert!(!reg.contains("c"), "c was LRU after a and b were re-hit");
+        assert!(reg.contains("a") && reg.contains("b") && reg.contains("d"));
+        // Touch a again: recency b < d < a. Insert e: victim is b.
+        reg.get_or_lower("a", || Err("a is cached".into())).unwrap();
+        reg.get_or_lower("e", || Ok(qm(4))).unwrap();
+        assert!(!reg.contains("b"), "b was LRU after a's second re-hit");
+        assert!(reg.contains("a") && reg.contains("d") && reg.contains("e"));
+        let s = reg.stats();
+        assert_eq!(s.evictions, 2, "{s:?}");
+        assert_eq!(s.hits, 3, "{s:?}");
+        assert_eq!(s.misses, 5, "{s:?}");
+        assert_eq!(s.cached, 3, "{s:?}");
     }
 
     #[test]

@@ -226,6 +226,63 @@ pub fn write_pipeline_bench_json(
         .map_err(|e| format!("write {}: {e}", path.display()))
 }
 
+/// Localhost TCP round-trip vs in-process submit+wait on the same
+/// coordinator — the serving front-end's overhead figure, measured by
+/// `benches/bench_coordinator.rs` and merged into `BENCH_pipeline.json`
+/// under `"net"` so the socket tax is tracked across PRs next to the
+/// engine numbers.
+#[derive(Debug, Clone)]
+pub struct NetComparison {
+    /// Median ns for one blocking in-process `Server::infer`.
+    pub inproc_rtt_ns: f64,
+    /// Median ns for the same request through the TCP client/server path.
+    pub tcp_rtt_ns: f64,
+}
+
+impl NetComparison {
+    /// Absolute socket overhead per request.
+    pub fn overhead_ns(&self) -> f64 {
+        self.tcp_rtt_ns - self.inproc_rtt_ns
+    }
+
+    /// TCP round-trip as a multiple of the in-process round-trip.
+    pub fn overhead_ratio(&self) -> f64 {
+        self.tcp_rtt_ns / self.inproc_rtt_ns
+    }
+}
+
+/// Merge the net figures into `BENCH_pipeline.json` without disturbing
+/// the engine rows: the existing document is parsed (or a fresh
+/// `{"bench":"pipeline","models":[]}` skeleton is used when absent or
+/// unparseable) and its `"net"` key is replaced. Run
+/// `cargo bench --bench bench_pipeline` first for a complete report.
+pub fn merge_net_bench_json(path: &std::path::Path, net: &NetComparison) -> Result<(), String> {
+    use crate::util::json::Json;
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|v| v.as_obj().is_some())
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("bench", Json::from("pipeline")),
+                ("models", Json::Arr(Vec::new())),
+            ])
+        });
+    if let Json::Obj(map) = &mut root {
+        map.insert(
+            "net".to_string(),
+            Json::obj(vec![
+                ("inproc_rtt_ns", Json::from(net.inproc_rtt_ns)),
+                ("tcp_rtt_ns", Json::from(net.tcp_rtt_ns)),
+                ("overhead_ns", Json::from(net.overhead_ns())),
+                ("overhead_ratio", Json::from(net.overhead_ratio())),
+            ]),
+        );
+    }
+    std::fs::write(path, root.render_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0}ns")
@@ -283,6 +340,47 @@ mod tests {
         assert_eq!(row.get("model").as_str(), Some("synthetic"));
         assert!((row.get("speedup").as_f64().unwrap() - 8.0).abs() < 1e-9);
         assert!((row.get("batch_speedup").as_f64().unwrap() - 2.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn net_merge_preserves_engine_rows() {
+        let path = std::env::temp_dir().join("cnn_flow_bench_net_merge_test.json");
+        let engines = EngineComparison {
+            model: "synthetic".into(),
+            frames: 16,
+            interp_median_ns: 8.0e6,
+            compiled_median_ns: 1.0e6,
+            batched_median_ns: 0.5e6,
+            narrow: true,
+        };
+        write_pipeline_bench_json(&path, &[engines]).unwrap();
+        let net = NetComparison {
+            inproc_rtt_ns: 10_000.0,
+            tcp_rtt_ns: 40_000.0,
+        };
+        assert!((net.overhead_ns() - 30_000.0).abs() < 1e-9);
+        assert!((net.overhead_ratio() - 4.0).abs() < 1e-9);
+        merge_net_bench_json(&path, &net).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // The engine rows survive the merge and the net object lands.
+        assert_eq!(parsed.get("models").as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.get("net").get("tcp_rtt_ns").as_f64(),
+            Some(40_000.0)
+        );
+        // Merging into a missing file builds the skeleton.
+        let _ = std::fs::remove_file(&path);
+        merge_net_bench_json(&path, &net).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("pipeline"));
+        assert_eq!(parsed.get("models").as_arr().unwrap().len(), 0);
+        assert_eq!(
+            parsed.get("net").get("overhead_ratio").as_f64(),
+            Some(4.0)
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,535 @@
+//! Integration tests for the TCP serving front-end (DESIGN.md §8):
+//! network golden-output equality (the TCP path must be byte-identical
+//! to in-process `replay_multi`), protocol error-code ↔ coordinator
+//! counter reconciliation (including a drain-partial case), pipelining
+//! order, and malformed-input robustness — all over localhost sockets
+//! with ephemeral ports, no external services, deterministic via seeded
+//! traces and the FIFO drain (the only waiting is a bounded spin for
+//! socket-carried requests to reach the coordinator's intake counters).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cnn_flow::coordinator::{loadgen, EngineKind, Server, ServerConfig};
+use cnn_flow::model::zoo;
+use cnn_flow::net::client::Client;
+use cnn_flow::net::proto::{self, ErrorCode, Msg, ProtoError, PROTO_VERSION};
+use cnn_flow::net::server::NetServer;
+use cnn_flow::quant::QModel;
+use cnn_flow::sim::pipeline::PipelineSim;
+use cnn_flow::util::prop::prop_check;
+use cnn_flow::util::Rng;
+
+/// Three heterogeneous serving-zoo models, synthesized with fixed seeds —
+/// the same fleet shape `tests/coordinator_scaling.rs` replays.
+fn three_model_fleet() -> Vec<(String, PipelineSim)> {
+    [zoo::digits_cnn(), zoo::mobilenet_micro(), zoo::vgg_micro()]
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0x7CB0 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
+fn fleet_specs(fleet: &[(String, PipelineSim)]) -> Vec<(String, usize)> {
+    fleet
+        .iter()
+        .map(|(id, sim)| (id.clone(), sim.input_len()))
+        .collect()
+}
+
+fn fleet_config() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        queue_depth: 64,
+        verify_every: 0,
+        batch_deadline: Duration::from_micros(300),
+        ..Default::default()
+    }
+}
+
+/// Bounded spin until the coordinator's intake has accepted `n`
+/// requests: socket-carried submissions are asynchronous (client write →
+/// server reader → `submit_to`), so tests that reason about intake state
+/// after a `submit` must wait for the counter, not for the write.
+fn await_accepted(server: &Server, n: u64) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics().accepted < n {
+        assert!(
+            Instant::now() < deadline,
+            "coordinator never accepted {n} requests: {:?}",
+            server.metrics()
+        );
+        std::thread::yield_now();
+    }
+}
+
+// --------------------------------------------------------------------
+// THE acceptance case: network golden-output equality.
+// --------------------------------------------------------------------
+
+#[test]
+fn tcp_replay_is_byte_identical_to_in_process_replay() {
+    // One seeded heterogeneous trace, one set of interpreter-backed
+    // golden outputs, two transports: the in-process `replay_multi` and
+    // the TCP `replay_net` must both reproduce the goldens bit-for-bit,
+    // and their reports must be EQUAL — same ok/rejected/dropped/
+    // mismatched per model — which is what "the socket boundary adds no
+    // semantics" means.
+    let fleet = three_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let golden_refs: Vec<&PipelineSim> = fleet.iter().map(|(_, s)| s).collect();
+    let trace = loadgen::MultiTrace::seeded(0x9E7D, 96, &specs, 1);
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+
+    // In-process replay.
+    let mut inproc = Server::start_multi(fleet.clone(), fleet_config(), None).unwrap();
+    let report_inproc = loadgen::replay_multi(&inproc, &trace, 8, Some(&expected));
+    inproc.drain();
+    let m_inproc = inproc.metrics();
+
+    // TCP replay of the SAME trace against an identical fresh fleet.
+    let coord = Arc::new(Server::start_multi(fleet, fleet_config(), None).unwrap());
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 8).unwrap();
+    let report_tcp = loadgen::replay_net(&client, &trace, 8, Some(&expected));
+    let net_snap = net.shutdown();
+    let m_tcp = coord.metrics();
+
+    assert_eq!(report_tcp.aggregate.ok, 96);
+    assert_eq!(report_tcp.aggregate.mismatched, 0, "TCP path diverged from golden");
+    assert_eq!(report_tcp.aggregate.rejected, 0);
+    assert_eq!(report_tcp.aggregate.dropped, 0);
+    assert_eq!(
+        report_tcp, report_inproc,
+        "TCP and in-process replays must produce identical reports"
+    );
+    // Coordinator-side accounting is transport-independent...
+    assert_eq!(m_tcp.completed, m_inproc.completed);
+    assert_eq!(m_tcp.accepted, m_inproc.accepted);
+    assert_eq!(m_tcp.errored, 0);
+    // ...and the net layer reconciles exactly with it.
+    assert_eq!(net_snap.requests, 96);
+    assert_eq!(net_snap.responses_ok, m_tcp.completed);
+    assert_eq!(net_snap.errors_total(), 0);
+    assert_eq!(net_snap.err_malformed, 0);
+    assert_eq!(net_snap.connections, net_snap.disconnects);
+}
+
+// --------------------------------------------------------------------
+// Error-code ↔ coordinator-counter reconciliation.
+// --------------------------------------------------------------------
+
+#[test]
+fn unknown_model_and_invalid_frame_codes_reconcile() {
+    let fleet = three_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let coord = Arc::new(Server::start_multi(fleet, fleet_config(), None).unwrap());
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 2).unwrap();
+
+    // The advertised model list matches the coordinator's routes.
+    assert_eq!(client.models().unwrap(), specs);
+
+    // Unknown route: typed refusal, coordinator counts it unrouted.
+    let err = client.infer("no-such-model", &[0i64; 4]).unwrap_err();
+    assert_eq!(err.code, Some(ErrorCode::UnknownModel));
+
+    // Wrong frame length: accepted, then refused by validation.
+    let (model, input_len) = specs[0].clone();
+    let err = client.infer(&model, &vec![1i64; input_len + 3]).unwrap_err();
+    assert_eq!(err.code, Some(ErrorCode::InvalidFrame));
+
+    // A good request still works on the same pooled connection.
+    assert!(client.infer(&model, &vec![1i64; input_len]).is_ok());
+
+    let net_snap = net.shutdown();
+    let m = coord.metrics();
+    assert_eq!(net_snap.requests, 3);
+    assert_eq!(net_snap.responses_ok, 1);
+    assert_eq!(net_snap.err_unknown_model, 1);
+    assert_eq!(net_snap.err_unknown_model, m.unrouted);
+    assert_eq!(net_snap.err_invalid_frame, 1);
+    assert_eq!(net_snap.err_invalid_frame, m.errored);
+    assert_eq!(net_snap.responses_ok, m.completed);
+    assert_eq!(
+        net_snap.requests,
+        net_snap.responses_ok + net_snap.errors_total(),
+        "every decoded request gets exactly one answer"
+    );
+}
+
+#[test]
+fn backpressure_surfaces_as_queue_full_and_reconciles() {
+    // Heavy fixture (24x24 input), total queue capacity ~2, batch 1: a
+    // pipelined burst on ONE socket outruns the drain by construction —
+    // the reader submits back-to-back while each frame takes real
+    // simulation time — so rejections are observed as typed QueueFull
+    // errors, and the net tally equals the coordinator's intake counter.
+    let qm = QModel::synthetic(24, 8, 10, 0x8EEF);
+    let golden = PipelineSim::new(qm.clone(), None).unwrap();
+    let coord = Arc::new(
+        Server::start(
+            qm,
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_depth: 1,
+                verify_every: 0,
+                batch_deadline: Duration::from_millis(0),
+                // Pin the slow oracle engine so per-frame execution is
+                // orders of magnitude slower than decode+submit — the
+                // reader outruns the drain regardless of CI leg.
+                engine: EngineKind::Interpreter,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let mut stream = TcpStream::connect(net.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+
+    let burst = 200u64;
+    let frame = vec![1i64; golden.input_len()];
+    let expect = golden.run_interpreted(&[frame.clone()]).unwrap().outputs[0].clone();
+    let mut wire = Vec::new();
+    for id in 0..burst {
+        wire.extend_from_slice(
+            &Msg::InferRequest {
+                id,
+                model: coord.models()[0].clone(),
+                frame: frame.clone(),
+            }
+            .encode(),
+        );
+    }
+    stream.write_all(&wire).unwrap();
+
+    // Responses come back in request order: ids 0..burst, each either ok
+    // (bit-identical to the golden sim) or a typed QueueFull refusal.
+    let (mut ok, mut full) = (0u64, 0u64);
+    for id in 0..burst {
+        match proto::read_frame(&mut stream).unwrap().unwrap() {
+            Msg::InferOk { id: got, logits, .. } => {
+                assert_eq!(got, id, "responses must preserve request order");
+                assert_eq!(logits, expect);
+                ok += 1;
+            }
+            Msg::InferErr { id: got, code, .. } => {
+                assert_eq!(got, id, "responses must preserve request order");
+                assert_eq!(code, ErrorCode::QueueFull);
+                full += 1;
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(ok + full, burst);
+    assert!(full > 0, "burst of {burst} never overflowed capacity-2 queues");
+    drop(stream);
+
+    let net_snap = net.shutdown();
+    let m = coord.metrics();
+    assert_eq!(net_snap.requests, burst);
+    assert_eq!(net_snap.responses_ok, ok);
+    assert_eq!(net_snap.err_queue_full, full);
+    assert_eq!(m.rejected, full, "QueueFull must reconcile with intake rejected");
+    assert_eq!(m.completed, ok);
+}
+
+// --------------------------------------------------------------------
+// Graceful drain over TCP, incl. the drain-partial batch case.
+// --------------------------------------------------------------------
+
+#[test]
+fn tcp_drain_completes_in_flight_partial_batches_per_model() {
+    // 1 + 2 + 3 requests across three models with a far deadline and a
+    // big max_batch: nothing flushes until the front-end drains. The
+    // shutdown must answer every in-flight request (one partial drain
+    // batch per model), close the sockets cleanly, and leave net +
+    // coordinator counters reconciled — the TCP image of
+    // `multi_model_drain_partial_batches_reconcile_per_model`.
+    let fleet = three_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let golden_refs: Vec<PipelineSim> = fleet.iter().map(|(_, s)| s.clone()).collect();
+    let coord = Arc::new(
+        Server::start_multi(
+            fleet,
+            ServerConfig {
+                workers: 1,
+                max_batch: 16,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_secs(30),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 6).unwrap();
+
+    let mut pendings = Vec::new();
+    let mut expects = Vec::new();
+    for (i, (id, len)) in specs.iter().enumerate() {
+        for _ in 0..=i {
+            let frame = vec![1i64; *len];
+            expects.push(
+                golden_refs[i]
+                    .run_interpreted(&[frame.clone()])
+                    .unwrap()
+                    .outputs[0]
+                    .clone(),
+            );
+            pendings.push(client.submit(id, &frame).unwrap());
+        }
+    }
+    // The submissions are socket-borne: wait until the coordinator has
+    // accepted all six before initiating the drain.
+    await_accepted(&coord, 6);
+
+    let net_snap = net.shutdown();
+    // Every in-flight request was answered before its socket closed.
+    for (pending, expect) in pendings.into_iter().zip(expects) {
+        let resp = pending.wait().expect("in-flight request dropped by drain");
+        assert_eq!(resp.logits, expect, "drained response diverged from golden");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, 6, "1 + 2 + 3 drained requests");
+    assert_eq!(m.batches, 3, "one partial drain batch per model");
+    assert_eq!(m.flush_drain, 3);
+    assert_eq!(m.flush_full + m.flush_deadline, 0);
+    assert_eq!(m.occupancy_frames, 6, "drain partial batches accounted");
+    assert_eq!(net_snap.requests, 6);
+    assert_eq!(net_snap.responses_ok, 6, "drain must not drop in-flight replies");
+    assert_eq!(net_snap.errors_total(), 0);
+    assert_eq!(net_snap.connections, net_snap.disconnects);
+
+    // After the drain the front-end refuses new work entirely.
+    match Client::connect(&net.local_addr().to_string(), 1) {
+        Err(_) => {}
+        Ok(c) => assert!(c.models().is_err(), "listener must be gone after drain"),
+    }
+}
+
+// --------------------------------------------------------------------
+// Wire protocol: seeded round-trip property + malformed-frame handling.
+// --------------------------------------------------------------------
+
+#[test]
+fn wire_protocol_roundtrips_for_random_valid_frames() {
+    prop_check(192, 0x9120E, |rng| {
+        let msg = random_msg(rng);
+        let bytes = msg.encode();
+        let mut cursor = &bytes[..];
+        let decoded = proto::read_frame(&mut cursor)
+            .map_err(|e| format!("decode of encoded {msg:?} failed: {e}"))?
+            .ok_or_else(|| "unexpected EOF".to_string())?;
+        if decoded != msg {
+            return Err(format!("roundtrip changed the message: {msg:?} -> {decoded:?}"));
+        }
+        if !cursor.is_empty() {
+            return Err(format!("{} undecoded bytes left", cursor.len()));
+        }
+        Ok(())
+    });
+}
+
+fn random_msg(rng: &mut Rng) -> Msg {
+    fn random_string(rng: &mut Rng) -> String {
+        let n = rng.below(24) as usize;
+        (0..n)
+            .map(|_| char::from(b'a' + rng.below(26) as u8))
+            .collect()
+    }
+    fn random_vec(rng: &mut Rng) -> Vec<i64> {
+        let n = rng.below(96) as usize;
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0 => i64::MIN,
+                1 => i64::MAX,
+                _ => rng.int8() as i64,
+            })
+            .collect()
+    }
+    match rng.below(5) {
+        0 => Msg::InferRequest {
+            id: rng.next_u64(),
+            model: random_string(rng),
+            frame: random_vec(rng),
+        },
+        1 => Msg::InferOk {
+            id: rng.next_u64(),
+            argmax: rng.below(1 << 16) as u32,
+            sim_latency_cycles: rng.next_u64(),
+            logits: random_vec(rng),
+        },
+        2 => Msg::InferErr {
+            id: rng.next_u64(),
+            code: ErrorCode::from_u8(1 + rng.below(5) as u8).unwrap(),
+            message: random_string(rng),
+        },
+        3 => Msg::ListModels,
+        _ => Msg::ModelList {
+            models: (0..rng.below(6))
+                .map(|_| (random_string(rng), rng.below(1 << 20) as u32))
+                .collect(),
+        },
+    }
+}
+
+#[test]
+fn malformed_wire_bytes_never_panic_the_decoder() {
+    // Targeted malformations get their typed errors...
+    let mut two: &[u8] = &[0, 1];
+    assert_eq!(proto::read_frame(&mut two), Err(ProtoError::Truncated));
+    let mut oversized: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0, 0];
+    assert!(matches!(
+        proto::read_frame(&mut oversized),
+        Err(ProtoError::Oversized(_))
+    ));
+    let bad_version = [0, 0, 0, 2, PROTO_VERSION + 7, 0x04];
+    let mut cursor = &bad_version[..];
+    assert_eq!(
+        proto::read_frame(&mut cursor),
+        Err(ProtoError::BadVersion(PROTO_VERSION + 7))
+    );
+    // ...and arbitrary fuzzed bodies decode to *some* Result, never a
+    // panic (the server's no-panic guarantee rests on this).
+    prop_check(256, 0xF022, |rng| {
+        let n = rng.below(64) as usize + 2;
+        let mut body: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = Msg::decode(&body);
+        // Also with a plausible header, fuzzing only the payload.
+        body[0] = PROTO_VERSION;
+        body[1] = 1 + rng.below(5) as u8;
+        let _ = Msg::decode(&body);
+        Ok(())
+    });
+}
+
+#[test]
+fn server_answers_malformed_bytes_and_keeps_serving() {
+    let qm = QModel::synthetic(8, 4, 6, 0xBAD0);
+    let coord = Arc::new(
+        Server::start(
+            qm,
+            ServerConfig {
+                workers: 1,
+                verify_every: 0,
+                batch_deadline: Duration::from_millis(0),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+
+    // Connection 1: an oversized length prefix. The server must answer
+    // with a typed Malformed error (request id 0) and close — and MUST
+    // NOT crash. (Nothing is written beyond the prefix, so the close is
+    // a clean FIN rather than an RST that could race the error frame.)
+    let mut bad = TcpStream::connect(net.local_addr()).unwrap();
+    bad.write_all(&[0xFF, 0xFF, 0xFF, 0xFF]).unwrap();
+    match proto::read_frame(&mut bad).unwrap() {
+        Some(Msg::InferErr { id, code, .. }) => {
+            assert_eq!(id, 0);
+            assert_eq!(code, ErrorCode::Malformed);
+        }
+        other => panic!("expected a Malformed error, got {other:?}"),
+    }
+    // The connection is closed after a framing violation.
+    assert_eq!(proto::read_frame(&mut bad).unwrap(), None);
+
+    // Connection 2: a body that lies about its vector count.
+    let mut liar = TcpStream::connect(net.local_addr()).unwrap();
+    let mut body = vec![PROTO_VERSION, 0x01]; // InferRequest
+    body.extend_from_slice(&7u64.to_be_bytes());
+    body.extend_from_slice(&1u16.to_be_bytes());
+    body.push(b'm');
+    body.extend_from_slice(&u32::MAX.to_be_bytes()); // "4 billion values"
+    let mut framed = (body.len() as u32).to_be_bytes().to_vec();
+    framed.extend_from_slice(&body);
+    liar.write_all(&framed).unwrap();
+    match proto::read_frame(&mut liar).unwrap() {
+        Some(Msg::InferErr { code, .. }) => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("expected a Malformed error, got {other:?}"),
+    }
+
+    // The server is still alive: a well-formed client is served.
+    let client = Client::connect(&net.local_addr().to_string(), 1).unwrap();
+    let (model, len) = client.models().unwrap()[0].clone();
+    assert!(client.infer(&model, &vec![1i64; len]).is_ok());
+
+    let snap = net.shutdown();
+    assert_eq!(snap.err_malformed, 2);
+    assert_eq!(snap.responses_ok, 1);
+    assert_eq!(coord.metrics().completed, 1, "malformed bytes never reach a shard");
+}
+
+#[test]
+fn pipelined_requests_on_one_socket_answer_in_order() {
+    let qm = QModel::synthetic(8, 4, 6, 0x41FE);
+    let golden = PipelineSim::new(qm.clone(), None).unwrap();
+    let coord = Arc::new(
+        Server::start(
+            qm,
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_micros(200),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let model = coord.models()[0].clone();
+
+    // Six distinct frames, written back-to-back before reading anything.
+    let mut rng = Rng::new(0x60D);
+    let frames: Vec<Vec<i64>> = (0..6)
+        .map(|_| (0..64).map(|_| rng.int8() as i64).collect())
+        .collect();
+    let mut stream = TcpStream::connect(net.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut wire = Vec::new();
+    for (i, frame) in frames.iter().enumerate() {
+        wire.extend_from_slice(
+            &Msg::InferRequest {
+                id: 100 + i as u64,
+                model: model.clone(),
+                frame: frame.clone(),
+            }
+            .encode(),
+        );
+    }
+    stream.write_all(&wire).unwrap();
+
+    for (i, frame) in frames.iter().enumerate() {
+        let expect = golden.run_interpreted(&[frame.clone()]).unwrap().outputs[0].clone();
+        match proto::read_frame(&mut stream).unwrap().unwrap() {
+            Msg::InferOk { id, logits, .. } => {
+                assert_eq!(id, 100 + i as u64, "pipelined responses out of order");
+                assert_eq!(logits, expect, "frame {i} diverged");
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    drop(stream);
+    let snap = net.shutdown();
+    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.responses_ok, 6);
+    assert_eq!(snap.connections, 1, "pipelining happened on one socket");
+}
