@@ -9,12 +9,18 @@
 //!   compiled path must be >= 5x frames/sec;
 //! * frame-at-a-time compiled execution vs the batched tier
 //!   (`CompiledPipeline::execute_batch`, one program traversal per
-//!   batch) — batched must be >= 1.5x single-frame compiled throughput.
+//!   batch) — batched must be >= 1.5x single-frame compiled throughput;
+//! * the unfolded batched tier vs the rate-aware folded engine
+//!   (`FoldedPipeline`, DESIGN.md §9) on the MobileNet-style zoo config,
+//!   where the Eq.-8 rate analysis fuses the low-rate tail — folded must
+//!   not regress (>= 0.9x, a noise floor; the win itself is tracked in
+//!   `BENCH_pipeline.json` as `fold_speedup`).
 //!
 //! The original artifact benches (continuous-flow vs fully-parallel
 //! plans, JSC across rates) still run when `make artifacts` has.
 
 use cnn_flow::flow::Ratio;
+use cnn_flow::model::zoo;
 use cnn_flow::quant::QModel;
 use cnn_flow::runtime::artifacts_dir;
 use cnn_flow::sim::pipeline::PipelineSim;
@@ -39,6 +45,16 @@ fn main() {
         .map(|_| (0..input_len).map(|_| rng.int8() as i64).collect())
         .collect();
     comparisons.push(compare(&b, syn, &syn_frames));
+
+    // --- folded vs unfolded on the MobileNet-style zoo config -----------
+    // (the stride-2 tail is where Eq.-8 folding pays: dw2+pw2 / dw3+pw3
+    // fuse pairwise and the pool feeds the dense head from registers)
+    let mnet = QModel::synthesize(&zoo::mobilenet_micro(), 0x53).unwrap();
+    let mnet_len: usize = mnet.input_shape.iter().map(|&d| d.max(1)).product();
+    let mnet_frames: Vec<Vec<i64>> = (0..16)
+        .map(|_| (0..mnet_len).map(|_| rng.int8() as i64).collect())
+        .collect();
+    comparisons.push(compare(&b, mnet, &mnet_frames));
 
     // --- artifact models, when built ------------------------------------
     let digits = QModel::load(&artifacts_dir().join("weights/digits.json"));
@@ -87,13 +103,15 @@ fn main() {
         .expect("write BENCH_pipeline.json");
     for c in &comparisons {
         println!(
-            "BENCH pipeline/{}/speedup compiled={:.3}M frames/s interp={:.3}M frames/s speedup={:.2}x batched={:.3}M frames/s batch_speedup={:.2}x narrow={}",
+            "BENCH pipeline/{}/speedup compiled={:.3}M frames/s interp={:.3}M frames/s speedup={:.2}x batched={:.3}M frames/s batch_speedup={:.2}x folded={:.3}M frames/s fold_speedup={:.2}x narrow={}",
             c.model,
             c.compiled_fps() / 1e6,
             c.interp_fps() / 1e6,
             c.speedup(),
             c.batched_fps() / 1e6,
             c.batch_speedup(),
+            c.folded_fps() / 1e6,
+            c.fold_speedup(),
             c.narrow,
         );
     }
@@ -109,8 +127,19 @@ fn main() {
         "batched execution must be >= 1.5x single-frame compiled throughput \
          on the synthetic digits fixture (got {batch_speedup:.2}x)"
     );
+    // Value equality folded-vs-unfolded is asserted inside
+    // `compare_engines`; here we pin that folding never *costs* throughput
+    // (0.9 floor absorbs timer noise on the small fixture — the actual
+    // win lands in BENCH_pipeline.json as fold_speedup).
+    let fold_speedup = comparisons[1].fold_speedup();
+    assert!(
+        fold_speedup >= 0.9,
+        "rate-aware folding must not regress the batched tier on \
+         mobilenet_micro (got {fold_speedup:.2}x)"
+    );
     println!(
         "OK: compiled engine {syn_speedup:.1}x interpreter, batched tier \
-         {batch_speedup:.1}x single-frame; BENCH_pipeline.json written"
+         {batch_speedup:.1}x single-frame, folded tier {fold_speedup:.2}x \
+         batched on mobilenet_micro; BENCH_pipeline.json written"
     );
 }

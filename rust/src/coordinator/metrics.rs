@@ -21,15 +21,21 @@ use crate::util::json::Json;
 /// nanoseconds, so 40 buckets span 1 ns .. ~18 minutes.
 pub const BUCKETS: usize = 40;
 
-/// Batch-occupancy buckets: bucket `i` counts batches of exactly `i + 1`
-/// frames; the last bucket collects every batch at least that large
-/// (exact frame totals come from the `occupancy_frames` counter, which
-/// never saturates).
+/// Exact batch-occupancy buckets: bucket `i` counts batches of exactly
+/// `i + 1` frames, for batch sizes 1 ..= [`OCC_BUCKETS`].
 pub const OCC_BUCKETS: usize = 32;
+
+/// Histogram slots: the exact buckets plus one explicit overflow bucket
+/// (index [`OCC_BUCKETS`]) for batches larger than [`OCC_BUCKETS`]
+/// frames. Larger `--max-batch` configurations used to fold oversized
+/// batches into the last *exact* bucket, silently mislabelling them as
+/// size-32 batches; the dedicated slot keeps every exact bucket honest
+/// while preserving `sum(buckets) == batches`.
+pub const OCC_SLOTS: usize = OCC_BUCKETS + 1;
 
 /// A lock-free batch-size histogram.
 pub struct OccupancyHistogram {
-    buckets: [AtomicU64; OCC_BUCKETS],
+    buckets: [AtomicU64; OCC_SLOTS],
 }
 
 impl OccupancyHistogram {
@@ -40,13 +46,20 @@ impl OccupancyHistogram {
     }
 
     /// Record one batch of `frames` frames (empty batches never flush).
+    /// Sizes above [`OCC_BUCKETS`] land in the overflow slot, so every
+    /// batch lands in exactly one bucket.
     pub fn record(&self, frames: usize) {
-        let idx = frames.clamp(1, OCC_BUCKETS) - 1;
+        let idx = if frames > OCC_BUCKETS {
+            OCC_BUCKETS
+        } else {
+            frames.max(1) - 1
+        };
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Point-in-time bucket counts (for merging across shards).
-    pub fn counts(&self) -> [u64; OCC_BUCKETS] {
+    /// Point-in-time bucket counts (for merging across shards); the last
+    /// entry is the overflow slot.
+    pub fn counts(&self) -> [u64; OCC_SLOTS] {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 }
@@ -261,8 +274,10 @@ pub struct MetricsSnapshot {
     pub flush_deadline: u64,
     pub flush_drain: u64,
     /// Merged batch-occupancy histogram: bucket `i` counts batches of
-    /// `i + 1` frames (last bucket: at least [`OCC_BUCKETS`] frames).
-    pub batch_occupancy: [u64; OCC_BUCKETS],
+    /// exactly `i + 1` frames; the final slot (index [`OCC_BUCKETS`]) is
+    /// the overflow bucket for batches larger than [`OCC_BUCKETS`]
+    /// frames. The slots always sum to `batches`.
+    pub batch_occupancy: [u64; OCC_SLOTS],
     pub mean_batch: f64,
     /// Mean wall-clock time from enqueue to answer.
     pub mean_service: Duration,
@@ -507,12 +522,32 @@ mod tests {
         h.record(1);
         h.record(4);
         h.record(OCC_BUCKETS); // last exact bucket
-        h.record(OCC_BUCKETS + 9); // overflow collects in the last bucket
+        h.record(OCC_BUCKETS + 9); // overflow gets its own slot
         let c = h.counts();
         assert_eq!(c[0], 2);
         assert_eq!(c[3], 1);
-        assert_eq!(c[OCC_BUCKETS - 1], 2);
+        assert_eq!(c[OCC_BUCKETS - 1], 1, "exact bucket holds only size-32");
+        assert_eq!(c[OCC_BUCKETS], 1, "oversized batch lands in overflow");
         assert_eq!(c.iter().sum::<u64>(), 5, "every batch lands in a bucket");
+    }
+
+    #[test]
+    fn occupancy_histogram_overflow_preserves_sum_at_max_batch_64() {
+        // A --max-batch 64 deployment flushes batches of every size up to
+        // 64: each exact size keeps its own bucket, everything above
+        // OCC_BUCKETS shares the overflow slot, and the bucket sum still
+        // equals the number of recorded batches.
+        let h = OccupancyHistogram::new();
+        let max_batch = 64usize;
+        for frames in 1..=max_batch {
+            h.record(frames);
+        }
+        let c = h.counts();
+        for (i, &n) in c[..OCC_BUCKETS].iter().enumerate() {
+            assert_eq!(n, 1, "exact bucket {i} counts its own size only");
+        }
+        assert_eq!(c[OCC_BUCKETS], (max_batch - OCC_BUCKETS) as u64);
+        assert_eq!(c.iter().sum::<u64>(), max_batch as u64);
     }
 
     fn sample_snapshot() -> MetricsSnapshot {
@@ -535,7 +570,7 @@ mod tests {
             flush_full: 1,
             flush_deadline: 1,
             flush_drain: 1,
-            batch_occupancy: [0; OCC_BUCKETS],
+            batch_occupancy: [0; OCC_SLOTS],
             mean_batch: 3.3,
             mean_service: Duration::from_micros(5),
             p50: Duration::from_micros(4),
@@ -556,7 +591,7 @@ mod tests {
         assert_eq!(parsed.get("p99_ns").as_usize(), Some(9000));
         assert_eq!(
             parsed.get("batch_occupancy").as_arr().unwrap().len(),
-            OCC_BUCKETS
+            OCC_SLOTS
         );
     }
 

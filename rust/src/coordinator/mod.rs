@@ -70,7 +70,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::quant::QModel;
-use crate::sim::compiled::CompiledPipeline;
+use crate::sim::compiled::{CompiledPipeline, FoldedPipeline};
 use crate::sim::pipeline::PipelineSim;
 
 pub use metrics::{
@@ -92,16 +92,21 @@ pub enum EngineKind {
     /// cross-checks the closed-form cycle prediction live
     /// (`MetricsSnapshot::cycle_divergence`).
     Interpreter,
+    /// The rate-aware folded value engine ([`FoldedPipeline`], DESIGN.md
+    /// §9): bit-identical to the compiled engine, with consecutive
+    /// low-rate layers fused into single traversals. Cycle figures come
+    /// from the certified `FoldedPrediction`.
+    Folded,
 }
 
 impl EngineKind {
-    /// The engine named by `$CNN_FLOW_ENGINE` (`compiled`, or `interp` /
-    /// `interpreter`). CI's interpreter matrix leg forces the oracle
-    /// engine through every default-configured test this way, so both
-    /// engines stay green. Unset or empty means "no override"; an
-    /// unrecognized non-empty value **panics** — silently falling back
-    /// to the compiled default would turn a typo in the CI matrix into a
-    /// leg that tests the wrong engine while staying green.
+    /// The engine named by `$CNN_FLOW_ENGINE` (`compiled`, `folded`, or
+    /// `interp` / `interpreter`). CI's engine matrix legs force the
+    /// oracle and folded engines through every default-configured test
+    /// this way, so all engines stay green. Unset or empty means "no
+    /// override"; an unrecognized non-empty value **panics** — silently
+    /// falling back to the compiled default would turn a typo in the CI
+    /// matrix into a leg that tests the wrong engine while staying green.
     pub fn from_env() -> Option<EngineKind> {
         let raw = std::env::var("CNN_FLOW_ENGINE").ok()?;
         if raw.is_empty() {
@@ -111,18 +116,19 @@ impl EngineKind {
             Some(engine) => Some(engine),
             None => panic!(
                 "CNN_FLOW_ENGINE='{raw}' is not a recognized engine \
-                 (expected compiled | interp | interpreter)"
+                 (expected compiled | folded | interp | interpreter)"
             ),
         }
     }
 
-    /// Parse an engine name (`compiled`, `interp`, `interpreter`;
-    /// case-insensitive) — shared by the env override and the CLI's
-    /// `--engine` flag.
+    /// Parse an engine name (`compiled`, `folded`, `interp`,
+    /// `interpreter`; case-insensitive) — shared by the env override and
+    /// the CLI's `--engine` flag.
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s.to_ascii_lowercase().as_str() {
             "interp" | "interpreter" => Some(EngineKind::Interpreter),
             "compiled" => Some(EngineKind::Compiled),
+            "folded" => Some(EngineKind::Folded),
             _ => None,
         }
     }
@@ -510,7 +516,7 @@ impl Server {
         let mut flush_full = 0u64;
         let mut flush_deadline = 0u64;
         let mut flush_drain = 0u64;
-        let mut batch_occupancy = [0u64; metrics::OCC_BUCKETS];
+        let mut batch_occupancy = [0u64; metrics::OCC_SLOTS];
         let mut buckets = [0u64; metrics::BUCKETS];
         for g in groups {
             workers += g.shards.len();
@@ -697,12 +703,13 @@ fn worker_loop(
     vtx: SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
 ) {
-    // The compiled engine is cloned once per shard and reused across all
+    // The value engine is cloned once per shard and reused across all
     // groups — scratch buffers included, so the hot path never allocates
     // activation storage.
-    let mut engine: Option<CompiledPipeline> = match config.engine {
-        EngineKind::Compiled => Some(sim.compiled.clone()),
-        EngineKind::Interpreter => None,
+    let mut engine: WorkerEngine = match config.engine {
+        EngineKind::Compiled => WorkerEngine::Compiled(sim.compiled.clone()),
+        EngineKind::Folded => WorkerEngine::Folded(sim.folded.clone()),
+        EngineKind::Interpreter => WorkerEngine::Interp,
     };
     let max_batch = config.max_batch.max(1);
     let mut serial: u64 = 0;
@@ -773,6 +780,14 @@ fn worker_loop(
     }
 }
 
+/// Per-shard clone of the configured value engine (the interpreter runs
+/// straight off the shared [`PipelineSim`], so it carries no state here).
+enum WorkerEngine {
+    Compiled(CompiledPipeline),
+    Folded(FoldedPipeline),
+    Interp,
+}
+
 /// Outcome of one frame group, engine-independent. Per-frame results so
 /// one malformed request (wrong length, out-of-grid values) errors only
 /// its own reply, never its co-batched neighbours.
@@ -837,6 +852,55 @@ fn run_group_compiled(
     }
 }
 
+/// Folded hot path: same screening and batched traversal structure as
+/// [`run_group_compiled`], but on the rate-aware [`FoldedPipeline`]
+/// (fused low-rate layers, register-blocked kernels) with cycle figures
+/// from the certified `FoldedPrediction` — which shares every cycle
+/// field with the unfolded prediction, because folding re-accounts unit
+/// *work*, never completion times (DESIGN.md §9).
+fn run_group_folded(
+    sim: &PipelineSim,
+    engine: &mut FoldedPipeline,
+    group: &[Request],
+    shard: &ShardMetrics,
+) -> GroupResult {
+    let mut outputs: Vec<Result<Vec<i64>, String>> = Vec::with_capacity(group.len());
+    let mut frames: Vec<&[i64]> = Vec::with_capacity(group.len());
+    let mut slots: Vec<usize> = Vec::with_capacity(group.len());
+    for (i, r) in group.iter().enumerate() {
+        match engine.validate_frame(&r.x_q) {
+            Ok(()) => {
+                slots.push(i);
+                frames.push(&r.x_q);
+                outputs.push(Ok(Vec::new()));
+            }
+            Err(e) => outputs.push(Err(e)),
+        }
+    }
+    match engine.execute_batch_prevalidated(&frames) {
+        Ok(batch_out) => {
+            for (&slot, o) in slots.iter().zip(batch_out) {
+                outputs[slot] = Ok(o);
+            }
+        }
+        Err(e) => {
+            for &slot in &slots {
+                outputs[slot] = Err(e.clone());
+            }
+        }
+    }
+    let fp = sim.predicted.folded(frames.len(), &sim.fold_factors);
+    shard
+        .predicted_cycles
+        .fetch_add(fp.total_cycles, Ordering::Relaxed);
+    GroupResult {
+        outputs,
+        latency_cycles: fp.first_frame_latency,
+        per_frame_cycles: fp.steady_cycles_per_frame.max(1.0) as u64,
+        group_cycles: fp.total_cycles,
+    }
+}
+
 /// Oracle path: the fused interpreter, cross-checking the closed-form
 /// cycle prediction on every group.
 fn run_group_interpreted(
@@ -879,7 +943,7 @@ fn run_group_interpreted(
 #[allow(clippy::too_many_arguments)]
 fn run_group(
     sim: &PipelineSim,
-    engine: &mut Option<CompiledPipeline>,
+    engine: &mut WorkerEngine,
     config: &ServerConfig,
     group: Vec<Request>,
     vtx: &SyncSender<(Vec<i64>, Vec<i64>)>,
@@ -887,9 +951,10 @@ fn run_group(
     serial: &mut u64,
     reason: FlushReason,
 ) {
-    let result = match engine.as_mut() {
-        Some(cp) => run_group_compiled(sim, cp, &group, shard),
-        None => run_group_interpreted(sim, &group, shard),
+    let result = match engine {
+        WorkerEngine::Compiled(cp) => run_group_compiled(sim, cp, &group, shard),
+        WorkerEngine::Folded(fp) => run_group_folded(sim, fp, &group, shard),
+        WorkerEngine::Interp => run_group_interpreted(sim, &group, shard),
     };
     shard.batches.fetch_add(1, Ordering::Relaxed);
     match reason {
@@ -1218,7 +1283,11 @@ mod tests {
         let trace = loadgen::Trace::seeded(17, 40, 64, 1);
         let expected = loadgen::golden_outputs(&sim, &trace);
         let mut snapshots = Vec::new();
-        for engine in [EngineKind::Compiled, EngineKind::Interpreter] {
+        for engine in [
+            EngineKind::Compiled,
+            EngineKind::Folded,
+            EngineKind::Interpreter,
+        ] {
             let server = Server::start(
                 qm.clone(),
                 ServerConfig {
@@ -1242,13 +1311,17 @@ mod tests {
         }
         // Interpreter mode measured cycles; they must equal its own
         // predictions exactly (the live predicted-vs-simulated check).
-        let interp = &snapshots[1];
+        let interp = &snapshots[2];
         assert!(interp.simulated_cycles > 0);
         assert_eq!(interp.simulated_cycles, interp.predicted_cycles);
-        // Compiled mode never simulates cycles but predicts the same
-        // totals for the same group shapes.
+        // Compiled and folded modes never simulate cycles but predict
+        // totals for the same group shapes; the folded certificate's
+        // totals must match the unfolded prediction (same groups, same
+        // closed form — folding changes unit accounting, not completion).
         assert_eq!(snapshots[0].simulated_cycles, 0);
         assert!(snapshots[0].predicted_cycles > 0);
+        assert_eq!(snapshots[1].simulated_cycles, 0);
+        assert_eq!(snapshots[1].predicted_cycles, snapshots[0].predicted_cycles);
     }
 
     #[test]
@@ -1272,6 +1345,8 @@ mod tests {
             Some(EngineKind::Interpreter)
         );
         assert_eq!(EngineKind::parse("COMPILED"), Some(EngineKind::Compiled));
+        assert_eq!(EngineKind::parse("folded"), Some(EngineKind::Folded));
+        assert_eq!(EngineKind::parse("Folded"), Some(EngineKind::Folded));
         assert_eq!(EngineKind::parse("gpu"), None);
     }
 

@@ -8,7 +8,9 @@ pub mod rate;
 pub mod ratio;
 pub mod schedule;
 
-pub use plan::{plan_all, plan_layer, PlannedLayer, UnitPlan};
-pub use rate::{analyze, layer_rate, RateAnalysis, RatedLayer};
+pub use plan::{fold_plan, plan_all, plan_layer, PlannedLayer, UnitPlan};
+pub use rate::{analyze, fold_factor, layer_rate, pixel_period, RateAnalysis, RatedLayer};
 pub use ratio::Ratio;
-pub use schedule::{BatchPrediction, ScheduleModel, SchedulePrediction};
+pub use schedule::{
+    BatchPrediction, FoldedPrediction, ScheduleError, ScheduleModel, SchedulePrediction,
+};

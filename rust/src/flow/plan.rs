@@ -219,6 +219,51 @@ pub fn plan_all(analysis: &super::RateAnalysis) -> Vec<PlannedLayer> {
     analysis.layers.iter().map(plan_layer).collect()
 }
 
+/// Per-layer fold factors for a planned pipeline (DESIGN.md §9).
+///
+/// The source stream delivers one input pixel every
+/// `pixel_period(d_0, r_0)` cycles; a layer whose output pixel period is
+/// longer only needs to emit every so many source periods, so its work
+/// can be time-multiplexed onto shared hardware without falling behind
+/// the flow — the software analogue of the paper's rate-aware unit
+/// interleaving (Sections IV-C/D/E). The planner *already* interleaves
+/// `configs` configurations per unit, so the fold factor here is the
+/// slack the plan leaves on the table:
+///
+/// ```text
+/// fold_l = max(1, out_period_l / (configs_l * src_period))
+/// ```
+///
+/// Full-rate layers (and layers the planner has fully interleaved, like
+/// FCU-mapped dense heads) get factor 1; stride/pool layers — whose units
+/// the planner sizes for the *input* rate while outputs emerge at 1/s² of
+/// it — get the stride-squared factors the paper's Table V rates imply.
+/// Folding a layer by its factor drives its utilisation toward 1.0, which
+/// is exactly the "close to 100% utilization" claim the folded engine
+/// certifies via [`crate::flow::schedule::FoldedPrediction`].
+pub fn fold_plan(plans: &[PlannedLayer]) -> Vec<u64> {
+    let Some(first) = plans.first() else {
+        return Vec::new();
+    };
+    if first.rated.r_in.is_zero() {
+        // No flow at all: nothing to fold against (the schedule builder
+        // rejects this pipeline with a typed error anyway).
+        return vec![1; plans.len()];
+    }
+    let src = super::rate::pixel_period(first.rated.d_in(), first.rated.r_in);
+    plans
+        .iter()
+        .map(|p| {
+            if p.rated.r_out.is_zero() {
+                return 1;
+            }
+            let out = super::rate::pixel_period(p.rated.d_out(), p.rated.r_out);
+            let interleaved = src.saturating_mul(p.plan.configs().max(1) as u64);
+            super::rate::fold_factor(out, interleaved)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -432,6 +477,27 @@ mod tests {
                 assert!(plans.iter().any(|p| p.plan.stalled()));
             }
         }
+    }
+
+    #[test]
+    fn fold_plan_folds_exactly_the_rate_slack() {
+        // mobilenet_micro: full-rate layers and FCU-interleaved pointwise
+        // layers fold 1; the stride-2 depthwise and the avgpool — whose
+        // units the planner sizes for the input rate while outputs emerge
+        // at 1/4 of it — fold 4.
+        let plans = plan_of(&zoo::mobilenet_micro());
+        assert_eq!(fold_plan(&plans), vec![1, 1, 1, 4, 1, 1, 1, 4, 1]);
+        // digits_cnn: both maxpools fold 4, everything else is saturated.
+        let plans = plan_of(&zoo::digits_cnn());
+        assert_eq!(fold_plan(&plans), vec![1, 4, 1, 4, 1]);
+        // jsc at r0 = 16 is fully parallel end to end: nothing folds.
+        let plans = plan_of(&zoo::jsc_mlp());
+        assert_eq!(fold_plan(&plans), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn fold_plan_handles_empty_and_degenerate() {
+        assert!(fold_plan(&[]).is_empty());
     }
 
     #[test]

@@ -131,6 +131,24 @@ fn rate_block(
     }
 }
 
+/// Cycles between consecutive pixels of a `d`-channel stream flowing at
+/// rate `r` features/cycle: `⌈d / r⌉`, floored at one cycle. This is the
+/// stream's *pixel period* — the paper's Eq. 17 quantity that decides how
+/// many configurations a shared unit can cycle through between arrivals.
+pub fn pixel_period(d: usize, r: Ratio) -> u64 {
+    r.ceil_div_into(d as u64).max(1)
+}
+
+/// Fold factor for a layer whose output stream has pixel period
+/// `out_period`, relative to the pipeline's source pixel period: how many
+/// idle cycles a full-width unit would burn per pixel, i.e. how many ways
+/// its work can be time-multiplexed onto shared hardware while still
+/// keeping up with the data rate. Always ≥ 1; 1 means full-rate (no
+/// folding possible).
+pub fn fold_factor(out_period: u64, source_period: u64) -> u64 {
+    (out_period / source_period.max(1)).max(1)
+}
+
 impl RateAnalysis {
     /// Effective input rate for the layer *after* a given index, taking
     /// residual merges into account: this is simply the stored r_in of the

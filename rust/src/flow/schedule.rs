@@ -26,6 +26,47 @@
 use super::{PlannedLayer, Ratio, UnitPlan};
 use crate::model::LayerKind;
 
+/// Typed schedule-construction failure. Degenerate-but-reachable layer
+/// configurations (a window layer whose output collapses to zero pixels,
+/// a rate that bottoms out at zero) are analysis answers, not process
+/// aborts: [`ScheduleModel::new`] returns one of these instead of
+/// panicking mid-replay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// The plan list is empty — nothing to schedule.
+    EmptyPlan,
+    /// The first layer's input rate is zero: no data ever arrives.
+    ZeroInputRate,
+    /// A layer's Eq.-8 output rate collapsed to zero.
+    ZeroOutputRate { layer: String },
+    /// A window layer emits no output pixels (or consumes an empty map),
+    /// so the completion recurrence has no stream to advance.
+    NoOutputPixels { layer: String },
+    /// The layer kind is not pipeline-simulated (pointwise layers lower
+    /// through the dense path elsewhere).
+    Unsupported { layer: String },
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::EmptyPlan => write!(f, "schedule: empty plan"),
+            ScheduleError::ZeroInputRate => write!(f, "schedule: zero input rate"),
+            ScheduleError::ZeroOutputRate { layer } => {
+                write!(f, "schedule: {layer}: zero output rate")
+            }
+            ScheduleError::NoOutputPixels { layer } => {
+                write!(f, "schedule: {layer}: layer emits no pixels")
+            }
+            ScheduleError::Unsupported { layer } => {
+                write!(f, "schedule: {layer}: pointwise layers are not pipeline-simulated")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
 /// Latency (pipeline register stages) per unit kind, as modelled by the
 /// interpreter: KPU-style window units take 3 cycles, PPU comparators 2,
 /// FCU accumulate/forward 2 (plus its weight-cycle tail `h`).
@@ -131,13 +172,13 @@ impl ScheduleModel {
         plans: &[PlannedLayer],
         input_hw: (usize, usize),
         d0: usize,
-    ) -> Result<ScheduleModel, String> {
+    ) -> Result<ScheduleModel, ScheduleError> {
         if plans.is_empty() {
-            return Err("schedule: empty plan".into());
+            return Err(ScheduleError::EmptyPlan);
         }
         let r0 = plans[0].rated.r_in;
         if r0.is_zero() {
-            return Err("schedule: zero input rate".into());
+            return Err(ScheduleError::ZeroInputRate);
         }
         let mut layers = Vec::with_capacity(plans.len());
         for plan in plans {
@@ -213,7 +254,9 @@ impl ScheduleModel {
                     st.prev_finish[li] = prev;
                 }
             }
-            frame_final = *out.last().expect("layer emitted no pixels");
+            // Construction rejects layers that emit no pixels
+            // (`ScheduleError::NoOutputPixels`), so `out` is never empty.
+            frame_final = out.last().copied().unwrap_or(frame_final);
         }
         st.frames_done += 1;
         frame_final
@@ -269,7 +312,7 @@ impl ScheduleModel {
     }
 }
 
-fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, String> {
+fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, ScheduleError> {
     let sl = &plan.rated.shaped;
     let layer = &sl.layer;
     let (h_in, w_in) = (sl.input.f, sl.input.f);
@@ -277,7 +320,19 @@ fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, String> {
     let (c_in, c_out) = (sl.input.d, sl.output.d);
     let r_out = plan.rated.r_out;
     if r_out.is_zero() {
-        return Err(format!("schedule: {}: zero output rate", layer.name));
+        return Err(ScheduleError::ZeroOutputRate {
+            layer: layer.name.clone(),
+        });
+    }
+    // Window layers drive the recurrence one output pixel at a time; a
+    // layer whose output map collapses to zero pixels (or that reads an
+    // empty input map) has no stream to schedule. Catching it here turns
+    // the former mid-replay `expect("layer emitted no pixels")` abort
+    // into a typed analysis error.
+    if layer.kind != LayerKind::Dense && (h_out == 0 || w_out == 0 || h_in == 0 || w_in == 0) {
+        return Err(ScheduleError::NoOutputPixels {
+            layer: layer.name.clone(),
+        });
     }
     let out_period = (c_out as u64 * r_out.den()).div_ceil(r_out.num()).max(1);
     let unit_kind = match plan.plan {
@@ -338,10 +393,9 @@ fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, String> {
             }
         }
         LayerKind::Pointwise => {
-            return Err(format!(
-                "schedule: {}: pointwise layers are not pipeline-simulated",
-                layer.name
-            ));
+            return Err(ScheduleError::Unsupported {
+                layer: layer.name.clone(),
+            });
         }
     };
     let latency = match layer.kind {
@@ -558,6 +612,52 @@ impl SchedulePrediction {
         }
     }
 
+    /// Closed-form figures for a `batch`-frame group executed by the
+    /// **folded** engine (DESIGN.md §9): per-layer work is
+    /// time-multiplexed onto `units / fold` shared units, exactly the
+    /// paper's rate-aware interleaving. Folding never moves a completion
+    /// cycle — the out-periods already encode each layer's Eq.-8 rate, so
+    /// the folded schedule finishes when the unfolded one does; what
+    /// changes is the *unit count the work is accounted against*, which
+    /// is why folded utilisation approaches 1.0 where the unfolded
+    /// figures idle at 1/fold.
+    ///
+    /// The contract mirrors [`SchedulePrediction::batched`]: every field
+    /// must equal [`ScheduleModel::run_folded`]'s exact replay of the
+    /// same frame count — cycle divergence at any batch size is a bug.
+    pub fn folded(&self, batch: usize, folds: &[u64]) -> FoldedPrediction {
+        assert_eq!(folds.len(), self.layers.len(), "one fold factor per layer");
+        let folded_units = folded_unit_counts(self.layers.iter().map(|l| l.units), folds);
+        let utilization = self
+            .layers
+            .iter()
+            .zip(&folded_units)
+            .map(|(l, &fu)| {
+                if batch == 0 {
+                    return 0.0;
+                }
+                let n = l.last_prefix.len();
+                let last = if batch <= n {
+                    l.last_prefix[batch - 1]
+                } else {
+                    l.last_prefix[n - 1] + (batch - n) as u64 * l.last_delta
+                };
+                let elapsed = last.saturating_sub(l.first_cycle).max(1);
+                (l.ops_per_frame * batch as u64) as f64 / (fu as f64 * elapsed as f64)
+            })
+            .collect();
+        FoldedPrediction {
+            batch,
+            total_cycles: self.total_cycles(batch),
+            steady_cycles_per_frame: self.cycles_per_frame(batch),
+            first_frame_latency: if batch == 0 { 0 } else { self.first_frame_latency },
+            fold_factors: folds.to_vec(),
+            folded_units,
+            utilization,
+            exact: self.exact || batch <= self.frames_observed(),
+        }
+    }
+
     /// Per-layer utilisation over an `frames`-frame stream.
     pub fn utilization(&self, frames: usize) -> Vec<f64> {
         self.layers
@@ -604,6 +704,76 @@ pub struct BatchPrediction {
     /// Whether the figures are certified-exact extrapolations (always
     /// true within the observed prefix).
     pub exact: bool,
+}
+
+/// Closed-form schedule figures for one fixed batch size under the
+/// folded engine, produced by [`SchedulePrediction::folded`] and
+/// certified against [`ScheduleModel::run_folded`].
+///
+/// Cycle fields (`total_cycles`, `steady_cycles_per_frame`,
+/// `first_frame_latency`) are identical to the unfolded
+/// [`BatchPrediction`] for the same batch — folding shares hardware, it
+/// does not reschedule completions. The folded content is
+/// `fold_factors` / `folded_units` / `utilization`: the rate-weighted
+/// unit counts the paper saves and the near-1.0 utilisation that saving
+/// buys.
+#[derive(Debug, Clone)]
+pub struct FoldedPrediction {
+    /// Frames in the group.
+    pub batch: usize,
+    /// Completion cycle of the group's last output.
+    pub total_cycles: u64,
+    /// Warm-up-excluding cycles/frame over the group.
+    pub steady_cycles_per_frame: f64,
+    /// Frame-0 latency (0 for an empty group).
+    pub first_frame_latency: u64,
+    /// Per-layer fold factor (1 = full width, no sharing).
+    pub fold_factors: Vec<u64>,
+    /// Per-layer physical unit count after folding: `⌈units / fold⌉`.
+    pub folded_units: Vec<usize>,
+    /// Per-layer utilisation of the *folded* units over the group.
+    pub utilization: Vec<f64>,
+    /// Whether the figures are certified-exact extrapolations.
+    pub exact: bool,
+}
+
+/// `⌈units / fold⌉` per layer, floored at one physical unit.
+fn folded_unit_counts(units: impl Iterator<Item = usize>, folds: &[u64]) -> Vec<usize> {
+    units
+        .zip(folds)
+        .map(|(u, &f)| u.div_ceil((f.max(1)) as usize).max(1))
+        .collect()
+}
+
+impl ScheduleModel {
+    /// Exact-replay counterpart of [`SchedulePrediction::folded`]: replay
+    /// `frames` frames cycle-for-cycle, then account each layer's work
+    /// against its folded unit count. The certification tests pin
+    /// [`SchedulePrediction::folded`] to this with zero cycle divergence.
+    pub fn run_folded(&self, frames: usize, folds: &[u64]) -> FoldedPrediction {
+        assert_eq!(folds.len(), self.layers.len(), "one fold factor per layer");
+        let res = self.run(frames);
+        let folded_units = folded_unit_counts(self.layers.iter().map(|l| l.units), folds);
+        let utilization = res
+            .stats
+            .iter()
+            .zip(&folded_units)
+            .map(|(s, &fu)| {
+                let elapsed = s.last_cycle.saturating_sub(s.first_cycle).max(1);
+                s.useful_ops as f64 / (fu as f64 * elapsed as f64)
+            })
+            .collect();
+        FoldedPrediction {
+            batch: frames,
+            total_cycles: res.total_cycles,
+            steady_cycles_per_frame: res.cycles_per_frame,
+            first_frame_latency: if frames == 0 { 0 } else { res.first_frame_latency },
+            fold_factors: folds.to_vec(),
+            folded_units,
+            utilization,
+            exact: true,
+        }
+    }
 }
 
 /// If every layer's completion vector (and carried state), plus the
@@ -750,6 +920,77 @@ mod tests {
         m.push(Layer::pwconv("pw1", 4));
         let a = analyze(&m, None).unwrap();
         let plans = plan_all(&a);
-        assert!(ScheduleModel::new(&plans, (4, 4), 2).is_err());
+        assert_eq!(
+            ScheduleModel::new(&plans, (4, 4), 2).unwrap_err(),
+            ScheduleError::Unsupported { layer: "pw1".into() }
+        );
+    }
+
+    #[test]
+    fn zero_pixel_layer_is_a_typed_error_not_a_panic() {
+        // A 0x0 input map with a padded conv produces a layer that reads
+        // an empty map — formerly an `expect("layer emitted no pixels")`
+        // abort mid-replay, now a construction-time ScheduleError.
+        let mut m = Model::new("degenerate", 0, 1);
+        m.push(Layer::conv("C1", 2, 1, 1, 2));
+        let a = analyze(&m, None).unwrap();
+        let plans = plan_all(&a);
+        let err = ScheduleModel::new(&plans, (1, 1), 1).unwrap_err();
+        assert_eq!(err, ScheduleError::NoOutputPixels { layer: "C1".into() });
+        assert!(err.to_string().contains("no pixels"), "{err}");
+    }
+
+    #[test]
+    fn schedule_errors_render_their_layer() {
+        let e = ScheduleError::ZeroOutputRate { layer: "dw7".into() };
+        assert_eq!(e.to_string(), "schedule: dw7: zero output rate");
+        assert_eq!(ScheduleError::EmptyPlan.to_string(), "schedule: empty plan");
+    }
+
+    #[test]
+    fn folded_prediction_has_zero_divergence_at_any_size() {
+        // The folded engine's cycle contract: the closed-form folded
+        // figures equal the exact folded replay at every batch size.
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let pred = SchedulePrediction::new(&model);
+        let folds = vec![1u64, 4, 2];
+        for b in [1usize, 2, 3, 4, 7, 8, 16, 64, 257] {
+            let fp = pred.folded(b, &folds);
+            let replay = model.run_folded(b, &folds);
+            assert!(fp.exact, "B={b}");
+            assert_eq!(fp.total_cycles, replay.total_cycles, "B={b}");
+            assert_eq!(
+                fp.steady_cycles_per_frame, replay.steady_cycles_per_frame,
+                "B={b}"
+            );
+            assert_eq!(fp.first_frame_latency, replay.first_frame_latency, "B={b}");
+            assert_eq!(fp.folded_units, replay.folded_units, "B={b}");
+            for (u, v) in fp.utilization.iter().zip(&replay.utilization) {
+                assert!((u - v).abs() < 1e-12, "B={b}: {u} vs {v}");
+            }
+        }
+        let empty = pred.folded(0, &folds);
+        assert_eq!(empty.total_cycles, 0);
+        assert_eq!(empty.first_frame_latency, 0);
+        assert!(empty.utilization.iter().all(|&u| u == 0.0));
+    }
+
+    #[test]
+    fn folding_shares_units_without_moving_cycles() {
+        let (plans, hw, d0) = tiny_model();
+        let model = ScheduleModel::new(&plans, hw, d0).unwrap();
+        let pred = SchedulePrediction::new(&model);
+        let folds = vec![2u64, 1, 1];
+        let bp = pred.batched(32);
+        let fp = pred.folded(32, &folds);
+        // Cycle figures are untouched by folding (shared hardware, same
+        // dataflow), while the folded layer's work is accounted against
+        // half the units, doubling its utilisation.
+        assert_eq!(fp.total_cycles, bp.total_cycles);
+        assert_eq!(fp.steady_cycles_per_frame, bp.steady_cycles_per_frame);
+        assert_eq!(fp.first_frame_latency, bp.first_frame_latency);
+        assert!((fp.utilization[0] - 2.0 * bp.utilization[0]).abs() < 1e-12);
+        assert!((fp.utilization[1] - bp.utilization[1]).abs() < 1e-12);
     }
 }

@@ -107,7 +107,7 @@ fn usage() {
          cnn-flow simulate --model <digits|jsc> [--frames N] [--r0 n[/d]] [--reference]\n  \
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
                     [--max-batch N] [--batch-deadline USEC] [--queue-depth N]\n  \
-                    [--verify-every N] [--engine compiled|interp]\n  \
+                    [--verify-every N] [--engine compiled|folded|interp]\n  \
                     [--metrics-json PATH]\n  \
          cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
                     except --verify-every; --workers = shards per model)\n  \
@@ -355,7 +355,7 @@ fn engine_flag(opts: &HashMap<String, String>) -> Result<EngineKind, String> {
     match opts.get("engine") {
         None => Ok(EngineKind::default_from_env()),
         Some(s) => EngineKind::parse(s).ok_or_else(|| {
-            format!("unknown engine '{s}' (expected compiled | interp | interpreter)")
+            format!("unknown engine '{s}' (expected compiled | folded | interp | interpreter)")
         }),
     }
 }
@@ -896,9 +896,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         .enumerate()
         .filter(|(_, &c)| c > 0)
         .map(|(i, &c)| {
-            // The last bucket collects every batch of >= OCC_BUCKETS frames.
-            if i + 1 == cnn_flow::coordinator::metrics::OCC_BUCKETS {
-                format!(">={}x{c}", i + 1)
+            // The final slot is the overflow bucket: batches larger than
+            // OCC_BUCKETS frames (exact buckets stop at OCC_BUCKETS).
+            if i == cnn_flow::coordinator::metrics::OCC_BUCKETS {
+                format!(">{i}x{c}")
             } else {
                 format!("{}x{c}", i + 1)
             }
@@ -1022,12 +1023,15 @@ fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
         let cmp = bench::compare_engines(&b, &sim, &frames);
         println!(
             "{name}: interpreter {:.3}M frames/s, compiled {:.3}M frames/s ({:.1}x), \
-             batched {:.3}M frames/s ({:.2}x over single-frame)",
+             batched {:.3}M frames/s ({:.2}x over single-frame), \
+             folded {:.3}M frames/s ({:.2}x over batched)",
             cmp.interp_fps() / 1e6,
             cmp.compiled_fps() / 1e6,
             cmp.speedup(),
             cmp.batched_fps() / 1e6,
-            cmp.batch_speedup()
+            cmp.batch_speedup(),
+            cmp.folded_fps() / 1e6,
+            cmp.fold_speedup()
         );
         comparisons.push(cmp);
     }

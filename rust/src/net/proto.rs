@@ -141,6 +141,15 @@ pub enum ProtoError {
     /// Structurally invalid body (unknown kind, short payload, bad UTF-8,
     /// inconsistent counts, trailing bytes).
     Malformed(String),
+    /// An encode-side collection exceeds its wire count prefix (`u16` for
+    /// the model list, `u32` for activation vectors). Encoding refuses
+    /// rather than letting `as` silently wrap the count and desynchronize
+    /// every later byte of the frame.
+    CountOverflow {
+        field: &'static str,
+        count: usize,
+        max: u64,
+    },
 }
 
 impl std::fmt::Display for ProtoError {
@@ -155,6 +164,9 @@ impl std::fmt::Display for ProtoError {
                 write!(f, "unsupported protocol version {v} (expected {PROTO_VERSION})")
             }
             ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            ProtoError::CountOverflow { field, count, max } => {
+                write!(f, "{field} count {count} exceeds the wire maximum {max}")
+            }
         }
     }
 }
@@ -195,7 +207,13 @@ pub enum Msg {
 
 impl Msg {
     /// Encode into a complete wire frame (length prefix included).
-    pub fn encode(&self) -> Vec<u8> {
+    ///
+    /// Fallible by design: a frame whose counts do not fit their wire
+    /// prefixes ([`ProtoError::CountOverflow`]) or whose body exceeds
+    /// [`MAX_BODY`] ([`ProtoError::Oversized`]) is refused here, at the
+    /// sender — the old `as u16`/`as u32` casts would silently wrap the
+    /// count and emit a frame the peer misparses.
+    pub fn encode(&self) -> Result<Vec<u8>, ProtoError> {
         let mut body = Vec::with_capacity(32);
         body.push(PROTO_VERSION);
         match self {
@@ -203,7 +221,7 @@ impl Msg {
                 body.push(KIND_INFER_REQUEST);
                 push_u64(&mut body, *id);
                 push_str16(&mut body, model);
-                push_vec_i64(&mut body, frame);
+                push_vec_i64(&mut body, frame, "frame")?;
             }
             Msg::InferOk {
                 id,
@@ -215,7 +233,7 @@ impl Msg {
                 push_u64(&mut body, *id);
                 push_u32(&mut body, *argmax);
                 push_u64(&mut body, *sim_latency_cycles);
-                push_vec_i64(&mut body, logits);
+                push_vec_i64(&mut body, logits, "logits")?;
             }
             Msg::InferErr { id, code, message } => {
                 body.push(KIND_INFER_ERR);
@@ -226,6 +244,13 @@ impl Msg {
             Msg::ListModels => body.push(KIND_LIST_MODELS),
             Msg::ModelList { models } => {
                 body.push(KIND_MODEL_LIST);
+                if models.len() > u16::MAX as usize {
+                    return Err(ProtoError::CountOverflow {
+                        field: "model list",
+                        count: models.len(),
+                        max: u16::MAX as u64,
+                    });
+                }
                 push_u16(&mut body, models.len() as u16);
                 for (id, input_len) in models {
                     push_str16(&mut body, id);
@@ -233,11 +258,15 @@ impl Msg {
                 }
             }
         }
-        debug_assert!(body.len() as u64 <= MAX_BODY as u64, "frame exceeds MAX_BODY");
+        if body.len() as u64 > MAX_BODY as u64 {
+            return Err(ProtoError::Oversized(
+                u32::try_from(body.len()).unwrap_or(u32::MAX),
+            ));
+        }
         let mut out = Vec::with_capacity(4 + body.len());
         out.extend_from_slice(&(body.len() as u32).to_be_bytes());
         out.extend_from_slice(&body);
-        out
+        Ok(out)
     }
 
     /// Decode a frame body (everything after the length prefix). The body
@@ -334,10 +363,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Msg>, ProtoError> {
 }
 
 /// Write one complete frame (and flush, so a buffered writer's pipelined
-/// responses reach the socket per message).
-pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
-    w.write_all(&msg.encode())?;
-    w.flush()
+/// responses reach the socket per message). Fails with the encode-time
+/// [`ProtoError`]s before any byte hits the wire — a half-frame must
+/// never reach the peer.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> Result<(), ProtoError> {
+    let bytes = msg.encode()?;
+    w.write_all(&bytes)
+        .and_then(|()| w.flush())
+        .map_err(|e| ProtoError::Io(e.to_string()))
 }
 
 // -- encode helpers ----------------------------------------------------
@@ -368,11 +401,19 @@ fn push_str16(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&s.as_bytes()[..end]);
 }
 
-fn push_vec_i64(out: &mut Vec<u8>, xs: &[i64]) {
+fn push_vec_i64(out: &mut Vec<u8>, xs: &[i64], field: &'static str) -> Result<(), ProtoError> {
+    if xs.len() > u32::MAX as usize {
+        return Err(ProtoError::CountOverflow {
+            field,
+            count: xs.len(),
+            max: u32::MAX as u64,
+        });
+    }
     push_u32(out, xs.len() as u32);
     for &x in xs {
         out.extend_from_slice(&x.to_be_bytes());
     }
+    Ok(())
 }
 
 // -- decode cursor -----------------------------------------------------
@@ -453,7 +494,7 @@ mod tests {
     use super::*;
 
     fn roundtrip(msg: &Msg) -> Msg {
-        let bytes = msg.encode();
+        let bytes = msg.encode().expect("encode failed");
         let mut cursor = &bytes[..];
         read_frame(&mut cursor)
             .expect("roundtrip decode failed")
@@ -511,7 +552,7 @@ mod tests {
 
     #[test]
     fn truncated_body_detected() {
-        let bytes = Msg::ListModels.encode();
+        let bytes = Msg::ListModels.encode().unwrap();
         let mut cut = &bytes[..bytes.len() - 1];
         assert_eq!(read_frame(&mut cut), Err(ProtoError::Truncated));
     }
@@ -530,7 +571,7 @@ mod tests {
 
     #[test]
     fn bad_version_rejected() {
-        let mut bytes = Msg::ListModels.encode();
+        let mut bytes = Msg::ListModels.encode().unwrap();
         bytes[4] = PROTO_VERSION + 1; // first body byte
         let mut cursor = &bytes[..];
         assert_eq!(
@@ -545,7 +586,7 @@ mod tests {
             Msg::decode(&[PROTO_VERSION, 0x7F]),
             Err(ProtoError::Malformed(_))
         ));
-        let mut body = Msg::ListModels.encode()[4..].to_vec();
+        let mut body = Msg::ListModels.encode().unwrap()[4..].to_vec();
         body.push(0);
         assert!(matches!(Msg::decode(&body), Err(ProtoError::Malformed(_))));
     }
@@ -558,6 +599,60 @@ mod tests {
         push_str16(&mut body, "m");
         push_u32(&mut body, u32::MAX);
         assert!(matches!(Msg::decode(&body), Err(ProtoError::Malformed(_))));
+    }
+
+    /// The model-list count rides a u16 prefix: 65536 entries used to
+    /// wrap to 0 via `as u16` and emit a frame whose declared count
+    /// disagrees with its payload. Encode must refuse instead.
+    #[test]
+    fn model_list_count_overflow_rejected_at_encode() {
+        let models = vec![(String::new(), 0u32); u16::MAX as usize + 1];
+        let err = Msg::ModelList { models }.encode().unwrap_err();
+        assert_eq!(
+            err,
+            ProtoError::CountOverflow {
+                field: "model list",
+                count: u16::MAX as usize + 1,
+                max: u16::MAX as u64,
+            }
+        );
+        // One fewer entry is the boundary case: exactly u16::MAX entries
+        // still fit the prefix (and, at ~393 KB of payload, MAX_BODY).
+        let models = vec![(String::new(), 0u32); u16::MAX as usize];
+        assert!(Msg::ModelList { models }.encode().is_ok());
+    }
+
+    /// A body past [`MAX_BODY`] is refused at encode time (the receiver
+    /// would reject the length prefix anyway; the sender must not emit a
+    /// frame the protocol forbids).
+    #[test]
+    fn oversized_body_rejected_at_encode() {
+        let frame = vec![0i64; (MAX_BODY as usize / 8) + 1];
+        let err = Msg::InferRequest {
+            id: 1,
+            model: "m".into(),
+            frame,
+        }
+        .encode()
+        .unwrap_err();
+        assert!(matches!(err, ProtoError::Oversized(n) if n > MAX_BODY));
+        // And the largest zoo frame stays comfortably encodable.
+        let ok = Msg::InferRequest {
+            id: 1,
+            model: "vgg_micro".into(),
+            frame: vec![0i64; 24 * 24 * 8],
+        };
+        assert!(ok.encode().is_ok());
+    }
+
+    /// `write_frame` refuses the same frames without touching the writer.
+    #[test]
+    fn write_frame_propagates_encode_refusal_without_writing() {
+        let models = vec![(String::new(), 0u32); u16::MAX as usize + 1];
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, &Msg::ModelList { models }).unwrap_err();
+        assert!(matches!(err, ProtoError::CountOverflow { .. }));
+        assert!(sink.is_empty(), "no bytes may precede an encode refusal");
     }
 
     #[test]

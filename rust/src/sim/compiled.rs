@@ -43,6 +43,31 @@
 //! with a runtime bound. Per frame the result is bit-identical to
 //! [`CompiledPipeline::execute`]: integer accumulation commutes exactly,
 //! so reordering lanes never changes a value.
+//!
+//! # The folded tier (DESIGN.md §9)
+//!
+//! [`FoldedPipeline`] is the rate-aware lowering: it reads each layer's
+//! Eq.-8 fold factor (how many source pixel periods pass between the
+//! layer's output pixels) and *folds* low-rate layers the way the paper's
+//! hardware time-multiplexes them —
+//!
+//! * **fusion** — a low-rate window layer feeding a low-rate 1x1 conv
+//!   (MobileNet's dw→pw pairs after a stride) or a dense head runs in
+//!   *one* traversal: each produced pixel is consumed straight out of
+//!   registers, never written to the intermediate map;
+//! * **register-blocked micro-kernels** — low-rate layers that stay
+//!   unfused run a branch-free, fixed-width (`CHUNK`) channel-blocked
+//!   kernel whose inner tap loop autovectorises, instead of the
+//!   zero-skip kernel that favours sparse full-rate maps;
+//! * **kernel-selection table** — the per-layer choice is recorded and
+//!   exposed ([`FoldedPipeline::kernel_table`]) so tests, docs and the
+//!   CLI can see exactly how each layer was folded.
+//!
+//! Values stay bit-identical to [`CompiledPipeline`] and the interpreter
+//! (integer accumulation is order-independent, and folding only changes
+//! *where* partial sums live); cycle figures for the folded engine come
+//! from `flow::schedule`'s `FoldedPrediction`, certified against the
+//! exact replay.
 
 use std::sync::Arc;
 
@@ -893,6 +918,846 @@ fn padded_taps(
     (tap_start, taps)
 }
 
+// ---------------------------------------------------------------------------
+// The folded tier: rate-aware lowering (DESIGN.md §9).
+// ---------------------------------------------------------------------------
+
+/// Fixed channel-block width of the register-blocked micro-kernels. Eight
+/// accumulators fit the narrow path in two SIMD registers on every target
+/// the suite runs on, and the fixed bound lets the inner tap loop
+/// autovectorise without a lane mask.
+const CHUNK: usize = 8;
+
+/// Which micro-kernel the folding pass selected for a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelSel {
+    /// Scalar zero-activation-skip kernel — the unfolded engine's default,
+    /// best on full-rate maps where post-ReLU sparsity pays for the branch.
+    ZeroSkip,
+    /// Register-blocked, branch-free, `CHUNK`-wide channel-chunked
+    /// kernel: selected for low-rate MAC layers left unfused.
+    Blocked,
+    /// Member of a fused window→1x1-conv pair: the pair runs in one
+    /// traversal, the intermediate pixel never touches memory.
+    FusedPw,
+    /// Member of a fused window→dense pair: the flattened map is consumed
+    /// straight out of registers by the dense accumulators.
+    FusedDense,
+}
+
+impl std::fmt::Display for KernelSel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelSel::ZeroSkip => "zero-skip",
+            KernelSel::Blocked => "blocked",
+            KernelSel::FusedPw => "fused-pw",
+            KernelSel::FusedDense => "fused-dense",
+        })
+    }
+}
+
+/// One row of the per-layer kernel-selection table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelChoice {
+    pub layer: String,
+    /// The Eq.-8 fold factor the selection keyed on (1 = full rate).
+    pub fold: u64,
+    pub kernel: KernelSel,
+}
+
+/// One step of a folded program: indices into `Program::layers`.
+#[derive(Debug, Clone, Copy)]
+enum FStep {
+    Single { li: usize, blocked: bool },
+    /// Window layer `a` fused with the 1x1 conv `b` that consumes it.
+    FusedPw { a: usize, b: usize },
+    /// Window layer `a` fused with the dense layer `b` that flattens it.
+    FusedDense { a: usize, b: usize },
+}
+
+/// A lowered 1x1 stride-1 unpadded conv: exactly one tap per output
+/// pixel, at weight base 0 and input base `pixel * c_in`.
+fn is_pointwise<T: Cell>(l: &CLayer<T>) -> bool {
+    l.op == COp::Conv
+        && l.tap_start.len() >= 2
+        && l.taps.len() == l.tap_start.len() - 1
+        && l.tap_start.windows(2).enumerate().all(|(pix, w)| {
+            w[1] - w[0] == 1 && {
+                let t = l.taps[w[0] as usize];
+                t.w == 0 && t.x as usize == pix * l.c_in
+            }
+        })
+}
+
+/// The folding pass: walk the lowered program with its per-layer Eq.-8
+/// fold factors and decide, per layer, which kernel runs it — fusing
+/// consecutive low-rate layers into single-traversal steps and routing
+/// unfused low-rate MAC layers to the register-blocked kernel.
+fn plan_folding<T: Cell>(
+    prog: &Program<T>,
+    folds: &[u64],
+) -> Result<(Vec<FStep>, Vec<KernelChoice>), String> {
+    let n = prog.layers.len();
+    if folds.len() != n {
+        return Err(format!(
+            "folded lowering: {} fold factors for {n} layers",
+            folds.len()
+        ));
+    }
+    let mut table: Vec<KernelChoice> = prog
+        .layers
+        .iter()
+        .zip(folds)
+        .map(|(l, &f)| KernelChoice {
+            layer: l.name.clone(),
+            fold: f,
+            kernel: KernelSel::ZeroSkip,
+        })
+        .collect();
+    let mut steps = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let l = &prog.layers[i];
+        let window = matches!(l.op, COp::Conv | COp::Depthwise | COp::MaxPool);
+        if folds[i] > 1 && window && l.c_out > 0 && i + 1 < n {
+            let next = &prog.layers[i + 1];
+            if folds[i + 1] > 1
+                && is_pointwise(next)
+                && next.in_len == l.out_len
+                && next.c_in == l.c_out
+            {
+                table[i].kernel = KernelSel::FusedPw;
+                table[i + 1].kernel = KernelSel::FusedPw;
+                steps.push(FStep::FusedPw { a: i, b: i + 1 });
+                i += 2;
+                continue;
+            }
+            if next.op == COp::Dense && next.c_in == l.out_len && next.in_len == l.out_len {
+                table[i].kernel = KernelSel::FusedDense;
+                table[i + 1].kernel = KernelSel::FusedDense;
+                steps.push(FStep::FusedDense { a: i, b: i + 1 });
+                i += 2;
+                continue;
+            }
+        }
+        let blocked = folds[i] > 1
+            && matches!(l.op, COp::Conv | COp::Depthwise | COp::Dense)
+            && l.c_out >= CHUNK;
+        if blocked {
+            table[i].kernel = KernelSel::Blocked;
+        }
+        steps.push(FStep::Single { li: i, blocked });
+        i += 1;
+    }
+    Ok((steps, table))
+}
+
+/// Register-blocked, branch-free kernel: output channels in fixed
+/// [`CHUNK`]-wide blocks held in a local array, inner loops free of
+/// data-dependent branches so they autovectorise. Per output channel the
+/// accumulated terms are exactly [`run_layer`]'s (the zero-skip there
+/// only ever drops additions of zero), so values stay bit-identical.
+fn run_layer_blocked<T: Cell>(layer: &CLayer<T>, src: &[T], dst: &mut [T]) {
+    let c_out = layer.c_out;
+    match layer.op {
+        COp::Conv => {
+            let c_in = layer.c_in;
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                let mut cb = 0usize;
+                while cb < c_out {
+                    let bl = CHUNK.min(c_out - cb);
+                    let mut acc = [T::ZERO; CHUNK];
+                    acc[..bl].copy_from_slice(&layer.bias[cb..cb + bl]);
+                    for t in taps {
+                        let xb = t.x as usize;
+                        let wb = t.w as usize + cb;
+                        for ci in 0..c_in {
+                            let x = src[xb + ci];
+                            let ws = &layer.weights[wb + ci * c_out..wb + ci * c_out + bl];
+                            for (a, &w) in acc[..bl].iter_mut().zip(ws) {
+                                *a += w * x;
+                            }
+                        }
+                    }
+                    finalize(layer, &acc[..bl], &mut dst[o + cb..o + cb + bl]);
+                    cb += bl;
+                }
+                o += c_out;
+            }
+        }
+        COp::Depthwise => {
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                let mut cb = 0usize;
+                while cb < c_out {
+                    let bl = CHUNK.min(c_out - cb);
+                    let mut acc = [T::ZERO; CHUNK];
+                    acc[..bl].copy_from_slice(&layer.bias[cb..cb + bl]);
+                    for t in taps {
+                        let ws = &layer.weights[t.w as usize + cb..t.w as usize + cb + bl];
+                        let xs = &src[t.x as usize + cb..t.x as usize + cb + bl];
+                        for ((a, &w), &x) in acc[..bl].iter_mut().zip(ws).zip(xs) {
+                            *a += w * x;
+                        }
+                    }
+                    finalize(layer, &acc[..bl], &mut dst[o + cb..o + cb + bl]);
+                    cb += bl;
+                }
+                o += c_out;
+            }
+        }
+        COp::Dense => {
+            let mut cb = 0usize;
+            while cb < c_out {
+                let bl = CHUNK.min(c_out - cb);
+                let mut acc = [T::ZERO; CHUNK];
+                acc[..bl].copy_from_slice(&layer.bias[cb..cb + bl]);
+                for (f, &x) in src[..layer.in_len].iter().enumerate() {
+                    let ws = &layer.weights[f * c_out + cb..f * c_out + cb + bl];
+                    for (a, &w) in acc[..bl].iter_mut().zip(ws) {
+                        *a += w * x;
+                    }
+                }
+                finalize(layer, &acc[..bl], &mut dst[cb..cb + bl]);
+                cb += bl;
+            }
+        }
+        COp::MaxPool => {
+            // Never selected by the planner (no MACs to block); kept
+            // correct so the dispatch is total.
+            let mut o = 0usize;
+            for win in layer.tap_start.windows(2) {
+                let taps = &layer.taps[win[0] as usize..win[1] as usize];
+                let mut cb = 0usize;
+                while cb < c_out {
+                    let bl = CHUNK.min(c_out - cb);
+                    let mut acc = [T::FLOOR; CHUNK];
+                    for t in taps {
+                        let xs = &src[t.x as usize + cb..t.x as usize + cb + bl];
+                        for (a, &x) in acc[..bl].iter_mut().zip(xs) {
+                            if x > *a {
+                                *a = x;
+                            }
+                        }
+                    }
+                    dst[o + cb..o + cb + bl].copy_from_slice(&acc[..bl]);
+                    cb += bl;
+                }
+                o += c_out;
+            }
+        }
+    }
+}
+
+/// Accumulate one output pixel of a fused producer into `acc`
+/// (len = `l.c_out`), without the epilogue. Mirrors [`run_layer`]'s
+/// per-window body for each window op.
+fn produce_window<T: Cell>(l: &CLayer<T>, src: &[T], taps: &[Tap], acc: &mut [T]) {
+    match l.op {
+        COp::Conv => {
+            acc.copy_from_slice(&l.bias);
+            let (c_in, c_out) = (l.c_in, l.c_out);
+            for t in taps {
+                let xs = &src[t.x as usize..t.x as usize + c_in];
+                for (ci, &x) in xs.iter().enumerate() {
+                    if x == T::ZERO {
+                        continue;
+                    }
+                    let wb = t.w as usize + ci * c_out;
+                    for (av, &wv) in acc.iter_mut().zip(&l.weights[wb..wb + c_out]) {
+                        *av += wv * x;
+                    }
+                }
+            }
+        }
+        COp::Depthwise => {
+            acc.copy_from_slice(&l.bias);
+            for t in taps {
+                let xs = &src[t.x as usize..t.x as usize + l.c_out];
+                let ws = &l.weights[t.w as usize..t.w as usize + l.c_out];
+                for ((av, &wv), &xv) in acc.iter_mut().zip(ws).zip(xs) {
+                    *av += wv * xv;
+                }
+            }
+        }
+        COp::MaxPool => {
+            acc.fill(T::FLOOR);
+            for t in taps {
+                let xs = &src[t.x as usize..t.x as usize + l.c_out];
+                for (av, &xv) in acc.iter_mut().zip(xs) {
+                    if xv > *av {
+                        *av = xv;
+                    }
+                }
+            }
+        }
+        COp::Dense => debug_assert!(false, "dense is never a fused producer"),
+    }
+}
+
+/// The producer's per-window epilogue: pooling emits maxima as-is, every
+/// other op runs the fused ReLU/requant.
+#[inline]
+fn emit_window<T: Cell>(l: &CLayer<T>, acc: &[T], dst: &mut [T]) {
+    if l.op == COp::MaxPool {
+        dst.copy_from_slice(acc);
+    } else {
+        finalize(l, acc, dst);
+    }
+}
+
+/// Fused window→1x1-conv step, scalar path: each produced pixel is
+/// consumed immediately by the pointwise consumer, so the intermediate
+/// map (`la.out_len` cells) is never written.
+fn run_fused_pw<T: Cell>(
+    la: &CLayer<T>,
+    lb: &CLayer<T>,
+    src: &[T],
+    dst: &mut [T],
+    pacc: &mut Vec<T>,
+    mid: &mut Vec<T>,
+    acc: &mut Vec<T>,
+) {
+    let c_mid = la.c_out;
+    let c_out = lb.c_out;
+    pacc.resize(c_mid, T::ZERO);
+    mid.resize(c_mid, T::ZERO);
+    acc.resize(c_out, T::ZERO);
+    let mut o = 0usize;
+    for win in la.tap_start.windows(2) {
+        let taps = &la.taps[win[0] as usize..win[1] as usize];
+        produce_window(la, src, taps, &mut pacc[..c_mid]);
+        emit_window(la, &pacc[..c_mid], &mut mid[..c_mid]);
+        let a = &mut acc[..c_out];
+        a.copy_from_slice(&lb.bias);
+        for (ci, &x) in mid[..c_mid].iter().enumerate() {
+            if x == T::ZERO {
+                continue;
+            }
+            let wb = ci * c_out;
+            for (av, &wv) in a.iter_mut().zip(&lb.weights[wb..wb + c_out]) {
+                *av += wv * x;
+            }
+        }
+        finalize(lb, a, &mut dst[o..o + c_out]);
+        o += c_out;
+    }
+}
+
+/// Fused window→dense step, scalar path: the dense accumulators live
+/// across the whole traversal and consume each produced pixel's channels
+/// in flattening order (pixel-major, channel-minor — exactly the feature
+/// order of the unfused dense kernel).
+fn run_fused_dense<T: Cell>(
+    la: &CLayer<T>,
+    lb: &CLayer<T>,
+    src: &[T],
+    dst: &mut [T],
+    pacc: &mut Vec<T>,
+    mid: &mut Vec<T>,
+    acc: &mut Vec<T>,
+) {
+    let c_mid = la.c_out;
+    let c_out = lb.c_out;
+    pacc.resize(c_mid, T::ZERO);
+    mid.resize(c_mid, T::ZERO);
+    acc.resize(c_out, T::ZERO);
+    acc[..c_out].copy_from_slice(&lb.bias);
+    let mut feat = 0usize;
+    for win in la.tap_start.windows(2) {
+        let taps = &la.taps[win[0] as usize..win[1] as usize];
+        produce_window(la, src, taps, &mut pacc[..c_mid]);
+        emit_window(la, &pacc[..c_mid], &mut mid[..c_mid]);
+        for (ci, &x) in mid[..c_mid].iter().enumerate() {
+            if x == T::ZERO {
+                continue;
+            }
+            let wrow = &lb.weights[(feat + ci) * c_out..(feat + ci + 1) * c_out];
+            for (av, &wv) in acc[..c_out].iter_mut().zip(wrow) {
+                *av += wv * x;
+            }
+        }
+        feat += c_mid;
+    }
+    finalize(lb, &acc[..c_out], &mut dst[..c_out]);
+}
+
+/// One lane tile of a fused producer's window: the finalized pixel lands
+/// in the `mid` lane block (`c_out * LANES` cells) instead of the
+/// ping-pong buffer. Mirrors [`run_layer_tile`]'s per-window body.
+fn produce_window_tile<T: Cell>(
+    l: &CLayer<T>,
+    src: &[T],
+    taps: &[Tap],
+    bp: usize,
+    off: usize,
+    len: usize,
+    mid: &mut [T],
+) {
+    let c_out = l.c_out;
+    match l.op {
+        COp::Conv => {
+            let c_in = l.c_in;
+            for (co, &bias) in l.bias.iter().enumerate() {
+                let mut acc = [bias; LANES];
+                for t in taps {
+                    let xb = t.x as usize * bp + off;
+                    let wb = t.w as usize + co;
+                    for ci in 0..c_in {
+                        let w = l.weights[wb + ci * c_out];
+                        if w == T::ZERO {
+                            continue;
+                        }
+                        let xs = &src[xb + ci * bp..xb + ci * bp + LANES];
+                        for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                            *a += w * x;
+                        }
+                    }
+                }
+                finalize(l, &acc[..len], &mut mid[co * LANES..co * LANES + len]);
+            }
+        }
+        COp::Depthwise => {
+            for (ch, &bias) in l.bias.iter().enumerate() {
+                let mut acc = [bias; LANES];
+                for t in taps {
+                    let w = l.weights[t.w as usize + ch];
+                    if w == T::ZERO {
+                        continue;
+                    }
+                    let xb = (t.x as usize + ch) * bp + off;
+                    let xs = &src[xb..xb + LANES];
+                    for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                        *a += w * x;
+                    }
+                }
+                finalize(l, &acc[..len], &mut mid[ch * LANES..ch * LANES + len]);
+            }
+        }
+        COp::MaxPool => {
+            for ch in 0..c_out {
+                let mut acc = [T::FLOOR; LANES];
+                for t in taps {
+                    let xb = (t.x as usize + ch) * bp + off;
+                    let xs = &src[xb..xb + LANES];
+                    for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                        if x > *a {
+                            *a = x;
+                        }
+                    }
+                }
+                mid[ch * LANES..ch * LANES + len].copy_from_slice(&acc[..len]);
+            }
+        }
+        COp::Dense => debug_assert!(false, "dense is never a fused producer"),
+    }
+}
+
+/// One lane tile of a fused window→1x1-conv step.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_pw_tile<T: Cell>(
+    la: &CLayer<T>,
+    lb: &CLayer<T>,
+    src: &[T],
+    dst: &mut [T],
+    bp: usize,
+    off: usize,
+    len: usize,
+    mid: &mut [T],
+) {
+    let c_mid = la.c_out;
+    let c_out = lb.c_out;
+    let mut o = 0usize;
+    for win in la.tap_start.windows(2) {
+        let taps = &la.taps[win[0] as usize..win[1] as usize];
+        produce_window_tile(la, src, taps, bp, off, len, mid);
+        for (co, &bias) in lb.bias.iter().enumerate() {
+            let mut acc = [bias; LANES];
+            for ci in 0..c_mid {
+                let w = lb.weights[ci * c_out + co];
+                if w == T::ZERO {
+                    continue;
+                }
+                let xs = &mid[ci * LANES..ci * LANES + LANES];
+                for (a, &x) in acc[..len].iter_mut().zip(xs) {
+                    *a += w * x;
+                }
+            }
+            store_tile(lb, &acc, &mut dst[(o + co) * bp + off..], len);
+        }
+        o += c_out;
+    }
+}
+
+/// One lane tile of a fused window→dense step. `dacc` holds the dense
+/// accumulators (`c_out * LANES` cells) across the whole traversal.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_dense_tile<T: Cell>(
+    la: &CLayer<T>,
+    lb: &CLayer<T>,
+    src: &[T],
+    dst: &mut [T],
+    bp: usize,
+    off: usize,
+    len: usize,
+    mid: &mut [T],
+    dacc: &mut [T],
+) {
+    let c_mid = la.c_out;
+    let c_out = lb.c_out;
+    for (u, &bias) in lb.bias.iter().enumerate() {
+        dacc[u * LANES..(u + 1) * LANES].fill(bias);
+    }
+    let mut feat = 0usize;
+    for win in la.tap_start.windows(2) {
+        let taps = &la.taps[win[0] as usize..win[1] as usize];
+        produce_window_tile(la, src, taps, bp, off, len, mid);
+        for ci in 0..c_mid {
+            let xs = &mid[ci * LANES..ci * LANES + LANES];
+            let wrow = &lb.weights[(feat + ci) * c_out..(feat + ci + 1) * c_out];
+            for (u, &w) in wrow.iter().enumerate() {
+                if w == T::ZERO {
+                    continue;
+                }
+                let d = &mut dacc[u * LANES..u * LANES + len];
+                for (a, &x) in d.iter_mut().zip(xs) {
+                    *a += w * x;
+                }
+            }
+        }
+        feat += c_mid;
+    }
+    for u in 0..c_out {
+        finalize(
+            lb,
+            &dacc[u * LANES..u * LANES + len],
+            &mut dst[u * bp + off..u * bp + off + len],
+        );
+    }
+}
+
+/// One folded step, scalar path.
+fn run_step<T: Cell>(
+    prog: &Program<T>,
+    step: FStep,
+    src: &[T],
+    dst: &mut [T],
+    acc: &mut Vec<T>,
+    pacc: &mut Vec<T>,
+    mid: &mut Vec<T>,
+) {
+    match step {
+        FStep::Single { li, blocked } => {
+            let l = &prog.layers[li];
+            if blocked {
+                run_layer_blocked(l, &src[..l.in_len], &mut dst[..l.out_len]);
+            } else {
+                run_layer(l, &src[..l.in_len], &mut dst[..l.out_len], acc);
+            }
+        }
+        FStep::FusedPw { a, b } => {
+            let (la, lb) = (&prog.layers[a], &prog.layers[b]);
+            run_fused_pw(la, lb, &src[..la.in_len], &mut dst[..lb.out_len], pacc, mid, acc);
+        }
+        FStep::FusedDense { a, b } => {
+            let (la, lb) = (&prog.layers[a], &prog.layers[b]);
+            run_fused_dense(la, lb, &src[..la.in_len], &mut dst[..lb.out_len], pacc, mid, acc);
+        }
+    }
+}
+
+/// One folded step over the whole batch. Unfused steps reuse the batched
+/// tier's lane tiles (which are already register-blocked); fused steps
+/// run their single-traversal kernels tile by tile.
+#[allow(clippy::too_many_arguments)]
+fn run_step_batch<T: Cell>(
+    prog: &Program<T>,
+    step: FStep,
+    src: &[T],
+    dst: &mut [T],
+    b: usize,
+    bp: usize,
+    bmid: &mut Vec<T>,
+    bacc: &mut Vec<T>,
+) {
+    match step {
+        FStep::Single { li, .. } => {
+            let l = &prog.layers[li];
+            run_layer_batch(l, &src[..l.in_len * bp], &mut dst[..l.out_len * bp], b, bp);
+        }
+        FStep::FusedPw { a, b: bi } => {
+            let (la, lb) = (&prog.layers[a], &prog.layers[bi]);
+            bmid.resize(la.c_out * LANES, T::ZERO);
+            let full = b / LANES;
+            for c in 0..full {
+                run_fused_pw_tile(la, lb, src, dst, bp, c * LANES, LANES, bmid);
+            }
+            let tail = b % LANES;
+            if tail > 0 {
+                run_fused_pw_tile(la, lb, src, dst, bp, full * LANES, tail, bmid);
+            }
+        }
+        FStep::FusedDense { a, b: bi } => {
+            let (la, lb) = (&prog.layers[a], &prog.layers[bi]);
+            bmid.resize(la.c_out * LANES, T::ZERO);
+            bacc.resize(lb.c_out * LANES, T::ZERO);
+            let full = b / LANES;
+            for c in 0..full {
+                run_fused_dense_tile(la, lb, src, dst, bp, c * LANES, LANES, bmid, bacc);
+            }
+            let tail = b % LANES;
+            if tail > 0 {
+                run_fused_dense_tile(la, lb, src, dst, bp, full * LANES, tail, bmid, bacc);
+            }
+        }
+    }
+}
+
+/// A folded program plus its reusable execution scratch; the same
+/// clone-shares-program structure as [`Engine`].
+#[derive(Debug, Clone)]
+struct FoldedEngine<T> {
+    prog: Arc<Program<T>>,
+    steps: Arc<Vec<FStep>>,
+    table: Arc<Vec<KernelChoice>>,
+    ping: Vec<T>,
+    pong: Vec<T>,
+    acc: Vec<T>,
+    pacc: Vec<T>,
+    mid: Vec<T>,
+    out: Vec<i64>,
+    bping: Vec<T>,
+    bpong: Vec<T>,
+    bmid: Vec<T>,
+    bacc: Vec<T>,
+}
+
+impl<T: Cell> FoldedEngine<T> {
+    fn build(qm: &QModel, folds: &[u64]) -> Result<FoldedEngine<T>, String> {
+        let prog = lower_program::<T>(qm)?;
+        let (steps, table) = plan_folding(&prog, folds)?;
+        Ok(FoldedEngine {
+            ping: vec![T::ZERO; prog.buf_len],
+            pong: vec![T::ZERO; prog.buf_len],
+            acc: Vec::new(),
+            pacc: Vec::new(),
+            mid: Vec::new(),
+            out: Vec::new(),
+            bping: Vec::new(),
+            bpong: Vec::new(),
+            bmid: Vec::new(),
+            bacc: Vec::new(),
+            prog: Arc::new(prog),
+            steps: Arc::new(steps),
+            table: Arc::new(table),
+        })
+    }
+
+    fn execute(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        validate(&self.prog, frame)?;
+        self.execute_unchecked(frame)
+    }
+
+    fn execute_unchecked(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        let FoldedEngine {
+            prog,
+            steps,
+            ping,
+            pong,
+            acc,
+            pacc,
+            mid,
+            out,
+            ..
+        } = self;
+        for (slot, &v) in ping.iter_mut().zip(frame) {
+            *slot = T::from_i64(v);
+        }
+        let mut src_is_ping = true;
+        for &step in steps.iter() {
+            if src_is_ping {
+                run_step(prog, step, ping, pong, acc, pacc, mid);
+            } else {
+                run_step(prog, step, pong, ping, acc, pacc, mid);
+            }
+            src_is_ping = !src_is_ping;
+        }
+        let res: &[T] = if src_is_ping {
+            &ping[..prog.out_len]
+        } else {
+            &pong[..prog.out_len]
+        };
+        out.clear();
+        out.extend(res.iter().map(|v| v.to_i64()));
+        Ok(out.as_slice())
+    }
+
+    fn execute_batch(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        for (i, f) in frames.iter().enumerate() {
+            validate(&self.prog, f).map_err(|e| format!("batch frame {i}: {e}"))?;
+        }
+        self.execute_batch_prevalidated(frames)
+    }
+
+    fn execute_batch_prevalidated(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
+        if frames.len() == 1 {
+            let out = self.execute_unchecked(frames[0])?;
+            return Ok(vec![out.to_vec()]);
+        }
+        let b = frames.len();
+        let bp = b.div_ceil(LANES) * LANES;
+        let FoldedEngine {
+            prog,
+            steps,
+            bping,
+            bpong,
+            bmid,
+            bacc,
+            ..
+        } = self;
+        bping.resize(prog.buf_len * bp, T::ZERO);
+        bpong.resize(prog.buf_len * bp, T::ZERO);
+        for (lane, f) in frames.iter().enumerate() {
+            for (pos, &v) in f.iter().enumerate() {
+                bping[pos * bp + lane] = T::from_i64(v);
+            }
+        }
+        let mut src_is_ping = true;
+        for &step in steps.iter() {
+            if src_is_ping {
+                run_step_batch(prog, step, bping, bpong, b, bp, bmid, bacc);
+            } else {
+                run_step_batch(prog, step, bpong, bping, b, bp, bmid, bacc);
+            }
+            src_is_ping = !src_is_ping;
+        }
+        let res: &[T] = if src_is_ping {
+            &bping[..prog.out_len * bp]
+        } else {
+            &bpong[..prog.out_len * bp]
+        };
+        let mut outs = vec![Vec::with_capacity(prog.out_len); b];
+        for pos in 0..prog.out_len {
+            let lanes = &res[pos * bp..pos * bp + b];
+            for (out, &v) in outs.iter_mut().zip(lanes) {
+                out.push(v.to_i64());
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[derive(Debug, Clone)]
+enum FInner {
+    Narrow(FoldedEngine<i32>),
+    Wide(FoldedEngine<i64>),
+}
+
+/// The rate-aware folded value engine (DESIGN.md §9): the compiled
+/// lowering plus the folding pass that fuses consecutive low-rate layers
+/// into single-traversal steps and register-blocks what stays unfused.
+/// Bit-identical to [`CompiledPipeline`] and the interpreter on every
+/// frame; `fold_factors` come from `flow`'s Eq.-8 rate analysis.
+#[derive(Debug, Clone)]
+pub struct FoldedPipeline {
+    inner: FInner,
+}
+
+impl FoldedPipeline {
+    /// Lower a quantized model with its per-layer Eq.-8 fold factors
+    /// (`folds[i]` = layer i's output pixel period over the source pixel
+    /// period; 1 = full rate). Width selection (narrow vs wide) is the
+    /// same bound analysis as [`CompiledPipeline::lower`].
+    pub fn lower(qm: &QModel, folds: &[u64]) -> Result<FoldedPipeline, String> {
+        let inner = if narrow_safe(qm)? {
+            FInner::Narrow(FoldedEngine::build(qm, folds)?)
+        } else {
+            FInner::Wide(FoldedEngine::build(qm, folds)?)
+        };
+        Ok(FoldedPipeline { inner })
+    }
+
+    /// Run one frame; bit-identical to [`CompiledPipeline::execute`].
+    pub fn execute(&mut self, frame: &[i64]) -> Result<&[i64], String> {
+        match &mut self.inner {
+            FInner::Narrow(e) => e.execute(frame),
+            FInner::Wide(e) => e.execute(frame),
+        }
+    }
+
+    /// Run a batch; bit-identical to [`CompiledPipeline::execute_batch`].
+    pub fn execute_batch(&mut self, frames: &[&[i64]]) -> Result<Vec<Vec<i64>>, String> {
+        match &mut self.inner {
+            FInner::Narrow(e) => e.execute_batch(frames),
+            FInner::Wide(e) => e.execute_batch(frames),
+        }
+    }
+
+    /// Batched path minus per-frame screening — callers must have screened
+    /// every frame with [`FoldedPipeline::validate_frame`] already.
+    pub(crate) fn execute_batch_prevalidated(
+        &mut self,
+        frames: &[&[i64]],
+    ) -> Result<Vec<Vec<i64>>, String> {
+        match &mut self.inner {
+            FInner::Narrow(e) => e.execute_batch_prevalidated(frames),
+            FInner::Wide(e) => e.execute_batch_prevalidated(frames),
+        }
+    }
+
+    /// Same input contract as [`CompiledPipeline::validate_frame`].
+    pub fn validate_frame(&self, frame: &[i64]) -> Result<(), String> {
+        match &self.inner {
+            FInner::Narrow(e) => validate(&e.prog, frame),
+            FInner::Wide(e) => validate(&e.prog, frame),
+        }
+    }
+
+    pub fn is_narrow(&self) -> bool {
+        matches!(self.inner, FInner::Narrow(_))
+    }
+
+    pub fn input_len(&self) -> usize {
+        match &self.inner {
+            FInner::Narrow(e) => e.prog.in_len,
+            FInner::Wide(e) => e.prog.in_len,
+        }
+    }
+
+    pub fn output_len(&self) -> usize {
+        match &self.inner {
+            FInner::Narrow(e) => e.prog.out_len,
+            FInner::Wide(e) => e.prog.out_len,
+        }
+    }
+
+    /// The per-layer kernel-selection table the folding pass produced.
+    pub fn kernel_table(&self) -> &[KernelChoice] {
+        match &self.inner {
+            FInner::Narrow(e) => &e.table,
+            FInner::Wide(e) => &e.table,
+        }
+    }
+
+    /// How many fused (two-layer, single-traversal) steps the plan holds.
+    pub fn fused_steps(&self) -> usize {
+        let steps: &[FStep] = match &self.inner {
+            FInner::Narrow(e) => &e.steps,
+            FInner::Wide(e) => &e.steps,
+        };
+        steps
+            .iter()
+            .filter(|s| matches!(s, FStep::FusedPw { .. } | FStep::FusedDense { .. }))
+            .count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1173,5 +2038,197 @@ mod tests {
         big[0] = 1 << 20;
         assert!(engine.is_narrow());
         assert!(engine.validate_frame(&big).is_err());
+    }
+
+    fn kernels_of(engine: &FoldedPipeline) -> Vec<KernelSel> {
+        engine.kernel_table().iter().map(|c| c.kernel).collect()
+    }
+
+    #[test]
+    fn folded_rejects_fold_vector_length_mismatch() {
+        let qm = mixed_qmodel(30);
+        let err = FoldedPipeline::lower(&qm, &[1, 1]).unwrap_err();
+        assert!(err.contains("fold factors"), "{err}");
+    }
+
+    /// Low-rate pool → dense tail fuses into one traversal (the maxpool
+    /// maxima never touch the activation buffer), and the fused step is
+    /// bit-identical to the unfolded engine.
+    #[test]
+    fn folded_fuses_dense_head_and_matches_compiled() {
+        let qm = mixed_qmodel(31);
+        let folds = [1, 1, 4, 16, 64];
+        let mut folded = FoldedPipeline::lower(&qm, &folds).unwrap();
+        assert!(folded.is_narrow());
+        assert_eq!(folded.fused_steps(), 1);
+        assert_eq!(
+            kernels_of(&folded),
+            [
+                KernelSel::ZeroSkip,
+                KernelSel::ZeroSkip,
+                KernelSel::ZeroSkip,
+                KernelSel::FusedDense,
+                KernelSel::FusedDense,
+            ]
+        );
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let mut rng = Rng::new(32);
+        for _ in 0..10 {
+            let x = rand_frame(&mut rng, 64);
+            assert_eq!(folded.execute(&x).unwrap(), oracle.execute(&x).unwrap());
+        }
+    }
+
+    /// The folded batched tier: every batch size (full tiles, ragged
+    /// tails, the B = 1 dispatch) matches the unfolded engine per frame.
+    #[test]
+    fn folded_batch_matches_compiled_across_sizes() {
+        let qm = mixed_qmodel(33);
+        let mut folded = FoldedPipeline::lower(&qm, &[1, 1, 4, 16, 64]).unwrap();
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let mut rng = Rng::new(34);
+        for b in [1usize, 2, 3, 7, 8, 9, 15, 16, 33] {
+            let frames: Vec<Vec<i64>> = (0..b).map(|_| rand_frame(&mut rng, 64)).collect();
+            let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+            let want = oracle.execute_batch(&refs).unwrap();
+            let got = folded.execute_batch(&refs).unwrap();
+            assert_eq!(got, want, "folded batch size {b} diverged");
+        }
+    }
+
+    /// Conv → dense fusion on the i64 path (the conv producer's window
+    /// accumulation feeds the dense accumulators from registers).
+    #[test]
+    fn folded_wide_path_fuses_and_matches() {
+        let qm = wide_qmodel();
+        let mut folded = FoldedPipeline::lower(&qm, &[4, 4, 4]).unwrap();
+        assert!(!folded.is_narrow(), "m=0 chain must force the i64 path");
+        assert_eq!(folded.fused_steps(), 1);
+        assert_eq!(
+            kernels_of(&folded),
+            [
+                KernelSel::ZeroSkip,
+                KernelSel::FusedDense,
+                KernelSel::FusedDense,
+            ]
+        );
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let mut rng = Rng::new(35);
+        let frames: Vec<Vec<i64>> = (0..9).map(|_| rand_frame(&mut rng, 32)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(
+            folded.execute_batch(&refs).unwrap(),
+            oracle.execute_batch(&refs).unwrap()
+        );
+        assert_eq!(
+            folded.execute(&frames[0]).unwrap(),
+            oracle.execute(&frames[0]).unwrap()
+        );
+    }
+
+    /// Unfused low-rate MAC layers with >= CHUNK output channels route to
+    /// the register-blocked kernel (conv and dense here), bit-identically.
+    #[test]
+    fn folded_blocked_kernels_selected_and_bit_identical() {
+        let qm = QModel::synthetic(12, 8, 10, 0x51);
+        let mut folded = FoldedPipeline::lower(&qm, &[2, 1, 4]).unwrap();
+        assert_eq!(folded.fused_steps(), 0);
+        assert_eq!(
+            kernels_of(&folded),
+            [KernelSel::Blocked, KernelSel::ZeroSkip, KernelSel::Blocked]
+        );
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let mut rng = Rng::new(0x52);
+        let frames: Vec<Vec<i64>> = (0..9).map(|_| rand_frame(&mut rng, 144)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(
+            folded.execute_batch(&refs).unwrap(),
+            oracle.execute_batch(&refs).unwrap()
+        );
+        for f in &frames {
+            assert_eq!(folded.execute(f).unwrap(), oracle.execute(f).unwrap());
+        }
+    }
+
+    /// The full rate-aware path on the MobileNet-style zoo config: the
+    /// Eq.-8 analysis folds the post-stride tail, so dw2+pw2 and dw3+pw3
+    /// fuse pairwise and the pool feeds the dense head from registers.
+    #[test]
+    fn mobilenet_rate_folding_shape_and_equivalence() {
+        let model = crate::model::zoo::mobilenet_micro();
+        let qm = QModel::synthesize(&model, 0x777).unwrap();
+        let sim = PipelineSim::new(qm.clone(), None).unwrap();
+        assert_eq!(sim.folded.fused_steps(), 3);
+        let table = sim.folded.kernel_table();
+        let got: Vec<(&str, KernelSel)> = table
+            .iter()
+            .map(|c| (c.layer.as_str(), c.kernel))
+            .collect();
+        assert_eq!(
+            got,
+            [
+                ("c1", KernelSel::ZeroSkip),
+                ("dw1", KernelSel::ZeroSkip),
+                ("pw1", KernelSel::ZeroSkip),
+                ("dw2", KernelSel::FusedPw),
+                ("pw2", KernelSel::FusedPw),
+                ("dw3", KernelSel::FusedPw),
+                ("pw3", KernelSel::FusedPw),
+                ("ap", KernelSel::FusedDense),
+                ("fc", KernelSel::FusedDense),
+            ]
+        );
+        // Fold factors in the table are the raw Eq.-8 periods relative to
+        // the source: monotone non-decreasing down the stride-2 tail.
+        assert!(table.windows(2).all(|w| w[0].fold <= w[1].fold));
+        assert_eq!(table[0].fold, 1);
+        assert!(table.last().unwrap().fold > table[3].fold);
+        let mut folded = sim.folded.clone();
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let len: usize = qm.input_shape.iter().product();
+        let mut rng = Rng::new(0x778);
+        let frames: Vec<Vec<i64>> = (0..11).map(|_| rand_frame(&mut rng, len)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(
+            folded.execute_batch(&refs).unwrap(),
+            oracle.execute_batch(&refs).unwrap()
+        );
+        for f in &frames {
+            assert_eq!(folded.execute(f).unwrap(), oracle.execute(f).unwrap());
+        }
+    }
+
+    /// A depthwise layer left unfused by a full-rate pointwise successor
+    /// still register-blocks when its own rate is low.
+    #[test]
+    fn folded_blocked_depthwise_bit_identical() {
+        let model = crate::model::zoo::mobilenet_micro();
+        let qm = QModel::synthesize(&model, 0x779).unwrap();
+        let folds = [1, 4, 1, 1, 1, 1, 1, 1, 1];
+        let mut folded = FoldedPipeline::lower(&qm, &folds).unwrap();
+        assert_eq!(folded.fused_steps(), 0);
+        assert_eq!(folded.kernel_table()[1].kernel, KernelSel::Blocked);
+        let mut oracle = CompiledPipeline::lower(&qm).unwrap();
+        let len: usize = qm.input_shape.iter().product();
+        let mut rng = Rng::new(0x77A);
+        let frames: Vec<Vec<i64>> = (0..5).map(|_| rand_frame(&mut rng, len)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        assert_eq!(
+            folded.execute_batch(&refs).unwrap(),
+            oracle.execute_batch(&refs).unwrap()
+        );
+    }
+
+    #[test]
+    fn folded_clones_are_independent() {
+        let qm = mixed_qmodel(36);
+        let mut a = FoldedPipeline::lower(&qm, &[1, 1, 4, 16, 64]).unwrap();
+        let mut b = a.clone();
+        let mut rng = Rng::new(37);
+        let x = rand_frame(&mut rng, 64);
+        let y = rand_frame(&mut rng, 64);
+        let ax = a.execute(&x).unwrap().to_vec();
+        let _ = b.execute(&y).unwrap();
+        assert_eq!(a.execute(&x).unwrap(), &ax[..], "scratch must not leak");
     }
 }

@@ -23,7 +23,7 @@ pub mod pipeline;
 pub mod ppu;
 pub mod trace;
 
-pub use compiled::CompiledPipeline;
+pub use compiled::{CompiledPipeline, FoldedPipeline, KernelChoice, KernelSel};
 pub use fcu::{Aggregator, Fcu};
 pub use kpu::Kpu;
 pub use ppu::Ppu;

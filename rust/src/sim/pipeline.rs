@@ -24,9 +24,11 @@
 //! [`PipelineSim::run_interpreted`] keeps the original fused loop as the
 //! oracle both tiers are property-tested against (`tests/prop_compiled.rs`).
 
-use super::compiled::CompiledPipeline;
+use super::compiled::{CompiledPipeline, FoldedPipeline};
 use crate::flow::schedule::{steady_cycles_per_frame, ScheduleModel, SchedulePrediction};
-use crate::flow::{analyze, plan_all, PlannedLayer, Ratio, UnitPlan};
+use crate::flow::{
+    analyze, fold_factor, fold_plan, pixel_period, plan_all, PlannedLayer, Ratio, UnitPlan,
+};
 use crate::model::{Layer, Model};
 use crate::quant::{requant, QKind, QLayer, QModel};
 
@@ -104,6 +106,14 @@ pub struct PipelineSim {
     pub schedule: ScheduleModel,
     /// Closed-form schedule figures for the serving hot path.
     pub predicted: SchedulePrediction,
+    /// Rate-aware folded value engine (DESIGN.md §9) — bit-identical to
+    /// `compiled`, but consecutive low-rate layers run fused and unfused
+    /// low-rate MAC layers run register-blocked.
+    pub folded: FoldedPipeline,
+    /// Plan-relative Eq.-8 fold factors (`flow::fold_plan`): the rate
+    /// slack the planner's interleaving left unabsorbed, per layer. Feeds
+    /// `SchedulePrediction::folded` for certified folded cycle figures.
+    pub fold_factors: Vec<u64>,
 }
 
 impl PipelineSim {
@@ -132,8 +142,31 @@ impl PipelineSim {
         fully_parallel: bool,
     ) -> Result<Self, String> {
         let compiled = CompiledPipeline::lower(&qmodel)?;
+        // Raw Eq.-8 fold factors: each layer's output pixel period over
+        // the source pixel period — what the folded engine keys fusion and
+        // kernel selection on (the planner's interleaving is irrelevant to
+        // the software lowering, so it is *not* divided out here).
+        let rate_folds: Vec<u64> = match plans.first() {
+            Some(first) if !first.rated.r_in.is_zero() => {
+                let src = pixel_period(first.rated.d_in(), first.rated.r_in);
+                plans
+                    .iter()
+                    .map(|p| {
+                        if p.rated.r_out.is_zero() {
+                            1
+                        } else {
+                            fold_factor(pixel_period(p.rated.d_out(), p.rated.r_out), src)
+                        }
+                    })
+                    .collect()
+            }
+            _ => vec![1; plans.len()],
+        };
+        let folded = FoldedPipeline::lower(&qmodel, &rate_folds)?;
+        let fold_factors = fold_plan(&plans);
         let [h0, w0, c0] = qmodel.input_shape;
-        let schedule = ScheduleModel::new(&plans, (h0.max(1), w0.max(1)), c0)?;
+        let schedule = ScheduleModel::new(&plans, (h0.max(1), w0.max(1)), c0)
+            .map_err(|e| e.to_string())?;
         let predicted = SchedulePrediction::new(&schedule);
         Ok(Self {
             qmodel,
@@ -142,6 +175,8 @@ impl PipelineSim {
             compiled,
             schedule,
             predicted,
+            folded,
+            fold_factors,
         })
     }
 

@@ -110,6 +110,9 @@ pub struct EngineComparison {
     pub compiled_median_ns: f64,
     /// One `execute_batch` traversal over the same frames.
     pub batched_median_ns: f64,
+    /// One batched traversal through the rate-aware folded engine
+    /// (fused low-rate pairs + register-blocked kernels, DESIGN.md §9).
+    pub folded_median_ns: f64,
     /// Whether the lowering proved 32-bit lanes safe.
     pub narrow: bool,
 }
@@ -127,6 +130,10 @@ impl EngineComparison {
         self.frames as f64 / (self.batched_median_ns * 1e-9)
     }
 
+    pub fn folded_fps(&self) -> f64 {
+        self.frames as f64 / (self.folded_median_ns * 1e-9)
+    }
+
     pub fn speedup(&self) -> f64 {
         self.interp_median_ns / self.compiled_median_ns
     }
@@ -135,12 +142,19 @@ impl EngineComparison {
     pub fn batch_speedup(&self) -> f64 {
         self.compiled_median_ns / self.batched_median_ns
     }
+
+    /// Folded engine vs the unfolded batched tier on the same frames —
+    /// the rate-aware folding pass's measured win.
+    pub fn fold_speedup(&self) -> f64 {
+        self.batched_median_ns / self.folded_median_ns
+    }
 }
 
-/// Measure one lowered model three ways — the fused interpreter, the
-/// compiled engine executing frame-at-a-time, and the compiled engine's
+/// Measure one lowered model four ways — the fused interpreter, the
+/// compiled engine executing frame-at-a-time, the compiled engine's
 /// batched tier traversing the program once for the whole group
-/// (iteration = one pass over `frames`) — after asserting all paths agree
+/// (iteration = one pass over `frames`), and the rate-aware folded
+/// engine over the same batch — after asserting all paths agree
 /// bit- and cycle-exactly. Shared by `benches/bench_pipeline.rs` and the
 /// `cnn-flow bench` CLI so BENCH_pipeline.json numbers stay comparable.
 pub fn compare_engines(
@@ -160,6 +174,17 @@ pub fn compare_engines(
     let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
     let batched = engine.execute_batch(&refs).expect("batched run failed");
     assert_eq!(batched, oracle.outputs, "{name}: batched value divergence");
+    let mut folded = sim.folded.clone();
+    let folded_out = folded.execute_batch(&refs).expect("folded run failed");
+    assert_eq!(folded_out, oracle.outputs, "{name}: folded value divergence");
+    let fp = sim.predicted.folded(frames.len(), &sim.fold_factors);
+    if fp.exact {
+        let replay = sim.schedule.run_folded(frames.len(), &sim.fold_factors);
+        assert_eq!(
+            fp.total_cycles, replay.total_cycles,
+            "{name}: folded cycle prediction diverged from exact replay"
+        );
+    }
     let interp_median_ns = b.bench_throughput(
         &format!("{name}_interpreter/{}_frames", frames.len()),
         frames.len() as u64,
@@ -185,19 +210,33 @@ pub fn compare_engines(
             black_box(sim.predicted.batched(frames.len()).total_cycles);
         },
     );
+    let folded_median_ns = b.bench_throughput(
+        &format!("{name}_folded/{}_frames", frames.len()),
+        frames.len() as u64,
+        || {
+            black_box(folded.execute_batch(&refs).unwrap());
+            black_box(
+                sim.predicted
+                    .folded(frames.len(), &sim.fold_factors)
+                    .total_cycles,
+            );
+        },
+    );
     EngineComparison {
         model: name,
         frames: frames.len(),
         interp_median_ns,
         compiled_median_ns,
         batched_median_ns,
+        folded_median_ns,
         narrow: sim.compiled.is_narrow(),
     }
 }
 
 /// Write the machine-readable benchmark report. Layout:
 /// `{"bench":"pipeline","models":[{model, frames, interp_fps,
-/// compiled_fps, batched_fps, speedup, batch_speedup, narrow}, ...]}`.
+/// compiled_fps, batched_fps, folded_fps, speedup, batch_speedup,
+/// fold_speedup, narrow}, ...]}`.
 pub fn write_pipeline_bench_json(
     path: &std::path::Path,
     comparisons: &[EngineComparison],
@@ -212,8 +251,10 @@ pub fn write_pipeline_bench_json(
                 ("interp_fps", Json::from(c.interp_fps())),
                 ("compiled_fps", Json::from(c.compiled_fps())),
                 ("batched_fps", Json::from(c.batched_fps())),
+                ("folded_fps", Json::from(c.folded_fps())),
                 ("speedup", Json::from(c.speedup())),
                 ("batch_speedup", Json::from(c.batch_speedup())),
+                ("fold_speedup", Json::from(c.fold_speedup())),
                 ("narrow", Json::Bool(c.narrow)),
             ])
         })
@@ -325,12 +366,15 @@ mod tests {
             interp_median_ns: 8.0e6,
             compiled_median_ns: 1.0e6,
             batched_median_ns: 0.5e6,
+            folded_median_ns: 0.25e6,
             narrow: true,
         };
         assert!((c.speedup() - 8.0).abs() < 1e-9);
         assert!((c.compiled_fps() - 16.0e6).abs() < 1.0);
         assert!((c.batched_fps() - 32.0e6).abs() < 1.0);
+        assert!((c.folded_fps() - 64.0e6).abs() < 1.0);
         assert!((c.batch_speedup() - 2.0).abs() < 1e-9);
+        assert!((c.fold_speedup() - 2.0).abs() < 1e-9);
         let path = std::env::temp_dir().join("cnn_flow_bench_pipeline_test.json");
         write_pipeline_bench_json(&path, &[c]).unwrap();
         let parsed =
@@ -340,6 +384,7 @@ mod tests {
         assert_eq!(row.get("model").as_str(), Some("synthetic"));
         assert!((row.get("speedup").as_f64().unwrap() - 8.0).abs() < 1e-9);
         assert!((row.get("batch_speedup").as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((row.get("fold_speedup").as_f64().unwrap() - 2.0).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -352,6 +397,7 @@ mod tests {
             interp_median_ns: 8.0e6,
             compiled_median_ns: 1.0e6,
             batched_median_ns: 0.5e6,
+            folded_median_ns: 0.25e6,
             narrow: true,
         };
         write_pipeline_bench_json(&path, &[engines]).unwrap();

@@ -207,7 +207,8 @@ fn backpressure_surfaces_as_queue_full_and_reconciles() {
                 model: coord.models()[0].clone(),
                 frame: frame.clone(),
             }
-            .encode(),
+            .encode()
+            .unwrap(),
         );
     }
     stream.write_all(&wire).unwrap();
@@ -327,7 +328,9 @@ fn tcp_drain_completes_in_flight_partial_batches_per_model() {
 fn wire_protocol_roundtrips_for_random_valid_frames() {
     prop_check(192, 0x9120E, |rng| {
         let msg = random_msg(rng);
-        let bytes = msg.encode();
+        let bytes = msg
+            .encode()
+            .map_err(|e| format!("encode of valid {msg:?} refused: {e}"))?;
         let mut cursor = &bytes[..];
         let decoded = proto::read_frame(&mut cursor)
             .map_err(|e| format!("decode of encoded {msg:?} failed: {e}"))?
@@ -512,7 +515,8 @@ fn pipelined_requests_on_one_socket_answer_in_order() {
                 model: model.clone(),
                 frame: frame.clone(),
             }
-            .encode(),
+            .encode()
+            .unwrap(),
         );
     }
     stream.write_all(&wire).unwrap();

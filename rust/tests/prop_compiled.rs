@@ -236,6 +236,97 @@ fn batch_prediction_divergence_is_zero_at_any_size() {
 }
 
 #[test]
+fn folded_engine_bit_identical_across_every_tier_on_random_chains() {
+    // The folded tier's contract (DESIGN.md §9): for random models mixing
+    // conv/dwconv/pool/dense, the rate-aware folded engine — fused
+    // low-rate pairs, register-blocked kernels — is bit-identical to the
+    // unfolded compiled engine, the batched tier, and the interpreter,
+    // frame for frame, at every batch size.
+    prop_check(30, 0xF01D, |rng| {
+        let qm = random_qmodel(rng);
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        let mut engine = CompiledPipeline::lower(&qm)?;
+        let mut folded = sim.folded.clone();
+        for b in [1usize, 3, 8, 13] {
+            let frames = rand_frames(rng, b, len);
+            let oracle = sim.run_interpreted(&frames)?;
+            for (f, want) in frames.iter().zip(&oracle.outputs) {
+                let got = folded.execute(f)?.to_vec();
+                prop_assert_eq!(&got, want, "folded execute diverged (B={b})");
+            }
+            let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+            let got = folded.execute_batch(&refs)?;
+            prop_assert_eq!(
+                &got,
+                &oracle.outputs,
+                "folded batch B={b} diverged from the interpreter"
+            );
+            prop_assert_eq!(
+                got,
+                engine.execute_batch(&refs)?,
+                "folded batch B={b} diverged from the unfolded batched tier"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn folded_prediction_divergence_is_zero_at_any_size() {
+    // The FoldedPrediction certificate: the closed-form folded cycle
+    // figures must equal the exact schedule replay accounted against the
+    // same folded unit counts, at every batch size — folding
+    // time-multiplexes units, it never moves a completion cycle.
+    prop_check(20, 0xF01E, |rng| {
+        let qm = random_qmodel(rng);
+        let sim = PipelineSim::new(qm, None)?;
+        let folds = &sim.fold_factors;
+        prop_assert_eq!(
+            folds.len(),
+            sim.qmodel.layers.len(),
+            "one fold factor per layer"
+        );
+        prop_assert!(
+            folds.iter().all(|&f| f >= 1),
+            "fold factors are at least 1"
+        );
+        for b in [1usize, 2, 5, 9, 33] {
+            let fp = sim.predicted.folded(b, folds);
+            let replay = sim.schedule.run_folded(b, folds);
+            prop_assert!(fp.exact, "full-rate model must certify folded figures (B={b})");
+            prop_assert_eq!(
+                fp.total_cycles,
+                replay.total_cycles,
+                "folded total_cycles diverged (B={b})"
+            );
+            prop_assert_eq!(
+                fp.steady_cycles_per_frame,
+                replay.steady_cycles_per_frame,
+                "folded cycles/frame diverged (B={b})"
+            );
+            prop_assert_eq!(
+                fp.first_frame_latency,
+                replay.first_frame_latency,
+                "folded frame-0 latency diverged (B={b})"
+            );
+            prop_assert_eq!(
+                &fp.folded_units,
+                &replay.folded_units,
+                "folded unit counts diverged (B={b})"
+            );
+            for (u, r) in fp.utilization.iter().zip(&replay.utilization) {
+                prop_assert!(
+                    (u - r).abs() < 1e-12,
+                    "folded utilisation diverged (B={b})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn serving_zoo_configs_bit_identical_across_every_tier() {
     // The multi-model serving contract (DESIGN.md §7): every serving-zoo
     // config — MobileNet-like depthwise stack, VGG-style net, digits CNN,
@@ -270,6 +361,30 @@ fn serving_zoo_configs_bit_identical_across_every_tier() {
             "{}: execute_batch diverged from the interpreter",
             model.name
         );
+        // Tier 2b: the rate-aware folded engine, and its certificate —
+        // the closed-form folded figures must equal the exact replay.
+        let mut folded = sim.folded.clone();
+        assert_eq!(
+            folded.execute_batch(&refs).unwrap(),
+            oracle.outputs,
+            "{}: folded execute_batch diverged from the interpreter",
+            model.name
+        );
+        for n in [1usize, frames.len(), 40] {
+            let fp = sim.predicted.folded(n, &sim.fold_factors);
+            let replay = sim.schedule.run_folded(n, &sim.fold_factors);
+            assert!(fp.exact, "{}: folded figures not certified", model.name);
+            assert_eq!(
+                fp.total_cycles, replay.total_cycles,
+                "{}: folded total_cycles diverged at n={n}",
+                model.name
+            );
+            assert_eq!(
+                fp.first_frame_latency, replay.first_frame_latency,
+                "{}: folded frame-0 latency diverged at n={n}",
+                model.name
+            );
+        }
         // Tier 3: the analytic schedule. The exact replay must reproduce
         // the interpreter's cycles, and the closed-form prediction must
         // reproduce the replay at every count (these full-rate plans
