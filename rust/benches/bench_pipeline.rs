@@ -14,7 +14,13 @@
 //!   (`FoldedPipeline`, DESIGN.md §9) on the MobileNet-style zoo config,
 //!   where the Eq.-8 rate analysis fuses the low-rate tail — folded must
 //!   not regress (>= 0.9x, a noise floor; the win itself is tracked in
-//!   `BENCH_pipeline.json` as `fold_speedup`).
+//!   `BENCH_pipeline.json` as `fold_speedup`);
+//! * (unix) the threaded vs evented network cores under fan-in — a
+//!   connections-vs-throughput ladder plus a closed-loop RTT probe at
+//!   each rung, merged into `BENCH_pipeline.json` under `"fanin"`. At
+//!   the 1024-connection rung the evented reactor must not lose to
+//!   thread-per-connection (`CNN_FLOW_BENCH_FANIN=0` skips the ladder,
+//!   e.g. on fd-limited machines).
 //!
 //! The original artifact benches (continuous-flow vs fully-parallel
 //! plans, JSC across rates) still run when `make artifacts` has.
@@ -142,4 +148,43 @@ fn main() {
          {batch_speedup:.1}x single-frame, folded tier {fold_speedup:.2}x \
          batched on mobilenet_micro; BENCH_pipeline.json written"
     );
+
+    // --- network fan-in: threaded vs evented core ------------------------
+    #[cfg(unix)]
+    {
+        let skip = std::env::var("CNN_FLOW_BENCH_FANIN").is_ok_and(|v| v == "0");
+        if skip {
+            println!("CNN_FLOW_BENCH_FANIN=0: skipping the network fan-in ladder");
+        } else {
+            let rungs = [64usize, 256, 1024];
+            let rows = cnn_flow::net::fanin::ladder(&rungs, 16).expect("fan-in ladder");
+            for r in &rows {
+                println!(
+                    "BENCH pipeline/fanin/{}_conns threaded={:.0} req/s evented={:.0} req/s \
+                     ratio={:.2}x threaded_p99={:.0}us evented_p99={:.0}us",
+                    r.connections,
+                    r.threaded_rps,
+                    r.evented_rps,
+                    r.rps_ratio(),
+                    r.threaded_rtt_p99_us,
+                    r.evented_rtt_p99_us,
+                );
+            }
+            bench::merge_fanin_bench_json(std::path::Path::new("BENCH_pipeline.json"), &rows)
+                .expect("merge fanin into BENCH_pipeline.json");
+            let top = rows.last().expect("ladder has rungs");
+            assert!(
+                top.rps_ratio() >= 1.0,
+                "the evented core must not lose to thread-per-connection at \
+                 {} connections (got {:.2}x)",
+                top.connections,
+                top.rps_ratio()
+            );
+            println!(
+                "OK: evented core {:.2}x threaded at {} connections; fanin rows merged",
+                top.rps_ratio(),
+                top.connections
+            );
+        }
+    }
 }

@@ -450,6 +450,68 @@ impl NetMetricsSnapshot {
     }
 }
 
+/// Readiness-loop counters for the evented network core (DESIGN.md
+/// §10). Kept **separate** from [`NetMetrics`] on purpose: every core
+/// (threaded or evented) owns its own `NetMetrics`, and the
+/// cross-core differential tests compare those snapshots for exact
+/// equality — reactor-only counters would never reconcile against a
+/// thread-per-connection oracle, so they live here instead.
+#[derive(Debug, Default)]
+pub struct ReactorStats {
+    /// Times the poller returned with at least one event.
+    pub polls: AtomicU64,
+    /// Readiness events dispatched (listener + waker + connections).
+    pub events: AtomicU64,
+    /// Waker fires observed (shutdown signals + completion batches).
+    pub wakeups: AtomicU64,
+    /// Replies settled through the completion queue (worker notify →
+    /// waker → `Pending::try_wait`), as opposed to settled inline.
+    pub completions: AtomicU64,
+    /// Times a connection's read interest was paused because its reply
+    /// queue hit the configured depth (per-connection backpressure).
+    pub read_pauses: AtomicU64,
+    /// Connections torn down by the write-stall timeout (non-reading
+    /// clients with a full write buffer).
+    pub stall_teardowns: AtomicU64,
+}
+
+impl ReactorStats {
+    pub fn snapshot(&self) -> ReactorStatsSnapshot {
+        ReactorStatsSnapshot {
+            polls: self.polls.load(Ordering::Relaxed),
+            events: self.events.load(Ordering::Relaxed),
+            wakeups: self.wakeups.load(Ordering::Relaxed),
+            completions: self.completions.load(Ordering::Relaxed),
+            read_pauses: self.read_pauses.load(Ordering::Relaxed),
+            stall_teardowns: self.stall_teardowns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`ReactorStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReactorStatsSnapshot {
+    pub polls: u64,
+    pub events: u64,
+    pub wakeups: u64,
+    pub completions: u64,
+    pub read_pauses: u64,
+    pub stall_teardowns: u64,
+}
+
+impl ReactorStatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("polls", Json::from(self.polls as f64)),
+            ("events", Json::from(self.events as f64)),
+            ("wakeups", Json::from(self.wakeups as f64)),
+            ("completions", Json::from(self.completions as f64)),
+            ("read_pauses", Json::from(self.read_pauses as f64)),
+            ("stall_teardowns", Json::from(self.stall_teardowns as f64)),
+        ])
+    }
+}
+
 /// The full machine-readable metrics report `serve --metrics-json`
 /// writes on shutdown: the aggregate snapshot, the per-model views, and
 /// (when the TCP front-end ran) the net-layer counters.

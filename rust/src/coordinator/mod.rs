@@ -75,7 +75,7 @@ use crate::sim::pipeline::PipelineSim;
 
 pub use metrics::{
     metrics_report_json, Metrics, MetricsSnapshot, ModelMetricsSnapshot, NetMetrics,
-    NetMetricsSnapshot, ShardSnapshot,
+    NetMetricsSnapshot, ReactorStats, ReactorStatsSnapshot, ShardSnapshot,
 };
 use metrics::{IntakeMetrics, ShardMetrics};
 
@@ -235,10 +235,32 @@ pub struct InferResponse {
     pub service_time: Duration,
 }
 
+/// Completion hook for nonblocking front-ends: invoked by the worker
+/// after a request's reply has been sent (success or per-request error),
+/// so an event loop can [`Pending::try_wait`] exactly when an answer is
+/// ready instead of polling. Implementations must be cheap and
+/// non-blocking — they run on the shard worker's hot path.
+pub trait CompletionNotify: Send + Sync {
+    fn notify(&self);
+}
+
 struct Request {
     x_q: Vec<i64>,
     enqueued: Instant,
     reply: SyncSender<Result<InferResponse, String>>,
+    /// See [`CompletionNotify`]; `None` for blocking callers.
+    notify: Option<Arc<dyn CompletionNotify>>,
+}
+
+impl Request {
+    /// Send the reply, then fire the completion hook. The order matters:
+    /// the notify must observe a `try_wait`-able channel.
+    fn answer(self, result: Result<InferResponse, String>) {
+        let _ = self.reply.send(result);
+        if let Some(n) = &self.notify {
+            n.notify();
+        }
+    }
 }
 
 enum Job {
@@ -257,6 +279,22 @@ impl Pending {
         self.rx
             .recv()
             .map_err(|_| "server dropped request".to_string())?
+    }
+
+    /// Nonblocking probe: `Some` once the answer has arrived (after
+    /// which the `Pending` is spent and must be discarded), `None` while
+    /// it is still in flight. A worker that died without answering
+    /// yields the same "server dropped request" error as [`wait`]
+    /// (Pending::wait). This is the evented core's settle primitive,
+    /// paired with [`CompletionNotify`].
+    pub fn try_wait(&mut self) -> Option<Result<InferResponse, String>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err("server dropped request".to_string()))
+            }
+        }
     }
 }
 
@@ -423,12 +461,18 @@ impl Server {
     /// backpressure-aware spill across that group's shards; `Err` only
     /// when every queue in the group is full (counted as rejected) or the
     /// server has stopped.
-    fn submit_group(&self, group: &Group, x_q: Vec<i64>) -> Result<Pending, String> {
+    fn submit_group(
+        &self,
+        group: &Group,
+        x_q: Vec<i64>,
+        notify: Option<Arc<dyn CompletionNotify>>,
+    ) -> Result<Pending, String> {
         let (rtx, rrx) = sync_channel(1);
         let mut job = Job::Infer(Request {
             x_q,
             enqueued: Instant::now(),
             reply: rtx,
+            notify,
         });
         let n = group.shards.len();
         let preferred = group.rr.fetch_add(1, Ordering::Relaxed) % n;
@@ -463,18 +507,33 @@ impl Server {
         if !self.open.load(Ordering::Acquire) {
             return Err("server stopped".into());
         }
-        self.submit_group(&self.groups[0], x_q)
+        self.submit_group(&self.groups[0], x_q, None)
     }
 
     /// Enqueue a tagged request for `model`'s shard group. Unknown model
     /// ids are refused (and counted as `unrouted` in the snapshot);
     /// requests never spill across models.
     pub fn submit_to(&self, model: &str, x_q: Vec<i64>) -> Result<Pending, String> {
+        self.submit_to_notified(model, x_q, None)
+    }
+
+    /// [`submit_to`](Server::submit_to) with a completion hook: `notify`
+    /// fires on the worker after the answer becomes
+    /// [`Pending::try_wait`]-able. This is how the evented TCP core
+    /// learns a reply is ready without parking a thread per request —
+    /// rejections at submit time return `Err` synchronously and never
+    /// fire the hook.
+    pub fn submit_to_notified(
+        &self,
+        model: &str,
+        x_q: Vec<i64>,
+        notify: Option<Arc<dyn CompletionNotify>>,
+    ) -> Result<Pending, String> {
         if !self.open.load(Ordering::Acquire) {
             return Err("server stopped".into());
         }
         match self.groups.iter().find(|g| g.model == model) {
-            Some(group) => self.submit_group(group, x_q),
+            Some(group) => self.submit_group(group, x_q, notify),
             None => {
                 self.metrics.unrouted.fetch_add(1, Ordering::Relaxed);
                 Err(format!("no route for model '{model}'"))
@@ -974,7 +1033,7 @@ fn run_group(
             Ok(logits) => logits,
             Err(e) => {
                 shard.errored.fetch_add(1, Ordering::Relaxed);
-                let _ = req.reply.send(Err(e));
+                req.answer(Err(e));
                 continue;
             }
         };
@@ -1005,7 +1064,7 @@ fn run_group(
             // is busy (never blocks serving).
             let _ = vtx.try_send((req.x_q.clone(), logits));
         }
-        let _ = req.reply.send(Ok(resp));
+        req.answer(Ok(resp));
     }
 }
 

@@ -27,7 +27,7 @@ use cnn_flow::coordinator::{
 };
 use cnn_flow::flow::{analyze, plan_all, Ratio};
 use cnn_flow::model::{config::model_from_json, zoo, Model};
-use cnn_flow::net::{Client, NetServer};
+use cnn_flow::net::{Client, FrontEnd, NetCore};
 use cnn_flow::quant::QModel;
 use cnn_flow::report;
 use cnn_flow::sim::pipeline::PipelineSim;
@@ -112,10 +112,12 @@ fn usage() {
          cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
                     except --verify-every; --workers = shards per model)\n  \
          cnn-flow serve    --listen <host:port> [--model M|--models A,B|--synthetic]\n  \
-                    (TCP front-end; EOF on stdin drains and exits)\n  \
+                    [--net-core threaded|evented] (TCP front-end; EOF on stdin\n  \
+                    drains and exits)\n  \
          cnn-flow client   --connect <host:port> [--model M] [--requests N] [--pool N]\n  \
                     [--seed S]\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
+                    [--fanin MAXCONNS] (0 skips the network fan-in ladder)\n  \
          cnn-flow list"
     );
 }
@@ -357,6 +359,18 @@ fn engine_flag(opts: &HashMap<String, String>) -> Result<EngineKind, String> {
         Some(s) => EngineKind::parse(s).ok_or_else(|| {
             format!("unknown engine '{s}' (expected compiled | folded | interp | interpreter)")
         }),
+    }
+}
+
+/// Resolve `--net-core` (threaded | evented) with the same fail-loudly
+/// contract as [`engine_flag`]; the default honours `$CNN_FLOW_NET`
+/// (see [`NetCore::from_env`]) so CI matrix legs can force the evented
+/// core through every serve invocation.
+fn net_core_flag(opts: &HashMap<String, String>) -> Result<NetCore, String> {
+    match opts.get("net-core") {
+        None => Ok(NetCore::default_from_env()),
+        Some(s) => NetCore::parse(s)
+            .ok_or_else(|| format!("unknown net core '{s}' (expected threaded | evented)")),
     }
 }
 
@@ -626,7 +640,14 @@ fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
         }
     };
 
-    let mut net = match NetServer::bind(addr, std::sync::Arc::clone(&server)) {
+    let core = match net_core_flag(opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut net = match FrontEnd::bind(core, addr, std::sync::Arc::clone(&server)) {
         Ok(n) => n,
         Err(e) => {
             eprintln!("{e}");
@@ -639,7 +660,7 @@ fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
         .iter()
         .map(|(id, len)| format!("{id} ({len} inputs)"))
         .collect();
-    println!("listening on {bound} — routing {}", routed.join(", "));
+    println!("listening on {bound} ({core} core) — routing {}", routed.join(", "));
     println!("serving until stdin reaches EOF (try `cnn-flow client --connect {bound}`)");
 
     // Block until the controlling stdin closes, then drain.
@@ -649,6 +670,13 @@ fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
 
     let net_snap = net.shutdown(); // drains the coordinator too
     let m = server.metrics();
+    if let Some(r) = net.reactor_stats() {
+        println!(
+            "reactor: {} polls, {} events, {} wakeups, {} completions, {} read-pauses, \
+             {} stall-teardowns",
+            r.polls, r.events, r.wakeups, r.completions, r.read_pauses, r.stall_teardowns
+        );
+    }
     println!(
         "net: {} connection(s), {} request(s), {} ok, {} queue-full, {} invalid-frame, \
          {} unknown-model, {} draining, {} malformed",
@@ -1035,14 +1063,56 @@ fn cmd_bench(opts: &HashMap<String, String>) -> i32 {
         );
         comparisons.push(cmp);
     }
-    match bench::write_pipeline_bench_json(std::path::Path::new(&out_path), &comparisons) {
-        Ok(()) => {
-            println!("wrote {out_path}");
-            0
-        }
-        Err(e) => {
-            eprintln!("{e}");
-            1
+    if let Err(e) = bench::write_pipeline_bench_json(std::path::Path::new(&out_path), &comparisons)
+    {
+        eprintln!("{e}");
+        return 1;
+    }
+    println!("wrote {out_path}");
+    let fanin_max: usize = opts
+        .get("fanin")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024);
+    if fanin_max > 0 {
+        match bench_fanin(fanin_max) {
+            Ok(rows) if rows.is_empty() => {}
+            Ok(rows) => {
+                if let Err(e) =
+                    bench::merge_fanin_bench_json(std::path::Path::new(&out_path), &rows)
+                {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                println!("merged fan-in ladder into {out_path}");
+            }
+            Err(e) => {
+                eprintln!("fan-in bench: {e}");
+                return 1;
+            }
         }
     }
+    0
+}
+
+/// Connections-vs-throughput and RTT-under-fan-in: drive the same
+/// fan-in load at both network cores over a fresh coordinator per rung,
+/// so the per-rung metrics are isolated. The ladder tops out at
+/// `fanin_max` concurrent connections (`--fanin 0` skips it entirely —
+/// e.g. on fd-limited machines).
+#[cfg(unix)]
+fn bench_fanin(fanin_max: usize) -> Result<Vec<bench::FanInComparison>, String> {
+    let mut rungs: Vec<usize> = [64usize, 256, 1024]
+        .into_iter()
+        .filter(|&c| c <= fanin_max)
+        .collect();
+    if rungs.is_empty() {
+        rungs.push(fanin_max);
+    }
+    cnn_flow::net::fanin::ladder(&rungs, 16)
+}
+
+#[cfg(not(unix))]
+fn bench_fanin(_fanin_max: usize) -> Result<Vec<bench::FanInComparison>, String> {
+    eprintln!("note: skipping the fan-in ladder (the evented core requires a unix platform)");
+    Ok(Vec::new())
 }

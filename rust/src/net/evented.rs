@@ -1,0 +1,808 @@
+//! Evented TCP front-end: a single-threaded nonblocking reactor serving
+//! every connection off one readiness loop (DESIGN.md §10).
+//!
+//! The threaded [`NetServer`](super::server::NetServer) spawns ~2 OS
+//! threads per connection, which caps realistic fan-in far below the
+//! "millions of users" north star. [`EventedServer`] serves the same
+//! protocol with **O(1) threads**: nonblocking sockets driven by the
+//! std-only [`reactor::Poller`], slab-allocated per-connection state,
+//! incremental frame decoding ([`FrameDecoder`] — no per-frame body
+//! allocation), buffered batched response writes, and a
+//! poller-based [`reactor::Waker`] instead of the threaded core's
+//! loopback self-connect shutdown hack.
+//!
+//! The readiness→decode→submit→settle path:
+//!
+//! 1. **readiness** — the poller reports a connection readable; the
+//!    reactor drains the socket into the connection's scratch buffer;
+//! 2. **decode** — complete frames are parsed in place into
+//!    [`Msg`]s; partial frames wait for more bytes;
+//! 3. **submit** — `InferRequest`s enter the coordinator via
+//!    [`Server::submit_to_notified`] with a per-connection
+//!    [`CompletionNotify`] hook; the returned [`Pending`] joins the
+//!    connection's FIFO reply queue (which is what preserves
+//!    answer-in-request-order under pipelining);
+//! 4. **settle** — when a worker answers, the hook pushes the
+//!    connection's token onto the completion queue and wakes the
+//!    poller; the reactor `try_wait`s the queue front(s), encodes the
+//!    responses into the connection's write buffer, and flushes.
+//!
+//! **Oracle contract**: the threaded core is the differential oracle —
+//! exactly how the interpreter anchors the compiled engine. Both cores
+//! share [`NetMetrics`], the [`ErrorCode`] mapping, the
+//! [`NetServerConfig`] tunables and drain semantics, and
+//! `tests/net_evented.rs` pins byte-identical responses plus exact
+//! counter reconciliation between them on seeded replays.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    CompletionNotify, NetMetrics, NetMetricsSnapshot, Pending, ReactorStats,
+    ReactorStatsSnapshot, Server,
+};
+
+use super::proto::{ErrorCode, FrameDecoder, Msg};
+use super::reactor::{self, Event, Interest, Poller, WakeReader, Waker};
+use super::server::NetServerConfig;
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKER: usize = 1;
+/// Connection tokens are slab index + this offset.
+const TOKEN_CONN0: usize = 2;
+
+/// Socket-read chunks consumed per readiness event per connection — a
+/// fairness bound so one firehose peer cannot starve the loop (the
+/// level-triggered poller re-reports leftover bytes immediately).
+const MAX_READS_PER_EVENT: usize = 8;
+/// A connection's write buffer is released back to the allocator once
+/// drained past this size, so a burst does not pin memory forever.
+const RETAIN_OUT: usize = 256 * 1024;
+
+/// State shared between the reactor thread, the shutdown path, and the
+/// per-request completion hooks running on coordinator workers.
+struct Shared {
+    waker: Waker,
+    /// Serving; `false` starts the drain.
+    open: AtomicBool,
+    /// The coordinator drain has finished: every accepted request is
+    /// answerable, the reactor may do its final settle-and-flush sweep.
+    drained: AtomicBool,
+    /// Slab indices with newly-settled replies, pushed by
+    /// [`ConnNotify::notify`], drained by the reactor each pass.
+    completions: Mutex<Vec<usize>>,
+}
+
+/// One connection's completion hook: dedups via `queued` so a burst of
+/// settles costs one token + one wake, not one syscall per response.
+struct ConnNotify {
+    slab_idx: usize,
+    queued: AtomicBool,
+    shared: Arc<Shared>,
+}
+
+impl CompletionNotify for ConnNotify {
+    fn notify(&self) {
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            self.shared
+                .completions
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(self.slab_idx);
+            self.shared.waker.wake();
+        }
+    }
+}
+
+/// A queued reply, FIFO per connection — the evented image of the
+/// threaded core's `WriteItem`: answers leave in request order.
+enum Reply {
+    Ready(Msg),
+    Wait(u64, Pending),
+}
+
+/// Slab-allocated per-connection state. The slab index is stable for
+/// the connection's lifetime (freed slots are reused), so both the
+/// poller token and the completion hook key on it.
+struct Conn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    replies: VecDeque<Reply>,
+    /// Encoded-but-unwritten response bytes (`out_pos..` is pending).
+    out: Vec<u8>,
+    out_pos: usize,
+    notify: Arc<ConnNotify>,
+    registered: bool,
+    interest: Interest,
+    /// EOF seen, read error, or framing lost — no more requests.
+    read_closed: bool,
+    /// Protocol violation answered; stop parsing buffered bytes too.
+    closing: bool,
+    /// Write side dead: settle + count replies, write nothing.
+    sink_only: bool,
+    /// Read interest withheld because `replies` hit the configured
+    /// depth (per-connection backpressure).
+    paused: bool,
+    /// Set when a write would block; cleared on any write progress.
+    /// Drives the write-stall teardown timer.
+    stalled_since: Option<Instant>,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.sink_only || self.out_pos >= self.out.len()
+    }
+}
+
+/// The running evented front-end. API mirrors the threaded
+/// [`NetServer`](super::server::NetServer); dropping it shuts down.
+pub struct EventedServer {
+    addr: SocketAddr,
+    metrics: Arc<NetMetrics>,
+    stats: Arc<ReactorStats>,
+    coordinator: Arc<Server>,
+    shared: Arc<Shared>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EventedServer {
+    /// Bind `addr` and start the reactor thread serving `coordinator`.
+    pub fn bind(addr: &str, coordinator: Arc<Server>) -> Result<EventedServer, String> {
+        EventedServer::bind_with(addr, coordinator, NetServerConfig::default())
+    }
+
+    /// [`bind`](EventedServer::bind) with explicit tunables (shared with
+    /// the threaded core — see [`NetServerConfig`]).
+    pub fn bind_with(
+        addr: &str,
+        coordinator: Arc<Server>,
+        config: NetServerConfig,
+    ) -> Result<EventedServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let mut poller = Poller::new().map_err(|e| format!("poller: {e}"))?;
+        let (waker, wake_rx) = reactor::waker().map_err(|e| format!("waker: {e}"))?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .map_err(|e| format!("register listener: {e}"))?;
+        poller
+            .register(wake_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)
+            .map_err(|e| format!("register waker: {e}"))?;
+        let metrics = Arc::new(NetMetrics::default());
+        let stats = Arc::new(ReactorStats::default());
+        let shared = Arc::new(Shared {
+            waker,
+            open: AtomicBool::new(true),
+            drained: AtomicBool::new(false),
+            completions: Mutex::new(Vec::new()),
+        });
+        let specs: Arc<Vec<(String, u32)>> = Arc::new(
+            coordinator
+                .model_specs()
+                .into_iter()
+                .map(|(id, len)| (id, len as u32))
+                .collect(),
+        );
+        let reactor = Reactor {
+            poller,
+            listener: Some(listener),
+            wake_rx,
+            conns: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            stalled: 0,
+            draining: false,
+            final_sweep_done: false,
+            coordinator: Arc::clone(&coordinator),
+            specs,
+            metrics: Arc::clone(&metrics),
+            stats: Arc::clone(&stats),
+            shared: Arc::clone(&shared),
+            config,
+        };
+        let handle = std::thread::Builder::new()
+            .name("cnn-flow-net-reactor".into())
+            .spawn(move || reactor.run())
+            .map_err(|e| format!("spawn reactor: {e}"))?;
+        Ok(EventedServer {
+            addr: local,
+            metrics,
+            stats,
+            coordinator,
+            shared,
+            reactor: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point-in-time net-layer counters (same struct as the threaded
+    /// core — the cross-core reconciliation contract).
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Readiness-loop counters (evented core only).
+    pub fn reactor_stats(&self) -> ReactorStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Graceful drain with the same ordering contract as the threaded
+    /// core: stop accepting + EOF every read half (the reactor does both
+    /// on the first wake), flush the coordinator so every accepted
+    /// request is answered, then let the reactor settle and write those
+    /// final responses before the sockets close. Idempotent; also runs
+    /// on drop. The wake-up is the poller-based waker — no loopback
+    /// self-connect involved.
+    pub fn shutdown(&mut self) -> NetMetricsSnapshot {
+        if self.shared.open.swap(false, Ordering::SeqCst) {
+            self.shared.waker.wake();
+            self.coordinator.drain_shared();
+            self.shared.drained.store(true, Ordering::SeqCst);
+            self.shared.waker.wake();
+            if let Some(h) = self.reactor.take() {
+                let _ = h.join();
+            }
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for EventedServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The reactor: everything the event-loop thread owns.
+struct Reactor {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    wake_rx: WakeReader,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Live connections (slab occupancy).
+    live: usize,
+    /// Connections currently write-stalled (timer active).
+    stalled: usize,
+    draining: bool,
+    final_sweep_done: bool,
+    coordinator: Arc<Server>,
+    specs: Arc<Vec<(String, u32)>>,
+    metrics: Arc<NetMetrics>,
+    stats: Arc<ReactorStats>,
+    shared: Arc<Shared>,
+    config: NetServerConfig,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if !self.shared.open.load(Ordering::Acquire) {
+                self.begin_drain();
+            }
+            self.process_completions();
+            self.sweep_stalls();
+            if self.draining && self.shared.drained.load(Ordering::Acquire) {
+                if !self.final_sweep_done {
+                    self.final_sweep_done = true;
+                    // The coordinator has answered everything: one sweep
+                    // settles every queue (including workers that died
+                    // without answering — `try_wait` maps those to the
+                    // Draining error), so exit only waits on flushes.
+                    for idx in 0..self.conns.len() {
+                        if self.conns[idx].is_some() {
+                            self.service(idx, false, false);
+                        }
+                    }
+                }
+                if self.live == 0 {
+                    return;
+                }
+            }
+            let timeout = self.next_timeout();
+            if self.poller.wait(&mut events, timeout).is_err() {
+                // A broken poller cannot be recovered; back off so a
+                // persistent failure does not spin, then re-check flags.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            if !events.is_empty() {
+                self.stats.polls.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .events
+                    .fetch_add(events.len() as u64, Ordering::Relaxed);
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => {
+                        self.wake_rx.drain();
+                        self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+                    }
+                    t => self.service(t - TOKEN_CONN0, ev.readable, false),
+                }
+            }
+        }
+    }
+
+    // -- accept --------------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => self.add_conn(stream),
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(_) => {
+                    // Transient accept failure (e.g. EMFILE under a
+                    // connection flood): back off briefly — the same
+                    // discipline as the threaded accept loop. Level-
+                    // triggered readiness retries automatically.
+                    std::thread::sleep(Duration::from_millis(10));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn add_conn(&mut self, stream: TcpStream) {
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            // Cannot serve a blocking socket off the reactor: refuse
+            // before counting, mirroring the threaded core's
+            // try_clone-failure refusal.
+            return;
+        }
+        let idx = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        let notify = Arc::new(ConnNotify {
+            slab_idx: idx,
+            queued: AtomicBool::new(false),
+            shared: Arc::clone(&self.shared),
+        });
+        let mut conn = Conn {
+            stream,
+            decoder: FrameDecoder::new(),
+            replies: VecDeque::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            notify,
+            registered: false,
+            interest: Interest {
+                readable: false,
+                writable: false,
+            },
+            read_closed: false,
+            closing: false,
+            sink_only: false,
+            paused: false,
+            stalled_since: None,
+        };
+        self.metrics.connections.fetch_add(1, Ordering::Relaxed);
+        self.live += 1;
+        if self.draining {
+            // Raced the drain: no requests will be read, tear down as
+            // soon as `finish` sees the empty state.
+            let _ = conn.stream.shutdown(Shutdown::Read);
+            conn.read_closed = true;
+        }
+        self.finish(idx, conn);
+    }
+
+    // -- per-connection service pass ------------------------------------
+
+    /// One full pass over a connection: optional socket fill, then the
+    /// decode→submit→settle loop (re-entered when settling frees reply-
+    /// queue space for already-buffered frames), then flush, then
+    /// teardown-or-rearm.
+    fn service(&mut self, idx: usize, fill: bool, via_completion: bool) {
+        let Some(mut conn) = self.conns.get_mut(idx).and_then(Option::take) else {
+            return;
+        };
+        if fill {
+            self.fill(&mut conn);
+        }
+        loop {
+            let backpressured = self.parse_frames(&mut conn);
+            let settled = self.settle(&mut conn);
+            if via_completion {
+                self.stats.completions.fetch_add(settled, Ordering::Relaxed);
+            }
+            if !(backpressured && conn.replies.len() < self.config.writer_queue_depth) {
+                break;
+            }
+        }
+        self.flush(&mut conn);
+        self.finish(idx, conn);
+    }
+
+    /// Drain the socket into the scratch buffer (bounded per pass).
+    fn fill(&mut self, conn: &mut Conn) {
+        if conn.read_closed {
+            return;
+        }
+        for _ in 0..MAX_READS_PER_EVENT {
+            match conn.decoder.read_from(&mut conn.stream) {
+                Ok(0) => {
+                    // Clean EOF at a frame boundary or truncation mid-
+                    // frame: either way reads are over. Truncation (like
+                    // transport errors) closes quietly — `err_malformed`
+                    // stays a wire-violation counter, matching the
+                    // threaded reader.
+                    conn.read_closed = true;
+                    return;
+                }
+                Ok(_) => {}
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.read_closed = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Decode buffered frames and dispatch them, stopping at the reply-
+    /// queue depth (returns true — backpressure) or when no complete
+    /// frame remains (returns false).
+    fn parse_frames(&mut self, conn: &mut Conn) -> bool {
+        loop {
+            if conn.closing {
+                return false;
+            }
+            if conn.replies.len() >= self.config.writer_queue_depth {
+                return true;
+            }
+            match conn.decoder.next() {
+                Ok(Some(msg)) => self.dispatch_msg(conn, msg),
+                Ok(None) => return false,
+                Err(e) => {
+                    // Framing is lost: answer with a typed error, stop
+                    // reading — identical to the threaded reader path.
+                    self.metrics.err_malformed.fetch_add(1, Ordering::Relaxed);
+                    conn.replies.push_back(Reply::Ready(Msg::InferErr {
+                        id: 0,
+                        code: ErrorCode::Malformed,
+                        message: e.to_string(),
+                    }));
+                    conn.closing = true;
+                    conn.read_closed = true;
+                    let _ = conn.stream.shutdown(Shutdown::Read);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// The evented image of the threaded `dispatch`: same counters, same
+    /// `ErrorCode` classification, same protocol-violation handling.
+    fn dispatch_msg(&mut self, conn: &mut Conn, msg: Msg) {
+        match msg {
+            Msg::InferRequest { id, model, frame } => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                if !self.shared.open.load(Ordering::Acquire) {
+                    self.count_error(ErrorCode::Draining);
+                    conn.replies.push_back(Reply::Ready(Msg::InferErr {
+                        id,
+                        code: ErrorCode::Draining,
+                        message: "drain in progress".into(),
+                    }));
+                    return;
+                }
+                let notify: Arc<dyn CompletionNotify> = conn.notify.clone();
+                match self
+                    .coordinator
+                    .submit_to_notified(&model, frame, Some(notify))
+                {
+                    Ok(pending) => conn.replies.push_back(Reply::Wait(id, pending)),
+                    Err(e) => {
+                        let code = ErrorCode::from_reject(&e);
+                        self.count_error(code);
+                        conn.replies.push_back(Reply::Ready(Msg::InferErr {
+                            id,
+                            code,
+                            message: e,
+                        }));
+                    }
+                }
+            }
+            Msg::ListModels => conn.replies.push_back(Reply::Ready(Msg::ModelList {
+                models: self.specs.as_ref().clone(),
+            })),
+            Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. } => {
+                self.count_error(ErrorCode::Malformed);
+                conn.replies.push_back(Reply::Ready(Msg::InferErr {
+                    id: 0,
+                    code: ErrorCode::Malformed,
+                    message: "unexpected message kind from client".into(),
+                }));
+                conn.closing = true;
+                conn.read_closed = true;
+                let _ = conn.stream.shutdown(Shutdown::Read);
+            }
+        }
+    }
+
+    fn count_error(&self, code: ErrorCode) {
+        let counter = match code {
+            ErrorCode::QueueFull => &self.metrics.err_queue_full,
+            ErrorCode::InvalidFrame => &self.metrics.err_invalid_frame,
+            ErrorCode::UnknownModel => &self.metrics.err_unknown_model,
+            ErrorCode::Draining => &self.metrics.err_draining,
+            ErrorCode::Malformed => &self.metrics.err_malformed,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Settle the reply queue front-to-back (FIFO — request order) as
+    /// far as answers have arrived, encoding into the write buffer.
+    /// Returns the number of coordinator replies settled. Counters move
+    /// even in sink-only mode, exactly like the threaded writer: every
+    /// decoded request lands in exactly one counter.
+    fn settle(&mut self, conn: &mut Conn) -> u64 {
+        let mut settled = 0u64;
+        loop {
+            let msg = match conn.replies.front_mut() {
+                None => break,
+                Some(Reply::Ready(_)) => match conn.replies.pop_front() {
+                    Some(Reply::Ready(m)) => m,
+                    _ => unreachable!("front was Ready"),
+                },
+                Some(Reply::Wait(id, pending)) => {
+                    let id = *id;
+                    match pending.try_wait() {
+                        None => break,
+                        Some(Ok(resp)) => {
+                            settled += 1;
+                            self.metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+                            conn.replies.pop_front();
+                            Msg::InferOk {
+                                id,
+                                argmax: resp.argmax as u32,
+                                sim_latency_cycles: resp.sim_latency_cycles,
+                                logits: resp.logits,
+                            }
+                        }
+                        Some(Err(e)) => {
+                            settled += 1;
+                            let code = ErrorCode::from_reject(&e);
+                            self.count_error(code);
+                            conn.replies.pop_front();
+                            Msg::InferErr {
+                                id,
+                                code,
+                                message: e,
+                            }
+                        }
+                    }
+                }
+            };
+            if !conn.sink_only && msg.encode_into(&mut conn.out).is_err() {
+                // Parity with the threaded writer: an unencodable
+                // response poisons the connection's write side.
+                self.mark_sink(conn);
+            }
+        }
+        settled
+    }
+
+    /// Push buffered bytes at the socket until done or `WouldBlock`.
+    fn flush(&mut self, conn: &mut Conn) {
+        if conn.sink_only {
+            conn.out.clear();
+            conn.out_pos = 0;
+            return;
+        }
+        while conn.out_pos < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => {
+                    self.mark_sink(conn);
+                    return;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                    if conn.stalled_since.take().is_some() {
+                        self.stalled -= 1;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if conn.stalled_since.is_none() {
+                        conn.stalled_since = Some(Instant::now());
+                        self.stalled += 1;
+                    }
+                    break;
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.mark_sink(conn);
+                    return;
+                }
+            }
+        }
+        if conn.out_pos >= conn.out.len() {
+            conn.out.clear();
+            conn.out_pos = 0;
+            if conn.out.capacity() > RETAIN_OUT {
+                conn.out = Vec::new();
+            }
+        } else if conn.out_pos >= 64 * 1024 {
+            // Partial flush with a large dead prefix: slide instead of
+            // letting the buffer grow unboundedly.
+            let len = conn.out.len();
+            conn.out.copy_within(conn.out_pos..len, 0);
+            conn.out.truncate(len - conn.out_pos);
+            conn.out_pos = 0;
+        }
+    }
+
+    /// Write side is dead: drop buffered bytes, stop stall tracking —
+    /// replies keep settling (and counting) until the queue drains.
+    fn mark_sink(&mut self, conn: &mut Conn) {
+        conn.sink_only = true;
+        conn.out.clear();
+        conn.out_pos = 0;
+        if conn.stalled_since.take().is_some() {
+            self.stalled -= 1;
+        }
+    }
+
+    /// Teardown when finished (all replies settled, bytes flushed or
+    /// abandoned, reads over) — else re-arm poller interest and return
+    /// the connection to its slab slot.
+    fn finish(&mut self, idx: usize, mut conn: Conn) {
+        if conn.read_closed && conn.replies.is_empty() && conn.flushed() {
+            if conn.registered {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            }
+            if conn.stalled_since.take().is_some() {
+                self.stalled -= 1;
+            }
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+            self.live -= 1;
+            self.free.push(idx);
+            return;
+        }
+        self.update_interest(&mut conn, idx);
+        self.conns[idx] = Some(conn);
+    }
+
+    /// Reconcile poller registration with what the connection can make
+    /// progress on. A conn wanting nothing (e.g. settling replies for a
+    /// dead peer) is deregistered entirely: with level-triggered
+    /// polling, a hung-up socket would otherwise storm HUP events.
+    fn update_interest(&mut self, conn: &mut Conn, idx: usize) {
+        let depth_ok = conn.replies.len() < self.config.writer_queue_depth;
+        if !depth_ok && !conn.read_closed && !conn.paused {
+            conn.paused = true;
+            self.stats.read_pauses.fetch_add(1, Ordering::Relaxed);
+        }
+        if depth_ok {
+            conn.paused = false;
+        }
+        let want = Interest {
+            readable: !conn.read_closed && depth_ok,
+            writable: !conn.sink_only && conn.out_pos < conn.out.len(),
+        };
+        let fd = conn.stream.as_raw_fd();
+        let token = TOKEN_CONN0 + idx;
+        if !want.readable && !want.writable {
+            if conn.registered && self.poller.deregister(fd).is_ok() {
+                conn.registered = false;
+            }
+        } else if !conn.registered {
+            if self.poller.register(fd, token, want).is_ok() {
+                conn.registered = true;
+                conn.interest = want;
+            }
+        } else if want != conn.interest && self.poller.modify(fd, token, want).is_ok() {
+            conn.interest = want;
+        }
+    }
+
+    // -- wakeup-driven work ---------------------------------------------
+
+    /// Settle connections whose workers signalled completion.
+    fn process_completions(&mut self) {
+        let tokens = {
+            let mut q = self
+                .shared
+                .completions
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *q)
+        };
+        for idx in tokens {
+            // Reset the dedup flag *before* settling: a notify firing
+            // after our sweep re-queues the token for the next pass.
+            match self.conns.get(idx) {
+                Some(Some(conn)) => conn.notify.queued.store(false, Ordering::Release),
+                _ => continue, // conn torn down meanwhile: stale token
+            }
+            self.service(idx, false, true);
+        }
+    }
+
+    /// First wake after `shutdown`: stop accepting, EOF every read half.
+    fn begin_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.deregister(l.as_raw_fd());
+        }
+        for idx in 0..self.conns.len() {
+            if let Some(conn) = self.conns[idx].as_mut() {
+                let _ = conn.stream.shutdown(Shutdown::Read);
+                conn.read_closed = true;
+                self.service(idx, false, false);
+            }
+        }
+    }
+
+    // -- write-stall timeouts -------------------------------------------
+
+    fn next_timeout(&self) -> Option<Duration> {
+        if self.stalled == 0 {
+            return None;
+        }
+        let now = Instant::now();
+        let mut min = self.config.write_stall_timeout;
+        for conn in self.conns.iter().flatten() {
+            if let Some(t) = conn.stalled_since {
+                let left = (t + self.config.write_stall_timeout).saturating_duration_since(now);
+                min = min.min(left);
+            }
+        }
+        Some(min.max(Duration::from_millis(1)))
+    }
+
+    /// Tear down connections whose peer stopped reading for longer than
+    /// the configured stall timeout (buffered replies are abandoned;
+    /// unsettled ones still settle and count before the slot frees).
+    fn sweep_stalls(&mut self) {
+        if self.stalled == 0 {
+            return;
+        }
+        let now = Instant::now();
+        for idx in 0..self.conns.len() {
+            let expired = matches!(
+                &self.conns[idx],
+                Some(c) if c.stalled_since
+                    .is_some_and(|t| now.duration_since(t) >= self.config.write_stall_timeout)
+            );
+            if !expired {
+                continue;
+            }
+            let mut conn = self.conns[idx].take().expect("checked above");
+            self.stats.stall_teardowns.fetch_add(1, Ordering::Relaxed);
+            self.mark_sink(&mut conn);
+            conn.read_closed = true;
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.settle(&mut conn);
+            self.finish(idx, conn);
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! Multiplexed fan-in load generator: N pipelined connections driven
+//! off **one** client thread via the same std-only
+//! [`reactor::Poller`] the evented server uses.
+//!
+//! The pooled blocking [`Client`](super::client::Client) measures
+//! protocol semantics one socket at a time; this driver measures the
+//! server's *fan-in* behaviour — thousands of concurrent pipelined
+//! connections — which a thread-per-socket client cannot reach under
+//! ordinary fd/thread limits. It powers the connections-vs-throughput
+//! and RTT-under-fan-in rows of `BENCH_pipeline.json` and the 1k/10k
+//! connection smoke tests.
+//!
+//! Request frames are generated deterministically from `seed`, so the
+//! exact byte stream each connection sends is reproducible across
+//! cores and runs. Responses arrive in request order per connection
+//! (the protocol's pipelining contract), so round-trip times pair the
+//! oldest in-flight send with each arriving reply.
+
+use std::io::{self, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::time::{Duration, Instant};
+
+use super::proto::{FrameDecoder, Msg};
+use super::reactor::{Event, Interest, Poller};
+
+/// Fan-in run shape.
+#[derive(Debug, Clone, Copy)]
+pub struct FanInConfig {
+    /// Concurrent TCP connections.
+    pub connections: usize,
+    /// Requests sent per connection.
+    pub requests_per_conn: usize,
+    /// Max in-flight (unanswered) requests per connection. `1` is the
+    /// closed-loop RTT probe; `requests_per_conn` is fully pipelined.
+    pub window: usize,
+    /// Deterministic frame-content seed.
+    pub seed: u64,
+    /// Abort the run (with an error) if it exceeds this wall time.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for FanInConfig {
+    fn default() -> Self {
+        FanInConfig {
+            connections: 64,
+            requests_per_conn: 16,
+            window: 8,
+            seed: 0xFA51,
+            deadline: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
+/// What a fan-in run observed.
+#[derive(Debug, Clone, Copy)]
+pub struct FanInReport {
+    pub connections: usize,
+    pub sent: u64,
+    /// `InferOk` responses.
+    pub ok: u64,
+    /// Typed `InferErr` responses (e.g. backpressure under overload).
+    pub errors: u64,
+    /// Time to establish every connection.
+    pub connect_wall: Duration,
+    /// Time from first request byte to last settled response.
+    pub wall: Duration,
+    pub rtt_p50_us: f64,
+    pub rtt_p99_us: f64,
+    pub rtt_max_us: f64,
+}
+
+impl FanInReport {
+    /// Settled responses per second of request-phase wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        (self.ok + self.errors) as f64 / secs
+    }
+}
+
+struct FConn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    out: Vec<u8>,
+    out_pos: usize,
+    sent: usize,
+    recvd: usize,
+    /// Send timestamps of in-flight requests, oldest first.
+    inflight: std::collections::VecDeque<Instant>,
+    interest: Interest,
+    registered: bool,
+    done: bool,
+}
+
+const NO_INTEREST: Interest = Interest {
+    readable: false,
+    writable: false,
+};
+
+/// Splitmix64 — a frame byte generator, not a statistical RNG.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The deterministic frame connection `conn` sends as request `req`.
+pub fn frame_for(seed: u64, conn: usize, req: usize, frame_len: usize) -> Vec<i64> {
+    (0..frame_len)
+        .map(|k| {
+            let z = mix(seed ^ ((conn as u64) << 40) ^ ((req as u64) << 20) ^ k as u64);
+            (z % 256) as i64 - 128
+        })
+        .collect()
+}
+
+/// Drive `cfg.connections` pipelined connections against `addr`, all
+/// requests targeting `model` with `frame_len`-element frames. Returns
+/// the aggregate report, or an error on transport failure / protocol
+/// violation / deadline.
+pub fn run(
+    addr: SocketAddr,
+    model: &str,
+    frame_len: usize,
+    cfg: &FanInConfig,
+) -> Result<FanInReport, String> {
+    if cfg.connections == 0 || cfg.requests_per_conn == 0 || cfg.window == 0 {
+        return Err("fan-in config must have nonzero connections/requests/window".into());
+    }
+    let started = Instant::now();
+    let mut poller = Poller::new().map_err(|e| format!("fan-in poller: {e}"))?;
+    let mut conns: Vec<FConn> = Vec::with_capacity(cfg.connections);
+    for _ in 0..cfg.connections {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("fan-in connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_nonblocking(true)
+            .map_err(|e| format!("fan-in nonblocking: {e}"))?;
+        conns.push(FConn {
+            stream,
+            decoder: FrameDecoder::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            sent: 0,
+            recvd: 0,
+            inflight: std::collections::VecDeque::new(),
+            interest: NO_INTEREST,
+            registered: false,
+            done: false,
+        });
+    }
+    let connect_wall = started.elapsed();
+
+    let mut ok = 0u64;
+    let mut errors = 0u64;
+    let mut rtts_ns: Vec<u64> = Vec::with_capacity(cfg.connections * cfg.requests_per_conn);
+    let request_phase = Instant::now();
+    let mut live = conns.len();
+
+    // Prime every connection: fill the window, flush, arm interest.
+    for idx in 0..conns.len() {
+        pump(
+            &mut conns[idx],
+            idx,
+            model,
+            frame_len,
+            cfg,
+            &mut poller,
+            &mut ok,
+            &mut errors,
+            &mut rtts_ns,
+            &mut live,
+        )?;
+    }
+
+    let mut events: Vec<Event> = Vec::new();
+    while live > 0 {
+        if let Some(deadline) = cfg.deadline {
+            if started.elapsed() > deadline {
+                return Err(format!(
+                    "fan-in deadline exceeded: {live} connections unfinished after {deadline:?}"
+                ));
+            }
+        }
+        poller
+            .wait(&mut events, Some(Duration::from_millis(200)))
+            .map_err(|e| format!("fan-in poll: {e}"))?;
+        for ev in &events {
+            let idx = ev.token;
+            if conns[idx].done {
+                continue;
+            }
+            pump(
+                &mut conns[idx],
+                idx,
+                model,
+                frame_len,
+                cfg,
+                &mut poller,
+                &mut ok,
+                &mut errors,
+                &mut rtts_ns,
+                &mut live,
+            )?;
+        }
+    }
+    let wall = request_phase.elapsed();
+
+    rtts_ns.sort_unstable();
+    let pick = |q: f64| -> f64 {
+        if rtts_ns.is_empty() {
+            return 0.0;
+        }
+        let pos = ((rtts_ns.len() - 1) as f64 * q).round() as usize;
+        rtts_ns[pos] as f64 / 1_000.0
+    };
+    Ok(FanInReport {
+        connections: cfg.connections,
+        sent: conns.iter().map(|c| c.sent as u64).sum(),
+        ok,
+        errors,
+        connect_wall,
+        wall,
+        rtt_p50_us: pick(0.50),
+        rtt_p99_us: pick(0.99),
+        rtt_max_us: rtts_ns.last().map_or(0.0, |&n| n as f64 / 1_000.0),
+    })
+}
+
+/// Run the connections-vs-throughput ladder: at each rung, a fresh
+/// synthetic-model coordinator behind each network core takes the same
+/// fan-in load — `requests_per_conn` pipelined requests per connection
+/// for throughput, then a closed-loop (window = 1) probe for RTT.
+/// Shared by `cnn-flow bench --fanin` and `benches/bench_pipeline.rs`
+/// so `BENCH_pipeline.json` rows stay comparable wherever produced.
+pub fn ladder(
+    rungs: &[usize],
+    requests_per_conn: usize,
+) -> Result<Vec<crate::util::bench::FanInComparison>, String> {
+    use crate::coordinator::{Server, ServerConfig};
+    use crate::quant::QModel;
+
+    let mut rows = Vec::new();
+    for &connections in rungs {
+        let mut rps = [0.0f64; 2];
+        let mut rtt_p99 = [0.0f64; 2];
+        let cores = [super::NetCore::Threaded, super::NetCore::Evented];
+        for (i, core) in cores.into_iter().enumerate() {
+            let config = ServerConfig {
+                workers: 2,
+                max_batch: 16,
+                queue_depth: 4096,
+                verify_every: 0,
+                batch_deadline: Duration::from_micros(200),
+                ..Default::default()
+            };
+            let server = Server::start(QModel::synthetic(12, 8, 10, 0xBE7C), config, None)
+                .map(std::sync::Arc::new)
+                .map_err(|e| format!("{core}: {e}"))?;
+            let (model, frame_len) = server
+                .model_specs()
+                .first()
+                .cloned()
+                .ok_or_else(|| "fan-in server advertises no models".to_string())?;
+            let mut net = super::FrontEnd::bind(core, "127.0.0.1:0", std::sync::Arc::clone(&server))
+                .map_err(|e| format!("{core}: {e}"))?;
+            let addr = net.local_addr();
+            let throughput = run(
+                addr,
+                &model,
+                frame_len,
+                &FanInConfig {
+                    connections,
+                    requests_per_conn,
+                    window: 8,
+                    seed: 0xFA51,
+                    deadline: Some(Duration::from_secs(300)),
+                },
+            )
+            .map_err(|e| format!("{core} x{connections} pipelined: {e}"))?;
+            let rtt = run(
+                addr,
+                &model,
+                frame_len,
+                &FanInConfig {
+                    connections,
+                    requests_per_conn: 4,
+                    window: 1,
+                    seed: 0xFA52,
+                    deadline: Some(Duration::from_secs(300)),
+                },
+            )
+            .map_err(|e| format!("{core} x{connections} closed-loop: {e}"))?;
+            net.shutdown();
+            rps[i] = throughput.throughput_rps();
+            rtt_p99[i] = rtt.rtt_p99_us;
+            println!(
+                "fanin {core} x{connections}: {:.0} req/s pipelined ({} ok, {} err), \
+                 closed-loop p50 {:.0}us p99 {:.0}us",
+                rps[i], throughput.ok, throughput.errors, rtt.rtt_p50_us, rtt.rtt_p99_us
+            );
+        }
+        rows.push(crate::util::bench::FanInComparison {
+            connections,
+            requests_per_conn,
+            threaded_rps: rps[0],
+            evented_rps: rps[1],
+            threaded_rtt_p99_us: rtt_p99[0],
+            evented_rtt_p99_us: rtt_p99[1],
+        });
+    }
+    Ok(rows)
+}
+
+/// One service pass over a connection: read + settle responses, top up
+/// the send window, flush, reconcile poller interest, finish when all
+/// responses are in.
+#[allow(clippy::too_many_arguments)]
+fn pump(
+    conn: &mut FConn,
+    idx: usize,
+    model: &str,
+    frame_len: usize,
+    cfg: &FanInConfig,
+    poller: &mut Poller,
+    ok: &mut u64,
+    errors: &mut u64,
+    rtts_ns: &mut Vec<u64>,
+    live: &mut usize,
+) -> Result<(), String> {
+    // Read and settle.
+    loop {
+        match conn.decoder.read_from(&mut conn.stream) {
+            Ok(0) => {
+                if conn.recvd < cfg.requests_per_conn {
+                    return Err(format!(
+                        "fan-in conn {idx}: server closed after {}/{} responses",
+                        conn.recvd, cfg.requests_per_conn
+                    ));
+                }
+                break;
+            }
+            Ok(_) => {}
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("fan-in conn {idx}: read: {e}")),
+        }
+        loop {
+            match conn.decoder.next() {
+                Ok(Some(msg)) => {
+                    let sent_at = conn
+                        .inflight
+                        .pop_front()
+                        .ok_or_else(|| format!("fan-in conn {idx}: unsolicited response"))?;
+                    rtts_ns.push(sent_at.elapsed().as_nanos() as u64);
+                    conn.recvd += 1;
+                    match msg {
+                        Msg::InferOk { .. } => *ok += 1,
+                        Msg::InferErr { .. } => *errors += 1,
+                        other => {
+                            return Err(format!(
+                                "fan-in conn {idx}: unexpected response kind {other:?}"
+                            ))
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => return Err(format!("fan-in conn {idx}: protocol: {e}")),
+            }
+        }
+    }
+    // Top up the window.
+    while conn.sent < cfg.requests_per_conn && conn.inflight.len() < cfg.window {
+        let msg = Msg::InferRequest {
+            id: conn.sent as u64,
+            model: model.to_string(),
+            frame: frame_for(cfg.seed, idx, conn.sent, frame_len),
+        };
+        msg.encode_into(&mut conn.out)
+            .map_err(|e| format!("fan-in conn {idx}: encode: {e}"))?;
+        conn.inflight.push_back(Instant::now());
+        conn.sent += 1;
+    }
+    // Flush.
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => return Err(format!("fan-in conn {idx}: write returned 0")),
+            Ok(n) => conn.out_pos += n,
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(format!("fan-in conn {idx}: write: {e}")),
+        }
+    }
+    if conn.out_pos >= conn.out.len() {
+        conn.out.clear();
+        conn.out_pos = 0;
+    }
+    // Finish or re-arm.
+    if conn.recvd >= cfg.requests_per_conn {
+        conn.done = true;
+        if conn.registered {
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+            conn.registered = false;
+        }
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        *live -= 1;
+        return Ok(());
+    }
+    let want = Interest {
+        readable: !conn.inflight.is_empty(),
+        writable: conn.out_pos < conn.out.len(),
+    };
+    let fd = conn.stream.as_raw_fd();
+    if !conn.registered {
+        poller
+            .register(fd, idx, want)
+            .map_err(|e| format!("fan-in conn {idx}: register: {e}"))?;
+        conn.registered = true;
+        conn.interest = want;
+    } else if want != conn.interest {
+        poller
+            .modify(fd, idx, want)
+            .map_err(|e| format!("fan-in conn {idx}: rearm: {e}"))?;
+        conn.interest = want;
+    }
+    Ok(())
+}

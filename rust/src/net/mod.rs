@@ -9,25 +9,198 @@
 //! drain surface as **typed protocol errors**, never as a blocked accept
 //! loop, and per-connection pipelining keeps shard micro-batches full.
 //!
-//! Three pieces (contracts in DESIGN.md §8, pinned by
-//! `tests/net_serving.rs`):
+//! Pieces (contracts in DESIGN.md §8 and §10, pinned by
+//! `tests/net_serving.rs` and `tests/net_evented.rs`):
 //!
 //! * [`proto`] — the versioned, length-prefixed binary wire protocol:
-//!   model-tagged requests, lossless i64 logits, and one
-//!   [`proto::ErrorCode`] per coordinator rejection reason;
+//!   model-tagged requests, lossless i64 logits, one
+//!   [`proto::ErrorCode`] per coordinator rejection reason, and the
+//!   incremental [`proto::FrameDecoder`] used by the evented paths;
 //! * [`server`] — the threaded front-end over
 //!   [`crate::coordinator::Server`]: reader/writer pair per connection
 //!   (pipelined, in-order responses), graceful drain, malformed input
 //!   answered rather than panicking;
+//! * [`reactor`] — the std-only readiness poller (epoll on Linux,
+//!   `poll(2)` elsewhere on unix) plus a socketpair-based waker;
+//! * [`evented`] — the nonblocking single-threaded front-end built on
+//!   the reactor: O(1) threads for 10k+ connections, with the threaded
+//!   [`server::NetServer`] kept as its differential oracle;
 //! * [`client`] — the blocking client with a small connection pool,
 //!   whose responses are **byte-identical** to in-process serving
 //!   (`coordinator::loadgen::replay_net` replays a seeded `MultiTrace`
-//!   over localhost to pin exactly that).
+//!   over localhost to pin exactly that);
+//! * [`fanin`] — the poller-multiplexed load generator measuring
+//!   connections-vs-throughput and RTT under fan-in.
 
 pub mod client;
+#[cfg(unix)]
+pub mod evented;
+#[cfg(unix)]
+pub mod fanin;
 pub mod proto;
+#[cfg(unix)]
+pub mod reactor;
 pub mod server;
 
 pub use client::{Client, ClientPending, NetError, NetResponse};
-pub use proto::{ErrorCode, Msg, ProtoError, MAX_BODY, PROTO_VERSION};
-pub use server::NetServer;
+#[cfg(unix)]
+pub use evented::EventedServer;
+pub use proto::{ErrorCode, FrameDecoder, Msg, ProtoError, MAX_BODY, PROTO_VERSION};
+pub use server::{NetServer, NetServerConfig};
+
+use std::sync::Arc;
+
+use crate::coordinator::{NetMetricsSnapshot, ReactorStatsSnapshot, Server};
+
+/// Which network core serves the socket: the threaded oracle or the
+/// evented reactor. Mirrors `coordinator::EngineKind`'s selection
+/// pattern — a CLI flag (`--net-core`) plus an env override
+/// (`$CNN_FLOW_NET`) that CI's matrix legs use to force every
+/// default-configured network test through the evented core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetCore {
+    /// Thread-per-connection [`NetServer`] — the differential oracle.
+    #[default]
+    Threaded,
+    /// Single-threaded nonblocking reactor ([`EventedServer`]).
+    Evented,
+}
+
+impl NetCore {
+    /// Parse a core name (`threaded` | `evented`; case-insensitive) —
+    /// shared by the env override and the CLI's `--net-core` flag.
+    pub fn parse(s: &str) -> Option<NetCore> {
+        match s.to_ascii_lowercase().as_str() {
+            "threaded" => Some(NetCore::Threaded),
+            "evented" | "reactor" => Some(NetCore::Evented),
+            _ => None,
+        }
+    }
+
+    /// The core named by `$CNN_FLOW_NET`. Unset or empty means "no
+    /// override"; an unrecognized non-empty value **panics** — silently
+    /// falling back to the threaded default would turn a typo in the CI
+    /// matrix into a leg that tests the wrong core while staying green.
+    pub fn from_env() -> Option<NetCore> {
+        let raw = std::env::var("CNN_FLOW_NET").ok()?;
+        if raw.is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Some(core) => Some(core),
+            None => panic!(
+                "CNN_FLOW_NET='{raw}' is not a recognized network core \
+                 (expected threaded | evented)"
+            ),
+        }
+    }
+
+    /// [`NetCore::from_env`], falling back to the threaded default.
+    pub fn default_from_env() -> NetCore {
+        Self::from_env().unwrap_or_default()
+    }
+}
+
+impl std::fmt::Display for NetCore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            NetCore::Threaded => "threaded",
+            NetCore::Evented => "evented",
+        })
+    }
+}
+
+/// A running front-end of either core behind one API, so callers (the
+/// CLI, the differential tests, the bench harness) select a core with
+/// a value instead of a code path.
+pub enum FrontEnd {
+    Threaded(NetServer),
+    #[cfg(unix)]
+    Evented(EventedServer),
+}
+
+impl FrontEnd {
+    /// Bind `addr` and serve `coordinator` on the chosen core.
+    pub fn bind(core: NetCore, addr: &str, coordinator: Arc<Server>) -> Result<FrontEnd, String> {
+        FrontEnd::bind_with(core, addr, coordinator, NetServerConfig::default())
+    }
+
+    /// [`bind`](FrontEnd::bind) with explicit tunables.
+    pub fn bind_with(
+        core: NetCore,
+        addr: &str,
+        coordinator: Arc<Server>,
+        config: NetServerConfig,
+    ) -> Result<FrontEnd, String> {
+        match core {
+            NetCore::Threaded => {
+                NetServer::bind_with(addr, coordinator, config).map(FrontEnd::Threaded)
+            }
+            #[cfg(unix)]
+            NetCore::Evented => {
+                EventedServer::bind_with(addr, coordinator, config).map(FrontEnd::Evented)
+            }
+            #[cfg(not(unix))]
+            NetCore::Evented => Err("the evented network core requires a unix platform".into()),
+        }
+    }
+
+    pub fn core(&self) -> NetCore {
+        match self {
+            FrontEnd::Threaded(_) => NetCore::Threaded,
+            #[cfg(unix)]
+            FrontEnd::Evented(_) => NetCore::Evented,
+        }
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        match self {
+            FrontEnd::Threaded(s) => s.local_addr(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.local_addr(),
+        }
+    }
+
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        match self {
+            FrontEnd::Threaded(s) => s.metrics(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.metrics(),
+        }
+    }
+
+    /// Readiness-loop counters — `None` on the threaded core.
+    pub fn reactor_stats(&self) -> Option<ReactorStatsSnapshot> {
+        match self {
+            FrontEnd::Threaded(_) => None,
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => Some(s.reactor_stats()),
+        }
+    }
+
+    /// Graceful drain (same ordering contract on both cores); returns
+    /// the final metrics snapshot.
+    pub fn shutdown(&mut self) -> NetMetricsSnapshot {
+        match self {
+            FrontEnd::Threaded(s) => s.shutdown(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.shutdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_core_parse_and_display() {
+        assert_eq!(NetCore::parse("threaded"), Some(NetCore::Threaded));
+        assert_eq!(NetCore::parse("Evented"), Some(NetCore::Evented));
+        assert_eq!(NetCore::parse("reactor"), Some(NetCore::Evented));
+        assert_eq!(NetCore::parse("epoll"), None);
+        assert_eq!(NetCore::Threaded.to_string(), "threaded");
+        assert_eq!(NetCore::Evented.to_string(), "evented");
+        assert_eq!(NetCore::default(), NetCore::Threaded);
+    }
+}

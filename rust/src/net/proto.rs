@@ -214,14 +214,48 @@ impl Msg {
     /// sender — the old `as u16`/`as u32` casts would silently wrap the
     /// count and emit a frame the peer misparses.
     pub fn encode(&self) -> Result<Vec<u8>, ProtoError> {
-        let mut body = Vec::with_capacity(32);
+        let mut out = Vec::with_capacity(36);
+        self.encode_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Append a complete wire frame to `out` (length prefix included),
+    /// without allocating a per-frame `Vec`: the body is written in place
+    /// after a 4-byte placeholder, then the prefix is patched. On any
+    /// encode refusal `out` is rewound to its original length — a partial
+    /// frame never survives in the buffer. This is the hot path for the
+    /// evented core's per-connection write buffer.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> Result<(), ProtoError> {
+        let frame_start = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        let body_start = out.len();
+        let wrote = self.encode_body(out);
+        let body_len = out.len() - body_start;
+        let checked = wrote.and_then(|()| {
+            if body_len as u64 > MAX_BODY as u64 {
+                Err(ProtoError::Oversized(
+                    u32::try_from(body_len).unwrap_or(u32::MAX),
+                ))
+            } else {
+                Ok(())
+            }
+        });
+        if let Err(e) = checked {
+            out.truncate(frame_start);
+            return Err(e);
+        }
+        out[frame_start..body_start].copy_from_slice(&(body_len as u32).to_be_bytes());
+        Ok(())
+    }
+
+    fn encode_body(&self, body: &mut Vec<u8>) -> Result<(), ProtoError> {
         body.push(PROTO_VERSION);
         match self {
             Msg::InferRequest { id, model, frame } => {
                 body.push(KIND_INFER_REQUEST);
-                push_u64(&mut body, *id);
-                push_str16(&mut body, model);
-                push_vec_i64(&mut body, frame, "frame")?;
+                push_u64(body, *id);
+                push_str16(body, model);
+                push_vec_i64(body, frame, "frame")?;
             }
             Msg::InferOk {
                 id,
@@ -230,16 +264,16 @@ impl Msg {
                 logits,
             } => {
                 body.push(KIND_INFER_OK);
-                push_u64(&mut body, *id);
-                push_u32(&mut body, *argmax);
-                push_u64(&mut body, *sim_latency_cycles);
-                push_vec_i64(&mut body, logits, "logits")?;
+                push_u64(body, *id);
+                push_u32(body, *argmax);
+                push_u64(body, *sim_latency_cycles);
+                push_vec_i64(body, logits, "logits")?;
             }
             Msg::InferErr { id, code, message } => {
                 body.push(KIND_INFER_ERR);
-                push_u64(&mut body, *id);
+                push_u64(body, *id);
                 body.push(code.as_u8());
-                push_str16(&mut body, message);
+                push_str16(body, message);
             }
             Msg::ListModels => body.push(KIND_LIST_MODELS),
             Msg::ModelList { models } => {
@@ -251,22 +285,14 @@ impl Msg {
                         max: u16::MAX as u64,
                     });
                 }
-                push_u16(&mut body, models.len() as u16);
+                push_u16(body, models.len() as u16);
                 for (id, input_len) in models {
-                    push_str16(&mut body, id);
-                    push_u32(&mut body, *input_len);
+                    push_str16(body, id);
+                    push_u32(body, *input_len);
                 }
             }
         }
-        if body.len() as u64 > MAX_BODY as u64 {
-            return Err(ProtoError::Oversized(
-                u32::try_from(body.len()).unwrap_or(u32::MAX),
-            ));
-        }
-        let mut out = Vec::with_capacity(4 + body.len());
-        out.extend_from_slice(&(body.len() as u32).to_be_bytes());
-        out.extend_from_slice(&body);
-        Ok(out)
+        Ok(())
     }
 
     /// Decode a frame body (everything after the length prefix). The body
@@ -367,10 +393,139 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Msg>, ProtoError> {
 /// [`ProtoError`]s before any byte hits the wire — a half-frame must
 /// never reach the peer.
 pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> Result<(), ProtoError> {
+    queue_frame(w, msg)?;
+    w.flush().map_err(|e| ProtoError::Io(e.to_string()))
+}
+
+/// Write one complete frame **without flushing** — the batch-flush half
+/// of the writer protocol. A pipelining writer queues frames with this
+/// and flushes only when its queue is momentarily empty, so a burst of
+/// responses coalesces into few syscalls instead of one per message
+/// (the old flush-per-frame behaviour defeated write batching under
+/// pipelining). Encode refusals still fail before any byte is written.
+pub fn queue_frame<W: Write>(w: &mut W, msg: &Msg) -> Result<(), ProtoError> {
     let bytes = msg.encode()?;
-    w.write_all(&bytes)
-        .and_then(|()| w.flush())
-        .map_err(|e| ProtoError::Io(e.to_string()))
+    w.write_all(&bytes).map_err(|e| ProtoError::Io(e.to_string()))
+}
+
+// -- incremental decoding ----------------------------------------------
+
+/// Incremental frame decoder for nonblocking readers: a growable
+/// scratch buffer that accepts whatever bytes the socket has (any split
+/// points, including mid-prefix and mid-body) and yields complete
+/// [`Msg`]s as they materialize. Bodies are decoded **in place** from
+/// the buffer slice — no per-frame body `Vec` is allocated, unlike the
+/// blocking [`read_frame`] path.
+///
+/// Identity contract (pinned by a property test in
+/// `tests/net_serving.rs`): feeding a byte stream through
+/// [`FrameDecoder`] at *any* split points yields exactly the sequence of
+/// messages (or the error) that [`read_frame`] produces on the same
+/// stream, and adversarial splits/corruption never panic.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    /// Scratch bytes; only `start..end` is valid, the tail beyond `end`
+    /// is previously-zeroed spare capacity for the next `read_from`.
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+/// One `read(2)`'s worth of spare tail maintained by `read_from`.
+const READ_CHUNK: usize = 16 * 1024;
+/// Consumed prefix beyond which `next` compacts instead of growing.
+const COMPACT_AT: usize = 64 * 1024;
+/// High-water mark: once drained, a buffer grown past this (by a large
+/// frame) is released back to the allocator so 10k idle connections do
+/// not pin 10k max-size scratch buffers.
+const RETAIN_CAP: usize = 64 * 1024;
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Bytes buffered but not yet consumed by [`next`](Self::next).
+    pub fn buffered(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the stream ended mid-frame: EOF with buffered bytes is
+    /// [`ProtoError::Truncated`] by the same rule as [`read_frame`].
+    pub fn has_partial(&self) -> bool {
+        self.end > self.start
+    }
+
+    /// Append raw bytes (test harness / in-memory feeding).
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        self.compact();
+        if self.buf.len() - self.end < bytes.len() {
+            self.buf.resize(self.end + bytes.len(), 0);
+        }
+        self.buf[self.end..self.end + bytes.len()].copy_from_slice(bytes);
+        self.end += bytes.len();
+    }
+
+    /// Issue **one** `read` into the spare tail. `Ok(0)` is EOF;
+    /// `WouldBlock`/`Interrupted` are returned as-is for the caller's
+    /// readiness loop to interpret.
+    pub fn read_from<R: Read>(&mut self, r: &mut R) -> io::Result<usize> {
+        self.compact();
+        if self.buf.len() - self.end < READ_CHUNK {
+            // Grow (zeroing only the newly-exposed tail once); length is
+            // the high-water mark, `end` tracks the valid prefix.
+            self.buf.resize(self.end + READ_CHUNK, 0);
+        }
+        let n = r.read(&mut self.buf[self.end..])?;
+        self.end += n;
+        Ok(n)
+    }
+
+    /// Decode the next complete frame, if the buffer holds one.
+    /// `Ok(None)` means "need more bytes"; errors are fatal to the
+    /// stream (framing cannot be resynchronized), matching
+    /// [`read_frame`]'s classification exactly.
+    pub fn next(&mut self) -> Result<Option<Msg>, ProtoError> {
+        let avail = self.end - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len_bytes: [u8; 4] = self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_be_bytes(len_bytes);
+        if len > MAX_BODY {
+            return Err(ProtoError::Oversized(len));
+        }
+        if len < 2 {
+            return Err(ProtoError::Malformed(format!(
+                "body length {len} shorter than the version+kind header"
+            )));
+        }
+        let total = 4 + len as usize;
+        if avail < total {
+            return Ok(None);
+        }
+        let msg = Msg::decode(&self.buf[self.start + 4..self.start + total]);
+        self.start += total;
+        self.compact();
+        msg.map(Some)
+    }
+
+    /// Drop the consumed prefix: reset when drained (releasing an
+    /// oversized scratch buffer), slide when the dead prefix has grown
+    /// past [`COMPACT_AT`].
+    fn compact(&mut self) {
+        if self.start == self.end {
+            self.start = 0;
+            self.end = 0;
+            if self.buf.len() > RETAIN_CAP {
+                self.buf = Vec::new();
+            }
+        } else if self.start >= COMPACT_AT {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+    }
 }
 
 // -- encode helpers ----------------------------------------------------

@@ -1,0 +1,504 @@
+//! Std-only readiness poller over raw fds — the foundation of the
+//! evented network core (DESIGN.md §10).
+//!
+//! Zero new dependencies: on Linux this is epoll reached through thin
+//! `extern "C"` declarations of the three syscall wrappers the C library
+//! std already links against (`epoll_create1` / `epoll_ctl` /
+//! `epoll_wait`); every other Unix gets a level-triggered `poll(2)`
+//! wrapper over the same API. Both backends are **level-triggered**: a
+//! socket that still has readable bytes (or writable space) keeps
+//! reporting, so the reactor never needs edge-triggered drain loops to
+//! be correct — only to be fast.
+//!
+//! [`Waker`] is the poller-based wakeup that replaces the threaded
+//! core's loopback self-connect shutdown hack: a `socketpair(2)` (via
+//! `std::os::unix::net::UnixStream::pair`, still std-only) whose read
+//! end is registered like any other fd. Worker threads and the shutdown
+//! path write one byte to interrupt `wait` from outside the loop.
+
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// What a registration wants to hear about. Level-triggered in both
+/// backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+}
+
+/// One readiness report. Error/hangup conditions surface as both
+/// `readable` and `writable` so the owner discovers the failure from
+/// the I/O call itself — the same contract epoll gives `EPOLLERR`.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A level-triggered readiness poller over raw fds. The caller maps
+/// tokens to connections; the poller never owns an fd it watches.
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            backend: Backend::new()?,
+        })
+    }
+
+    /// Start watching `fd` under `token`. One registration per fd.
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.backend.register(fd, token, interest)
+    }
+
+    /// Change what an already-registered fd is watched for.
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.backend.modify(fd, token, interest)
+    }
+
+    /// Stop watching `fd`. Must be called before the fd closes, or a
+    /// reused fd number could alias a stale registration.
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.backend.deregister(fd)
+    }
+
+    /// Block until readiness or `timeout` (None = forever), appending
+    /// into `events` (cleared first). `Ok` with an empty vec is a
+    /// timeout. `EINTR` retries internally.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        self.backend.wait(events, timeout)
+    }
+}
+
+/// Clamp an optional timeout to the millisecond `int` the kernel APIs
+/// take, rounding up so sub-millisecond deadlines never busy-spin.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(t) => {
+            let ms = t.as_millis();
+            if ms == 0 && !t.is_zero() {
+                1
+            } else {
+                ms.min(i32::MAX as u128) as i32
+            }
+        }
+    }
+}
+
+/// Wakes a [`Poller`] from outside its loop: one byte down a
+/// nonblocking socketpair. Coalescing is free — once the pipe holds an
+/// unread byte, further wakes hit `WouldBlock` and are dropped, which
+/// is exactly right for an "attention requested" edge.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        // &UnixStream implements Write; WouldBlock means a wake is
+        // already pending, any other failure means the reactor is gone —
+        // both are safe to ignore.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// The read half the reactor registers; `drain` eats the pending bytes
+/// so the level-triggered poller stops reporting it.
+pub struct WakeReader {
+    rx: UnixStream,
+}
+
+impl WakeReader {
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    pub fn drain(&self) {
+        let mut sink = [0u8; 64];
+        while let Ok(n) = (&self.rx).read(&mut sink) {
+            if n < sink.len() {
+                break;
+            }
+        }
+    }
+}
+
+/// Build a connected waker pair (both ends nonblocking).
+pub fn waker() -> io::Result<(Waker, WakeReader)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { tx }, WakeReader { rx }))
+}
+
+// ---------------------------------------------------------------------
+// Linux backend: epoll via extern "C" shims (no libc crate — these
+// symbols come from the C library std already links).
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+use epoll::Backend;
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{timeout_ms, Event, Interest};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    /// Kernel ABI: packed on x86-64 (the one arch where the natural
+    /// layout would differ), natural layout elsewhere.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn cvt(ret: c_int) -> io::Result<c_int> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub struct Backend {
+        epfd: c_int,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Backend> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Backend {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(
+            &mut self,
+            op: c_int,
+            fd: RawFd,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask(interest),
+                data: token as u64,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            let n = loop {
+                let ret = unsafe {
+                    epoll_wait(
+                        self.epfd,
+                        self.buf.as_mut_ptr(),
+                        self.buf.len() as c_int,
+                        timeout_ms(timeout),
+                    )
+                };
+                match cvt(ret) {
+                    Ok(n) => break n as usize,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            for raw in &self.buf[..n] {
+                let bits = raw.events;
+                let err = bits & (EPOLLERR | EPOLLHUP) != 0;
+                events.push(Event {
+                    token: raw.data as usize,
+                    readable: bits & EPOLLIN != 0 || err,
+                    writable: bits & EPOLLOUT != 0 || err,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Backend {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Portable Unix backend: level-triggered poll(2) over a registration
+// table. O(n) per wait, which is fine as the fallback path.
+// ---------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+use poll_backend::Backend;
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod poll_backend {
+    use super::{timeout_ms, Event, Interest};
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_ulong};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+
+    fn mask(interest: Interest) -> c_short {
+        let mut m = 0;
+        if interest.readable {
+            m |= POLLIN;
+        }
+        if interest.writable {
+            m |= POLLOUT;
+        }
+        m
+    }
+
+    #[derive(Default)]
+    pub struct Backend {
+        fds: Vec<PollFd>,
+        tokens: Vec<usize>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Backend> {
+            Ok(Backend::default())
+        }
+
+        fn position(&self, fd: RawFd) -> Option<usize> {
+            self.fds.iter().position(|p| p.fd == fd)
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            if self.position(fd).is_some() {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "fd already registered",
+                ));
+            }
+            self.fds.push(PollFd {
+                fd,
+                events: mask(interest),
+                revents: 0,
+            });
+            self.tokens.push(token);
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let i = self
+                .position(fd)
+                .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+            self.fds[i].events = mask(interest);
+            self.tokens[i] = token;
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let i = self
+                .position(fd)
+                .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+            self.fds.swap_remove(i);
+            self.tokens.swap_remove(i);
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            let n = loop {
+                let ret = unsafe {
+                    poll(
+                        self.fds.as_mut_ptr(),
+                        self.fds.len() as c_ulong,
+                        timeout_ms(timeout),
+                    )
+                };
+                if ret < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(e);
+                }
+                break ret as usize;
+            };
+            if n == 0 {
+                return Ok(());
+            }
+            for (p, &token) in self.fds.iter().zip(self.tokens.iter()) {
+                let bits = p.revents;
+                if bits == 0 {
+                    continue;
+                }
+                let err = bits & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                events.push(Event {
+                    token,
+                    readable: bits & POLLIN != 0 || err,
+                    writable: bits & POLLOUT != 0 || err,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn waker_wakes_and_coalesces() {
+        let mut poller = Poller::new().unwrap();
+        let (waker, reader) = waker().unwrap();
+        poller.register(reader.as_raw_fd(), 7, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        // No wake yet: a short wait times out empty.
+        poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(events.is_empty());
+        waker.wake();
+        waker.wake(); // coalesces
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        reader.drain();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(events.is_empty(), "drained waker must go quiet");
+    }
+
+    #[test]
+    fn listener_readability_and_interest_changes() {
+        let mut poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller
+            .register(listener.as_raw_fd(), 1, Interest::READ)
+            .unwrap();
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        // A connected socket with empty send buffer is writable.
+        let (conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+        poller
+            .register(conn.as_raw_fd(), 2, Interest::WRITE)
+            .unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.writable));
+        // Modify to read-only: no more writable reports for token 2.
+        poller
+            .modify(conn.as_raw_fd(), 2, Interest::READ)
+            .unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(!events.iter().any(|e| e.token == 2));
+        poller.deregister(conn.as_raw_fd()).unwrap();
+        poller.deregister(listener.as_raw_fd()).unwrap();
+    }
+}

@@ -31,6 +31,7 @@
 //! tally per [`ErrorCode`], reconciling 1:1 with the coordinator's
 //! intake/shard counters — pinned by `tests/net_serving.rs`.
 
+use std::io::{BufWriter, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -40,18 +41,33 @@ use crate::coordinator::{NetMetrics, NetMetricsSnapshot, Pending, Server};
 
 use super::proto::{self, ErrorCode, Msg};
 
-/// Bound on a connection's queued-but-unwritten replies. A client that
-/// pipelines requests without ever reading responses eventually fills
-/// this queue, which blocks its *own* reader (per-connection
-/// backpressure) instead of growing server memory without limit — the
-/// net-layer analogue of the coordinator's bounded shard queues.
-const WRITER_QUEUE_DEPTH: usize = 1024;
+/// Tunables shared by both network cores (threaded and evented). The
+/// defaults are the production values; tests shrink them to drive the
+/// stalled-writer teardown path in CI time instead of 30 s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetServerConfig {
+    /// Bound on a connection's queued-but-unwritten replies. A client
+    /// that pipelines requests without ever reading responses eventually
+    /// fills this queue, which blocks its *own* reader (threaded core)
+    /// or pauses its read interest (evented core) — per-connection
+    /// backpressure instead of unbounded server memory, the net-layer
+    /// analogue of the coordinator's bounded shard queues.
+    pub writer_queue_depth: usize,
+    /// A blocked write to a non-reading client is abandoned after this
+    /// long; the connection is then torn down (its coordinator replies
+    /// are settled but dropped, never re-queued), so one stalled client
+    /// cannot pin a writer thread (or a reactor write buffer) forever.
+    pub write_stall_timeout: Duration,
+}
 
-/// A single blocked `write` to a non-reading client is abandoned after
-/// this long; the connection is then torn down (its coordinator replies
-/// are dropped, never re-queued), so one stalled client cannot pin a
-/// writer thread forever.
-const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(30);
+impl Default for NetServerConfig {
+    fn default() -> NetServerConfig {
+        NetServerConfig {
+            writer_queue_depth: 1024,
+            write_stall_timeout: Duration::from_secs(30),
+        }
+    }
+}
 
 /// One queued reply on a connection's writer channel: either a message
 /// that is ready now (typed errors, model lists) or a coordinator
@@ -78,6 +94,16 @@ impl NetServer {
     /// start accepting connections for `coordinator`. The advertised
     /// model list is taken from [`Server::model_specs`].
     pub fn bind(addr: &str, coordinator: Arc<Server>) -> Result<NetServer, String> {
+        NetServer::bind_with(addr, coordinator, NetServerConfig::default())
+    }
+
+    /// [`bind`](NetServer::bind) with explicit tunables — see
+    /// [`NetServerConfig`].
+    pub fn bind_with(
+        addr: &str,
+        coordinator: Arc<Server>,
+        config: NetServerConfig,
+    ) -> Result<NetServer, String> {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener
             .local_addr()
@@ -112,6 +138,7 @@ impl NetServer {
                         &handlers,
                         &coordinator,
                         &specs,
+                        config,
                     )
                 })
                 .map_err(|e| format!("spawn accept loop: {e}"))?
@@ -207,6 +234,7 @@ fn accept_loop(
     handlers: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     coordinator: &Arc<Server>,
     specs: &Arc<Vec<(String, u32)>>,
+    config: NetServerConfig,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -260,7 +288,7 @@ fn accept_loop(
         let spawned = std::thread::Builder::new()
             .name(format!("cnn-flow-net-conn-{slot}"))
             .spawn(move || {
-                handle_conn(stream, &hcoordinator, &hspecs, &hopen, &hmetrics);
+                handle_conn(stream, &hcoordinator, &hspecs, &hopen, &hmetrics, config);
                 hconns.lock().unwrap_or_else(|p| p.into_inner())[slot] = None;
             });
         match spawned {
@@ -301,6 +329,7 @@ fn handle_conn(
     specs: &Arc<Vec<(String, u32)>>,
     open: &Arc<AtomicBool>,
     metrics: &Arc<NetMetrics>,
+    config: NetServerConfig,
 ) {
     let write_stream = match stream.try_clone() {
         Ok(s) => s,
@@ -309,11 +338,11 @@ fn handle_conn(
     // A stalled (non-reading) client eventually blocks the writer on a
     // full TCP send buffer; the timeout abandons that write and tears
     // the connection down instead of pinning the thread forever.
-    let _ = write_stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+    let _ = write_stream.set_write_timeout(Some(config.write_stall_timeout));
     // Bounded: when a client pipelines without reading replies, the
     // reader blocks HERE (its own backpressure) once the writer falls
-    // `WRITER_QUEUE_DEPTH` replies behind — server memory stays bounded.
-    let (tx, rx) = mpsc::sync_channel::<WriteItem>(WRITER_QUEUE_DEPTH);
+    // `writer_queue_depth` replies behind — server memory stays bounded.
+    let (tx, rx) = mpsc::sync_channel::<WriteItem>(config.writer_queue_depth);
     let writer = {
         let metrics = Arc::clone(metrics);
         std::thread::spawn(move || writer_loop(write_stream, rx, &metrics))
@@ -404,7 +433,38 @@ fn dispatch(
     }
 }
 
-fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<WriteItem>, metrics: &NetMetrics) {
+/// Settle one queued reply into the wire message it becomes, moving the
+/// matching counter (shared verbatim with the evented core's settle
+/// path, so both cores count identically).
+fn settle_item(item: WriteItem, metrics: &NetMetrics) -> Msg {
+    match item {
+        WriteItem::Ready(m) => m,
+        WriteItem::Wait(id, pending) => match pending.wait() {
+            Ok(resp) => {
+                // Counted when settled, delivered or not: the
+                // counter reconciles with coordinator `completed`.
+                metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+                Msg::InferOk {
+                    id,
+                    argmax: resp.argmax as u32,
+                    sim_latency_cycles: resp.sim_latency_cycles,
+                    logits: resp.logits,
+                }
+            }
+            Err(e) => {
+                let code = ErrorCode::from_reject(&e);
+                count_error(metrics, code);
+                Msg::InferErr {
+                    id,
+                    code,
+                    message: e,
+                }
+            }
+        },
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WriteItem>, metrics: &NetMetrics) {
     // Once a write fails (client gone), keep *settling* the queued
     // replies — every decoded request must still land in exactly one
     // counter so the documented balance `requests == responses_ok +
@@ -413,37 +473,34 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<WriteItem>, metrics: &N
     // this drain is bounded by the coordinator answering its accepted
     // requests (which it always does, drain included).
     let mut sink_only = false;
-    while let Ok(item) = rx.recv() {
-        let msg = match item {
-            WriteItem::Ready(m) => m,
-            WriteItem::Wait(id, pending) => match pending.wait() {
-                Ok(resp) => {
-                    // Counted when settled, delivered or not: the
-                    // counter reconciles with coordinator `completed`.
-                    metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
-                    Msg::InferOk {
-                        id,
-                        argmax: resp.argmax as u32,
-                        sim_latency_cycles: resp.sim_latency_cycles,
-                        logits: resp.logits,
+    // Batch-flush: frames are *queued* (buffered, unflushed) while more
+    // replies are immediately available, and flushed only when the
+    // queue goes momentarily empty — a pipelined burst coalesces into
+    // few write syscalls instead of one flush per message.
+    let mut w = BufWriter::with_capacity(32 * 1024, stream);
+    'conn: while let Ok(first) = rx.recv() {
+        let mut item = first;
+        loop {
+            let msg = settle_item(item, metrics);
+            if !sink_only && proto::queue_frame(&mut w, &msg).is_err() {
+                sink_only = true;
+            }
+            match rx.try_recv() {
+                Ok(next) => item = next,
+                Err(mpsc::TryRecvError::Empty) => {
+                    if !sink_only && w.flush().is_err() {
+                        sink_only = true;
                     }
+                    continue 'conn;
                 }
-                Err(e) => {
-                    let code = ErrorCode::from_reject(&e);
-                    count_error(metrics, code);
-                    Msg::InferErr {
-                        id,
-                        code,
-                        message: e,
-                    }
-                }
-            },
-        };
-        if !sink_only && proto::write_frame(&mut stream, &msg).is_err() {
-            sink_only = true;
+                Err(mpsc::TryRecvError::Disconnected) => break 'conn,
+            }
         }
     }
-    let _ = stream.shutdown(Shutdown::Write);
+    if !sink_only {
+        let _ = w.flush();
+    }
+    let _ = w.get_ref().shutdown(Shutdown::Write);
 }
 
 #[cfg(test)]

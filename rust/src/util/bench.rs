@@ -324,6 +324,72 @@ pub fn merge_net_bench_json(path: &std::path::Path, net: &NetComparison) -> Resu
         .map_err(|e| format!("write {}: {e}", path.display()))
 }
 
+/// One rung of the connections-vs-throughput ladder: the same fan-in
+/// load (`connections` pipelined sockets × `requests_per_conn`
+/// requests, plus a closed-loop window-1 RTT probe) driven against the
+/// threaded and evented network cores. Measured by
+/// `benches/bench_pipeline.rs` and merged into `BENCH_pipeline.json`
+/// under `"fanin"` — the row where the evented core must strictly
+/// dominate at high connection counts.
+#[derive(Debug, Clone)]
+pub struct FanInComparison {
+    pub connections: usize,
+    pub requests_per_conn: usize,
+    /// Settled responses per second, fully pipelined.
+    pub threaded_rps: f64,
+    pub evented_rps: f64,
+    /// Closed-loop (window = 1) round-trip p99 under the fan-in, µs.
+    pub threaded_rtt_p99_us: f64,
+    pub evented_rtt_p99_us: f64,
+}
+
+impl FanInComparison {
+    /// Evented throughput as a multiple of threaded (>1 = evented wins).
+    pub fn rps_ratio(&self) -> f64 {
+        self.evented_rps / self.threaded_rps
+    }
+}
+
+/// Merge the fan-in ladder into `BENCH_pipeline.json` without
+/// disturbing the engine rows or the `"net"` object: the existing
+/// document is parsed (or the pipeline skeleton is used when absent)
+/// and its `"fanin"` key is replaced.
+pub fn merge_fanin_bench_json(
+    path: &std::path::Path,
+    rows: &[FanInComparison],
+) -> Result<(), String> {
+    use crate::util::json::Json;
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|v| v.as_obj().is_some())
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("bench", Json::from("pipeline")),
+                ("models", Json::Arr(Vec::new())),
+            ])
+        });
+    if let Json::Obj(map) = &mut root {
+        let arr: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("connections", Json::from(r.connections)),
+                    ("requests_per_conn", Json::from(r.requests_per_conn)),
+                    ("threaded_rps", Json::from(r.threaded_rps)),
+                    ("evented_rps", Json::from(r.evented_rps)),
+                    ("rps_ratio", Json::from(r.rps_ratio())),
+                    ("threaded_rtt_p99_us", Json::from(r.threaded_rtt_p99_us)),
+                    ("evented_rtt_p99_us", Json::from(r.evented_rtt_p99_us)),
+                ])
+            })
+            .collect();
+        map.insert("fanin".to_string(), Json::Arr(arr));
+    }
+    std::fs::write(path, root.render_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0}ns")
@@ -427,6 +493,54 @@ mod tests {
             parsed.get("net").get("overhead_ratio").as_f64(),
             Some(4.0)
         );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fanin_merge_preserves_other_sections() {
+        let path = std::env::temp_dir().join("cnn_flow_bench_fanin_merge_test.json");
+        let engines = EngineComparison {
+            model: "synthetic".into(),
+            frames: 16,
+            interp_median_ns: 8.0e6,
+            compiled_median_ns: 1.0e6,
+            batched_median_ns: 0.5e6,
+            folded_median_ns: 0.25e6,
+            narrow: true,
+        };
+        write_pipeline_bench_json(&path, &[engines]).unwrap();
+        let rows = [
+            FanInComparison {
+                connections: 64,
+                requests_per_conn: 16,
+                threaded_rps: 10_000.0,
+                evented_rps: 20_000.0,
+                threaded_rtt_p99_us: 900.0,
+                evented_rtt_p99_us: 450.0,
+            },
+            FanInComparison {
+                connections: 1024,
+                requests_per_conn: 8,
+                threaded_rps: 5_000.0,
+                evented_rps: 25_000.0,
+                threaded_rtt_p99_us: 4_000.0,
+                evented_rtt_p99_us: 800.0,
+            },
+        ];
+        assert!((rows[1].rps_ratio() - 5.0).abs() < 1e-9);
+        merge_fanin_bench_json(&path, &rows).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("models").as_arr().unwrap().len(), 1);
+        let fanin = parsed.get("fanin").as_arr().unwrap();
+        assert_eq!(fanin.len(), 2);
+        assert_eq!(fanin[1].get("connections").as_f64(), Some(1024.0));
+        assert_eq!(fanin[1].get("rps_ratio").as_f64(), Some(5.0));
+        // Re-merging replaces the ladder instead of appending.
+        merge_fanin_bench_json(&path, &rows[..1]).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("fanin").as_arr().unwrap().len(), 1);
         let _ = std::fs::remove_file(&path);
     }
 

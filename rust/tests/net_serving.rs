@@ -15,8 +15,8 @@ use std::time::{Duration, Instant};
 use cnn_flow::coordinator::{loadgen, EngineKind, Server, ServerConfig};
 use cnn_flow::model::zoo;
 use cnn_flow::net::client::Client;
-use cnn_flow::net::proto::{self, ErrorCode, Msg, ProtoError, PROTO_VERSION};
-use cnn_flow::net::server::NetServer;
+use cnn_flow::net::proto::{self, ErrorCode, FrameDecoder, Msg, ProtoError, PROTO_VERSION};
+use cnn_flow::net::server::{NetServer, NetServerConfig};
 use cnn_flow::quant::QModel;
 use cnn_flow::sim::pipeline::PipelineSim;
 use cnn_flow::util::prop::prop_check;
@@ -536,4 +536,225 @@ fn pipelined_requests_on_one_socket_answer_in_order() {
     assert_eq!(snap.requests, 6);
     assert_eq!(snap.responses_ok, 6);
     assert_eq!(snap.connections, 1, "pipelining happened on one socket");
+}
+
+// --------------------------------------------------------------------
+// Incremental decoder: split-point properties vs the blocking reader.
+// --------------------------------------------------------------------
+
+#[test]
+fn incremental_decoder_matches_blocking_reader_at_every_split() {
+    // One seeded multi-message stream, re-decoded once per chunk size
+    // from 1 byte (every read lands mid-prefix or mid-body somewhere)
+    // up to the whole wire image in a single push. Every split schedule
+    // must yield the identical message sequence the blocking
+    // `read_frame` oracle produces, with no residue.
+    let mut rng = Rng::new(0xDEC0);
+    let msgs: Vec<Msg> = (0..8).map(|_| random_msg(&mut rng)).collect();
+    let mut wire = Vec::new();
+    for m in &msgs {
+        m.encode_into(&mut wire).unwrap();
+    }
+    let mut cursor = &wire[..];
+    let mut oracle = Vec::new();
+    while let Some(m) = proto::read_frame(&mut cursor).unwrap() {
+        oracle.push(m);
+    }
+    assert_eq!(oracle, msgs, "the blocking reader is the ground truth");
+
+    for chunk in 1..=wire.len() {
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for piece in wire.chunks(chunk) {
+            dec.push_bytes(piece);
+            while let Some(m) = dec.next().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, msgs, "chunk size {chunk} diverged from the oracle");
+        assert!(!dec.has_partial(), "chunk size {chunk} left residue");
+    }
+}
+
+#[test]
+fn incremental_decoder_matches_blocking_reader_at_random_splits() {
+    prop_check(64, 0x5EED5, |rng| {
+        let n = 1 + rng.below(6) as usize;
+        let msgs: Vec<Msg> = (0..n).map(|_| random_msg(rng)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.encode_into(&mut wire)
+                .map_err(|e| format!("encode of valid {m:?} refused: {e}"))?;
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < wire.len() {
+            let end = (off + 1 + rng.below(257) as usize).min(wire.len());
+            dec.push_bytes(&wire[off..end]);
+            off = end;
+            loop {
+                match dec.next() {
+                    Ok(Some(m)) => got.push(m),
+                    Ok(None) => break,
+                    Err(e) => return Err(format!("decoder refused valid bytes: {e}")),
+                }
+            }
+        }
+        if got != msgs {
+            return Err(format!("decoded {} of {} messages", got.len(), msgs.len()));
+        }
+        if dec.has_partial() {
+            return Err("residue left after a fully-consumed stream".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_decoder_never_panics_and_matches_blocking_verdict() {
+    // Adversarial streams: random bytes, half the time prefixed with one
+    // valid frame so the corruption lands *after* a successful decode.
+    // The decoder must never panic, must reproduce the oracle's decoded
+    // prefix, and must reach the oracle's verdict — with EOF-mid-frame
+    // (`Truncated`) showing up as buffered residue on the incremental
+    // side, since only the push-side caller can observe EOF.
+    prop_check(128, 0xADB17E5, |rng| {
+        let mut bytes: Vec<u8> = (0..1 + rng.below(2048) as usize)
+            .map(|_| rng.below(256) as u8)
+            .collect();
+        if rng.below(2) == 0 {
+            let msg = random_msg(rng);
+            let mut framed = msg
+                .encode()
+                .map_err(|e| format!("encode of valid {msg:?} refused: {e}"))?;
+            framed.extend_from_slice(&bytes);
+            bytes = framed;
+        }
+        let mut cursor = &bytes[..];
+        let mut oracle = Vec::new();
+        let oracle_err = loop {
+            match proto::read_frame(&mut cursor) {
+                Ok(Some(m)) => oracle.push(m),
+                Ok(None) => break None,
+                Err(e) => break Some(e),
+            }
+        };
+
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut dec_err = None;
+        let mut off = 0;
+        'feed: while off < bytes.len() {
+            let end = (off + 1 + rng.below(64) as usize).min(bytes.len());
+            dec.push_bytes(&bytes[off..end]);
+            off = end;
+            loop {
+                match dec.next() {
+                    Ok(Some(m)) => got.push(m),
+                    Ok(None) => break,
+                    Err(e) => {
+                        dec_err = Some(e);
+                        break 'feed;
+                    }
+                }
+            }
+        }
+        if got != oracle {
+            return Err(format!(
+                "decoded prefixes differ: {} vs oracle {}",
+                got.len(),
+                oracle.len()
+            ));
+        }
+        match (oracle_err, dec_err) {
+            (None, None) if dec.has_partial() => Err("residue without truncation".into()),
+            (None, None) => Ok(()),
+            (Some(ProtoError::Truncated), None) if dec.has_partial() => Ok(()),
+            (Some(o), Some(d)) if o == d => Ok(()),
+            (o, d) => Err(format!("verdicts differ: oracle {o:?} vs decoder {d:?}")),
+        }
+    });
+}
+
+// --------------------------------------------------------------------
+// Write-stall teardown on the threaded core.
+// --------------------------------------------------------------------
+
+#[test]
+fn threaded_write_stall_tears_down_and_counters_balance() {
+    // A client that pipelines a burst of large-response requests and
+    // never reads: once the kernel socket buffers fill, the writer
+    // thread blocks, the bounded reply queue fills, and the configured
+    // `write_stall_timeout` must tear the connection down instead of
+    // wedging a handler thread forever — with every decoded request
+    // still landing in exactly one counter (`net_evented.rs` pins the
+    // identical invariant on the reactor core).
+    let qm = QModel::synthetic(8, 4, 384, 0x57A1);
+    let coord = Arc::new(
+        Server::start(
+            qm,
+            ServerConfig {
+                workers: 2,
+                max_batch: 16,
+                queue_depth: 1024,
+                verify_every: 0,
+                batch_deadline: Duration::from_micros(200),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let config = NetServerConfig {
+        writer_queue_depth: 16,
+        write_stall_timeout: Duration::from_millis(100),
+    };
+    let mut net = NetServer::bind_with("127.0.0.1:0", Arc::clone(&coord), config).unwrap();
+    let model = coord.models()[0].clone();
+
+    let burst = 400u64;
+    let stream = TcpStream::connect(net.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    {
+        let mut tx = stream.try_clone().unwrap();
+        let mut wire = Vec::new();
+        let frame = vec![1i64; 8 * 8];
+        for id in 0..burst {
+            Msg::InferRequest {
+                id,
+                model: model.clone(),
+                frame: frame.clone(),
+            }
+            .encode_into(&mut wire)
+            .unwrap();
+        }
+        tx.write_all(&wire).unwrap();
+    }
+    // Do NOT read. ~384 i64 logits per response (~3KB on the wire) x 400
+    // responses far exceeds the loopback socket buffers, so the stalled
+    // writer must trip the timeout and the server must give up on this
+    // peer without losing any counter.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let snap = net.metrics();
+        if snap.responses_ok + snap.errors_total() == burst {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stalled connection never settled the burst: {snap:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(stream);
+    let snap = net.shutdown();
+    assert_eq!(snap.requests, burst);
+    assert_eq!(
+        snap.requests,
+        snap.responses_ok + snap.errors_total(),
+        "every decoded request gets exactly one counter: {snap:?}"
+    );
+    assert_eq!(snap.connections, 1);
+    assert_eq!(snap.disconnects, 1, "the stalled connection was torn down");
 }
