@@ -62,6 +62,18 @@ fn main() {
         .collect();
     comparisons.push(compare(&b, mnet, &mnet_frames));
 
+    // --- residual zoo configs (DESIGN.md §11): the merge epilogue and
+    // DAG buffer pool on the hot path, tracked per engine tier like any
+    // other zoo row -------------------------------------------------------
+    for model in [zoo::resnet_micro(), zoo::mobilenet_v2_micro()] {
+        let qm = QModel::synthesize(&model, 0x54).unwrap();
+        let len: usize = qm.input_shape.iter().map(|&d| d.max(1)).product();
+        let frames: Vec<Vec<i64>> = (0..16)
+            .map(|_| (0..len).map(|_| rng.int8() as i64).collect())
+            .collect();
+        comparisons.push(compare(&b, qm, &frames));
+    }
+
     // --- artifact models, when built ------------------------------------
     let digits = QModel::load(&artifacts_dir().join("weights/digits.json"));
     let jsc = QModel::load(&artifacts_dir().join("weights/jsc.json"));

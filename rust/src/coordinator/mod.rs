@@ -1131,6 +1131,7 @@ mod tests {
                 in_shape: [1, 1, 4],
                 out_shape: [1, 1, 3],
             }],
+            topology: vec![],
             test_vectors: vec![],
             qat_accuracy: 1.0,
         }

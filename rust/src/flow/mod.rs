@@ -9,8 +9,11 @@ pub mod ratio;
 pub mod schedule;
 
 pub use plan::{fold_plan, plan_all, plan_layer, PlannedLayer, UnitPlan};
-pub use rate::{analyze, fold_factor, layer_rate, pixel_period, RateAnalysis, RatedLayer};
+pub use rate::{
+    analyze, analyze_dag, fold_factor, layer_rate, pixel_period, RateAnalysis, RatedLayer,
+};
 pub use ratio::Ratio;
 pub use schedule::{
-    BatchPrediction, FoldedPrediction, ScheduleError, ScheduleModel, SchedulePrediction,
+    BatchPrediction, FoldedPrediction, MergeFifoStats, ScheduleError, ScheduleModel,
+    SchedulePrediction,
 };

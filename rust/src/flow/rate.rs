@@ -15,7 +15,7 @@
 //! rate equal to the lowest data rate of the two merged layers").
 
 use super::Ratio;
-use crate::model::{LayerKind, Model, ShapeError, ShapedLayer};
+use crate::model::{LayerKind, Model, NodeLink, ShapeError, ShapedLayer};
 
 /// A layer annotated with its resolved shapes and input/output data rates.
 #[derive(Debug, Clone)]
@@ -128,6 +128,53 @@ fn rate_block(
             // Section VI: downstream rate = min of the merged branch rates.
             cur.min(shortcut)
         }
+    }
+}
+
+/// Propagate Eq.-8 rates through an explicit DAG: `shaped[i]` is node
+/// `i`'s layer with resolved shapes, `links[i]` says which node (or the
+/// input) it reads and which node merges into it. The stored `r_out` is
+/// the raw Eq.-8 rate, exactly as [`analyze`] stores it; the Section VI
+/// min-of-branches clamp is applied where a downstream node *reads* a
+/// merged stream — so on chain links the two functions agree
+/// layer-for-layer, and on residual graphs this is the flat-graph
+/// counterpart of [`analyze`]'s recursive block walk.
+pub fn analyze_dag(
+    model_name: &str,
+    shaped: Vec<ShapedLayer>,
+    links: &[NodeLink],
+    r0: Ratio,
+) -> RateAnalysis {
+    assert_eq!(shaped.len(), links.len(), "shaped/links out of sync");
+    let mut layers: Vec<RatedLayer> = Vec::with_capacity(shaped.len());
+    // The rate of node j's stream after any merge clamp at j.
+    let mut merged_out: Vec<Ratio> = Vec::with_capacity(shaped.len());
+    let branch = |m: &[Ratio], s: Option<usize>| match s {
+        Some(j) => m[j],
+        None => r0,
+    };
+    for (i, sl) in shaped.into_iter().enumerate() {
+        let r_in = branch(&merged_out, links[i].src);
+        let d_in = match sl.layer.kind {
+            LayerKind::Dense => sl.input.features(),
+            _ => sl.input.d,
+        };
+        let r_out = layer_rate(d_in, sl.output.d, sl.layer.s, r_in);
+        let clamped = match links[i].merge {
+            Some(ml) => r_out.min(branch(&merged_out, ml.with)),
+            None => r_out,
+        };
+        merged_out.push(clamped);
+        layers.push(RatedLayer {
+            shaped: sl,
+            r_in,
+            r_out,
+        });
+    }
+    RateAnalysis {
+        model_name: model_name.to_string(),
+        r0,
+        layers,
     }
 }
 
@@ -259,6 +306,46 @@ mod tests {
         let next = &a.layers[i + 1];
         let body_last = &a.layers[i - 1];
         assert_eq!(next.r_in, body_last.r_out.min(proj.r_out));
+    }
+
+    #[test]
+    fn analyze_dag_agrees_with_block_walk() {
+        // On chains AND residual graphs, the flat-DAG propagation must
+        // reproduce the recursive block walk layer-for-layer.
+        for m in [
+            zoo::mobilenet_micro(),
+            zoo::running_example(),
+            zoo::resnet_micro(),
+            zoo::mobilenet_v2_micro(),
+            zoo::resnet18(),
+        ] {
+            let a = analyze(&m, None).unwrap();
+            let d = analyze_dag(
+                &m.name,
+                m.shapes().unwrap(),
+                &m.links().unwrap(),
+                Ratio::int(m.input.d as u64),
+            );
+            assert_eq!(a.layers.len(), d.layers.len(), "{}", m.name);
+            for (la, ld) in a.layers.iter().zip(&d.layers) {
+                assert_eq!(la.r_in, ld.r_in, "{}: {}", m.name, la.shaped.layer.name);
+                assert_eq!(la.r_out, ld.r_out, "{}: {}", m.name, la.shaped.layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn analyze_dag_merge_reader_gets_min_of_branches() {
+        let m = zoo::resnet_micro();
+        let d = analyze_dag(
+            &m.name,
+            m.shapes().unwrap(),
+            &m.links().unwrap(),
+            Ratio::int(1),
+        );
+        // ap (node 6) reads the r2 merge: min(r2b raw, r2p raw).
+        let want = d.layers[4].r_out.min(d.layers[5].r_out);
+        assert_eq!(d.layers[6].r_in, want);
     }
 
     #[test]

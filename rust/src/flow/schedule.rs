@@ -24,7 +24,7 @@
 //!   entirely.
 
 use super::{PlannedLayer, Ratio, UnitPlan};
-use crate::model::LayerKind;
+use crate::model::{LayerKind, NodeLink};
 
 /// Typed schedule-construction failure. Degenerate-but-reachable layer
 /// configurations (a window layer whose output collapses to zero pixels,
@@ -45,6 +45,9 @@ pub enum ScheduleError {
     /// The layer kind is not pipeline-simulated (pointwise layers lower
     /// through the dense path elsewhere).
     Unsupported { layer: String },
+    /// The dataflow links are malformed: wrong length, a forward
+    /// reference, or merged branches with different pixel counts.
+    BadTopology { what: String },
 }
 
 impl std::fmt::Display for ScheduleError {
@@ -61,6 +64,9 @@ impl std::fmt::Display for ScheduleError {
             ScheduleError::Unsupported { layer } => {
                 write!(f, "schedule: {layer}: pointwise layers are not pipeline-simulated")
             }
+            ScheduleError::BadTopology { what } => {
+                write!(f, "schedule: bad topology: {what}")
+            }
         }
     }
 }
@@ -73,6 +79,11 @@ impl std::error::Error for ScheduleError {}
 const LAT_KPU: u64 = 3;
 const LAT_PPU: u64 = 2;
 const LAT_FCU: u64 = 2;
+/// The residual merge adder stage: one cycle after both branch pixels
+/// are available (the slower branch arrives directly, the faster one
+/// from the delay-balancing skip FIFO). Public so the fused interpreter
+/// (`sim::pipeline::PipelineSim::run_interpreted`) models the same stage.
+pub const LAT_MERGE: u64 = 1;
 
 /// Value-free per-layer schedule program.
 #[derive(Debug, Clone)]
@@ -96,6 +107,11 @@ struct SLayer {
     /// Cycles per output pixel, d_l / r_l rounded up (unused by Dense).
     out_period: u64,
     kind: SKind,
+    /// Which node's output stream this layer consumes (`None` = input).
+    src: Option<usize>,
+    /// `Some(other)` when this node is a residual merge point: `other`'s
+    /// stream (`None` = input) is added in after the layer's own compute.
+    merge_with: Option<Option<usize>>,
 }
 
 /// Per-layer cycle statistics accumulated by a replay — field-for-field
@@ -111,6 +127,25 @@ pub struct CycleStats {
     pub utilization: f64,
 }
 
+/// Per-merge-point skip-FIFO trace extracted from an exact replay: the
+/// shortcut branch's pixel completion cycles (FIFO pushes), the merge
+/// layer's output completions (FIFO pops), and the resulting maximum
+/// occupancy — the minimum delay-balancing FIFO depth (`sim::fifo`) that
+/// never overflows and is never read empty.
+#[derive(Debug, Clone)]
+pub struct MergeFifoStats {
+    /// Flat index of the merging layer.
+    pub layer: usize,
+    /// The shortcut branch feeding the merge (`None` = pipeline input).
+    pub with: Option<usize>,
+    /// Completion cycle of each shortcut pixel, in stream order.
+    pub shortcut_arrivals: Vec<u64>,
+    /// Completion cycle of each merged output, in stream order.
+    pub merge_consumes: Vec<u64>,
+    /// Peak number of shortcut pixels buffered at once.
+    pub max_occupancy: usize,
+}
+
 /// Result of replaying `n` frames through the schedule.
 #[derive(Debug, Clone)]
 pub struct ScheduleResult {
@@ -120,6 +155,8 @@ pub struct ScheduleResult {
     pub total_cycles: u64,
     pub first_frame_latency: u64,
     pub cycles_per_frame: f64,
+    /// One entry per residual merge point (empty for chains).
+    pub merge_fifo: Vec<MergeFifoStats>,
 }
 
 /// Steady-state cycles/frame from per-frame completion cycles: frame 0 is
@@ -173,16 +210,80 @@ impl ScheduleModel {
         input_hw: (usize, usize),
         d0: usize,
     ) -> Result<ScheduleModel, ScheduleError> {
+        let links: Vec<NodeLink> = (0..plans.len()).map(NodeLink::chain).collect();
+        Self::with_links(plans, input_hw, d0, &links)
+    }
+
+    /// Lower a unit plan over an explicit dataflow topology: `links[i]`
+    /// names the node whose stream layer `i` consumes and, for residual
+    /// merge points, the shortcut branch added in after its own compute.
+    /// Chain links reproduce [`ScheduleModel::new`] exactly.
+    pub fn with_links(
+        plans: &[PlannedLayer],
+        input_hw: (usize, usize),
+        d0: usize,
+        links: &[NodeLink],
+    ) -> Result<ScheduleModel, ScheduleError> {
         if plans.is_empty() {
             return Err(ScheduleError::EmptyPlan);
+        }
+        if links.len() != plans.len() {
+            return Err(ScheduleError::BadTopology {
+                what: format!("{} links for {} layers", links.len(), plans.len()),
+            });
         }
         let r0 = plans[0].rated.r_in;
         if r0.is_zero() {
             return Err(ScheduleError::ZeroInputRate);
         }
         let mut layers = Vec::with_capacity(plans.len());
-        for plan in plans {
-            layers.push(lower_layer(plan)?);
+        for (i, plan) in plans.iter().enumerate() {
+            let mut sl = lower_layer(plan)?;
+            let link = &links[i];
+            if let Some(s) = link.src {
+                if s >= i {
+                    return Err(ScheduleError::BadTopology {
+                        what: format!("layer {i} reads non-earlier node {s}"),
+                    });
+                }
+            }
+            sl.src = link.src;
+            if let Some(m) = &link.merge {
+                if let Some(w) = m.with {
+                    if w >= i {
+                        return Err(ScheduleError::BadTopology {
+                            what: format!("layer {i} merges non-earlier node {w}"),
+                        });
+                    }
+                }
+                sl.merge_with = Some(m.with);
+            }
+            layers.push(sl);
+        }
+        // A merge adds streams element-wise, so both branches must emit
+        // the same number of pixels per frame.
+        let frame_pixels = input_hw.0 * input_hw.1;
+        let pixels_of = |j: Option<usize>, layers: &[SLayer]| -> usize {
+            match j {
+                None => frame_pixels,
+                Some(j) => match &layers[j].kind {
+                    SKind::Window { dep_idx, .. } => dep_idx.len(),
+                    SKind::Dense { .. } => 1,
+                },
+            }
+        };
+        for i in 0..layers.len() {
+            if let Some(w) = layers[i].merge_with {
+                let own = pixels_of(Some(i), &layers);
+                let other = pixels_of(w, &layers);
+                if own != other {
+                    return Err(ScheduleError::BadTopology {
+                        what: format!(
+                            "merge at layer {i}: {own} output pixels vs {other} on the shortcut"
+                        ),
+                    });
+                }
+            }
         }
         let first = &plans[0].rated.shaped.layer;
         let gap_pixels = if first.p > 0 {
@@ -192,7 +293,7 @@ impl ScheduleModel {
         };
         Ok(ScheduleModel {
             layers,
-            frame_pixels: input_hw.0 * input_hw.1,
+            frame_pixels,
             gap_pixels,
             c0: d0 as u64,
             r0,
@@ -227,7 +328,10 @@ impl ScheduleModel {
         let mut frame_final = 0u64;
         for (li, layer) in self.layers.iter().enumerate() {
             let (done, rest) = st.outs.split_at_mut(li);
-            let ins: &[u64] = if li == 0 { &st.src } else { &done[li - 1] };
+            let ins: &[u64] = match layer.src {
+                None => &st.src,
+                Some(j) => &done[j],
+            };
             let out = &mut rest[0];
             out.clear();
             match &layer.kind {
@@ -254,6 +358,23 @@ impl ScheduleModel {
                     st.prev_finish[li] = prev;
                 }
             }
+            // Residual merge epilogue: each merged output completes one
+            // adder cycle after both branch pixels are available. The
+            // shortcut pixel waits in the skip FIFO, so its arrival cycle
+            // is exactly its completion on the other branch; `prev_finish`
+            // deliberately stays pre-merge (the layer's own initiation
+            // cadence is unaffected by the downstream adder).
+            if let Some(w) = layer.merge_with {
+                let other: &[u64] = match w {
+                    None => &st.src,
+                    Some(j) => &done[j],
+                };
+                for (slot, &arr) in out.iter_mut().zip(other) {
+                    let merged = (*slot).max(arr) + LAT_MERGE;
+                    st.last[li] = st.last[li].max(merged);
+                    *slot = merged;
+                }
+            }
             // Construction rejects layers that emit no pixels
             // (`ScheduleError::NoOutputPixels`), so `out` is never empty.
             frame_final = out.last().copied().unwrap_or(frame_final);
@@ -267,8 +388,44 @@ impl ScheduleModel {
     pub fn run(&self, frames: usize) -> ScheduleResult {
         let mut st = self.start();
         let mut finishes = Vec::with_capacity(frames);
+        let mut fifo: Vec<MergeFifoStats> = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter_map(|(li, l)| {
+                l.merge_with.map(|w| MergeFifoStats {
+                    layer: li,
+                    with: w,
+                    shortcut_arrivals: Vec::new(),
+                    merge_consumes: Vec::new(),
+                    max_occupancy: 0,
+                })
+            })
+            .collect();
         for _ in 0..frames {
             finishes.push(self.step_frame(&mut st));
+            for f in &mut fifo {
+                let other: &[u64] = match f.with {
+                    None => &st.src,
+                    Some(j) => &st.outs[j],
+                };
+                f.shortcut_arrivals.extend_from_slice(other);
+                f.merge_consumes.extend_from_slice(&st.outs[f.layer]);
+            }
+        }
+        // Peak FIFO occupancy by two-pointer sweep: both streams are
+        // monotone (the initiation recurrence threads `prev_finish`
+        // across frames), and every merged output strictly postdates its
+        // shortcut arrival, so pixel p is still resident at its own
+        // arrival — occupancy is arrivals so far minus consumes so far.
+        for f in &mut fifo {
+            let mut consumed = 0usize;
+            for (p, &a) in f.shortcut_arrivals.iter().enumerate() {
+                while consumed < f.merge_consumes.len() && f.merge_consumes[consumed] <= a {
+                    consumed += 1;
+                }
+                f.max_occupancy = f.max_occupancy.max(p + 1 - consumed);
+            }
         }
         let stats = self.stats_of(&st);
         let total_cycles = finishes.last().copied().unwrap_or(0);
@@ -278,6 +435,7 @@ impl ScheduleModel {
             frame_finishes: finishes,
             stats,
             total_cycles,
+            merge_fifo: fifo,
         }
     }
 
@@ -410,6 +568,8 @@ fn lower_layer(plan: &PlannedLayer) -> Result<SLayer, ScheduleError> {
         latency,
         out_period,
         kind,
+        src: None,
+        merge_with: None,
     })
 }
 

@@ -405,11 +405,12 @@ fn lower_zoo_models(list: &str) -> Result<Vec<(String, PipelineSim)>, String> {
     let registry = ModelRegistry::new(names.len());
     let mut lowered = Vec::new();
     for name in &names {
-        let bundle = registry.get_or_lower(name, || {
-            let model = zoo::by_name(name)
-                .ok_or_else(|| format!("unknown zoo model '{name}' (see `cnn-flow list`)"))?;
-            QModel::synthesize(&model, model_seed(name))
-        });
+        // `names` only holds canonical zoo names resolved above, so the
+        // lookup cannot miss; synthesis errors keep their typed rendering
+        // (model, block index, reason) through the registry.
+        let model = zoo::by_name(name).expect("canonical zoo name");
+        let bundle =
+            registry.get_or_lower(name, || QModel::synthesize(&model, model_seed(name)));
         match bundle {
             Ok(b) => lowered.push(b),
             Err(e) => return Err(format!("{name}: {e}")),

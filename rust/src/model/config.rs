@@ -102,10 +102,12 @@ fn parse_block(j: &Json) -> Result<Block, ConfigError> {
             Json::Null => None,
             p => Some(parse_layer(p)?),
         };
+        let post_relu = j.get("post_relu").as_bool().unwrap_or(true);
         Ok(Block::Residual {
             name,
             body,
             projection,
+            post_relu,
         })
     } else {
         Ok(Block::Layer(parse_layer(j)?))
@@ -166,6 +168,7 @@ fn block_to_json(b: &Block) -> Json {
             name,
             body,
             projection,
+            post_relu,
         } => {
             let mut pairs: Vec<(&str, Json)> = vec![
                 ("type", "residual".into()),
@@ -175,6 +178,7 @@ fn block_to_json(b: &Block) -> Json {
             if let Some(p) = projection {
                 pairs.push(("projection", layer_to_json(p)));
             }
+            pairs.push(("post_relu", Json::Bool(*post_relu)));
             Json::obj(pairs)
         }
     }

@@ -178,6 +178,9 @@ pub enum Block {
         body: Vec<Block>,
         /// `None` = identity shortcut; `Some(conv1x1)` = projection.
         projection: Option<Layer>,
+        /// ReLU after the elementwise addition (ResNet style). MobileNetV2
+        /// bottlenecks merge linearly (`false`).
+        post_relu: bool,
     },
 }
 
@@ -301,6 +304,36 @@ pub fn layer_output_shape(layer: &Layer, input: Shape) -> Result<Shape, ShapeErr
     }
 }
 
+/// Where a residual addition folds another node's output into the node
+/// that carries it (part of [`NodeLink`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeLink {
+    /// The other branch merged into this node's output (`None` = the
+    /// model input).
+    pub with: Option<usize>,
+    /// ReLU after the addition (ResNet) vs linear merge (MobileNetV2).
+    pub post_relu: bool,
+}
+
+/// Dataflow link of one flat node, in [`Model::shapes`] order: which
+/// node's output it consumes (`None` = the model input) and, if it is the
+/// merge point of a residual block, which other node merges into it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeLink {
+    pub src: Option<usize>,
+    pub merge: Option<MergeLink>,
+}
+
+impl NodeLink {
+    /// A plain chain link: node `i` reads node `i - 1` (or the input).
+    pub fn chain(i: usize) -> Self {
+        NodeLink {
+            src: i.checked_sub(1),
+            merge: None,
+        }
+    }
+}
+
 /// A layer together with its resolved input/output shapes, produced by
 /// [`Model::shapes`]. `merge_of` marks the *last* layer of a residual body
 /// whose output is merged with the shortcut.
@@ -375,6 +408,80 @@ impl Model {
     pub fn layers(&self) -> Vec<&Layer> {
         self.blocks.iter().flat_map(|b| b.layers()).collect()
     }
+
+    /// Dataflow links of every flat node, parallel to [`Model::shapes`]:
+    /// each entry says which node the layer reads and, at residual merge
+    /// points, which other node is added in. Chains get
+    /// `[NodeLink::chain(0), NodeLink::chain(1), ...]`. Rejects the one
+    /// shape `shapes()` tolerates but single-merge dataflow cannot
+    /// express: an identity-shortcut block whose merge target already
+    /// carries a merge of its own.
+    pub fn links(&self) -> Result<Vec<NodeLink>, ShapeError> {
+        let mut out = Vec::new();
+        let mut cur = None;
+        for b in &self.blocks {
+            cur = link_block(b, cur, &mut out)?;
+        }
+        Ok(out)
+    }
+}
+
+fn link_block(
+    block: &Block,
+    entry: Option<usize>,
+    out: &mut Vec<NodeLink>,
+) -> Result<Option<usize>, ShapeError> {
+    match block {
+        Block::Layer(_) => {
+            out.push(NodeLink {
+                src: entry,
+                merge: None,
+            });
+            Ok(Some(out.len() - 1))
+        }
+        Block::Residual {
+            name,
+            body,
+            projection,
+            post_relu,
+        } => {
+            let mut cur = entry;
+            for b in body {
+                cur = link_block(b, cur, out)?;
+            }
+            match projection {
+                Some(_) => {
+                    // Projection node reads the block entry; the body's
+                    // last node merges into it.
+                    out.push(NodeLink {
+                        src: entry,
+                        merge: Some(MergeLink {
+                            with: cur,
+                            post_relu: *post_relu,
+                        }),
+                    });
+                    Ok(Some(out.len() - 1))
+                }
+                None => {
+                    if let Some(last) = cur {
+                        if last != entry.unwrap_or(usize::MAX) {
+                            if out[last].merge.is_some() {
+                                return Err(ShapeError::BadParam {
+                                    layer: name.clone(),
+                                    what: "identity merge target already merges".into(),
+                                });
+                            }
+                            out[last].merge = Some(MergeLink {
+                                with: entry,
+                                post_relu: *post_relu,
+                            });
+                        }
+                    }
+                    Ok(cur)
+                }
+            }
+        }
+    }
 }
 
 fn shape_block(
@@ -402,6 +509,7 @@ fn shape_block(
             name,
             body,
             projection,
+            ..
         } => {
             let mut cur = input;
             let body_start = out.len();
@@ -510,12 +618,25 @@ mod tests {
                 Block::Layer(Layer::conv("b", 3, 1, 1, 4).no_relu()),
             ],
             projection: None,
+            post_relu: true,
         });
         let shapes = m.shapes().unwrap();
         assert_eq!(shapes.len(), 2);
         assert!(shapes[1].merges);
         assert!(!shapes[0].merges);
         assert_eq!(m.output_shape().unwrap(), Shape { f: 8, d: 4 });
+        let links = m.links().unwrap();
+        assert_eq!(links[0], NodeLink { src: None, merge: None });
+        assert_eq!(
+            links[1],
+            NodeLink {
+                src: Some(0),
+                merge: Some(MergeLink {
+                    with: None,
+                    post_relu: true
+                })
+            }
+        );
     }
 
     #[test]
@@ -525,6 +646,7 @@ mod tests {
             name: "r1".into(),
             body: vec![Block::Layer(Layer::conv("a", 3, 2, 1, 8))],
             projection: None, // identity shortcut has wrong shape
+            post_relu: true,
         });
         assert!(matches!(
             m.shapes(),
@@ -542,11 +664,50 @@ mod tests {
                 Block::Layer(Layer::conv("b", 3, 1, 1, 8).no_relu()),
             ],
             projection: Some(Layer::conv("proj", 1, 2, 0, 8).no_relu()),
+            post_relu: true,
         });
         let shapes = m.shapes().unwrap();
         assert_eq!(shapes.len(), 3);
         assert!(shapes[1].merges); // last body layer
         assert!(shapes[2].merges); // projection
+        let links = m.links().unwrap();
+        assert_eq!(links.len(), 3);
+        // Projection reads the block entry (the model input here) and the
+        // body's last node merges into it.
+        assert_eq!(
+            links[2],
+            NodeLink {
+                src: None,
+                merge: Some(MergeLink {
+                    with: Some(1),
+                    post_relu: true
+                })
+            }
+        );
+        assert_eq!(links[1], NodeLink { src: Some(0), merge: None });
+    }
+
+    #[test]
+    fn links_reject_identity_merge_onto_merge() {
+        // Identity residual whose body ends in another identity residual:
+        // the outer merge has nowhere to attach.
+        let mut m = Model::new("res", 8, 4);
+        m.blocks.push(Block::Residual {
+            name: "outer".into(),
+            body: vec![Block::Residual {
+                name: "inner".into(),
+                body: vec![
+                    Block::Layer(Layer::conv("a", 3, 1, 1, 4)),
+                    Block::Layer(Layer::conv("b", 3, 1, 1, 4).no_relu()),
+                ],
+                projection: None,
+                post_relu: true,
+            }],
+            projection: None,
+            post_relu: true,
+        });
+        assert!(m.shapes().is_ok());
+        assert!(matches!(m.links(), Err(ShapeError::BadParam { .. })));
     }
 
     #[test]

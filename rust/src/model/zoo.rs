@@ -91,6 +91,7 @@ pub fn resnet18() -> Model {
                 name,
                 body,
                 projection,
+                post_relu: true,
             });
         }
     }
@@ -207,13 +208,86 @@ pub fn vgg_micro() -> Model {
     m
 }
 
-/// The serving zoo: every chain-topology config sized to run through the
-/// full compiled/batched serving path (registry lowering, shard groups,
-/// differential tests) in test time. These are the models
+/// ResNet-style residual CNN at serving scale (12x12x1 input): a stem
+/// conv, one identity-shortcut basic block, one stride-2 projection
+/// block, average pool and dense head. Both shortcut flavours of the
+/// paper's delay-balancing story (Section VI) in the smallest model the
+/// full serving path can replay in test time.
+pub fn resnet_micro() -> Model {
+    let mut m = Model::new("resnet_micro", 12, 1);
+    m.push(Layer::conv("c1", 3, 1, 1, 8));
+    m.blocks.push(Block::Residual {
+        name: "r1".into(),
+        body: vec![
+            Block::Layer(Layer::conv("r1a", 3, 1, 1, 8)),
+            Block::Layer(Layer::conv("r1b", 3, 1, 1, 8).no_relu()),
+        ],
+        projection: None,
+        post_relu: true,
+    });
+    m.blocks.push(Block::Residual {
+        name: "r2".into(),
+        body: vec![
+            Block::Layer(Layer::conv("r2a", 3, 2, 1, 16)),
+            Block::Layer(Layer::conv("r2b", 3, 1, 1, 16).no_relu()),
+        ],
+        projection: Some(Layer::conv("r2p", 1, 2, 0, 16).no_relu()),
+        post_relu: true,
+    });
+    m.push(Layer::avgpool("ap", 2, 2));
+    m.push(Layer::dense("fc", 10));
+    m
+}
+
+/// MobileNetV2-style inverted-residual stack at serving scale (12x12x1
+/// input): expand/depthwise/project bottlenecks whose linear (no ReLU)
+/// identity shortcuts merge without a post-add activation, plus a
+/// stride-2 non-residual bottleneck between them.
+pub fn mobilenet_v2_micro() -> Model {
+    let mut m = Model::new("mobilenet_v2_micro", 12, 1);
+    m.push(Layer::conv("c1", 3, 1, 1, 8));
+    m.blocks.push(Block::Residual {
+        name: "mb1".into(),
+        body: vec![
+            Block::Layer(Layer::pwconv("mb1e", 16)),
+            Block::Layer(Layer::dwconv("mb1d", 3, 1, 1)),
+            Block::Layer(Layer::pwconv("mb1p", 8).no_relu()),
+        ],
+        projection: None,
+        post_relu: false,
+    });
+    m.push(Layer::dwconv("dw2", 3, 2, 1));
+    m.push(Layer::pwconv("pw2", 16));
+    m.blocks.push(Block::Residual {
+        name: "mb2".into(),
+        body: vec![
+            Block::Layer(Layer::pwconv("mb2e", 24)),
+            Block::Layer(Layer::dwconv("mb2d", 3, 1, 1)),
+            Block::Layer(Layer::pwconv("mb2p", 16).no_relu()),
+        ],
+        projection: None,
+        post_relu: false,
+    });
+    m.push(Layer::avgpool("ap", 2, 2));
+    m.push(Layer::dense("fc", 10));
+    m
+}
+
+/// The serving zoo: every config sized to run through the full
+/// compiled/batched serving path (registry lowering, shard groups,
+/// differential tests) in test time — chains plus the residual
+/// [`resnet_micro`] / [`mobilenet_v2_micro`] DAGs. These are the models
 /// `serve --models a,b,c` accepts and `tests/prop_compiled.rs` pins
 /// bit-identical across interpreter / `execute` / `execute_batch`.
 pub fn serving_zoo() -> Vec<Model> {
-    vec![digits_cnn(), mobilenet_micro(), vgg_micro(), jsc_mlp()]
+    vec![
+        digits_cnn(),
+        mobilenet_micro(),
+        vgg_micro(),
+        jsc_mlp(),
+        resnet_micro(),
+        mobilenet_v2_micro(),
+    ]
 }
 
 /// Every model in the zoo, for CLI listing and sweep harnesses.
@@ -231,6 +305,8 @@ pub fn all_models() -> Vec<Model> {
         vgg_tiny(),
         mobilenet_micro(),
         vgg_micro(),
+        resnet_micro(),
+        mobilenet_v2_micro(),
     ]
 }
 
@@ -249,6 +325,8 @@ pub fn by_name(name: &str) -> Option<Model> {
         "vgg_tiny" | "vgg" => Some(vgg_tiny()),
         "mobilenet_micro" => Some(mobilenet_micro()),
         "vgg_micro" => Some(vgg_micro()),
+        "resnet_micro" => Some(resnet_micro()),
+        "mobilenet_v2_micro" | "mbv2_micro" => Some(mobilenet_v2_micro()),
         _ => None,
     }
 }
@@ -361,10 +439,10 @@ mod tests {
     }
 
     #[test]
-    fn serving_zoo_shapes_are_chain_and_small() {
+    fn serving_zoo_shapes_resolve_and_stay_small() {
         for m in serving_zoo() {
-            let shapes = m.shapes().unwrap();
-            assert!(shapes.iter().all(|sl| !sl.merges), "{}: chains only", m.name);
+            m.shapes().unwrap();
+            m.links().unwrap();
             assert!(
                 m.input.features() <= 16 * 16 * 3,
                 "{}: serving zoo must stay test-sized",
@@ -372,6 +450,45 @@ mod tests {
             );
             assert_eq!(m.output_shape().unwrap().f, 1, "{}", m.name);
         }
+        // Both residual flavours are represented in the serving zoo.
+        let has_merge = |m: &Model| m.links().unwrap().iter().any(|l| l.merge.is_some());
+        assert!(serving_zoo().iter().any(has_merge));
+        assert!(serving_zoo().iter().any(|m| !has_merge(m)));
+    }
+
+    #[test]
+    fn resnet_micro_progression() {
+        let m = resnet_micro();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+        let shapes = m.shapes().unwrap();
+        // c1, r1a, r1b, r2a, r2b, r2p, ap, fc
+        assert_eq!(shapes.len(), 8);
+        assert!(shapes[2].merges && shapes[5].merges);
+        assert_eq!((shapes[4].output.f, shapes[4].output.d), (6, 16));
+        let links = m.links().unwrap();
+        // Identity shortcut on r1b; r2b merges into the projection node.
+        assert_eq!(links[2].merge.unwrap().with, Some(0));
+        assert_eq!(links[5].src, Some(2));
+        assert_eq!(links[5].merge.unwrap().with, Some(4));
+        assert_eq!(links[6].src, Some(5));
+    }
+
+    #[test]
+    fn mobilenet_v2_micro_progression() {
+        let m = mobilenet_v2_micro();
+        assert_eq!(m.output_shape().unwrap(), Shape { f: 1, d: 10 });
+        let links = m.links().unwrap();
+        let merges: Vec<usize> = links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.merge.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(merges.len(), 2);
+        // Linear bottlenecks: no ReLU after either addition.
+        assert!(merges
+            .iter()
+            .all(|&i| !links[i].merge.unwrap().post_relu));
     }
 
     #[test]

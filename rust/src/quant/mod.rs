@@ -79,6 +79,25 @@ impl QKind {
     }
 }
 
+/// Dataflow of one flat node in a DAG-lowered [`QModel`], parallel to
+/// `layers`. `src == None` reads the model input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QTopo {
+    pub src: Option<usize>,
+    pub merge: Option<QMerge>,
+}
+
+/// Residual merge epilogue carried by the node at the merge point: the
+/// other branch's int8 output (`with`; `None` = the model input) is added
+/// elementwise to this node's requantized output, optionally ReLU'd, and
+/// requantized back onto the int8 grid by `m` (`0` = raw sum).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QMerge {
+    pub with: Option<usize>,
+    pub m: f32,
+    pub relu: bool,
+}
+
 /// A quantized model plus its exporter-provided test vectors.
 #[derive(Debug, Clone)]
 pub struct QModel {
@@ -86,6 +105,10 @@ pub struct QModel {
     pub input_shape: [usize; 3],
     pub input_scale: f32,
     pub layers: Vec<QLayer>,
+    /// Per-node dataflow for residual/branching graphs, parallel to
+    /// `layers`. Empty = plain chain (every exporter artifact and every
+    /// chain zoo config); see [`QModel::node_topology`].
+    pub topology: Vec<QTopo>,
     pub test_vectors: Vec<TestVector>,
     pub qat_accuracy: f64,
 }
@@ -167,6 +190,7 @@ impl QModel {
             input_shape,
             input_scale,
             layers,
+            topology: vec![],
             test_vectors,
             qat_accuracy: j.get("qat_accuracy").as_f64().unwrap_or(f64::NAN),
         })
@@ -244,31 +268,33 @@ impl QModel {
             input_shape: [f, f, 1],
             input_scale: 1.0,
             layers: vec![conv, pool, dense],
+            topology: vec![],
             test_vectors: vec![],
             qat_accuracy: 1.0,
         }
     }
 
     /// Synthesize a deterministic int8 [`QModel`] from a layer-graph
-    /// [`crate::model::Model`] (a zoo config), so any chain-topology
-    /// architecture becomes a first-class serving scenario without
-    /// artifacts: conv / pointwise / depthwise / pooling / dense layers
-    /// get seeded small-magnitude weights (same grid as
+    /// [`crate::model::Model`] (a zoo config), so any architecture —
+    /// chains and residual DAGs alike — becomes a first-class serving
+    /// scenario without artifacts: conv / pointwise / depthwise / pooling
+    /// / dense layers get seeded small-magnitude weights (same grid as
     /// [`QModel::synthetic`]), intermediate layers requantize back onto
     /// the int8 activation grid, and the final layer emits
     /// accumulator-scale outputs exactly like the exporter's models.
     ///
-    /// Residual topologies (ResNet) are rejected: the quantized pipeline
-    /// IR is a chain.
-    pub fn synthesize(model: &crate::model::Model, seed: u64) -> Result<QModel, String> {
+    /// Residual blocks lower to a DAG recorded in [`QModel::topology`]:
+    /// the node at each merge point carries a [`QMerge`] epilogue that
+    /// adds the shortcut branch (both operands int8), applies the block's
+    /// post-add ReLU, and requantizes the sum by `m = 0.5` — exactly
+    /// halving keeps the sum on the int8 grid without widening.
+    pub fn synthesize(
+        model: &crate::model::Model,
+        seed: u64,
+    ) -> Result<QModel, SynthesisError> {
         use crate::model::LayerKind;
-        let shaped = model.shapes().map_err(|e| e.to_string())?;
-        if shaped.iter().any(|sl| sl.merges) {
-            return Err(format!(
-                "{}: residual topologies cannot be synthesized into a QModel chain",
-                model.name
-            ));
-        }
+        let shaped = model.shapes().map_err(SynthesisError::Shape)?;
+        let links = model.links().map_err(SynthesisError::Shape)?;
         let mut rng = crate::util::Rng::new(seed);
         let mut wq = |n: usize| -> Vec<i64> {
             (0..n).map(|_| rng.int8() as i64 / 16).collect()
@@ -370,14 +396,78 @@ impl QModel {
             };
             layers.push(ql);
         }
+        // Residual dataflow: keep `topology` empty for chains so chain
+        // lowering stays byte-identical to the pre-DAG path.
+        let is_chain = links
+            .iter()
+            .enumerate()
+            .all(|(i, l)| l.merge.is_none() && l.src == i.checked_sub(1));
+        let topology = if is_chain {
+            vec![]
+        } else {
+            let mut topo = Vec::with_capacity(links.len());
+            for (i, l) in links.iter().enumerate() {
+                let merge = match l.merge {
+                    Some(ml) => {
+                        if i + 1 == n_layers {
+                            // The output layer skips requant (accumulator
+                            // scale), so its merge operands would sit on
+                            // different grids.
+                            return Err(SynthesisError::UnsupportedBlock {
+                                model: model.name.clone(),
+                                index: i,
+                                reason: "residual merge on the final layer \
+                                         (accumulator-scale output)"
+                                    .into(),
+                            });
+                        }
+                        Some(QMerge {
+                            with: ml.with,
+                            m: 0.5,
+                            relu: ml.post_relu,
+                        })
+                    }
+                    None => None,
+                };
+                topo.push(QTopo { src: l.src, merge });
+            }
+            topo
+        };
         Ok(QModel {
             name: model.name.clone(),
             input_shape: [model.input.f, model.input.f, model.input.d],
             input_scale: 1.0,
             layers,
+            topology,
             test_vectors: vec![],
             qat_accuracy: 1.0,
         })
+    }
+
+    /// True when the lowered graph is a plain chain (every node reads its
+    /// predecessor, no merges).
+    pub fn is_chain(&self) -> bool {
+        self.topology.is_empty()
+            || self
+                .topology
+                .iter()
+                .enumerate()
+                .all(|(i, t)| t.merge.is_none() && t.src == i.checked_sub(1))
+    }
+
+    /// Per-node dataflow, chain-filled when [`QModel::topology`] is
+    /// empty — the single graph view every execution tier lowers from.
+    pub fn node_topology(&self) -> Vec<QTopo> {
+        if self.topology.is_empty() {
+            (0..self.layers.len())
+                .map(|i| QTopo {
+                    src: i.checked_sub(1),
+                    merge: None,
+                })
+                .collect()
+        } else {
+            self.topology.clone()
+        }
     }
 
     /// Conv weight accessor: w[(u, v, cin, cout)].
@@ -449,6 +539,44 @@ impl QLayer {
             worst = worst.max(s.saturating_add(b));
         }
         worst
+    }
+}
+
+/// Typed lowering error for [`QModel::synthesize`]: shape/dataflow
+/// propagation failures keep their structured cause, and blocks the
+/// quantized IR cannot express name the offending flat node index — so
+/// registry and CLI callers fail loudly instead of swallowing a string.
+#[derive(Debug, PartialEq)]
+pub enum SynthesisError {
+    /// Shape or dataflow propagation failed (see [`crate::model::ShapeError`]).
+    Shape(crate::model::ShapeError),
+    /// A block at flat node `index` cannot be lowered.
+    UnsupportedBlock {
+        model: String,
+        index: usize,
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for SynthesisError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SynthesisError::Shape(e) => write!(f, "{e}"),
+            SynthesisError::UnsupportedBlock {
+                model,
+                index,
+                reason,
+            } => write!(f, "{model}: block {index}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for SynthesisError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SynthesisError::Shape(e) => Some(e),
+            SynthesisError::UnsupportedBlock { .. } => None,
+        }
     }
 }
 
@@ -619,9 +747,55 @@ mod tests {
     }
 
     #[test]
-    fn synthesize_rejects_residual_topologies() {
-        let err = QModel::synthesize(&crate::model::zoo::resnet18(), 1).unwrap_err();
-        assert!(err.contains("residual"), "{err}");
+    fn synthesize_lowers_residual_topologies_to_a_dag() {
+        let q = QModel::synthesize(&crate::model::zoo::resnet_micro(), 1).unwrap();
+        assert!(!q.is_chain());
+        assert_eq!(q.topology.len(), q.layers.len());
+        // r1b merges the identity shortcut from c1 (node 0), ReLU'd.
+        let t = q.topology[2];
+        assert_eq!(t.src, Some(1));
+        let mg = t.merge.unwrap();
+        assert_eq!(mg.with, Some(0));
+        assert_eq!(mg.m, 0.5);
+        assert!(mg.relu);
+        // Projection node r2p reads the block entry, merges r2b.
+        let tp = q.topology[5];
+        assert_eq!(tp.src, Some(2));
+        assert_eq!(tp.merge.unwrap().with, Some(4));
+        // Merge operands are intermediate nodes: both requantize.
+        assert!(q.layers[2].m != 0.0 && q.layers[5].m != 0.0);
+        // MobileNetV2 merges are linear (no post-add ReLU).
+        let q2 = QModel::synthesize(&crate::model::zoo::mobilenet_v2_micro(), 1).unwrap();
+        assert!(q2
+            .topology
+            .iter()
+            .filter_map(|t| t.merge)
+            .all(|m| !m.relu));
+        // Chains keep an empty topology — byte-identical to the old path.
+        let qc = QModel::synthesize(&crate::model::zoo::digits_cnn(), 1).unwrap();
+        assert!(qc.topology.is_empty() && qc.is_chain());
+        assert_eq!(qc.node_topology().len(), qc.layers.len());
+    }
+
+    #[test]
+    fn synthesize_rejects_final_layer_merge_with_block_index() {
+        use crate::model::{Block, Layer, Model};
+        let mut m = Model::new("tail_res", 8, 4);
+        m.blocks.push(Block::Residual {
+            name: "r".into(),
+            body: vec![
+                Block::Layer(Layer::conv("a", 3, 1, 1, 4)),
+                Block::Layer(Layer::conv("b", 3, 1, 1, 4).no_relu()),
+            ],
+            projection: None,
+            post_relu: true,
+        });
+        let err = QModel::synthesize(&m, 1).unwrap_err();
+        match &err {
+            SynthesisError::UnsupportedBlock { index, .. } => assert_eq!(*index, 1),
+            other => panic!("expected UnsupportedBlock, got {other:?}"),
+        }
+        assert!(err.to_string().contains("block 1"), "{err}");
     }
 
     #[test]

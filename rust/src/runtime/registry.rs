@@ -109,10 +109,15 @@ impl ModelRegistry {
     /// first request (or after an eviction). Concurrent callers for the
     /// same id are single-flight: exactly one runs `build` + lowering,
     /// everyone receives the same [`Arc`]. A `build` or lowering error is
-    /// returned to the caller and nothing is cached.
-    pub fn get_or_lower<F>(&self, id: &str, build: F) -> Result<Arc<LoweredModel>, String>
+    /// returned to the caller and nothing is cached. `build` may return
+    /// any displayable error — notably the typed
+    /// [`crate::quant::SynthesisError`] from `QModel::synthesize`, whose
+    /// rendering (model, block index, reason) survives into the serving
+    /// error path verbatim.
+    pub fn get_or_lower<F, E>(&self, id: &str, build: F) -> Result<Arc<LoweredModel>, String>
     where
-        F: FnOnce() -> Result<QModel, String>,
+        F: FnOnce() -> Result<QModel, E>,
+        E: std::fmt::Display,
     {
         let mut inner = self.lock();
         inner.tick += 1;
@@ -130,7 +135,7 @@ impl ModelRegistry {
         // replace the map values with per-id in-flight slots (e.g.
         // Arc<OnceLock>) so the map lock is only held for lookup/insert.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let qmodel = build()?;
+        let qmodel = build().map_err(|e| e.to_string())?;
         let pipeline = PipelineSim::new(qmodel.clone(), None)?;
         let lowered = Arc::new(LoweredModel { qmodel, pipeline });
         if inner.map.len() >= self.capacity {
@@ -220,7 +225,7 @@ mod tests {
         let reg = ModelRegistry::new(4);
         let a = reg.get_or_lower("a", || Ok(qm(1))).unwrap();
         let b = reg
-            .get_or_lower("a", || Err("must not re-lower a cached model".into()))
+            .get_or_lower("a", || Err("must not re-lower a cached model".to_string()))
             .unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         let s = reg.stats();
@@ -244,7 +249,7 @@ mod tests {
     #[test]
     fn build_error_caches_nothing() {
         let reg = ModelRegistry::new(2);
-        let err = reg.get_or_lower("bad", || Err("nope".into())).unwrap_err();
+        let err = reg.get_or_lower("bad", || Err("nope".to_string())).unwrap_err();
         assert_eq!(err, "nope");
         assert!(!reg.contains("bad"));
         assert_eq!(reg.stats().misses, 1);
@@ -293,15 +298,15 @@ mod tests {
             reg.get_or_lower(id, || Ok(qm(i as u64))).unwrap();
         }
         // Recency now a < b < c. Touch a then b: recency c < a < b.
-        reg.get_or_lower("a", || Err("a is cached".into())).unwrap();
-        reg.get_or_lower("b", || Err("b is cached".into())).unwrap();
+        reg.get_or_lower("a", || Err("a is cached".to_string())).unwrap();
+        reg.get_or_lower("b", || Err("b is cached".to_string())).unwrap();
         // Insert d: the victim must be c (oldest touch), not a (oldest
         // insert).
         reg.get_or_lower("d", || Ok(qm(3))).unwrap();
         assert!(!reg.contains("c"), "c was LRU after a and b were re-hit");
         assert!(reg.contains("a") && reg.contains("b") && reg.contains("d"));
         // Touch a again: recency b < d < a. Insert e: victim is b.
-        reg.get_or_lower("a", || Err("a is cached".into())).unwrap();
+        reg.get_or_lower("a", || Err("a is cached".to_string())).unwrap();
         reg.get_or_lower("e", || Ok(qm(4))).unwrap();
         assert!(!reg.contains("b"), "b was LRU after a's second re-hit");
         assert!(reg.contains("a") && reg.contains("d") && reg.contains("e"));

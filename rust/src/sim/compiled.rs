@@ -148,6 +148,21 @@ enum COp {
     Dense,
 }
 
+/// Residual merge epilogue lowered onto the node at the merge point: the
+/// shortcut branch's stream (parked in `other_buf` — the software form of
+/// the paper's delay-balancing skip FIFO) is added elementwise to this
+/// layer's output, optionally ReLU'd, and requantized by `m`.
+#[derive(Debug, Clone, Copy)]
+struct CMerge {
+    /// The shortcut node merged in (`None` = the program input).
+    with: Option<usize>,
+    /// Scratch-pool buffer holding the shortcut branch's output.
+    other_buf: usize,
+    /// `Some(m)` = requantize the merged sum; `None` = raw sum (m == 0).
+    m: Option<f32>,
+    relu: bool,
+}
+
 #[derive(Debug, Clone)]
 struct CLayer<T> {
     name: String,
@@ -165,6 +180,14 @@ struct CLayer<T> {
     /// `Some(m)` = requantize to int8 after ReLU; `None` = emit
     /// accumulator-scale values (the final layer, or m == 0).
     m: Option<f32>,
+    /// Which node's output this layer consumes (`None` = program input).
+    src: Option<usize>,
+    /// Scratch-pool buffer the source value lives in.
+    in_buf: usize,
+    /// Scratch-pool buffer this layer's output lands in.
+    out_buf: usize,
+    /// Residual merge epilogue, if this node is a merge point.
+    merge: Option<CMerge>,
 }
 
 #[derive(Debug, Clone)]
@@ -173,6 +196,13 @@ struct Program<T> {
     in_len: usize,
     out_len: usize,
     buf_len: usize,
+    /// Scratch buffers the liveness allocator assigned (2 for chains —
+    /// the classic ping-pong; +1 per concurrently-live shortcut).
+    pool: usize,
+    /// Buffer the input frame is written to before layer 0 runs.
+    in_buf: usize,
+    /// Buffer holding the final layer's output after a traversal.
+    out_buf: usize,
 }
 
 /// A lowered program plus its reusable execution scratch. `Clone + Send`
@@ -183,14 +213,15 @@ struct Program<T> {
 #[derive(Debug, Clone)]
 struct Engine<T> {
     prog: Arc<Program<T>>,
-    ping: Vec<T>,
-    pong: Vec<T>,
+    /// Scratch pool (`prog.pool` buffers of `prog.buf_len`): chains use
+    /// it as the classic ping-pong pair; residual graphs park each live
+    /// shortcut stream in its own buffer (the software skip FIFO).
+    bufs: Vec<Vec<T>>,
     acc: Vec<T>,
     out: Vec<i64>,
-    /// Lane-interleaved ping-pong scratch for the batched tier; grown on
+    /// Lane-interleaved scratch pool for the batched tier; grown on
     /// first use, then reused across batches.
-    bping: Vec<T>,
-    bpong: Vec<T>,
+    bbufs: Vec<Vec<T>>,
 }
 
 #[derive(Debug, Clone)]
@@ -292,14 +323,16 @@ impl CompiledPipeline {
 }
 
 /// Exact worst-case bound analysis: propagate the maximum possible
-/// activation magnitude layer by layer (requantized layers reset it to
-/// the int8 grid) and check every accumulator fits `i32`. Saturating
+/// activation magnitude node by node through the dataflow graph
+/// (requantized nodes reset it to the int8 grid; residual merges add the
+/// two branch bounds) and check every accumulator fits `i32`. Saturating
 /// `i128` arithmetic, so pathological non-requantized chains simply land
 /// on the wide path. Also forces the wide path when a max-pool window can
 /// be empty (the interpreter's `i64::MIN` seed would then be observable).
 fn narrow_safe(qm: &QModel) -> Result<bool, String> {
     const NARROW_LIMIT: i128 = i32::MAX as i128;
-    let mut in_bound: i128 = QMAX as i128;
+    let topo = qm.node_topology();
+    let mut bounds: Vec<i128> = Vec::with_capacity(qm.layers.len());
     let mut narrow = true;
     let n = qm.layers.len();
     for (idx, ql) in qm.layers.iter().enumerate() {
@@ -319,15 +352,31 @@ fn narrow_safe(qm: &QModel) -> Result<bool, String> {
                 narrow = false;
             }
         }
+        let in_bound = match topo.get(idx).and_then(|t| t.src) {
+            Some(j) if j < idx => bounds[j],
+            _ => QMAX as i128,
+        };
         let acc_bound = ql.acc_bound(in_bound);
         if acc_bound > NARROW_LIMIT {
             narrow = false;
         }
-        in_bound = if ql.fused_requant(last).is_some() {
+        let mut out_bound = if ql.fused_requant(last).is_some() {
             QMAX as i128
         } else {
             acc_bound
         };
+        if let Some(mg) = topo.get(idx).and_then(|t| t.merge) {
+            let other = match mg.with {
+                Some(j) if j < idx => bounds[j],
+                _ => QMAX as i128,
+            };
+            let merged = out_bound.saturating_add(other);
+            if merged > NARROW_LIMIT {
+                narrow = false;
+            }
+            out_bound = if mg.m != 0.0 { QMAX as i128 } else { merged };
+        }
+        bounds.push(out_bound);
     }
     Ok(narrow)
 }
@@ -358,12 +407,10 @@ impl<T: Cell> Engine<T> {
     fn build(qm: &QModel) -> Result<Engine<T>, String> {
         let prog = lower_program::<T>(qm)?;
         Ok(Engine {
-            ping: vec![T::ZERO; prog.buf_len],
-            pong: vec![T::ZERO; prog.buf_len],
+            bufs: vec![vec![T::ZERO; prog.buf_len]; prog.pool],
             acc: Vec::new(),
             out: Vec::new(),
-            bping: Vec::new(),
-            bpong: Vec::new(),
+            bbufs: Vec::new(),
             prog: Arc::new(prog),
         })
     }
@@ -378,29 +425,35 @@ impl<T: Cell> Engine<T> {
     fn execute_unchecked(&mut self, frame: &[i64]) -> Result<&[i64], String> {
         let Engine {
             prog,
-            ping,
-            pong,
+            bufs,
             acc,
             out,
             ..
         } = self;
-        for (slot, &v) in ping.iter_mut().zip(frame) {
+        for (slot, &v) in bufs[prog.in_buf].iter_mut().zip(frame) {
             *slot = T::from_i64(v);
         }
-        let mut src_is_ping = true;
         for layer in &prog.layers {
-            if src_is_ping {
-                run_layer(layer, &ping[..layer.in_len], &mut pong[..layer.out_len], acc);
-            } else {
-                run_layer(layer, &pong[..layer.in_len], &mut ping[..layer.out_len], acc);
+            // The allocator guarantees out_buf aliases neither the source
+            // nor the shortcut buffer, so taking it out never hides data
+            // the layer still reads.
+            let mut dst = std::mem::take(&mut bufs[layer.out_buf]);
+            run_layer(
+                layer,
+                &bufs[layer.in_buf][..layer.in_len],
+                &mut dst[..layer.out_len],
+                acc,
+            );
+            if let Some(mg) = &layer.merge {
+                apply_merge(
+                    mg,
+                    &bufs[mg.other_buf][..layer.out_len],
+                    &mut dst[..layer.out_len],
+                );
             }
-            src_is_ping = !src_is_ping;
+            bufs[layer.out_buf] = dst;
         }
-        let res: &[T] = if src_is_ping {
-            &ping[..prog.out_len]
-        } else {
-            &pong[..prog.out_len]
-        };
+        let res: &[T] = &bufs[prog.out_buf][..prog.out_len];
         out.clear();
         out.extend(res.iter().map(|v| v.to_i64()));
         Ok(out.as_slice())
@@ -430,41 +483,39 @@ impl<T: Cell> Engine<T> {
         // Lane stride rounded up to LANES so every tile can slice a full
         // chunk; pad lanes are never read (tiles loop to their length).
         let bp = b.div_ceil(LANES) * LANES;
-        let Engine { prog, bping, bpong, .. } = self;
-        bping.resize(prog.buf_len * bp, T::ZERO);
-        bpong.resize(prog.buf_len * bp, T::ZERO);
+        let Engine { prog, bbufs, .. } = self;
+        bbufs.resize(prog.pool, Vec::new());
+        for bbuf in bbufs.iter_mut() {
+            bbuf.resize(prog.buf_len * bp, T::ZERO);
+        }
         // Transpose in: position-major, lane-minor interleave.
         for (lane, f) in frames.iter().enumerate() {
             for (pos, &v) in f.iter().enumerate() {
-                bping[pos * bp + lane] = T::from_i64(v);
+                bbufs[prog.in_buf][pos * bp + lane] = T::from_i64(v);
             }
         }
-        let mut src_is_ping = true;
         for layer in &prog.layers {
-            if src_is_ping {
-                run_layer_batch(
-                    layer,
-                    &bping[..layer.in_len * bp],
-                    &mut bpong[..layer.out_len * bp],
-                    b,
-                    bp,
-                );
-            } else {
-                run_layer_batch(
-                    layer,
-                    &bpong[..layer.in_len * bp],
-                    &mut bping[..layer.out_len * bp],
+            let mut dst = std::mem::take(&mut bbufs[layer.out_buf]);
+            run_layer_batch(
+                layer,
+                &bbufs[layer.in_buf][..layer.in_len * bp],
+                &mut dst[..layer.out_len * bp],
+                b,
+                bp,
+            );
+            if let Some(mg) = &layer.merge {
+                apply_merge_batch(
+                    mg,
+                    &bbufs[mg.other_buf],
+                    &mut dst,
+                    layer.out_len,
                     b,
                     bp,
                 );
             }
-            src_is_ping = !src_is_ping;
+            bbufs[layer.out_buf] = dst;
         }
-        let res: &[T] = if src_is_ping {
-            &bping[..prog.out_len * bp]
-        } else {
-            &bpong[..prog.out_len * bp]
-        };
+        let res: &[T] = &bbufs[prog.out_buf][..prog.out_len * bp];
         let mut outs = vec![Vec::with_capacity(prog.out_len); b];
         for pos in 0..prog.out_len {
             let lanes = &res[pos * bp..pos * bp + b];
@@ -491,6 +542,40 @@ fn finalize<T: Cell>(layer: &CLayer<T>, acc: &[T], dst: &mut [T]) {
                 *d = if layer.relu && a < T::ZERO { T::ZERO } else { a };
             }
         }
+    }
+}
+
+/// Residual merge epilogue, scalar path: elementwise sum of the layer's
+/// finished output and the shortcut stream, then the optional ReLU and
+/// requantization — the exact interpreter order (sum → ReLU → requant).
+fn apply_merge<T: Cell>(mg: &CMerge, other: &[T], dst: &mut [T]) {
+    for (d, &o) in dst.iter_mut().zip(other) {
+        let mut s = *d;
+        s += o;
+        if mg.relu && s < T::ZERO {
+            s = T::ZERO;
+        }
+        *d = match mg.m {
+            Some(m) => T::from_i64(requant(s.to_i64(), m)),
+            None => s,
+        };
+    }
+}
+
+/// Residual merge epilogue over a lane-interleaved batch buffer: the
+/// scalar [`apply_merge`] applied to lanes `0..b` of every output
+/// position (pad lanes hold stale values and must stay untouched).
+fn apply_merge_batch<T: Cell>(
+    mg: &CMerge,
+    other: &[T],
+    dst: &mut [T],
+    out_len: usize,
+    b: usize,
+    bp: usize,
+) {
+    for pos in 0..out_len {
+        let base = pos * bp;
+        apply_merge(mg, &other[base..base + b], &mut dst[base..base + b]);
     }
 }
 
@@ -705,23 +790,60 @@ fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
     if qm.layers.is_empty() {
         return Err("compile: model has no layers".into());
     }
+    let n = qm.layers.len();
+    let topo = qm.node_topology();
+    if topo.len() != n {
+        return Err(format!(
+            "compile: {}: topology has {} nodes for {n} layers",
+            qm.name,
+            topo.len()
+        ));
+    }
     let [h0, w0, c0] = qm.input_shape;
     let in_len = h0.max(1) * w0.max(1) * c0;
-    let mut cur_len = in_len;
+    let mut out_lens: Vec<usize> = Vec::with_capacity(n);
     let mut buf_len = in_len;
-    let mut layers = Vec::with_capacity(qm.layers.len());
-    let n = qm.layers.len();
+    let mut layers = Vec::with_capacity(n);
     for (idx, ql) in qm.layers.iter().enumerate() {
         let last = idx + 1 == n;
         let [h_in, w_in, c_in] = ql.in_shape;
         let [h_out, w_out, c_out] = ql.out_shape;
         let lin = h_in.max(1) * w_in.max(1) * c_in;
         let lout = h_out.max(1) * w_out.max(1) * c_out;
-        if lin != cur_len {
+        // Resolve the upstream value: a named earlier node, or the input.
+        let src_len = match topo[idx].src {
+            None => in_len,
+            Some(j) if j < idx => out_lens[j],
+            Some(j) => {
+                return Err(format!(
+                    "compile: {}: reads non-earlier node {j}",
+                    ql.name
+                ));
+            }
+        };
+        if lin != src_len {
             return Err(format!(
-                "compile: {}: input len {lin} != upstream {cur_len}",
+                "compile: {}: input len {lin} != upstream {src_len}",
                 ql.name
             ));
+        }
+        if let Some(mg) = &topo[idx].merge {
+            let other_len = match mg.with {
+                None => in_len,
+                Some(j) if j < idx => out_lens[j],
+                Some(j) => {
+                    return Err(format!(
+                        "compile: {}: merges non-earlier node {j}",
+                        ql.name
+                    ));
+                }
+            };
+            if other_len != lout {
+                return Err(format!(
+                    "compile: {}: merge branch len {other_len} != output {lout}",
+                    ql.name
+                ));
+            }
         }
         let m = ql.fused_requant(last);
         let layer = match ql.kind {
@@ -756,6 +878,10 @@ fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
                     bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
                     relu: ql.relu,
                     m,
+                    src: topo[idx].src,
+                    in_buf: 0,
+                    out_buf: 0,
+                    merge: None,
                 }
             }
             QKind::Conv => {
@@ -781,6 +907,10 @@ fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
                     bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
                     relu: ql.relu,
                     m,
+                    src: topo[idx].src,
+                    in_buf: 0,
+                    out_buf: 0,
+                    merge: None,
                 }
             }
             QKind::DwConv | QKind::AvgPool => {
@@ -812,6 +942,10 @@ fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
                     bias: ql.b_q.iter().map(|&b| T::from_i64(b)).collect(),
                     relu: ql.relu,
                     m,
+                    src: topo[idx].src,
+                    in_buf: 0,
+                    out_buf: 0,
+                    merge: None,
                 }
             }
             QKind::MaxPool => {
@@ -861,18 +995,81 @@ fn lower_program<T: Cell>(qm: &QModel) -> Result<Program<T>, String> {
                     bias: Vec::new(),
                     relu: false,
                     m: None,
+                    src: topo[idx].src,
+                    in_buf: 0,
+                    out_buf: 0,
+                    merge: None,
                 }
             }
         };
+        let mut layer = layer;
+        if let Some(mg) = &topo[idx].merge {
+            layer.merge = Some(CMerge {
+                with: mg.with,
+                other_buf: 0, // patched by the allocator below
+                m: if mg.m != 0.0 { Some(mg.m) } else { None },
+                relu: mg.relu,
+            });
+        }
         buf_len = buf_len.max(lout);
-        cur_len = lout;
+        out_lens.push(lout);
         layers.push(layer);
+    }
+    // Liveness-driven scratch allocation. Value v: 0 = the program input,
+    // i + 1 = node i's output. A value's buffer is recycled right after
+    // its last reader runs; a node's output buffer is drawn from the free
+    // stack only after its source and shortcut buffers are resolved, so
+    // it can never alias either. Chains degenerate to the classic
+    // two-buffer ping-pong; each concurrently-live residual shortcut
+    // holds one extra buffer — the software skip FIFO.
+    let n_vals = n + 1;
+    let mut last_use: Vec<usize> = (0..n_vals).map(|v| v.saturating_sub(1)).collect();
+    last_use[n] = n; // the final output outlives every node
+    for (i, t) in topo.iter().enumerate() {
+        let sv = t.src.map_or(0, |j| j + 1);
+        last_use[sv] = last_use[sv].max(i);
+        if let Some(mg) = &t.merge {
+            let ov = mg.with.map_or(0, |j| j + 1);
+            last_use[ov] = last_use[ov].max(i);
+        }
+    }
+    let mut buf_of = vec![usize::MAX; n_vals];
+    let mut free: Vec<usize> = Vec::new();
+    let mut pool = 0usize;
+    buf_of[0] = {
+        pool += 1;
+        pool - 1
+    };
+    for i in 0..n {
+        let in_b = buf_of[topo[i].src.map_or(0, |j| j + 1)];
+        let other_b = topo[i]
+            .merge
+            .as_ref()
+            .map(|mg| buf_of[mg.with.map_or(0, |j| j + 1)]);
+        let out_b = free.pop().unwrap_or_else(|| {
+            pool += 1;
+            pool - 1
+        });
+        buf_of[i + 1] = out_b;
+        layers[i].in_buf = in_b;
+        layers[i].out_buf = out_b;
+        if let Some(cm) = &mut layers[i].merge {
+            cm.other_buf = other_b.expect("merge without topology entry");
+        }
+        for v in 0..n_vals {
+            if v != n && last_use[v] == i && buf_of[v] != usize::MAX {
+                free.push(buf_of[v]);
+            }
+        }
     }
     Ok(Program {
         layers,
         in_len,
-        out_len: cur_len,
+        out_len: *out_lens.last().expect("non-empty model"),
         buf_len,
+        pool,
+        in_buf: buf_of[0],
+        out_buf: buf_of[n],
     })
 }
 
@@ -989,6 +1186,19 @@ fn is_pointwise<T: Cell>(l: &CLayer<T>) -> bool {
         })
 }
 
+/// How many layers read node `i`'s output, counting both straight-line
+/// sources and residual-merge shortcuts. Fusion across a step boundary is
+/// only sound when the produced value has exactly one reader: a fused
+/// step never materialises the intermediate map.
+fn consumer_count<T: Cell>(prog: &Program<T>, node: usize) -> usize {
+    prog.layers
+        .iter()
+        .filter(|l| {
+            l.src == Some(node) || matches!(&l.merge, Some(m) if m.with == Some(node))
+        })
+        .count()
+}
+
 /// The folding pass: walk the lowered program with its per-layer Eq.-8
 /// fold factors and decide, per layer, which kernel runs it — fusing
 /// consecutive low-rate layers into single-traversal steps and routing
@@ -1019,7 +1229,16 @@ fn plan_folding<T: Cell>(
     while i < n {
         let l = &prog.layers[i];
         let window = matches!(l.op, COp::Conv | COp::Depthwise | COp::MaxPool);
-        if folds[i] > 1 && window && l.c_out > 0 && i + 1 < n {
+        // Fusing skips the intermediate buffer, so the pair must be a
+        // pure chain link: adjacent in dataflow (not just index order),
+        // with no residual merge on either side and no shortcut tapping
+        // the intermediate value.
+        let fusable = i + 1 < n
+            && prog.layers[i + 1].src == Some(i)
+            && l.merge.is_none()
+            && prog.layers[i + 1].merge.is_none()
+            && consumer_count(prog, i) == 1;
+        if folds[i] > 1 && window && l.c_out > 0 && fusable {
             let next = &prog.layers[i + 1];
             if folds[i + 1] > 1
                 && is_pointwise(next)
@@ -1516,6 +1735,15 @@ fn run_step_batch<T: Cell>(
     }
 }
 
+/// First and last program layer of a folded step: the step reads the
+/// first layer's input buffer and writes the last layer's output buffer.
+fn step_io(step: FStep) -> (usize, usize) {
+    match step {
+        FStep::Single { li, .. } => (li, li),
+        FStep::FusedPw { a, b } | FStep::FusedDense { a, b } => (a, b),
+    }
+}
+
 /// A folded program plus its reusable execution scratch; the same
 /// clone-shares-program structure as [`Engine`].
 #[derive(Debug, Clone)]
@@ -1523,14 +1751,14 @@ struct FoldedEngine<T> {
     prog: Arc<Program<T>>,
     steps: Arc<Vec<FStep>>,
     table: Arc<Vec<KernelChoice>>,
-    ping: Vec<T>,
-    pong: Vec<T>,
+    bufs: Vec<Vec<T>>,
+    tmp: Vec<T>,
     acc: Vec<T>,
     pacc: Vec<T>,
     mid: Vec<T>,
     out: Vec<i64>,
-    bping: Vec<T>,
-    bpong: Vec<T>,
+    bbufs: Vec<Vec<T>>,
+    btmp: Vec<T>,
     bmid: Vec<T>,
     bacc: Vec<T>,
 }
@@ -1540,14 +1768,14 @@ impl<T: Cell> FoldedEngine<T> {
         let prog = lower_program::<T>(qm)?;
         let (steps, table) = plan_folding(&prog, folds)?;
         Ok(FoldedEngine {
-            ping: vec![T::ZERO; prog.buf_len],
-            pong: vec![T::ZERO; prog.buf_len],
+            bufs: vec![vec![T::ZERO; prog.buf_len]; prog.pool],
+            tmp: vec![T::ZERO; prog.buf_len],
             acc: Vec::new(),
             pacc: Vec::new(),
             mid: Vec::new(),
             out: Vec::new(),
-            bping: Vec::new(),
-            bpong: Vec::new(),
+            bbufs: Vec::new(),
+            btmp: Vec::new(),
             bmid: Vec::new(),
             bacc: Vec::new(),
             prog: Arc::new(prog),
@@ -1565,31 +1793,38 @@ impl<T: Cell> FoldedEngine<T> {
         let FoldedEngine {
             prog,
             steps,
-            ping,
-            pong,
+            bufs,
+            tmp,
             acc,
             pacc,
             mid,
             out,
             ..
         } = self;
-        for (slot, &v) in ping.iter_mut().zip(frame) {
+        for (slot, &v) in bufs[prog.in_buf].iter_mut().zip(frame) {
             *slot = T::from_i64(v);
         }
-        let mut src_is_ping = true;
         for &step in steps.iter() {
-            if src_is_ping {
-                run_step(prog, step, ping, pong, acc, pacc, mid);
+            let (first, last) = step_io(step);
+            let in_b = prog.layers[first].in_buf;
+            let out_b = prog.layers[last].out_buf;
+            if let FStep::Single { .. } = step {
+                let mut dst = std::mem::take(&mut bufs[out_b]);
+                run_step(prog, step, &bufs[in_b], &mut dst, acc, pacc, mid);
+                if let Some(mg) = &prog.layers[last].merge {
+                    let ol = prog.layers[last].out_len;
+                    apply_merge(mg, &bufs[mg.other_buf][..ol], &mut dst[..ol]);
+                }
+                bufs[out_b] = dst;
             } else {
-                run_step(prog, step, pong, ping, acc, pacc, mid);
+                // Fused steps bypass the intermediate buffer, so the
+                // allocator's recycling may alias `out_b` with `in_b`;
+                // run into the spare buffer and swap it in.
+                run_step(prog, step, &bufs[in_b], tmp, acc, pacc, mid);
+                std::mem::swap(&mut bufs[out_b], tmp);
             }
-            src_is_ping = !src_is_ping;
         }
-        let res: &[T] = if src_is_ping {
-            &ping[..prog.out_len]
-        } else {
-            &pong[..prog.out_len]
-        };
+        let res: &[T] = &bufs[prog.out_buf][..prog.out_len];
         out.clear();
         out.extend(res.iter().map(|v| v.to_i64()));
         Ok(out.as_slice())
@@ -1615,33 +1850,40 @@ impl<T: Cell> FoldedEngine<T> {
         let FoldedEngine {
             prog,
             steps,
-            bping,
-            bpong,
+            bbufs,
+            btmp,
             bmid,
             bacc,
             ..
         } = self;
-        bping.resize(prog.buf_len * bp, T::ZERO);
-        bpong.resize(prog.buf_len * bp, T::ZERO);
+        bbufs.resize(prog.pool, Vec::new());
+        for bb in bbufs.iter_mut() {
+            bb.resize(prog.buf_len * bp, T::ZERO);
+        }
+        btmp.resize(prog.buf_len * bp, T::ZERO);
         for (lane, f) in frames.iter().enumerate() {
             for (pos, &v) in f.iter().enumerate() {
-                bping[pos * bp + lane] = T::from_i64(v);
+                bbufs[prog.in_buf][pos * bp + lane] = T::from_i64(v);
             }
         }
-        let mut src_is_ping = true;
         for &step in steps.iter() {
-            if src_is_ping {
-                run_step_batch(prog, step, bping, bpong, b, bp, bmid, bacc);
+            let (first, last) = step_io(step);
+            let in_b = prog.layers[first].in_buf;
+            let out_b = prog.layers[last].out_buf;
+            if let FStep::Single { .. } = step {
+                let mut dst = std::mem::take(&mut bbufs[out_b]);
+                run_step_batch(prog, step, &bbufs[in_b], &mut dst, b, bp, bmid, bacc);
+                if let Some(mg) = &prog.layers[last].merge {
+                    let ol = prog.layers[last].out_len;
+                    apply_merge_batch(mg, &bbufs[mg.other_buf], &mut dst, ol, b, bp);
+                }
+                bbufs[out_b] = dst;
             } else {
-                run_step_batch(prog, step, bpong, bping, b, bp, bmid, bacc);
+                run_step_batch(prog, step, &bbufs[in_b], btmp, b, bp, bmid, bacc);
+                std::mem::swap(&mut bbufs[out_b], btmp);
             }
-            src_is_ping = !src_is_ping;
         }
-        let res: &[T] = if src_is_ping {
-            &bping[..prog.out_len * bp]
-        } else {
-            &bpong[..prog.out_len * bp]
-        };
+        let res: &[T] = &bbufs[prog.out_buf][..prog.out_len * bp];
         let mut outs = vec![Vec::with_capacity(prog.out_len); b];
         for pos in 0..prog.out_len {
             let lanes = &res[pos * bp..pos * bp + b];
@@ -1851,6 +2093,7 @@ mod tests {
             input_shape: [8, 8, 1],
             input_scale: 1.0,
             layers: vec![conv, dw, avg, pool, dense],
+            topology: vec![],
             test_vectors: vec![],
             qat_accuracy: 1.0,
         }
@@ -1897,6 +2140,7 @@ mod tests {
                     out_shape: [1, 1, 2],
                 },
             ],
+            topology: vec![],
             test_vectors: vec![],
             qat_accuracy: 1.0,
         }

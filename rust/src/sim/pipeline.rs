@@ -25,11 +25,12 @@
 //! oracle both tiers are property-tested against (`tests/prop_compiled.rs`).
 
 use super::compiled::{CompiledPipeline, FoldedPipeline};
-use crate::flow::schedule::{steady_cycles_per_frame, ScheduleModel, SchedulePrediction};
+use crate::flow::schedule::{steady_cycles_per_frame, ScheduleModel, SchedulePrediction, LAT_MERGE};
 use crate::flow::{
-    analyze, fold_factor, fold_plan, pixel_period, plan_all, PlannedLayer, Ratio, UnitPlan,
+    analyze, analyze_dag, fold_factor, fold_plan, pixel_period, plan_all, PlannedLayer,
+    RateAnalysis, Ratio, UnitPlan,
 };
-use crate::model::{Layer, Model};
+use crate::model::{Layer, MergeLink, Model, NodeLink, Shape, ShapedLayer};
 use crate::quant::{requant, QKind, QLayer, QModel};
 
 /// Per-layer schedule statistics for one simulation run.
@@ -63,21 +64,75 @@ pub struct PipelineResult {
     pub cycles_per_frame: f64,
 }
 
+/// One quantized layer back in the analysis IR (pointwise layers were
+/// lowered to 1x1 convs by `QModel::synthesize`, so they stay convs here).
+fn qlayer_to_layer(l: &QLayer) -> Layer {
+    let layer = match l.kind {
+        QKind::Conv => Layer::conv(&l.name, l.k, l.s, l.p, l.out_shape[2]),
+        QKind::DwConv => Layer::dwconv(&l.name, l.k, l.s, l.p),
+        QKind::MaxPool => Layer::maxpool_padded(&l.name, l.k, l.s, l.p),
+        QKind::AvgPool => Layer::avgpool(&l.name, l.k, l.s),
+        QKind::Dense => Layer::dense(&l.name, l.out_shape[2]),
+    };
+    if l.relu {
+        layer
+    } else {
+        layer.no_relu()
+    }
+}
+
 /// Convert a quantized model into the analysis IR (for rate planning).
+/// Chain view only — residual topology travels separately via
+/// [`qmodel_links`].
 pub fn qmodel_to_model(qm: &QModel) -> Model {
     let mut m = Model::new(&qm.name, qm.input_shape[0].max(1), qm.input_shape[2]);
     for l in &qm.layers {
-        let layer = match l.kind {
-            QKind::Conv => Layer::conv(&l.name, l.k, l.s, l.p, l.out_shape[2]),
-            QKind::DwConv => Layer::dwconv(&l.name, l.k, l.s, l.p),
-            QKind::MaxPool => Layer::maxpool_padded(&l.name, l.k, l.s, l.p),
-            QKind::AvgPool => Layer::avgpool(&l.name, l.k, l.s),
-            QKind::Dense => Layer::dense(&l.name, l.out_shape[2]),
-        };
-        let layer = if l.relu { layer } else { layer.no_relu() };
-        m.push(layer);
+        m.push(qlayer_to_layer(l));
     }
     m
+}
+
+/// The flat dataflow links of a quantized model, in layer order — the
+/// bridge from [`QModel::node_topology`] to the DAG-aware rate analysis
+/// and schedule model.
+pub fn qmodel_links(qm: &QModel) -> Vec<NodeLink> {
+    qm.node_topology()
+        .iter()
+        .map(|t| NodeLink {
+            src: t.src,
+            merge: t.merge.map(|m| MergeLink {
+                with: m.with,
+                post_relu: m.relu,
+            }),
+        })
+        .collect()
+}
+
+/// Resolved shapes for the DAG rate analysis: every quantized layer
+/// already carries its own in/out shapes, so no chain propagation is
+/// needed. `merges` marks the two branches feeding each residual adder
+/// (complexity accounting counts one adder per physical output there).
+fn qmodel_shaped(qm: &QModel) -> Vec<ShapedLayer> {
+    let topo = qm.node_topology();
+    qm.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| ShapedLayer {
+            layer: qlayer_to_layer(l),
+            input: Shape {
+                f: l.in_shape[0].max(1),
+                d: l.in_shape[2],
+            },
+            output: Shape {
+                f: l.out_shape[0].max(1),
+                d: l.out_shape[2],
+            },
+            merges: topo[i].merge.is_some()
+                || topo
+                    .iter()
+                    .any(|t| matches!(&t.merge, Some(m) if m.with == Some(i))),
+        })
+        .collect()
 }
 
 /// The pipeline simulator: a quantized model plus a unit plan, lowered
@@ -114,23 +169,43 @@ pub struct PipelineSim {
     /// slack the planner's interleaving left unabsorbed, per layer. Feeds
     /// `SchedulePrediction::folded` for certified folded cycle figures.
     pub fold_factors: Vec<u64>,
+    /// Per-merge skip-FIFO depths `(merge layer index, depth)` from an
+    /// assemble-time schedule replay — the delay-balancing FIFO sizing of
+    /// DESIGN.md §11. Empty for chain models.
+    pub skip_fifo_depths: Vec<(usize, usize)>,
 }
 
 impl PipelineSim {
     /// Plan at input rate `r0` (None = full rate d0).
     pub fn new(qmodel: QModel, r0: Option<Ratio>) -> Result<Self, String> {
-        let model = qmodel_to_model(&qmodel);
-        let analysis = analyze(&model, r0).map_err(|e| e.to_string())?;
+        let analysis = Self::analysis_of(&qmodel, r0)?;
         let plans = plan_all(&analysis);
         Self::assemble(qmodel, plans, false)
     }
 
     /// Fully-parallel reference plan (Table VIII "Ref.").
     pub fn new_reference(qmodel: QModel) -> Result<Self, String> {
-        let model = qmodel_to_model(&qmodel);
-        let analysis = analyze(&model, None).map_err(|e| e.to_string())?;
+        let analysis = Self::analysis_of(&qmodel, None)?;
         let plans = crate::complexity::parallel::fully_parallel_plan(&analysis);
         Self::assemble(qmodel, plans, true)
+    }
+
+    /// Eq.-8 rate analysis for a quantized model: chains go through the
+    /// recursive block walk ([`analyze`]); residual graphs through the
+    /// flat DAG propagation ([`analyze_dag`]) over the stored topology.
+    fn analysis_of(qm: &QModel, r0: Option<Ratio>) -> Result<RateAnalysis, String> {
+        if qm.is_chain() {
+            let model = qmodel_to_model(qm);
+            analyze(&model, r0).map_err(|e| e.to_string())
+        } else {
+            let r0 = r0.unwrap_or_else(|| Ratio::int(qm.input_shape[2] as u64));
+            Ok(analyze_dag(
+                &qm.name,
+                qmodel_shaped(qm),
+                &qmodel_links(qm),
+                r0,
+            ))
+        }
     }
 
     /// Lower the planned model into the compiled value engine and the
@@ -165,9 +240,23 @@ impl PipelineSim {
         let folded = FoldedPipeline::lower(&qmodel, &rate_folds)?;
         let fold_factors = fold_plan(&plans);
         let [h0, w0, c0] = qmodel.input_shape;
-        let schedule = ScheduleModel::new(&plans, (h0.max(1), w0.max(1)), c0)
+        let links = qmodel_links(&qmodel);
+        let schedule = ScheduleModel::with_links(&plans, (h0.max(1), w0.max(1)), c0, &links)
             .map_err(|e| e.to_string())?;
         let predicted = SchedulePrediction::new(&schedule);
+        // Skip-FIFO sizing (DESIGN.md §11): replay a short steady stream
+        // and take each merge's peak shortcut occupancy as the depth the
+        // delay-balancing FIFO must provision.
+        let skip_fifo_depths: Vec<(usize, usize)> = if qmodel.is_chain() {
+            Vec::new()
+        } else {
+            schedule
+                .run(8)
+                .merge_fifo
+                .iter()
+                .map(|f| (f.layer, f.max_occupancy))
+                .collect()
+        };
         Ok(Self {
             qmodel,
             plans,
@@ -177,6 +266,7 @@ impl PipelineSim {
             predicted,
             folded,
             fold_factors,
+            skip_fifo_depths,
         })
     }
 
@@ -273,7 +363,13 @@ impl PipelineSim {
         }
 
         // --- Per-layer streaming ----------------------------------------
-        let mut maps: Vec<Vec<i64>> = frames.to_vec();
+        // Streams are kept per node so residual shortcuts can read a
+        // branch point after the body has advanced past it; chains visit
+        // each node exactly once in order, as the single-map walk did.
+        let topo = self.qmodel.node_topology();
+        let n = self.qmodel.layers.len();
+        let mut node_vals: Vec<Vec<Vec<i64>>> = Vec::with_capacity(n);
+        let mut node_outs: Vec<Vec<Vec<u64>>> = Vec::with_capacity(n);
         let mut frame_out_last: Vec<u64> = vec![0; frames.len()];
         for (li, ql) in self.qmodel.layers.iter().enumerate() {
             let plan = &self.plans[li];
@@ -291,20 +387,60 @@ impl PipelineSim {
                 utilization: 0.0,
             };
             let mut prev_finish: u64 = 0;
-            for (fi, map) in maps.iter_mut().enumerate() {
-                let is_last = li + 1 == self.qmodel.layers.len();
-                let (vals, outs) = step_layer(
+            let mut vals_per_frame: Vec<Vec<i64>> = Vec::with_capacity(frames.len());
+            let mut outs_per_frame: Vec<Vec<u64>> = Vec::with_capacity(frames.len());
+            for fi in 0..frames.len() {
+                let is_last = li + 1 == n;
+                let (map, ins): (&[i64], &[u64]) = match topo[li].src {
+                    None => (&frames[fi], &in_cycles[fi]),
+                    Some(j) => (&node_vals[j][fi], &node_outs[j][fi]),
+                };
+                let (mut vals, mut outs) = step_layer(
                     ql,
                     plan,
                     map,
-                    &in_cycles[fi],
+                    ins,
                     &mut prev_finish,
                     &mut layer_stat,
                     is_last,
                 )?;
-                *map = vals;
+                if let Some(mg) = &topo[li].merge {
+                    let (ovals, oouts): (&[i64], &[u64]) = match mg.with {
+                        None => (&frames[fi], &in_cycles[fi]),
+                        Some(j) => (&node_vals[j][fi], &node_outs[j][fi]),
+                    };
+                    if ovals.len() != vals.len() {
+                        return Err(format!(
+                            "{}: merge branch len {} != {}",
+                            ql.name,
+                            ovals.len(),
+                            vals.len()
+                        ));
+                    }
+                    // Values: add the shortcut's int8 stream onto this
+                    // node's requantized output, optionally ReLU, and
+                    // requantize the sum back onto the int8 grid — the
+                    // exact epilogue the compiled engines apply.
+                    for (v, &o) in vals.iter_mut().zip(ovals) {
+                        let mut s = *v + o;
+                        if mg.relu {
+                            s = s.max(0);
+                        }
+                        *v = if mg.m != 0.0 { requant(s, mg.m) } else { s };
+                    }
+                    // Cycles: the merge adder fires once both branch
+                    // pixels are available — the earlier one waits in the
+                    // delay-balancing skip FIFO, so arrival is the max of
+                    // the branches plus the adder stage.
+                    for (slot, &arr) in outs.iter_mut().zip(oouts) {
+                        let merged = (*slot).max(arr) + LAT_MERGE;
+                        layer_stat.last_cycle = layer_stat.last_cycle.max(merged);
+                        *slot = merged;
+                    }
+                }
                 frame_out_last[fi] = *outs.last().unwrap_or(&frame_out_last[fi]);
-                in_cycles[fi] = outs;
+                vals_per_frame.push(vals);
+                outs_per_frame.push(outs);
             }
             let elapsed = layer_stat
                 .last_cycle
@@ -313,13 +449,16 @@ impl PipelineSim {
             layer_stat.utilization =
                 layer_stat.useful_ops as f64 / (layer_stat.units as f64 * elapsed as f64);
             stats.push(layer_stat);
+            node_vals.push(vals_per_frame);
+            node_outs.push(outs_per_frame);
         }
 
         let total_cycles = *frame_out_last.last().unwrap_or(&0);
         let first_frame_latency = frame_out_last[0];
         let cycles_per_frame = steady_cycles_per_frame(&frame_out_last);
+        let outputs = node_vals.pop().unwrap_or_default();
         Ok(PipelineResult {
-            outputs: maps,
+            outputs,
             stats,
             total_cycles,
             first_frame_latency,
@@ -561,6 +700,7 @@ mod tests {
             input_shape: [4, 4, 1],
             input_scale: 1.0,
             layers: vec![conv, pool, dense],
+            topology: vec![],
             test_vectors: vec![],
             qat_accuracy: 1.0,
         }

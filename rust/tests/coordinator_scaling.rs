@@ -291,7 +291,7 @@ fn registry_counts_hits_misses_and_evictions() {
         .get_or_lower("a", || Ok(QModel::synthetic(8, 4, 6, 1)))
         .unwrap();
     let a2 = reg
-        .get_or_lower("a", || Err("cached entries must not re-lower".into()))
+        .get_or_lower("a", || Err("cached entries must not re-lower".to_string()))
         .unwrap();
     assert!(Arc::ptr_eq(&a1, &a2), "hit must return the cached artifact");
     reg.get_or_lower("b", || Ok(QModel::synthetic(8, 4, 6, 2)))
@@ -344,7 +344,7 @@ fn registry_warm_lookup_beats_cold_lowering() {
         .unwrap();
     let cold = t0.elapsed();
     let t1 = Instant::now();
-    reg.get_or_lower("heavy", || Err("warm lookups must not re-lower".into()))
+    reg.get_or_lower("heavy", || Err("warm lookups must not re-lower".to_string()))
         .unwrap();
     let warm = t1.elapsed();
     // Generous escape hatch against scheduler noise: a warm hit is a lock

@@ -40,6 +40,20 @@ fn three_model_fleet() -> Vec<(String, PipelineSim)> {
         .collect()
 }
 
+/// The full serving zoo — chains plus the residual `resnet_micro` /
+/// `mobilenet_v2_micro` DAGs — synthesized with the same fixed seeds
+/// `tests/net_serving.rs` uses.
+fn full_zoo_fleet() -> Vec<(String, PipelineSim)> {
+    zoo::serving_zoo()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0x7CB0 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
 fn fleet_specs(fleet: &[(String, PipelineSim)]) -> Vec<(String, usize)> {
     fleet
         .iter()
@@ -136,6 +150,62 @@ fn evented_replay_is_byte_identical_to_threaded_oracle() {
     // ...and coordinator intake is core-independent.
     assert_eq!(m_evt.completed, m_thr.completed);
     assert_eq!(m_evt.accepted, m_thr.accepted);
+    assert_eq!(m_evt.errored, 0);
+    assert_eq!(snap_evt.responses_ok, m_evt.completed);
+}
+
+#[test]
+fn evented_replay_full_zoo_with_residual_models_matches_threaded_oracle() {
+    // The extended-zoo differential: one seeded trace over all six
+    // serving-zoo models — the residual resnet_micro / mobilenet_v2_micro
+    // DAGs included — replayed through both network cores. Reports must
+    // be equal per model and both must reproduce the interpreter goldens
+    // bit-for-bit: a residual model is just another route to either core.
+    let fleet = full_zoo_fleet();
+    let specs = fleet_specs(&fleet);
+    assert!(specs.iter().any(|(id, _)| id == "resnet_micro"));
+    assert!(specs.iter().any(|(id, _)| id == "mobilenet_v2_micro"));
+    let golden_refs: Vec<&PipelineSim> = fleet.iter().map(|(_, s)| s).collect();
+    let trace = loadgen::MultiTrace::seeded(0x8E51D, 120, &specs, 1);
+    let counts = trace.per_model_counts();
+    assert!(
+        counts.iter().all(|&c| c > 0),
+        "every model, residual ones included, must take traffic: {counts:?}"
+    );
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+
+    // Threaded oracle run.
+    let coord_thr = Arc::new(Server::start_multi(fleet.clone(), fleet_config(), None).unwrap());
+    let mut thr = NetServer::bind("127.0.0.1:0", Arc::clone(&coord_thr)).unwrap();
+    let client = Client::connect(&thr.local_addr().to_string(), 8).unwrap();
+    let report_thr = loadgen::replay_net(&client, &trace, 8, Some(&expected));
+    let snap_thr = thr.shutdown();
+    let m_thr = coord_thr.metrics();
+
+    // Evented run of the SAME trace against an identical fresh fleet.
+    let coord_evt = Arc::new(Server::start_multi(fleet, fleet_config(), None).unwrap());
+    let mut evt = EventedServer::bind("127.0.0.1:0", Arc::clone(&coord_evt)).unwrap();
+    let client = Client::connect(&evt.local_addr().to_string(), 8).unwrap();
+    let report_evt = loadgen::replay_net(&client, &trace, 8, Some(&expected));
+    let snap_evt = evt.shutdown();
+    let m_evt = coord_evt.metrics();
+
+    assert_eq!(report_evt.aggregate.ok, 120);
+    assert_eq!(report_evt.aggregate.mismatched, 0, "evented path diverged from golden");
+    assert_eq!(
+        report_evt, report_thr,
+        "evented and threaded replays must produce identical reports"
+    );
+    for (i, (id, _)) in specs.iter().enumerate() {
+        let r = &report_evt.per_model[i];
+        assert_eq!(r.submitted, counts[i], "{id}: trace share");
+        assert_eq!(r.ok, counts[i], "{id}: all answered");
+        assert_eq!(r.mismatched, 0, "{id}: diverged from golden");
+    }
+    assert_eq!(sans_churn(snap_evt), sans_churn(snap_thr));
+    assert_eq!(snap_evt.requests, 120);
+    assert_eq!(snap_evt.errors_total(), 0);
+    assert_eq!(m_evt.completed, m_thr.completed);
     assert_eq!(m_evt.errored, 0);
     assert_eq!(snap_evt.responses_ok, m_evt.completed);
 }

@@ -35,6 +35,20 @@ fn three_model_fleet() -> Vec<(String, PipelineSim)> {
         .collect()
 }
 
+/// The full serving zoo — the chain configs plus the residual
+/// `resnet_micro` / `mobilenet_v2_micro` DAGs — synthesized with fixed
+/// seeds. Serving a residual model must need no serving-layer changes.
+fn full_zoo_fleet() -> Vec<(String, PipelineSim)> {
+    zoo::serving_zoo()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0x7CB0 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
 fn fleet_specs(fleet: &[(String, PipelineSim)]) -> Vec<(String, usize)> {
     fleet
         .iter()
@@ -119,6 +133,129 @@ fn tcp_replay_is_byte_identical_to_in_process_replay() {
     assert_eq!(net_snap.errors_total(), 0);
     assert_eq!(net_snap.err_malformed, 0);
     assert_eq!(net_snap.connections, net_snap.disconnects);
+}
+
+#[test]
+fn tcp_replay_full_zoo_with_residual_models_is_byte_identical() {
+    // The extended-zoo acceptance case: one seeded trace over ALL six
+    // serving-zoo models — including the residual resnet_micro and
+    // mobilenet_v2_micro DAGs — replayed in-process and over TCP. Both
+    // reports must reproduce the interpreter goldens bit-for-bit and be
+    // EQUAL, per model: the socket boundary and the residual merge
+    // epilogue both add no semantics.
+    let fleet = full_zoo_fleet();
+    let specs = fleet_specs(&fleet);
+    assert!(specs.iter().any(|(id, _)| id == "resnet_micro"));
+    assert!(specs.iter().any(|(id, _)| id == "mobilenet_v2_micro"));
+    let golden_refs: Vec<&PipelineSim> = fleet.iter().map(|(_, s)| s).collect();
+    let trace = loadgen::MultiTrace::seeded(0x8E51D, 120, &specs, 1);
+    let counts = trace.per_model_counts();
+    assert!(
+        counts.iter().all(|&c| c > 0),
+        "every model, residual ones included, must take traffic: {counts:?}"
+    );
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+
+    // In-process replay.
+    let mut inproc = Server::start_multi(fleet.clone(), fleet_config(), None).unwrap();
+    let report_inproc = loadgen::replay_multi(&inproc, &trace, 8, Some(&expected));
+    inproc.drain();
+    let m_inproc = inproc.metrics();
+
+    // TCP replay of the SAME trace against an identical fresh fleet.
+    let coord = Arc::new(Server::start_multi(fleet, fleet_config(), None).unwrap());
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 8).unwrap();
+    let report_tcp = loadgen::replay_net(&client, &trace, 8, Some(&expected));
+    let net_snap = net.shutdown();
+    let m_tcp = coord.metrics();
+
+    assert_eq!(report_tcp.aggregate.ok, 120);
+    assert_eq!(report_tcp.aggregate.mismatched, 0, "TCP path diverged from golden");
+    assert_eq!(report_tcp.aggregate.rejected, 0);
+    assert_eq!(report_tcp.aggregate.dropped, 0);
+    assert_eq!(
+        report_tcp, report_inproc,
+        "TCP and in-process replays must produce identical reports"
+    );
+    // Exact per-model reconciliation on both transports: every model got
+    // its trace share, answered it all, and matched its goldens.
+    for (i, (id, _)) in specs.iter().enumerate() {
+        let r = &report_tcp.per_model[i];
+        assert_eq!(r.submitted, counts[i], "{id}: trace share");
+        assert_eq!(r.ok, counts[i], "{id}: all answered");
+        assert_eq!(r.mismatched, 0, "{id}: diverged from golden");
+        assert_eq!(r.rejected + r.dropped, 0, "{id}: lost requests");
+    }
+    assert_eq!(m_tcp.completed, m_inproc.completed);
+    assert_eq!(m_tcp.accepted, m_inproc.accepted);
+    assert_eq!(m_tcp.errored, 0);
+    assert_eq!(net_snap.requests, 120);
+    assert_eq!(net_snap.responses_ok, m_tcp.completed);
+    assert_eq!(net_snap.errors_total(), 0);
+}
+
+#[test]
+fn tcp_drain_completes_partial_batches_for_residual_models() {
+    // Drain-partial over the residual pair alone: 1 + 2 requests with a
+    // far deadline and a big max_batch, so nothing flushes until the
+    // front-end drains — one partial batch per residual model, every
+    // reply bit-identical to the interpreter golden.
+    let fleet: Vec<(String, PipelineSim)> = full_zoo_fleet()
+        .into_iter()
+        .filter(|(id, _)| id == "resnet_micro" || id == "mobilenet_v2_micro")
+        .collect();
+    assert_eq!(fleet.len(), 2);
+    let specs = fleet_specs(&fleet);
+    let golden_refs: Vec<PipelineSim> = fleet.iter().map(|(_, s)| s.clone()).collect();
+    let coord = Arc::new(
+        Server::start_multi(
+            fleet,
+            ServerConfig {
+                workers: 1,
+                max_batch: 16,
+                queue_depth: 64,
+                verify_every: 0,
+                batch_deadline: Duration::from_secs(30),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut net = NetServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 3).unwrap();
+
+    let mut pendings = Vec::new();
+    let mut expects = Vec::new();
+    for (i, (id, len)) in specs.iter().enumerate() {
+        for _ in 0..=i {
+            let frame = vec![1i64; *len];
+            expects.push(
+                golden_refs[i]
+                    .run_interpreted(&[frame.clone()])
+                    .unwrap()
+                    .outputs[0]
+                    .clone(),
+            );
+            pendings.push(client.submit(id, &frame).unwrap());
+        }
+    }
+    await_accepted(&coord, 3);
+
+    let net_snap = net.shutdown();
+    for (pending, expect) in pendings.into_iter().zip(expects) {
+        let resp = pending.wait().expect("in-flight request dropped by drain");
+        assert_eq!(resp.logits, expect, "drained residual response diverged");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, 3, "1 + 2 drained requests");
+    assert_eq!(m.batches, 2, "one partial drain batch per residual model");
+    assert_eq!(m.flush_drain, 2);
+    assert_eq!(m.flush_full + m.flush_deadline, 0);
+    assert_eq!(net_snap.requests, 3);
+    assert_eq!(net_snap.responses_ok, 3);
+    assert_eq!(net_snap.errors_total(), 0);
 }
 
 // --------------------------------------------------------------------

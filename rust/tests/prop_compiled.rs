@@ -10,7 +10,7 @@
 //!   per-layer statistics **exactly**.
 
 use cnn_flow::flow::Ratio;
-use cnn_flow::model::zoo;
+use cnn_flow::model::{zoo, Block, Layer, Model};
 use cnn_flow::quant::{QKind, QLayer, QModel};
 use cnn_flow::sim::compiled::CompiledPipeline;
 use cnn_flow::sim::pipeline::PipelineSim;
@@ -142,9 +142,78 @@ fn random_qmodel(rng: &mut Rng) -> QModel {
         input_shape: [f0, f0, c0],
         input_scale: 1.0,
         layers,
+        topology: vec![],
         test_vectors: vec![],
         qat_accuracy: 0.0,
     }
+}
+
+/// Random residual-graph model: a stem conv, then one or two residual
+/// blocks drawn from {identity shortcut, strided projection shortcut,
+/// nested identity-in-identity}, then a dense head. Shapes are valid by
+/// construction; a merge never lands on the final layer (the quantized
+/// IR keeps the head at accumulator scale).
+fn random_residual_model(rng: &mut Rng) -> Model {
+    let f0 = [8usize, 9, 12][rng.range(0, 2)];
+    let mut m = Model::new("rand-residual", f0, 1);
+    let mut f = f0;
+    let mut c = [4usize, 8][rng.range(0, 1)];
+    m.push(Layer::conv("c1", 3, 1, 1, c));
+    let n_blocks = 1 + rng.range(0, 1);
+    for bi in 0..n_blocks {
+        let choice = rng.range(0, 2);
+        if choice == 1 && f >= 6 {
+            // Strided projection shortcut: both branches downsample to
+            // the same (f - 1) / 2 + 1 map, channels double.
+            let cout = c * 2;
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 2, 1, cout)),
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, cout).no_relu()),
+                ],
+                projection: Some(Layer::conv(&format!("r{bi}p"), 1, 2, 0, cout).no_relu()),
+                post_relu: true,
+            });
+            f = (f - 1) / 2 + 1;
+            c = cout;
+        } else if choice == 2 {
+            // Nested: an identity residual inside the body of another.
+            let inner = Block::Residual {
+                name: format!("r{bi}i"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}ia"), 3, 1, 1, c)),
+                    Block::Layer(Layer::conv(&format!("r{bi}ib"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: true,
+            };
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 1, 1, c)),
+                    inner,
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: rng.range(0, 1) == 1,
+            });
+        } else {
+            // Identity shortcut: body keeps the shape; ReLU (ResNet) or
+            // linear (MobileNetV2) merge.
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 1, 1, c)),
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: rng.range(0, 1) == 1,
+            });
+        }
+    }
+    m.push(Layer::dense("fc", 2 + rng.range(0, 4)));
+    m
 }
 
 fn rand_frames(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<i64>> {
@@ -521,6 +590,82 @@ fn schedule_replay_exact_at_scaled_rates() {
                 oracle.cycles_per_frame,
                 "cycles/frame r0={r0}"
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn residual_graphs_bit_identical_across_every_tier() {
+    // The residual certification fleet (DESIGN.md §11): seeded random
+    // residual DAGs — identity and projection shortcuts, nested bodies,
+    // mixed strides, ReLU and linear merges — must lower through
+    // `QModel::synthesize` and run bit-identical across the fused
+    // interpreter, the compiled engine, the batched tier, and the
+    // folded engine, while the DAG-aware schedule replay and the
+    // closed-form prediction reproduce the interpreter's cycles exactly.
+    prop_check(25, 0xD0D6, |rng| {
+        let model = random_residual_model(rng);
+        let seed = 0x900 + rng.range(0, 500) as u64;
+        let qm = QModel::synthesize(&model, seed).map_err(|e| e.to_string())?;
+        prop_assert!(!qm.is_chain(), "generator must emit a residual topology");
+        let len: usize = qm.input_shape.iter().product();
+        let sim = PipelineSim::new(qm.clone(), None)?;
+        let mut engine = CompiledPipeline::lower(&qm)?;
+        let mut folded = sim.folded.clone();
+        for b in [1usize, 3, 8] {
+            let frames = rand_frames(rng, b, len);
+            let oracle = sim.run_interpreted(&frames)?;
+            for (x, want) in frames.iter().zip(&oracle.outputs) {
+                prop_assert_eq!(
+                    engine.execute(x)?.to_vec(),
+                    want.clone(),
+                    "execute diverged (B={b})"
+                );
+                prop_assert_eq!(
+                    folded.execute(x)?.to_vec(),
+                    want.clone(),
+                    "folded execute diverged (B={b})"
+                );
+            }
+            let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+            prop_assert_eq!(
+                engine.execute_batch(&refs)?,
+                oracle.outputs.clone(),
+                "execute_batch diverged (B={b})"
+            );
+            prop_assert_eq!(
+                folded.execute_batch(&refs)?,
+                oracle.outputs.clone(),
+                "folded execute_batch diverged (B={b})"
+            );
+            // Cycle certification: the DAG-aware schedule replay is the
+            // interpreter's cycle model, merge epilogue included.
+            let fast = sim.run(&frames)?;
+            prop_assert_eq!(fast.outputs, oracle.outputs.clone(), "run diverged (B={b})");
+            prop_assert_eq!(fast.total_cycles, oracle.total_cycles, "total_cycles (B={b})");
+            prop_assert_eq!(
+                fast.first_frame_latency,
+                oracle.first_frame_latency,
+                "frame-0 latency (B={b})"
+            );
+            prop_assert_eq!(
+                fast.cycles_per_frame,
+                oracle.cycles_per_frame,
+                "cycles/frame (B={b})"
+            );
+            for (a, o) in fast.stats.iter().zip(oracle.stats.iter()) {
+                prop_assert_eq!(a.useful_ops, o.useful_ops, "{} ops (B={b})", a.name);
+                prop_assert_eq!(a.first_cycle, o.first_cycle, "{} first (B={b})", a.name);
+                prop_assert_eq!(a.last_cycle, o.last_cycle, "{} last (B={b})", a.name);
+            }
+            if sim.predicted.exact || b <= sim.predicted.frames_observed() {
+                prop_assert_eq!(
+                    sim.predicted.total_cycles(b),
+                    oracle.total_cycles,
+                    "prediction total (B={b})"
+                );
+            }
         }
         Ok(())
     });

@@ -37,6 +37,7 @@ fn probe_model(n: usize) -> QModel {
             in_shape: [1, 1, n],
             out_shape: [1, 1, n],
         }],
+        topology: vec![],
         test_vectors: vec![],
         qat_accuracy: 1.0,
     }

@@ -3,8 +3,10 @@
 //! checking the paper's structural invariants.
 
 use cnn_flow::complexity::{layer_cost, model_cost, parallel::fully_parallel_cost, CostOpts};
-use cnn_flow::flow::{analyze, plan_all, Ratio, UnitPlan};
-use cnn_flow::model::{config, Layer, Model};
+use cnn_flow::flow::{analyze, analyze_dag, plan_all, schedule::LAT_MERGE, Ratio, UnitPlan};
+use cnn_flow::model::{config, zoo, Block, Layer, Model};
+use cnn_flow::quant::QModel;
+use cnn_flow::sim::pipeline::PipelineSim;
 use cnn_flow::util::prop::prop_check;
 use cnn_flow::util::Rng;
 use cnn_flow::{prop_assert, prop_assert_eq};
@@ -27,6 +29,68 @@ fn random_model(rng: &mut Rng) -> Model {
         }
     }
     m.push(Layer::dense("F", rng.range(2, 12)));
+    m
+}
+
+/// Random residual model: stem conv, one or two shortcut blocks drawn
+/// from {identity, strided projection, nested identity-in-identity},
+/// then a dense head. Shapes valid by construction; merges never land
+/// on the final layer.
+fn random_residual_model(rng: &mut Rng) -> Model {
+    let f0 = [8usize, 9, 12][rng.range(0, 2)];
+    let mut m = Model::new("rand-res-flow", f0, 1);
+    let mut f = f0;
+    let mut c = [4usize, 8][rng.range(0, 1)];
+    m.push(Layer::conv("c1", 3, 1, 1, c));
+    let n_blocks = 1 + rng.range(0, 1);
+    for bi in 0..n_blocks {
+        let choice = rng.range(0, 2);
+        if choice == 1 && f >= 6 {
+            let cout = c * 2;
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 2, 1, cout)),
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, cout).no_relu()),
+                ],
+                projection: Some(Layer::conv(&format!("r{bi}p"), 1, 2, 0, cout).no_relu()),
+                post_relu: true,
+            });
+            f = (f - 1) / 2 + 1;
+            c = cout;
+        } else if choice == 2 {
+            let inner = Block::Residual {
+                name: format!("r{bi}i"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}ia"), 3, 1, 1, c)),
+                    Block::Layer(Layer::conv(&format!("r{bi}ib"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: true,
+            };
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 1, 1, c)),
+                    inner,
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: rng.range(0, 1) == 1,
+            });
+        } else {
+            m.blocks.push(Block::Residual {
+                name: format!("r{bi}"),
+                body: vec![
+                    Block::Layer(Layer::conv(&format!("r{bi}a"), 3, 1, 1, c)),
+                    Block::Layer(Layer::conv(&format!("r{bi}b"), 3, 1, 1, c).no_relu()),
+                ],
+                projection: None,
+                post_relu: rng.range(0, 1) == 1,
+            });
+        }
+    }
+    m.push(Layer::dense("fc", 2 + rng.range(0, 4)));
     m
 }
 
@@ -298,6 +362,141 @@ fn planning_never_yields_zero_units_or_configs() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn eq8_residual_merge_rate_is_min_of_branches() {
+    // The DAG extension of Eq. 8 (DESIGN.md §11): along every edge the
+    // plain Eq. 8 still holds against the layer's incoming rate, a merge
+    // clamps its node's outgoing stream to the slower branch (min of the
+    // two branch rates), and every reader of a merge node sees the
+    // clamped rate — re-derived here independently, edge by edge.
+    prop_check(150, 0xF1A, |rng| {
+        let m = random_residual_model(rng);
+        let shaped = m.shapes().map_err(|e| e.to_string())?;
+        let links = m.links().map_err(|e| e.to_string())?;
+        let r0 = Ratio::int(m.input.d as u64);
+        let d = analyze_dag(&m.name, shaped, &links, r0);
+        prop_assert!(
+            links.iter().any(|l| l.merge.is_some()),
+            "generator must emit merges"
+        );
+        // Effective (post-clamp) stream rate of every node, re-derived:
+        // a merge node's stream runs at min(its own Eq.-8 rate, the
+        // shortcut branch's effective rate).
+        let mut eff: Vec<Ratio> = d.layers.iter().map(|l| l.r_out).collect();
+        for (j, lk) in links.iter().enumerate() {
+            if let Some(mg) = &lk.merge {
+                let other = match mg.with {
+                    Some(w) => eff[w],
+                    None => r0,
+                };
+                eff[j] = eff[j].min(other);
+            }
+        }
+        for (i, lk) in links.iter().enumerate() {
+            let l = &d.layers[i];
+            let want_in = match lk.src {
+                Some(j) => eff[j],
+                None => r0,
+            };
+            prop_assert_eq!(
+                l.r_in,
+                want_in,
+                "{} r_in != merged source rate",
+                l.shaped.layer.name
+            );
+            prop_assert_eq!(
+                l.r_out,
+                cnn_flow::flow::layer_rate(l.d_in(), l.d_out(), l.shaped.layer.s, l.r_in),
+                "{} raw r_out breaks Eq. 8",
+                l.shaped.layer.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_replay_never_reads_empty_fifo() {
+    // Schedule-replay contract for residual merges (DESIGN.md §11): the
+    // merge node consumes each shortcut pixel at max(branch arrivals) +
+    // LAT_MERGE, so every merged output strictly postdates its shortcut
+    // arrival — the skip FIFO is never read empty — and the occupancy at
+    // every event stays within the `max_occupancy` depth that
+    // `PipelineSim::skip_fifo_depths` provisions.
+    prop_check(40, 0xF1B, |rng| {
+        let m = random_residual_model(rng);
+        let seed = 0xB00 + rng.range(0, 400) as u64;
+        let qm = QModel::synthesize(&m, seed).map_err(|e| e.to_string())?;
+        let sim = PipelineSim::new(qm, None)?;
+        let res = sim.schedule.run(8);
+        prop_assert!(
+            !res.merge_fifo.is_empty(),
+            "residual replay must trace its merges"
+        );
+        for f in &res.merge_fifo {
+            prop_assert_eq!(
+                f.shortcut_arrivals.len(),
+                f.merge_consumes.len(),
+                "layer {}: push/pop streams out of sync",
+                f.layer
+            );
+            prop_assert!(f.max_occupancy >= 1, "layer {}: zero FIFO depth", f.layer);
+            let mut consumed = 0usize;
+            for (p, &a) in f.shortcut_arrivals.iter().enumerate() {
+                prop_assert!(
+                    f.merge_consumes[p] >= a + LAT_MERGE,
+                    "layer {} pixel {p}: merged output at {} does not postdate \
+                     shortcut arrival {a} (empty FIFO read)",
+                    f.layer,
+                    f.merge_consumes[p]
+                );
+                while consumed < f.merge_consumes.len() && f.merge_consumes[consumed] <= a {
+                    consumed += 1;
+                }
+                prop_assert!(
+                    p + 1 - consumed <= f.max_occupancy,
+                    "layer {} pixel {p}: occupancy {} overflows depth {}",
+                    f.layer,
+                    p + 1 - consumed,
+                    f.max_occupancy
+                );
+            }
+            prop_assert!(
+                sim.skip_fifo_depths
+                    .iter()
+                    .any(|&(li, depth)| li == f.layer && depth == f.max_occupancy),
+                "skip_fifo_depths does not provision layer {} at depth {}",
+                f.layer,
+                f.max_occupancy
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zoo_residual_fifo_depth_is_frame_count_invariant() {
+    // Frame-period conservation holds on both branches of a shortcut, so
+    // the skew the skip FIFO absorbs is a warm-up transient: the peak
+    // occupancy measured over 8 frames must not grow at 16, and it is
+    // exactly what assemble time provisioned.
+    for m in [zoo::resnet_micro(), zoo::mobilenet_v2_micro()] {
+        let qm = QModel::synthesize(&m, 0x123).unwrap();
+        let sim = PipelineSim::new(qm, None).unwrap();
+        let depths = |n: usize| -> Vec<(usize, usize)> {
+            sim.schedule
+                .run(n)
+                .merge_fifo
+                .iter()
+                .map(|f| (f.layer, f.max_occupancy))
+                .collect()
+        };
+        let d8 = depths(8);
+        assert_eq!(d8, depths(16), "{}: FIFO depth grew with frame count", m.name);
+        assert_eq!(sim.skip_fifo_depths, d8, "{}: assemble-time depths stale", m.name);
+    }
 }
 
 #[test]

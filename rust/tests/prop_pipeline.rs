@@ -79,6 +79,7 @@ fn random_qmodel(rng: &mut Rng) -> QModel {
         input_shape: [f0, f0, c0],
         input_scale: 1.0,
         layers,
+        topology: vec![],
         test_vectors: vec![],
         qat_accuracy: 0.0,
     }
