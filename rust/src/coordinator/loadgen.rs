@@ -29,7 +29,7 @@
 
 use std::collections::VecDeque;
 
-use super::{Pending, Server};
+use super::{Pending, Server, SubmitOpts};
 use crate::net::client::{Client, ClientPending};
 use crate::net::proto::ErrorCode;
 use crate::sim::pipeline::PipelineSim;
@@ -105,18 +105,28 @@ pub struct LoadReport {
     /// at submit time (in-process) or as a typed protocol error at
     /// settle time (TCP); both transports share one `classify` split.
     pub rejected: u64,
+    /// Deadline-bearing requests shed by admission control
+    /// (`ErrorCode::SloMiss` / in-process `"slo miss: …"`) — kept apart
+    /// from `rejected` because shedding is the predictive tier working
+    /// as designed, not a capacity refusal.
+    pub shed: u64,
     /// Requests whose answer failed for per-request reasons: frame
     /// validation errors or transport losses.
     pub dropped: u64,
     /// Responses that differed from the expected golden outputs.
     pub mismatched: u64,
+    /// Completed deadline-bearing requests whose server-side SLO verdict
+    /// was "met" (admission-time prediction fit the deadline budget).
+    pub slo_met: u64,
 }
 
 /// How a failed replay request is counted: `Rejected` maps to
-/// [`LoadReport::rejected`], `Dropped` to [`LoadReport::dropped`].
+/// [`LoadReport::rejected`], `Shed` to [`LoadReport::shed`], `Dropped`
+/// to [`LoadReport::dropped`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReplayError {
     Rejected,
+    Shed,
     Dropped,
 }
 
@@ -130,9 +140,19 @@ pub enum ReplayError {
 pub trait ReplayTransport {
     type Pending;
     /// Borrowed frame: each transport copies exactly once (the in-process
-    /// path into its `Vec`, the TCP path into the wire frame).
-    fn submit(&self, model: &str, frame: &[i64]) -> Result<Self::Pending, ReplayError>;
-    fn wait(pending: Self::Pending) -> Result<Vec<i64>, ReplayError>;
+    /// path into its `Vec`, the TCP path into the wire frame). A
+    /// `deadline_us` of 0 means deadline-free — both transports then
+    /// reproduce the pre-SLO submit byte-for-byte.
+    fn submit(
+        &self,
+        model: &str,
+        frame: &[i64],
+        deadline_us: u64,
+        class: u8,
+    ) -> Result<Self::Pending, ReplayError>;
+    /// Settle one request: the logits plus the server-side SLO verdict
+    /// (always false for deadline-free requests on both transports).
+    fn wait(pending: Self::Pending) -> Result<(Vec<i64>, bool), ReplayError>;
 }
 
 /// The single rejected/dropped split both transports share, keyed on the
@@ -147,6 +167,7 @@ fn classify(code: ErrorCode) -> ReplayError {
         ErrorCode::QueueFull | ErrorCode::UnknownModel | ErrorCode::Draining => {
             ReplayError::Rejected
         }
+        ErrorCode::SloMiss => ReplayError::Shed,
         ErrorCode::InvalidFrame | ErrorCode::Malformed => ReplayError::Dropped,
     }
 }
@@ -154,17 +175,29 @@ fn classify(code: ErrorCode) -> ReplayError {
 impl ReplayTransport for Server {
     type Pending = Pending;
 
-    fn submit(&self, model: &str, frame: &[i64]) -> Result<Pending, ReplayError> {
+    fn submit(
+        &self,
+        model: &str,
+        frame: &[i64],
+        deadline_us: u64,
+        class: u8,
+    ) -> Result<Pending, ReplayError> {
         // Every in-process submit refusal (backpressure, unknown route,
-        // stopped server) classifies as a rejection.
-        self.submit_to(model, frame.to_vec())
-            .map_err(|e| classify(ErrorCode::from_reject(&e)))
+        // admission shed, stopped server) classifies through the same
+        // wire split the TCP path uses.
+        self.submit_to_opts(
+            model,
+            frame.to_vec(),
+            SubmitOpts { deadline_us, class },
+            None,
+        )
+        .map_err(|e| classify(ErrorCode::from_reject(&e)))
     }
 
-    fn wait(pending: Pending) -> Result<Vec<i64>, ReplayError> {
+    fn wait(pending: Pending) -> Result<(Vec<i64>, bool), ReplayError> {
         pending
             .wait()
-            .map(|resp| resp.logits)
+            .map(|resp| (resp.logits, resp.slo_met))
             .map_err(|e| classify(ErrorCode::from_reject(&e)))
     }
 }
@@ -172,15 +205,22 @@ impl ReplayTransport for Server {
 impl ReplayTransport for Client {
     type Pending = ClientPending;
 
-    fn submit(&self, model: &str, frame: &[i64]) -> Result<ClientPending, ReplayError> {
+    fn submit(
+        &self,
+        model: &str,
+        frame: &[i64],
+        deadline_us: u64,
+        class: u8,
+    ) -> Result<ClientPending, ReplayError> {
         // A submit failure here is a transport problem (dial/send), not a
         // server refusal — refusals come back as typed protocol errors.
-        Client::submit(self, model, frame).map_err(|_| ReplayError::Dropped)
+        Client::submit_slo(self, model, frame, deadline_us, class)
+            .map_err(|_| ReplayError::Dropped)
     }
 
-    fn wait(pending: ClientPending) -> Result<Vec<i64>, ReplayError> {
+    fn wait(pending: ClientPending) -> Result<(Vec<i64>, bool), ReplayError> {
         match pending.wait() {
-            Ok(resp) => Ok(resp.logits),
+            Ok(resp) => Ok((resp.logits, resp.slo_met)),
             Err(e) => Err(e.code.map_or(ReplayError::Dropped, classify)),
         }
     }
@@ -208,10 +248,10 @@ pub fn replay(
         .into_iter()
         .next()
         .expect("server has at least one model group");
-    let requests: Vec<(u64, usize, &[i64])> = trace
+    let requests: Vec<(u64, usize, &[i64], u64, u8)> = trace
         .requests
         .iter()
-        .map(|r| (r.at_tick, 0, r.frame.as_slice()))
+        .map(|r| (r.at_tick, 0, r.frame.as_slice(), 0, 0))
         .collect();
     replay_core(server, &[model], &requests, window, expected).aggregate
 }
@@ -221,20 +261,37 @@ pub fn replay(
 // ---------------------------------------------------------------------
 
 /// One request of a heterogeneous trace: a virtual arrival tick, the
-/// index of its model in [`MultiTrace::models`], and the input frame
-/// (already sized for that model).
-#[derive(Debug, Clone)]
+/// index of its model in [`MultiTrace::models`], the input frame
+/// (already sized for that model), and the request's SLO envelope — a
+/// `deadline_us` of 0 means deadline-free (exempt from admission
+/// control), and `class` is an opaque priority label used only for
+/// per-class reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiTraceRequest {
     pub at_tick: u64,
     pub model: usize,
     pub frame: Vec<i64>,
+    pub deadline_us: u64,
+    pub class: u8,
+}
+
+/// One tenant of a multi-tenant trace: which model it targets, the SLO
+/// envelope stamped on its requests, and its steady request rate
+/// (`weight` requests per virtual tick, before the per-constructor load
+/// shape scales it).
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub model: usize,
+    pub class: u8,
+    pub deadline_us: u64,
+    pub weight: usize,
 }
 
 /// A deterministic mixed-traffic trace over several models: every frame,
 /// arrival tick **and model assignment** derives from one seed, so two
 /// replays see byte-identical request streams — including identical
 /// per-model request counts.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiTrace {
     /// Model ids, in the order [`MultiTraceRequest::model`] indexes.
     pub models: Vec<String>,
@@ -265,12 +322,148 @@ impl MultiTrace {
                 at_tick: tick,
                 model,
                 frame,
+                deadline_us: 0,
+                class: 0,
             });
         }
         MultiTrace {
             models: models.iter().map(|(id, _)| id.clone()).collect(),
             requests,
         }
+    }
+
+    /// Multi-tenant trace with alternating calm/burst phases: every
+    /// `period` ticks the whole tenant mix switches between `calm_x`
+    /// and `burst_x` copies of each tenant's per-tick `weight`. The
+    /// bursts are what overwhelm a fixed shard count and make the
+    /// predictive tier (shed + autoscale) observable.
+    pub fn bursty(
+        seed: u64,
+        models: &[(String, usize)],
+        tenants: &[Tenant],
+        ticks: u64,
+        period: u64,
+        calm_x: usize,
+        burst_x: usize,
+    ) -> MultiTrace {
+        let period = period.max(1);
+        Self::from_tenant_rates(seed, models, tenants, ticks, |t, _, w| {
+            if (t / period) % 2 == 1 {
+                w * burst_x
+            } else {
+                w * calm_x
+            }
+        })
+    }
+
+    /// Multi-tenant trace with a diurnal (triangle-wave) load profile:
+    /// each tenant emits `weight` requests per tick at the trough and
+    /// ramps linearly to `weight * peak_x` at mid-trace, then back down
+    /// — one full "day" across the whole trace.
+    pub fn diurnal(
+        seed: u64,
+        models: &[(String, usize)],
+        tenants: &[Tenant],
+        ticks: u64,
+        peak_x: usize,
+    ) -> MultiTrace {
+        let half = (ticks / 2).max(1);
+        Self::from_tenant_rates(seed, models, tenants, ticks, move |t, _, w| {
+            let pos = t.min(ticks.saturating_sub(1).saturating_sub(t));
+            let extra = (w as u64 * peak_x.saturating_sub(1) as u64 * pos) / half;
+            w + extra as usize
+        })
+    }
+
+    /// Multi-tenant trace where tenant `flood` misbehaves: during every
+    /// other `period`-tick window it emits `flood_x` times its weight,
+    /// and is silent otherwise; all other tenants send their steady
+    /// `weight` per tick throughout. The victims' per-class SLO-met
+    /// fraction under this trace is the adversarial-isolation signal.
+    pub fn adversarial(
+        seed: u64,
+        models: &[(String, usize)],
+        tenants: &[Tenant],
+        flood: usize,
+        ticks: u64,
+        period: u64,
+        flood_x: usize,
+    ) -> MultiTrace {
+        assert!(flood < tenants.len(), "flood tenant index out of range");
+        let period = period.max(1);
+        Self::from_tenant_rates(seed, models, tenants, ticks, move |t, i, w| {
+            if i == flood {
+                if (t / period) % 2 == 1 {
+                    w * flood_x
+                } else {
+                    0
+                }
+            } else {
+                w
+            }
+        })
+    }
+
+    /// The shared per-tick synthesis loop behind the tenant-based
+    /// constructors: for each virtual tick, `rate(tick, tenant index,
+    /// weight)` gives every tenant's request count, and the tick's
+    /// requests are interleaved by a seeded shuffle so no tenant
+    /// systematically front-runs the others within a burst.
+    fn from_tenant_rates(
+        seed: u64,
+        models: &[(String, usize)],
+        tenants: &[Tenant],
+        ticks: u64,
+        rate: impl Fn(u64, usize, usize) -> usize,
+    ) -> MultiTrace {
+        assert!(!models.is_empty(), "MultiTrace needs at least one model");
+        assert!(!tenants.is_empty(), "MultiTrace needs at least one tenant");
+        for t in tenants {
+            assert!(t.model < models.len(), "tenant model index out of range");
+        }
+        let mut rng = Rng::new(seed);
+        let mut requests = Vec::new();
+        for tick in 0..ticks {
+            // Emission order within a tick: list each tenant's slots,
+            // then Fisher-Yates shuffle from the same seeded stream
+            // that shapes the frames.
+            let mut slots: Vec<usize> = Vec::new();
+            for (i, t) in tenants.iter().enumerate() {
+                slots.extend(std::iter::repeat(i).take(rate(tick, i, t.weight)));
+            }
+            for i in (1..slots.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                slots.swap(i, j);
+            }
+            for tenant in slots {
+                let t = &tenants[tenant];
+                let frame: Vec<i64> =
+                    (0..models[t.model].1).map(|_| rng.int8() as i64).collect();
+                requests.push(MultiTraceRequest {
+                    at_tick: tick,
+                    model: t.model,
+                    frame,
+                    deadline_us: t.deadline_us,
+                    class: t.class,
+                });
+            }
+        }
+        MultiTrace {
+            models: models.iter().map(|(id, _)| id.clone()).collect(),
+            requests,
+        }
+    }
+
+    /// Requests per class label, as `(class, count)` sorted by class.
+    pub fn per_class_counts(&self) -> Vec<(u8, u64)> {
+        let mut counts: Vec<(u8, u64)> = Vec::new();
+        for r in &self.requests {
+            match counts.binary_search_by_key(&r.class, |&(c, _)| c) {
+                Ok(i) => counts[i].1 += 1,
+                Err(i) => counts.insert(i, (r.class, 1)),
+            }
+        }
+        counts
     }
 
     /// Requests per model, indexed like [`MultiTrace::models`].
@@ -305,12 +498,58 @@ pub fn golden_outputs_multi(sims: &[&PipelineSim], trace: &MultiTrace) -> Vec<Ve
         .collect()
 }
 
+/// Per-priority-class outcome counts of one heterogeneous replay — the
+/// SLO ledger the overload gate reads. `met / with_deadline` is the
+/// class's SLO-met fraction; shed and completed-but-missed requests both
+/// count against it, so admission control cannot inflate the fraction by
+/// shedding (a shed request is a miss, just a cheap one).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ClassReport {
+    pub class: u8,
+    pub submitted: u64,
+    pub ok: u64,
+    pub shed: u64,
+    /// Submitted requests carrying a non-zero deadline.
+    pub with_deadline: u64,
+    /// Completed deadline-bearing requests whose server-side verdict
+    /// was "met".
+    pub met: u64,
+}
+
+impl ClassReport {
+    /// Fraction of this class's deadline-bearing requests that completed
+    /// with their modelled budget met (1.0 when none carried deadlines).
+    pub fn slo_met_fraction(&self) -> f64 {
+        if self.with_deadline == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.with_deadline as f64
+        }
+    }
+}
+
 /// Outcome counts of one heterogeneous replay: the aggregate plus one
-/// [`LoadReport`] per model (indexed like [`MultiTrace::models`]).
+/// [`LoadReport`] per model (indexed like [`MultiTrace::models`]) and one
+/// [`ClassReport`] per priority class present in the trace (sorted by
+/// class label).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiLoadReport {
     pub aggregate: LoadReport,
     pub per_model: Vec<LoadReport>,
+    pub classes: Vec<ClassReport>,
+}
+
+impl MultiLoadReport {
+    /// Overall SLO-met fraction across every deadline-bearing request
+    /// (1.0 when none carried deadlines).
+    pub fn slo_met_fraction(&self) -> f64 {
+        let with_deadline: u64 = self.classes.iter().map(|c| c.with_deadline).sum();
+        if with_deadline == 0 {
+            1.0
+        } else {
+            self.classes.iter().map(|c| c.met).sum::<u64>() as f64 / with_deadline as f64
+        }
+    }
 }
 
 /// Replay a heterogeneous `trace` against a multi-model `server` with the
@@ -326,10 +565,10 @@ pub fn replay_multi(
     window: usize,
     expected: Option<&[Vec<i64>]>,
 ) -> MultiLoadReport {
-    let requests: Vec<(u64, usize, &[i64])> = trace
+    let requests: Vec<(u64, usize, &[i64], u64, u8)> = trace
         .requests
         .iter()
-        .map(|r| (r.at_tick, r.model, r.frame.as_slice()))
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
         .collect();
     replay_core(server, &trace.models, &requests, window, expected)
 }
@@ -348,93 +587,144 @@ pub fn replay_net(
     window: usize,
     expected: Option<&[Vec<i64>]>,
 ) -> MultiLoadReport {
-    let requests: Vec<(u64, usize, &[i64])> = trace
+    let requests: Vec<(u64, usize, &[i64], u64, u8)> = trace
         .requests
         .iter()
-        .map(|r| (r.at_tick, r.model, r.frame.as_slice()))
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
         .collect();
     replay_core(client, &trace.models, &requests, window, expected)
 }
 
 /// The shared virtual-clock replay loop behind [`replay`],
 /// [`replay_multi`] and [`replay_net`]: requests are `(arrival tick,
-/// model index, frame)` borrows, submitted to `models[model index]`'s
-/// shard group in arrival order with a bounded in-flight window; arrival
-/// ticks are barriers (everything outstanding settles before the clock
-/// advances). Generic over the [`ReplayTransport`], so the in-process
-/// and TCP paths share every semantic.
+/// model index, frame, deadline_us, class)` borrows, submitted to
+/// `models[model index]`'s shard group in arrival order with a bounded
+/// in-flight window; arrival ticks are barriers (everything outstanding
+/// settles before the clock advances). Generic over the
+/// [`ReplayTransport`], so the in-process and TCP paths share every
+/// semantic — including the per-class SLO ledger.
 fn replay_core<T: ReplayTransport>(
     target: &T,
     models: &[String],
-    requests: &[(u64, usize, &[i64])],
+    requests: &[(u64, usize, &[i64], u64, u8)],
     window: usize,
     expected: Option<&[Vec<i64>]>,
 ) -> MultiLoadReport {
-    fn settle<T: ReplayTransport>(
+    /// One in-flight request: trace index, model index, class slot in
+    /// `report.classes`, whether it carried a deadline, and the pending
+    /// handle.
+    struct InFlight<P> {
         idx: usize,
         model: usize,
-        pending: T::Pending,
+        slot: usize,
+        with_deadline: bool,
+        pending: P,
+    }
+
+    fn settle<T: ReplayTransport>(
+        f: InFlight<T::Pending>,
         expected: Option<&[Vec<i64>]>,
         report: &mut MultiLoadReport,
     ) {
-        match T::wait(pending) {
-            Ok(logits) => {
+        match T::wait(f.pending) {
+            Ok((logits, slo_met)) => {
                 report.aggregate.ok += 1;
-                report.per_model[model].ok += 1;
+                report.per_model[f.model].ok += 1;
+                report.classes[f.slot].ok += 1;
+                if f.with_deadline && slo_met {
+                    report.aggregate.slo_met += 1;
+                    report.per_model[f.model].slo_met += 1;
+                    report.classes[f.slot].met += 1;
+                }
                 if let Some(exp) = expected {
-                    if logits != exp[idx] {
+                    if logits != exp[f.idx] {
                         report.aggregate.mismatched += 1;
-                        report.per_model[model].mismatched += 1;
+                        report.per_model[f.model].mismatched += 1;
                     }
                 }
             }
-            Err(ReplayError::Rejected) => {
+            Err(e) => count_error(e, f.model, f.slot, report),
+        }
+    }
+
+    fn count_error(e: ReplayError, model: usize, slot: usize, report: &mut MultiLoadReport) {
+        match e {
+            ReplayError::Rejected => {
                 report.aggregate.rejected += 1;
                 report.per_model[model].rejected += 1;
             }
-            Err(ReplayError::Dropped) => {
+            ReplayError::Shed => {
+                report.aggregate.shed += 1;
+                report.per_model[model].shed += 1;
+                report.classes[slot].shed += 1;
+            }
+            ReplayError::Dropped => {
                 report.aggregate.dropped += 1;
                 report.per_model[model].dropped += 1;
             }
         }
     }
 
+    // One ClassReport slot per class label present in the trace, sorted;
+    // the empty-trace case keeps a single slot for class 0 so lookups
+    // below can never fail.
+    let mut class_ids: Vec<u8> = requests.iter().map(|&(_, _, _, _, c)| c).collect();
+    class_ids.sort_unstable();
+    class_ids.dedup();
+    if class_ids.is_empty() {
+        class_ids.push(0);
+    }
+
     let window = window.max(1);
     let mut report = MultiLoadReport {
         aggregate: LoadReport::default(),
         per_model: vec![LoadReport::default(); models.len()],
+        classes: class_ids
+            .iter()
+            .map(|&class| ClassReport {
+                class,
+                ..ClassReport::default()
+            })
+            .collect(),
     };
-    let mut inflight: VecDeque<(usize, usize, T::Pending)> = VecDeque::new();
-    let mut clock = requests.first().map(|&(tick, _, _)| tick).unwrap_or(0);
-    for (i, &(at_tick, model, frame)) in requests.iter().enumerate() {
+    let mut inflight: VecDeque<InFlight<T::Pending>> = VecDeque::new();
+    let mut clock = requests.first().map(|&(tick, ..)| tick).unwrap_or(0);
+    for (i, &(at_tick, model, frame, deadline_us, class)) in requests.iter().enumerate() {
         // Tick barrier: the virtual clock only advances once every
         // request from earlier ticks has been answered.
         if at_tick != clock {
             clock = at_tick;
-            while let Some((idx, m, p)) = inflight.pop_front() {
-                settle::<T>(idx, m, p, expected, &mut report);
+            while let Some(f) = inflight.pop_front() {
+                settle::<T>(f, expected, &mut report);
             }
         }
         while inflight.len() >= window {
-            let (idx, m, p) = inflight.pop_front().unwrap();
-            settle::<T>(idx, m, p, expected, &mut report);
+            let f = inflight.pop_front().unwrap();
+            settle::<T>(f, expected, &mut report);
         }
+        let slot = class_ids
+            .binary_search(&class)
+            .expect("class slot prebuilt from the same requests");
+        let with_deadline = deadline_us != 0;
         report.aggregate.submitted += 1;
         report.per_model[model].submitted += 1;
-        match target.submit(&models[model], frame) {
-            Ok(p) => inflight.push_back((i, model, p)),
-            Err(ReplayError::Rejected) => {
-                report.aggregate.rejected += 1;
-                report.per_model[model].rejected += 1;
-            }
-            Err(ReplayError::Dropped) => {
-                report.aggregate.dropped += 1;
-                report.per_model[model].dropped += 1;
-            }
+        report.classes[slot].submitted += 1;
+        if with_deadline {
+            report.classes[slot].with_deadline += 1;
+        }
+        match target.submit(&models[model], frame, deadline_us, class) {
+            Ok(pending) => inflight.push_back(InFlight {
+                idx: i,
+                model,
+                slot,
+                with_deadline,
+                pending,
+            }),
+            Err(e) => count_error(e, model, slot, &mut report),
         }
     }
-    while let Some((idx, m, p)) = inflight.pop_front() {
-        settle::<T>(idx, m, p, expected, &mut report);
+    while let Some(f) = inflight.pop_front() {
+        settle::<T>(f, expected, &mut report);
     }
     report
 }
@@ -499,9 +789,88 @@ mod tests {
         let t = MultiTrace::seeded(11, 64, &specs, 1);
         for r in &t.requests {
             assert_eq!(r.frame.len(), specs[r.model].1);
+            assert_eq!((r.deadline_us, r.class), (0, 0), "seeded traces are SLO-free");
         }
         let counts = t.per_model_counts();
         assert_eq!(counts.iter().sum::<u64>(), 64);
         assert!(counts.iter().all(|&c| c > 0), "both models drawn: {counts:?}");
+    }
+
+    fn tick_counts(t: &MultiTrace, ticks: u64) -> Vec<usize> {
+        let mut counts = vec![0usize; ticks as usize];
+        for r in &t.requests {
+            counts[r.at_tick as usize] += 1;
+        }
+        counts
+    }
+
+    fn two_tenants() -> Vec<Tenant> {
+        vec![
+            Tenant {
+                model: 0,
+                class: 1,
+                deadline_us: 500,
+                weight: 1,
+            },
+            Tenant {
+                model: 1,
+                class: 2,
+                deadline_us: 0,
+                weight: 2,
+            },
+        ]
+    }
+
+    #[test]
+    fn bursty_trace_alternates_phases_and_stamps_tenant_slo() {
+        let specs = [("a".to_string(), 4usize), ("b".to_string(), 6)];
+        let tenants = two_tenants();
+        let t = MultiTrace::bursty(21, &specs, &tenants, 8, 2, 1, 5);
+        let again = MultiTrace::bursty(21, &specs, &tenants, 8, 2, 1, 5);
+        assert_eq!(t, again, "tenant traces are deterministic per seed");
+        // weight sum 3 per tick: calm ticks {0,1,4,5} carry 3, burst
+        // ticks {2,3,6,7} carry 15.
+        let counts = tick_counts(&t, 8);
+        assert_eq!(counts, vec![3, 3, 15, 15, 3, 3, 15, 15]);
+        for r in &t.requests {
+            let tenant = tenants.iter().find(|x| x.class == r.class).unwrap();
+            assert_eq!(r.model, tenant.model);
+            assert_eq!(r.deadline_us, tenant.deadline_us);
+            assert_eq!(r.frame.len(), specs[r.model].1);
+        }
+        let classes = t.per_class_counts();
+        assert_eq!(classes.iter().map(|&(_, n)| n).sum::<u64>(), t.requests.len() as u64);
+    }
+
+    #[test]
+    fn diurnal_trace_peaks_mid_trace() {
+        let specs = [("a".to_string(), 4usize), ("b".to_string(), 6)];
+        let t = MultiTrace::diurnal(5, &specs, &two_tenants(), 16, 6);
+        let counts = tick_counts(&t, 16);
+        assert_eq!(counts[0], 3, "trough starts at the base weights");
+        assert_eq!(*counts.last().unwrap(), 3, "and returns to them");
+        let peak = *counts.iter().max().unwrap();
+        assert!(peak > 3 * 3, "mid-trace ramps well above trough: {counts:?}");
+        assert!(counts[8] >= counts[2], "ramp is monotone toward the middle");
+    }
+
+    #[test]
+    fn adversarial_trace_floods_in_windows_only() {
+        let specs = [("a".to_string(), 4usize), ("b".to_string(), 6)];
+        let tenants = two_tenants();
+        // Tenant 1 (class 2) misbehaves: silent in even windows, 8x its
+        // weight in odd ones; tenant 0 (class 1) is steady throughout.
+        let t = MultiTrace::adversarial(13, &specs, &tenants, 1, 8, 2, 8);
+        let mut victim = vec![0usize; 8];
+        let mut flood = vec![0usize; 8];
+        for r in &t.requests {
+            match r.class {
+                1 => victim[r.at_tick as usize] += 1,
+                2 => flood[r.at_tick as usize] += 1,
+                c => panic!("unexpected class {c}"),
+            }
+        }
+        assert_eq!(victim, vec![1; 8], "victim rate is steady");
+        assert_eq!(flood, vec![0, 0, 16, 16, 0, 0, 16, 16]);
     }
 }

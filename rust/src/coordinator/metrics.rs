@@ -70,6 +70,15 @@ impl Default for OccupancyHistogram {
     }
 }
 
+/// Saturate a [`Duration`]'s nanosecond count into `u64`. `as_nanos()`
+/// is `u128`, and the old `as u64` narrowing aliased durations beyond
+/// ~584 years (clock anomalies, requests parked across a suspend) onto
+/// small values — every counter and JSON field now clamps to
+/// `u64::MAX` instead.
+pub fn saturating_nanos(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
 /// A lock-free log2 latency histogram.
 pub struct Histogram {
     buckets: [AtomicU64; BUCKETS],
@@ -97,8 +106,7 @@ impl Histogram {
     }
 
     pub fn record(&self, d: Duration) {
-        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
-        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_index(saturating_nanos(d))].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Point-in-time bucket counts (for merging across shards).
@@ -151,14 +159,30 @@ pub struct Metrics {
 pub struct IntakeMetrics {
     pub accepted: AtomicU64,
     pub rejected: AtomicU64,
-    /// Requests placed on a shard other than their round-robin preference
-    /// (backpressure-aware spill, always within the model's own group).
+    /// Requests placed on a shard other than their dispatch-order
+    /// preference (backpressure-aware spill, always within the model's
+    /// own group).
     pub spilled: AtomicU64,
+    /// Deadline-bearing requests shed by admission control: every live
+    /// candidate shard's predicted completion exceeded the deadline
+    /// budget (DESIGN.md §12). Reconciles with the net layer's
+    /// `err_slo_miss`.
+    pub shed: AtomicU64,
+    /// Autoscale grow events (active shard count incremented).
+    pub scale_up: AtomicU64,
+    /// Autoscale shrink events (active shard count decremented).
+    pub scale_down: AtomicU64,
 }
 
 /// Per-shard serving counters, owned by exactly one worker thread.
 #[derive(Default)]
 pub struct ShardMetrics {
+    /// Requests accepted onto this shard's queue and not yet answered
+    /// (a gauge, not a counter: the submit path increments, the worker
+    /// decrements per answer). `queued × steady_cycles_per_frame` is the
+    /// shard's analytic backlog — the admission/dispatch/autoscale
+    /// denominator of DESIGN.md §12.
+    pub queued: AtomicU64,
     pub completed: AtomicU64,
     pub batches: AtomicU64,
     /// Steady-state modelled cycles attributed per frame (throughput) by
@@ -202,6 +226,8 @@ pub struct ShardSnapshot {
     /// Model id this shard serves (its group's route key; filled in by
     /// `Server::shard_metrics`).
     pub model: String,
+    /// In-flight requests on this shard's queue at snapshot time.
+    pub queued: u64,
     pub completed: u64,
     pub batches: u64,
     pub busy_cycles: u64,
@@ -224,6 +250,7 @@ impl ShardMetrics {
         ShardSnapshot {
             shard,
             model: String::new(),
+            queued: self.queued.load(Ordering::Relaxed),
             completed,
             batches,
             busy_cycles: self.busy_cycles.load(Ordering::Relaxed),
@@ -244,10 +271,22 @@ impl ShardMetrics {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
     pub workers: usize,
+    /// Shards currently admitted by dispatch, summed over groups. Equals
+    /// `workers` without autoscaling; with it, the controller's current
+    /// position within its bounds.
+    pub active_workers: usize,
     /// Model groups covered by this snapshot (1 for a per-model view).
     pub models: usize,
     pub accepted: u64,
     pub rejected: u64,
+    /// Requests shed by deadline admission control (see
+    /// [`IntakeMetrics::shed`]). Intake partitions exactly:
+    /// `submitted == accepted + rejected + shed` (+ `unrouted`
+    /// server-globally).
+    pub shed: u64,
+    /// Autoscale grow/shrink events summed over groups.
+    pub scale_up_events: u64,
+    pub scale_down_events: u64,
     pub spilled: u64,
     /// Tagged submissions naming an unknown model (server-global; 0 in
     /// per-model views).
@@ -294,47 +333,45 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Machine-readable export via `util::json`: counters as integers,
-    /// durations in nanoseconds, the occupancy histogram as an array.
-    /// (Counts pass through `f64`, exact up to 2^53 — far beyond any
-    /// serving session this repo models.)
+    /// Machine-readable export via `util::json`: counters as **exact**
+    /// integers ([`Json::UInt`] — the cycle accumulators overflow f64's
+    /// 2^53 integer range on long sessions, so counters never pass
+    /// through a float), durations in nanoseconds, the occupancy
+    /// histogram as an array.
     pub fn to_json(&self) -> Json {
+        let ns = |d: Duration| Json::from(saturating_nanos(d));
         Json::obj(vec![
             ("workers", Json::from(self.workers)),
+            ("active_workers", Json::from(self.active_workers)),
             ("models", Json::from(self.models)),
-            ("accepted", Json::from(self.accepted as f64)),
-            ("rejected", Json::from(self.rejected as f64)),
-            ("spilled", Json::from(self.spilled as f64)),
-            ("unrouted", Json::from(self.unrouted as f64)),
-            ("completed", Json::from(self.completed as f64)),
-            ("batches", Json::from(self.batches as f64)),
-            ("verified", Json::from(self.verified as f64)),
-            ("mismatches", Json::from(self.mismatches as f64)),
-            ("predicted_cycles", Json::from(self.predicted_cycles as f64)),
-            ("simulated_cycles", Json::from(self.simulated_cycles as f64)),
-            ("cycle_divergence", Json::from(self.cycle_divergence as f64)),
-            ("errored", Json::from(self.errored as f64)),
-            ("occupancy_frames", Json::from(self.occupancy_frames as f64)),
-            ("flush_full", Json::from(self.flush_full as f64)),
-            ("flush_deadline", Json::from(self.flush_deadline as f64)),
-            ("flush_drain", Json::from(self.flush_drain as f64)),
+            ("accepted", Json::from(self.accepted)),
+            ("rejected", Json::from(self.rejected)),
+            ("shed", Json::from(self.shed)),
+            ("scale_up_events", Json::from(self.scale_up_events)),
+            ("scale_down_events", Json::from(self.scale_down_events)),
+            ("spilled", Json::from(self.spilled)),
+            ("unrouted", Json::from(self.unrouted)),
+            ("completed", Json::from(self.completed)),
+            ("batches", Json::from(self.batches)),
+            ("verified", Json::from(self.verified)),
+            ("mismatches", Json::from(self.mismatches)),
+            ("predicted_cycles", Json::from(self.predicted_cycles)),
+            ("simulated_cycles", Json::from(self.simulated_cycles)),
+            ("cycle_divergence", Json::from(self.cycle_divergence)),
+            ("errored", Json::from(self.errored)),
+            ("occupancy_frames", Json::from(self.occupancy_frames)),
+            ("flush_full", Json::from(self.flush_full)),
+            ("flush_deadline", Json::from(self.flush_deadline)),
+            ("flush_drain", Json::from(self.flush_drain)),
             (
                 "batch_occupancy",
-                Json::Arr(
-                    self.batch_occupancy
-                        .iter()
-                        .map(|&c| Json::from(c as f64))
-                        .collect(),
-                ),
+                Json::arr_u64(&self.batch_occupancy),
             ),
             ("mean_batch", Json::from(self.mean_batch)),
-            (
-                "mean_service_ns",
-                Json::from(self.mean_service.as_nanos() as f64),
-            ),
-            ("p50_ns", Json::from(self.p50.as_nanos() as f64)),
-            ("p95_ns", Json::from(self.p95.as_nanos() as f64)),
-            ("p99_ns", Json::from(self.p99.as_nanos() as f64)),
+            ("mean_service_ns", ns(self.mean_service)),
+            ("p50_ns", ns(self.p50)),
+            ("p95_ns", ns(self.p95)),
+            ("p99_ns", ns(self.p99)),
             ("projected_fps", Json::from(self.projected_fps)),
             ("aggregate_fps", Json::from(self.aggregate_fps)),
         ])
@@ -370,6 +407,8 @@ impl ModelMetricsSnapshot {
 /// * `responses_ok` ↔ shard `completed` (when the front-end is the only
 ///   intake);
 /// * `err_queue_full` ↔ intake `rejected`;
+/// * `err_slo_miss` ↔ intake `shed` (deadline admission control,
+///   DESIGN.md §12);
 /// * `err_unknown_model` ↔ [`Metrics::unrouted`];
 /// * `err_invalid_frame` ↔ shard `errored`;
 /// * `err_draining` — refused at the net layer or by a closed intake
@@ -379,7 +418,7 @@ impl ModelMetricsSnapshot {
 ///   requests, excluded from the `requests` balance below.
 ///
 /// Once drained, `requests == responses_ok + err_queue_full +
-/// err_invalid_frame + err_unknown_model + err_draining`.
+/// err_slo_miss + err_invalid_frame + err_unknown_model + err_draining`.
 ///
 /// [`ErrorCode`]: crate::net::proto::ErrorCode
 #[derive(Debug, Default)]
@@ -392,6 +431,9 @@ pub struct NetMetrics {
     pub requests: AtomicU64,
     pub responses_ok: AtomicU64,
     pub err_queue_full: AtomicU64,
+    /// Requests shed by deadline admission control
+    /// ([`crate::net::proto::ErrorCode::SloMiss`]).
+    pub err_slo_miss: AtomicU64,
     pub err_invalid_frame: AtomicU64,
     pub err_unknown_model: AtomicU64,
     pub err_draining: AtomicU64,
@@ -406,6 +448,7 @@ impl NetMetrics {
             requests: self.requests.load(Ordering::Relaxed),
             responses_ok: self.responses_ok.load(Ordering::Relaxed),
             err_queue_full: self.err_queue_full.load(Ordering::Relaxed),
+            err_slo_miss: self.err_slo_miss.load(Ordering::Relaxed),
             err_invalid_frame: self.err_invalid_frame.load(Ordering::Relaxed),
             err_unknown_model: self.err_unknown_model.load(Ordering::Relaxed),
             err_draining: self.err_draining.load(Ordering::Relaxed),
@@ -422,6 +465,7 @@ pub struct NetMetricsSnapshot {
     pub requests: u64,
     pub responses_ok: u64,
     pub err_queue_full: u64,
+    pub err_slo_miss: u64,
     pub err_invalid_frame: u64,
     pub err_unknown_model: u64,
     pub err_draining: u64,
@@ -432,20 +476,25 @@ impl NetMetricsSnapshot {
     /// Protocol errors answered to decoded requests (everything except
     /// `err_malformed`, which never became a request).
     pub fn errors_total(&self) -> u64 {
-        self.err_queue_full + self.err_invalid_frame + self.err_unknown_model + self.err_draining
+        self.err_queue_full
+            + self.err_slo_miss
+            + self.err_invalid_frame
+            + self.err_unknown_model
+            + self.err_draining
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("connections", Json::from(self.connections as f64)),
-            ("disconnects", Json::from(self.disconnects as f64)),
-            ("requests", Json::from(self.requests as f64)),
-            ("responses_ok", Json::from(self.responses_ok as f64)),
-            ("err_queue_full", Json::from(self.err_queue_full as f64)),
-            ("err_invalid_frame", Json::from(self.err_invalid_frame as f64)),
-            ("err_unknown_model", Json::from(self.err_unknown_model as f64)),
-            ("err_draining", Json::from(self.err_draining as f64)),
-            ("err_malformed", Json::from(self.err_malformed as f64)),
+            ("connections", Json::from(self.connections)),
+            ("disconnects", Json::from(self.disconnects)),
+            ("requests", Json::from(self.requests)),
+            ("responses_ok", Json::from(self.responses_ok)),
+            ("err_queue_full", Json::from(self.err_queue_full)),
+            ("err_slo_miss", Json::from(self.err_slo_miss)),
+            ("err_invalid_frame", Json::from(self.err_invalid_frame)),
+            ("err_unknown_model", Json::from(self.err_unknown_model)),
+            ("err_draining", Json::from(self.err_draining)),
+            ("err_malformed", Json::from(self.err_malformed)),
         ])
     }
 }
@@ -502,12 +551,12 @@ pub struct ReactorStatsSnapshot {
 impl ReactorStatsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("polls", Json::from(self.polls as f64)),
-            ("events", Json::from(self.events as f64)),
-            ("wakeups", Json::from(self.wakeups as f64)),
-            ("completions", Json::from(self.completions as f64)),
-            ("read_pauses", Json::from(self.read_pauses as f64)),
-            ("stall_teardowns", Json::from(self.stall_teardowns as f64)),
+            ("polls", Json::from(self.polls)),
+            ("events", Json::from(self.events)),
+            ("wakeups", Json::from(self.wakeups)),
+            ("completions", Json::from(self.completions)),
+            ("read_pauses", Json::from(self.read_pauses)),
+            ("stall_teardowns", Json::from(self.stall_teardowns)),
         ])
     }
 }
@@ -615,9 +664,13 @@ mod tests {
     fn sample_snapshot() -> MetricsSnapshot {
         MetricsSnapshot {
             workers: 2,
+            active_workers: 2,
             models: 1,
             accepted: 10,
             rejected: 1,
+            shed: 0,
+            scale_up_events: 0,
+            scale_down_events: 0,
             spilled: 0,
             unrouted: 2,
             completed: 9,
@@ -655,6 +708,43 @@ mod tests {
             parsed.get("batch_occupancy").as_arr().unwrap().len(),
             OCC_SLOTS
         );
+    }
+
+    #[test]
+    fn counters_above_2_pow_53_survive_json_exactly() {
+        // The old serialization went through `as f64`, which aliases
+        // integers above 2^53: (2^53 + 1) as f64 == 2^53. Cycle
+        // accumulators reach that range on long sessions, so the report
+        // must round-trip them exactly.
+        let big = (1u64 << 53) + 1;
+        assert_ne!((big as f64) as u64, big, "f64 would alias this value");
+        let mut snap = sample_snapshot();
+        snap.predicted_cycles = big;
+        snap.simulated_cycles = u64::MAX;
+        snap.accepted = u64::MAX - 1;
+        let parsed = Json::parse(&snap.to_json().render_pretty()).unwrap();
+        assert_eq!(parsed.get("predicted_cycles").as_u64(), Some(big));
+        assert_eq!(parsed.get("simulated_cycles").as_u64(), Some(u64::MAX));
+        assert_eq!(parsed.get("accepted").as_u64(), Some(u64::MAX - 1));
+
+        let net = NetMetrics::default();
+        net.requests.fetch_add(big, Ordering::Relaxed);
+        let nparsed = Json::parse(&net.snapshot().to_json().render()).unwrap();
+        assert_eq!(nparsed.get("requests").as_u64(), Some(big));
+    }
+
+    #[test]
+    fn nanos_narrowing_saturates_at_the_u64_boundary() {
+        // Everything up to u64::MAX nanoseconds converts exactly...
+        assert_eq!(saturating_nanos(Duration::ZERO), 0);
+        assert_eq!(saturating_nanos(Duration::from_nanos(u64::MAX)), u64::MAX);
+        // ...and one nanosecond past the boundary clamps instead of
+        // aliasing small the way the old `as u64` narrowing did.
+        let over = Duration::from_nanos(u64::MAX) + Duration::from_nanos(1);
+        assert!(over.as_nanos() > u64::MAX as u128);
+        assert_eq!(saturating_nanos(over), u64::MAX);
+        assert_eq!(over.as_nanos() as u64, 0, "the bug this replaces");
+        assert_eq!(saturating_nanos(Duration::MAX), u64::MAX);
     }
 
     #[test]

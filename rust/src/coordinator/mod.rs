@@ -15,10 +15,17 @@
 //!   simulation at all ([`EngineKind::Compiled`]);
 //!   [`EngineKind::Interpreter`] keeps the fused cycle-exact loop as a
 //!   serving-time oracle and cross-checks the prediction on every group;
-//! * **data-rate-aware dispatch** — [`Server::submit`] places each request
-//!   on its round-robin-preferred shard, spilling to the next shard with
-//!   queue space when the preferred one is saturated, and rejecting only
-//!   when *every* shard queue is full (global backpressure);
+//! * **model-predictive dispatch** (DESIGN.md §12) — [`Server::submit`]
+//!   tries shards in ascending predicted completion (`first_frame_latency
+//!   + (queued+1) × steady_cycles_per_frame`, from the same analytic
+//!   schedule model that certifies folding), spilling on saturation and
+//!   rejecting only when *every* candidate queue is full; blind
+//!   round-robin stays config-selectable ([`DispatchKind::RoundRobin`])
+//!   as the differential oracle. Deadline-bearing requests pass the same
+//!   prediction through **admission control** (shed early as
+//!   `ErrorCode::SloMiss` when no shard can meet the budget), and the
+//!   same backlog figure drives optional per-group **shard autoscaling**
+//!   ([`AutoscaleConfig`]);
 //! * **deadline-aware micro-batching** — each shard accumulates requests
 //!   into a batch of up to `max_batch` frames, flushing early when the
 //!   *oldest* queued request's age reaches `batch_deadline` (whichever
@@ -144,6 +151,159 @@ impl EngineKind {
     }
 }
 
+/// How requests pick a shard within their model's group (DESIGN.md §12).
+///
+/// Mirrors [`EngineKind`]'s selection pattern: the analytic default plus
+/// a config-selectable blind oracle, the way `run_interpreted` anchors
+/// the compiled engine — the SLO gate test replays one trace under both
+/// and pins that prediction-aware dispatch strictly improves SLO
+/// attainment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchKind {
+    /// Least-predicted-load: shards are tried in ascending order of
+    /// `queued × steady_cycles_per_frame` (the analytic backlog, the
+    /// same denominator admission control uses), with round-robin
+    /// rotation breaking ties so idle groups still spread evenly. The
+    /// serving default.
+    #[default]
+    Predictive,
+    /// Blind round-robin with backpressure spill — the pre-§12 dispatch,
+    /// kept as the differential oracle.
+    RoundRobin,
+}
+
+impl DispatchKind {
+    /// Parse a dispatch policy name (`predictive` | `roundrobin`;
+    /// case-insensitive) — shared by the env override and the CLI's
+    /// `--dispatch` flag.
+    pub fn parse(s: &str) -> Option<DispatchKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "predictive" | "least-loaded" | "least_loaded" => Some(DispatchKind::Predictive),
+            "roundrobin" | "round-robin" | "rr" => Some(DispatchKind::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// The policy named by `$CNN_FLOW_DISPATCH`. Unset or empty means
+    /// "no override"; an unrecognized non-empty value **panics**, same
+    /// rationale as [`EngineKind::from_env`].
+    pub fn from_env() -> Option<DispatchKind> {
+        let raw = std::env::var("CNN_FLOW_DISPATCH").ok()?;
+        if raw.is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Some(d) => Some(d),
+            None => panic!(
+                "CNN_FLOW_DISPATCH='{raw}' is not a recognized dispatch policy \
+                 (expected predictive | roundrobin)"
+            ),
+        }
+    }
+
+    /// [`DispatchKind::from_env`], falling back to the predictive default.
+    pub fn default_from_env() -> DispatchKind {
+        Self::from_env().unwrap_or_default()
+    }
+}
+
+impl std::fmt::Display for DispatchKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DispatchKind::Predictive => "predictive",
+            DispatchKind::RoundRobin => "roundrobin",
+        })
+    }
+}
+
+/// Per-model shard-group autoscaling bounds (DESIGN.md §12). Every
+/// route's shards are still spawned up front (threads parked on an empty
+/// queue are nearly free and the registry has already amortized
+/// lowering); autoscaling gates how many of them dispatch admits, so the
+/// `workers` gauge stays the spawned count and `active_workers` tracks
+/// the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleConfig {
+    /// Floor on active shards per group (clamped to at least 1).
+    pub min_workers: usize,
+    /// Ceiling on active shards per group (clamped to the spawned count).
+    pub max_workers: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_workers: 1,
+            max_workers: usize::MAX,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Parse an autoscale spec: `off` → disabled, `on` → full range
+    /// (1..=spawned), `MIN:MAX` → explicit bounds. `None` = unrecognized.
+    pub fn parse(s: &str) -> Option<Option<AutoscaleConfig>> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "0" | "false" => return Some(None),
+            "on" | "1" | "true" => return Some(Some(AutoscaleConfig::default())),
+            _ => {}
+        }
+        let (lo, hi) = s.split_once(':')?;
+        let min_workers = lo.trim().parse::<usize>().ok()?;
+        let max_workers = hi.trim().parse::<usize>().ok()?;
+        if min_workers == 0 || max_workers < min_workers {
+            return None;
+        }
+        Some(Some(AutoscaleConfig {
+            min_workers,
+            max_workers,
+        }))
+    }
+
+    /// The autoscale setting named by `$CNN_FLOW_AUTOSCALE` (`on`, `off`,
+    /// or `MIN:MAX`). Unset or empty means "no override"; an
+    /// unrecognized non-empty value **panics**, same rationale as
+    /// [`EngineKind::from_env`].
+    pub fn from_env() -> Option<Option<AutoscaleConfig>> {
+        let raw = std::env::var("CNN_FLOW_AUTOSCALE").ok()?;
+        if raw.is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Some(v) => Some(v),
+            None => panic!(
+                "CNN_FLOW_AUTOSCALE='{raw}' is not a recognized autoscale spec \
+                 (expected on | off | MIN:MAX)"
+            ),
+        }
+    }
+
+    /// [`AutoscaleConfig::from_env`], falling back to disabled.
+    pub fn default_from_env() -> Option<AutoscaleConfig> {
+        Self::from_env().unwrap_or(None)
+    }
+}
+
+/// The admission-control setting named by `$CNN_FLOW_ADMISSION` (`on` |
+/// `off`). Unset or empty means "no override" (admission defaults on —
+/// it only affects deadline-bearing requests, so deadline-free traffic
+/// is untouched either way); typos panic, same rationale as
+/// [`EngineKind::from_env`].
+pub fn admission_from_env() -> Option<bool> {
+    let raw = std::env::var("CNN_FLOW_ADMISSION").ok()?;
+    if raw.is_empty() {
+        return None;
+    }
+    match raw.to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" => Some(true),
+        "off" | "0" | "false" => Some(false),
+        _ => panic!(
+            "CNN_FLOW_ADMISSION='{raw}' is not a recognized admission setting \
+             (expected on | off)"
+        ),
+    }
+}
+
 /// One row of the multi-model route table: how many worker shards the
 /// named model's group gets in [`Server::start_multi`]. Models without a
 /// route fall back to [`ServerConfig::workers`].
@@ -182,6 +342,21 @@ pub struct ServerConfig {
     /// [`ServerConfig::workers`] shards. Ignored by the single-model
     /// constructors beyond their own model's entry.
     pub routes: Vec<ModelRoute>,
+    /// Shard-selection policy within a group (predictive by default; the
+    /// default honours `$CNN_FLOW_DISPATCH`, see
+    /// [`DispatchKind::from_env`]).
+    pub dispatch: DispatchKind,
+    /// Deadline admission control: when on, a deadline-bearing request
+    /// whose predicted completion exceeds its budget on *every* candidate
+    /// shard is shed at submit time (`"slo miss: …"`, wire
+    /// `ErrorCode::SloMiss`) instead of enqueued to fail late. Default on
+    /// (deadline-free requests are never shed); the default honours
+    /// `$CNN_FLOW_ADMISSION`, see [`admission_from_env`].
+    pub admission: bool,
+    /// Per-group shard autoscaling bounds (None = all spawned shards stay
+    /// active). The default honours `$CNN_FLOW_AUTOSCALE`, see
+    /// [`AutoscaleConfig::from_env`].
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for ServerConfig {
@@ -195,6 +370,9 @@ impl Default for ServerConfig {
             batch_deadline: Duration::from_millis(1),
             engine: EngineKind::default_from_env(),
             routes: Vec::new(),
+            dispatch: DispatchKind::default_from_env(),
+            admission: admission_from_env().unwrap_or(true),
+            autoscale: AutoscaleConfig::default_from_env(),
         }
     }
 }
@@ -233,6 +411,31 @@ pub struct InferResponse {
     pub sim_latency_cycles: u64,
     /// Wall-clock time from enqueue to answer.
     pub service_time: Duration,
+    /// Admission-time predicted completion in modelled cycles
+    /// (`first_frame_latency + (queued+1) × steady_cycles_per_frame` on
+    /// the shard that accepted the request). 0 for deadline-free
+    /// requests — the wire reply then stays on the v1 encoding.
+    pub predicted_cycles: u64,
+    /// Whether `predicted_cycles` fit the request's deadline budget at
+    /// admission. Decided from modelled time, not wall clock, so it is
+    /// deterministic for a given queue state and identical across
+    /// engines/net cores; always false for deadline-free requests.
+    pub slo_met: bool,
+}
+
+/// Per-request submit-time options: the SLO extension carried by the v2
+/// wire protocol. `Default` (no deadline, class 0) reproduces the
+/// pre-§12 behaviour bit-for-bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Completion deadline in microseconds of *modelled* hardware time
+    /// (0 = none). Admission converts it to a cycle budget via
+    /// [`ServerConfig::clock_hz`].
+    pub deadline_us: u64,
+    /// Priority class, an opaque tenant label. The coordinator carries it
+    /// for per-class SLO reporting (loadgen buckets its reports by
+    /// class); it does not affect scheduling.
+    pub class: u8,
 }
 
 /// Completion hook for nonblocking front-ends: invoked by the worker
@@ -250,6 +453,10 @@ struct Request {
     reply: SyncSender<Result<InferResponse, String>>,
     /// See [`CompletionNotify`]; `None` for blocking callers.
     notify: Option<Arc<dyn CompletionNotify>>,
+    /// Stamped at admission for deadline-bearing requests (else 0/false);
+    /// echoed verbatim into [`InferResponse`] by the worker.
+    predicted_cycles: u64,
+    slo_met: bool,
 }
 
 impl Request {
@@ -266,6 +473,30 @@ impl Request {
 enum Job {
     Infer(Request),
     Shutdown,
+}
+
+/// Consecutive zero-backlog autoscale evaluations before the controller
+/// shrinks a group by one shard (hysteresis against calm gaps inside a
+/// bursty trace).
+const SHRINK_IDLE_TICKS: usize = 64;
+
+/// Advance a dispatch cursor over `n` slots and return the slot to try
+/// first. The stored value is kept reduced (`< n`) via `fetch_update`
+/// rather than `fetch_add(1) % n`: a free-running counter skews one step
+/// at `usize` wraparound whenever `n` is not a power of two (e.g. n=3:
+/// `usize::MAX % 3 == 0` is followed by `0 % 3 == 0` — shard 0 twice).
+/// Reducing both the stored and the returned value makes the cycle exact
+/// for every `n` and also tolerates `n` shrinking between calls
+/// (autoscale), since any stale out-of-range value reduces mod the new
+/// `n`.
+fn rr_next(rr: &AtomicUsize, n: usize) -> usize {
+    let n = n.max(1);
+    let prev = rr
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some((v % n + 1) % n)
+        })
+        .expect("rr_next update is infallible");
+    prev % n
 }
 
 /// A submitted-but-unanswered request (from [`Server::submit`]).
@@ -308,15 +539,37 @@ struct Shard {
 }
 
 /// One model's shard group: the shards serving its pre-lowered pipeline,
-/// that model's round-robin cursor, and its intake counters.
+/// that model's dispatch cursor, its analytic capacity constants, and its
+/// intake counters.
 struct Group {
     model: String,
     /// Flattened input frame length the group's pipeline expects —
     /// advertised to TCP clients via [`Server::model_specs`].
     input_len: usize,
     shards: Vec<Shard>,
+    /// Dispatch cursor. Stored value is always kept `< shards.len()` (see
+    /// [`rr_next`]) so the old `fetch_add % n` wraparound skew cannot
+    /// occur.
     rr: AtomicUsize,
     intake: IntakeMetrics,
+    /// Analytic steady-state cycles per frame from the group's
+    /// `SchedulePrediction` (engine-independent: folded execution
+    /// re-accounts unit work, never completion cycles — DESIGN.md §10).
+    /// Floor 1 so backlog products are never zero.
+    steady_cpf: u64,
+    /// Analytic first-frame fill latency (pipeline depth cost paid once
+    /// per batch group), the constant term of the admission predictor.
+    first_latency: u64,
+    /// Per-shard backlog allowance in cycles before autoscale grows the
+    /// group: `max(batch_deadline in cycles, max_batch × steady_cpf)`.
+    allowance_cycles: u64,
+    /// Number of leading shards dispatch may select
+    /// (`shards[..active]`). Autoscale moves it within its configured
+    /// bounds; without autoscale it stays `shards.len()`. Deactivated
+    /// shards keep draining whatever they already queued.
+    active: AtomicUsize,
+    /// Consecutive zero-backlog autoscale evaluations (shrink hysteresis).
+    idle: AtomicUsize,
 }
 
 /// The running sharded server (one or many models).
@@ -393,6 +646,20 @@ impl Server {
         for (model_id, base_sim) in models {
             let workers = config.route_workers(&model_id);
             let input_len = base_sim.input_len();
+            // Analytic capacity constants for admission/dispatch/autoscale
+            // (DESIGN.md §12). Engine-independent: the folded engine's
+            // prediction shares completion cycles with the compiled one.
+            let steady_cpf = base_sim.predicted.steady_cycles_per_frame.max(1);
+            let first_latency = base_sim.predicted.first_frame_latency;
+            let deadline_cycles =
+                (config.batch_deadline.as_secs_f64() * config.clock_hz) as u64;
+            let allowance_cycles = deadline_cycles
+                .max(steady_cpf.saturating_mul(config.max_batch.max(1) as u64))
+                .max(1);
+            let active = match config.autoscale {
+                Some(a) => a.min_workers.clamp(1, workers.min(a.max_workers.max(1))),
+                None => workers,
+            };
             // Only the verified model's shards sample responses — the
             // golden executable belongs to exactly one model.
             let samples = verify_model.is_some()
@@ -425,6 +692,11 @@ impl Server {
                 shards,
                 rr: AtomicUsize::new(0),
                 intake: IntakeMetrics::default(),
+                steady_cpf,
+                first_latency,
+                allowance_cycles,
+                active: AtomicUsize::new(active),
+                idle: AtomicUsize::new(0),
             });
         }
         // Workers hold the only remaining sampling senders: the verifier's
@@ -457,45 +729,162 @@ impl Server {
             .collect()
     }
 
-    /// Dispatch within one model's shard group: round-robin with
-    /// backpressure-aware spill across that group's shards; `Err` only
-    /// when every queue in the group is full (counted as rejected) or the
-    /// server has stopped.
+    /// Predicted completion of a request admitted to `shard` right now,
+    /// in modelled cycles: the pipeline fill cost plus one steady-state
+    /// interval per request already queued (or in flight) ahead of it,
+    /// plus its own. Queue depth × predicted cycles-per-frame is the
+    /// denominator everywhere in §12 — admission, dispatch order, and
+    /// autoscale all read this one formula.
+    fn predict_on(group: &Group, shard: &Shard) -> u64 {
+        let queued = shard.metrics.queued.load(Ordering::Relaxed);
+        group
+            .first_latency
+            .saturating_add(queued.saturating_add(1).saturating_mul(group.steady_cpf))
+    }
+
+    /// Convert a microsecond deadline into a budget of modelled cycles.
+    fn budget_cycles(&self, deadline_us: u64) -> u64 {
+        (deadline_us as f64 * self.config.clock_hz / 1.0e6) as u64
+    }
+
+    /// One autoscale evaluation on the submit path ("between batches" —
+    /// submission is the only clocked edge the coordinator owns). Grows
+    /// the active-shard count when the analytic backlog exceeds one
+    /// allowance per active shard; shrinks one step toward the floor
+    /// after a run of zero-backlog evaluations (hysteresis against
+    /// flapping).
+    fn autoscale_tick(&self, group: &Group, bounds: AutoscaleConfig) {
+        let spawned = group.shards.len();
+        let max = bounds.max_workers.clamp(1, spawned);
+        let min = bounds.min_workers.clamp(1, max);
+        let active = group.active.load(Ordering::Relaxed).clamp(min, max);
+        let backlog: u64 = group.shards[..active]
+            .iter()
+            .map(|s| s.metrics.queued.load(Ordering::Relaxed))
+            .sum();
+        let backlog_cycles = backlog.saturating_mul(group.steady_cpf);
+        if backlog_cycles > group.allowance_cycles.saturating_mul(active as u64) && active < max
+        {
+            if group
+                .active
+                .compare_exchange(active, active + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                group.intake.scale_up.fetch_add(1, Ordering::Relaxed);
+            }
+            group.idle.store(0, Ordering::Relaxed);
+        } else if backlog == 0 && active > min {
+            let idle = group.idle.fetch_add(1, Ordering::Relaxed) + 1;
+            if idle >= SHRINK_IDLE_TICKS {
+                if group
+                    .active
+                    .compare_exchange(active, active - 1, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    group.intake.scale_down.fetch_add(1, Ordering::Relaxed);
+                }
+                group.idle.store(0, Ordering::Relaxed);
+            }
+        } else {
+            group.idle.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Dispatch within one model's shard group (DESIGN.md §12): shards
+    /// are tried in policy order — ascending predicted load
+    /// ([`DispatchKind::Predictive`], rotation breaking ties) or plain
+    /// rotation ([`DispatchKind::RoundRobin`]) — with backpressure-aware
+    /// spill. Deadline-bearing requests are screened by admission
+    /// control first: shards that cannot meet the budget are skipped,
+    /// and when *no* shard can, the request is shed (`"slo miss: …"`)
+    /// instead of enqueued to fail late. `Err` otherwise only when every
+    /// candidate queue is full (counted as rejected) or the server has
+    /// stopped.
     fn submit_group(
         &self,
         group: &Group,
         x_q: Vec<i64>,
+        opts: SubmitOpts,
         notify: Option<Arc<dyn CompletionNotify>>,
     ) -> Result<Pending, String> {
+        if let Some(bounds) = self.config.autoscale {
+            self.autoscale_tick(group, bounds);
+        }
+        let n = group.shards.len();
+        let active = group.active.load(Ordering::Acquire).clamp(1, n);
+        let budget = if opts.deadline_us == 0 {
+            None
+        } else {
+            Some(self.budget_cycles(opts.deadline_us))
+        };
+
+        // Attempt order: rotation offset first (also the predictive
+        // tie-break, so an idle group still wears evenly), then a stable
+        // sort by predicted load when the policy is predictive.
+        let preferred = rr_next(&group.rr, active);
+        let mut order: Vec<usize> = (0..active).map(|i| (preferred + i) % active).collect();
+        if self.config.dispatch == DispatchKind::Predictive {
+            order.sort_by_key(|&i| Self::predict_on(group, &group.shards[i]));
+        }
+
         let (rtx, rrx) = sync_channel(1);
-        let mut job = Job::Infer(Request {
+        let mut job = Some(Job::Infer(Request {
             x_q,
             enqueued: Instant::now(),
             reply: rtx,
             notify,
-        });
-        let n = group.shards.len();
-        let preferred = group.rr.fetch_add(1, Ordering::Relaxed) % n;
+            predicted_cycles: 0,
+            slo_met: false,
+        }));
         let mut disconnected = 0usize;
-        for i in 0..n {
-            let shard = &group.shards[(preferred + i) % n];
-            match shard.tx.try_send(job) {
+        let mut screened = 0usize;
+        let mut min_predicted = u64::MAX;
+        for (attempt, &idx) in order.iter().enumerate() {
+            let shard = &group.shards[idx];
+            let predicted = Self::predict_on(group, shard);
+            min_predicted = min_predicted.min(predicted);
+            if let Some(b) = budget {
+                if self.config.admission && predicted > b {
+                    screened += 1;
+                    continue;
+                }
+            }
+            let mut j = job.take().expect("job consumed before send");
+            if let Job::Infer(req) = &mut j {
+                // Stamp the prediction for the shard actually tried; with
+                // admission off this is how blind dispatch still reports
+                // misses honestly (`slo_met` is decided here either way).
+                req.predicted_cycles = if budget.is_some() { predicted } else { 0 };
+                req.slo_met = budget.is_some_and(|b| predicted <= b);
+            }
+            match shard.tx.try_send(j) {
                 Ok(()) => {
+                    shard.metrics.queued.fetch_add(1, Ordering::Relaxed);
                     group.intake.accepted.fetch_add(1, Ordering::Relaxed);
-                    if i > 0 {
+                    if attempt > 0 {
                         group.intake.spilled.fetch_add(1, Ordering::Relaxed);
                     }
                     return Ok(Pending { rx: rrx });
                 }
-                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Full(j)) => job = Some(j),
                 Err(TrySendError::Disconnected(j)) => {
-                    job = j;
+                    job = Some(j);
                     disconnected += 1;
                 }
             }
         }
-        if disconnected == n {
+        if disconnected == active {
             return Err("server stopped".into());
+        }
+        if screened == active - disconnected {
+            // Every live candidate failed the admission screen: cheap
+            // shed beats late work. The "slo miss" prefix is the wire
+            // contract for `ErrorCode::SloMiss` (net/proto.rs).
+            group.intake.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(format!(
+                "slo miss: predicted {min_predicted} cycles exceeds deadline budget {} cycles",
+                budget.unwrap_or(0)
+            ));
         }
         group.intake.rejected.fetch_add(1, Ordering::Relaxed);
         Err("backpressure: all shard queues full".into())
@@ -507,14 +896,14 @@ impl Server {
         if !self.open.load(Ordering::Acquire) {
             return Err("server stopped".into());
         }
-        self.submit_group(&self.groups[0], x_q, None)
+        self.submit_group(&self.groups[0], x_q, SubmitOpts::default(), None)
     }
 
     /// Enqueue a tagged request for `model`'s shard group. Unknown model
     /// ids are refused (and counted as `unrouted` in the snapshot);
     /// requests never spill across models.
     pub fn submit_to(&self, model: &str, x_q: Vec<i64>) -> Result<Pending, String> {
-        self.submit_to_notified(model, x_q, None)
+        self.submit_to_opts(model, x_q, SubmitOpts::default(), None)
     }
 
     /// [`submit_to`](Server::submit_to) with a completion hook: `notify`
@@ -529,11 +918,27 @@ impl Server {
         x_q: Vec<i64>,
         notify: Option<Arc<dyn CompletionNotify>>,
     ) -> Result<Pending, String> {
+        self.submit_to_opts(model, x_q, SubmitOpts::default(), notify)
+    }
+
+    /// [`submit_to_notified`](Server::submit_to_notified) with per-request
+    /// SLO options ([`SubmitOpts`]) — the full submit surface both TCP
+    /// cores use. Deadline-bearing requests go through admission control
+    /// when [`ServerConfig::admission`] is on; a shed request returns
+    /// `Err("slo miss: …")` synchronously (counted in the `shed`
+    /// snapshot gauge, wire `ErrorCode::SloMiss`).
+    pub fn submit_to_opts(
+        &self,
+        model: &str,
+        x_q: Vec<i64>,
+        opts: SubmitOpts,
+        notify: Option<Arc<dyn CompletionNotify>>,
+    ) -> Result<Pending, String> {
         if !self.open.load(Ordering::Acquire) {
             return Err("server stopped".into());
         }
         match self.groups.iter().find(|g| g.model == model) {
-            Some(group) => self.submit_group(group, x_q, notify),
+            Some(group) => self.submit_group(group, x_q, opts, notify),
             None => {
                 self.metrics.unrouted.fetch_add(1, Ordering::Relaxed);
                 Err(format!("no route for model '{model}'"))
@@ -559,8 +964,12 @@ impl Server {
     /// per-model views report them as 0 by contract (DESIGN.md §7).
     fn snapshot_of(&self, groups: &[&Group]) -> MetricsSnapshot {
         let mut workers = 0usize;
+        let mut active_workers = 0usize;
         let mut accepted = 0u64;
         let mut rejected = 0u64;
+        let mut shed = 0u64;
+        let mut scale_up_events = 0u64;
+        let mut scale_down_events = 0u64;
         let mut spilled = 0u64;
         let mut completed = 0u64;
         let mut batches = 0u64;
@@ -579,8 +988,12 @@ impl Server {
         let mut buckets = [0u64; metrics::BUCKETS];
         for g in groups {
             workers += g.shards.len();
+            active_workers += g.active.load(Ordering::Relaxed).clamp(1, g.shards.len());
             accepted += g.intake.accepted.load(Ordering::Relaxed);
             rejected += g.intake.rejected.load(Ordering::Relaxed);
+            shed += g.intake.shed.load(Ordering::Relaxed);
+            scale_up_events += g.intake.scale_up.load(Ordering::Relaxed);
+            scale_down_events += g.intake.scale_down.load(Ordering::Relaxed);
             spilled += g.intake.spilled.load(Ordering::Relaxed);
             for s in &g.shards {
                 completed += s.metrics.completed.load(Ordering::Relaxed);
@@ -609,9 +1022,13 @@ impl Server {
         }
         MetricsSnapshot {
             workers,
+            active_workers,
             models: groups.len(),
             accepted,
             rejected,
+            shed,
+            scale_up_events,
+            scale_down_events,
             spilled,
             unrouted: 0,
             completed,
@@ -1029,6 +1446,9 @@ fn run_group(
         .busy_cycles
         .fetch_add(result.group_cycles, Ordering::Relaxed);
     for (req, outcome) in group.into_iter().zip(result.outputs.into_iter()) {
+        // The request leaves this shard's analytic backlog when answered,
+        // on every path — the `queued` gauge feeds admission predictions.
+        shard.queued.fetch_sub(1, Ordering::Relaxed);
         let logits = match outcome {
             Ok(logits) => logits,
             Err(e) => {
@@ -1050,14 +1470,18 @@ fn run_group(
             argmax,
             sim_latency_cycles: result.latency_cycles,
             service_time: service,
+            predicted_cycles: req.predicted_cycles,
+            slo_met: req.slo_met,
         };
         shard.completed.fetch_add(1, Ordering::Relaxed);
         shard
             .sim_cycles_total
             .fetch_add(result.per_frame_cycles, Ordering::Relaxed);
+        // Saturate the u128→u64 narrowing: a clock anomaly (or a request
+        // parked for centuries) must clamp, not alias small.
         shard
             .service_ns_total
-            .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(metrics::saturating_nanos(service), Ordering::Relaxed);
         shard.latency.record(service);
         if config.verify_every > 0 && *serial % config.verify_every as u64 == 0 {
             // Sampled golden check; drop silently if the verifier
@@ -1314,6 +1738,8 @@ mod tests {
                 queue_depth: 8,
                 verify_every: 0,
                 batch_deadline: Duration::from_millis(0),
+                dispatch: DispatchKind::RoundRobin,
+                autoscale: None,
                 ..Default::default()
             },
             None,
@@ -1486,6 +1912,193 @@ mod tests {
         )
         .is_err());
         assert!(Server::start_multi(Vec::new(), ServerConfig::default(), None).is_err());
+    }
+
+    #[test]
+    fn dispatch_and_autoscale_specs_parse() {
+        assert_eq!(DispatchKind::parse("Predictive"), Some(DispatchKind::Predictive));
+        assert_eq!(DispatchKind::parse("least-loaded"), Some(DispatchKind::Predictive));
+        assert_eq!(DispatchKind::parse("rr"), Some(DispatchKind::RoundRobin));
+        assert_eq!(DispatchKind::parse("Round-Robin"), Some(DispatchKind::RoundRobin));
+        assert_eq!(DispatchKind::parse("random"), None);
+
+        assert_eq!(AutoscaleConfig::parse("off"), Some(None));
+        assert_eq!(
+            AutoscaleConfig::parse("on"),
+            Some(Some(AutoscaleConfig::default()))
+        );
+        assert_eq!(
+            AutoscaleConfig::parse("2:6"),
+            Some(Some(AutoscaleConfig {
+                min_workers: 2,
+                max_workers: 6,
+            }))
+        );
+        assert_eq!(AutoscaleConfig::parse("0:4"), None, "floor must be positive");
+        assert_eq!(AutoscaleConfig::parse("4:2"), None, "inverted bounds");
+        assert_eq!(AutoscaleConfig::parse("many"), None);
+    }
+
+    #[test]
+    fn rr_cursor_cycles_exactly_at_wraparound() {
+        // The old free-running `fetch_add % n` cursor visits shard 0
+        // twice in a row at usize wraparound for any n that doesn't
+        // divide 2^64 (usize::MAX % 3 == 0, then 0 % 3 == 0). The
+        // reduced cursor keeps the cycle exact from any starting value.
+        let rr = AtomicUsize::new(usize::MAX);
+        let seq: Vec<usize> = (0..6).map(|_| rr_next(&rr, 3)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        // A stale out-of-range cursor (autoscale shrank the group)
+        // reduces mod the new n instead of indexing out of bounds.
+        let rr = AtomicUsize::new(5);
+        assert_eq!(rr_next(&rr, 2), 1);
+        assert_eq!(rr_next(&rr, 2), 0);
+        // n == 0 is clamped, never a divide-by-zero.
+        let rr = AtomicUsize::new(0);
+        assert_eq!(rr_next(&rr, 0), 0);
+    }
+
+    #[test]
+    fn admission_sheds_unmeetable_deadlines_and_reports_met() {
+        // clock_hz 1.0 makes a 1 us deadline a zero-cycle budget: no
+        // shard can meet it, so admission must shed at submit time
+        // (counted apart from backpressure) while a generous deadline is
+        // admitted and echoed back with its prediction and verdict.
+        let server = Server::start(
+            tiny_qmodel(),
+            ServerConfig {
+                workers: 2,
+                clock_hz: 1.0,
+                verify_every: 0,
+                batch_deadline: Duration::from_millis(0),
+                dispatch: DispatchKind::Predictive,
+                admission: true,
+                autoscale: None,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let model = server.models()[0].clone();
+        let err = server
+            .submit_to_opts(
+                &model,
+                vec![1, 2, 3, 4],
+                SubmitOpts {
+                    deadline_us: 1,
+                    class: 2,
+                },
+                None,
+            )
+            .unwrap_err();
+        assert!(err.starts_with("slo miss"), "{err}");
+
+        // 10^12 us at 1 Hz = 10^6 cycles of budget — comfortably met.
+        let resp = server
+            .submit_to_opts(
+                &model,
+                vec![1, 2, 3, 4],
+                SubmitOpts {
+                    deadline_us: 1_000_000_000_000,
+                    class: 2,
+                },
+                None,
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(resp.slo_met, "generous deadline must be met");
+        assert!(resp.predicted_cycles > 0, "prediction echoed to the client");
+
+        // Deadline-free traffic bypasses the screen entirely.
+        server.infer(vec![1, 2, 3, 4]).unwrap();
+
+        let m = server.shutdown();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.rejected, 0, "shed is not backpressure");
+        assert_eq!(m.accepted, 2);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn autoscale_starts_at_the_floor() {
+        let server = Server::start(
+            tiny_qmodel(),
+            ServerConfig {
+                workers: 4,
+                verify_every: 0,
+                autoscale: Some(AutoscaleConfig {
+                    min_workers: 2,
+                    max_workers: 4,
+                }),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let m = server.metrics();
+        assert_eq!(m.workers, 4, "every shard is spawned up front");
+        assert_eq!(m.active_workers, 2, "dispatch starts at the floor");
+        server.infer(vec![1, 2, 3, 4]).unwrap();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.scale_up_events, 0, "one idle request never grows");
+    }
+
+    #[test]
+    fn autoscale_grows_under_backlog_and_shrinks_when_idle() {
+        // Backlog-driven growth: a conv model is ~100x slower per frame
+        // than a submit, so a 256-deep async burst onto the floor shard
+        // must push the analytic backlog past one allowance
+        // (max_batch × steady_cpf, since batch_deadline is ZERO) and
+        // grow the active set. Shrink is then deterministic: serial
+        // request-reply traffic evaluates the controller with zero
+        // backlog on every submit, and SHRINK_IDLE_TICKS consecutive
+        // such evaluations step the active set back down.
+        let qm = QModel::synthetic(8, 4, 6, 0xE5);
+        let server = Server::start(
+            qm,
+            ServerConfig {
+                workers: 4,
+                max_batch: 8,
+                queue_depth: 512,
+                verify_every: 0,
+                batch_deadline: Duration::from_millis(0),
+                dispatch: DispatchKind::Predictive,
+                admission: false,
+                autoscale: Some(AutoscaleConfig {
+                    min_workers: 1,
+                    max_workers: 4,
+                }),
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+
+        let pendings: Vec<Pending> = (0..256)
+            .map(|_| server.submit(vec![1; 64]).unwrap())
+            .collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = server.metrics();
+        let grown = m.active_workers;
+        assert!(grown > 1, "256-deep backlog never grew the active set: {m:?}");
+        assert_eq!(m.scale_up_events, grown as u64 - 1, "started at the floor of 1");
+        assert_eq!(m.scale_down_events, 0, "burst evaluations are never idle");
+
+        // > 2 × SHRINK_IDLE_TICKS zero-backlog evaluations: at least one
+        // shrink step even straight from the ceiling.
+        for _ in 0..(2 * SHRINK_IDLE_TICKS + 8) {
+            server.infer(vec![1; 64]).unwrap();
+        }
+        let m = server.shutdown();
+        assert!(m.scale_down_events >= 1, "idle run never shrank: {m:?}");
+        assert!(m.active_workers < grown);
+        assert!(m.active_workers >= 1, "shrink respects the floor");
+        assert_eq!(m.completed, 256 + 2 * SHRINK_IDLE_TICKS as u64 + 8);
+        assert_eq!(m.rejected, 0);
     }
 
     #[test]

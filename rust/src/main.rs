@@ -22,8 +22,8 @@ use std::collections::HashMap;
 
 use cnn_flow::complexity::{layer_cost, model_cost, CostOpts};
 use cnn_flow::coordinator::{
-    metrics_report_json, EngineKind, MetricsSnapshot, ModelMetricsSnapshot, NetMetricsSnapshot,
-    Server, ServerConfig,
+    metrics_report_json, AutoscaleConfig, DispatchKind, EngineKind, MetricsSnapshot,
+    ModelMetricsSnapshot, NetMetricsSnapshot, Server, ServerConfig,
 };
 use cnn_flow::flow::{analyze, plan_all, Ratio};
 use cnn_flow::model::{config::model_from_json, zoo, Model};
@@ -108,14 +108,15 @@ fn usage() {
          cnn-flow serve    --model <digits|jsc> [--synthetic] [--workers N] [--requests N]\n  \
                     [--max-batch N] [--batch-deadline USEC] [--queue-depth N]\n  \
                     [--verify-every N] [--engine compiled|folded|interp]\n  \
-                    [--metrics-json PATH]\n  \
+                    [--dispatch predictive|roundrobin] [--admission on|off]\n  \
+                    [--autoscale on|off|MIN:MAX] [--metrics-json PATH]\n  \
          cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
                     except --verify-every; --workers = shards per model)\n  \
          cnn-flow serve    --listen <host:port> [--model M|--models A,B|--synthetic]\n  \
                     [--net-core threaded|evented] (TCP front-end; EOF on stdin\n  \
                     drains and exits)\n  \
          cnn-flow client   --connect <host:port> [--model M] [--requests N] [--pool N]\n  \
-                    [--seed S]\n  \
+                    [--seed S] [--deadline-us N] [--class N]\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
                     [--fanin MAXCONNS] (0 skips the network fan-in ladder)\n  \
          cnn-flow list"
@@ -468,15 +469,34 @@ fn serve_config(
         .get("queue-depth")
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
-    Ok(ServerConfig {
+    let mut config = ServerConfig {
         workers,
         max_batch,
         queue_depth,
         verify_every: 0,
         engine: engine_flag(opts)?,
         batch_deadline: std::time::Duration::from_micros(batch_deadline_us),
+        // dispatch/admission/autoscale default from their env overrides
+        // ($CNN_FLOW_DISPATCH / $CNN_FLOW_ADMISSION / $CNN_FLOW_AUTOSCALE)
+        // via `ServerConfig::default`; the flags below win over both.
         ..Default::default()
-    })
+    };
+    if let Some(s) = opts.get("dispatch") {
+        config.dispatch = DispatchKind::parse(s)
+            .ok_or_else(|| format!("--dispatch {s}: expected predictive|roundrobin"))?;
+    }
+    if let Some(s) = opts.get("admission") {
+        config.admission = match s.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => return Err(format!("--admission {s}: expected on|off")),
+        };
+    }
+    if let Some(s) = opts.get("autoscale") {
+        config.autoscale = AutoscaleConfig::parse(s)
+            .ok_or_else(|| format!("--autoscale {s}: expected on|off|MIN:MAX"))?;
+    }
+    Ok(config)
 }
 
 /// Dump the machine-readable metrics report (`--metrics-json PATH`).
@@ -679,25 +699,32 @@ fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
         );
     }
     println!(
-        "net: {} connection(s), {} request(s), {} ok, {} queue-full, {} invalid-frame, \
-         {} unknown-model, {} draining, {} malformed",
+        "net: {} connection(s), {} request(s), {} ok, {} queue-full, {} slo-miss, \
+         {} invalid-frame, {} unknown-model, {} draining, {} malformed",
         net_snap.connections,
         net_snap.requests,
         net_snap.responses_ok,
         net_snap.err_queue_full,
+        net_snap.err_slo_miss,
         net_snap.err_invalid_frame,
         net_snap.err_unknown_model,
         net_snap.err_draining,
         net_snap.err_malformed
     );
     println!(
-        "coordinator: {} completed, {} batches (mean {:.1}), {} rejected, {} unrouted, \
-         p99 {:?}, {:.2} MInf/s aggregate",
+        "coordinator: {} completed, {} batches (mean {:.1}), {} rejected, {} shed, \
+         {} unrouted, {}/{} shards active (+{}/-{} scale events), p99 {:?}, \
+         {:.2} MInf/s aggregate",
         m.completed,
         m.batches,
         m.mean_batch,
         m.rejected,
+        m.shed,
         m.unrouted,
+        m.active_workers,
+        m.workers,
+        m.scale_up_events,
+        m.scale_down_events,
         m.p99,
         m.aggregate_fps / 1e6
     );
@@ -729,6 +756,12 @@ fn cmd_client(opts: &HashMap<String, String>) -> i32 {
         .get("seed")
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC11E27);
+    // v2 SLO envelope: 0/0 keeps the request byte-identical to v1.
+    let deadline_us: u64 = opts
+        .get("deadline-us")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let class: u8 = opts.get("class").and_then(|s| s.parse().ok()).unwrap_or(0);
     let client = match Client::connect(addr, pool) {
         Ok(c) => c,
         Err(e) => {
@@ -767,12 +800,20 @@ fn cmd_client(opts: &HashMap<String, String>) -> i32 {
     let mut rng = Rng::new(seed);
     let mut latencies = Vec::with_capacity(requests);
     let mut errors = 0usize;
+    let mut shed = 0usize;
+    let mut slo_met = 0usize;
     let started = std::time::Instant::now();
     for _ in 0..requests {
         let frame: Vec<i64> = (0..input_len).map(|_| rng.int8() as i64).collect();
         let t0 = std::time::Instant::now();
-        match client.infer(&model, &frame) {
-            Ok(_) => latencies.push(t0.elapsed()),
+        match client.infer_slo(&model, &frame, deadline_us, class) {
+            Ok(resp) => {
+                latencies.push(t0.elapsed());
+                if resp.slo_met {
+                    slo_met += 1;
+                }
+            }
+            Err(e) if e.code == Some(cnn_flow::net::proto::ErrorCode::SloMiss) => shed += 1,
             Err(e) => {
                 errors += 1;
                 if errors <= 3 {
@@ -800,6 +841,12 @@ fn cmd_client(opts: &HashMap<String, String>) -> i32 {
         quantile(0.50),
         quantile(0.99),
     );
+    if deadline_us > 0 {
+        println!(
+            "slo: {slo_met}/{} met ({deadline_us} us budget), {shed} shed at admission",
+            latencies.len()
+        );
+    }
     if errors > 0 {
         eprintln!("{errors} request(s) failed");
         return 1;

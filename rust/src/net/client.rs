@@ -60,6 +60,12 @@ pub struct NetResponse {
     pub logits: Vec<i64>,
     pub argmax: usize,
     pub sim_latency_cycles: u64,
+    /// Admission-time predicted completion in modelled cycles (0 for
+    /// deadline-free requests — the v1 wire).
+    pub predicted_cycles: u64,
+    /// Server-side SLO verdict, decided at admission from modelled time
+    /// (always false for deadline-free requests).
+    pub slo_met: bool,
 }
 
 struct ClientInner {
@@ -130,12 +136,28 @@ impl Client {
     /// [`ClientPending`] owns a connection until settled, so the caller's
     /// outstanding-pending count is its in-flight window.
     pub fn submit(&self, model: &str, frame: &[i64]) -> Result<ClientPending, NetError> {
+        self.submit_slo(model, frame, 0, 0)
+    }
+
+    /// [`submit`](Client::submit) with the v2 SLO extension: a completion
+    /// deadline in microseconds of modelled hardware time (0 = none) and
+    /// a priority class. A deadline-free request encodes byte-identically
+    /// to the v1 wire, so old servers keep working.
+    pub fn submit_slo(
+        &self,
+        model: &str,
+        frame: &[i64],
+        deadline_us: u64,
+        class: u8,
+    ) -> Result<ClientPending, NetError> {
         let mut stream = self.checkout()?;
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let msg = Msg::InferRequest {
             id,
             model: model.to_string(),
             frame: frame.to_vec(),
+            deadline_us,
+            class,
         };
         proto::write_frame(&mut stream, &msg)
             .map_err(|e| NetError::transport(format!("send request: {e}")))?;
@@ -149,6 +171,17 @@ impl Client {
     /// Blocking inference: submit + wait.
     pub fn infer(&self, model: &str, frame: &[i64]) -> Result<NetResponse, NetError> {
         self.submit(model, frame)?.wait()
+    }
+
+    /// Blocking inference with deadline/class: submit_slo + wait.
+    pub fn infer_slo(
+        &self,
+        model: &str,
+        frame: &[i64],
+        deadline_us: u64,
+        class: u8,
+    ) -> Result<NetResponse, NetError> {
+        self.submit_slo(model, frame, deadline_us, class)?.wait()
     }
 
     /// Ask the server which models it routes: `(model id, input frame
@@ -199,12 +232,16 @@ impl ClientPending {
                 argmax,
                 sim_latency_cycles,
                 logits,
+                predicted_cycles,
+                slo_met,
             })) if got == id => {
                 client.checkin(stream);
                 Ok(NetResponse {
                     logits,
                     argmax: argmax as usize,
                     sim_latency_cycles,
+                    predicted_cycles,
+                    slo_met,
                 })
             }
             Ok(Some(Msg::InferErr {

@@ -18,7 +18,7 @@
 //! 2. **decode** — complete frames are parsed in place into
 //!    [`Msg`]s; partial frames wait for more bytes;
 //! 3. **submit** — `InferRequest`s enter the coordinator via
-//!    [`Server::submit_to_notified`] with a per-connection
+//!    [`Server::submit_to_opts`] with a per-connection
 //!    [`CompletionNotify`] hook; the returned [`Pending`] joins the
 //!    connection's FIFO reply queue (which is what preserves
 //!    answer-in-request-order under pipelining);
@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     CompletionNotify, NetMetrics, NetMetricsSnapshot, Pending, ReactorStats,
-    ReactorStatsSnapshot, Server,
+    ReactorStatsSnapshot, Server, SubmitOpts,
 };
 
 use super::proto::{ErrorCode, FrameDecoder, Msg};
@@ -499,7 +499,13 @@ impl Reactor {
     /// `ErrorCode` classification, same protocol-violation handling.
     fn dispatch_msg(&mut self, conn: &mut Conn, msg: Msg) {
         match msg {
-            Msg::InferRequest { id, model, frame } => {
+            Msg::InferRequest {
+                id,
+                model,
+                frame,
+                deadline_us,
+                class,
+            } => {
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 if !self.shared.open.load(Ordering::Acquire) {
                     self.count_error(ErrorCode::Draining);
@@ -511,9 +517,10 @@ impl Reactor {
                     return;
                 }
                 let notify: Arc<dyn CompletionNotify> = conn.notify.clone();
+                let opts = SubmitOpts { deadline_us, class };
                 match self
                     .coordinator
-                    .submit_to_notified(&model, frame, Some(notify))
+                    .submit_to_opts(&model, frame, opts, Some(notify))
                 {
                     Ok(pending) => conn.replies.push_back(Reply::Wait(id, pending)),
                     Err(e) => {
@@ -547,6 +554,7 @@ impl Reactor {
     fn count_error(&self, code: ErrorCode) {
         let counter = match code {
             ErrorCode::QueueFull => &self.metrics.err_queue_full,
+            ErrorCode::SloMiss => &self.metrics.err_slo_miss,
             ErrorCode::InvalidFrame => &self.metrics.err_invalid_frame,
             ErrorCode::UnknownModel => &self.metrics.err_unknown_model,
             ErrorCode::Draining => &self.metrics.err_draining,
@@ -582,6 +590,8 @@ impl Reactor {
                                 argmax: resp.argmax as u32,
                                 sim_latency_cycles: resp.sim_latency_cycles,
                                 logits: resp.logits,
+                                predicted_cycles: resp.predicted_cycles,
+                                slo_met: resp.slo_met,
                             }
                         }
                         Some(Err(e)) => {

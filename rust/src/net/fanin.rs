@@ -380,6 +380,8 @@ fn pump(
             id: conn.sent as u64,
             model: model.to_string(),
             frame: frame_for(cfg.seed, idx, conn.sent, frame_len),
+            deadline_us: 0,
+            class: 0,
         };
         msg.encode_into(&mut conn.out)
             .map_err(|e| format!("fan-in conn {idx}: encode: {e}"))?;

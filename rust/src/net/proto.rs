@@ -23,10 +23,20 @@
 
 use std::io::{self, Read, Write};
 
-/// Current protocol version, the first byte of every frame body. Decoding
-/// any other value fails with [`ProtoError::BadVersion`] — version skew
-/// must be loud, not silently misparsed.
-pub const PROTO_VERSION: u8 = 1;
+/// Current protocol version. Decoding accepts [`PROTO_V1`] through this
+/// value; anything newer fails with [`ProtoError::BadVersion`] — version
+/// skew must be loud, not silently misparsed.
+///
+/// Version 2 adds optional per-request SLO fields: `deadline_us`/`class`
+/// on `InferRequest`, `predicted_cycles`/`slo_met` on `InferOk`. The
+/// encoder stamps each message with the **lowest version that can carry
+/// it** — a deadline-free request and its reply are byte-identical to
+/// version 1, so old clients interoperate with a v2 server (and vice
+/// versa) as long as nobody sets the new fields.
+pub const PROTO_VERSION: u8 = 2;
+
+/// Oldest version this build still decodes.
+pub const PROTO_V1: u8 = 1;
 
 /// Hard cap on a frame body (bytes), enforced before the body is
 /// allocated: a hostile or corrupt length prefix must not let a single
@@ -63,6 +73,10 @@ pub enum ErrorCode {
     /// oversized body, unexpected message kind). Net-layer only — no
     /// coordinator counter moves.
     Malformed = 5,
+    /// Admission control predicted the request's completion past its
+    /// deadline and shed it before queueing — reconciles with intake
+    /// `shed`. Cheap shed beats late work (DESIGN.md §12).
+    SloMiss = 6,
 }
 
 impl ErrorCode {
@@ -77,6 +91,7 @@ impl ErrorCode {
             3 => Some(ErrorCode::UnknownModel),
             4 => Some(ErrorCode::Draining),
             5 => Some(ErrorCode::Malformed),
+            6 => Some(ErrorCode::SloMiss),
             _ => None,
         }
     }
@@ -104,6 +119,8 @@ impl ErrorCode {
             ErrorCode::UnknownModel
         } else if msg.starts_with("backpressure") {
             ErrorCode::QueueFull
+        } else if msg.starts_with("slo miss") {
+            ErrorCode::SloMiss
         } else if msg == "server stopped" || msg == "server dropped request" {
             ErrorCode::Draining
         } else {
@@ -120,6 +137,7 @@ impl std::fmt::Display for ErrorCode {
             ErrorCode::UnknownModel => "unknown-model",
             ErrorCode::Draining => "draining",
             ErrorCode::Malformed => "malformed",
+            ErrorCode::SloMiss => "slo-miss",
         };
         f.write_str(name)
     }
@@ -136,7 +154,8 @@ pub enum ProtoError {
     Truncated,
     /// The length prefix exceeds [`MAX_BODY`]; rejected before allocation.
     Oversized(u32),
-    /// The body's version byte is not [`PROTO_VERSION`].
+    /// The body's version byte is outside the accepted
+    /// [`PROTO_V1`]..=[`PROTO_VERSION`] window.
     BadVersion(u8),
     /// Structurally invalid body (unknown kind, short payload, bad UTF-8,
     /// inconsistent counts, trailing bytes).
@@ -161,7 +180,10 @@ impl std::fmt::Display for ProtoError {
                 write!(f, "oversized frame body ({n} bytes > {MAX_BODY} max)")
             }
             ProtoError::BadVersion(v) => {
-                write!(f, "unsupported protocol version {v} (expected {PROTO_VERSION})")
+                write!(
+                    f,
+                    "unsupported protocol version {v} (expected {PROTO_V1}..={PROTO_VERSION})"
+                )
             }
             ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
             ProtoError::CountOverflow { field, count, max } => {
@@ -179,17 +201,32 @@ impl std::error::Error for ProtoError {}
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg {
     /// Client → server: run `frame` through `model`'s shard group.
+    ///
+    /// `deadline_us`/`class` are the v2 SLO extension: a completion
+    /// deadline in microseconds of modelled time (0 = none — best
+    /// effort) and a client-chosen priority class for per-class
+    /// reporting. A request with both at their defaults encodes as a v1
+    /// frame, byte-identical to the pre-SLO wire.
     InferRequest {
         id: u64,
         model: String,
         frame: Vec<i64>,
+        deadline_us: u64,
+        class: u8,
     },
     /// Server → client: successful inference (accumulator-scale logits).
+    ///
+    /// `predicted_cycles`/`slo_met` are the v2 SLO extension, set only
+    /// for deadline-bearing requests: the admission-time completion
+    /// prediction and whether it fit the deadline budget. Both at their
+    /// defaults encode as a v1 frame.
     InferOk {
         id: u64,
         argmax: u32,
         sim_latency_cycles: u64,
         logits: Vec<i64>,
+        predicted_cycles: u64,
+        slo_met: bool,
     },
     /// Server → client: typed refusal (id 0 when the failing request
     /// could not be decoded).
@@ -248,26 +285,60 @@ impl Msg {
         Ok(())
     }
 
-    fn encode_body(&self, body: &mut Vec<u8>) -> Result<(), ProtoError> {
-        body.push(PROTO_VERSION);
+    /// The lowest protocol version that can carry this message: v2 only
+    /// when an SLO extension field is set, so deadline-free traffic stays
+    /// byte-identical to the v1 wire and old peers decode it unchanged.
+    pub fn wire_version(&self) -> u8 {
         match self {
-            Msg::InferRequest { id, model, frame } => {
+            Msg::InferRequest { deadline_us, class, .. } if *deadline_us != 0 || *class != 0 => {
+                PROTO_VERSION
+            }
+            Msg::InferOk {
+                predicted_cycles,
+                slo_met,
+                ..
+            } if *predicted_cycles != 0 || *slo_met => PROTO_VERSION,
+            _ => PROTO_V1,
+        }
+    }
+
+    fn encode_body(&self, body: &mut Vec<u8>) -> Result<(), ProtoError> {
+        let version = self.wire_version();
+        body.push(version);
+        match self {
+            Msg::InferRequest {
+                id,
+                model,
+                frame,
+                deadline_us,
+                class,
+            } => {
                 body.push(KIND_INFER_REQUEST);
                 push_u64(body, *id);
                 push_str16(body, model);
                 push_vec_i64(body, frame, "frame")?;
+                if version >= 2 {
+                    push_u64(body, *deadline_us);
+                    body.push(*class);
+                }
             }
             Msg::InferOk {
                 id,
                 argmax,
                 sim_latency_cycles,
                 logits,
+                predicted_cycles,
+                slo_met,
             } => {
                 body.push(KIND_INFER_OK);
                 push_u64(body, *id);
                 push_u32(body, *argmax);
                 push_u64(body, *sim_latency_cycles);
                 push_vec_i64(body, logits, "logits")?;
+                if version >= 2 {
+                    push_u64(body, *predicted_cycles);
+                    body.push(u8::from(*slo_met));
+                }
             }
             Msg::InferErr { id, code, message } => {
                 body.push(KIND_INFER_ERR);
@@ -300,22 +371,57 @@ impl Msg {
     pub fn decode(body: &[u8]) -> Result<Msg, ProtoError> {
         let mut cur = Cur { b: body, i: 0 };
         let version = cur.u8()?;
-        if version != PROTO_VERSION {
+        if !(PROTO_V1..=PROTO_VERSION).contains(&version) {
             return Err(ProtoError::BadVersion(version));
         }
         let kind = cur.u8()?;
         let msg = match kind {
-            KIND_INFER_REQUEST => Msg::InferRequest {
-                id: cur.u64()?,
-                model: cur.str16()?,
-                frame: cur.vec_i64()?,
-            },
-            KIND_INFER_OK => Msg::InferOk {
-                id: cur.u64()?,
-                argmax: cur.u32()?,
-                sim_latency_cycles: cur.u64()?,
-                logits: cur.vec_i64()?,
-            },
+            KIND_INFER_REQUEST => {
+                let id = cur.u64()?;
+                let model = cur.str16()?;
+                let frame = cur.vec_i64()?;
+                let (deadline_us, class) = if version >= 2 {
+                    (cur.u64()?, cur.u8()?)
+                } else {
+                    (0, 0)
+                };
+                Msg::InferRequest {
+                    id,
+                    model,
+                    frame,
+                    deadline_us,
+                    class,
+                }
+            }
+            KIND_INFER_OK => {
+                let id = cur.u64()?;
+                let argmax = cur.u32()?;
+                let sim_latency_cycles = cur.u64()?;
+                let logits = cur.vec_i64()?;
+                let (predicted_cycles, slo_met) = if version >= 2 {
+                    let p = cur.u64()?;
+                    let met = match cur.u8()? {
+                        0 => false,
+                        1 => true,
+                        other => {
+                            return Err(ProtoError::Malformed(format!(
+                                "slo_met flag must be 0 or 1, got {other}"
+                            )))
+                        }
+                    };
+                    (p, met)
+                } else {
+                    (0, false)
+                };
+                Msg::InferOk {
+                    id,
+                    argmax,
+                    sim_latency_cycles,
+                    logits,
+                    predicted_cycles,
+                    slo_met,
+                }
+            }
             KIND_INFER_ERR => {
                 let id = cur.u64()?;
                 let raw = cur.u8()?;
@@ -663,12 +769,31 @@ mod tests {
                 id: 7,
                 model: "digits_cnn".into(),
                 frame: vec![-127, 0, 127, 5],
+                deadline_us: 0,
+                class: 0,
+            },
+            Msg::InferRequest {
+                id: 8,
+                model: "digits_cnn".into(),
+                frame: vec![1, 2],
+                deadline_us: 2_500,
+                class: 3,
             },
             Msg::InferOk {
                 id: 7,
                 argmax: 3,
                 sim_latency_cycles: 12345,
                 logits: vec![i64::MIN, -1, 0, i64::MAX],
+                predicted_cycles: 0,
+                slo_met: false,
+            },
+            Msg::InferOk {
+                id: 8,
+                argmax: 1,
+                sim_latency_cycles: 99,
+                logits: vec![4, 5],
+                predicted_cycles: 70_000,
+                slo_met: true,
             },
             Msg::InferErr {
                 id: 9,
@@ -685,12 +810,60 @@ mod tests {
         }
     }
 
+    /// The version-bump compatibility contract: messages without SLO
+    /// fields emit v1 bodies **byte-identical** to the pre-v2 wire (old
+    /// peers decode them unchanged), while SLO-bearing messages emit v2;
+    /// both decode back exactly.
+    #[test]
+    fn deadline_free_messages_stay_on_the_v1_wire() {
+        let plain = Msg::InferRequest {
+            id: 7,
+            model: "m".into(),
+            frame: vec![1, 2, 3],
+            deadline_us: 0,
+            class: 0,
+        };
+        let bytes = plain.encode().unwrap();
+        assert_eq!(bytes[4], PROTO_V1, "deadline-free request must be v1");
+        // Reconstruct the exact pre-v2 encoding by hand and compare.
+        let mut legacy = vec![PROTO_V1, KIND_INFER_REQUEST];
+        push_u64(&mut legacy, 7);
+        push_str16(&mut legacy, "m");
+        push_vec_i64(&mut legacy, &[1, 2, 3], "frame").unwrap();
+        let mut framed = (legacy.len() as u32).to_be_bytes().to_vec();
+        framed.extend_from_slice(&legacy);
+        assert_eq!(bytes, framed, "v1 byte-identity broken");
+
+        let tagged = Msg::InferRequest {
+            id: 7,
+            model: "m".into(),
+            frame: vec![1, 2, 3],
+            deadline_us: 1,
+            class: 0,
+        };
+        assert_eq!(tagged.encode().unwrap()[4], PROTO_VERSION);
+        assert_eq!(roundtrip(&tagged), tagged);
+
+        let ok = Msg::InferOk {
+            id: 7,
+            argmax: 0,
+            sim_latency_cycles: 5,
+            logits: vec![9],
+            predicted_cycles: 0,
+            slo_met: false,
+        };
+        assert_eq!(ok.encode().unwrap()[4], PROTO_V1, "plain reply must be v1");
+        assert_eq!(Msg::ListModels.encode().unwrap()[4], PROTO_V1);
+    }
+
     #[test]
     fn empty_vectors_and_strings_roundtrip() {
         let m = Msg::InferRequest {
             id: 0,
             model: String::new(),
             frame: Vec::new(),
+            deadline_us: 0,
+            class: 0,
         };
         assert_eq!(roundtrip(&m), m);
         let m = Msg::ModelList { models: Vec::new() };
@@ -787,6 +960,8 @@ mod tests {
             id: 1,
             model: "m".into(),
             frame,
+            deadline_us: 0,
+            class: 0,
         }
         .encode()
         .unwrap_err();
@@ -796,6 +971,8 @@ mod tests {
             id: 1,
             model: "vgg_micro".into(),
             frame: vec![0i64; 24 * 24 * 8],
+            deadline_us: 0,
+            class: 0,
         };
         assert!(ok.encode().is_ok());
     }
@@ -818,10 +995,15 @@ mod tests {
             ErrorCode::UnknownModel,
             ErrorCode::Draining,
             ErrorCode::Malformed,
+            ErrorCode::SloMiss,
         ] {
             assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
         }
         assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(
+            ErrorCode::from_reject("slo miss: predicted 900 cycles > budget 600"),
+            ErrorCode::SloMiss
+        );
         assert_eq!(
             ErrorCode::from_reject("backpressure: all shard queues full"),
             ErrorCode::QueueFull
@@ -847,6 +1029,10 @@ mod tests {
         );
         assert_eq!(
             ErrorCode::from_reject("no route for model 'server stopped'"),
+            ErrorCode::UnknownModel
+        );
+        assert_eq!(
+            ErrorCode::from_reject("no route for model 'slo miss'"),
             ErrorCode::UnknownModel
         );
     }

@@ -37,7 +37,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::{NetMetrics, NetMetricsSnapshot, Pending, Server};
+use crate::coordinator::{NetMetrics, NetMetricsSnapshot, Pending, Server, SubmitOpts};
 
 use super::proto::{self, ErrorCode, Msg};
 
@@ -313,6 +313,7 @@ fn accept_loop(
 fn count_error(metrics: &NetMetrics, code: ErrorCode) {
     let counter = match code {
         ErrorCode::QueueFull => &metrics.err_queue_full,
+        ErrorCode::SloMiss => &metrics.err_slo_miss,
         ErrorCode::InvalidFrame => &metrics.err_invalid_frame,
         ErrorCode::UnknownModel => &metrics.err_unknown_model,
         ErrorCode::Draining => &metrics.err_draining,
@@ -389,7 +390,13 @@ fn dispatch(
     tx: &mpsc::SyncSender<WriteItem>,
 ) -> bool {
     match msg {
-        Msg::InferRequest { id, model, frame } => {
+        Msg::InferRequest {
+            id,
+            model,
+            frame,
+            deadline_us,
+            class,
+        } => {
             metrics.requests.fetch_add(1, Ordering::Relaxed);
             let item = if !open.load(Ordering::Acquire) {
                 count_error(metrics, ErrorCode::Draining);
@@ -399,7 +406,8 @@ fn dispatch(
                     message: "drain in progress".into(),
                 })
             } else {
-                match coordinator.submit_to(&model, frame) {
+                let opts = SubmitOpts { deadline_us, class };
+                match coordinator.submit_to_opts(&model, frame, opts, None) {
                     Ok(pending) => WriteItem::Wait(id, pending),
                     Err(e) => {
                         let code = ErrorCode::from_reject(&e);
@@ -444,11 +452,16 @@ fn settle_item(item: WriteItem, metrics: &NetMetrics) -> Msg {
                 // Counted when settled, delivered or not: the
                 // counter reconciles with coordinator `completed`.
                 metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+                // SLO fields default to 0/false for deadline-free
+                // requests, which keeps the reply on the v1 wire
+                // (`Msg::wire_version` is content-determined).
                 Msg::InferOk {
                     id,
                     argmax: resp.argmax as u32,
                     sim_latency_cycles: resp.sim_latency_cycles,
                     logits: resp.logits,
+                    predicted_cycles: resp.predicted_cycles,
+                    slo_met: resp.slo_met,
                 }
             }
             Err(e) => {

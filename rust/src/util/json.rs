@@ -9,11 +9,19 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
+///
+/// Numbers come in two flavours: [`Json::UInt`] holds non-negative
+/// integers **exactly** (counters above 2^53 survive render/parse
+/// round-trips bit-for-bit), while [`Json::Num`] holds everything else
+/// as f64. The parser routes fraction-less non-negative literals to
+/// `UInt`, so `parse(render(x)) == x` for both variants.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Exact non-negative integer — lossless where f64 is not.
+    UInt(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -50,21 +58,30 @@ impl Json {
 
     // -- accessors -------------------------------------------------------
 
+    /// Numeric value as f64 — lossy above 2^53 for [`Json::UInt`]; use
+    /// [`Json::as_u64`] where exactness matters.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::UInt(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact integer value: `UInt` verbatim, or a `Num` that happens to
+    /// be a representable non-negative integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(n) => Some(*n),
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 1.8446744073709552e19 => {
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().and_then(|n| {
-            if n >= 0.0 && n.fract() == 0.0 {
-                Some(n as usize)
-            } else {
-                None
-            }
-        })
+        self.as_u64().and_then(|n| usize::try_from(n).ok())
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -136,6 +153,7 @@ impl Json {
                     out.push_str(&format!("{n}"));
                 }
             }
+            Json::UInt(n) => out.push_str(&format!("{n}")),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -256,9 +274,19 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        let s = std::str::from_utf8(&self.b[start..self.i])
             .ok()
-            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| self.err("bad number"))?;
+        // Fraction-less non-negative literals stay exact (u64), matching
+        // what the writer emits for Json::UInt — counters above 2^53
+        // round-trip losslessly. Everything else goes through f64.
+        if !s.starts_with('-') && !s.contains(['.', 'e', 'E']) {
+            if let Ok(n) = s.parse::<u64>() {
+                return Ok(Json::UInt(n));
+            }
+        }
+        s.parse::<f64>()
+            .ok()
             .map(Json::Num)
             .ok_or_else(|| self.err("bad number"))
     }
@@ -374,7 +402,11 @@ impl Json {
     }
 
     pub fn arr_usize(xs: &[usize]) -> Json {
-        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+        Json::Arr(xs.iter().map(|&x| Json::UInt(x as u64)).collect())
+    }
+
+    pub fn arr_u64(xs: &[u64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::UInt(x)).collect())
     }
 }
 
@@ -392,7 +424,13 @@ impl From<f64> for Json {
 
 impl From<usize> for Json {
     fn from(n: usize) -> Self {
-        Json::Num(n as f64)
+        Json::UInt(n as u64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::UInt(n)
     }
 }
 
@@ -429,6 +467,24 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::Num(5.0).render(), "5");
         assert_eq!(Json::Num(5.5).render(), "5.5");
+        assert_eq!(Json::UInt(5).render(), "5");
+    }
+
+    #[test]
+    fn u64_counters_round_trip_exactly_above_2_pow_53() {
+        // 2^53 + 1 is NOT representable in f64; the integer variant must
+        // carry it (and u64::MAX) through render+parse bit-for-bit.
+        for n in [(1u64 << 53) + 1, u64::MAX, u64::MAX - 1] {
+            let v = Json::from(n);
+            let back = Json::parse(&v.render()).unwrap();
+            assert_eq!(back, v, "{n} mangled by round-trip");
+            assert_eq!(back.as_u64(), Some(n));
+        }
+        // The f64 path really would have lost it — guard the guard.
+        assert_ne!(((1u64 << 53) + 1) as f64 as u64, (1u64 << 53) + 1);
+        // Negative and fractional literals still parse as f64.
+        assert_eq!(Json::parse("-3").unwrap(), Json::Num(-3.0));
+        assert_eq!(Json::parse("2.5").unwrap(), Json::Num(2.5));
     }
 
     #[test]

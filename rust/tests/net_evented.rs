@@ -251,6 +251,8 @@ fn evented_pipelined_burst_answers_in_order_and_matches_golden() {
             id: 100 + i as u64,
             model: model.clone(),
             frame: frame.clone(),
+            deadline_us: 0,
+            class: 0,
         }
         .encode_into(&mut wire)
         .unwrap();
@@ -451,6 +453,8 @@ fn evented_write_stall_tears_down_and_counters_balance() {
             id,
             model: model.clone(),
             frame: frame.clone(),
+            deadline_us: 0,
+            class: 0,
         }
         .encode_into(&mut wire)
         .unwrap();

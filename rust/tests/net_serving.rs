@@ -343,6 +343,8 @@ fn backpressure_surfaces_as_queue_full_and_reconciles() {
                 id,
                 model: coord.models()[0].clone(),
                 frame: frame.clone(),
+                deadline_us: 0,
+                class: 0,
             }
             .encode()
             .unwrap(),
@@ -504,16 +506,20 @@ fn random_msg(rng: &mut Rng) -> Msg {
             id: rng.next_u64(),
             model: random_string(rng),
             frame: random_vec(rng),
+            deadline_us: rng.next_u64() >> (rng.below(64) as u32),
+            class: rng.below(256) as u8,
         },
         1 => Msg::InferOk {
             id: rng.next_u64(),
             argmax: rng.below(1 << 16) as u32,
             sim_latency_cycles: rng.next_u64(),
             logits: random_vec(rng),
+            predicted_cycles: rng.next_u64() >> (rng.below(64) as u32),
+            slo_met: rng.below(2) == 1,
         },
         2 => Msg::InferErr {
             id: rng.next_u64(),
-            code: ErrorCode::from_u8(1 + rng.below(5) as u8).unwrap(),
+            code: ErrorCode::from_u8(1 + rng.below(6) as u8).unwrap(),
             message: random_string(rng),
         },
         3 => Msg::ListModels,
@@ -651,6 +657,8 @@ fn pipelined_requests_on_one_socket_answer_in_order() {
                 id: 100 + i as u64,
                 model: model.clone(),
                 frame: frame.clone(),
+                deadline_us: 0,
+                class: 0,
             }
             .encode()
             .unwrap(),
@@ -862,6 +870,8 @@ fn threaded_write_stall_tears_down_and_counters_balance() {
                 id,
                 model: model.clone(),
                 frame: frame.clone(),
+                deadline_us: 0,
+                class: 0,
             }
             .encode_into(&mut wire)
             .unwrap();

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use cnn_flow::coordinator::{Server, ServerConfig};
+use cnn_flow::coordinator::{Server, ServerConfig, SubmitOpts};
 use cnn_flow::quant::{QKind, QLayer, QModel};
 use cnn_flow::util::prop::prop_check;
 use cnn_flow::util::Rng;
@@ -168,6 +168,120 @@ fn metrics_account_for_backpressure() {
             "accepted + rejected != submitted"
         );
         prop_assert_eq!(m.completed as usize, ok, "completed != successful calls");
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_batch_deadline_flushes_immediately_and_reconciles() {
+    // `batch_deadline = Duration::ZERO` is the immediate-flush path:
+    // every batch flushes as soon as its first request is seen (full
+    // batches excepted), so after a full drain the flush-reason split
+    // and the occupancy histogram must reconcile exactly with the
+    // completed count — no request may hide in an unflushed batch.
+    prop_check(8, 0xC3, |rng| {
+        let batch = rng.range(1, 8);
+        let workers = rng.range(1, 4);
+        let total = rng.range(4, 40);
+        let server = Arc::new(
+            Server::start(
+                probe_model(4),
+                ServerConfig {
+                    workers,
+                    max_batch: batch,
+                    queue_depth: 1024,
+                    verify_every: 0,
+                    batch_deadline: Duration::ZERO,
+                    ..Default::default()
+                },
+                None,
+            )?,
+        );
+        let pendings: Vec<_> = (0..total)
+            .map(|i| server.submit(vec![i as i64 % 100, 0, 0, 0]))
+            .collect::<Result<_, _>>()?;
+        for p in pendings {
+            p.wait()?;
+        }
+        let server = Arc::into_inner(server).expect("sole owner after joins");
+        let m = server.shutdown();
+        prop_assert_eq!(m.completed as usize, total, "all answered");
+        prop_assert_eq!(
+            m.batches,
+            m.flush_full + m.flush_deadline + m.flush_drain,
+            "every batch has exactly one flush reason"
+        );
+        // The occupancy histogram is per-flush; weighted by batch size it
+        // must account for every completed frame.
+        prop_assert_eq!(m.occupancy_frames, m.completed, "occupancy ledger");
+        prop_assert!(
+            m.mean_batch <= batch as f64 + 1e-9,
+            "immediate flush cannot exceed the bound, mean {}",
+            m.mean_batch
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn slo_counters_reconcile_under_drain() {
+    // Mixed deadline-free / unmeetable-deadline traffic against a
+    // clock_hz-1.0 server: after a drain, every submission is accounted
+    // for in exactly one intake bucket
+    // (`submitted == completed + errored + rejected + shed`) and shed
+    // never leaks into rejected.
+    prop_check(8, 0xC4, |rng| {
+        let total = rng.range(8, 48);
+        let server = Arc::new(
+            Server::start(
+                probe_model(4),
+                ServerConfig {
+                    workers: 2,
+                    max_batch: 4,
+                    queue_depth: 1024,
+                    verify_every: 0,
+                    clock_hz: 1.0,
+                    batch_deadline: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                None,
+            )?,
+        );
+        let model = server.models()[0].clone();
+        let mut submitted = 0u64;
+        let mut shed_seen = 0u64;
+        let mut pendings = Vec::new();
+        for i in 0..total {
+            // Every third request carries a 1 us deadline — a zero-cycle
+            // budget at 1 Hz, so admission must shed it.
+            let opts = if i % 3 == 0 {
+                SubmitOpts {
+                    deadline_us: 1,
+                    class: 1,
+                }
+            } else {
+                SubmitOpts::default()
+            };
+            submitted += 1;
+            match server.submit_to_opts(&model, vec![1, 2, 3, 4], opts, None) {
+                Ok(p) => pendings.push(p),
+                Err(e) if e.starts_with("slo miss") => shed_seen += 1,
+                Err(e) => return Err(format!("unexpected refusal: {e}")),
+            }
+        }
+        for p in pendings {
+            p.wait()?;
+        }
+        let server = Arc::into_inner(server).expect("sole owner after joins");
+        let m = server.shutdown();
+        prop_assert_eq!(m.shed, shed_seen, "every slo-miss error counted once");
+        prop_assert_eq!(m.rejected, 0u64, "shed must not leak into rejected");
+        prop_assert_eq!(
+            m.completed + m.errored + m.rejected + m.shed,
+            submitted,
+            "intake partition"
+        );
+        prop_assert_eq!(m.accepted, m.completed + m.errored, "accepted split");
         Ok(())
     });
 }
