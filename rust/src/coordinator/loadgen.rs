@@ -28,6 +28,7 @@
 //! byte-for-byte (DESIGN.md §8, pinned by `tests/net_serving.rs`).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{Pending, Server, SubmitOpts};
 use crate::net::client::{Client, ClientPending};
@@ -253,7 +254,7 @@ pub fn replay(
         .iter()
         .map(|r| (r.at_tick, 0, r.frame.as_slice(), 0, 0))
         .collect();
-    replay_core(server, &[model], &requests, window, expected).aggregate
+    replay_core(server, &[model], &requests, window, expected, None).aggregate
 }
 
 // ---------------------------------------------------------------------
@@ -570,7 +571,29 @@ pub fn replay_multi(
         .iter()
         .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
         .collect();
-    replay_core(server, &trace.models, &requests, window, expected)
+    replay_core(server, &trace.models, &requests, window, expected, None)
+}
+
+/// [`replay_multi`] with the trace's virtual clock published into
+/// `ticks` — the `Arc` a [`crate::obs::Clock::virtual_from`] server
+/// clock reads, which is what makes flight-recorder span stamps
+/// byte-deterministic across replays (DESIGN.md §13). The tick store
+/// happens only while **nothing is in flight** (tick barriers settle
+/// every outstanding request first), so no span can straddle a clock
+/// edge.
+pub fn replay_multi_clocked(
+    server: &Server,
+    trace: &MultiTrace,
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+    ticks: &AtomicU64,
+) -> MultiLoadReport {
+    let requests: Vec<(u64, usize, &[i64], u64, u8)> = trace
+        .requests
+        .iter()
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
+        .collect();
+    replay_core(server, &trace.models, &requests, window, expected, Some(ticks))
 }
 
 /// Replay a heterogeneous `trace` **over localhost sockets** through a
@@ -592,7 +615,27 @@ pub fn replay_net(
         .iter()
         .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
         .collect();
-    replay_core(client, &trace.models, &requests, window, expected)
+    replay_core(client, &trace.models, &requests, window, expected, None)
+}
+
+/// [`replay_net`] with the trace's virtual clock published into `ticks`
+/// — see [`replay_multi_clocked`]. The store still happens with nothing
+/// in flight; submissions within a tick reach the server only after the
+/// store (the TCP write happens-after it on the replay thread), so the
+/// networked spans are as deterministic as the in-process ones.
+pub fn replay_net_clocked(
+    client: &Client,
+    trace: &MultiTrace,
+    window: usize,
+    expected: Option<&[Vec<i64>]>,
+    ticks: &AtomicU64,
+) -> MultiLoadReport {
+    let requests: Vec<(u64, usize, &[i64], u64, u8)> = trace
+        .requests
+        .iter()
+        .map(|r| (r.at_tick, r.model, r.frame.as_slice(), r.deadline_us, r.class))
+        .collect();
+    replay_core(client, &trace.models, &requests, window, expected, Some(ticks))
 }
 
 /// The shared virtual-clock replay loop behind [`replay`],
@@ -609,6 +652,7 @@ fn replay_core<T: ReplayTransport>(
     requests: &[(u64, usize, &[i64], u64, u8)],
     window: usize,
     expected: Option<&[Vec<i64>]>,
+    tick_sink: Option<&AtomicU64>,
 ) -> MultiLoadReport {
     /// One in-flight request: trace index, model index, class slot in
     /// `report.classes`, whether it carried a deadline, and the pending
@@ -689,13 +733,22 @@ fn replay_core<T: ReplayTransport>(
     };
     let mut inflight: VecDeque<InFlight<T::Pending>> = VecDeque::new();
     let mut clock = requests.first().map(|&(tick, ..)| tick).unwrap_or(0);
+    if let Some(sink) = tick_sink {
+        sink.store(clock, Ordering::Release);
+    }
     for (i, &(at_tick, model, frame, deadline_us, class)) in requests.iter().enumerate() {
         // Tick barrier: the virtual clock only advances once every
-        // request from earlier ticks has been answered.
+        // request from earlier ticks has been answered. Settling happens
+        // *before* the tick store so no span straddles a clock edge —
+        // every stamp a request takes comes from exactly one tick value,
+        // which is what makes virtual-clock traces deterministic.
         if at_tick != clock {
-            clock = at_tick;
             while let Some(f) = inflight.pop_front() {
                 settle::<T>(f, expected, &mut report);
+            }
+            clock = at_tick;
+            if let Some(sink) = tick_sink {
+                sink.store(clock, Ordering::Release);
             }
         }
         while inflight.len() >= window {

@@ -561,8 +561,16 @@ impl ReactorStatsSnapshot {
     }
 }
 
+/// Schema version stamped on every [`metrics_report_json`] report.
+/// Bump whenever a field is renamed, removed, or changes meaning —
+/// additive fields don't require a bump. Consumers (dashboards, the
+/// periodic `--metrics-interval` flush readers) key on this instead of
+/// sniffing field shapes.
+pub const METRICS_SCHEMA_VERSION: u64 = 1;
+
 /// The full machine-readable metrics report `serve --metrics-json`
-/// writes on shutdown: the aggregate snapshot, the per-model views, and
+/// writes (at shutdown, and periodically under `--metrics-interval`):
+/// the schema version, the aggregate snapshot, the per-model views, and
 /// (when the TCP front-end ran) the net-layer counters.
 pub fn metrics_report_json(
     aggregate: &MetricsSnapshot,
@@ -570,6 +578,7 @@ pub fn metrics_report_json(
     net: Option<&NetMetricsSnapshot>,
 ) -> Json {
     let mut pairs = vec![
+        ("schema_version", Json::from(METRICS_SCHEMA_VERSION)),
         ("aggregate", aggregate.to_json()),
         (
             "models",

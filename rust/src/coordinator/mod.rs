@@ -76,6 +76,8 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryS
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::profile::LayerProfileRow;
+use crate::obs::{ActiveSpan, Clock, FlightRecorder, LayerProfiler, SpanOutcome, TraceStatsSnapshot};
 use crate::quant::QModel;
 use crate::sim::compiled::{CompiledPipeline, FoldedPipeline};
 use crate::sim::pipeline::PipelineSim;
@@ -304,6 +306,26 @@ pub fn admission_from_env() -> Option<bool> {
     }
 }
 
+/// The flight-recorder setting named by `$CNN_FLOW_TRACE` (`on` |
+/// `off`). Unset or empty means "no override" (tracing defaults off —
+/// the recorder costs one ring-lock acquisition per finished request);
+/// typos panic, same rationale as [`EngineKind::from_env`]. CI's tracing
+/// matrix legs force the recorder through both net cores this way.
+pub fn trace_from_env() -> Option<bool> {
+    let raw = std::env::var("CNN_FLOW_TRACE").ok()?;
+    if raw.is_empty() {
+        return None;
+    }
+    match raw.to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" => Some(true),
+        "off" | "0" | "false" => Some(false),
+        _ => panic!(
+            "CNN_FLOW_TRACE='{raw}' is not a recognized tracing setting \
+             (expected on | off)"
+        ),
+    }
+}
+
 /// One row of the multi-model route table: how many worker shards the
 /// named model's group gets in [`Server::start_multi`]. Models without a
 /// route fall back to [`ServerConfig::workers`].
@@ -357,6 +379,25 @@ pub struct ServerConfig {
     /// active). The default honours `$CNN_FLOW_AUTOSCALE`, see
     /// [`AutoscaleConfig::from_env`].
     pub autoscale: Option<AutoscaleConfig>,
+    /// Flight-recorder tracing (DESIGN.md §13): when on, every routed
+    /// request carries a span from intake to its terminal outcome and
+    /// `spans_recorded + spans_dropped` reconciles exactly with
+    /// `completed + errored + rejected + shed`. Default off; the default
+    /// honours `$CNN_FLOW_TRACE`, see [`trace_from_env`].
+    pub trace: bool,
+    /// Flight-recorder ring capacity in spans; overflow is counted,
+    /// never blocking.
+    pub trace_capacity: usize,
+    /// Per-layer execute-path profiling ([`LayerProfiler`]): timing-only
+    /// atomic accumulators shared across a group's shards, so profiled
+    /// runs stay bit-identical to unprofiled ones. The interpreter
+    /// engine ignores it (its per-unit cycle model already attributes
+    /// work per layer).
+    pub profile: bool,
+    /// The clock every span stamp reads ([`Clock`], DESIGN.md §13): wall
+    /// in production, the loadgen virtual clock under seeded replay so
+    /// traces are byte-deterministic.
+    pub clock: Clock,
 }
 
 impl Default for ServerConfig {
@@ -373,6 +414,10 @@ impl Default for ServerConfig {
             dispatch: DispatchKind::default_from_env(),
             admission: admission_from_env().unwrap_or(true),
             autoscale: AutoscaleConfig::default_from_env(),
+            trace: trace_from_env().unwrap_or(false),
+            trace_capacity: 4096,
+            profile: false,
+            clock: Clock::wall(),
         }
     }
 }
@@ -457,12 +502,25 @@ struct Request {
     /// echoed verbatim into [`InferResponse`] by the worker.
     predicted_cycles: u64,
     slo_met: bool,
+    /// Flight-recorder span riding the request (None when tracing is
+    /// off). Boxed: the hot path without tracing pays one null-pointer
+    /// word, not the whole span.
+    trace: Option<Box<ActiveSpan>>,
 }
 
 impl Request {
-    /// Send the reply, then fire the completion hook. The order matters:
-    /// the notify must observe a `try_wait`-able channel.
-    fn answer(self, result: Result<InferResponse, String>) {
+    /// Finalize the span (if any), send the reply, then fire the
+    /// completion hook. The order matters twice over: the span must be
+    /// in the recorder before the reply is observable (so a settled
+    /// replay sees every span), and the notify must observe a
+    /// `try_wait`-able channel.
+    fn answer(mut self, result: Result<InferResponse, String>) {
+        if let Some(t) = self.trace.take() {
+            t.finish(match &result {
+                Ok(_) => SpanOutcome::Completed,
+                Err(_) => SpanOutcome::Errored,
+            });
+        }
         let _ = self.reply.send(result);
         if let Some(n) = &self.notify {
             n.notify();
@@ -570,6 +628,12 @@ struct Group {
     active: AtomicUsize,
     /// Consecutive zero-backlog autoscale evaluations (shrink hysteresis).
     idle: AtomicUsize,
+    /// The model id as a shared str so every span clones a pointer, not
+    /// a String.
+    tag: Arc<str>,
+    /// Per-layer measured-time accumulators shared by every shard's
+    /// engine clone (None when profiling is off).
+    profiler: Option<Arc<LayerProfiler>>,
 }
 
 /// The running sharded server (one or many models).
@@ -579,6 +643,10 @@ pub struct Server {
     verifier: Mutex<Option<std::thread::JoinHandle<()>>>,
     config: ServerConfig,
     open: AtomicBool,
+    /// Flight recorder shared by every routed request's span (None when
+    /// tracing is off). Server-wide, not per-group: the reconciliation
+    /// identity sums intake counters over all groups.
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl Server {
@@ -631,6 +699,9 @@ impl Server {
         }
         let single = models.len() == 1;
         let metrics = Arc::new(Metrics::default());
+        let recorder = config
+            .trace
+            .then(|| Arc::new(FlightRecorder::new(config.trace_capacity)));
 
         // Verifier thread (owns the PJRT runtime end-to-end). All sampling
         // shards share one channel — the verifier handle is the channel,
@@ -664,6 +735,16 @@ impl Server {
             // golden executable belongs to exactly one model.
             let samples = verify_model.is_some()
                 && (single || verify_model.as_deref() == Some(model_id.as_str()));
+            let tag: Arc<str> = Arc::from(model_id.as_str());
+            // One profiler per group, shared by every shard's engine
+            // clone, with rows named after the analytic prediction's
+            // layers — so the measured and analytic sides of the
+            // divergence table index identically.
+            let profiler = config.profile.then(|| {
+                Arc::new(LayerProfiler::new(
+                    base_sim.predicted.layers.iter().map(|l| l.name.clone()).collect(),
+                ))
+            });
             let mut shards = Vec::with_capacity(workers);
             for _ in 0..workers {
                 let (tx, rx) = sync_channel::<Job>(config.queue_depth.max(1));
@@ -675,9 +756,10 @@ impl Server {
                 }
                 let wmetrics = Arc::clone(&shard_metrics);
                 let wvtx = vtx.clone();
+                let wprof = profiler.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("cnn-flow-shard-{shard_id}"))
-                    .spawn(move || worker_loop(sim, wconfig, rx, wvtx, &wmetrics))
+                    .spawn(move || worker_loop(sim, wconfig, rx, wvtx, &wmetrics, wprof))
                     .map_err(|e| format!("spawn shard {shard_id}: {e}"))?;
                 shards.push(Shard {
                     tx,
@@ -697,6 +779,8 @@ impl Server {
                 allowance_cycles,
                 active: AtomicUsize::new(active),
                 idle: AtomicUsize::new(0),
+                tag,
+                profiler,
             });
         }
         // Workers hold the only remaining sampling senders: the verifier's
@@ -710,6 +794,7 @@ impl Server {
             verifier: Mutex::new(verifier),
             config,
             open: AtomicBool::new(true),
+            recorder,
         })
     }
 
@@ -827,6 +912,13 @@ impl Server {
             order.sort_by_key(|&i| Self::predict_on(group, &group.shards[i]));
         }
 
+        // Span opens at intake, before admission screening, so shed and
+        // rejected requests are traced too — the reconciliation identity
+        // covers every intake outcome.
+        let trace = self
+            .recorder
+            .as_ref()
+            .map(|r| Box::new(ActiveSpan::begin(r, &self.config.clock, &group.tag)));
         let (rtx, rrx) = sync_channel(1);
         let mut job = Some(Job::Infer(Request {
             x_q,
@@ -835,6 +927,7 @@ impl Server {
             notify,
             predicted_cycles: 0,
             slo_met: false,
+            trace,
         }));
         let mut disconnected = 0usize;
         let mut screened = 0usize;
@@ -856,6 +949,13 @@ impl Server {
                 // misses honestly (`slo_met` is decided here either way).
                 req.predicted_cycles = if budget.is_some() { predicted } else { 0 };
                 req.slo_met = budget.is_some_and(|b| predicted <= b);
+                // Tentative admission stamp for the shard about to be
+                // tried; cleared again on the rejection tail below if no
+                // try_send ever succeeds.
+                if let Some(t) = req.trace.as_deref_mut() {
+                    t.span.shard = idx as u32;
+                    t.span.admitted_ns = t.clock.now_nanos();
+                }
             }
             match shard.tx.try_send(j) {
                 Ok(()) => {
@@ -874,6 +974,9 @@ impl Server {
             }
         }
         if disconnected == active {
+            // Not an intake outcome (no counter moves), so the span is
+            // dropped unrecorded — the reconciliation identity only
+            // covers completed/errored/rejected/shed.
             return Err("server stopped".into());
         }
         if screened == active - disconnected {
@@ -881,12 +984,14 @@ impl Server {
             // shed beats late work. The "slo miss" prefix is the wire
             // contract for `ErrorCode::SloMiss` (net/proto.rs).
             group.intake.shed.fetch_add(1, Ordering::Relaxed);
+            finish_turned_away(&mut job, SpanOutcome::Shed);
             return Err(format!(
                 "slo miss: predicted {min_predicted} cycles exceeds deadline budget {} cycles",
                 budget.unwrap_or(0)
             ));
         }
         group.intake.rejected.fetch_add(1, Ordering::Relaxed);
+        finish_turned_away(&mut job, SpanOutcome::Rejected);
         Err("backpressure: all shard queues full".into())
     }
 
@@ -1105,6 +1210,50 @@ impl Server {
         out
     }
 
+    /// The flight recorder, when tracing is enabled
+    /// ([`ServerConfig::trace`]). Spans land here as requests reach
+    /// their terminal outcome; after a drain the recorder is frozen and
+    /// `spans_recorded + spans_dropped` equals
+    /// `completed + errored + rejected + shed`.
+    pub fn flight_recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.recorder.as_ref().map(Arc::clone)
+    }
+
+    /// Recorder accounting snapshot (None when tracing is off).
+    pub fn trace_stats(&self) -> Option<TraceStatsSnapshot> {
+        self.recorder.as_ref().map(|r| r.stats())
+    }
+
+    /// Per-model measured layer profiles, in group order (empty when
+    /// profiling is off). Rows are named and ordered identically to the
+    /// group's `SchedulePrediction::layers`, so callers can zip them
+    /// against the analytic cycle shares directly.
+    pub fn layer_profiles(&self) -> Vec<(String, Vec<LayerProfileRow>)> {
+        self.groups
+            .iter()
+            .filter_map(|g| {
+                g.profiler
+                    .as_ref()
+                    .map(|p| (g.model.clone(), p.snapshot()))
+            })
+            .collect()
+    }
+
+    /// Render the live Prometheus text-format exposition page for this
+    /// server: aggregate + per-model snapshots, the trace accounting
+    /// when tracing is on, plus whatever front-end snapshots the caller
+    /// has (`net` for either TCP core, `reactor` for the evented one).
+    pub fn metrics_text(
+        &self,
+        net: Option<&NetMetricsSnapshot>,
+        reactor: Option<&ReactorStatsSnapshot>,
+    ) -> String {
+        let aggregate = self.metrics();
+        let per_model = self.model_metrics();
+        let trace = self.trace_stats();
+        crate::obs::prom::render_exposition(&aggregate, &per_model, net, reactor, trace.as_ref())
+    }
+
     /// Graceful shutdown: close intake, drain every shard queue, join all
     /// threads, return the final (deterministic) snapshot.
     pub fn shutdown(mut self) -> MetricsSnapshot {
@@ -1169,6 +1318,26 @@ impl Drop for Server {
     }
 }
 
+/// Finalize the span of a request turned away at intake (rejected or
+/// shed). The tentative admission stamps from failed `try_send` attempts
+/// are cleared first: the request was never admitted anywhere.
+fn finish_turned_away(job: &mut Option<Job>, outcome: SpanOutcome) {
+    if let Some(Job::Infer(req)) = job.as_mut() {
+        if let Some(mut t) = req.trace.take() {
+            t.span.shard = 0;
+            t.span.admitted_ns = 0;
+            t.finish(outcome);
+        }
+    }
+}
+
+/// Stamp the queue-exit time on a freshly dequeued request's span.
+fn stamp_dequeued(req: &mut Request) {
+    if let Some(t) = req.trace.as_deref_mut() {
+        t.span.dequeued_ns = t.clock.now_nanos();
+    }
+}
+
 /// One shard: accumulate queued requests into deadline-bounded
 /// micro-batches and stream each batch through this shard's own pipeline
 /// replica.
@@ -1178,6 +1347,7 @@ fn worker_loop(
     rx: Receiver<Job>,
     vtx: SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
+    profiler: Option<Arc<LayerProfiler>>,
 ) {
     // The value engine is cloned once per shard and reused across all
     // groups — scratch buffers included, so the hot path never allocates
@@ -1187,6 +1357,14 @@ fn worker_loop(
         EngineKind::Folded => WorkerEngine::Folded(sim.folded.clone()),
         EngineKind::Interpreter => WorkerEngine::Interp,
     };
+    // The profiler rides the shard's private engine clone; the
+    // interpreter oracle ignores it (its cycle model already attributes
+    // work per layer analytically).
+    match &mut engine {
+        WorkerEngine::Compiled(cp) => cp.set_profiler(profiler),
+        WorkerEngine::Folded(fp) => fp.set_profiler(profiler),
+        WorkerEngine::Interp => {}
+    }
     let max_batch = config.max_batch.max(1);
     let mut serial: u64 = 0;
     let mut open = true;
@@ -1194,10 +1372,11 @@ fn worker_loop(
         // Block for the first request, then accumulate until the batch is
         // full or the first request's deadline expires — contiguous
         // frames = continuous flow, the deadline caps the added latency.
-        let first = match rx.recv() {
+        let mut first = match rx.recv() {
             Ok(Job::Infer(r)) => r,
             Ok(Job::Shutdown) | Err(_) => break,
         };
+        stamp_dequeued(&mut first);
         // checked_add: an absurd --batch-deadline must degrade to "wait
         // a day" rather than panic on Instant overflow.
         let deadline = first
@@ -1209,7 +1388,10 @@ fn worker_loop(
         while group.len() < max_batch {
             let left = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
-                Ok(Job::Infer(r)) => group.push(r),
+                Ok(Job::Infer(mut r)) => {
+                    stamp_dequeued(&mut r);
+                    group.push(r);
+                }
                 Ok(Job::Shutdown) => {
                     open = false;
                     reason = FlushReason::Drain;
@@ -1235,7 +1417,10 @@ fn worker_loop(
         let mut group = Vec::new();
         while group.len() < max_batch {
             match rx.try_recv() {
-                Ok(Job::Infer(r)) => group.push(r),
+                Ok(Job::Infer(mut r)) => {
+                    stamp_dequeued(&mut r);
+                    group.push(r);
+                }
                 Ok(Job::Shutdown) => continue,
                 Err(_) => break,
             }
@@ -1421,17 +1606,33 @@ fn run_group(
     sim: &PipelineSim,
     engine: &mut WorkerEngine,
     config: &ServerConfig,
-    group: Vec<Request>,
+    mut group: Vec<Request>,
     vtx: &SyncSender<(Vec<i64>, Vec<i64>)>,
     shard: &ShardMetrics,
     serial: &mut u64,
     reason: FlushReason,
 ) {
+    // One clock reading closes batch assembly AND opens execution for
+    // the whole group (batch_assembly = dequeue → flush, execute =
+    // engine time); a second closes execution after the engine returns.
+    let exec_start = if config.trace { config.clock.now_nanos() } else { 0 };
     let result = match engine {
         WorkerEngine::Compiled(cp) => run_group_compiled(sim, cp, &group, shard),
         WorkerEngine::Folded(fp) => run_group_folded(sim, fp, &group, shard),
         WorkerEngine::Interp => run_group_interpreted(sim, &group, shard),
     };
+    if config.trace {
+        let exec_end = config.clock.now_nanos();
+        let bsz = group.len() as u32;
+        for req in &mut group {
+            if let Some(t) = req.trace.as_deref_mut() {
+                t.span.batch_size = bsz;
+                t.span.batched_ns = exec_start;
+                t.span.exec_start_ns = exec_start;
+                t.span.exec_end_ns = exec_end;
+            }
+        }
+    }
     shard.batches.fetch_add(1, Ordering::Relaxed);
     match reason {
         FlushReason::Full => shard.flush_full.fetch_add(1, Ordering::Relaxed),

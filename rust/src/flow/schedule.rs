@@ -818,6 +818,25 @@ impl SchedulePrediction {
         }
     }
 
+    /// Analytic per-layer share of a frame's busy unit-cycles: each
+    /// layer's `ops_per_frame / units` (the cycles one shared unit spends
+    /// on the layer per frame), normalised to sum to 1. This is the
+    /// analytic column the `cnn-flow profile` divergence table places
+    /// next to the measured time shares from
+    /// [`crate::obs::LayerProfiler`] (DESIGN.md §13).
+    pub fn cycle_shares(&self) -> Vec<f64> {
+        let per_unit: Vec<f64> = self
+            .layers
+            .iter()
+            .map(|l| l.ops_per_frame as f64 / l.units.max(1) as f64)
+            .collect();
+        let total: f64 = per_unit.iter().sum();
+        if total <= 0.0 {
+            return vec![0.0; per_unit.len()];
+        }
+        per_unit.iter().map(|c| c / total).collect()
+    }
+
     /// Per-layer utilisation over an `frames`-frame stream.
     pub fn utilization(&self, frames: usize) -> Vec<f64> {
         self.layers

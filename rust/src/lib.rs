@@ -43,6 +43,13 @@
 //!   graceful drain over sockets), a pooled blocking client, and a
 //!   network replay harness whose responses are byte-identical to
 //!   in-process serving (DESIGN.md §8),
+//! * [`obs`] — the observability tier (DESIGN.md §13): a flight
+//!   recorder of per-request stage spans on a shared wall/virtual
+//!   [`obs::Clock`], an optional per-layer execute-path profiler whose
+//!   measured time shares sit next to the analytic cycle shares, and
+//!   Prometheus text-format exposition of every metrics snapshot
+//!   (served over the wire protocol's `MetricsText` request and the
+//!   `--metrics-listen` plain-TCP endpoint),
 //! * [`report`] — generators that print every paper table and figure.
 //!
 //! Serving scale-out mirrors the companion work (*Data-Rate-Aware
@@ -56,6 +63,7 @@ pub mod flow;
 pub mod fpga;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

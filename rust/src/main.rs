@@ -13,6 +13,10 @@
 //!                                 front-end; EOF on stdin drains + exits)
 //! cnn-flow client --connect H:P   blocking TCP client: list models, send
 //!                                 seeded traffic, report latency
+//! cnn-flow trace                  flight-recorder dump: per-stage latency
+//!                                 quantiles over a traced serving run
+//! cnn-flow profile <model>        measured per-layer time share vs the
+//!                                 analytic cycle share (DESIGN.md §13)
 //! cnn-flow list                   zoo models
 //! ```
 //!
@@ -71,6 +75,8 @@ fn run(args: &[String]) -> i32 {
         "simulate" => cmd_simulate(&opts),
         "serve" => cmd_serve(&opts),
         "client" => cmd_client(&opts),
+        "trace" => cmd_trace(&opts),
+        "profile" => cmd_profile(rest, &opts),
         "bench" => cmd_bench(&opts),
         "list" => {
             for m in zoo::all_models() {
@@ -110,13 +116,19 @@ fn usage() {
                     [--verify-every N] [--engine compiled|folded|interp]\n  \
                     [--dispatch predictive|roundrobin] [--admission on|off]\n  \
                     [--autoscale on|off|MIN:MAX] [--metrics-json PATH]\n  \
+                    [--trace on|off] [--profile on|off] (all serve modes)\n  \
          cnn-flow serve    --models <zoo,names,...> (multi-model shard groups; same flags\n  \
                     except --verify-every; --workers = shards per model)\n  \
          cnn-flow serve    --listen <host:port> [--model M|--models A,B|--synthetic]\n  \
-                    [--net-core threaded|evented] (TCP front-end; EOF on stdin\n  \
+                    [--net-core threaded|evented] [--metrics-listen <host:port>]\n  \
+                    [--metrics-interval SECS] (TCP front-end; EOF on stdin\n  \
                     drains and exits)\n  \
          cnn-flow client   --connect <host:port> [--model M] [--requests N] [--pool N]\n  \
                     [--seed S] [--deadline-us N] [--class N]\n  \
+         cnn-flow trace    [--model M|--synthetic] [--requests N] [--workers N]\n  \
+                    (flight-recorder per-stage p50/p95/p99)\n  \
+         cnn-flow profile  <model> [--requests N] [--engine compiled|folded]\n  \
+                    (measured vs analytic per-layer shares)\n  \
          cnn-flow bench    [--synthetic] [--frames N] [--out BENCH_pipeline.json]\n  \
                     [--fanin MAXCONNS] (0 skips the network fan-in ladder)\n  \
          cnn-flow list"
@@ -375,6 +387,27 @@ fn net_core_flag(opts: &HashMap<String, String>) -> Result<NetCore, String> {
     }
 }
 
+/// Parse an on/off switch value (`--admission`, `--trace`,
+/// `--profile`); a bare flag comes through `parse_flags` as `"true"`.
+fn on_off(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
+/// Resolve a model name to a `QModel`: zoo names synthesize weights
+/// with the stable per-name seed; anything else goes through the
+/// artifact loader.
+fn resolve_qmodel(name: &str) -> Result<QModel, String> {
+    if let Some(model) = zoo::by_name(name) {
+        return QModel::synthesize(&model, model_seed(&model.name))
+            .map_err(|e| format!("{name}: {e}"));
+    }
+    load_qmodel(name)
+}
+
 /// Stable per-model weight seed for the synthesized serving zoo, derived
 /// from the model name so repeated runs (and tests) agree.
 fn model_seed(name: &str) -> u64 {
@@ -486,15 +519,20 @@ fn serve_config(
             .ok_or_else(|| format!("--dispatch {s}: expected predictive|roundrobin"))?;
     }
     if let Some(s) = opts.get("admission") {
-        config.admission = match s.to_ascii_lowercase().as_str() {
-            "on" | "true" | "1" => true,
-            "off" | "false" | "0" => false,
-            _ => return Err(format!("--admission {s}: expected on|off")),
-        };
+        config.admission =
+            on_off(s).ok_or_else(|| format!("--admission {s}: expected on|off"))?;
     }
     if let Some(s) = opts.get("autoscale") {
         config.autoscale = AutoscaleConfig::parse(s)
             .ok_or_else(|| format!("--autoscale {s}: expected on|off|MIN:MAX"))?;
+    }
+    // Observability switches (DESIGN.md §13); the defaults honour
+    // $CNN_FLOW_TRACE via `ServerConfig::default`.
+    if let Some(s) = opts.get("trace") {
+        config.trace = on_off(s).ok_or_else(|| format!("--trace {s}: expected on|off"))?;
+    }
+    if let Some(s) = opts.get("profile") {
+        config.profile = on_off(s).ok_or_else(|| format!("--profile {s}: expected on|off"))?;
     }
     Ok(config)
 }
@@ -508,6 +546,21 @@ fn write_metrics_json(
 ) -> Result<(), String> {
     let doc = metrics_report_json(aggregate, per_model, net);
     std::fs::write(path, doc.render_pretty()).map_err(|e| format!("write {path}: {e}"))
+}
+
+/// Periodic-flush variant (`--metrics-interval`): write to `<path>.tmp`
+/// and atomically rename over `path`, so a concurrent reader never
+/// observes a half-written report.
+fn write_metrics_json_atomic(
+    path: &str,
+    aggregate: &MetricsSnapshot,
+    per_model: &[ModelMetricsSnapshot],
+    net: Option<&NetMetricsSnapshot>,
+) -> Result<(), String> {
+    let doc = metrics_report_json(aggregate, per_model, net);
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, doc.render_pretty()).map_err(|e| format!("write {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename {tmp} -> {path}: {e}"))
 }
 
 /// `serve --models a,b,c`: lower each zoo config once through the
@@ -557,7 +610,7 @@ fn cmd_serve_multi(list: &str, opts: &HashMap<String, String>) -> i32 {
     let trace = loadgen::MultiTrace::seeded(0x517A, requests, &specs, 1);
     let sims: Vec<&PipelineSim> = models.iter().map(|(_, sim)| sim).collect();
     let expected = loadgen::golden_outputs_multi(&sims, &trace);
-    let started = std::time::Instant::now();
+    let started = bench::Stopwatch::start();
     let report = loadgen::replay_multi(&server, &trace, 4 * workers.max(1), Some(&expected));
     let elapsed = started.elapsed();
     server.drain();
@@ -684,11 +737,89 @@ fn cmd_serve_listen(addr: &str, opts: &HashMap<String, String>) -> i32 {
     println!("listening on {bound} ({core} core) — routing {}", routed.join(", "));
     println!("serving until stdin reaches EOF (try `cnn-flow client --connect {bound}`)");
 
+    // Live observability taps (DESIGN.md §13). Both render from shared
+    // handles, so they keep serving fresh snapshots while this thread
+    // blocks on stdin below.
+    let net_metrics = net.metrics_handle();
+    let reactor = net.reactor_handle();
+    let mut metrics_ep = match opts.get("metrics-listen") {
+        Some(maddr) => {
+            let render_server = std::sync::Arc::clone(&server);
+            let nm = std::sync::Arc::clone(&net_metrics);
+            let rs = reactor.clone();
+            match cnn_flow::obs::TextEndpoint::bind(maddr, move || {
+                let rsnap = rs.as_ref().map(|r| r.snapshot());
+                render_server.metrics_text(Some(&nm.snapshot()), rsnap.as_ref())
+            }) {
+                Ok(ep) => {
+                    println!(
+                        "metrics exposition on {} (plain TCP: one page per connection)",
+                        ep.local_addr()
+                    );
+                    Some(ep)
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        }
+        None => None,
+    };
+    let flush_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flush_thread = match opts.get("metrics-interval") {
+        Some(secs) => {
+            let period: u64 = match secs.parse() {
+                Ok(p) if p > 0 => p,
+                _ => {
+                    eprintln!(
+                        "--metrics-interval {secs}: expected a positive whole number of seconds"
+                    );
+                    return 2;
+                }
+            };
+            let Some(path) = opts.get("metrics-json").cloned() else {
+                eprintln!("--metrics-interval needs --metrics-json PATH (the file it refreshes)");
+                return 2;
+            };
+            let s = std::sync::Arc::clone(&server);
+            let nm = std::sync::Arc::clone(&net_metrics);
+            let stop = std::sync::Arc::clone(&flush_stop);
+            println!("refreshing {path} every {period}s (atomic rename)");
+            Some(std::thread::spawn(move || {
+                let period = std::time::Duration::from_secs(period);
+                let nap = std::time::Duration::from_millis(50);
+                let mut last = bench::Stopwatch::start();
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    if last.elapsed() < period {
+                        std::thread::sleep(nap);
+                        continue;
+                    }
+                    last = bench::Stopwatch::start();
+                    let snap = nm.snapshot();
+                    if let Err(e) =
+                        write_metrics_json_atomic(&path, &s.metrics(), &s.model_metrics(), Some(&snap))
+                    {
+                        eprintln!("{e}");
+                    }
+                }
+            }))
+        }
+        None => None,
+    };
+
     // Block until the controlling stdin closes, then drain.
     let mut buf = [0u8; 4096];
     let mut stdin = std::io::stdin();
     while matches!(std::io::Read::read(&mut stdin, &mut buf), Ok(n) if n > 0) {}
 
+    flush_stop.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(h) = flush_thread {
+        let _ = h.join();
+    }
+    if let Some(ep) = metrics_ep.as_mut() {
+        ep.shutdown();
+    }
     let net_snap = net.shutdown(); // drains the coordinator too
     let m = server.metrics();
     if let Some(r) = net.reactor_stats() {
@@ -802,10 +933,10 @@ fn cmd_client(opts: &HashMap<String, String>) -> i32 {
     let mut errors = 0usize;
     let mut shed = 0usize;
     let mut slo_met = 0usize;
-    let started = std::time::Instant::now();
+    let started = bench::Stopwatch::start();
     for _ in 0..requests {
         let frame: Vec<i64> = (0..input_len).map(|_| rng.int8() as i64).collect();
-        let t0 = std::time::Instant::now();
+        let t0 = bench::Stopwatch::start();
         match client.infer_slo(&model, &frame, deadline_us, class) {
             Ok(resp) => {
                 latencies.push(t0.elapsed());
@@ -850,6 +981,228 @@ fn cmd_client(opts: &HashMap<String, String>) -> i32 {
     if errors > 0 {
         eprintln!("{errors} request(s) failed");
         return 1;
+    }
+    0
+}
+
+/// `cnn-flow trace`: run a traced serving session (flight recorder on)
+/// and dump the per-stage latency quantiles plus the span/intake
+/// reconciliation identity (DESIGN.md §13).
+fn cmd_trace(opts: &HashMap<String, String>) -> i32 {
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let mut config = match serve_config(opts, 2, 8, 200) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    config.trace = true;
+    let qm = match opts.get("model") {
+        Some(name) => match resolve_qmodel(name) {
+            Ok(q) => q,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        None => QModel::synthetic(12, 8, 10, 0xF1C),
+    };
+    let server = match Server::start(qm.clone(), config, None) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let input_len: usize = qm.input_shape.iter().map(|&d| d.max(1)).product();
+    let vectors: Vec<Vec<i64>> = if qm.test_vectors.is_empty() {
+        let mut rng = Rng::new(0x7ACE);
+        (0..64)
+            .map(|_| (0..input_len).map(|_| rng.int8() as i64).collect())
+            .collect()
+    } else {
+        qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect()
+    };
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let s = std::sync::Arc::clone(&server);
+        let vectors = vectors.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..requests / 4 {
+                let _ = s.infer(vectors[(c + i) % vectors.len()].clone());
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut server = match std::sync::Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("internal error: client threads still hold the server");
+            return 1;
+        }
+    };
+    server.drain();
+
+    let rec = server.flight_recorder().expect("trace was enabled");
+    let spans = rec.spans();
+    let stats = rec.stats();
+    let mut t = Table::new(
+        format!(
+            "{} trace: {} span(s) retained ({} recorded, {} dropped, ring capacity {})",
+            qm.name, stats.retained, stats.spans_recorded, stats.spans_dropped, stats.capacity
+        ),
+        &["stage", "count", "p50", "p95", "p99"],
+    );
+    for s in cnn_flow::obs::stage_summary(&spans) {
+        t.row(&[
+            s.stage.to_string(),
+            s.count.to_string(),
+            format!("{:?}", std::time::Duration::from_nanos(s.p50_ns)),
+            format!("{:?}", std::time::Duration::from_nanos(s.p95_ns)),
+            format!("{:?}", std::time::Duration::from_nanos(s.p99_ns)),
+        ]);
+    }
+    println!("{t}");
+    let m = server.metrics();
+    let terminal = m.completed + m.errored + m.rejected + m.shed;
+    println!(
+        "reconciliation: {} recorded + {} dropped vs {} terminal outcomes \
+         ({} completed, {} errored, {} rejected, {} shed)",
+        stats.spans_recorded,
+        stats.spans_dropped,
+        terminal,
+        m.completed,
+        m.errored,
+        m.rejected,
+        m.shed
+    );
+    if stats.spans_recorded + stats.spans_dropped != terminal {
+        eprintln!("SPAN RECONCILIATION FAILED");
+        return 1;
+    }
+    0
+}
+
+/// `cnn-flow profile <model>`: run a profiled serving session and print
+/// the divergence table between the measured per-layer time share and
+/// the analytic cycle share from `SchedulePrediction::cycle_shares`,
+/// alongside the folded-unit figures from `FoldedPrediction` — the
+/// software analogue of the paper's per-layer utilization tables.
+fn cmd_profile(rest: &[String], opts: &HashMap<String, String>) -> i32 {
+    let name = rest
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .or_else(|| opts.get("model").map(String::as_str))
+        .unwrap_or("mobilenet_micro");
+    let requests: usize = opts
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+        .max(1);
+    let mut config = match serve_config(opts, 2, 8, 200) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    config.profile = true;
+    let engine = config.engine;
+    let qm = match resolve_qmodel(name) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let sim = match PipelineSim::new(qm.clone(), None) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let predicted = sim.predicted.clone();
+    let shares = predicted.cycle_shares();
+    let folded = predicted.folded(requests, &sim.fold_factors);
+    let mut server = match Server::start_prelowered(sim, config, None) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let input_len: usize = qm.input_shape.iter().map(|&d| d.max(1)).product();
+    let mut rng = Rng::new(0x9F0F11E);
+    for _ in 0..requests {
+        let frame: Vec<i64> = (0..input_len).map(|_| rng.int8() as i64).collect();
+        if let Err(e) = server.infer(frame) {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
+    server.drain();
+
+    let profiles = server.layer_profiles();
+    let Some((_, rows)) = profiles.into_iter().next() else {
+        eprintln!("no profile rows recorded");
+        return 1;
+    };
+    let samples: u64 = rows.iter().map(|r| r.samples).sum();
+    let mut t = Table::new(
+        format!(
+            "{} per-layer profile ({requests} requests, {engine:?} engine)",
+            qm.name
+        ),
+        &[
+            "Layer",
+            "units",
+            "analytic",
+            "measured",
+            "delta",
+            "samples",
+            "fold",
+            "folded units",
+            "folded util",
+        ],
+    );
+    for (i, l) in predicted.layers.iter().enumerate() {
+        let measured = rows.get(i);
+        let m_share = measured.map(|r| r.measured_share).unwrap_or(0.0);
+        let analytic = shares.get(i).copied().unwrap_or(0.0);
+        t.row(&[
+            l.name.clone(),
+            l.units.to_string(),
+            format!("{:.1}%", analytic * 100.0),
+            format!("{:.1}%", m_share * 100.0),
+            format!("{:+.1}%", (m_share - analytic) * 100.0),
+            measured.map(|r| r.samples).unwrap_or(0).to_string(),
+            folded.fold_factors.get(i).copied().unwrap_or(1).to_string(),
+            folded.folded_units.get(i).copied().unwrap_or(0).to_string(),
+            format!(
+                "{:.1}%",
+                folded.utilization.get(i).copied().unwrap_or(0.0) * 100.0
+            ),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "analytic = SchedulePrediction::cycle_shares (ops/frame per unit); \
+         folded columns = SchedulePrediction::folded at batch {} (exact: {})",
+        folded.batch, folded.exact
+    );
+    if samples == 0 {
+        eprintln!(
+            "note: no per-layer samples recorded — the {engine:?} engine does not feed the \
+             profiler (use --engine compiled or folded)"
+        );
     }
     0
 }
@@ -924,7 +1277,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     } else {
         qm.test_vectors.iter().map(|tv| tv.x_q.clone()).collect()
     };
-    let started = std::time::Instant::now();
+    let started = bench::Stopwatch::start();
     let server = std::sync::Arc::new(server);
     let mut handles = Vec::new();
     for c in 0..4usize {

@@ -207,6 +207,27 @@ impl Client {
             Err(e) => Err(NetError::transport(format!("read model list: {e}"))),
         }
     }
+
+    /// Fetch the server's current metrics as a Prometheus text page
+    /// (DESIGN.md §13) — a fresh snapshot rendered at dispatch time.
+    pub fn metrics_text(&self) -> Result<String, NetError> {
+        let mut stream = self.checkout()?;
+        proto::write_frame(&mut stream, &Msg::MetricsText)
+            .map_err(|e| NetError::transport(format!("send metrics-text: {e}")))?;
+        match proto::read_frame(&mut stream) {
+            Ok(Some(Msg::MetricsTextReply { text })) => {
+                self.checkin(stream);
+                Ok(text)
+            }
+            Ok(Some(other)) => Err(NetError::transport(format!(
+                "unexpected reply to metrics-text: {other:?}"
+            ))),
+            Ok(None) => Err(NetError::transport(
+                "connection closed before metrics text".into(),
+            )),
+            Err(e) => Err(NetError::transport(format!("read metrics text: {e}"))),
+        }
+    }
 }
 
 /// A submitted-but-unanswered network request; holds its connection.

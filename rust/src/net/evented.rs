@@ -240,6 +240,17 @@ impl EventedServer {
         self.stats.snapshot()
     }
 
+    /// Shared handle to the live net counters (see
+    /// [`NetServer::metrics_handle`](super::server::NetServer::metrics_handle)).
+    pub fn metrics_handle(&self) -> Arc<NetMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Shared handle to the live reactor counters.
+    pub fn reactor_handle(&self) -> Arc<ReactorStats> {
+        Arc::clone(&self.stats)
+    }
+
     /// Graceful drain with the same ordering contract as the threaded
     /// core: stop accepting + EOF every read half (the reactor does both
     /// on the first wake), flush the coordinator so every accepted
@@ -537,7 +548,14 @@ impl Reactor {
             Msg::ListModels => conn.replies.push_back(Reply::Ready(Msg::ModelList {
                 models: self.specs.as_ref().clone(),
             })),
-            Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. } => {
+            Msg::MetricsText => {
+                let text = self
+                    .coordinator
+                    .metrics_text(Some(&self.metrics.snapshot()), Some(&self.stats.snapshot()));
+                conn.replies.push_back(Reply::Ready(Msg::MetricsTextReply { text }));
+            }
+            Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. }
+            | Msg::MetricsTextReply { .. } => {
                 self.count_error(ErrorCode::Malformed);
                 conn.replies.push_back(Reply::Ready(Msg::InferErr {
                     id: 0,

@@ -50,7 +50,7 @@ pub use server::{NetServer, NetServerConfig};
 
 use std::sync::Arc;
 
-use crate::coordinator::{NetMetricsSnapshot, ReactorStatsSnapshot, Server};
+use crate::coordinator::{NetMetrics, NetMetricsSnapshot, ReactorStats, ReactorStatsSnapshot, Server};
 
 /// Which network core serves the socket: the threaded oracle or the
 /// evented reactor. Mirrors `coordinator::EngineKind`'s selection
@@ -166,6 +166,27 @@ impl FrontEnd {
             FrontEnd::Threaded(s) => s.metrics(),
             #[cfg(unix)]
             FrontEnd::Evented(s) => s.metrics(),
+        }
+    }
+
+    /// Shared handle to the live net counters, for out-of-band
+    /// observers (metrics endpoint, periodic flush) that outlive this
+    /// borrow.
+    pub fn metrics_handle(&self) -> Arc<NetMetrics> {
+        match self {
+            FrontEnd::Threaded(s) => s.metrics_handle(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.metrics_handle(),
+        }
+    }
+
+    /// Shared handle to the live reactor counters — `None` on the
+    /// threaded core.
+    pub fn reactor_handle(&self) -> Option<Arc<ReactorStats>> {
+        match self {
+            FrontEnd::Threaded(_) => None,
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => Some(s.reactor_handle()),
         }
     }
 

@@ -50,6 +50,8 @@ const KIND_INFER_OK: u8 = 0x02;
 const KIND_INFER_ERR: u8 = 0x03;
 const KIND_LIST_MODELS: u8 = 0x04;
 const KIND_MODEL_LIST: u8 = 0x05;
+const KIND_METRICS_TEXT: u8 = 0x06;
+const KIND_METRICS_TEXT_REPLY: u8 = 0x07;
 
 /// Typed protocol error codes, one per coordinator rejection reason
 /// (DESIGN.md §8). The mapping is a serving contract pinned by
@@ -240,6 +242,14 @@ pub enum Msg {
     /// Server → client: `(model id, input frame length)` per group, in
     /// route order — enough for a client to synthesize valid traffic.
     ModelList { models: Vec<(String, u32)> },
+    /// Client → server: render the current metrics in Prometheus text
+    /// exposition format (DESIGN.md §13). No fields; the reply snapshots
+    /// at dispatch time.
+    MetricsText,
+    /// Server → client: one Prometheus text page. The payload rides a
+    /// u32 length prefix (not `str16`): a many-model exposition page can
+    /// exceed the 64 KiB a `u16` prefix carries.
+    MetricsTextReply { text: String },
 }
 
 impl Msg {
@@ -362,6 +372,11 @@ impl Msg {
                     push_u32(body, *input_len);
                 }
             }
+            Msg::MetricsText => body.push(KIND_METRICS_TEXT),
+            Msg::MetricsTextReply { text } => {
+                body.push(KIND_METRICS_TEXT_REPLY);
+                push_bytes32(body, text.as_bytes(), "metrics text")?;
+            }
         }
         Ok(())
     }
@@ -443,6 +458,15 @@ impl Msg {
                     models.push((id, input_len));
                 }
                 Msg::ModelList { models }
+            }
+            KIND_METRICS_TEXT => Msg::MetricsText,
+            KIND_METRICS_TEXT_REPLY => {
+                let n = cur.u32()? as usize;
+                let bytes = cur.take(n)?;
+                let text = String::from_utf8(bytes.to_vec()).map_err(|_| {
+                    ProtoError::Malformed("metrics text is not valid UTF-8".into())
+                })?;
+                Msg::MetricsTextReply { text }
             }
             other => {
                 return Err(ProtoError::Malformed(format!("unknown message kind {other:#04x}")))
@@ -662,6 +686,19 @@ fn push_str16(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&s.as_bytes()[..end]);
 }
 
+fn push_bytes32(out: &mut Vec<u8>, bytes: &[u8], field: &'static str) -> Result<(), ProtoError> {
+    if bytes.len() > u32::MAX as usize {
+        return Err(ProtoError::CountOverflow {
+            field,
+            count: bytes.len(),
+            max: u32::MAX as u64,
+        });
+    }
+    push_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+    Ok(())
+}
+
 fn push_vec_i64(out: &mut Vec<u8>, xs: &[i64], field: &'static str) -> Result<(), ProtoError> {
     if xs.len() > u32::MAX as usize {
         return Err(ProtoError::CountOverflow {
@@ -803,6 +840,10 @@ mod tests {
             Msg::ListModels,
             Msg::ModelList {
                 models: vec![("a".into(), 64), ("b".into(), 144)],
+            },
+            Msg::MetricsText,
+            Msg::MetricsTextReply {
+                text: "# TYPE cnn_flow_workers gauge\ncnn_flow_workers 4\n".into(),
             },
         ];
         for m in &msgs {

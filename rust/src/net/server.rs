@@ -165,6 +165,13 @@ impl NetServer {
         self.metrics.snapshot()
     }
 
+    /// Shared handle to the live net counters — lets an out-of-band
+    /// observer (the `--metrics-listen` endpoint, the periodic metrics
+    /// flush) snapshot mid-run without borrowing the server.
+    pub fn metrics_handle(&self) -> Arc<NetMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Graceful drain: stop accepting, EOF every connection's read half,
     /// flush the coordinator ([`Server::drain_shared`] — every accepted
     /// request is answered), join the connection threads (their writers
@@ -427,9 +434,15 @@ fn dispatch(
                 models: specs.as_ref().clone(),
             }))
             .is_ok(),
+        Msg::MetricsText => tx
+            .send(WriteItem::Ready(Msg::MetricsTextReply {
+                text: coordinator.metrics_text(Some(&metrics.snapshot()), None),
+            }))
+            .is_ok(),
         // Server→client kinds arriving at the server are a protocol
         // violation; answer once and close.
-        Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. } => {
+        Msg::InferOk { .. } | Msg::InferErr { .. } | Msg::ModelList { .. }
+        | Msg::MetricsTextReply { .. } => {
             count_error(metrics, ErrorCode::Malformed);
             let _ = tx.send(WriteItem::Ready(Msg::InferErr {
                 id: 0,

@@ -1,0 +1,91 @@
+//! The observability clock contract (DESIGN.md §13).
+//!
+//! Every stage timestamp a flight-recorder span carries comes from one
+//! [`Clock`], stored in the server config and cloned wherever spans are
+//! stamped. Production servers run the monotonic [`Clock::wall`] clock;
+//! the loadgen replay harness substitutes a [`Clock::virtual_from`]
+//! clock driven by its trace tick counter, which is what makes recorded
+//! spans **byte-deterministic** across seeded replays: the harness only
+//! advances the shared tick after every in-flight request has settled,
+//! so no stamp ever races a tick edge.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A nanosecond-resolution span clock: monotonic wall time anchored at
+/// construction, or the loadgen's virtual trace ticks.
+#[derive(Debug, Clone)]
+pub enum Clock {
+    /// Monotonic wall clock; `now_nanos` is nanoseconds since `base`.
+    Wall { base: Instant },
+    /// Virtual clock: `now_nanos` reads the shared tick counter the
+    /// replay harness advances between settled trace ticks.
+    Virtual { ticks: Arc<AtomicU64> },
+}
+
+impl Clock {
+    /// A wall clock anchored now. Stamps from two different wall clocks
+    /// are not comparable; share one clock per server.
+    pub fn wall() -> Clock {
+        Clock::Wall {
+            base: Instant::now(),
+        }
+    }
+
+    /// A virtual clock over a shared tick cell (the loadgen's
+    /// `tick_sink`). The harness owns advancement; readers only load.
+    pub fn virtual_from(ticks: Arc<AtomicU64>) -> Clock {
+        Clock::Virtual { ticks }
+    }
+
+    /// Current reading in nanoseconds (wall) or ticks (virtual). The
+    /// u64 saturates rather than wraps on pathological uptimes.
+    pub fn now_nanos(&self) -> u64 {
+        match self {
+            Clock::Wall { base } => {
+                u64::try_from(base.elapsed().as_nanos()).unwrap_or(u64::MAX)
+            }
+            Clock::Virtual { ticks } => ticks.load(Ordering::Acquire),
+        }
+    }
+
+    /// Whether this is the deterministic virtual clock (tests/replays).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = Clock::wall();
+        let a = c.now_nanos();
+        let b = c.now_nanos();
+        assert!(b >= a);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn virtual_clock_reads_the_shared_cell() {
+        let ticks = Arc::new(AtomicU64::new(0));
+        let c = Clock::virtual_from(Arc::clone(&ticks));
+        assert!(c.is_virtual());
+        assert_eq!(c.now_nanos(), 0);
+        ticks.store(42, Ordering::Release);
+        assert_eq!(c.now_nanos(), 42);
+        // Clones share the cell, like server-config clones must.
+        let c2 = c.clone();
+        ticks.store(7, Ordering::Release);
+        assert_eq!(c2.now_nanos(), 7);
+    }
+}

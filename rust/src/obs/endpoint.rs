@@ -1,0 +1,127 @@
+//! Plain-TCP metrics text endpoint (`serve --metrics-listen`).
+//!
+//! Deliberately not HTTP: one accepted connection gets one freshly
+//! rendered exposition page written to it, then the socket is closed —
+//! `nc host port` or a Prometheus scraper with a text-file bridge reads
+//! it directly. Keeping the endpoint off the inference wire protocol
+//! means a scrape can never occupy a protocol connection slot, and a
+//! half-open scraper can never stall the serving path: the endpoint
+//! runs on its own accept thread with short write timeouts.
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long the accept loop naps when idle; bounds shutdown latency.
+const IDLE_NAP: Duration = Duration::from_millis(25);
+/// Per-connection write timeout: a stuck scraper costs at most this.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A live metrics text listener. Dropping it (or calling
+/// [`TextEndpoint::shutdown`]) stops the accept thread.
+pub struct TextEndpoint {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TextEndpoint {
+    /// Bind `addr` and serve `render()` to every connection. `render`
+    /// runs on the endpoint thread per scrape, so it should snapshot
+    /// and format — never block on the serving path.
+    pub fn bind<F>(addr: &str, render: F) -> Result<TextEndpoint, String>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("metrics-listen bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("metrics-listen local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("metrics-listen nonblocking: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let tstop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cnn-flow-metrics-text".into())
+            .spawn(move || loop {
+                if tstop.load(Ordering::Acquire) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((mut sock, _)) => {
+                        let _ = sock.set_nonblocking(false);
+                        let _ = sock.set_write_timeout(Some(WRITE_TIMEOUT));
+                        let page = render();
+                        let _ = sock.write_all(page.as_bytes());
+                        let _ = sock.flush();
+                        // Socket drops here; the peer sees EOF after
+                        // the page.
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(IDLE_NAP);
+                    }
+                    Err(_) => std::thread::sleep(IDLE_NAP),
+                }
+            })
+            .map_err(|e| format!("metrics-listen thread: {e}"))?;
+        Ok(TextEndpoint {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0 in tests).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the endpoint thread (≤ one idle nap).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TextEndpoint {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpStream;
+
+    #[test]
+    fn serves_fresh_page_per_connection_and_shuts_down() {
+        let n = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let rn = Arc::clone(&n);
+        let mut ep = TextEndpoint::bind("127.0.0.1:0", move || {
+            let k = rn.fetch_add(1, Ordering::SeqCst);
+            format!("scrape {k}\n")
+        })
+        .expect("bind");
+        let addr = ep.local_addr();
+        for expect in ["scrape 0\n", "scrape 1\n"] {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).expect("read page");
+            assert_eq!(buf, expect);
+        }
+        ep.shutdown();
+        // After shutdown nothing accepts; connect may succeed at the OS
+        // backlog level but reads must EOF without a page, or the
+        // connect itself fails. Either way, no third render happens.
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+    }
+}

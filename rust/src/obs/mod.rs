@@ -1,0 +1,34 @@
+//! Observability tier (DESIGN.md §13): flight-recorder tracing,
+//! per-layer profiling, and live metrics exposition.
+//!
+//! Three legs, all std-only and dependency-free:
+//!
+//! * [`trace`] — a fixed-capacity [`FlightRecorder`] of per-request
+//!   [`SpanRecord`]s stamped by the shared [`Clock`] (wall in
+//!   production, the loadgen virtual clock under seeded replay, making
+//!   traces byte-deterministic). Overflow is counted, never blocking:
+//!   `spans_recorded + spans_dropped` reconciles exactly with the
+//!   intake counters `completed + errored + rejected + shed`.
+//! * [`profile`] — optional atomic per-layer accumulators inside the
+//!   compiled/folded execute paths; timing-only, so profiled runs are
+//!   bit-identical to unprofiled ones. Surfaced as the measured side of
+//!   the `cnn-flow profile` divergence table against
+//!   `SchedulePrediction::cycle_shares` and `FoldedPrediction`.
+//! * [`prom`] — Prometheus text-format rendering of every snapshot,
+//!   served via the `MetricsText` wire request on both net cores and
+//!   the plain-TCP [`TextEndpoint`] (`serve --metrics-listen`).
+
+pub mod clock;
+pub mod endpoint;
+pub mod profile;
+pub mod prom;
+pub mod trace;
+
+pub use clock::Clock;
+pub use endpoint::TextEndpoint;
+pub use profile::{LayerProfileRow, LayerProfiler};
+pub use prom::{lint, render_exposition};
+pub use trace::{
+    stage_summary, ActiveSpan, FlightRecorder, SpanOutcome, SpanRecord, StageStats,
+    TraceStatsSnapshot,
+};

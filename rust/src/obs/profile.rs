@@ -1,0 +1,131 @@
+//! Per-layer sampling profiler for the compiled/folded execute paths.
+//!
+//! The engines carry an `Option<Arc<LayerProfiler>>`; `None` keeps the
+//! hot loops on the exact code they had before this module existed (a
+//! single untaken branch per layer), and `Some` adds one `Instant`
+//! read per layer plus two relaxed atomic adds — timing only, never
+//! touching data buffers, which is the whole exactness argument: a
+//! profiled run is bit-identical to an unprofiled one by construction.
+//!
+//! Measurements always use wall time (a layer's cost is real
+//! nanoseconds) even when span stamps run on the virtual clock; the
+//! profiler answers "where did the time go", not "when".
+//!
+//! The snapshot pairs measured time share with the analytic cycle share
+//! from `SchedulePrediction::cycle_shares` — the divergence table
+//! `cnn-flow profile` prints, the software analogue of the paper's
+//! per-layer utilization figures.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic per-layer accumulators, shared across every shard clone of a
+/// model's engines so accumulation is fleet-wide per model.
+#[derive(Debug)]
+pub struct LayerProfiler {
+    names: Vec<String>,
+    nanos: Vec<AtomicU64>,
+    samples: Vec<AtomicU64>,
+}
+
+/// One layer's accumulated measurements plus its share of total time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfileRow {
+    pub name: String,
+    pub nanos: u64,
+    pub samples: u64,
+    /// This layer's fraction of all measured time (0 if nothing ran).
+    pub measured_share: f64,
+}
+
+impl LayerProfiler {
+    pub fn new(names: Vec<String>) -> LayerProfiler {
+        let n = names.len();
+        LayerProfiler {
+            names,
+            nanos: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            samples: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Record `nanos` spent in `layer`. Out-of-range indices are
+    /// ignored so a layer-count mismatch between a program and its
+    /// prediction degrades to missing rows, never a panic in the hot
+    /// path.
+    #[inline]
+    pub fn record(&self, layer: usize, nanos: u64) {
+        if let (Some(t), Some(c)) = (self.nanos.get(layer), self.samples.get(layer)) {
+            t.fetch_add(nanos, Ordering::Relaxed);
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot all rows with each layer's share of total measured
+    /// time.
+    pub fn snapshot(&self) -> Vec<LayerProfileRow> {
+        let nanos: Vec<u64> = self.nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let total: u64 = nanos.iter().sum();
+        self.names
+            .iter()
+            .zip(&nanos)
+            .zip(&self.samples)
+            .map(|((name, &ns), samples)| LayerProfileRow {
+                name: name.clone(),
+                nanos: ns,
+                samples: samples.load(Ordering::Relaxed),
+                measured_share: if total == 0 {
+                    0.0
+                } else {
+                    ns as f64 / total as f64
+                },
+            })
+            .collect()
+    }
+
+    /// Total measured nanoseconds across all layers.
+    pub fn total_nanos(&self) -> u64 {
+        self.nanos.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one_when_time_recorded() {
+        let p = LayerProfiler::new(vec!["a".into(), "b".into(), "c".into()]);
+        p.record(0, 100);
+        p.record(1, 300);
+        p.record(2, 600);
+        let rows = p.snapshot();
+        assert_eq!(rows.len(), 3);
+        let total: f64 = rows.iter().map(|r| r.measured_share).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((rows[2].measured_share - 0.6).abs() < 1e-12);
+        assert_eq!(rows[1].samples, 1);
+        assert_eq!(p.total_nanos(), 1000);
+    }
+
+    #[test]
+    fn empty_profiler_yields_zero_shares() {
+        let p = LayerProfiler::new(vec!["a".into()]);
+        let rows = p.snapshot();
+        assert_eq!(rows[0].measured_share, 0.0);
+        assert_eq!(rows[0].samples, 0);
+    }
+
+    #[test]
+    fn out_of_range_record_is_ignored() {
+        let p = LayerProfiler::new(vec!["a".into()]);
+        p.record(5, 1_000);
+        assert_eq!(p.total_nanos(), 0);
+    }
+}

@@ -1,0 +1,659 @@
+//! Prometheus text-format exposition of every serving snapshot.
+//!
+//! [`render_exposition`] is a pure function over the existing snapshot
+//! structs — it holds no locks and takes no references into the live
+//! server, so both net cores (and the plain-TCP `--metrics-listen`
+//! endpoint) call it with whatever snapshots they have. The output
+//! follows the Prometheus text format v0.0.4: every family gets one
+//! `# HELP` and one `# TYPE` line, counters end in `_total`, durations
+//! are seconds, and labels carry the model / reason / quantile axes.
+//!
+//! [`lint`] enforces the format invariants CI gates on: a `# TYPE` line
+//! per family, no duplicate family declarations, and no duplicate
+//! samples.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::coordinator::metrics::{
+    MetricsSnapshot, ModelMetricsSnapshot, NetMetricsSnapshot, ReactorStatsSnapshot,
+};
+
+use super::trace::TraceStatsSnapshot;
+
+/// Incremental text-format writer that tracks declared families so the
+/// renderer cannot emit a sample before (or a duplicate of) its `# TYPE`
+/// header.
+struct Prom {
+    out: String,
+    declared: BTreeSet<String>,
+}
+
+impl Prom {
+    fn new() -> Prom {
+        Prom {
+            out: String::with_capacity(8 * 1024),
+            declared: BTreeSet::new(),
+        }
+    }
+
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        debug_assert!(
+            self.declared.insert(name.to_string()),
+            "duplicate metric family {name}"
+        );
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    fn sample_start(&mut self, name: &str, labels: &[(&str, &str)]) {
+        debug_assert!(
+            self.declared.contains(name),
+            "sample for undeclared family {name}"
+        );
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                // Label escaping per the text format: backslash, quote,
+                // newline.
+                for c in v.chars() {
+                    match c {
+                        '\\' => self.out.push_str("\\\\"),
+                        '"' => self.out.push_str("\\\""),
+                        '\n' => self.out.push_str("\\n"),
+                        _ => self.out.push(c),
+                    }
+                }
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+    }
+
+    /// Exact-integer sample: counters never pass through f64 (the cycle
+    /// accumulators exceed 2^53 on long sessions).
+    fn uint(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.sample_start(name, labels);
+        self.out.push_str(&value.to_string());
+        self.out.push('\n');
+    }
+
+    fn float(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.sample_start(name, labels);
+        if value.is_finite() {
+            self.out.push_str(&format!("{value}"));
+        } else if value.is_nan() {
+            self.out.push_str("NaN");
+        } else if value > 0.0 {
+            self.out.push_str("+Inf");
+        } else {
+            self.out.push_str("-Inf");
+        }
+        self.out.push('\n');
+    }
+}
+
+fn secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+/// Render every snapshot into one Prometheus text-format page.
+///
+/// `net` is present when a TCP front-end ran, `reactor` only for the
+/// evented core (the threaded core passes `None`), `trace` when the
+/// flight recorder is enabled.
+pub fn render_exposition(
+    aggregate: &MetricsSnapshot,
+    per_model: &[ModelMetricsSnapshot],
+    net: Option<&NetMetricsSnapshot>,
+    reactor: Option<&ReactorStatsSnapshot>,
+    trace: Option<&TraceStatsSnapshot>,
+) -> String {
+    let mut p = Prom::new();
+
+    // --- coordinator aggregate ---------------------------------------
+    p.family("cnn_flow_workers", "gauge", "Configured shard workers.");
+    p.uint("cnn_flow_workers", &[], aggregate.workers as u64);
+    p.family(
+        "cnn_flow_active_workers",
+        "gauge",
+        "Shards currently admitted by dispatch/autoscaling.",
+    );
+    p.uint("cnn_flow_active_workers", &[], aggregate.active_workers as u64);
+    p.family("cnn_flow_models", "gauge", "Model groups served.");
+    p.uint("cnn_flow_models", &[], aggregate.models as u64);
+
+    let intake: [(&str, &str, u64); 6] = [
+        (
+            "cnn_flow_accepted_total",
+            "Requests accepted into a shard queue.",
+            aggregate.accepted,
+        ),
+        (
+            "cnn_flow_rejected_total",
+            "Requests refused with every shard queue full.",
+            aggregate.rejected,
+        ),
+        (
+            "cnn_flow_shed_total",
+            "Requests shed by deadline admission control.",
+            aggregate.shed,
+        ),
+        (
+            "cnn_flow_spilled_total",
+            "Accepted requests that overflowed their preferred shard.",
+            aggregate.spilled,
+        ),
+        (
+            "cnn_flow_unrouted_total",
+            "Submissions naming an unknown model.",
+            aggregate.unrouted,
+        ),
+        (
+            "cnn_flow_completed_total",
+            "Requests answered with logits.",
+            aggregate.completed,
+        ),
+    ];
+    for (name, help, v) in intake {
+        p.family(name, "counter", help);
+        p.uint(name, &[], v);
+    }
+    p.family(
+        "cnn_flow_errored_total",
+        "counter",
+        "Requests answered with an engine error.",
+    );
+    p.uint("cnn_flow_errored_total", &[], aggregate.errored);
+    p.family(
+        "cnn_flow_batches_total",
+        "counter",
+        "Batches executed across all shards.",
+    );
+    p.uint("cnn_flow_batches_total", &[], aggregate.batches);
+    p.family(
+        "cnn_flow_flush_total",
+        "counter",
+        "Batch flushes by reason; reasons sum to cnn_flow_batches_total.",
+    );
+    p.uint("cnn_flow_flush_total", &[("reason", "full")], aggregate.flush_full);
+    p.uint(
+        "cnn_flow_flush_total",
+        &[("reason", "deadline")],
+        aggregate.flush_deadline,
+    );
+    p.uint(
+        "cnn_flow_flush_total",
+        &[("reason", "drain")],
+        aggregate.flush_drain,
+    );
+    p.family(
+        "cnn_flow_scale_events_total",
+        "counter",
+        "Autoscale controller grow/shrink events.",
+    );
+    p.uint(
+        "cnn_flow_scale_events_total",
+        &[("direction", "up")],
+        aggregate.scale_up_events,
+    );
+    p.uint(
+        "cnn_flow_scale_events_total",
+        &[("direction", "down")],
+        aggregate.scale_down_events,
+    );
+    p.family(
+        "cnn_flow_verified_total",
+        "counter",
+        "Batches cross-checked against the interpreter oracle.",
+    );
+    p.uint("cnn_flow_verified_total", &[], aggregate.verified);
+    p.family(
+        "cnn_flow_mismatches_total",
+        "counter",
+        "Oracle cross-check mismatches (must stay 0).",
+    );
+    p.uint("cnn_flow_mismatches_total", &[], aggregate.mismatches);
+    p.family(
+        "cnn_flow_predicted_cycles_total",
+        "counter",
+        "Closed-form predicted cycles across served groups.",
+    );
+    p.uint("cnn_flow_predicted_cycles_total", &[], aggregate.predicted_cycles);
+    p.family(
+        "cnn_flow_simulated_cycles_total",
+        "counter",
+        "Interpreter-measured cycles (0 unless interpreting).",
+    );
+    p.uint("cnn_flow_simulated_cycles_total", &[], aggregate.simulated_cycles);
+    p.family(
+        "cnn_flow_cycle_divergence_total",
+        "counter",
+        "Groups where prediction differed from interpreter cycles.",
+    );
+    p.uint("cnn_flow_cycle_divergence_total", &[], aggregate.cycle_divergence);
+    p.family(
+        "cnn_flow_occupancy_frames_total",
+        "counter",
+        "Frames summed over all batch occupancies.",
+    );
+    p.uint("cnn_flow_occupancy_frames_total", &[], aggregate.occupancy_frames);
+    p.family(
+        "cnn_flow_batch_occupancy_total",
+        "counter",
+        "Batches by exact frame count (last bucket is overflow).",
+    );
+    let occ = &aggregate.batch_occupancy;
+    for (i, &count) in occ.iter().enumerate() {
+        let label = if i + 1 == occ.len() {
+            format!("{}+", occ.len())
+        } else {
+            (i + 1).to_string()
+        };
+        p.uint(
+            "cnn_flow_batch_occupancy_total",
+            &[("size", label.as_str())],
+            count,
+        );
+    }
+    p.family("cnn_flow_mean_batch", "gauge", "Mean frames per batch.");
+    p.float("cnn_flow_mean_batch", &[], aggregate.mean_batch);
+    p.family(
+        "cnn_flow_service_latency_seconds",
+        "summary",
+        "Wall-clock enqueue-to-answer latency quantiles.",
+    );
+    for (q, d) in [
+        ("0.5", aggregate.p50),
+        ("0.95", aggregate.p95),
+        ("0.99", aggregate.p99),
+    ] {
+        p.float(
+            "cnn_flow_service_latency_seconds",
+            &[("quantile", q)],
+            secs(d),
+        );
+    }
+    p.family(
+        "cnn_flow_service_latency_mean_seconds",
+        "gauge",
+        "Mean wall-clock enqueue-to-answer latency.",
+    );
+    p.float(
+        "cnn_flow_service_latency_mean_seconds",
+        &[],
+        secs(aggregate.mean_service),
+    );
+    p.family(
+        "cnn_flow_projected_fps",
+        "gauge",
+        "Projected single-pipeline throughput at the configured clock.",
+    );
+    p.float("cnn_flow_projected_fps", &[], aggregate.projected_fps);
+    p.family(
+        "cnn_flow_aggregate_fps",
+        "gauge",
+        "Projected sharded-deployment throughput.",
+    );
+    p.float("cnn_flow_aggregate_fps", &[], aggregate.aggregate_fps);
+
+    // --- per-model views ----------------------------------------------
+    if !per_model.is_empty() {
+        let model_counters: [(&str, &str, fn(&MetricsSnapshot) -> u64); 5] = [
+            (
+                "cnn_flow_model_accepted_total",
+                "Per-model requests accepted into a shard queue.",
+                |m| m.accepted,
+            ),
+            (
+                "cnn_flow_model_rejected_total",
+                "Per-model requests refused on full queues.",
+                |m| m.rejected,
+            ),
+            (
+                "cnn_flow_model_shed_total",
+                "Per-model requests shed by admission control.",
+                |m| m.shed,
+            ),
+            (
+                "cnn_flow_model_completed_total",
+                "Per-model requests answered with logits.",
+                |m| m.completed,
+            ),
+            (
+                "cnn_flow_model_errored_total",
+                "Per-model requests answered with an engine error.",
+                |m| m.errored,
+            ),
+        ];
+        for (name, help, get) in model_counters {
+            p.family(name, "counter", help);
+            for m in per_model {
+                p.uint(name, &[("model", m.model.as_str())], get(&m.metrics));
+            }
+        }
+        p.family(
+            "cnn_flow_model_latency_seconds",
+            "summary",
+            "Per-model enqueue-to-answer latency quantiles.",
+        );
+        for m in per_model {
+            for (q, d) in [
+                ("0.5", m.metrics.p50),
+                ("0.95", m.metrics.p95),
+                ("0.99", m.metrics.p99),
+            ] {
+                p.float(
+                    "cnn_flow_model_latency_seconds",
+                    &[("model", m.model.as_str()), ("quantile", q)],
+                    secs(d),
+                );
+            }
+        }
+    }
+
+    // --- net front-end ------------------------------------------------
+    if let Some(n) = net {
+        p.family(
+            "cnn_flow_net_connections_total",
+            "counter",
+            "TCP connections accepted.",
+        );
+        p.uint("cnn_flow_net_connections_total", &[], n.connections);
+        p.family(
+            "cnn_flow_net_disconnects_total",
+            "counter",
+            "TCP connections fully torn down.",
+        );
+        p.uint("cnn_flow_net_disconnects_total", &[], n.disconnects);
+        p.family(
+            "cnn_flow_net_requests_total",
+            "counter",
+            "Decoded inference requests.",
+        );
+        p.uint("cnn_flow_net_requests_total", &[], n.requests);
+        p.family(
+            "cnn_flow_net_responses_ok_total",
+            "counter",
+            "Successful inference replies.",
+        );
+        p.uint("cnn_flow_net_responses_ok_total", &[], n.responses_ok);
+        p.family(
+            "cnn_flow_net_errors_total",
+            "counter",
+            "Protocol errors answered, by error code.",
+        );
+        for (code, v) in [
+            ("queue_full", n.err_queue_full),
+            ("slo_miss", n.err_slo_miss),
+            ("invalid_frame", n.err_invalid_frame),
+            ("unknown_model", n.err_unknown_model),
+            ("draining", n.err_draining),
+            ("malformed", n.err_malformed),
+        ] {
+            p.uint("cnn_flow_net_errors_total", &[("code", code)], v);
+        }
+    }
+
+    // --- evented reactor ----------------------------------------------
+    if let Some(r) = reactor {
+        for (name, help, v) in [
+            (
+                "cnn_flow_reactor_polls_total",
+                "Readiness-loop poll calls.",
+                r.polls,
+            ),
+            (
+                "cnn_flow_reactor_events_total",
+                "Readiness events dispatched.",
+                r.events,
+            ),
+            (
+                "cnn_flow_reactor_wakeups_total",
+                "Completion-pipe wakeups.",
+                r.wakeups,
+            ),
+            (
+                "cnn_flow_reactor_completions_total",
+                "Coordinator completions collected.",
+                r.completions,
+            ),
+            (
+                "cnn_flow_reactor_read_pauses_total",
+                "Connections paused for per-conn backlog.",
+                r.read_pauses,
+            ),
+            (
+                "cnn_flow_reactor_stall_teardowns_total",
+                "Connections torn down by the stall sweeper.",
+                r.stall_teardowns,
+            ),
+        ] {
+            p.family(name, "counter", help);
+            p.uint(name, &[], v);
+        }
+    }
+
+    // --- flight recorder ----------------------------------------------
+    if let Some(t) = trace {
+        p.family(
+            "cnn_flow_trace_spans_recorded_total",
+            "counter",
+            "Spans retained by the flight recorder.",
+        );
+        p.uint("cnn_flow_trace_spans_recorded_total", &[], t.spans_recorded);
+        p.family(
+            "cnn_flow_trace_spans_dropped_total",
+            "counter",
+            "Spans dropped on recorder overflow.",
+        );
+        p.uint("cnn_flow_trace_spans_dropped_total", &[], t.spans_dropped);
+        p.family(
+            "cnn_flow_trace_retained",
+            "gauge",
+            "Spans currently held in the ring.",
+        );
+        p.uint("cnn_flow_trace_retained", &[], t.retained);
+        p.family(
+            "cnn_flow_trace_capacity",
+            "gauge",
+            "Flight recorder ring capacity.",
+        );
+        p.uint("cnn_flow_trace_capacity", &[], t.capacity);
+    }
+
+    p.out
+}
+
+/// Validate Prometheus text-format invariants: every sample's family
+/// has exactly one `# TYPE` line appearing before its first sample, the
+/// type is a known kind, and no (name, labels) sample repeats. Returns
+/// the first violation.
+pub fn lint(text: &str) -> Result<(), String> {
+    const KINDS: [&str; 5] = ["counter", "gauge", "histogram", "summary", "untyped"];
+    let mut typed: BTreeSet<&str> = BTreeSet::new();
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        if line.is_empty() || line.starts_with("# HELP") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it
+                .next()
+                .ok_or_else(|| format!("line {lineno}: TYPE without a family name"))?;
+            let kind = it
+                .next()
+                .ok_or_else(|| format!("line {lineno}: TYPE {name} without a kind"))?;
+            if !KINDS.contains(&kind) {
+                return Err(format!("line {lineno}: unknown TYPE kind '{kind}'"));
+            }
+            if !typed.insert(name) {
+                return Err(format!("line {lineno}: duplicate TYPE for family {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample line: `<name>[{labels}] <value>`.
+        let series = line
+            .split(' ')
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| format!("line {lineno}: malformed sample line"))?;
+        let family = series.split('{').next().unwrap_or(series);
+        if !typed.contains(family) {
+            return Err(format!(
+                "line {lineno}: sample for family {family} with no preceding # TYPE"
+            ));
+        }
+        if !seen.insert(series) {
+            return Err(format!("line {lineno}: duplicate sample {series}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::OCC_SLOTS;
+
+    fn sample_aggregate() -> MetricsSnapshot {
+        MetricsSnapshot {
+            workers: 4,
+            active_workers: 3,
+            models: 2,
+            accepted: 100,
+            rejected: 5,
+            shed: 2,
+            scale_up_events: 1,
+            scale_down_events: 1,
+            spilled: 3,
+            unrouted: 1,
+            completed: 98,
+            batches: 40,
+            verified: 10,
+            mismatches: 0,
+            predicted_cycles: 1 << 60,
+            simulated_cycles: 0,
+            cycle_divergence: 0,
+            errored: 2,
+            occupancy_frames: 100,
+            flush_full: 30,
+            flush_deadline: 8,
+            flush_drain: 2,
+            batch_occupancy: [1; OCC_SLOTS],
+            mean_batch: 2.5,
+            mean_service: Duration::from_micros(120),
+            p50: Duration::from_micros(100),
+            p95: Duration::from_micros(300),
+            p99: Duration::from_micros(500),
+            projected_fps: 1.5e6,
+            aggregate_fps: 6.0e6,
+        }
+    }
+
+    #[test]
+    fn exposition_passes_the_lint() {
+        let agg = sample_aggregate();
+        let per = vec![
+            ModelMetricsSnapshot {
+                model: "digits".into(),
+                metrics: sample_aggregate(),
+            },
+            ModelMetricsSnapshot {
+                model: "mobilenet_micro".into(),
+                metrics: sample_aggregate(),
+            },
+        ];
+        let net = NetMetricsSnapshot {
+            connections: 3,
+            disconnects: 3,
+            requests: 100,
+            responses_ok: 98,
+            err_queue_full: 1,
+            err_slo_miss: 1,
+            err_invalid_frame: 0,
+            err_unknown_model: 0,
+            err_draining: 0,
+            err_malformed: 0,
+        };
+        let reactor = ReactorStatsSnapshot {
+            polls: 10,
+            events: 20,
+            wakeups: 5,
+            completions: 98,
+            read_pauses: 0,
+            stall_teardowns: 0,
+        };
+        let trace = TraceStatsSnapshot {
+            capacity: 4096,
+            retained: 100,
+            spans_recorded: 100,
+            spans_dropped: 5,
+        };
+        let text = render_exposition(&agg, &per, Some(&net), Some(&reactor), Some(&trace));
+        lint(&text).expect("rendered exposition must lint clean");
+        // Exact-integer counters: the 2^60 cycle counter survives
+        // verbatim, which f64 would have rounded.
+        assert!(text.contains(&format!("cnn_flow_predicted_cycles_total {}", 1u64 << 60)));
+        assert!(text.contains("cnn_flow_model_completed_total{model=\"digits\"} 98"));
+        assert!(text.contains("# TYPE cnn_flow_net_errors_total counter"));
+        assert!(text.contains("cnn_flow_trace_spans_dropped_total 5"));
+    }
+
+    #[test]
+    fn minimal_exposition_lints_without_optional_sections() {
+        let text = render_exposition(&sample_aggregate(), &[], None, None, None);
+        lint(&text).expect("minimal exposition must lint clean");
+        assert!(!text.contains("cnn_flow_net_"));
+        assert!(!text.contains("cnn_flow_trace_"));
+        assert!(!text.contains("cnn_flow_model_"));
+    }
+
+    #[test]
+    fn lint_rejects_sample_without_type() {
+        let bad = "cnn_flow_orphan_total 3\n";
+        assert!(lint(bad).is_err());
+    }
+
+    #[test]
+    fn lint_rejects_duplicate_type_and_duplicate_sample() {
+        let dup_type = "# TYPE a counter\n# TYPE a counter\na 1\n";
+        assert!(lint(dup_type).unwrap_err().contains("duplicate TYPE"));
+        let dup_sample = "# TYPE a counter\na{x=\"1\"} 1\na{x=\"1\"} 2\n";
+        assert!(lint(dup_sample).unwrap_err().contains("duplicate sample"));
+        let ok = "# TYPE a counter\na{x=\"1\"} 1\na{x=\"2\"} 2\n";
+        assert!(lint(ok).is_ok());
+    }
+
+    #[test]
+    fn lint_rejects_unknown_kind() {
+        assert!(lint("# TYPE a widget\na 1\n").is_err());
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = Prom::new();
+        p.family("m", "gauge", "h");
+        p.uint("m", &[("model", "a\"b\\c\nd")], 1);
+        assert!(p.out.contains("m{model=\"a\\\"b\\\\c\\nd\"} 1"));
+    }
+}

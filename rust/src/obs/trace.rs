@@ -1,0 +1,338 @@
+//! Flight recorder: a fixed-capacity ring of per-request span records.
+//!
+//! Every request routed into the coordinator is assigned a `TraceId` and
+//! carries an [`ActiveSpan`] from intake to its terminal outcome. Stage
+//! timestamps come from the one [`Clock`](super::Clock) in the server
+//! config. The recorder never blocks the serving path: when the ring is
+//! full, new spans are *dropped and counted*, so the accounting identity
+//!
+//! ```text
+//! spans_recorded + spans_dropped == completed + errored + rejected + shed
+//! ```
+//!
+//! holds exactly against the coordinator's intake counters after a
+//! drain (unrouted submissions never reach a group, so they carry no
+//! span — mirroring how `MetricsSnapshot` keeps `unrouted` outside the
+//! per-model intake ledger).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Clock;
+
+/// Terminal outcome of a traced request. Maps 1:1 onto the intake
+/// counters the recorder reconciles against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Executed and answered with logits (`completed`).
+    Completed,
+    /// Executed but the engine returned an error (`errored`).
+    Errored,
+    /// Turned away at intake: every shard queue full (`rejected`).
+    Rejected,
+    /// Turned away by admission control: predicted SLO miss (`shed`).
+    Shed,
+}
+
+impl SpanOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Completed => "completed",
+            SpanOutcome::Errored => "errored",
+            SpanOutcome::Rejected => "rejected",
+            SpanOutcome::Shed => "shed",
+        }
+    }
+}
+
+/// One request's life, stamped at each pipeline stage. A stage the
+/// request never reached keeps its stamp at 0 (rejected/shed requests
+/// never dequeue, batch, or execute).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Monotone intake-order id, unique per recorder.
+    pub trace_id: u64,
+    /// Model the request was routed to.
+    pub model: Arc<str>,
+    /// Shard whose queue accepted the request.
+    pub shard: u32,
+    /// Frames in the batch this request executed with (0 if never
+    /// batched).
+    pub batch_size: u32,
+    pub outcome: SpanOutcome,
+    /// Clock reading at intake, before admission screening.
+    pub submitted_ns: u64,
+    /// Accepted into a shard queue (admission + dispatch done).
+    pub admitted_ns: u64,
+    /// Pulled off the queue by a worker (queue wait ends).
+    pub dequeued_ns: u64,
+    /// Batch assembly closed (flush fired) and execution is imminent.
+    pub batched_ns: u64,
+    /// Engine execute began for the batch holding this request.
+    pub exec_start_ns: u64,
+    /// Engine execute finished.
+    pub exec_end_ns: u64,
+    /// Reply handed to the response channel (span finalized).
+    pub replied_ns: u64,
+}
+
+/// Recorder occupancy and accounting counters, snapshot for exposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStatsSnapshot {
+    pub capacity: u64,
+    /// Spans currently retained in the ring.
+    pub retained: u64,
+    pub spans_recorded: u64,
+    pub spans_dropped: u64,
+}
+
+/// Lock-light fixed-capacity span sink. The hot path touches the mutex
+/// only once per *finished* request (never per stage); overflow drops
+/// the new span and bumps a counter instead of blocking or evicting —
+/// eviction would break the reconciliation identity by double-counting
+/// a request as both recorded and dropped.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capacity: usize,
+    ring: Mutex<Vec<SpanRecord>>,
+    next_id: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            capacity,
+            ring: Mutex::new(Vec::with_capacity(capacity)),
+            next_id: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Next intake-order trace id (1-based; 0 means "untraced").
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Sink a finalized span. Never blocks beyond the ring lock; a full
+    /// ring counts the span as dropped.
+    pub fn record(&self, span: SpanRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() < self.capacity {
+            ring.push(span);
+            drop(ring);
+            self.recorded.fetch_add(1, Ordering::Release);
+        } else {
+            drop(ring);
+            self.dropped.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Clone out the retained spans, sorted by trace id (intake order)
+    /// so dumps are stable regardless of worker finish order.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let mut out = self.ring.lock().unwrap().clone();
+        out.sort_by_key(|s| s.trace_id);
+        out
+    }
+
+    pub fn stats(&self) -> TraceStatsSnapshot {
+        let retained = self.ring.lock().unwrap().len() as u64;
+        TraceStatsSnapshot {
+            capacity: self.capacity as u64,
+            retained,
+            spans_recorded: self.recorded.load(Ordering::Acquire),
+            spans_dropped: self.dropped.load(Ordering::Acquire),
+        }
+    }
+}
+
+/// A span in flight, owned by the request it traces. Stages are stamped
+/// in place; `finish` stamps the reply time and sinks the record. The
+/// clock rides along so worker threads stamp without reaching back into
+/// the server config.
+#[derive(Debug)]
+pub struct ActiveSpan {
+    pub span: SpanRecord,
+    pub recorder: Arc<FlightRecorder>,
+    pub clock: Clock,
+}
+
+impl ActiveSpan {
+    /// Open a span at intake: allocates the trace id and stamps
+    /// `submitted_ns`.
+    pub fn begin(recorder: &Arc<FlightRecorder>, clock: &Clock, model: &Arc<str>) -> ActiveSpan {
+        let submitted_ns = clock.now_nanos();
+        ActiveSpan {
+            span: SpanRecord {
+                trace_id: recorder.next_trace_id(),
+                model: Arc::clone(model),
+                shard: 0,
+                batch_size: 0,
+                outcome: SpanOutcome::Rejected,
+                submitted_ns,
+                admitted_ns: 0,
+                dequeued_ns: 0,
+                batched_ns: 0,
+                exec_start_ns: 0,
+                exec_end_ns: 0,
+                replied_ns: 0,
+            },
+            recorder: Arc::clone(recorder),
+            clock: clock.clone(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.clock.now_nanos()
+    }
+
+    /// Finalize: stamp `replied_ns`, set the outcome, and sink the
+    /// record. Consumes the span — a request ends exactly once.
+    pub fn finish(mut self, outcome: SpanOutcome) {
+        self.span.replied_ns = self.clock.now_nanos();
+        self.span.outcome = outcome;
+        self.recorder.record(self.span);
+    }
+}
+
+/// Latency quantiles for one pipeline stage across a span dump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStats {
+    pub stage: &'static str,
+    /// Spans that actually passed through this stage.
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+fn quantile_sorted(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Per-stage latency breakdown (p50/p95/p99) over a span dump. Stages
+/// are durations between consecutive stamps; only spans that reached a
+/// stage contribute to it, so rejected/shed spans show up in the
+/// `total` row but not in `execute`.
+pub fn stage_summary(spans: &[SpanRecord]) -> Vec<StageStats> {
+    let stages: [(&'static str, fn(&SpanRecord) -> Option<u64>); 6] = [
+        ("admit", |s| {
+            (s.admitted_ns > 0).then(|| s.admitted_ns.saturating_sub(s.submitted_ns))
+        }),
+        ("queue_wait", |s| {
+            (s.dequeued_ns > 0).then(|| s.dequeued_ns.saturating_sub(s.admitted_ns))
+        }),
+        ("batch_assembly", |s| {
+            (s.batched_ns > 0).then(|| s.batched_ns.saturating_sub(s.dequeued_ns))
+        }),
+        ("execute", |s| {
+            (s.exec_end_ns > 0).then(|| s.exec_end_ns.saturating_sub(s.exec_start_ns))
+        }),
+        ("reply", |s| {
+            (s.exec_end_ns > 0).then(|| s.replied_ns.saturating_sub(s.exec_end_ns))
+        }),
+        ("total", |s| {
+            Some(s.replied_ns.saturating_sub(s.submitted_ns))
+        }),
+    ];
+    stages
+        .iter()
+        .map(|(name, dur)| {
+            let mut xs: Vec<u64> = spans.iter().filter_map(dur).collect();
+            xs.sort_unstable();
+            StageStats {
+                stage: name,
+                count: xs.len() as u64,
+                p50_ns: quantile_sorted(&xs, 0.50),
+                p95_ns: quantile_sorted(&xs, 0.95),
+                p99_ns: quantile_sorted(&xs, 0.99),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(recorder: &Arc<FlightRecorder>, clock: &Clock) -> ActiveSpan {
+        let model: Arc<str> = Arc::from("m");
+        ActiveSpan::begin(recorder, clock, &model)
+    }
+
+    #[test]
+    fn wrap_accounting_reconciles_with_submitted_total() {
+        // Ring capacity 4, 10 spans submitted: exactly 4 recorded, 6
+        // dropped — recorded + dropped equals the submitted-side total.
+        let rec = Arc::new(FlightRecorder::new(4));
+        let clock = Clock::wall();
+        for _ in 0..10 {
+            span(&rec, &clock).finish(SpanOutcome::Completed);
+        }
+        let stats = rec.stats();
+        assert_eq!(stats.spans_recorded, 4);
+        assert_eq!(stats.spans_dropped, 6);
+        assert_eq!(stats.spans_recorded + stats.spans_dropped, 10);
+        assert_eq!(stats.retained, 4);
+        assert_eq!(stats.capacity, 4);
+    }
+
+    #[test]
+    fn trace_ids_are_monotone_and_dump_is_intake_ordered() {
+        let rec = Arc::new(FlightRecorder::new(8));
+        let clock = Clock::wall();
+        let a = span(&rec, &clock);
+        let b = span(&rec, &clock);
+        assert!(b.span.trace_id > a.span.trace_id);
+        // Finish out of order; the dump still sorts by intake order.
+        b.finish(SpanOutcome::Errored);
+        a.finish(SpanOutcome::Completed);
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans[0].trace_id < spans[1].trace_id);
+        assert_eq!(spans[0].outcome, SpanOutcome::Completed);
+    }
+
+    #[test]
+    fn stage_summary_skips_unreached_stages() {
+        let rec = Arc::new(FlightRecorder::new(8));
+        let clock = Clock::wall();
+        // One completed span with all stamps, one rejected span that
+        // never made it past intake.
+        let mut s = span(&rec, &clock);
+        s.span.admitted_ns = s.span.submitted_ns + 10;
+        s.span.dequeued_ns = s.span.submitted_ns + 30;
+        s.span.batched_ns = s.span.submitted_ns + 40;
+        s.span.exec_start_ns = s.span.submitted_ns + 40;
+        s.span.exec_end_ns = s.span.submitted_ns + 90;
+        s.finish(SpanOutcome::Completed);
+        span(&rec, &clock).finish(SpanOutcome::Rejected);
+
+        let spans = rec.spans();
+        let summary = stage_summary(&spans);
+        let by_name = |n: &str| summary.iter().find(|s| s.stage == n).unwrap().clone();
+        assert_eq!(by_name("admit").count, 1);
+        assert_eq!(by_name("queue_wait").count, 1);
+        assert_eq!(by_name("queue_wait").p50_ns, 20);
+        assert_eq!(by_name("execute").count, 1);
+        assert_eq!(by_name("execute").p50_ns, 50);
+        assert_eq!(by_name("total").count, 2);
+    }
+
+    #[test]
+    fn quantiles_on_sorted_data() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(quantile_sorted(&xs, 0.50), 50);
+        assert_eq!(quantile_sorted(&xs, 0.95), 95);
+        assert_eq!(quantile_sorted(&xs, 0.99), 99);
+        assert_eq!(quantile_sorted(&[], 0.5), 0);
+    }
+}

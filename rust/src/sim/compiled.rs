@@ -70,7 +70,9 @@
 //! exact replay.
 
 use std::sync::Arc;
+use std::time::Instant;
 
+use crate::obs::LayerProfiler;
 use crate::quant::{requant, QKind, QModel, QMAX};
 
 /// Lanes per batch tile: accumulator tiles are `[T; LANES]` locals so
@@ -222,6 +224,9 @@ struct Engine<T> {
     /// Lane-interleaved scratch pool for the batched tier; grown on
     /// first use, then reused across batches.
     bbufs: Vec<Vec<T>>,
+    /// Optional per-layer wall-time accumulators (DESIGN.md §13).
+    /// Timing-only: attaching a profiler never changes a value.
+    profiler: Option<Arc<LayerProfiler>>,
 }
 
 #[derive(Debug, Clone)]
@@ -320,6 +325,16 @@ impl CompiledPipeline {
             Inner::Wide(e) => e.prog.out_len,
         }
     }
+
+    /// Attach (or detach with `None`) a per-layer profiler. Timing-only:
+    /// execute paths record wall nanos per layer into it and nothing
+    /// else, so profiled outputs stay bit-identical (DESIGN.md §13).
+    pub fn set_profiler(&mut self, profiler: Option<Arc<LayerProfiler>>) {
+        match &mut self.inner {
+            Inner::Narrow(e) => e.profiler = profiler,
+            Inner::Wide(e) => e.profiler = profiler,
+        }
+    }
 }
 
 /// Exact worst-case bound analysis: propagate the maximum possible
@@ -411,6 +426,7 @@ impl<T: Cell> Engine<T> {
             acc: Vec::new(),
             out: Vec::new(),
             bbufs: Vec::new(),
+            profiler: None,
             prog: Arc::new(prog),
         })
     }
@@ -428,12 +444,14 @@ impl<T: Cell> Engine<T> {
             bufs,
             acc,
             out,
+            profiler,
             ..
         } = self;
         for (slot, &v) in bufs[prog.in_buf].iter_mut().zip(frame) {
             *slot = T::from_i64(v);
         }
-        for layer in &prog.layers {
+        for (li, layer) in prog.layers.iter().enumerate() {
+            let t0 = profiler.as_ref().map(|_| Instant::now());
             // The allocator guarantees out_buf aliases neither the source
             // nor the shortcut buffer, so taking it out never hides data
             // the layer still reads.
@@ -452,6 +470,9 @@ impl<T: Cell> Engine<T> {
                 );
             }
             bufs[layer.out_buf] = dst;
+            if let (Some(p), Some(t0)) = (profiler.as_deref(), t0) {
+                p.record(li, t0.elapsed().as_nanos() as u64);
+            }
         }
         let res: &[T] = &bufs[prog.out_buf][..prog.out_len];
         out.clear();
@@ -483,7 +504,12 @@ impl<T: Cell> Engine<T> {
         // Lane stride rounded up to LANES so every tile can slice a full
         // chunk; pad lanes are never read (tiles loop to their length).
         let bp = b.div_ceil(LANES) * LANES;
-        let Engine { prog, bbufs, .. } = self;
+        let Engine {
+            prog,
+            bbufs,
+            profiler,
+            ..
+        } = self;
         bbufs.resize(prog.pool, Vec::new());
         for bbuf in bbufs.iter_mut() {
             bbuf.resize(prog.buf_len * bp, T::ZERO);
@@ -494,7 +520,8 @@ impl<T: Cell> Engine<T> {
                 bbufs[prog.in_buf][pos * bp + lane] = T::from_i64(v);
             }
         }
-        for layer in &prog.layers {
+        for (li, layer) in prog.layers.iter().enumerate() {
+            let t0 = profiler.as_ref().map(|_| Instant::now());
             let mut dst = std::mem::take(&mut bbufs[layer.out_buf]);
             run_layer_batch(
                 layer,
@@ -514,6 +541,9 @@ impl<T: Cell> Engine<T> {
                 );
             }
             bbufs[layer.out_buf] = dst;
+            if let (Some(p), Some(t0)) = (profiler.as_deref(), t0) {
+                p.record(li, t0.elapsed().as_nanos() as u64);
+            }
         }
         let res: &[T] = &bbufs[prog.out_buf][..prog.out_len * bp];
         let mut outs = vec![Vec::with_capacity(prog.out_len); b];
@@ -1761,6 +1791,9 @@ struct FoldedEngine<T> {
     btmp: Vec<T>,
     bmid: Vec<T>,
     bacc: Vec<T>,
+    /// Optional per-layer wall-time accumulators (DESIGN.md §13). Fused
+    /// steps attribute their whole step time to the step's first layer.
+    profiler: Option<Arc<LayerProfiler>>,
 }
 
 impl<T: Cell> FoldedEngine<T> {
@@ -1778,6 +1811,7 @@ impl<T: Cell> FoldedEngine<T> {
             btmp: Vec::new(),
             bmid: Vec::new(),
             bacc: Vec::new(),
+            profiler: None,
             prog: Arc::new(prog),
             steps: Arc::new(steps),
             table: Arc::new(table),
@@ -1799,6 +1833,7 @@ impl<T: Cell> FoldedEngine<T> {
             pacc,
             mid,
             out,
+            profiler,
             ..
         } = self;
         for (slot, &v) in bufs[prog.in_buf].iter_mut().zip(frame) {
@@ -1808,6 +1843,7 @@ impl<T: Cell> FoldedEngine<T> {
             let (first, last) = step_io(step);
             let in_b = prog.layers[first].in_buf;
             let out_b = prog.layers[last].out_buf;
+            let t0 = profiler.as_ref().map(|_| Instant::now());
             if let FStep::Single { .. } = step {
                 let mut dst = std::mem::take(&mut bufs[out_b]);
                 run_step(prog, step, &bufs[in_b], &mut dst, acc, pacc, mid);
@@ -1822,6 +1858,9 @@ impl<T: Cell> FoldedEngine<T> {
                 // run into the spare buffer and swap it in.
                 run_step(prog, step, &bufs[in_b], tmp, acc, pacc, mid);
                 std::mem::swap(&mut bufs[out_b], tmp);
+            }
+            if let (Some(p), Some(t0)) = (profiler.as_deref(), t0) {
+                p.record(first, t0.elapsed().as_nanos() as u64);
             }
         }
         let res: &[T] = &bufs[prog.out_buf][..prog.out_len];
@@ -1854,6 +1893,7 @@ impl<T: Cell> FoldedEngine<T> {
             btmp,
             bmid,
             bacc,
+            profiler,
             ..
         } = self;
         bbufs.resize(prog.pool, Vec::new());
@@ -1870,6 +1910,7 @@ impl<T: Cell> FoldedEngine<T> {
             let (first, last) = step_io(step);
             let in_b = prog.layers[first].in_buf;
             let out_b = prog.layers[last].out_buf;
+            let t0 = profiler.as_ref().map(|_| Instant::now());
             if let FStep::Single { .. } = step {
                 let mut dst = std::mem::take(&mut bbufs[out_b]);
                 run_step_batch(prog, step, &bbufs[in_b], &mut dst, b, bp, bmid, bacc);
@@ -1881,6 +1922,9 @@ impl<T: Cell> FoldedEngine<T> {
             } else {
                 run_step_batch(prog, step, &bbufs[in_b], btmp, b, bp, bmid, bacc);
                 std::mem::swap(&mut bbufs[out_b], btmp);
+            }
+            if let (Some(p), Some(t0)) = (profiler.as_deref(), t0) {
+                p.record(first, t0.elapsed().as_nanos() as u64);
             }
         }
         let res: &[T] = &bbufs[prog.out_buf][..prog.out_len * bp];
@@ -1997,6 +2041,16 @@ impl FoldedPipeline {
             .iter()
             .filter(|s| matches!(s, FStep::FusedPw { .. } | FStep::FusedDense { .. }))
             .count()
+    }
+
+    /// Attach (or detach with `None`) a per-layer profiler; fused steps
+    /// book their whole step under the step's first layer. Timing-only —
+    /// see [`CompiledPipeline::set_profiler`].
+    pub fn set_profiler(&mut self, profiler: Option<Arc<LayerProfiler>>) {
+        match &mut self.inner {
+            FInner::Narrow(e) => e.profiler = profiler,
+            FInner::Wide(e) => e.profiler = profiler,
+        }
     }
 }
 

@@ -30,6 +30,55 @@ pub struct Bencher {
     opts: BenchOpts,
 }
 
+/// A started timer — the one helper behind every "how long did this
+/// take" loop in the bench harness and the CLI, so elapsed-time
+/// bookkeeping (ns truncation, secs conversion, budget loops) lives in
+/// one place instead of being re-rolled per call site.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed wall nanoseconds, saturating at `u64::MAX` (≈ 584 years).
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Time one invocation of `f`, in nanoseconds.
+    pub fn time_ns<F: FnOnce()>(f: F) -> u64 {
+        let sw = Stopwatch::start();
+        f();
+        sw.elapsed_ns()
+    }
+
+    /// Run `f` repeatedly until `budget` has elapsed (zero budget runs
+    /// it zero times); returns the iteration count.
+    pub fn run_for<F: FnMut()>(budget: Duration, mut f: F) -> u64 {
+        let sw = Stopwatch::start();
+        let mut iters = 0u64;
+        while sw.elapsed() < budget {
+            f();
+            iters += 1;
+        }
+        iters
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -56,18 +105,13 @@ impl Bencher {
     /// Benchmark `f`, reporting per-iteration stats. Returns median ns.
     pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> f64 {
         // Warm-up.
-        let start = Instant::now();
-        while start.elapsed() < self.opts.warmup {
-            f();
-        }
+        Stopwatch::run_for(self.opts.warmup, &mut f);
         // Measure in batches; record per-batch time to estimate spread.
         let mut samples_ns: Vec<f64> = Vec::new();
         let mut iters: u64 = 0;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         while t0.elapsed() < self.opts.measure && iters < self.opts.max_iters {
-            let s = Instant::now();
-            f();
-            samples_ns.push(s.elapsed().as_nanos() as f64);
+            samples_ns.push(Stopwatch::time_ns(&mut f) as f64);
             iters += 1;
         }
         samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -542,6 +586,22 @@ mod tests {
             crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("fanin").as_arr().unwrap().len(), 1);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stopwatch_times_and_budgets() {
+        let ns = Stopwatch::time_ns(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(ns < 1_000_000_000, "a no-op cannot take a second: {ns}");
+        let sw = Stopwatch::start();
+        assert!(sw.elapsed_secs() >= 0.0);
+        assert!(sw.elapsed_ns() <= sw.elapsed_ns(), "monotone");
+        assert_eq!(Stopwatch::run_for(Duration::ZERO, || ()), 0);
+        let mut n = 0u64;
+        let iters = Stopwatch::run_for(Duration::from_millis(2), || n += 1);
+        assert_eq!(iters, n);
+        assert!(iters > 0);
     }
 
     #[test]

@@ -502,4 +502,86 @@ mod tests {
         assert_eq!(*v.get("nope"), Json::Null);
         assert_eq!(v.get("a").as_usize(), Some(1));
     }
+
+    /// Golden round-trip for the `serve --metrics-json` report: the
+    /// schema version is present, counters above 2^53 survive exactly,
+    /// and render → parse reproduces the report value-for-value. This
+    /// pins the report *format* where it is produced and consumed — a
+    /// schema change without a version bump trips this test first.
+    #[test]
+    fn metrics_report_round_trips_with_schema_version() {
+        use crate::coordinator::metrics::{
+            metrics_report_json, MetricsSnapshot, ModelMetricsSnapshot, NetMetricsSnapshot,
+            METRICS_SCHEMA_VERSION, OCC_SLOTS,
+        };
+        use std::time::Duration;
+
+        let snap = MetricsSnapshot {
+            workers: 4,
+            active_workers: 3,
+            models: 2,
+            accepted: 100,
+            rejected: 5,
+            shed: 2,
+            scale_up_events: 1,
+            scale_down_events: 1,
+            spilled: 7,
+            unrouted: 1,
+            completed: 97,
+            batches: 40,
+            verified: 97,
+            mismatches: 0,
+            predicted_cycles: (1u64 << 60) + 3, // past f64's exact range
+            simulated_cycles: 0,
+            cycle_divergence: 0,
+            errored: 3,
+            occupancy_frames: 100,
+            flush_full: 30,
+            flush_deadline: 8,
+            flush_drain: 2,
+            batch_occupancy: [1; OCC_SLOTS],
+            mean_batch: 2.5,
+            mean_service: Duration::from_micros(120),
+            p50: Duration::from_micros(100),
+            p95: Duration::from_micros(300),
+            p99: Duration::from_micros(900),
+            projected_fps: 1.25e6,
+            aggregate_fps: 5.0e6,
+        };
+        let per_model = vec![ModelMetricsSnapshot {
+            model: "mobilenet_micro".into(),
+            metrics: snap,
+        }];
+        let net = NetMetricsSnapshot {
+            connections: 12,
+            disconnects: 12,
+            requests: 110,
+            responses_ok: 97,
+            err_queue_full: 5,
+            err_slo_miss: 2,
+            err_invalid_frame: 3,
+            err_unknown_model: 1,
+            err_draining: 2,
+            err_malformed: 1,
+        };
+        let report = metrics_report_json(&snap, &per_model, Some(&net));
+        assert_eq!(
+            report.get("schema_version").as_u64(),
+            Some(METRICS_SCHEMA_VERSION)
+        );
+        let back = Json::parse(&report.render()).expect("report must parse");
+        assert_eq!(back, report, "render → parse must be lossless");
+        // The over-2^53 counter survived exactly, in both copies.
+        for v in [&report, &back] {
+            assert_eq!(
+                v.get("aggregate").get("predicted_cycles").as_u64(),
+                Some((1u64 << 60) + 3)
+            );
+        }
+        assert_eq!(
+            back.get("models").as_arr().unwrap()[0].get("model").as_str(),
+            Some("mobilenet_micro")
+        );
+        assert_eq!(back.get("net").get("requests").as_u64(), Some(110));
+    }
 }

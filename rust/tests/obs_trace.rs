@@ -1,0 +1,317 @@
+//! Integration tests for the observability tier (DESIGN.md §13):
+//! flight-recorder span accounting under overload (in-process and over
+//! both network cores), byte-deterministic virtual-clock traces across
+//! seeded replays, profiler-on ≡ profiler-off output bit-exactness on
+//! the serving zoo, and Prometheus exposition format linting through
+//! the wire protocol's `MetricsText` request.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cnn_flow::coordinator::{loadgen, EngineKind, Server, ServerConfig};
+use cnn_flow::model::zoo;
+use cnn_flow::net::{Client, FrontEnd, NetCore};
+use cnn_flow::obs::{lint, stage_summary, Clock, SpanOutcome, SpanRecord};
+use cnn_flow::quant::QModel;
+use cnn_flow::sim::pipeline::PipelineSim;
+
+/// Two heterogeneous serving-zoo models, synthesized with fixed seeds —
+/// small enough for the determinism/overload loops, heterogeneous
+/// enough to exercise per-group recorders and profilers.
+fn two_model_fleet() -> Vec<(String, PipelineSim)> {
+    [zoo::digits_cnn(), zoo::mobilenet_micro()]
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0x0B50 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
+/// The full serving zoo (chains plus the residual DAGs) — the fleet the
+/// profiler exactness test replays.
+fn full_zoo_fleet() -> Vec<(String, PipelineSim)> {
+    zoo::serving_zoo()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let qm = QModel::synthesize(m, 0x7CB0 + i as u64).unwrap();
+            (m.name.clone(), PipelineSim::new(qm, None).unwrap())
+        })
+        .collect()
+}
+
+fn fleet_specs(fleet: &[(String, PipelineSim)]) -> Vec<(String, usize)> {
+    fleet
+        .iter()
+        .map(|(id, sim)| (id.clone(), sim.input_len()))
+        .collect()
+}
+
+/// Tight-queue config that forces intake rejections under a wide replay
+/// window, with a deliberately small span ring so overflow accounting
+/// is exercised too.
+fn overload_config() -> ServerConfig {
+    ServerConfig {
+        workers: 1,
+        max_batch: 2,
+        queue_depth: 2,
+        verify_every: 0,
+        batch_deadline: Duration::ZERO,
+        trace: true,
+        trace_capacity: 16,
+        ..Default::default()
+    }
+}
+
+// --------------------------------------------------------------------
+// Span accounting: the reconciliation identity under seeded overload.
+// --------------------------------------------------------------------
+
+#[test]
+fn overload_replay_reconciles_spans_and_wraps_ring() {
+    let fleet = two_model_fleet();
+    let specs = fleet_specs(&fleet);
+    // 300 requests all at tick 0 against queue_depth 2: heavy rejection.
+    let trace = loadgen::MultiTrace::seeded(0x0B51, 300, &specs, 0);
+    let mut server = Server::start_multi(fleet, overload_config(), None).unwrap();
+    let report = loadgen::replay_multi(&server, &trace, 64, None);
+    server.drain();
+
+    let m = server.metrics();
+    let stats = server.trace_stats().expect("tracing is on");
+    // Every routed submission ends in exactly one terminal outcome and
+    // exactly one recorded-or-dropped span.
+    assert_eq!(report.aggregate.submitted, 300);
+    assert_eq!(
+        stats.spans_recorded + stats.spans_dropped,
+        m.completed + m.errored + m.rejected + m.shed,
+        "span ledger diverged from the intake ledger: {stats:?} vs {m:?}"
+    );
+    assert_eq!(stats.spans_recorded + stats.spans_dropped, 300);
+    assert!(
+        stats.spans_dropped > 0,
+        "300 spans into a 16-slot ring must overflow"
+    );
+    assert_eq!(stats.retained, 16, "ring keeps exactly its capacity");
+    assert!(report.aggregate.rejected > 0, "overload never materialized");
+
+    // The retained spans are the first 16 to finish (drop-new
+    // semantics) and each rejected span carries no execute stamps.
+    let spans = server.flight_recorder().unwrap().spans();
+    assert_eq!(spans.len(), 16);
+    for s in &spans {
+        if s.outcome == SpanOutcome::Rejected {
+            assert_eq!(s.exec_start_ns, 0);
+            assert_eq!(s.batch_size, 0);
+        } else {
+            assert!(s.batch_size >= 1);
+            assert!(s.exec_end_ns >= s.exec_start_ns);
+        }
+    }
+    // The stage summary is well-formed over a mixed dump: every span
+    // contributes to `total`, only executed ones to `execute`.
+    let summary = stage_summary(&spans);
+    let by = |n: &str| summary.iter().find(|s| s.stage == n).unwrap().clone();
+    assert_eq!(by("total").count, 16);
+    let executed = spans
+        .iter()
+        .filter(|s| s.outcome == SpanOutcome::Completed)
+        .count() as u64;
+    assert_eq!(by("execute").count, executed);
+}
+
+fn net_overload_reconciles(core: NetCore) {
+    let fleet = two_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let trace = loadgen::MultiTrace::seeded(0x0B52, 200, &specs, 0);
+    let coord = Arc::new(Server::start_multi(fleet, overload_config(), None).unwrap());
+    let mut net = FrontEnd::bind(core, "127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 8).unwrap();
+    let report = loadgen::replay_net(&client, &trace, 32, None);
+    net.shutdown(); // drains the coordinator too
+
+    let m = coord.metrics();
+    let stats = coord.trace_stats().expect("tracing is on");
+    assert_eq!(report.aggregate.submitted, 200);
+    assert_eq!(
+        stats.spans_recorded + stats.spans_dropped,
+        m.completed + m.errored + m.rejected + m.shed,
+        "{core} core: span ledger diverged: {stats:?} vs {m:?}"
+    );
+    assert_eq!(stats.spans_recorded + stats.spans_dropped, 200);
+    assert!(
+        report.aggregate.rejected > 0,
+        "{core} core: overload never materialized"
+    );
+}
+
+#[test]
+fn tcp_threaded_overload_reconciles_spans() {
+    net_overload_reconciles(NetCore::Threaded);
+}
+
+#[cfg(unix)]
+#[test]
+fn tcp_evented_overload_reconciles_spans() {
+    net_overload_reconciles(NetCore::Evented);
+}
+
+// --------------------------------------------------------------------
+// Virtual-clock determinism: two seeded replays, byte-equal span dumps.
+// --------------------------------------------------------------------
+
+#[test]
+fn virtual_clock_traces_are_byte_deterministic() {
+    let fleet = two_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let trace = loadgen::MultiTrace::seeded(0xDE7, 64, &specs, 1);
+    let max_tick = trace.requests.iter().map(|r| r.at_tick).max().unwrap();
+
+    let run = |fleet: Vec<(String, PipelineSim)>| -> Vec<SpanRecord> {
+        let ticks = Arc::new(AtomicU64::new(0));
+        let config = ServerConfig {
+            workers: 1,
+            max_batch: 1,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::ZERO,
+            trace: true,
+            trace_capacity: 256,
+            clock: Clock::virtual_from(Arc::clone(&ticks)),
+            ..Default::default()
+        };
+        let mut server = Server::start_multi(fleet, config, None).unwrap();
+        // window 1: each request settles before the next submission, so
+        // no span's lifetime straddles a tick-sink store.
+        let report = loadgen::replay_multi_clocked(&server, &trace, 1, None, &ticks);
+        assert_eq!(report.aggregate.ok, 64);
+        server.drain();
+        server.flight_recorder().unwrap().spans()
+    };
+
+    let a = run(fleet.clone());
+    let b = run(fleet);
+    assert_eq!(a.len(), 64);
+    assert_eq!(
+        a, b,
+        "virtual-clock replays of the same seed must dump identical spans"
+    );
+    for s in &a {
+        assert_eq!(s.outcome, SpanOutcome::Completed);
+        // Stamps are virtual ticks, not wall nanoseconds: bounded by the
+        // trace's tick range and monotone through the stages.
+        assert!(s.replied_ns <= max_tick, "stamp {} is not a tick", s.replied_ns);
+        assert!(s.submitted_ns <= s.admitted_ns);
+        assert!(s.admitted_ns <= s.dequeued_ns);
+        assert!(s.exec_start_ns <= s.exec_end_ns);
+        assert!(s.exec_end_ns <= s.replied_ns);
+        assert_eq!(s.batch_size, 1);
+    }
+}
+
+// --------------------------------------------------------------------
+// Profiler exactness: timing-only instrumentation changes no output.
+// --------------------------------------------------------------------
+
+#[test]
+fn profiler_on_output_is_bit_exact_with_profiler_off() {
+    let fleet = full_zoo_fleet();
+    let specs = fleet_specs(&fleet);
+    let golden_refs: Vec<&PipelineSim> = fleet.iter().map(|(_, s)| s).collect();
+    let trace = loadgen::MultiTrace::seeded(0x0F17, 64, &specs, 1);
+    let expected = loadgen::golden_outputs_multi(&golden_refs, &trace);
+
+    for profile in [false, true] {
+        let config = ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_depth: 64,
+            verify_every: 0,
+            batch_deadline: Duration::from_micros(300),
+            profile,
+            ..Default::default()
+        };
+        let mut server = Server::start_multi(fleet.clone(), config, None).unwrap();
+        let report = loadgen::replay_multi(&server, &trace, 8, Some(&expected));
+        server.drain();
+        assert_eq!(report.aggregate.ok, 64, "profile={profile}");
+        assert_eq!(
+            report.aggregate.mismatched, 0,
+            "profile={profile}: outputs diverged from the interpreter goldens"
+        );
+
+        let profiles = server.layer_profiles();
+        if profile {
+            assert!(!profiles.is_empty(), "profiler on must expose rows");
+            // The interpreter engine's per-unit cycle model doesn't feed
+            // the wall-time profiler; the value engines do.
+            if EngineKind::default_from_env() != EngineKind::Interpreter {
+                let sampled: u64 = profiles
+                    .iter()
+                    .flat_map(|(_, rows)| rows.iter().map(|r| r.samples))
+                    .sum();
+                assert!(sampled > 0, "profiler on but nothing sampled");
+            }
+            for (model, rows) in &profiles {
+                let total: f64 = rows.iter().map(|r| r.measured_share).sum();
+                assert!(
+                    total == 0.0 || (total - 1.0).abs() < 1e-9,
+                    "{model}: measured shares sum to {total}"
+                );
+            }
+        } else {
+            assert!(profiles.is_empty(), "profiler off must expose no rows");
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Exposition: the wire MetricsText page lints on both cores.
+// --------------------------------------------------------------------
+
+fn metrics_text_lints(core: NetCore) {
+    let fleet = two_model_fleet();
+    let specs = fleet_specs(&fleet);
+    let trace = loadgen::MultiTrace::seeded(0x3C4A, 48, &specs, 1);
+    let config = ServerConfig {
+        workers: 1,
+        max_batch: 4,
+        queue_depth: 64,
+        verify_every: 0,
+        batch_deadline: Duration::from_micros(300),
+        trace: true,
+        profile: true,
+        ..Default::default()
+    };
+    let coord = Arc::new(Server::start_multi(fleet, config, None).unwrap());
+    let mut net = FrontEnd::bind(core, "127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let client = Client::connect(&net.local_addr().to_string(), 4).unwrap();
+    let report = loadgen::replay_net(&client, &trace, 8, None);
+    assert_eq!(report.aggregate.ok, 48, "{core} core");
+
+    let page = client.metrics_text().expect("metrics-text round trip");
+    lint(&page).unwrap_or_else(|e| panic!("{core} core: exposition lint failed: {e}\n{page}"));
+    assert!(
+        page.contains("cnn_flow_completed_total"),
+        "{core} core: page misses the intake counters:\n{page}"
+    );
+    assert!(
+        page.contains("cnn_flow_net_requests_total") || page.contains("cnn_flow_net_"),
+        "{core} core: page misses the net counters:\n{page}"
+    );
+    net.shutdown();
+}
+
+#[test]
+fn metrics_text_page_lints_on_threaded_core() {
+    metrics_text_lints(NetCore::Threaded);
+}
+
+#[cfg(unix)]
+#[test]
+fn metrics_text_page_lints_on_evented_core() {
+    metrics_text_lints(NetCore::Evented);
+}
